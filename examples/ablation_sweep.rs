@@ -1,0 +1,61 @@
+//! Ablation sweep (Fig 9 companion): accuracy-vs-energy curves of all
+//! four solutions on one model, printed as aligned series — the data
+//! behind `cargo bench --bench fig9` for a single model.
+//!
+//!     cargo run --release --example ablation_sweep -- --model mlp_10
+
+use emtopt::coordinator::{self, store, Solution};
+use emtopt::data::Suite;
+use emtopt::energy::EnergyModel;
+use emtopt::metrics::{fmt_energy_uj, fmt_pct, Table};
+use emtopt::runtime::{Artifacts, Evaluator};
+use emtopt::util::cli::Args;
+
+fn main() -> emtopt::Result<()> {
+    let args = Args::parse()?;
+    let model_key = args.str_or("model", "mlp_10");
+    let suite = if model_key.ends_with("_20") {
+        Suite::ImageNet
+    } else {
+        Suite::Cifar
+    };
+    let arts = Artifacts::open_default()?;
+    let cfg = coordinator::experiments::schedule_for(&model_key);
+    let em = EnergyModel::new(arts.manifest.device.act_bits);
+    let paper = coordinator::experiments::paper_model_for(&model_key)
+        .ok_or_else(|| anyhow::anyhow!("no paper mapping for {model_key}"))?;
+    let setup = coordinator::EvalSetup {
+        suite,
+        batches: 1,
+        ..Default::default()
+    };
+    let grid = coordinator::experiments::default_rho_grid();
+
+    let mut table = Table::new(
+        format!("{model_key} ablation: accuracy vs energy ({})", paper.name),
+        &["solution", "rho-scale", "energy (uJ)", "top-1"],
+    );
+    for sol in Solution::ALL {
+        let trained = store::train_cached(&arts, &model_key, suite, sol, &cfg)?;
+        let evaluator = Evaluator::new(&arts, &model_key, sol.decomposed())?;
+        let pts = coordinator::sweep_accuracy_vs_energy(
+            &evaluator,
+            &trained,
+            &setup,
+            &paper,
+            sol.method(),
+            &em,
+            &grid,
+        )?;
+        for p in pts {
+            table.row(vec![
+                sol.name().into(),
+                format!("{:.3}", p.rho_scale),
+                fmt_energy_uj(p.energy_uj),
+                fmt_pct(p.top1),
+            ]);
+        }
+    }
+    table.print();
+    Ok(())
+}

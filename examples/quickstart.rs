@@ -1,0 +1,74 @@
+//! Quickstart: load the AOT artifacts, run one noisy inference batch, and
+//! inspect the native device simulator — the 60-second tour of the stack.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use emtopt::crossbar::CrossbarArray;
+use emtopt::data::{Dataset, Split, Suite};
+use emtopt::device::{self, DeviceConfig};
+use emtopt::energy::ReadMode;
+use emtopt::rng::Rng;
+use emtopt::runtime::{execute, scalar_i32, to_vec_f32, Artifacts, Predictor};
+
+fn main() -> emtopt::Result<()> {
+    // --- Layer 3 runtime: load a jax/pallas-lowered model through PJRT ---
+    let arts = Artifacts::open_default()?;
+    println!("PJRT platform: {}", arts.runtime.platform());
+
+    // He-init parameters through the model's init artifact
+    let init = arts.manifest.artifact("mlp_10_init")?;
+    let init_exe = arts.runtime.load_hlo(&arts.dir.join(&init.file))?;
+    let mut outs = execute(&init_exe, &[scalar_i32(42)])?;
+    let rho_raw = to_vec_f32(&outs.pop().unwrap())?;
+    let params = outs;
+    println!(
+        "initialised mlp_10: {} parameter tensors, {} crossbar layers",
+        params.len(),
+        rho_raw.len()
+    );
+
+    // one noisy inference batch (the EMT fluctuation is sampled INSIDE the
+    // lowered computation — eq. 11 of the paper, pallas kernel on the FC)
+    let predictor = Predictor::new(&arts, "mlp_10")?;
+    let dataset = Dataset::new(Suite::Cifar, emtopt::data::DATA_SEED);
+    let (x, y) = dataset.batch(Split::Test, 0, predictor.batch);
+    let logits = predictor.predict(&params, &rho_raw, &x, 1, 1.0)?;
+    let nc = predictor.num_classes;
+    let correct = (0..predictor.batch)
+        .filter(|&i| {
+            let row = &logits[i * nc..(i + 1) * nc];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .unwrap()
+                .0;
+            pred == y[i] as usize
+        })
+        .count();
+    println!(
+        "noisy inference on untrained model: {correct}/{} correct (chance ~10%)",
+        predictor.batch
+    );
+
+    // --- native device substrate: one crossbar MAC with RTN sampling ---
+    let cfg = DeviceConfig::default();
+    let mut rng = Rng::new(3);
+    let w: Vec<f32> = (0..64 * 16).map(|_| rng.normal() * 0.3).collect();
+    let mut arr = CrossbarArray::program(&w, 64, 16, &cfg);
+    let xin: Vec<f32> = (0..64).map(|_| rng.next_f32()).collect();
+    let mut out = vec![0.0f32; 16];
+    arr.mac(&xin, &mut out, ReadMode::Original, cfg.act_bits, 1.0, &mut rng);
+    println!(
+        "crossbar MAC: {} cells, {:.1} pJ analog + {:.1} pJ peripheral",
+        arr.num_cells(),
+        arr.counters.cell_pj,
+        arr.counters.peripheral_pj
+    );
+    println!(
+        "device: sigma_rel(rho=1) = {:.3}, sigma_rel(rho=16) = {:.3}  (eq. amplitude-energy tradeoff)",
+        device::sigma_rel(1.0, 1.0),
+        device::sigma_rel(16.0, 1.0)
+    );
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Serving example: the dynamic-batching inference router in front of the
+//! noisy in-memory model, driven by concurrent client threads — reports
+//! throughput, queueing latency, and batch fill.
+//!
+//!     cargo run --release --example serve -- --requests 512 --clients 8
+
+use emtopt::coordinator::router::{serve, ServerConfig};
+use emtopt::coordinator::{self, store, Solution};
+use emtopt::data::{Dataset, Split, Suite};
+use emtopt::util::cli::Args;
+
+fn main() -> emtopt::Result<()> {
+    let args = Args::parse()?;
+    let requests: u32 = args.parse_or("requests", 256)?;
+    let clients: usize = args.parse_or("clients", 8)?;
+    let model_key = args.str_or("model", "mlp_10");
+
+    // train (or load) the A+B model that gets deployed
+    let trained = {
+        let arts = emtopt::runtime::Artifacts::open_default()?;
+        let cfg = coordinator::experiments::schedule_for(&model_key);
+        store::train_cached(&arts, &model_key, Suite::Cifar, Solution::AB, &cfg)?
+    };
+
+    let (client, stats, engine) = serve(trained, ServerConfig::default())?;
+    let dataset = Dataset::new(Suite::Cifar, emtopt::data::DATA_SEED);
+
+    println!("serving {model_key} behind the router: {requests} requests from {clients} clients");
+    let t0 = std::time::Instant::now();
+    let per = (requests as usize).div_ceil(clients);
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let cl = client.clone();
+            let ds = dataset.clone();
+            std::thread::spawn(move || {
+                let mut ok = 0u32;
+                let mut correct = 0u32;
+                for i in 0..per {
+                    let idx = (c * per + i) as u64;
+                    let mut img = vec![0.0f32; emtopt::data::IMG_LEN];
+                    let label = ds.sample_into(Split::Test, idx, &mut img);
+                    match cl.classify(img) {
+                        Ok(pred) => {
+                            ok += 1;
+                            if pred == label as usize {
+                                correct += 1;
+                            }
+                        }
+                        Err(_) => {}
+                    }
+                }
+                (ok, correct)
+            })
+        })
+        .collect();
+    let (mut ok, mut correct) = (0u32, 0u32);
+    for h in handles {
+        let (o, c) = h.join().unwrap();
+        ok += o;
+        correct += c;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{ok} ok / {} sent in {dt:.2}s -> {:.0} req/s",
+        per * clients,
+        ok as f64 / dt
+    );
+    println!(
+        "accuracy on served traffic: {:.1}% | mean queue {:.2} ms | batch fill {:.0}%",
+        100.0 * correct as f64 / ok.max(1) as f64,
+        stats.mean_queue_us() / 1000.0,
+        stats.mean_batch_fill(16) * 100.0
+    );
+    drop(client);
+    engine.join().ok();
+    Ok(())
+}

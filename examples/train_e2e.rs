@@ -1,0 +1,91 @@
+//! End-to-end driver (the repo's headline validation): pretrain a model,
+//! fine-tune it with each solution (trad / A / A+B / A+B+C), log the loss
+//! curves, then evaluate accuracy + paper-scale energy on the simulated
+//! EMT device — proving all three layers compose:
+//!   rust coordinator -> PJRT -> XLA -> (jax model -> pallas kernels).
+//!
+//!     cargo run --release --example train_e2e -- --model mlp_10
+//!
+//! Results are recorded in EXPERIMENTS.md.
+
+use emtopt::coordinator::{self, store, Solution};
+use emtopt::data::Suite;
+use emtopt::energy::EnergyModel;
+use emtopt::metrics::{fmt_energy_uj, fmt_pct, Table};
+use emtopt::runtime::{Artifacts, Evaluator};
+use emtopt::util::cli::Args;
+
+fn main() -> emtopt::Result<()> {
+    let args = Args::parse()?;
+    let model_key = args.str_or("model", "mlp_10");
+    let suite = if model_key.ends_with("_20") {
+        Suite::ImageNet
+    } else {
+        Suite::Cifar
+    };
+    let arts = Artifacts::open_default()?;
+    let mut cfg = coordinator::experiments::schedule_for(&model_key);
+    cfg.pretrain_steps = args.parse_or("pretrain", cfg.pretrain_steps)?;
+    cfg.finetune_steps = args.parse_or("finetune", cfg.finetune_steps)?;
+    cfg.log_every = 20;
+
+    println!(
+        "=== end-to-end: {model_key} on {} ({} pretrain + {} finetune steps/solution) ===",
+        suite.name(),
+        cfg.pretrain_steps,
+        cfg.finetune_steps
+    );
+
+    let em = EnergyModel::new(arts.manifest.device.act_bits);
+    let paper = coordinator::experiments::paper_model_for(&model_key)
+        .ok_or_else(|| anyhow::anyhow!("no paper mapping for {model_key}"))?;
+    let setup = coordinator::EvalSetup {
+        suite,
+        batches: 1,
+        ..Default::default()
+    };
+
+    let mut table = Table::new(
+        format!("{model_key}: solution ladder (noisy top-1 at trained rho)"),
+        &["solution", "final loss", "noisy top-1", "mean rho", "energy (uJ)"],
+    );
+    for sol in Solution::ALL {
+        let t0 = std::time::Instant::now();
+        let trained = store::train_cached(&arts, &model_key, suite, sol, &cfg)?;
+        // loss curve (first/last few points)
+        let lt = &trained.loss_trace;
+        if !lt.is_empty() {
+            let head: Vec<String> = lt.iter().take(3).map(|l| format!("{l:.3}")).collect();
+            let tail: Vec<String> =
+                lt.iter().rev().take(3).rev().map(|l| format!("{l:.3}")).collect();
+            println!(
+                "[{}] loss curve: {} ... {}  ({} steps, {:.0}s)",
+                sol.name(),
+                head.join(" "),
+                tail.join(" "),
+                lt.len(),
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        let evaluator = Evaluator::new(&arts, &model_key, sol.decomposed())?;
+        let r = coordinator::experiments::eval_at_scale(
+            &evaluator, &trained, &setup, 1.0, 1.0, 1.0,
+        )?;
+        let mean_rho = trained.mean_rho(1.0);
+        let energy = em.model_uj_uniform(&paper, mean_rho, sol.read_mode());
+        table.row(vec![
+            sol.name().into(),
+            trained
+                .loss_trace
+                .last()
+                .map(|l| format!("{l:.3}"))
+                .unwrap_or_else(|| "-".into()),
+            fmt_pct(r.top1_acc()),
+            format!("{mean_rho:.2}"),
+            fmt_energy_uj(energy),
+        ]);
+    }
+    table.print();
+    println!("expected shape: trad < A < A+B <= A+B+C top-1; A+B/A+B+C lower energy");
+    Ok(())
+}

@@ -1,0 +1,153 @@
+"""AOT compiler: lower every L2 step function to HLO text + manifest.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via `make artifacts`; outputs:
+
+  artifacts/<model>_<nc>_<kind>.hlo.txt     one per (model, step kind)
+  artifacts/manifest.json                   input/output specs + model and
+                                            device metadata for the Rust
+                                            runtime (serde-parsed)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import device, model, models
+
+TRAIN_BATCH = 64
+EVAL_BATCH = 256
+PREDICT_BATCH = 16
+
+#: (model, num_classes) pairs. nc=10 is the synthetic-CIFAR suite; nc=20 is
+#: the synthetic-ImageNet stand-in suite (paper: ResNet-18/34 on ImageNet).
+SUITES = [
+    ("mlp", 10),
+    ("tiny_vgg", 10),
+    ("tiny_resnet", 10),
+    ("tiny_mobilenet", 10),
+    ("tiny_resnet", 20),
+    ("tiny_resnet34", 20),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(specs):
+    return [
+        {"name": n, "shape": list(s), "dtype": d} for n, s, d in specs
+    ]
+
+
+def _out_specs(fn, in_specs):
+    outs = jax.eval_shape(fn, *model.abstract_inputs(in_specs))
+    dt = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}
+    return [
+        {"name": f"out{i}", "shape": list(o.shape), "dtype": dt[o.dtype]}
+        for i, o in enumerate(outs)
+    ]
+
+
+def make_init(name, num_classes):
+    """Init artifact: (seed,) -> (params..., rho_raw). Keeps He-init
+    identical between Python tests and the Rust driver."""
+
+    def init_fn(seed):
+        params = models.init_params(jax.random.PRNGKey(seed[0]), name, num_classes)
+        return tuple(params + [models.init_rho_raw(name, num_classes)])
+
+    return init_fn, [("seed", (1,), "i32")]
+
+
+def artifact_set(name, nc):
+    return [
+        ("init", *make_init(name, nc)),
+        ("train", *model.make_train_step(name, nc, TRAIN_BATCH)),
+        ("train_decomp", *model.make_train_step(name, nc, TRAIN_BATCH, decomposed=True)),
+        ("eval", *model.make_eval_step(name, nc, EVAL_BATCH)),
+        ("eval_decomp", *model.make_eval_step(name, nc, EVAL_BATCH, decomposed=True)),
+        ("predict", *model.make_predict(name, nc, PREDICT_BATCH)),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma list: model:nc pairs")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    suites = SUITES
+    if args.only:
+        keep = set(args.only.split(","))
+        suites = [(m, n) for m, n in SUITES if f"{m}:{n}" in keep]
+
+    manifest = {
+        "device": {
+            "num_states": device.DEFAULT_NUM_STATES,
+            "k_f": device.K_F,
+            "intensity": device.INTENSITY,
+            "act_bits": device.DEFAULT_ACT_BITS,
+            "weight_bits": device.DEFAULT_WEIGHT_BITS,
+            "e0": device.E0,
+        },
+        "batches": {
+            "train": TRAIN_BATCH,
+            "eval": EVAL_BATCH,
+            "predict": PREDICT_BATCH,
+        },
+        "models": {},
+        "artifacts": [],
+    }
+
+    for name, nc in suites:
+        key = f"{name}_{nc}"
+        manifest["models"][key] = {
+            "model": name,
+            "num_classes": nc,
+            "n_layers": models.num_param_layers(name, nc),
+            "layer_meta": models.layer_meta(name, nc),
+        }
+        for kind, fn, in_specs in artifact_set(name, nc):
+            fname = f"{key}_{kind}.hlo.txt"
+            t0 = time.time()
+            lowered = jax.jit(fn).lower(*model.abstract_inputs(in_specs))
+            text = to_hlo_text(lowered)
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "name": f"{key}_{kind}",
+                    "model": key,
+                    "kind": kind,
+                    "file": fname,
+                    "inputs": _spec_json(in_specs),
+                    "outputs": _out_specs(fn, in_specs),
+                }
+            )
+            print(f"  {fname}: {len(text)/1e6:.1f} MB in {time.time()-t0:.1f}s")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Canonical EMT device model (Python side).
+
+This module is the single source of truth for the device math used by the
+L1 Pallas kernels and the L2 JAX model.  The Rust substrate
+(``rust/src/device/``) mirrors these definitions exactly; the integration
+tests cross-check the two implementations through the AOT artifacts.
+
+Model
+-----
+An analog EMT cell storing weight ``w`` (normalised to the layer full-scale
+``w_scale``) fluctuates between ``m`` discrete RTN states.  When read at
+state ``l`` it returns
+
+    r_l(w, rho) = w + sigma_abs(rho, intensity, w_scale) * c_l
+
+where ``c_l`` are zero-mean, unit-variance, evenly spaced state offsets and
+
+    sigma_abs = K_F * intensity / sqrt(rho) * w_scale .
+
+``rho`` is the (trainable) energy coefficient: larger rho means a stronger
+programming/read current, hence lower relative fluctuation but higher read
+energy (Ielmini et al. [25], resistance-dependent RTN).
+
+Energy of one analog read with integer activation level ``a`` (0..2^Ba-1):
+
+    E_read = E0 * rho * (|w| / w_scale) * a            (original mode)
+    E_read = E0 * rho * (|w| / w_scale) * sum(delta_p) (decomposed mode)
+
+matching eq. (19) of the paper.  ``E0`` is a device constant; the Rust
+energy model owns the absolute calibration to uJ.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Constants (mirrored in rust/src/device/mod.rs — keep in sync!)
+# ---------------------------------------------------------------------------
+
+#: Default number of RTN states of a cell.
+DEFAULT_NUM_STATES = 4
+
+#: Fluctuation constant: relative sigma at rho == 1.0, intensity == 1.0.
+K_F = 0.04
+
+#: Fluctuation intensity levels (paper §5.2: weak / normal / strong).
+INTENSITY = {"weak": 0.5, "normal": 1.0, "strong": 2.0}
+
+#: Device energy unit for one full-scale, full-duty analog read (normalised).
+E0 = 1.0
+
+#: Default activation bits (B_a) — number of bit-planes in decomposed mode.
+#: B_a = 5 matches the paper's 5x decomposed-mode delay (Table 1: 14/2.8 us).
+DEFAULT_ACT_BITS = 5
+
+#: Default weight bits (signed, symmetric).
+DEFAULT_WEIGHT_BITS = 8
+
+
+def state_offsets(m: int = DEFAULT_NUM_STATES) -> np.ndarray:
+    """Zero-mean, unit-variance, evenly spaced RTN state offsets ``c_l``.
+
+    For m == 1 the cell is noiseless (offset 0).
+    """
+    if m < 1:
+        raise ValueError(f"need at least one state, got {m}")
+    if m == 1:
+        return np.zeros((1,), dtype=np.float32)
+    raw = np.linspace(-1.0, 1.0, m)
+    raw = raw - raw.mean()
+    return (raw / raw.std()).astype(np.float32)
+
+
+def sigma_rel(rho, intensity=1.0):
+    """Relative fluctuation amplitude (fraction of w_scale)."""
+    return K_F * intensity / jnp.sqrt(rho)
+
+
+def sigma_abs(rho, intensity, w_scale):
+    """Absolute fluctuation amplitude in weight units."""
+    return sigma_rel(rho, intensity) * w_scale
+
+
+def read_energy(rho, w_abs_norm, act_level):
+    """Energy of one analog read (normalised units). ``w_abs_norm`` in [0,1],
+    ``act_level`` is the integer activation level (or bit-count in
+    decomposed mode)."""
+    return E0 * rho * w_abs_norm * act_level

@@ -1,0 +1,6 @@
+"""L1 Pallas kernels for EMT in-memory deep learning."""
+
+from .bitserial import bitserial_matmul
+from .emt_matmul import emt_matmul
+
+__all__ = ["emt_matmul", "bitserial_matmul"]

@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: low-fluctuation decomposed MAC (technique C, eq. 15).
+
+Computes  y[b,n] = sum_p 2^p * sum_k bits[p,b,k] * (w[k,n] + delta[p,b,k,n]).
+
+The bit-plane loop is the innermost grid dimension, so the weight tile
+(K, bn) is loaded into VMEM once per (i, j) output tile and reused across
+all P bit-plane reads — the analog-crossbar analogue of keeping the array
+programmed while the DAC streams input bits.  The accumulator lives in the
+output VMEM block across the P grid steps (initialised at p == 0).
+
+Each bit-plane consumes a *fresh* fluctuation sample delta[p] — independent
+reads are exactly what gives the sqrt-law fluctuation reduction of
+eq. (16)-(18).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 32
+DEFAULT_BN = 128
+
+_VMEM_BUDGET_F32 = 3 * 1024 * 1024
+
+
+def _pick_tiles(b: int, k: int, n: int):
+    bm = min(DEFAULT_BM, b)
+    bn = min(DEFAULT_BN, n)
+    while bm > 1 and bm * k * bn > _VMEM_BUDGET_F32:
+        bm //= 2
+    return bm, bn
+
+
+def _kernel(bits_ref, w_ref, d_ref, b_ref, o_ref):
+    p = pl.program_id(2)
+    bits = bits_ref[0]  # (bm, K)
+    w = w_ref[...]  # (K, bn)
+    d = d_ref[0]  # (bm, K, bn)
+    scale = jnp.exp2(p.astype(jnp.float32))
+    plane = jnp.dot(bits, w, preferred_element_type=jnp.float32)
+    plane = plane + jnp.einsum("bk,bkn->bn", bits, d)
+
+    @pl.when(p == 0)
+    def _init():
+        o_ref[...] = b_ref[...] + scale * plane
+
+    @pl.when(p != 0)
+    def _acc():
+        o_ref[...] += scale * plane
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitserial_matmul(bits, w, delta, bias=None, *, interpret=True):
+    """Decomposed noisy crossbar MAC.
+
+    Args:
+      bits: (P, B, K) binary activation bit-planes (LSB first), float 0/1.
+      w: (K, N) programmed weights.
+      delta: (P, B, K, N) fresh fluctuation sample per bit-plane read.
+      bias: optional (N,).
+    Returns:
+      (B, N) float32.
+    """
+    p, b, k = bits.shape
+    k2, n = w.shape
+    assert k == k2, f"K mismatch: {k} vs {k2}"
+    assert delta.shape == (p, b, k, n), f"bad delta shape {delta.shape}"
+    if bias is None:
+        bias = jnp.zeros((n,), w.dtype)
+    bm, bn = _pick_tiles(b, k, n)
+    grid = (pl.cdiv(b, bm), pl.cdiv(n, bn), p)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, k), lambda i, j, q: (q, i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j, q: (0, j)),
+            pl.BlockSpec((1, bm, k, bn), lambda i, j, q: (q, i, 0, j)),
+            pl.BlockSpec((bn,), lambda i, j, q: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, q: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(bits, w, delta, bias)

@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: noisy EMT crossbar MAC (eq. 11).
+
+Computes  y[b,n] = sum_k x[b,k] * (w[k,n] + delta[b,k,n])  (+ bias).
+
+Crossbar mapping (DESIGN.md §Hardware-Adaptation): one Pallas block is one
+crossbar tile.  The weight tile (K, bn) stays resident in VMEM while batch
+tiles of activations stream through — the BlockSpec index maps below encode
+exactly that HBM↔VMEM schedule.  The inner op is a dense (bm, K) @ (K, bn)
+matmul (MXU-shaped) plus the per-read fluctuation contraction.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is validated against ``ref.emt_matmul_ref`` and
+real-TPU performance is estimated analytically in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes.  bm*K + K*bn + bm*K*bn floats must fit VMEM (~16 MiB);
+# with bm=32, bn=128, K<=1024: 32K + 128K + 4M floats ≈ 17 MB — we halve bm
+# for the worst case via _pick_bm.
+DEFAULT_BM = 32
+DEFAULT_BN = 128
+
+_VMEM_BUDGET_F32 = 3 * 1024 * 1024  # floats, conservative
+
+
+def _pick_tiles(b: int, k: int, n: int):
+    bm = min(DEFAULT_BM, b)
+    bn = min(DEFAULT_BN, n)
+    # Shrink the batch tile until the delta tile fits the VMEM budget.
+    while bm > 1 and bm * k * bn > _VMEM_BUDGET_F32:
+        bm //= 2
+    return bm, bn
+
+
+def _kernel(x_ref, w_ref, d_ref, b_ref, o_ref):
+    x = x_ref[...]  # (bm, K)
+    w = w_ref[...]  # (K, bn)
+    d = d_ref[...]  # (bm, K, bn)
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc = acc + jnp.einsum("bk,bkn->bn", x, d)
+    o_ref[...] = acc + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def emt_matmul(x, w, delta, bias=None, *, interpret=True):
+    """Noisy crossbar MAC.
+
+    Args:
+      x: (B, K) activations (already DAC-quantised, float).
+      w: (K, N) programmed weights (dequantised levels).
+      delta: (B, K, N) per-read fluctuation sample (state offset * sigma).
+      bias: optional (N,) bias.
+    Returns:
+      (B, N) float32.
+    """
+    b, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"K mismatch: {k} vs {k2}"
+    assert delta.shape == (b, k, n), f"bad delta shape {delta.shape}"
+    if bias is None:
+        bias = jnp.zeros((n,), x.dtype)
+    bm, bn = _pick_tiles(b, k, n)
+    grid = (pl.cdiv(b, bm), pl.cdiv(n, bn))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bm, k, bn), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(x, w, delta, bias)

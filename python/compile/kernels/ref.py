@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the ground truth the Pallas kernels (and, transitively, the Rust
+crossbar simulator) are validated against.  They implement eq. (11) and
+eq. (15) of the paper directly.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def emt_matmul_ref(x, w, delta, bias=None):
+    """Noisy crossbar MAC, eq. (11):  y[b,n] = sum_k x[b,k] * (w[k,n] + delta[b,k,n]).
+
+    ``delta`` carries a fresh fluctuation sample per (sample, cell) read —
+    the ``r(w, rho) ∘ S`` term with the deterministic part already folded in.
+
+    Shapes: x (B, K), w (K, N), delta (B, K, N) -> (B, N).
+    """
+    y = x @ w + jnp.einsum("bk,bkn->bn", x, delta)
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def bitserial_matmul_ref(bits, w, delta, bias=None):
+    """Low-fluctuation decomposed MAC, eq. (15):
+        y[b,n] = sum_p 2^p * sum_k bits[p,b,k] * (w[k,n] + delta[p,b,k,n]).
+
+    Each bit-plane is an independent crossbar read, so it gets an
+    independent fluctuation sample ``delta[p]`` — this is what averages the
+    fluctuation down (eq. 16-18).
+
+    Shapes: bits (P, B, K) in {0,1}, w (K, N), delta (P, B, K, N) -> (B, N).
+    """
+    p = bits.shape[0]
+    scales = 2.0 ** jnp.arange(p, dtype=w.dtype)
+    per_plane = jnp.einsum("pbk,kn->pbn", bits, w) + jnp.einsum(
+        "pbk,pbkn->pbn", bits, delta
+    )
+    y = jnp.einsum("p,pbn->bn", scales, per_plane)
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def clt_noise_std(x, sigma_abs):
+    """Std of the output noise of a noisy MAC under the CLT surrogate.
+
+    For y[b,n] = sum_k x[b,k] * (w[k,n] + d[b,k,n]) with i.i.d. zero-mean
+    d of std ``sigma_abs``:  std(y[b,n] - (x@w)[b,n]) = sigma_abs *
+    sqrt(sum_k x[b,k]^2), independent of n.
+    """
+    return sigma_abs * jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True))

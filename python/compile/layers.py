@@ -1,0 +1,260 @@
+"""L2 noisy layer primitives.
+
+Each parameterised layer models an analog EMT crossbar read:
+
+  * weights are fake-quantised (`quant.quant_weight`) — the programmed
+    conductance levels;
+  * activations are fake-quantised (`quant.quant_act`) — the DAC levels;
+  * every read draws a fresh RTN state per cell (eq. 7);
+  * technique C replaces the single analog read by B_a bit-plane reads
+    (eq. 15) with independent fluctuation per plane.
+
+Noise realisation strategy (DESIGN.md §2):
+
+  * **exact path** — sample the m-state one-hot S explicitly and contract
+    via the Pallas kernels.  Memory is O(B*K*N), so it is used whenever
+    that fits `EXACT_BUDGET`; the last dense layer of every model always
+    takes this path, keeping the L1 kernels in every lowered artifact.
+  * **CLT path** — for large convolutions the per-read noise sum
+    `sum_k x_k d_k` is replaced by a Gaussian with the exactly matched
+    variance `sigma^2 * sum_k x_k^2` (validated against the exact path in
+    python/tests/test_layers.py).  This is a variance-exact surrogate, not
+    a simplification of the math: for K >= 64 the CLT error is far below
+    the quantisation floor.
+
+The Pallas kernels are wrapped in `jax.custom_vjp` so the train step can
+differentiate through them; the rho-gradient flows through `delta` by
+reparameterisation (delta = sigma(rho) * c with c ~ states).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import device, quant
+from .kernels.bitserial import bitserial_matmul as _bitserial_kernel
+from .kernels.emt_matmul import emt_matmul as _emt_kernel
+
+#: max number of f32 elements we allow an explicit per-read noise tensor.
+EXACT_BUDGET = 2**22
+
+_OFFSETS = jnp.asarray(device.state_offsets())
+
+
+def sample_delta(key, shape, sigma):
+    """Sample per-read fluctuation offsets: delta = sigma * c_l, l ~ U{m}.
+
+    `sigma` may be a traced scalar (so rho-gradients flow through it).
+    """
+    states = jax.random.randint(key, shape, 0, _OFFSETS.shape[0])
+    return sigma * _OFFSETS[states]
+
+
+# ---------------------------------------------------------------------------
+# differentiable wrappers around the pallas kernels
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def emt_matmul_vjp(x, w, delta, bias):
+    return _emt_kernel(x, w, delta, bias)
+
+
+def _emt_fwd(x, w, delta, bias):
+    return emt_matmul_vjp(x, w, delta, bias), (x, w, delta)
+
+
+def _emt_bwd(res, g):
+    x, w, delta = res
+    dx = g @ w.T + jnp.einsum("bn,bkn->bk", g, delta)
+    dw = x.T @ g
+    dd = x[:, :, None] * g[:, None, :]
+    db = g.sum(axis=0)
+    return dx, dw, dd, db
+
+
+emt_matmul_vjp.defvjp(_emt_fwd, _emt_bwd)
+
+
+@jax.custom_vjp
+def bitserial_matmul_vjp(bits, w, delta, bias):
+    return _bitserial_kernel(bits, w, delta, bias)
+
+
+def _bs_fwd(bits, w, delta, bias):
+    return bitserial_matmul_vjp(bits, w, delta, bias), (bits, w, delta)
+
+
+def _bs_bwd(res, g):
+    bits, w, delta = res
+    p = bits.shape[0]
+    scales = 2.0 ** jnp.arange(p, dtype=w.dtype)
+    dbits = scales[:, None, None] * (
+        jnp.einsum("bn,kn->bk", g, w)[None] + jnp.einsum("bn,pbkn->pbk", g, delta)
+    )
+    dw = jnp.einsum("p,pbk,bn->kn", scales, bits, g)
+    dd = scales[:, None, None, None] * (bits[:, :, :, None] * g[None, :, None, :])
+    db = g.sum(axis=0)
+    return dbits, dw, dd, db
+
+
+bitserial_matmul_vjp.defvjp(_bs_fwd, _bs_bwd)
+
+
+# ---------------------------------------------------------------------------
+# noisy dense
+# ---------------------------------------------------------------------------
+
+
+def noisy_dense(key, x, w, b, rho, cfg):
+    """One noisy crossbar dense layer in original (single-read) mode.
+
+    x: (B, K) non-negative dequantised activations.
+    Returns (y, stats) where stats carries the energy bookkeeping terms.
+    """
+    x_deq, levels, s = quant.quant_act(x, cfg["act_bits"])
+    w_deq, w_scale = quant.quant_weight(w, cfg["weight_bits"])
+    sigma = device.sigma_abs(rho, cfg["intensity"], w_scale) * cfg["noise_gate"]
+    bsz, k = x_deq.shape
+    n = w_deq.shape[1]
+    if bsz * k * n <= EXACT_BUDGET:
+        delta = sample_delta(key, (bsz, k, n), sigma)
+        y = emt_matmul_vjp(x_deq, w_deq, delta, b)
+    else:
+        clean = x_deq @ w_deq + b
+        eps = jax.random.normal(key, clean.shape)
+        y = clean + sigma * jnp.sqrt(
+            jnp.sum(x_deq * x_deq, axis=-1, keepdims=True) + 1e-12
+        ) * eps
+    stats = _layer_stats(w_deq, w_scale, levels, rho, alpha=1.0, cfg=cfg)
+    return y, stats
+
+
+def noisy_dense_decomp(key, x, w, b, rho, cfg):
+    """Noisy dense layer in low-fluctuation decomposed (bit-serial) mode."""
+    bits_n = cfg["act_bits"]
+    _, levels, s = quant.quant_act(x, bits_n)
+    w_deq, w_scale = quant.quant_weight(w, cfg["weight_bits"])
+    sigma = device.sigma_abs(rho, cfg["intensity"], w_scale) * cfg["noise_gate"]
+    planes = quant.bit_planes(levels, bits_n)  # (P, B, K)
+    p, bsz, k = planes.shape
+    n = w_deq.shape[1]
+    if p * bsz * k * n <= EXACT_BUDGET:
+        delta = sample_delta(key, (p, bsz, k, n), sigma)
+        y_lv = bitserial_matmul_vjp(planes, w_deq, delta, jnp.zeros((n,), w.dtype))
+    else:
+        scales = 2.0 ** jnp.arange(p, dtype=w.dtype)
+        clean = jnp.einsum("p,pbk,kn->bn", scales, planes, w_deq)
+        eps = jax.random.normal(key, clean.shape)
+        var = jnp.einsum("p,pbk->b", scales**2, planes)  # bits^2 == bits
+        y_lv = clean + sigma * jnp.sqrt(var + 1e-12)[:, None] * eps
+    y = y_lv * s + b
+    stats = _layer_stats(
+        w_deq, w_scale, levels, rho, alpha=1.0, cfg=cfg, planes=planes
+    )
+    return y, stats
+
+
+# ---------------------------------------------------------------------------
+# noisy conv (CLT path; exact path is exercised by dense layers + tests)
+# ---------------------------------------------------------------------------
+
+_DN = ("NHWC", "HWIO", "NHWC")
+
+
+def _conv(x, w, stride, groups=1):
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=_DN,
+        feature_group_count=groups,
+    )
+
+
+def noisy_conv(key, x, w, b, rho, cfg, stride=1, groups=1):
+    """Noisy crossbar conv layer (im2col-equivalent CLT noise), original mode.
+
+    x: (B, H, W, Cin) non-negative; w: (kh, kw, Cin/groups, Cout).
+    """
+    x_deq, levels, s = quant.quant_act(x, cfg["act_bits"])
+    w_deq, w_scale = quant.quant_weight(w, cfg["weight_bits"])
+    sigma = device.sigma_abs(rho, cfg["intensity"], w_scale) * cfg["noise_gate"]
+    clean = _conv(x_deq, w_deq, stride, groups) + b
+    # per-output-pixel read-noise variance: sigma^2 * sum_patch x^2
+    ones = jnp.ones(w.shape[:3] + (1,), x.dtype)
+    if groups == 1:
+        sq = _conv(x_deq * x_deq, ones, stride)  # (B,H,W,1)
+    else:  # depthwise: each output channel sees only its own input channel
+        ones_dw = jnp.ones(w.shape[:2] + (1, 1), x.dtype)
+        sq = _conv(
+            x_deq * x_deq,
+            jnp.broadcast_to(ones_dw, w.shape[:2] + (1, groups)),
+            stride,
+            groups,
+        )
+    eps = jax.random.normal(key, clean.shape)
+    y = clean + sigma * jnp.sqrt(sq + 1e-12) * eps
+    out_hw = clean.shape[1] * clean.shape[2]
+    stats = _layer_stats(w_deq, w_scale, levels, rho, alpha=float(out_hw), cfg=cfg)
+    return y, stats
+
+
+def noisy_conv_decomp(key, x, w, b, rho, cfg, stride=1, groups=1):
+    """Noisy conv in decomposed mode: one conv per bit-plane, fresh noise."""
+    bits_n = cfg["act_bits"]
+    _, levels, s = quant.quant_act(x, bits_n)
+    w_deq, w_scale = quant.quant_weight(w, cfg["weight_bits"])
+    sigma = device.sigma_abs(rho, cfg["intensity"], w_scale) * cfg["noise_gate"]
+    planes = quant.bit_planes(levels, bits_n)  # (P,B,H,W,C)
+    ones = jnp.ones(w.shape[:3] + (1,), x.dtype)
+
+    def plane_read(p, key_p):
+        bits = planes[p]
+        clean = _conv(bits, w_deq, stride, groups)
+        if groups == 1:
+            sq = _conv(bits, ones, stride)  # bits^2 == bits
+        else:
+            ones_dw = jnp.broadcast_to(
+                jnp.ones(w.shape[:2] + (1, 1), x.dtype), w.shape[:2] + (1, groups)
+            )
+            sq = _conv(bits, ones_dw, stride, groups)
+        eps = jax.random.normal(key_p, clean.shape)
+        return clean + sigma * jnp.sqrt(sq + 1e-12) * eps
+
+    keys = jax.random.split(key, bits_n)
+    y_lv = sum(2.0**p * plane_read(p, keys[p]) for p in range(bits_n))
+    y = y_lv * s + b
+    out_hw = y.shape[1] * y.shape[2]
+    stats = _layer_stats(
+        w_deq, w_scale, levels, rho, alpha=float(out_hw), cfg=cfg, planes=planes
+    )
+    return y, stats
+
+
+# ---------------------------------------------------------------------------
+# energy bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def _layer_stats(w_deq, w_scale, levels, rho, alpha, cfg, planes=None):
+    """Per-layer energy terms.
+
+    reg_term  — the paper's regulariser `alpha * rho * sum_t |w_t|`
+                (weights normalised to full-scale, eq. 13).
+    energy    — estimated analog read energy of this layer for this batch,
+                normalised device units (eq. 19): rho * |w|_norm * levels
+                summed over reads; decomposed mode uses sum of set bits.
+    """
+    w_norm_sum = jnp.sum(jnp.abs(w_deq)) / w_scale
+    reg_term = alpha * rho * w_norm_sum
+    w_norm_mean = jnp.mean(jnp.abs(w_deq)) / w_scale
+    if planes is None:
+        duty = jnp.mean(levels)  # mean integer DAC level per read
+    else:
+        duty = jnp.mean(jnp.sum(planes, axis=0))  # mean set bits per read
+    n_cells = float(w_deq.size)
+    energy = device.E0 * rho * w_norm_mean * duty * n_cells * alpha
+    return {"reg": reg_term, "energy": energy, "cells": n_cells, "alpha": alpha}

@@ -1,0 +1,253 @@
+"""L2 train / eval / predict step builders.
+
+Everything here is lowered ONCE by aot.py to HLO text and executed from the
+Rust coordinator through PJRT — python never runs on the request path.
+
+A single `train_step` artifact serves solutions `trad`, `A` and `A+B` via
+scalar gate inputs (noise_gate, lam, rho_gate); `A+B+C` uses the
+structurally different `train_step_decomp` artifact (bit-serial forward).
+
+Flat argument convention (mirrored by rust/src/runtime/session.rs):
+
+  train:   [w0,b0,...,wL,bL, rho_raw,
+            m0..mL(b), v0..vL(b), m_rho, v_rho,
+            step(1,), x(B,H,W,C), y(B,)i32, seed(1,)i32,
+            intensity(1,), lam(1,), rho_gate(1,), noise_gate(1,)]
+        -> (params'..., rho_raw', m'..., v'..., m_rho', v_rho',
+            loss(1,), acc(1,), energy(1,))
+
+  eval:    [params..., rho_raw, x, y(B,)i32, seed(1,)i32,
+            intensity(1,), noise_gate(1,)]
+        -> (top1(1,), top5(1,), loss_sum(1,), energy(1,))
+
+  predict: [params..., rho_raw, x, seed(1,)i32, intensity(1,),
+            noise_gate(1,)] -> (logits(B,C),)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import device, models
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+LR = 1e-3
+RHO_LR_SCALE = 10.0  # rho moves on a coarser scale than weights
+
+
+def _cfg(intensity, noise_gate, act_bits, weight_bits):
+    return {
+        "act_bits": act_bits,
+        "weight_bits": weight_bits,
+        "intensity": intensity,
+        "noise_gate": noise_gate,
+    }
+
+
+def _loss_fn(params, rho_raw, x, y, key, spec, decomposed, intensity, lam,
+             noise_gate, act_bits, weight_bits, num_classes):
+    cfg = _cfg(intensity, noise_gate, act_bits, weight_bits)
+    logits, stats = models.forward(
+        params, rho_raw, x, key, cfg, spec, decomposed=decomposed
+    )
+    labels = jax.nn.one_hot(y, num_classes)
+    ce = -jnp.mean(jnp.sum(labels * jax.nn.log_softmax(logits), axis=-1))
+    # Paper eq. (13): lam * sum_t alpha_t * rho * |w_t| — normalised by the
+    # total number of cell reads so lam is scale-free across models.
+    total_reads = sum(s["alpha"] * s["cells"] for s in stats)
+    reg = sum(s["reg"] for s in stats) / total_reads
+    energy = sum(s["energy"] for s in stats)
+    loss = ce + lam * reg
+    acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    return loss, (ce, acc, energy, logits)
+
+
+def make_train_step(name, num_classes, batch, hw=32, decomposed=False,
+                    act_bits=device.DEFAULT_ACT_BITS,
+                    weight_bits=device.DEFAULT_WEIGHT_BITS):
+    """Build the flat-signature Adam train step for one model."""
+    spec = models.model_spec(name, num_classes)
+    n_layers = models.num_param_layers(name, num_classes)
+    n_params = 2 * n_layers
+
+    def step_fn(*args):
+        i = 0
+
+        def take(k):
+            nonlocal i
+            out = args[i : i + k]
+            i += k
+            return list(out)
+
+        params = take(n_params)
+        (rho_raw,) = take(1)
+        m = take(n_params)
+        v = take(n_params)
+        (m_rho,) = take(1)
+        (v_rho,) = take(1)
+        step, x, y, seed, intensity, lam, rho_gate, noise_gate = take(8)
+
+        step = step[0]
+        key = jax.random.fold_in(jax.random.PRNGKey(seed[0]), step.astype(jnp.int32))
+        inten = intensity[0]
+        lam_s = lam[0]
+        rho_g = rho_gate[0]
+        noise_g = noise_gate[0]
+
+        grad_fn = jax.value_and_grad(_loss_fn, argnums=(0, 1), has_aux=True)
+        (loss, (ce, acc, energy, _)), (gp, g_rho) = grad_fn(
+            params, rho_raw, x, y, key, spec, decomposed, inten, lam_s,
+            noise_g, act_bits, weight_bits, num_classes,
+        )
+        g_rho = g_rho * rho_g
+
+        t = step + 1.0
+        bc1 = 1.0 - ADAM_B1**t
+        bc2 = 1.0 - ADAM_B2**t
+
+        def adam(p, g, m_, v_, lr):
+            m_n = ADAM_B1 * m_ + (1 - ADAM_B1) * g
+            v_n = ADAM_B2 * v_ + (1 - ADAM_B2) * (g * g)
+            p_n = p - lr * (m_n / bc1) / (jnp.sqrt(v_n / bc2) + ADAM_EPS)
+            return p_n, m_n, v_n
+
+        new_p, new_m, new_v = [], [], []
+        for p, g, m_, v_ in zip(params, gp, m, v):
+            pn, mn, vn = adam(p, g, m_, v_, LR)
+            new_p.append(pn)
+            new_m.append(mn)
+            new_v.append(vn)
+        rho_n, m_rho_n, v_rho_n = adam(rho_raw, g_rho, m_rho, v_rho, LR * RHO_LR_SCALE)
+
+        out = (
+            new_p
+            + [rho_n]
+            + new_m
+            + new_v
+            + [m_rho_n, v_rho_n]
+            + [loss[None], acc[None], energy[None]]
+        )
+        return tuple(out)
+
+    return step_fn, train_input_specs(name, num_classes, batch, hw)
+
+
+def make_eval_step(name, num_classes, batch, hw=32, decomposed=False,
+                   act_bits=device.DEFAULT_ACT_BITS,
+                   weight_bits=device.DEFAULT_WEIGHT_BITS):
+    spec = models.model_spec(name, num_classes)
+    n_params = 2 * models.num_param_layers(name, num_classes)
+
+    def eval_fn(*args):
+        params = list(args[:n_params])
+        rho_raw, x, y, seed, intensity, noise_gate = args[n_params : n_params + 6]
+        key = jax.random.PRNGKey(seed[0])
+        cfg = _cfg(intensity[0], noise_gate[0], act_bits, weight_bits)
+        logits, stats = models.forward(
+            params, rho_raw, x, key, cfg, spec, decomposed=decomposed
+        )
+        labels = jax.nn.one_hot(y, num_classes)
+        loss_sum = -jnp.sum(labels * jax.nn.log_softmax(logits))
+        top1 = jnp.sum((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+        # top-5 via label-logit rank (lax.top_k lowers to a `topk` HLO
+        # attribute that xla_extension 0.5.1's text parser rejects)
+        k5 = min(5, num_classes)
+        label_logit = jnp.take_along_axis(logits, y[:, None], axis=1)
+        rank = jnp.sum((logits > label_logit).astype(jnp.int32), axis=1)
+        top5 = jnp.sum((rank < k5).astype(jnp.float32))
+        energy = sum(s["energy"] for s in stats)
+        return (top1[None], top5[None], loss_sum[None], jnp.asarray(energy)[None])
+
+    return eval_fn, eval_input_specs(name, num_classes, batch, hw)
+
+
+def make_predict(name, num_classes, batch, hw=32, decomposed=False,
+                 act_bits=device.DEFAULT_ACT_BITS,
+                 weight_bits=device.DEFAULT_WEIGHT_BITS):
+    spec = models.model_spec(name, num_classes)
+    n_params = 2 * models.num_param_layers(name, num_classes)
+
+    def predict_fn(*args):
+        params = list(args[:n_params])
+        rho_raw, x, seed, intensity, noise_gate = args[n_params : n_params + 5]
+        key = jax.random.PRNGKey(seed[0])
+        cfg = _cfg(intensity[0], noise_gate[0], act_bits, weight_bits)
+        logits, _ = models.forward(
+            params, rho_raw, x, key, cfg, spec, decomposed=decomposed
+        )
+        return (logits,)
+
+    return predict_fn, predict_input_specs(name, num_classes, batch, hw)
+
+
+# ---------------------------------------------------------------------------
+# input specs (shape/dtype manifests)
+# ---------------------------------------------------------------------------
+
+
+def _param_specs(name, num_classes):
+    plist = models._param_layers(models.model_spec(name, num_classes))
+    specs = []
+    for kind, shape in plist:
+        bshape = (shape[1],) if kind == "dense" else (shape[3],)
+        specs.append(("w", shape, "f32"))
+        specs.append(("b", bshape, "f32"))
+    return specs
+
+
+def train_input_specs(name, num_classes, batch, hw=32):
+    ps = _param_specs(name, num_classes)
+    n_layers = len(ps) // 2
+    specs = [(f"param{i}", s, d) for i, (_, s, d) in enumerate(ps)]
+    specs += [("rho_raw", (n_layers,), "f32")]
+    specs += [(f"m{i}", s, d) for i, (_, s, d) in enumerate(ps)]
+    specs += [(f"v{i}", s, d) for i, (_, s, d) in enumerate(ps)]
+    specs += [("m_rho", (n_layers,), "f32"), ("v_rho", (n_layers,), "f32")]
+    specs += [
+        ("step", (1,), "f32"),
+        ("x", (batch, hw, hw, 3), "f32"),
+        ("y", (batch,), "i32"),
+        ("seed", (1,), "i32"),
+        ("intensity", (1,), "f32"),
+        ("lam", (1,), "f32"),
+        ("rho_gate", (1,), "f32"),
+        ("noise_gate", (1,), "f32"),
+    ]
+    return specs
+
+
+def eval_input_specs(name, num_classes, batch, hw=32):
+    ps = _param_specs(name, num_classes)
+    n_layers = len(ps) // 2
+    specs = [(f"param{i}", s, d) for i, (_, s, d) in enumerate(ps)]
+    specs += [
+        ("rho_raw", (n_layers,), "f32"),
+        ("x", (batch, hw, hw, 3), "f32"),
+        ("y", (batch,), "i32"),
+        ("seed", (1,), "i32"),
+        ("intensity", (1,), "f32"),
+        ("noise_gate", (1,), "f32"),
+    ]
+    return specs
+
+
+def predict_input_specs(name, num_classes, batch, hw=32):
+    ps = _param_specs(name, num_classes)
+    n_layers = len(ps) // 2
+    specs = [(f"param{i}", s, d) for i, (_, s, d) in enumerate(ps)]
+    specs += [
+        ("rho_raw", (n_layers,), "f32"),
+        ("x", (batch, hw, hw, 3), "f32"),
+        ("seed", (1,), "i32"),
+        ("intensity", (1,), "f32"),
+        ("noise_gate", (1,), "f32"),
+    ]
+    return specs
+
+
+def abstract_inputs(specs):
+    dt = {"f32": jnp.float32, "i32": jnp.int32}
+    return [jax.ShapeDtypeStruct(shape, dt[d]) for _, shape, d in specs]

@@ -1,0 +1,282 @@
+"""L2 trainable model zoo.
+
+Scaled-down analogues of the paper's evaluation models (DESIGN.md §2):
+
+  * ``mlp``            — sanity model (flatten + 3 dense)
+  * ``tiny_vgg``       — VGG-16 stand-in: stacked 3x3 convs + dense head
+  * ``tiny_resnet``    — ResNet-18 stand-in: residual blocks [1,1,1]
+  * ``tiny_resnet34``  — ResNet-34 stand-in: residual blocks [2,2,2]
+  * ``tiny_mobilenet`` — MobileNet stand-in: depthwise-separable blocks
+
+Models are specs interpreted by ``forward``; every parameterised layer is
+an analog crossbar read (see layers.py).  The spec also yields the layer
+metadata (cells, fan-in, reads-per-inference alpha) consumed by the Rust
+energy/latency model via the artifact manifest.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+# entries:
+#   ("conv",  cin, cout, k, stride)
+#   ("dwconv", c, k, stride)            depthwise
+#   ("dense", d_in, d_out)
+#   ("pool", k)                          max-pool k x k
+#   ("gap",)                             global average pool
+#   ("flatten",)
+# ReLU + activation quantisation is applied at the input of every
+# parameterised layer (inputs are already in [0, 1]).
+
+
+def model_spec(name: str, num_classes: int = 10):
+    if name == "mlp":
+        return [
+            ("flatten",),
+            ("dense", 3072, 256),
+            ("dense", 256, 128),
+            ("dense", 128, num_classes),
+        ]
+    if name == "tiny_vgg":
+        return [
+            ("conv", 3, 32, 3, 1),
+            ("conv", 32, 32, 3, 1),
+            ("pool", 2),
+            ("conv", 32, 64, 3, 1),
+            ("conv", 64, 64, 3, 1),
+            ("pool", 2),
+            ("flatten",),
+            ("dense", 64 * 8 * 8, 128),
+            ("dense", 128, num_classes),
+        ]
+    if name in ("tiny_resnet", "tiny_resnet34"):
+        reps = 1 if name == "tiny_resnet" else 2
+        spec = [("conv", 3, 16, 3, 1)]
+        cin = 16
+        for cout, stride in ((16, 1), (32, 2), (64, 2)):
+            for r in range(reps):
+                spec.append(("res", cin, cout, stride if r == 0 else 1))
+                cin = cout
+        spec += [("gap",), ("dense", 64, num_classes)]
+        return spec
+    if name == "tiny_mobilenet":
+        return [
+            ("conv", 3, 16, 3, 1),
+            ("dwconv", 16, 3, 1),
+            ("conv", 16, 32, 1, 1),
+            ("dwconv", 32, 3, 2),
+            ("conv", 32, 64, 1, 1),
+            ("dwconv", 64, 3, 2),
+            ("conv", 64, 128, 1, 1),
+            ("gap",),
+            ("dense", 128, num_classes),
+        ]
+    raise ValueError(f"unknown model {name!r}")
+
+
+MODEL_NAMES = ["mlp", "tiny_vgg", "tiny_resnet", "tiny_resnet34", "tiny_mobilenet"]
+
+
+def _param_layers(spec):
+    """Expand spec into the flat list of parameterised (crossbar) layers."""
+    out = []
+    for entry in spec:
+        kind = entry[0]
+        if kind == "conv":
+            _, cin, cout, k, stride = entry
+            out.append(("conv", (k, k, cin, cout)))
+        elif kind == "dwconv":
+            _, c, k, stride = entry
+            out.append(("dwconv", (k, k, 1, c)))
+        elif kind == "dense":
+            _, din, dout = entry
+            out.append(("dense", (din, dout)))
+        elif kind == "res":
+            _, cin, cout, stride = entry
+            out.append(("conv", (3, 3, cin, cout)))
+            out.append(("conv", (3, 3, cout, cout)))
+            if stride != 1 or cin != cout:
+                out.append(("conv", (1, 1, cin, cout)))  # projection skip
+    return out
+
+
+def num_param_layers(name, num_classes=10):
+    return len(_param_layers(model_spec(name, num_classes)))
+
+
+def init_params(key, name, num_classes=10):
+    """He-init parameters: flat list [w0, b0, w1, b1, ...]."""
+    plist = _param_layers(model_spec(name, num_classes))
+    params = []
+    for i, (kind, shape) in enumerate(plist):
+        key, sub = jax.random.split(key)
+        if kind == "dense":
+            fan_in = shape[0]
+            bshape = (shape[1],)
+        else:
+            fan_in = shape[0] * shape[1] * shape[2]
+            bshape = (shape[3],)
+        w = jax.random.normal(sub, shape) * np.sqrt(2.0 / fan_in)
+        params.append(w.astype(jnp.float32))
+        params.append(jnp.zeros(bshape, jnp.float32))
+    return params
+
+
+def init_rho_raw(name, num_classes=10, rho0=4.0):
+    """Per-layer raw energy coefficients; softplus(rho_raw) == rho0."""
+    n = num_param_layers(name, num_classes)
+    raw = np.log(np.expm1(rho0)).astype(np.float32)
+    return jnp.full((n,), raw, jnp.float32)
+
+
+def rho_of(rho_raw):
+    """Positive, bounded energy coefficients."""
+    return jnp.clip(jax.nn.softplus(rho_raw), 0.05, 100.0)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def forward(params, rho_raw, x, key, cfg, spec, decomposed=False):
+    """Run the model; returns (logits, stats_list).
+
+    cfg: dict(act_bits, weight_bits, intensity, noise_gate) — intensity and
+    noise_gate may be traced scalars.
+    """
+    rho = rho_of(rho_raw)
+    dense = layers.noisy_dense_decomp if decomposed else layers.noisy_dense
+    conv = layers.noisy_conv_decomp if decomposed else layers.noisy_conv
+    idx = 0  # param-layer index
+    stats = []
+
+    def take():
+        nonlocal idx
+        w, b = params[2 * idx], params[2 * idx + 1]
+        r = rho[idx]
+        idx += 1
+        return w, b, r
+
+    def crossbar_conv(x, key, stride, groups=1):
+        w, b, r = take()
+        return conv(key, x, w, b, r, cfg, stride=stride, groups=groups)
+
+    for entry in spec:
+        kind = entry[0]
+        key, sub = jax.random.split(key)
+        if kind == "conv":
+            _, cin, cout, k, stride = entry
+            x = jax.nn.relu(x)
+            x, st = crossbar_conv(x, sub, stride)
+            stats.append(st)
+        elif kind == "dwconv":
+            _, c, k, stride = entry
+            x = jax.nn.relu(x)
+            x, st = crossbar_conv(x, sub, stride, groups=c)
+            stats.append(st)
+        elif kind == "res":
+            _, cin, cout, stride = entry
+            x_in = jax.nn.relu(x)
+            key, k1, k2, k3 = jax.random.split(key, 4)
+            h, st1 = crossbar_conv(x_in, k1, stride)
+            h = jax.nn.relu(h)
+            h, st2 = crossbar_conv(h, k2, 1)
+            stats += [st1, st2]
+            if stride != 1 or cin != cout:
+                skip, st3 = crossbar_conv(x_in, k3, stride)
+                stats.append(st3)
+            else:
+                skip = x_in
+            x = h + skip
+        elif kind == "dense":
+            x = jax.nn.relu(x)
+            w, b, r = take()
+            x, st = dense(sub, x, w, b, r, cfg)
+            stats.append(st)
+        elif kind == "pool":
+            k = entry[1]
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1), "VALID"
+            )
+        elif kind == "gap":
+            x = jnp.mean(x, axis=(1, 2))
+        elif kind == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        else:
+            raise ValueError(f"unknown spec entry {entry}")
+    return x, stats
+
+
+def layer_meta(name, num_classes=10, hw=32):
+    """Static per-layer metadata for the Rust energy/latency model.
+
+    Returns a list of dicts: kind, cells (= #weights), fan_in (crossbar rows
+    per read), alpha (reads per weight per inference), out_features.
+    Spatial sizes assume hw x hw inputs and 'SAME' padding.
+    """
+    spec = model_spec(name, num_classes)
+    metas = []
+    cur = hw
+
+    def conv_meta(k, cin, cout, stride, groups=1):
+        nonlocal cur
+        out = int(np.ceil(cur / stride))
+        meta = {
+            "kind": "dwconv" if groups > 1 else "conv",
+            "cells": k * k * (cin // groups) * cout,
+            "fan_in": k * k * (cin // groups),
+            "alpha": out * out,
+            "out_features": cout,
+        }
+        cur = out
+        return meta
+
+    for entry in spec:
+        kind = entry[0]
+        if kind == "conv":
+            _, cin, cout, k, stride = entry
+            metas.append(conv_meta(k, cin, cout, stride))
+        elif kind == "dwconv":
+            _, c, k, stride = entry
+            metas.append(conv_meta(k, c, c, stride, groups=c))
+        elif kind == "res":
+            _, cin, cout, stride = entry
+            metas.append(conv_meta(3, cin, cout, stride))
+            metas.append(conv_meta(3, cout, cout, 1))
+            if stride != 1 or cin != cout:
+                # projection operates on the pre-stride grid
+                saved = cur
+                cur = int(np.ceil(saved * stride / stride))  # same as post
+                metas.append(
+                    {
+                        "kind": "conv",
+                        "cells": cin * cout,
+                        "fan_in": cin,
+                        "alpha": cur * cur,
+                        "out_features": cout,
+                    }
+                )
+        elif kind == "dense":
+            _, din, dout = entry
+            metas.append(
+                {
+                    "kind": "dense",
+                    "cells": din * dout,
+                    "fan_in": din,
+                    "alpha": 1,
+                    "out_features": dout,
+                }
+            )
+        elif kind == "pool":
+            cur //= entry[1]
+        elif kind == "gap":
+            cur = 1
+    return metas

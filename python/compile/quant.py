@@ -1,0 +1,80 @@
+"""Quantisers with straight-through estimators (STE).
+
+Weights: signed symmetric ``B_w``-bit quantisation (the integer level is
+what gets programmed into the analog cell's conductance; one cell per
+weight, bipolar conductance).
+
+Activations: unsigned ``B_a``-bit quantisation after ReLU.  The integer
+level is what the DAC drives onto the crossbar row — and what the
+low-fluctuation decomposition (technique C) splits into bit-planes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import device
+
+
+@jax.custom_jvp
+def _round_ste(x):
+    return jnp.round(x)
+
+
+@_round_ste.defjvp
+def _round_ste_jvp(primals, tangents):
+    (x,), (dx,) = primals, tangents
+    return jnp.round(x), dx  # straight-through
+
+
+def weight_scale(w):
+    """Per-tensor full-scale of a weight tensor (max |w|, floored)."""
+    return jnp.maximum(jnp.max(jnp.abs(w)), 1e-6)
+
+
+def quant_weight(w, bits: int = device.DEFAULT_WEIGHT_BITS):
+    """Fake-quantise weights symmetrically to ``bits`` signed bits.
+
+    Returns (w_q_dequantised, w_scale).  Gradients flow via STE.
+    """
+    levels = 2.0 ** (bits - 1) - 1.0
+    s = weight_scale(w)
+    q = _round_ste(jnp.clip(w / s, -1.0, 1.0) * levels) / levels
+    return q * s, s
+
+
+def quant_act(x, bits: int = device.DEFAULT_ACT_BITS):
+    """Fake-quantise non-negative activations to ``bits`` unsigned bits.
+
+    Returns (x_deq, levels_int, scale): ``x_deq = levels_int * scale`` and
+    ``levels_int`` in [0, 2^bits - 1] (float-typed integers). Gradients via
+    STE through the rounding, and through the dynamic scale.
+    """
+    n = 2.0**bits - 1.0
+    s = jnp.maximum(jnp.max(x), 1e-6) / n
+    levels = jnp.clip(_round_ste(x / s), 0.0, n)
+    return levels * s, levels, s
+
+
+def bit_planes(levels, bits: int = device.DEFAULT_ACT_BITS):
+    """Decompose integer activation levels into binary bit-planes.
+
+    ``levels``: float tensor of integer values in [0, 2^bits - 1].
+    Returns tensor of shape (bits, *levels.shape) with entries in {0., 1.},
+    least-significant plane first, so ``levels == sum_p planes[p] * 2^p``.
+    Gradients: each plane uses an STE-style pass-through scaled by 2^-bits
+    so that the recomposition's gradient matches the identity.
+    """
+    lv = jax.lax.stop_gradient(levels)
+    planes = []
+    for p in range(bits):
+        planes.append(jnp.mod(jnp.floor(lv / 2.0**p), 2.0))
+    out = jnp.stack(planes, axis=0)
+    # Attach a straight-through path: recompose(out) == levels exactly, so
+    # route the gradient of `levels` evenly through the planes.
+    recompose = sum(out[p] * 2.0**p for p in range(bits))
+    correction = (levels - jax.lax.stop_gradient(recompose)) / float(
+        sum(2.0**p for p in range(bits))
+    )
+    return out + correction[None]

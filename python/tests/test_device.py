@@ -1,0 +1,71 @@
+"""Unit tests for the canonical device model."""
+
+import numpy as np
+import pytest
+
+from compile import device
+
+
+class TestStateOffsets:
+    def test_zero_mean_unit_var(self):
+        for m in (2, 3, 4, 8, 16):
+            c = device.state_offsets(m)
+            assert abs(float(c.mean())) < 1e-6
+            assert abs(float(c.std()) - 1.0) < 1e-5
+
+    def test_single_state_noiseless(self):
+        c = device.state_offsets(1)
+        assert c.shape == (1,) and c[0] == 0.0
+
+    def test_symmetric(self):
+        c = device.state_offsets(4)
+        np.testing.assert_allclose(np.sort(c), -np.sort(-c)[::-1], atol=1e-6)
+
+    def test_invalid(self):
+        with pytest.raises(ValueError):
+            device.state_offsets(0)
+
+
+class TestSigma:
+    def test_sigma_decreases_with_rho(self):
+        """Higher energy coefficient -> lower fluctuation (Fig 2b)."""
+        s = [float(device.sigma_rel(r)) for r in (0.25, 1.0, 4.0, 16.0)]
+        assert all(a > b for a, b in zip(s, s[1:]))
+
+    def test_sqrt_law(self):
+        assert float(device.sigma_rel(4.0)) == pytest.approx(
+            float(device.sigma_rel(1.0)) / 2.0, rel=1e-6
+        )
+
+    def test_intensity_scaling(self):
+        w = float(device.sigma_rel(1.0, device.INTENSITY["weak"]))
+        n = float(device.sigma_rel(1.0, device.INTENSITY["normal"]))
+        s = float(device.sigma_rel(1.0, device.INTENSITY["strong"]))
+        assert w < n < s
+        assert s == pytest.approx(4 * w, rel=1e-6)
+
+    def test_sigma_abs_scales_with_wscale(self):
+        assert float(device.sigma_abs(1.0, 1.0, 2.0)) == pytest.approx(
+            2 * float(device.sigma_abs(1.0, 1.0, 1.0)), rel=1e-6
+        )
+
+
+class TestEnergy:
+    def test_energy_linear_in_rho(self):
+        """E proportional to rho (Fig 2a / eq 19)."""
+        assert float(device.read_energy(2.0, 0.5, 3.0)) == pytest.approx(
+            2 * float(device.read_energy(1.0, 0.5, 3.0))
+        )
+
+    def test_energy_linear_in_weight(self):
+        assert float(device.read_energy(1.0, 1.0, 3.0)) == pytest.approx(
+            2 * float(device.read_energy(1.0, 0.5, 3.0))
+        )
+
+    def test_decomposed_cheaper(self):
+        """eq (19)-(20): rho * sum(bits) < rho * level for any level >= 2."""
+        for level in range(2, 16):
+            bits = bin(level).count("1")
+            e_ori = float(device.read_energy(1.0, 1.0, level))
+            e_new = float(device.read_energy(1.0, 1.0, bits))
+            assert e_new < e_ori

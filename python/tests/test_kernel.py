@@ -1,0 +1,139 @@
+"""Pallas kernel vs pure-jnp oracle — the CORE L1 correctness signal.
+
+Hypothesis sweeps shapes; fixed seeds keep the suite deterministic.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bitserial_matmul, emt_matmul
+from compile.kernels.ref import bitserial_matmul_ref, clt_noise_std, emt_matmul_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, *shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape).astype(
+        jnp.float32
+    )
+
+
+class TestEmtMatmul:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 48),
+        k=st.integers(1, 96),
+        n=st.integers(1, 160),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, b, k, n, seed):
+        x = jax.random.uniform(jax.random.PRNGKey(seed), (b, k))
+        w = _rand(seed + 1, k, n)
+        d = _rand(seed + 2, b, k, n, scale=0.05)
+        bias = _rand(seed + 3, n)
+        got = emt_matmul(x, w, d, bias)
+        want = emt_matmul_ref(x, w, d, bias)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_zero_delta_is_clean_matmul(self):
+        x = jax.random.uniform(jax.random.PRNGKey(0), (8, 32))
+        w = _rand(1, 32, 16)
+        got = emt_matmul(x, w, jnp.zeros((8, 32, 16)), jnp.zeros((16,)))
+        np.testing.assert_allclose(got, x @ w, rtol=1e-5, atol=1e-5)
+
+    def test_no_bias_default(self):
+        x = jax.random.uniform(jax.random.PRNGKey(0), (4, 8))
+        w = _rand(1, 8, 4)
+        d = _rand(2, 4, 8, 4, scale=0.01)
+        np.testing.assert_allclose(
+            emt_matmul(x, w, d), emt_matmul_ref(x, w, d), rtol=1e-5, atol=1e-5
+        )
+
+    def test_tile_boundaries(self):
+        """Shapes straddling the (32, 128) default tiles."""
+        for b, n in [(31, 127), (32, 128), (33, 129), (65, 257)]:
+            x = jax.random.uniform(jax.random.PRNGKey(b), (b, 24))
+            w = _rand(n, 24, n)
+            d = _rand(b + n, b, 24, n, scale=0.02)
+            np.testing.assert_allclose(
+                emt_matmul(x, w, d),
+                emt_matmul_ref(x, w, d),
+                rtol=2e-4,
+                atol=2e-4,
+            )
+
+
+class TestBitserialMatmul:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        p=st.integers(1, 6),
+        b=st.integers(1, 24),
+        k=st.integers(1, 48),
+        n=st.integers(1, 96),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, p, b, k, n, seed):
+        key = jax.random.PRNGKey(seed)
+        bits = (jax.random.uniform(key, (p, b, k)) > 0.5).astype(jnp.float32)
+        w = _rand(seed + 1, k, n)
+        d = _rand(seed + 2, p, b, k, n, scale=0.05)
+        bias = _rand(seed + 3, n)
+        got = bitserial_matmul(bits, w, d, bias)
+        want = bitserial_matmul_ref(bits, w, d, bias)
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+    def test_recomposes_integer_matmul(self):
+        """sum_p 2^p bits_p == x  =>  bit-serial(clean) == x @ w."""
+        key = jax.random.PRNGKey(7)
+        levels = jax.random.randint(key, (8, 16), 0, 16).astype(jnp.float32)
+        bits = jnp.stack(
+            [jnp.mod(jnp.floor(levels / 2.0**p), 2.0) for p in range(4)]
+        )
+        w = _rand(1, 16, 12)
+        got = bitserial_matmul(bits, w, jnp.zeros((4, 8, 16, 12)), jnp.zeros((12,)))
+        np.testing.assert_allclose(got, levels @ w, rtol=1e-4, atol=1e-4)
+
+    def test_fluctuation_reduction_sqrt_law(self):
+        """eq (16)-(18): decomposed read noise std < original read std."""
+        trials, b, k, n, p = 64, 4, 64, 8, 4
+        key = jax.random.PRNGKey(0)
+        levels = jax.random.randint(key, (b, k), 0, 2**p).astype(jnp.float32)
+        bits = jnp.stack(
+            [jnp.mod(jnp.floor(levels / 2.0**q), 2.0) for q in range(p)]
+        )
+        w = _rand(1, k, n)
+        sigma = 0.1
+        outs_ori, outs_new = [], []
+        for t in range(trials):
+            d1 = sigma * jax.random.normal(jax.random.PRNGKey(2 * t), (b, k, n))
+            d4 = sigma * jax.random.normal(
+                jax.random.PRNGKey(2 * t + 1), (p, b, k, n)
+            )
+            outs_ori.append(emt_matmul_ref(levels, w, d1))
+            outs_new.append(bitserial_matmul_ref(bits, w, d4))
+        std_ori = float(jnp.std(jnp.stack(outs_ori), axis=0).mean())
+        std_new = float(jnp.std(jnp.stack(outs_new), axis=0).mean())
+        assert std_new < std_ori
+
+
+class TestCltSurrogate:
+    def test_variance_matches_exact_sampling(self):
+        """The conv-path CLT noise has the same variance as explicit
+        per-read sampling (validates the DESIGN.md §2 substitution)."""
+        from compile import layers
+
+        b, k, n = 8, 256, 16
+        x = jax.random.uniform(jax.random.PRNGKey(0), (b, k))
+        sigma = 0.05
+        trials = 200
+        noise = []
+        for t in range(trials):
+            d = layers.sample_delta(jax.random.PRNGKey(t), (b, k, n), sigma)
+            noise.append(jnp.einsum("bk,bkn->bn", x, d))
+        emp_std = jnp.std(jnp.stack(noise), axis=0)  # (b, n)
+        pred_std = clt_noise_std(x, sigma)  # (b, 1)
+        np.testing.assert_allclose(
+            emp_std.mean(axis=1), pred_std[:, 0], rtol=0.15
+        )

@@ -1,0 +1,198 @@
+"""Noisy layer tests: exact-vs-CLT equivalence, gradient flow, decomposition."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers, models
+
+
+def _cfg(intensity=1.0, noise_gate=1.0, act_bits=4, weight_bits=8):
+    return {
+        "act_bits": act_bits,
+        "weight_bits": weight_bits,
+        "intensity": intensity,
+        "noise_gate": noise_gate,
+    }
+
+
+class TestNoisyDense:
+    def test_noiseless_when_gated(self):
+        x = jax.random.uniform(jax.random.PRNGKey(0), (8, 32))
+        w = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+        b = jnp.zeros((16,))
+        y, st = layers.noisy_dense(
+            jax.random.PRNGKey(2), x, w, b, 4.0, _cfg(noise_gate=0.0)
+        )
+        # only quantisation error remains
+        xq, _, _ = __import__("compile.quant", fromlist=["quant_act"]).quant_act(x, 4)
+        wq, _ = __import__("compile.quant", fromlist=["quant_weight"]).quant_weight(w, 8)
+        np.testing.assert_allclose(y, xq @ wq, rtol=1e-4, atol=1e-4)
+
+    def test_noise_decreases_with_rho(self):
+        """Paper Fig 2(b): higher energy coefficient -> tighter outputs."""
+        x = jax.random.uniform(jax.random.PRNGKey(0), (16, 64))
+        w = jax.random.normal(jax.random.PRNGKey(1), (64, 8))
+        b = jnp.zeros((8,))
+
+        def spread(rho):
+            outs = [
+                layers.noisy_dense(jax.random.PRNGKey(t), x, w, b, rho, _cfg())[0]
+                for t in range(24)
+            ]
+            return float(jnp.std(jnp.stack(outs), axis=0).mean())
+
+        assert spread(16.0) < spread(1.0) < spread(0.1)
+
+    def test_exact_and_clt_same_variance(self):
+        """Force both paths on the same layer; fluctuation std must agree."""
+        x = jax.random.uniform(jax.random.PRNGKey(0), (8, 128))
+        w = jax.random.normal(jax.random.PRNGKey(1), (128, 32))
+        b = jnp.zeros((32,))
+        budget = layers.EXACT_BUDGET
+
+        def spread():
+            outs = [
+                layers.noisy_dense(jax.random.PRNGKey(t), x, w, b, 1.0, _cfg())[0]
+                for t in range(64)
+            ]
+            return float(jnp.std(jnp.stack(outs), axis=0).mean())
+
+        s_exact = spread()
+        try:
+            layers.EXACT_BUDGET = 0  # force CLT
+            s_clt = spread()
+        finally:
+            layers.EXACT_BUDGET = budget
+        assert s_clt == pytest.approx(s_exact, rel=0.2)
+
+    def test_gradients_finite(self):
+        x = jax.random.uniform(jax.random.PRNGKey(0), (4, 16))
+        w = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+        b = jnp.zeros((8,))
+
+        def f(w, rho):
+            y, _ = layers.noisy_dense(jax.random.PRNGKey(2), x, w, b, rho, _cfg())
+            return jnp.sum(y * y)
+
+        gw, grho = jax.grad(f, argnums=(0, 1))(w, 2.0)
+        assert np.all(np.isfinite(np.asarray(gw)))
+        assert np.isfinite(float(grho))
+
+    def test_rho_gradient_nonzero(self):
+        """Technique B depends on dL/drho flowing through the noise."""
+        x = jax.random.uniform(jax.random.PRNGKey(0), (4, 16))
+        w = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+        b = jnp.zeros((8,))
+
+        def f(rho):
+            y, _ = layers.noisy_dense(jax.random.PRNGKey(2), x, w, b, rho, _cfg())
+            return jnp.sum(y * y)
+
+        assert abs(float(jax.grad(f)(2.0))) > 0.0
+
+
+class TestDecomposedDense:
+    def test_matches_plain_when_noiseless(self):
+        x = jax.random.uniform(jax.random.PRNGKey(0), (8, 32))
+        w = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+        b = jax.random.normal(jax.random.PRNGKey(2), (16,))
+        y0, _ = layers.noisy_dense(
+            jax.random.PRNGKey(3), x, w, b, 4.0, _cfg(noise_gate=0.0)
+        )
+        y1, _ = layers.noisy_dense_decomp(
+            jax.random.PRNGKey(3), x, w, b, 4.0, _cfg(noise_gate=0.0)
+        )
+        np.testing.assert_allclose(y0, y1, rtol=1e-3, atol=1e-3)
+
+    def test_lower_fluctuation_than_plain(self):
+        """Technique C headline claim (eq. 18) at the layer level."""
+        x = jax.random.uniform(jax.random.PRNGKey(0), (16, 64))
+        w = jax.random.normal(jax.random.PRNGKey(1), (64, 8))
+        b = jnp.zeros((8,))
+
+        def spread(fn):
+            outs = [
+                fn(jax.random.PRNGKey(t), x, w, b, 0.5, _cfg())[0]
+                for t in range(48)
+            ]
+            return float(jnp.std(jnp.stack(outs), axis=0).mean())
+
+        assert spread(layers.noisy_dense_decomp) < spread(layers.noisy_dense)
+
+    def test_lower_energy_than_plain(self):
+        """Technique C energy claim (eq. 20) from the layer stats."""
+        x = jax.random.uniform(jax.random.PRNGKey(0), (16, 64))
+        w = jax.random.normal(jax.random.PRNGKey(1), (64, 8))
+        b = jnp.zeros((8,))
+        _, st_ori = layers.noisy_dense(jax.random.PRNGKey(2), x, w, b, 1.0, _cfg())
+        _, st_new = layers.noisy_dense_decomp(
+            jax.random.PRNGKey(2), x, w, b, 1.0, _cfg()
+        )
+        assert float(st_new["energy"]) < float(st_ori["energy"])
+
+
+class TestNoisyConv:
+    def test_noiseless_gate(self):
+        x = jax.random.uniform(jax.random.PRNGKey(0), (2, 8, 8, 3))
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 3, 8)) * 0.2
+        b = jnp.zeros((8,))
+        y1, _ = layers.noisy_conv(
+            jax.random.PRNGKey(2), x, w, b, 1.0, _cfg(noise_gate=0.0)
+        )
+        y2, _ = layers.noisy_conv(
+            jax.random.PRNGKey(3), x, w, b, 1.0, _cfg(noise_gate=0.0)
+        )
+        np.testing.assert_allclose(y1, y2, rtol=1e-6)
+
+    def test_depthwise_shapes(self):
+        x = jax.random.uniform(jax.random.PRNGKey(0), (2, 8, 8, 16))
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 1, 16)) * 0.2
+        b = jnp.zeros((16,))
+        y, st = layers.noisy_conv(
+            jax.random.PRNGKey(2), x, w, b, 1.0, _cfg(), stride=2, groups=16
+        )
+        assert y.shape == (2, 4, 4, 16)
+
+    def test_alpha_is_output_area(self):
+        x = jax.random.uniform(jax.random.PRNGKey(0), (2, 8, 8, 3))
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 3, 8)) * 0.2
+        b = jnp.zeros((8,))
+        _, st = layers.noisy_conv(jax.random.PRNGKey(2), x, w, b, 1.0, _cfg())
+        assert st["alpha"] == 64.0
+
+
+class TestModelForward:
+    @pytest.mark.parametrize("name", models.MODEL_NAMES)
+    def test_shapes_and_finite(self, name):
+        params = models.init_params(jax.random.PRNGKey(0), name, 10)
+        rho = models.init_rho_raw(name, 10)
+        x = jax.random.uniform(jax.random.PRNGKey(1), (2, 32, 32, 3))
+        spec = models.model_spec(name, 10)
+        logits, stats = models.forward(
+            params, rho, x, jax.random.PRNGKey(2), _cfg(), spec
+        )
+        assert logits.shape == (2, 10)
+        assert np.all(np.isfinite(np.asarray(logits)))
+        assert len(stats) == models.num_param_layers(name, 10)
+
+    @pytest.mark.parametrize("name", ["mlp", "tiny_resnet"])
+    def test_decomposed_forward(self, name):
+        params = models.init_params(jax.random.PRNGKey(0), name, 10)
+        rho = models.init_rho_raw(name, 10)
+        x = jax.random.uniform(jax.random.PRNGKey(1), (2, 32, 32, 3))
+        spec = models.model_spec(name, 10)
+        logits, _ = models.forward(
+            params, rho, x, jax.random.PRNGKey(2), _cfg(), spec, decomposed=True
+        )
+        assert logits.shape == (2, 10)
+        assert np.all(np.isfinite(np.asarray(logits)))
+
+    def test_layer_meta_matches_params(self):
+        for name in models.MODEL_NAMES:
+            metas = models.layer_meta(name, 10)
+            params = models.init_params(jax.random.PRNGKey(0), name, 10)
+            assert len(metas) == len(params) // 2
+            for meta, w in zip(metas, params[0::2]):
+                assert meta["cells"] == w.size

@@ -1,0 +1,163 @@
+"""Train/eval step tests: loss decreases, gates behave, specs line up."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, models
+
+
+def _make_args(name, nc, B, seed=0, intensity=1.0, lam=0.0, rho_gate=0.0,
+               noise_gate=1.0):
+    params = models.init_params(jax.random.PRNGKey(0), name, nc)
+    rho = models.init_rho_raw(name, nc)
+    zeros = lambda: [jnp.zeros_like(p) for p in params]
+    zr = jnp.zeros_like(rho)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (B, 32, 32, 3))
+    y = jax.random.randint(jax.random.PRNGKey(2), (B,), 0, nc)
+    return (
+        params
+        + [rho]
+        + zeros()
+        + zeros()
+        + [zr, zr]
+        + [
+            jnp.zeros((1,)),
+            x,
+            y,
+            jnp.array([seed], jnp.int32),
+            jnp.array([intensity]),
+            jnp.array([lam]),
+            jnp.array([rho_gate]),
+            jnp.array([noise_gate]),
+        ]
+    )
+
+
+class TestTrainStep:
+    def test_loss_decreases_mlp(self):
+        """A few steps of the jitted train step must reduce the loss."""
+        name, nc, B = "mlp", 10, 16
+        step_fn, _ = model.make_train_step(name, nc, B)
+        jstep = jax.jit(step_fn)
+        args = _make_args(name, nc, B, noise_gate=0.0)
+        n_params = 2 * models.num_param_layers(name, nc)
+        losses = []
+        for t in range(8):
+            out = jstep(*args)
+            losses.append(float(out[-3][0]))
+            # thread state: params, rho, m, v, m_rho, v_rho / bump step
+            state = list(out[: 3 * n_params + 3])
+            params = state[:n_params]
+            rho = state[n_params]
+            m = state[n_params + 1 : 2 * n_params + 1]
+            v = state[2 * n_params + 1 : 3 * n_params + 1]
+            m_rho, v_rho = state[-2], state[-1]
+            args = (
+                params
+                + [rho]
+                + m
+                + v
+                + [m_rho, v_rho]
+                + [jnp.array([float(t + 1)])]
+                + args[3 * n_params + 4 :]
+            )
+        assert losses[-1] < losses[0]
+
+    def test_rho_gate_freezes_rho(self):
+        name, nc, B = "mlp", 10, 8
+        step_fn, _ = model.make_train_step(name, nc, B)
+        n_params = 2 * models.num_param_layers(name, nc)
+        out = jax.jit(step_fn)(*_make_args(name, nc, B, rho_gate=0.0, lam=0.1))
+        rho_new = out[n_params]
+        rho_old = models.init_rho_raw(name, nc)
+        np.testing.assert_allclose(rho_new, rho_old, atol=1e-7)
+
+    def test_rho_moves_with_energy_reg(self):
+        """Technique B: with lam > 0 and the gate open, rho must move."""
+        name, nc, B = "mlp", 10, 8
+        step_fn, _ = model.make_train_step(name, nc, B)
+        n_params = 2 * models.num_param_layers(name, nc)
+        out = jax.jit(step_fn)(*_make_args(name, nc, B, rho_gate=1.0, lam=1.0))
+        rho_new = np.asarray(out[n_params])
+        rho_old = np.asarray(models.init_rho_raw(name, nc))
+        assert np.abs(rho_new - rho_old).max() > 1e-6
+
+    def test_energy_reg_pushes_rho_down(self):
+        """Gradient of the energy term alone must decrease rho (Fig 7)."""
+        name, nc, B = "mlp", 10, 8
+        step_fn, _ = model.make_train_step(name, nc, B)
+        n_params = 2 * models.num_param_layers(name, nc)
+        # huge lambda so the energy term dominates CE
+        out = jax.jit(step_fn)(*_make_args(name, nc, B, rho_gate=1.0, lam=1e4))
+        rho_new = np.asarray(out[n_params])
+        rho_old = np.asarray(models.init_rho_raw(name, nc))
+        assert (rho_new < rho_old).all()
+
+    def test_noise_gate_deterministic(self):
+        name, nc, B = "mlp", 10, 8
+        step_fn, _ = model.make_train_step(name, nc, B)
+        o1 = jax.jit(step_fn)(*_make_args(name, nc, B, seed=1, noise_gate=0.0))
+        o2 = jax.jit(step_fn)(*_make_args(name, nc, B, seed=2, noise_gate=0.0))
+        np.testing.assert_allclose(o1[-3], o2[-3], rtol=1e-6)
+
+
+class TestEvalStep:
+    def test_counts_bounded(self):
+        name, nc, B = "mlp", 10, 32
+        eval_fn, _ = model.make_eval_step(name, nc, B)
+        params = models.init_params(jax.random.PRNGKey(0), name, nc)
+        rho = models.init_rho_raw(name, nc)
+        x = jax.random.uniform(jax.random.PRNGKey(1), (B, 32, 32, 3))
+        y = jax.random.randint(jax.random.PRNGKey(2), (B,), 0, nc)
+        top1, top5, loss_sum, energy = jax.jit(eval_fn)(
+            *params, rho, x, y,
+            jnp.array([0], jnp.int32), jnp.array([1.0]), jnp.array([1.0]),
+        )
+        assert 0 <= float(top1[0]) <= B
+        assert float(top1[0]) <= float(top5[0]) <= B
+        assert float(energy[0]) > 0
+
+    def test_decomp_energy_lower(self):
+        """A+B+C eval reports less analog energy than single-read eval."""
+        name, nc, B = "mlp", 10, 32
+        params = models.init_params(jax.random.PRNGKey(0), name, nc)
+        rho = models.init_rho_raw(name, nc)
+        x = jax.random.uniform(jax.random.PRNGKey(1), (B, 32, 32, 3))
+        y = jax.random.randint(jax.random.PRNGKey(2), (B,), 0, nc)
+        common = (
+            *params, rho, x, y,
+            jnp.array([0], jnp.int32), jnp.array([1.0]), jnp.array([1.0]),
+        )
+        e_ori = jax.jit(model.make_eval_step(name, nc, B)[0])(*common)[3]
+        e_new = jax.jit(model.make_eval_step(name, nc, B, decomposed=True)[0])(
+            *common
+        )[3]
+        assert float(e_new[0]) < float(e_ori[0])
+
+
+class TestSpecs:
+    @pytest.mark.parametrize("name", ["mlp", "tiny_resnet"])
+    def test_train_spec_counts(self, name):
+        nc, B = 10, 4
+        step_fn, specs = model.make_train_step(name, nc, B)
+        n_params = 2 * models.num_param_layers(name, nc)
+        assert len(specs) == 3 * n_params + 3 + 8
+        out = jax.eval_shape(step_fn, *model.abstract_inputs(specs))
+        assert len(out) == 3 * n_params + 3 + 3
+
+    def test_eval_spec_counts(self):
+        eval_fn, specs = model.make_eval_step("mlp", 10, 4)
+        out = jax.eval_shape(eval_fn, *model.abstract_inputs(specs))
+        assert len(out) == 4
+
+    def test_init_artifact_matches_params(self):
+        from compile import aot
+
+        init_fn, specs = aot.make_init("mlp", 10)
+        outs = init_fn(jnp.array([0], jnp.int32))
+        params = models.init_params(jax.random.PRNGKey(0), "mlp", 10)
+        assert len(outs) == len(params) + 1
+        for o, p in zip(outs, params):
+            np.testing.assert_allclose(o, p, rtol=1e-6)

@@ -1,0 +1,87 @@
+"""Quantiser unit tests: round-trips, ranges, STE gradients, bit-planes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+
+
+class TestWeightQuant:
+    def test_range_preserved(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+        wq, s = quant.quant_weight(w, 8)
+        assert float(jnp.max(jnp.abs(wq))) <= float(s) + 1e-6
+
+    def test_levels_are_discrete(self):
+        w = jax.random.normal(jax.random.PRNGKey(1), (128,))
+        wq, s = quant.quant_weight(w, 4)
+        levels = wq / s * 7.0
+        np.testing.assert_allclose(levels, jnp.round(levels), atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(bits=st.integers(2, 8), seed=st.integers(0, 1000))
+    def test_error_bounded_by_half_step(self, bits, seed):
+        w = jax.random.normal(jax.random.PRNGKey(seed), (256,))
+        wq, s = quant.quant_weight(w, bits)
+        step = s / (2.0 ** (bits - 1) - 1.0)
+        assert float(jnp.max(jnp.abs(wq - w))) <= float(step) / 2 + 1e-6
+
+    def test_ste_gradient_is_identity(self):
+        w = jnp.array([0.3, -0.7, 0.1])
+        g = jax.grad(lambda w: jnp.sum(quant.quant_weight(w, 8)[0]))(w)
+        # away from the clip boundary, d(quant)/dw ~= 1 via STE (the max-|w|
+        # element also sees a small gradient through the dynamic scale)
+        np.testing.assert_allclose(g, jnp.ones_like(w), atol=1e-2)
+
+
+class TestActQuant:
+    def test_levels_in_range(self):
+        x = jax.random.uniform(jax.random.PRNGKey(0), (32, 16)) * 3.0
+        _, levels, _ = quant.quant_act(x, 4)
+        assert float(levels.min()) >= 0.0
+        assert float(levels.max()) <= 15.0
+
+    def test_dequant_close(self):
+        x = jax.random.uniform(jax.random.PRNGKey(1), (64,))
+        xd, levels, s = quant.quant_act(x, 8)
+        np.testing.assert_allclose(xd, levels * s, rtol=1e-6)
+        assert float(jnp.max(jnp.abs(xd - x))) <= float(s) / 2 + 1e-6
+
+    def test_non_negative_input_assumption(self):
+        x = jnp.array([0.0, 0.5, 1.0])
+        xd, levels, s = quant.quant_act(x, 2)
+        assert float(levels.max()) == 3.0
+
+
+class TestBitPlanes:
+    @settings(max_examples=20, deadline=None)
+    @given(bits=st.integers(1, 8), seed=st.integers(0, 1000))
+    def test_exact_recomposition(self, bits, seed):
+        levels = jax.random.randint(
+            jax.random.PRNGKey(seed), (16, 8), 0, 2**bits
+        ).astype(jnp.float32)
+        planes = quant.bit_planes(levels, bits)
+        recomposed = sum(planes[p] * 2.0**p for p in range(bits))
+        np.testing.assert_allclose(recomposed, levels, atol=1e-4)
+
+    def test_planes_binary(self):
+        levels = jnp.arange(16.0).reshape(4, 4)
+        planes = quant.bit_planes(levels, 4)
+        vals = np.unique(np.asarray(planes))
+        assert set(np.round(vals, 5)).issubset({0.0, 1.0})
+
+    def test_lsb_first(self):
+        planes = quant.bit_planes(jnp.array([[1.0]]), 4)
+        np.testing.assert_allclose(planes[:, 0, 0], [1, 0, 0, 0], atol=1e-5)
+
+    def test_gradient_flows(self):
+        def f(x):
+            _, levels, s = quant.quant_act(x, 4)
+            planes = quant.bit_planes(levels, 4)
+            return jnp.sum(sum(planes[p] * 2.0**p for p in range(4)) * s)
+
+        g = jax.grad(f)(jnp.array([0.2, 0.8, 0.5]))
+        assert np.all(np.isfinite(np.asarray(g)))
+        assert float(jnp.abs(g).sum()) > 0.0

@@ -1,0 +1,74 @@
+//! Fig 10 reproduction: energy at maximum accuracy under weak / normal /
+//! strong fluctuation intensity, ours vs the three SOTA families, on the
+//! synthetic-ImageNet ResNet models.
+//!
+//! Paper shape: every method prefers a larger rho (more energy) as the
+//! intensity grows, but ours (A+B) stays ~1 order and ours (A+B+C) ~2
+//! orders of magnitude below the SOTA at every intensity.
+
+#[path = "table_common/mod.rs"]
+mod table_common;
+
+use emtopt::coordinator::{self, store, Solution};
+use emtopt::data::Suite;
+use emtopt::device::Intensity;
+use emtopt::energy::EnergyModel;
+use emtopt::metrics::{fmt_energy_uj, fmt_pct, Table};
+use emtopt::runtime::{Artifacts, Evaluator};
+
+fn main() -> emtopt::Result<()> {
+    let arts = Artifacts::open_default()?;
+    let full = std::env::var("EMTOPT_BENCH_FULL").is_ok();
+    let models: &[&str] = if full {
+        &["tiny_resnet_20", "tiny_resnet34_20"]
+    } else {
+        &["tiny_resnet_20"]
+    };
+    let em = EnergyModel::new(arts.manifest.device.act_bits);
+    let grid = coordinator::experiments::default_rho_grid();
+
+    for model_key in models {
+        let paper = coordinator::experiments::paper_model_for(model_key).unwrap();
+        let mut table = Table::new(
+            format!("Fig 10 [{model_key} -> {}]", paper.name),
+            &["intensity", "method", "top-1 @ max", "energy (uJ)"],
+        );
+        // compile each eval executable ONCE per model (xla_extension 0.5.1
+        // compiles the decomposed graphs very slowly)
+        let eval_plain = Evaluator::new(&arts, model_key, false)?;
+        let abc = table_common::abc_enabled(model_key);
+        let eval_dec = if abc { Some(Evaluator::new(&arts, model_key, true)?) } else { None };
+        for intensity in Intensity::ALL {
+            let mut cfg = coordinator::experiments::schedule_for(model_key);
+            cfg.intensity = intensity;
+            let setup = coordinator::EvalSetup {
+                suite: Suite::ImageNet,
+                intensity,
+                batches: 1,
+                ..Default::default()
+            };
+            for (method, sol) in table_common::method_rows(abc) {
+                let mut mcfg = cfg;
+                if sol == Solution::Traditional {
+                    mcfg.intensity = Intensity::Normal; // trad never sees noise
+                }
+                let trained =
+                    store::train_cached(&arts, model_key, Suite::ImageNet, sol, &mcfg)?;
+                let evaluator = if sol.decomposed() { eval_dec.as_ref().unwrap() } else { &eval_plain };
+                let pts = coordinator::sweep_accuracy_vs_energy(
+                    evaluator, &trained, &setup, &paper, method, &em, &grid,
+                )?;
+                if let Some(best) = coordinator::experiments::best_accuracy_point(&pts) {
+                    table.row(vec![
+                        intensity.name().into(),
+                        method.name().into(),
+                        fmt_pct(best.top1),
+                        fmt_energy_uj(best.energy_uj),
+                    ]);
+                }
+            }
+        }
+        table.print();
+    }
+    Ok(())
+}

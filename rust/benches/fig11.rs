@@ -1,0 +1,73 @@
+//! Fig 11 reproduction: top-1 / top-5 accuracy of ours vs the SOTA on the
+//! synthetic-ImageNet ResNet models at a fixed (normal) fluctuation
+//! intensity, each method at its best operating point.
+//!
+//! Paper shape: ours (A+B+C) matches the noiseless baseline top-1/top-5;
+//! ours (A+B) is slightly below; every SOTA method leaves a visible gap.
+
+#[path = "table_common/mod.rs"]
+mod table_common;
+
+use emtopt::coordinator::{self, store, Solution};
+use emtopt::data::Suite;
+use emtopt::device::Intensity;
+use emtopt::energy::EnergyModel;
+use emtopt::metrics::{fmt_pct, Table};
+use emtopt::runtime::{Artifacts, Evaluator};
+
+fn main() -> emtopt::Result<()> {
+    let arts = Artifacts::open_default()?;
+    let full = std::env::var("EMTOPT_BENCH_FULL").is_ok();
+    let models: &[&str] = if full {
+        &["tiny_resnet_20", "tiny_resnet34_20"]
+    } else {
+        &["tiny_resnet_20"]
+    };
+    let em = EnergyModel::new(arts.manifest.device.act_bits);
+    let grid = coordinator::experiments::default_rho_grid();
+    let intensity = Intensity::Normal;
+
+    for model_key in models {
+        let paper = coordinator::experiments::paper_model_for(model_key).unwrap();
+        let cfg = coordinator::experiments::schedule_for(model_key);
+        let setup = coordinator::EvalSetup {
+            suite: Suite::ImageNet,
+            intensity,
+            batches: 1,
+            ..Default::default()
+        };
+        // compile once per model (slow 0.5.1 decomposed-graph compiles)
+        let eval_plain = Evaluator::new(&arts, model_key, false)?;
+        let abc = table_common::abc_enabled(model_key);
+        let eval_dec = if abc { Some(Evaluator::new(&arts, model_key, true)?) } else { None };
+        // noiseless "GPU" baseline (dashed line of the figure)
+        let ab = store::train_cached(&arts, model_key, Suite::ImageNet, Solution::AB, &cfg)?;
+        let base = coordinator::experiments::eval_baseline(&eval_plain, &ab, &setup)?;
+
+        let mut table = Table::new(
+            format!(
+                "Fig 11 [{model_key} -> {}] baseline top-1 {} top-5 {}",
+                paper.name,
+                fmt_pct(base.top1_acc()),
+                fmt_pct(base.top5_acc())
+            ),
+            &["method", "top-1", "top-5"],
+        );
+        for (method, sol) in table_common::method_rows(abc) {
+            let trained = store::train_cached(&arts, model_key, Suite::ImageNet, sol, &cfg)?;
+            let evaluator = if sol.decomposed() { eval_dec.as_ref().unwrap() } else { &eval_plain };
+            let pts = coordinator::sweep_accuracy_vs_energy(
+                evaluator, &trained, &setup, &paper, method, &em, &grid,
+            )?;
+            if let Some(best) = coordinator::experiments::best_accuracy_point(&pts) {
+                table.row(vec![
+                    method.name().into(),
+                    fmt_pct(best.top1),
+                    fmt_pct(best.top5),
+                ]);
+            }
+        }
+        table.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Fig 9 reproduction: CIFAR-10 ablation — accuracy vs energy budget for
+//! the traditional optimizer and solutions A / A+B / A+B+C.
+//!
+//! Paper shape to reproduce: the traditional optimizer collapses as the
+//! budget shrinks; A < A+B <= A+B+C at a fixed budget; A+B+C stays near
+//! the noiseless baseline across the whole budget range.
+//!
+//! Quick mode trains the short schedules of `schedule_for`; set
+//! EMTOPT_BENCH_FULL=1 for the 8x schedules.  Trained models are cached
+//! under runs/cache, so re-runs only pay the evaluation sweeps.
+
+use emtopt::coordinator::{self, store, Solution};
+use emtopt::data::Suite;
+use emtopt::energy::EnergyModel;
+use emtopt::metrics::{fmt_energy_uj, fmt_pct, Table};
+use emtopt::runtime::{Artifacts, Evaluator};
+
+fn main() -> emtopt::Result<()> {
+    let arts = Artifacts::open_default()?;
+    let full = std::env::var("EMTOPT_BENCH_FULL").is_ok();
+    // quick mode: mlp only — xla_extension 0.5.1 takes ~8 min to compile
+    // each conv model's decomposed train graph (fig10/11 + table2 cover
+    // the conv models; EMTOPT_BENCH_FULL=1 runs the full matrix here too)
+    let models: &[&str] = if full {
+        &["tiny_vgg_10", "tiny_resnet_10", "tiny_mobilenet_10", "mlp_10"]
+    } else {
+        &["mlp_10"]
+    };
+    let em = EnergyModel::new(arts.manifest.device.act_bits);
+    let grid = coordinator::experiments::default_rho_grid();
+
+    for model_key in models {
+        let cfg = coordinator::experiments::schedule_for(model_key);
+        let paper = coordinator::experiments::paper_model_for(model_key).unwrap();
+        let setup = coordinator::EvalSetup {
+            suite: Suite::Cifar,
+            batches: 1,
+            ..Default::default()
+        };
+        let mut table = Table::new(
+            format!("Fig 9 [{model_key} -> {} energy axis]", paper.name),
+            &["solution", "energy (uJ)", "top-1", "top-5"],
+        );
+        let mut baseline = None;
+        // compile once per model (slow 0.5.1 decomposed-graph compiles)
+        let eval_plain = Evaluator::new(&arts, model_key, false)?;
+        let eval_dec = Evaluator::new(&arts, model_key, true)?;
+        for sol in Solution::ALL {
+            let t0 = std::time::Instant::now();
+            let trained = store::train_cached(&arts, model_key, Suite::Cifar, sol, &cfg)?;
+            let evaluator = if sol.decomposed() { &eval_dec } else { &eval_plain };
+            if baseline.is_none() {
+                let b =
+                    coordinator::experiments::eval_baseline(evaluator, &trained, &setup)?;
+                baseline = Some(b.top1_acc());
+                println!(
+                    "# {model_key}: noiseless baseline top-1 = {}",
+                    fmt_pct(b.top1_acc())
+                );
+            }
+            let pts = coordinator::sweep_accuracy_vs_energy(
+                evaluator,
+                &trained,
+                &setup,
+                &paper,
+                sol.method(),
+                &em,
+                &grid,
+            )?;
+            for p in &pts {
+                table.row(vec![
+                    sol.name().into(),
+                    fmt_energy_uj(p.energy_uj),
+                    fmt_pct(p.top1),
+                    fmt_pct(p.top5),
+                ]);
+            }
+            println!(
+                "# {model_key} {}: trained+swept in {:.1}s",
+                sol.name(),
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        table.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf).
+//!
+//! L3 native crossbar simulator: MAC-simulations/s in both read modes,
+//! tile current-sum throughput, dataset generation, and the PJRT
+//! dispatch overhead of one predict batch.
+
+use emtopt::crossbar::CrossbarArray;
+use emtopt::data::{Dataset, Split, Suite};
+use emtopt::device::DeviceConfig;
+use emtopt::energy::ReadMode;
+use emtopt::rng::Rng;
+use emtopt::util::bench::report;
+
+fn main() -> emtopt::Result<()> {
+    println!("=== hotpath: native crossbar simulator ===");
+    let cfg = DeviceConfig::default();
+    let (k, n) = (256usize, 256usize);
+    let mut rng = Rng::new(1);
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.3).collect();
+    let x: Vec<f32> = (0..k).map(|_| rng.next_f32()).collect();
+    let mut out = vec![0.0f32; n];
+
+    let mut arr = CrossbarArray::program(&w, k, n, &cfg);
+    let macs = (k * n) as f64;
+
+    let r = report("crossbar 256x256 original read", 3, 50, || {
+        arr.mac(&x, &mut out, ReadMode::Original, 5, 1.0, &mut rng);
+    });
+    println!(
+        "  -> {:.1} M MAC-sim/s",
+        r.throughput(macs) / 1e6
+    );
+
+    let r = report("crossbar 256x256 decomposed read (5 planes)", 3, 20, || {
+        arr.mac(&x, &mut out, ReadMode::Decomposed, 5, 1.0, &mut rng);
+    });
+    println!("  -> {:.1} M MAC-sim/s", r.throughput(5.0 * macs) / 1e6);
+
+    let r = report("crossbar 256x256 clean reference read", 3, 100, || {
+        arr.mac_clean(&x, &mut out, 5);
+    });
+    println!("  -> {:.1} M MAC/s", r.throughput(macs) / 1e6);
+
+    println!("\n=== hotpath: dataset generation ===");
+    let ds = Dataset::new(Suite::Cifar, 1);
+    let mut idx = 0u64;
+    let r = report("dataset batch of 64 (NHWC 32x32x3)", 2, 30, || {
+        let (_x, _y) = ds.batch(Split::Train, idx, 64);
+        idx += 64;
+    });
+    println!(
+        "  -> {:.2} M px/s",
+        r.throughput(64.0 * 3072.0) / 1e6
+    );
+
+    println!("\n=== hotpath: PJRT predict dispatch ===");
+    match emtopt::runtime::Artifacts::open_default() {
+        Ok(arts) => {
+            let predictor = emtopt::runtime::Predictor::new(&arts, "mlp_10")?;
+            let init = arts.manifest.artifact("mlp_10_init")?;
+            let init_exe = arts.runtime.load_hlo(&arts.dir.join(&init.file))?;
+            let mut outs =
+                emtopt::runtime::execute(&init_exe, &[emtopt::runtime::scalar_i32(0)])?;
+            let rho = emtopt::runtime::to_vec_f32(&outs.pop().unwrap())?;
+            let params = outs;
+            let (x, _) = ds.batch(Split::Test, 0, predictor.batch);
+            let mut seed = 0i32;
+            let r = report("predict batch=16 (mlp_10, noisy)", 3, 30, || {
+                seed += 1;
+                predictor.predict(&params, &rho, &x, seed, 1.0).unwrap();
+            });
+            println!(
+                "  -> {:.0} img/s through the full noisy model",
+                r.throughput(predictor.batch as f64)
+            );
+        }
+        Err(e) => println!("(skipping PJRT bench: {e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Table 1 reproduction: CIFAR-10 holistic comparison — minimum energy,
+//! cell count and delay at 0% / 1% / 2% accuracy drop for VGG-16,
+//! ResNet-18 and MobileNet (stand-ins), ours vs the three SOTA families.
+//!
+//! Paper shape: ours (A+B) is ~1 order of magnitude below the best SOTA
+//! energy at every drop level, ours (A+B+C) ~2 orders; A+B+C pays ~5x
+//! delay; binarized encoding pays ~5x cells.
+
+#[path = "table_common/mod.rs"]
+mod table_common;
+
+use emtopt::data::Suite;
+use emtopt::device::Intensity;
+use emtopt::runtime::Artifacts;
+
+fn main() -> emtopt::Result<()> {
+    let arts = Artifacts::open_default()?;
+    let full = std::env::var("EMTOPT_BENCH_FULL").is_ok();
+    // quick mode: mlp (VGG-16 energy axis) only — see fig9.rs note on the
+    // 0.5.1 decomposed-graph compile times; full mode runs all three.
+    let models: &[&str] = if full {
+        &["tiny_vgg_10", "tiny_resnet_10", "tiny_mobilenet_10"]
+    } else {
+        &["mlp_10"]
+    };
+    println!("=== Table 1: synthetic-CIFAR holistic comparison ===");
+    for model_key in models {
+        let t0 = std::time::Instant::now();
+        let table = table_common::holistic_table(
+            &arts,
+            model_key,
+            Suite::Cifar,
+            Intensity::Normal,
+        )?;
+        table.print();
+        println!("# {model_key}: {:.1}s\n", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}

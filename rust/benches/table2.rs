@@ -1,0 +1,37 @@
+//! Table 2 reproduction: ImageNet(-stand-in) holistic comparison for
+//! ResNet-18 and ResNet-34.
+//!
+//! Paper shape: the SOTA methods cannot reach 0% accuracy drop (their
+//! best-accuracy row is annotated with the residual drop), while ours
+//! recover the baseline; ours (A+B) / (A+B+C) stay 1-2 orders of
+//! magnitude below the SOTA energy.
+
+#[path = "table_common/mod.rs"]
+mod table_common;
+
+use emtopt::data::Suite;
+use emtopt::device::Intensity;
+use emtopt::runtime::Artifacts;
+
+fn main() -> emtopt::Result<()> {
+    let arts = Artifacts::open_default()?;
+    let full = std::env::var("EMTOPT_BENCH_FULL").is_ok();
+    let models: &[&str] = if full {
+        &["tiny_resnet_20", "tiny_resnet34_20"]
+    } else {
+        &["tiny_resnet_20"]
+    };
+    println!("=== Table 2: synthetic-ImageNet holistic comparison ===");
+    for model_key in models {
+        let t0 = std::time::Instant::now();
+        let table = table_common::holistic_table(
+            &arts,
+            model_key,
+            Suite::ImageNet,
+            Intensity::Normal,
+        )?;
+        table.print();
+        println!("# {model_key}: {:.1}s\n", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}

@@ -1,0 +1,271 @@
+//! State-of-the-art baselines (paper §2) on the same device substrate.
+//!
+//! Each baseline is characterised by how it transforms the effective
+//! read-noise sigma, the energy, the cell count, and the latency of a
+//! **conventionally trained** model (none of them trains with device noise
+//! — that is exactly the gap techniques A/B/C exploit):
+//!
+//! * **Binarized encoding** (Zhu et al. [19]): an N-bit weight is stored
+//!   in N single-bit cells and recombined digitally.  Per-bit-cell RTN
+//!   with amplitude sigma recombines to
+//!   `sigma_eff = sigma * sqrt(sum_p 4^p) / (2^N - 1)`, at N x cells and
+//!   roughly `N * mean_bit / mean|w|` x cell energy (every bit cell burns
+//!   full-scale current when set).
+//! * **Weight scaling** (Ielmini et al. [25]): scales programmed
+//!   conductances up by gamma, dividing sigma by gamma but multiplying
+//!   cell energy by gamma — mathematically identical to tuning rho, so the
+//!   sweep is exposed through the same rho axis.
+//! * **Fluctuation compensation** (Wan et al. [31]): reads every cell K
+//!   times and averages: `sigma_eff = sigma / sqrt(K)` at K x energy and
+//!   K x delay.
+
+use crate::energy::{EnergyModel, ReadMode};
+use crate::models::ModelDesc;
+use crate::timing::TimingModel;
+
+/// Which method a measurement belongs to (ours + the three SOTA families).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Traditional optimizer, deployed raw (ablation reference).
+    Traditional,
+    /// Ours, technique A only.
+    OursA,
+    /// Ours, techniques A+B.
+    OursAB,
+    /// Ours, techniques A+B+C.
+    OursABC,
+    /// Binarized encoding [19] with `n_bits` single-bit cells per weight.
+    BinarizedEncoding,
+    /// Weight scaling [25].
+    WeightScaling,
+    /// Fluctuation compensation [31] with K-read averaging.
+    FluctuationCompensation,
+}
+
+impl Method {
+    pub const SOTA: [Method; 3] = [
+        Method::BinarizedEncoding,
+        Method::WeightScaling,
+        Method::FluctuationCompensation,
+    ];
+
+    pub const OURS: [Method; 3] = [Method::OursA, Method::OursAB, Method::OursABC];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Traditional => "Traditional",
+            Method::OursA => "Ours (A)",
+            Method::OursAB => "Ours (A+B)",
+            Method::OursABC => "Ours (A+B+C)",
+            Method::BinarizedEncoding => "Binarized Encoding [19]",
+            Method::WeightScaling => "Weight Scaling [25]",
+            Method::FluctuationCompensation => "Fluctuation Compensation [31]",
+        }
+    }
+
+    /// Noise-aware trained (technique A active)?
+    pub fn noise_aware(self) -> bool {
+        matches!(self, Method::OursA | Method::OursAB | Method::OursABC)
+    }
+
+    /// Trains rho jointly (technique B)?
+    pub fn trains_rho(self) -> bool {
+        matches!(self, Method::OursAB | Method::OursABC)
+    }
+
+    /// Uses the decomposed read mode (technique C)?
+    pub fn read_mode(self) -> ReadMode {
+        if self == Method::OursABC {
+            ReadMode::Decomposed
+        } else {
+            ReadMode::Original
+        }
+    }
+}
+
+/// Bits per weight in the binarized-encoding baseline (paper Table 1:
+/// 74M vs 15M cells on VGG-16 => 5 bit-cells per weight).
+pub const BINARIZED_BITS: u32 = 5;
+/// Averaging reads in the fluctuation-compensation baseline (paper Table 1:
+/// 14 us vs 2.8 us => K = 5).
+pub const COMPENSATION_READS: u32 = 5;
+
+/// Hardware-level multipliers of a method relative to the plain analog
+/// single-read scheme at the same rho.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SchemeFactors {
+    /// Multiplier on the effective weight-fluctuation sigma.
+    pub sigma: f64,
+    /// Multiplier on analog cell energy.
+    pub cell_energy: f64,
+    /// Multiplier on cell count.
+    pub cells: f64,
+    /// Multiplier on latency.
+    pub delay: f64,
+}
+
+impl SchemeFactors {
+    pub fn identity() -> Self {
+        SchemeFactors {
+            sigma: 1.0,
+            cell_energy: 1.0,
+            cells: 1.0,
+            delay: 1.0,
+        }
+    }
+}
+
+/// Factors of the binarized-encoding scheme with `n` bit cells per weight.
+pub fn binarized_factors(n: u32, mean_w_norm: f64) -> SchemeFactors {
+    let denom = ((1u64 << n) - 1) as f64;
+    let sum_4p: f64 = (0..n).map(|p| 4f64.powi(p as i32)).sum();
+    // digital recombination of per-bit-cell noise
+    let sigma = sum_4p.sqrt() / denom;
+    // each set bit cell burns full-scale current; mean set fraction 0.5.
+    // relative to the analog cell's mean |w| duty:
+    let cell_energy = n as f64 * 0.5 / mean_w_norm;
+    SchemeFactors {
+        sigma,
+        cell_energy,
+        cells: n as f64,
+        delay: 1.0, // bit cells are read in parallel columns
+    }
+}
+
+/// Factors of K-read fluctuation compensation.
+pub fn compensation_factors(k: u32) -> SchemeFactors {
+    SchemeFactors {
+        sigma: 1.0 / (k as f64).sqrt(),
+        cell_energy: k as f64,
+        cells: 1.0,
+        delay: k as f64,
+    }
+}
+
+/// Factors of weight scaling by gamma (gamma folds into rho; kept for the
+/// explicit-gamma ablation).
+pub fn weight_scaling_factors(gamma: f64) -> SchemeFactors {
+    SchemeFactors {
+        sigma: 1.0 / gamma,
+        cell_energy: gamma,
+        cells: 1.0,
+        delay: 1.0,
+    }
+}
+
+/// Per-method hardware factors (ours and trad use the identity scheme —
+/// our gains come from training, rho, and the read mode).
+pub fn method_factors(method: Method, mean_w_norm: f64) -> SchemeFactors {
+    match method {
+        Method::BinarizedEncoding => binarized_factors(BINARIZED_BITS, mean_w_norm),
+        Method::FluctuationCompensation => compensation_factors(COMPENSATION_READS),
+        _ => SchemeFactors::identity(),
+    }
+}
+
+/// Full hardware cost of running `model` with `method` at uniform `rho`.
+#[derive(Clone, Copy, Debug)]
+pub struct HardwareCost {
+    pub energy_uj: f64,
+    pub cells: f64,
+    pub delay_us: f64,
+    /// Effective relative fluctuation sigma the network weights see.
+    pub sigma_eff: f64,
+}
+
+pub fn hardware_cost(
+    method: Method,
+    model: &ModelDesc,
+    rho: f64,
+    intensity: f64,
+    em: &EnergyModel,
+    tm: &TimingModel,
+) -> HardwareCost {
+    let f = method_factors(method, em.stats.mean_w_norm);
+    let mode = method.read_mode();
+    let cell_pj: f64 = model
+        .layers
+        .iter()
+        .map(|l| em.layer_cell_pj(l, rho, mode))
+        .sum();
+    let peri_pj: f64 = model
+        .layers
+        .iter()
+        .map(|l| em.layer_peripheral_pj(l, mode))
+        .sum();
+    // peripheral scales with extra reads (delay factor) and extra columns
+    // (cells factor for binarized encoding)
+    let energy_uj = (cell_pj * f.cell_energy + peri_pj * f.delay * f.cells.max(1.0)) * 1e-6;
+    let delay_us = tm.model_latency_us(model, mode) * f.delay;
+    let sigma_base = crate::device::sigma_rel(rho as f32, intensity as f32) as f64;
+    HardwareCost {
+        energy_uj,
+        cells: model.total_cells() as f64 * f.cells,
+        delay_us,
+        sigma_eff: sigma_base * f.sigma,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::paper_scale::{vgg16, Resolution};
+
+    #[test]
+    fn binarized_reduces_sigma_but_costs_cells() {
+        let f = binarized_factors(5, 0.25);
+        assert!(f.sigma < 1.0, "sigma mult {}", f.sigma);
+        assert_eq!(f.cells, 5.0);
+        assert!(f.cell_energy > 1.0);
+    }
+
+    #[test]
+    fn binarized_energy_multiplier_matches_paper_order() {
+        // paper Table 1 VGG-16: binarized 378 uJ vs ours(A+B) 36 uJ => ~10x
+        let f = binarized_factors(5, 0.25);
+        assert!((8.0..13.0).contains(&f.cell_energy), "{}", f.cell_energy);
+    }
+
+    #[test]
+    fn compensation_sqrt_k() {
+        let f = compensation_factors(5);
+        assert!((f.sigma - 1.0 / 5f64.sqrt()).abs() < 1e-12);
+        assert_eq!(f.cell_energy, 5.0);
+        assert_eq!(f.delay, 5.0);
+    }
+
+    #[test]
+    fn weight_scaling_is_rho_equivalent() {
+        // doubling gamma == quadrupling rho in sigma terms, doubling energy
+        let f = weight_scaling_factors(2.0);
+        assert_eq!(f.sigma, 0.5);
+        assert_eq!(f.cell_energy, 2.0);
+    }
+
+    #[test]
+    fn hardware_cost_table_shape() {
+        let em = EnergyModel::new(5);
+        let tm = TimingModel::new(5);
+        let m = vgg16(Resolution::Cifar);
+        let ours = hardware_cost(Method::OursAB, &m, 1.0, 1.0, &em, &tm);
+        let bin = hardware_cost(Method::BinarizedEncoding, &m, 1.0, 1.0, &em, &tm);
+        let comp = hardware_cost(Method::FluctuationCompensation, &m, 1.0, 1.0, &em, &tm);
+        let ours_c = hardware_cost(Method::OursABC, &m, 1.0, 1.0, &em, &tm);
+        // Table 1 shapes
+        assert!(bin.cells > 4.0 * ours.cells);
+        assert!(bin.energy_uj > ours.energy_uj);
+        assert!(comp.delay_us > 4.0 * ours.delay_us);
+        assert!(ours_c.delay_us > ours.delay_us);
+        assert!(ours_c.energy_uj < ours.energy_uj); // technique C saves energy
+        assert!(comp.sigma_eff < ours.sigma_eff);
+    }
+
+    #[test]
+    fn method_metadata() {
+        assert!(Method::OursABC.noise_aware());
+        assert!(Method::OursABC.trains_rho());
+        assert_eq!(Method::OursABC.read_mode(), ReadMode::Decomposed);
+        assert!(!Method::WeightScaling.noise_aware());
+        assert_eq!(Method::SOTA.len(), 3);
+    }
+}

@@ -1,0 +1,194 @@
+//! Experiment configuration (TOML subset via `util::toml_lite`).
+//!
+//! Every CLI command and bench reads an [`ExperimentConfig`]; defaults are
+//! tuned so `emtopt train` works out of the box on the artifacts built by
+//! `make artifacts`.
+
+use std::path::Path;
+
+use crate::util::toml_lite::TomlDoc;
+use crate::Result;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentConfig {
+    /// Artifact directory (manifest.json + *.hlo.txt).
+    pub artifacts: String,
+    /// Tiny-zoo model key, e.g. "tiny_resnet_10".
+    pub model: String,
+    /// trad | a | ab | abc
+    pub solution: String,
+    /// weak | normal | strong
+    pub intensity: String,
+    pub train: TrainSection,
+    pub eval: EvalSection,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainSection {
+    pub pretrain_steps: u32,
+    pub finetune_steps: u32,
+    /// Energy-regularization weight (lambda, eq. 13).
+    pub lam: f32,
+    pub seed: i32,
+    pub log_every: u32,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct EvalSection {
+    /// Number of eval batches (x 256 samples).
+    pub batches: u32,
+    pub seed: i32,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            artifacts: "artifacts".into(),
+            model: "tiny_resnet_10".into(),
+            solution: "ab".into(),
+            intensity: "normal".into(),
+            train: TrainSection::default(),
+            eval: EvalSection::default(),
+        }
+    }
+}
+
+impl Default for TrainSection {
+    fn default() -> Self {
+        TrainSection {
+            pretrain_steps: 120,
+            finetune_steps: 120,
+            lam: 0.3,
+            seed: 7,
+            log_every: 20,
+        }
+    }
+}
+
+impl Default for EvalSection {
+    fn default() -> Self {
+        EvalSection {
+            batches: 2,
+            seed: 1234,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let d = ExperimentConfig::default();
+        Ok(ExperimentConfig {
+            artifacts: doc.str_or("", "artifacts", &d.artifacts),
+            model: doc.str_or("", "model", &d.model),
+            solution: doc.str_or("", "solution", &d.solution),
+            intensity: doc.str_or("", "intensity", &d.intensity),
+            train: TrainSection {
+                pretrain_steps: doc.parse_or("train", "pretrain_steps", d.train.pretrain_steps)?,
+                finetune_steps: doc.parse_or("train", "finetune_steps", d.train.finetune_steps)?,
+                lam: doc.parse_or("train", "lam", d.train.lam)?,
+                seed: doc.parse_or("train", "seed", d.train.seed)?,
+                log_every: doc.parse_or("train", "log_every", d.train.log_every)?,
+            },
+            eval: EvalSection {
+                batches: doc.parse_or("eval", "batches", d.eval.batches)?,
+                seed: doc.parse_or("eval", "seed", d.eval.seed)?,
+            },
+        })
+    }
+
+    pub fn to_toml(&self) -> String {
+        let mut doc = TomlDoc::default();
+        doc.set("", "artifacts", &self.artifacts);
+        doc.set("", "model", &self.model);
+        doc.set("", "solution", &self.solution);
+        doc.set("", "intensity", &self.intensity);
+        doc.set("train", "pretrain_steps", self.train.pretrain_steps.to_string());
+        doc.set("train", "finetune_steps", self.train.finetune_steps.to_string());
+        doc.set("train", "lam", self.train.lam.to_string());
+        doc.set("train", "seed", self.train.seed.to_string());
+        doc.set("train", "log_every", self.train.log_every.to_string());
+        doc.set("eval", "batches", self.eval.batches.to_string());
+        doc.set("eval", "seed", self.eval.seed.to_string());
+        doc.render()
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_toml())?;
+        Ok(())
+    }
+
+    pub fn suite(&self) -> crate::data::Suite {
+        if self.model.ends_with("_20") {
+            crate::data::Suite::ImageNet
+        } else {
+            crate::data::Suite::Cifar
+        }
+    }
+
+    pub fn solution_parsed(&self) -> Result<crate::coordinator::Solution> {
+        self.solution
+            .parse()
+            .map_err(|e: String| anyhow::anyhow!(e))
+    }
+
+    pub fn intensity_parsed(&self) -> Result<crate::device::Intensity> {
+        self.intensity
+            .parse()
+            .map_err(|e: String| anyhow::anyhow!(e))
+    }
+
+    pub fn train_config(&self) -> Result<crate::coordinator::TrainConfig> {
+        Ok(crate::coordinator::TrainConfig {
+            pretrain_steps: self.train.pretrain_steps,
+            finetune_steps: self.train.finetune_steps,
+            lam: self.train.lam,
+            intensity: self.intensity_parsed()?,
+            seed: self.train.seed,
+            log_every: self.train.log_every,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrip() {
+        let cfg = ExperimentConfig::default();
+        let back = ExperimentConfig::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn partial_toml_uses_defaults() {
+        let cfg =
+            ExperimentConfig::from_toml("model = \"mlp_10\"\nsolution = \"abc\"").unwrap();
+        assert_eq!(cfg.model, "mlp_10");
+        assert_eq!(cfg.solution, "abc");
+        assert_eq!(cfg.train.pretrain_steps, 120); // default
+    }
+
+    #[test]
+    fn suite_from_model_key() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.suite(), crate::data::Suite::Cifar);
+        cfg.model = "tiny_resnet_20".into();
+        assert_eq!(cfg.suite(), crate::data::Suite::ImageNet);
+    }
+
+    #[test]
+    fn parses_enums() {
+        let cfg = ExperimentConfig::default();
+        assert!(cfg.solution_parsed().is_ok());
+        assert!(cfg.intensity_parsed().is_ok());
+        assert!(cfg.train_config().is_ok());
+    }
+}

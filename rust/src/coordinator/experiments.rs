@@ -1,0 +1,436 @@
+//! Experiment drivers behind every table and figure.
+//!
+//! All paper experiments decompose into three primitives:
+//!
+//! 1. [`train_solution`] — clean pretrain + solution fine-tune of a tiny
+//!    zoo model through the AOT train artifacts (results disk-cached via
+//!    `store` so benches don't retrain),
+//! 2. [`sweep_accuracy_vs_energy`] — evaluate a trained model across a
+//!    grid of global rho scales and map each point onto the paper-scale
+//!    energy axis,
+//! 3. [`find_energy_at_drop`] — invert the sweep: minimum energy whose
+//!    accuracy drop (vs the GPU/noiseless baseline) is within a target.
+
+use crate::baselines::{method_factors, Method};
+use crate::coordinator::Solution;
+use crate::data::{Dataset, Split, Suite};
+use crate::device::Intensity;
+use crate::energy::{EnergyModel, ReadMode};
+use crate::models::ModelDesc;
+use crate::runtime::{raw_of_rho, rho_of_raw, Artifacts, Evaluator, Trainer};
+use crate::Result;
+
+/// Training schedule of one solution run.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub pretrain_steps: u32,
+    pub finetune_steps: u32,
+    pub lam: f32,
+    pub intensity: Intensity,
+    pub seed: i32,
+    /// Log every N steps (0 = silent).
+    pub log_every: u32,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            pretrain_steps: 120,
+            finetune_steps: 120,
+            lam: 0.3,
+            intensity: Intensity::Normal,
+            seed: 7,
+            log_every: 0,
+        }
+    }
+}
+
+/// A trained model exported to host memory (cacheable, serialisable).
+#[derive(Clone, Debug)]
+pub struct TrainedModel {
+    pub model_key: String,
+    pub solution: Solution,
+    /// (shape, data) per parameter tensor, artifact order.
+    pub params: Vec<(Vec<usize>, Vec<f32>)>,
+    pub rho_raw: Vec<f32>,
+    /// Loss trace of the fine-tune phase (for EXPERIMENTS.md curves).
+    pub loss_trace: Vec<f32>,
+}
+
+impl TrainedModel {
+    pub fn params_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.params
+            .iter()
+            .map(|(shape, data)| crate::runtime::lit_f32(data, shape))
+            .collect()
+    }
+
+    /// Trained per-layer rho.
+    pub fn rho(&self) -> Vec<f32> {
+        self.rho_raw.iter().map(|&r| rho_of_raw(r)).collect()
+    }
+
+    /// rho_raw after scaling every layer's rho by `scale`.
+    pub fn scaled_rho_raw(&self, scale: f32) -> Vec<f32> {
+        self.rho_raw
+            .iter()
+            .map(|&r| raw_of_rho(rho_of_raw(r) * scale))
+            .collect()
+    }
+
+    /// Mean per-layer rho at a global scale.
+    pub fn mean_rho(&self, scale: f32) -> f64 {
+        let r = self.rho();
+        r.iter().map(|&v| (v * scale) as f64).sum::<f64>() / r.len() as f64
+    }
+}
+
+/// Clean pretrain of one tiny zoo model ("start from a well-trained
+/// model", §5).  Cached on disk: all four solutions of a model share it.
+pub fn pretrain_cached(
+    arts: &Artifacts,
+    model_key: &str,
+    suite: Suite,
+    cfg: &TrainConfig,
+) -> Result<TrainedModel> {
+    let path = crate::coordinator::store::cache_path(
+        model_key,
+        Solution::Traditional,
+        "pre",
+        cfg.pretrain_steps,
+        0,
+    );
+    if path.exists() {
+        if let Ok(m) = crate::coordinator::store::load(&path) {
+            if m.model_key == model_key {
+                return Ok(m);
+            }
+        }
+    }
+    let dataset = Dataset::new(suite, crate::data::DATA_SEED);
+    let mut trainer = Trainer::new(arts, model_key, false, cfg.seed)?;
+    let batch = trainer.batch;
+    let mut knobs = crate::runtime::session::TrainKnobs::traditional();
+    knobs.seed = cfg.seed;
+    for s in 0..cfg.pretrain_steps {
+        let (x, y) = dataset.batch(Split::Train, (s as u64) * batch as u64, batch);
+        let out = trainer.step(&x, &y, &knobs)?;
+        if cfg.log_every > 0 && s % cfg.log_every == 0 {
+            println!(
+                "[pretrain {model_key}] step {s:4} loss {:.4} acc {:.3}",
+                out.loss, out.acc
+            );
+        }
+    }
+    let trained = export(arts, model_key, Solution::Traditional, &trainer, Vec::new())?;
+    crate::coordinator::store::save(&trained, &path)?;
+    Ok(trained)
+}
+
+fn export(
+    arts: &Artifacts,
+    model_key: &str,
+    solution: Solution,
+    trainer: &Trainer,
+    loss_trace: Vec<f32>,
+) -> Result<TrainedModel> {
+    let info = arts.manifest.artifact(&format!("{model_key}_train"))?;
+    let mut params = Vec::with_capacity(trainer.params().len());
+    for (lit, spec) in trainer.params().iter().zip(info.inputs.iter()) {
+        params.push((spec.shape.clone(), crate::runtime::to_vec_f32(lit)?));
+    }
+    Ok(TrainedModel {
+        model_key: model_key.to_string(),
+        solution,
+        params,
+        rho_raw: trainer.rho_raw().to_vec(),
+        loss_trace,
+    })
+}
+
+/// Clean-pretrain (cached) + solution fine-tune of one tiny zoo model.
+pub fn train_solution(
+    arts: &Artifacts,
+    model_key: &str,
+    suite: Suite,
+    solution: Solution,
+    cfg: &TrainConfig,
+) -> Result<TrainedModel> {
+    let dataset = Dataset::new(suite, crate::data::DATA_SEED);
+    let pretrained = pretrain_cached(arts, model_key, suite, cfg)?;
+    let mut trainer = Trainer::new(arts, model_key, solution.decomposed(), cfg.seed)?;
+    trainer.set_params(&pretrained.params)?;
+    let batch = trainer.batch;
+    let mut loss_trace = Vec::new();
+
+    // Phase 2: solution fine-tune.
+    let mut knobs = solution.knobs(cfg.intensity.factor(), cfg.lam);
+    knobs.seed = cfg.seed + 1;
+    for s in 0..cfg.finetune_steps {
+        let off = (cfg.pretrain_steps + s) as u64 * batch as u64;
+        let (x, y) = dataset.batch(Split::Train, off, batch);
+        let out = trainer.step(&x, &y, &knobs)?;
+        loss_trace.push(out.loss);
+        if cfg.log_every > 0 && s % cfg.log_every == 0 {
+            println!(
+                "[finetune {model_key} {}] step {s:4} loss {:.4} acc {:.3} E {:.0}",
+                solution.name(),
+                out.loss,
+                out.acc,
+                out.energy
+            );
+        }
+    }
+
+    export(arts, model_key, solution, &trainer, loss_trace)
+}
+
+/// Evaluation context: which dataset, how many batches, what device noise.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalSetup {
+    pub suite: Suite,
+    pub batches: u32,
+    pub intensity: Intensity,
+    pub seed: i32,
+}
+
+impl Default for EvalSetup {
+    fn default() -> Self {
+        EvalSetup {
+            suite: Suite::Cifar,
+            batches: 2,
+            intensity: Intensity::Normal,
+            seed: 1234,
+        }
+    }
+}
+
+/// Evaluate a trained model at a given global rho scale and effective
+/// sigma multiplier (baseline read schemes pass `sigma_mult != 1`).
+pub fn eval_at_scale(
+    evaluator: &Evaluator,
+    trained: &TrainedModel,
+    setup: &EvalSetup,
+    rho_scale: f32,
+    sigma_mult: f32,
+    noise_gate: f32,
+) -> Result<crate::runtime::EvalResult> {
+    let dataset = Dataset::new(setup.suite, crate::data::DATA_SEED);
+    let params = trained.params_literals()?;
+    let rho_raw = trained.scaled_rho_raw(rho_scale);
+    let eff_intensity = setup.intensity.factor() * sigma_mult;
+    let mut total = crate::runtime::EvalResult::default();
+    for b in 0..setup.batches {
+        let (x, y) = dataset.batch(
+            Split::Test,
+            b as u64 * evaluator.batch as u64,
+            evaluator.batch,
+        );
+        let r = evaluator.eval_batch(
+            &params,
+            &rho_raw,
+            &x,
+            &y,
+            setup.seed + b as i32,
+            eff_intensity,
+            noise_gate,
+        )?;
+        total.merge(&r);
+    }
+    Ok(total)
+}
+
+/// Noiseless ("GPU baseline") accuracy of a trained model.
+pub fn eval_baseline(
+    evaluator: &Evaluator,
+    trained: &TrainedModel,
+    setup: &EvalSetup,
+) -> Result<crate::runtime::EvalResult> {
+    eval_at_scale(evaluator, trained, setup, 1.0, 1.0, 0.0)
+}
+
+/// One point of an accuracy-vs-energy curve.
+#[derive(Clone, Copy, Debug)]
+pub struct AccuracyPoint {
+    pub rho_scale: f32,
+    pub mean_rho: f64,
+    pub energy_uj: f64,
+    pub top1: f64,
+    pub top5: f64,
+}
+
+/// Sweep a trained model over global rho scales; energy is reported on the
+/// paper-scale model `paper_model` with the method's hardware factors.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_accuracy_vs_energy(
+    evaluator: &Evaluator,
+    trained: &TrainedModel,
+    setup: &EvalSetup,
+    paper_model: &ModelDesc,
+    method: Method,
+    em: &EnergyModel,
+    rho_scales: &[f32],
+) -> Result<Vec<AccuracyPoint>> {
+    let f = method_factors(method, em.stats.mean_w_norm);
+    let mode = method.read_mode();
+    let mut points = Vec::with_capacity(rho_scales.len());
+    for &s in rho_scales {
+        let r = eval_at_scale(evaluator, trained, setup, s, f.sigma as f32, 1.0)?;
+        let mean_rho = trained.mean_rho(s);
+        let cell_pj: f64 = paper_model
+            .layers
+            .iter()
+            .map(|l| em.layer_cell_pj(l, mean_rho, mode))
+            .sum();
+        let peri_pj: f64 = paper_model
+            .layers
+            .iter()
+            .map(|l| em.layer_peripheral_pj(l, mode))
+            .sum();
+        let energy_uj =
+            (cell_pj * f.cell_energy + peri_pj * f.delay * f.cells.max(1.0)) * 1e-6;
+        points.push(AccuracyPoint {
+            rho_scale: s,
+            mean_rho,
+            energy_uj,
+            top1: r.top1_acc(),
+            top5: r.top5_acc(),
+        });
+    }
+    Ok(points)
+}
+
+/// Per-model training schedule sized for this testbed (single-core CPU
+/// PJRT).  Set `EMTOPT_BENCH_FULL=1` for the 8x longer full-reproduction
+/// schedules.  Results are cached under runs/cache either way.
+pub fn schedule_for(model_key: &str) -> TrainConfig {
+    let full = std::env::var("EMTOPT_BENCH_FULL").is_ok();
+    let (pre, fine) = match model_key {
+        "mlp_10" => (80, 80),
+        "tiny_mobilenet_10" => (16, 16),
+        "tiny_vgg_10" => (10, 10),
+        k if k.starts_with("tiny_resnet34") => (8, 8),
+        k if k.starts_with("tiny_resnet") => (10, 10),
+        _ => (60, 60),
+    };
+    let mult = if full { 8 } else { 1 };
+    TrainConfig {
+        pretrain_steps: pre * mult,
+        finetune_steps: fine * mult,
+        ..Default::default()
+    }
+}
+
+/// Default geometric rho-scale grid for sweeps.
+pub fn default_rho_grid() -> Vec<f32> {
+    // trained rho is ~4; scales cover rho ~0.05 .. ~100
+    vec![
+        0.0125, 0.025, 0.05, 0.1, 0.2, 0.4, 0.8, 1.6, 3.2, 6.4, 12.8, 25.6,
+    ]
+}
+
+/// Minimum energy on a sweep whose top-1 accuracy drop vs `baseline_acc`
+/// is at most `max_drop`.  Returns the matching point if reachable.
+pub fn find_energy_at_drop(
+    points: &[AccuracyPoint],
+    baseline_acc: f64,
+    max_drop: f64,
+) -> Option<AccuracyPoint> {
+    points
+        .iter()
+        .filter(|p| baseline_acc - p.top1 <= max_drop + 1e-9)
+        .min_by(|a, b| a.energy_uj.total_cmp(&b.energy_uj))
+        .copied()
+}
+
+/// Best (maximum) accuracy on a sweep and its energy (Fig 10: "energy when
+/// the model achieves its maximum accuracy").
+pub fn best_accuracy_point(points: &[AccuracyPoint]) -> Option<AccuracyPoint> {
+    points
+        .iter()
+        .max_by(|a, b| {
+            a.top1
+                .total_cmp(&b.top1)
+                .then(b.energy_uj.total_cmp(&a.energy_uj))
+        })
+        .copied()
+}
+
+/// Map a tiny-zoo manifest key to the paper-scale model used for the
+/// energy / cells / delay axes of the tables.
+pub fn paper_model_for(model_key: &str) -> Option<ModelDesc> {
+    use crate::models::paper_scale::*;
+    match model_key {
+        "tiny_vgg_10" | "mlp_10" => Some(vgg16(Resolution::Cifar)),
+        "tiny_resnet_10" => Some(resnet(18, Resolution::Cifar)),
+        "tiny_mobilenet_10" => Some(mobilenet(Resolution::Cifar)),
+        "tiny_resnet_20" => Some(resnet(18, Resolution::ImageNet)),
+        "tiny_resnet34_20" => Some(resnet(34, Resolution::ImageNet)),
+        _ => None,
+    }
+}
+
+/// Energy mode for a method (ours-ABC decomposes, everything else doesn't).
+pub fn read_mode_for(method: Method) -> ReadMode {
+    method.read_mode()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts() -> Vec<AccuracyPoint> {
+        vec![
+            AccuracyPoint {
+                rho_scale: 0.1,
+                mean_rho: 0.4,
+                energy_uj: 2.0,
+                top1: 0.70,
+                top5: 0.9,
+            },
+            AccuracyPoint {
+                rho_scale: 1.0,
+                mean_rho: 4.0,
+                energy_uj: 20.0,
+                top1: 0.90,
+                top5: 0.99,
+            },
+            AccuracyPoint {
+                rho_scale: 4.0,
+                mean_rho: 16.0,
+                energy_uj: 80.0,
+                top1: 0.935,
+                top5: 1.0,
+            },
+        ]
+    }
+
+    #[test]
+    fn drop_search_picks_min_energy() {
+        let p = find_energy_at_drop(&pts(), 0.94, 0.05).unwrap();
+        assert_eq!(p.energy_uj, 20.0);
+        let p = find_energy_at_drop(&pts(), 0.94, 0.30).unwrap();
+        assert_eq!(p.energy_uj, 2.0);
+        assert!(find_energy_at_drop(&pts(), 0.94, 0.0).is_none());
+    }
+
+    #[test]
+    fn best_point_max_acc() {
+        let p = best_accuracy_point(&pts()).unwrap();
+        assert_eq!(p.top1, 0.935);
+    }
+
+    #[test]
+    fn paper_model_mapping() {
+        assert!(paper_model_for("tiny_resnet_10").is_some());
+        assert!(paper_model_for("nope").is_none());
+        let r34 = paper_model_for("tiny_resnet34_20").unwrap();
+        assert!(r34.total_cells() > 20_000_000);
+    }
+
+    #[test]
+    fn rho_grid_monotone() {
+        let g = default_rho_grid();
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+    }
+}

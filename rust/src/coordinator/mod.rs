@@ -1,0 +1,118 @@
+//! L3 coordinator: experiment orchestration, training driver, solution
+//! definitions, and the inference router (`router`).
+//!
+//! This is the paper's "system" layer: it owns process lifecycle, the
+//! event loop, dataset streaming, artifact execution, the rho/energy
+//! search loops behind every table and figure, and result persistence.
+
+pub mod experiments;
+pub mod router;
+pub mod store;
+
+pub use experiments::{
+    find_energy_at_drop, sweep_accuracy_vs_energy, train_solution, AccuracyPoint,
+    EvalSetup, TrainConfig, TrainedModel,
+};
+
+use crate::baselines::Method;
+use crate::energy::ReadMode;
+use crate::runtime::session::TrainKnobs;
+
+/// The paper's solution ladder (Fig 4 / §5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Solution {
+    /// Traditional optimizer (ablation reference).
+    Traditional,
+    /// A: device-enhanced dataset.
+    A,
+    /// A+B: + energy regularization (trainable rho).
+    AB,
+    /// A+B+C: + low-fluctuation decomposition.
+    ABC,
+}
+
+impl Solution {
+    pub const ALL: [Solution; 4] =
+        [Solution::Traditional, Solution::A, Solution::AB, Solution::ABC];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Solution::Traditional => "traditional",
+            Solution::A => "A",
+            Solution::AB => "A+B",
+            Solution::ABC => "A+B+C",
+        }
+    }
+
+    /// Does inference (and noise-aware training) use the decomposed mode?
+    pub fn decomposed(self) -> bool {
+        self == Solution::ABC
+    }
+
+    pub fn read_mode(self) -> ReadMode {
+        if self.decomposed() {
+            ReadMode::Decomposed
+        } else {
+            ReadMode::Original
+        }
+    }
+
+    /// Fine-tuning knobs for this solution.
+    pub fn knobs(self, intensity: f32, lam: f32) -> TrainKnobs {
+        match self {
+            Solution::Traditional => TrainKnobs::traditional(),
+            Solution::A => TrainKnobs::solution_a(intensity),
+            Solution::AB | Solution::ABC => TrainKnobs::solution_ab(intensity, lam),
+        }
+    }
+
+    pub fn method(self) -> Method {
+        match self {
+            Solution::Traditional => Method::Traditional,
+            Solution::A => Method::OursA,
+            Solution::AB => Method::OursAB,
+            Solution::ABC => Method::OursABC,
+        }
+    }
+}
+
+impl std::str::FromStr for Solution {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "trad" | "traditional" => Ok(Solution::Traditional),
+            "a" => Ok(Solution::A),
+            "ab" | "a+b" => Ok(Solution::AB),
+            "abc" | "a+b+c" => Ok(Solution::ABC),
+            other => Err(format!("unknown solution {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solution_parsing() {
+        assert_eq!("a+b".parse::<Solution>().unwrap(), Solution::AB);
+        assert_eq!("ABC".parse::<Solution>().unwrap(), Solution::ABC);
+        assert!("xyz".parse::<Solution>().is_err());
+    }
+
+    #[test]
+    fn knob_gates_match_solutions() {
+        let t = Solution::Traditional.knobs(1.0, 0.1);
+        assert_eq!(t.noise_gate, 0.0);
+        assert_eq!(t.rho_gate, 0.0);
+        let a = Solution::A.knobs(1.0, 0.1);
+        assert_eq!(a.noise_gate, 1.0);
+        assert_eq!(a.rho_gate, 0.0);
+        assert_eq!(a.lam, 0.0);
+        let ab = Solution::AB.knobs(1.0, 0.1);
+        assert_eq!(ab.rho_gate, 1.0);
+        assert!(ab.lam > 0.0);
+        assert!(Solution::ABC.decomposed());
+        assert!(!Solution::AB.decomposed());
+    }
+}

@@ -1,0 +1,231 @@
+//! Inference request router + dynamic batcher.
+//!
+//! The serving front of the coordinator (vllm-router-style): clients
+//! submit single images; the router accumulates them into fixed-size
+//! device batches (padding stragglers), executes on a dedicated engine
+//! thread that owns the PJRT executable (PJRT handles are `!Send`, so the
+//! engine is pinned to one thread and fed over a channel — the same
+//! single-owner pattern a real accelerator queue uses), and fans the
+//! per-sample logits back to the callers.
+//!
+//! Batching policy: fire when the batch is full OR `max_wait` elapsed
+//! since the oldest queued request (classic dynamic batching).
+//!
+//! Channels are std::sync::mpsc (this build is offline — no tokio); each
+//! request carries its own reply channel, so any number of client threads
+//! can share one [`InferenceClient`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::TrainedModel;
+use crate::data::IMG_LEN;
+use crate::device::Intensity;
+use crate::runtime::{Artifacts, Predictor};
+use crate::Result;
+
+/// One inference request: an image and a reply slot for the logits.
+struct Request {
+    image: Vec<f32>,
+    reply: mpsc::Sender<Result<Vec<f32>>>,
+    enqueued: std::time::Instant,
+}
+
+/// Server statistics (atomic, read from any thread).
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_slots: AtomicU64,
+    /// Cumulative queueing latency in microseconds.
+    pub queue_us: AtomicU64,
+}
+
+impl ServerStats {
+    pub fn mean_queue_us(&self) -> f64 {
+        let n = self.requests.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.queue_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn mean_batch_fill(&self, batch: usize) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        let total_slots = b * batch as u64;
+        let padded = self.padded_slots.load(Ordering::Relaxed);
+        (total_slots - padded) as f64 / total_slots as f64
+    }
+}
+
+/// Handle used by clients to submit requests (clonable across threads).
+#[derive(Clone)]
+pub struct InferenceClient {
+    tx: mpsc::Sender<Request>,
+    pub num_classes: usize,
+}
+
+impl InferenceClient {
+    /// Classify one image (len IMG_LEN); blocks until the logits arrive.
+    pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
+        anyhow::ensure!(image.len() == IMG_LEN, "image must be {IMG_LEN} floats");
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request {
+                image,
+                reply,
+                enqueued: std::time::Instant::now(),
+            })
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
+    }
+
+    /// Classify and argmax.
+    pub fn classify(&self, image: Vec<f32>) -> Result<usize> {
+        let logits = self.infer(image)?;
+        Ok(logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0))
+    }
+}
+
+/// Configuration of the serving loop.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub artifacts_dir: String,
+    pub intensity: Intensity,
+    /// Max time the oldest request may wait before a partial batch fires.
+    pub max_wait: Duration,
+    pub seed: i32,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            artifacts_dir: "artifacts".into(),
+            intensity: Intensity::Normal,
+            max_wait: Duration::from_millis(5),
+            seed: 1,
+        }
+    }
+}
+
+/// Spawn the router + engine; returns the client handle, stats, and the
+/// engine join handle (drop all clients to stop the engine).
+pub fn serve(
+    model: TrainedModel,
+    cfg: ServerConfig,
+) -> Result<(InferenceClient, Arc<ServerStats>, std::thread::JoinHandle<()>)> {
+    // Probe batch/classes up front (cheap manifest read) so the client
+    // handle exists before the engine finishes compiling.
+    let probe = crate::runtime::Manifest::load(
+        std::path::Path::new(&cfg.artifacts_dir)
+            .join("manifest.json")
+            .as_path(),
+    )?;
+    let num_classes = probe
+        .models
+        .get(&model.model_key)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {}", model.model_key))?
+        .num_classes;
+    let batch = probe.batches.predict;
+
+    let (tx, rx) = mpsc::channel::<Request>();
+    let stats = Arc::new(ServerStats::default());
+    let stats_engine = stats.clone();
+
+    let handle = std::thread::spawn(move || {
+        // The engine owns all PJRT state on this thread.
+        let run = move || -> Result<()> {
+            let arts = Artifacts::open(&cfg.artifacts_dir)?;
+            let predictor = Predictor::new(&arts, &model.model_key)?;
+            let params = model.params_literals()?;
+            let rho_raw = model.rho_raw.clone();
+            let mut seed = cfg.seed;
+
+            let mut pending: Vec<Request> = Vec::with_capacity(batch);
+            loop {
+                // Block for the first request of a batch.
+                let first = match rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => return Ok(()), // all clients dropped
+                };
+                pending.push(first);
+                let deadline = std::time::Instant::now() + cfg.max_wait;
+                while pending.len() < batch {
+                    let now = std::time::Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(r) => pending.push(r),
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+
+                // Build the padded device batch.
+                let mut x = vec![0.0f32; batch * IMG_LEN];
+                for (i, r) in pending.iter().enumerate() {
+                    x[i * IMG_LEN..(i + 1) * IMG_LEN].copy_from_slice(&r.image);
+                }
+                let padded = batch - pending.len();
+                seed = seed.wrapping_add(1);
+                let logits =
+                    predictor.predict(&params, &rho_raw, &x, seed, cfg.intensity.factor())?;
+                let nc = predictor.num_classes;
+
+                stats_engine
+                    .requests
+                    .fetch_add(pending.len() as u64, Ordering::Relaxed);
+                stats_engine.batches.fetch_add(1, Ordering::Relaxed);
+                stats_engine
+                    .padded_slots
+                    .fetch_add(padded as u64, Ordering::Relaxed);
+
+                for (i, r) in pending.drain(..).enumerate() {
+                    let out = logits[i * nc..(i + 1) * nc].to_vec();
+                    stats_engine
+                        .queue_us
+                        .fetch_add(r.enqueued.elapsed().as_micros() as u64, Ordering::Relaxed);
+                    let _ = r.reply.send(Ok(out));
+                }
+            }
+        };
+        if let Err(e) = run() {
+            eprintln!("engine error: {e:?}");
+        }
+    });
+
+    Ok((InferenceClient { tx, num_classes }, stats, handle))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_fill_fraction() {
+        let s = ServerStats::default();
+        s.batches.store(2, Ordering::Relaxed);
+        s.padded_slots.store(8, Ordering::Relaxed);
+        // 2 batches of 16 slots, 8 padded -> 24/32 filled
+        assert!((s.mean_batch_fill(16) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_empty_safe() {
+        let s = ServerStats::default();
+        assert_eq!(s.mean_queue_us(), 0.0);
+        assert_eq!(s.mean_batch_fill(16), 0.0);
+    }
+}

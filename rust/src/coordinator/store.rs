@@ -1,0 +1,225 @@
+//! Trained-model persistence (simple, dependency-free binary format).
+//!
+//! Benches and examples cache `TrainedModel`s under `runs/cache/` so the
+//! table/figure reproductions don't retrain on every invocation.
+//!
+//! Format (little endian):
+//!   magic "EMTM" u32-version
+//!   model_key: u32 len + utf8
+//!   solution:  u8
+//!   rho_raw:   u32 len + f32s
+//!   n_params:  u32, then per tensor: u32 ndim + u64 dims + u32 len + f32s
+//!   loss_trace: u32 len + f32s
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::{Solution, TrainedModel};
+use crate::Result;
+
+const MAGIC: &[u8; 4] = b"EMTM";
+const VERSION: u32 = 1;
+
+fn sol_tag(s: Solution) -> u8 {
+    match s {
+        Solution::Traditional => 0,
+        Solution::A => 1,
+        Solution::AB => 2,
+        Solution::ABC => 3,
+    }
+}
+
+fn tag_sol(t: u8) -> Result<Solution> {
+    Ok(match t {
+        0 => Solution::Traditional,
+        1 => Solution::A,
+        2 => Solution::AB,
+        3 => Solution::ABC,
+        other => anyhow::bail!("bad solution tag {other}"),
+    })
+}
+
+fn w_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_f32s(w: &mut impl Write, v: &[f32]) -> Result<()> {
+    w_u32(w, v.len() as u32)?;
+    for &x in v {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn r_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn r_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+    let n = r_u32(r)? as usize;
+    anyhow::ensure!(n < (1 << 28), "unreasonable tensor size");
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Save a trained model.
+pub fn save(model: &TrainedModel, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    w_u32(&mut w, VERSION)?;
+    w_u32(&mut w, model.model_key.len() as u32)?;
+    w.write_all(model.model_key.as_bytes())?;
+    w.write_all(&[sol_tag(model.solution)])?;
+    w_f32s(&mut w, &model.rho_raw)?;
+    w_u32(&mut w, model.params.len() as u32)?;
+    for (shape, data) in &model.params {
+        w_u32(&mut w, shape.len() as u32)?;
+        for &d in shape {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        w_f32s(&mut w, data)?;
+    }
+    w_f32s(&mut w, &model.loss_trace)?;
+    Ok(())
+}
+
+/// Load a trained model.
+pub fn load(path: &Path) -> Result<TrainedModel> {
+    let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not an EMTM file");
+    let version = r_u32(&mut r)?;
+    anyhow::ensure!(version == VERSION, "unsupported version {version}");
+    let klen = r_u32(&mut r)? as usize;
+    let mut kbuf = vec![0u8; klen];
+    r.read_exact(&mut kbuf)?;
+    let model_key = String::from_utf8(kbuf)?;
+    let mut tag = [0u8; 1];
+    r.read_exact(&mut tag)?;
+    let solution = tag_sol(tag[0])?;
+    let rho_raw = r_f32s(&mut r)?;
+    let n = r_u32(&mut r)? as usize;
+    let mut params = Vec::with_capacity(n);
+    for _ in 0..n {
+        let ndim = r_u32(&mut r)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let data = r_f32s(&mut r)?;
+        anyhow::ensure!(data.len() == shape.iter().product::<usize>(), "shape mismatch");
+        params.push((shape, data));
+    }
+    let loss_trace = r_f32s(&mut r)?;
+    Ok(TrainedModel {
+        model_key,
+        solution,
+        params,
+        rho_raw,
+        loss_trace,
+    })
+}
+
+/// Cache path of a (model, solution, intensity, schedule) combination.
+pub fn cache_path(
+    model_key: &str,
+    solution: Solution,
+    intensity: &str,
+    pretrain: u32,
+    finetune: u32,
+) -> PathBuf {
+    PathBuf::from("runs/cache").join(format!(
+        "{model_key}_{}_{intensity}_p{pretrain}_f{finetune}.emtm",
+        solution.name().replace('+', "")
+    ))
+}
+
+/// Load from cache or train + save.
+pub fn train_cached(
+    arts: &crate::runtime::Artifacts,
+    model_key: &str,
+    suite: crate::data::Suite,
+    solution: Solution,
+    cfg: &crate::coordinator::TrainConfig,
+) -> Result<TrainedModel> {
+    let path = cache_path(
+        model_key,
+        solution,
+        cfg.intensity.name(),
+        cfg.pretrain_steps,
+        cfg.finetune_steps,
+    );
+    if path.exists() {
+        if let Ok(m) = load(&path) {
+            if m.model_key == model_key && m.solution == solution {
+                return Ok(m);
+            }
+        }
+    }
+    let trained = crate::coordinator::train_solution(arts, model_key, suite, solution, cfg)?;
+    save(&trained, &path)?;
+    Ok(trained)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TrainedModel {
+        TrainedModel {
+            model_key: "mlp_10".into(),
+            solution: Solution::AB,
+            params: vec![
+                (vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+                (vec![3], vec![0.1, 0.2, 0.3]),
+            ],
+            rho_raw: vec![4.0, 3.0],
+            loss_trace: vec![2.3, 1.1, 0.6],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("emtopt_store_test");
+        let path = dir.join("m.emtm");
+        let m = sample();
+        save(&m, &path).unwrap();
+        let got = load(&path).unwrap();
+        assert_eq!(got.model_key, m.model_key);
+        assert_eq!(got.solution, m.solution);
+        assert_eq!(got.params, m.params);
+        assert_eq!(got.rho_raw, m.rho_raw);
+        assert_eq!(got.loss_trace, m.loss_trace);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("emtopt_store_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.emtm");
+        std::fs::write(&path, b"not a model").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cache_path_distinct() {
+        let a = cache_path("mlp_10", Solution::A, "normal", 100, 100);
+        let b = cache_path("mlp_10", Solution::AB, "normal", 100, 100);
+        assert_ne!(a, b);
+    }
+}

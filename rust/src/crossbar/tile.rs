@@ -1,0 +1,178 @@
+//! One crossbar tile: a dense block of analog cells with per-cell RTN
+//! state sampled on every read.
+//!
+//! Hot path: `current_sum` is the innermost loop of the native simulator —
+//! it draws one RTN state per (active row, column) cell per read, exactly
+//! eq. (7)/(11).  State sampling uses a counter-based hash (no allocation,
+//! no shared RNG contention); the per-read noise term is
+//! `sigma_norm * c_l` added to the normalised programmed weight.
+
+use crate::device::state_offsets;
+use crate::rng::Rng;
+
+/// A (rows <= 256, cols <= 256) tile of programmed cells.
+#[derive(Clone, Debug)]
+pub struct Tile {
+    /// Programmed weights normalised to full scale, row-major (rows, cols).
+    w_norm: Vec<f32>,
+    rows: usize,
+    cols: usize,
+    /// RTN state offsets `c_l` (zero-mean, unit-variance).
+    offsets: Vec<f32>,
+}
+
+impl Tile {
+    pub fn new(w_norm: Vec<f32>, rows: usize, cols: usize, num_states: usize) -> Self {
+        assert_eq!(w_norm.len(), rows * cols);
+        Tile {
+            w_norm,
+            rows,
+            cols,
+            offsets: state_offsets(num_states),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn w_norm(&self) -> &[f32] {
+        &self.w_norm
+    }
+
+    /// Analog current-sum read (original mode): for every column
+    /// `out[c] += sum_r level[r] * (w_norm[r,c] + sigma_norm * c_state)`.
+    ///
+    /// Returns the accumulated cell-energy term
+    /// `sum_{r,c} |w_norm[r,c]| * level[r]` (the caller multiplies by
+    /// `E0 * rho`).
+    pub fn current_sum(
+        &mut self,
+        levels: &[u32],
+        out: &mut [f32],
+        sigma_norm: f32,
+        rng: &mut Rng,
+    ) -> f64 {
+        self.current_sum_scaled(levels, out, 1.0, sigma_norm, rng)
+    }
+
+    /// Current-sum with an output scale factor (used for bit-plane reads:
+    /// `scale = 2^p`). `levels` are the DAC integer levels per row.
+    pub fn current_sum_scaled(
+        &mut self,
+        levels: &[u32],
+        out: &mut [f32],
+        scale: f32,
+        sigma_norm: f32,
+        rng: &mut Rng,
+    ) -> f64 {
+        assert_eq!(levels.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        let m = self.offsets.len() as u32;
+        let mut energy = 0.0f64;
+        for r in 0..self.rows {
+            let level = levels[r];
+            if level == 0 {
+                continue; // zero input drives no current
+            }
+            let lv = level as f32;
+            let row = &self.w_norm[r * self.cols..(r + 1) * self.cols];
+            let mut row_w_abs = 0.0f32;
+            for (c, &w) in row.iter().enumerate() {
+                // fresh RTN state per cell read (eq. 7)
+                let state = rng.below(m) as usize;
+                let noisy = w + sigma_norm * self.offsets[state];
+                out[c] += scale * lv * noisy;
+                row_w_abs += w.abs();
+            }
+            energy += (row_w_abs * lv) as f64;
+        }
+        energy
+    }
+
+    /// Noiseless reference read.
+    pub fn current_sum_clean(&self, levels: &[u32], out: &mut [f32]) {
+        for r in 0..self.rows {
+            let lv = levels[r] as f32;
+            if lv == 0.0 {
+                continue;
+            }
+            let row = &self.w_norm[r * self.cols..(r + 1) * self.cols];
+            for (c, &w) in row.iter().enumerate() {
+                out[c] += lv * w;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_sigma_equals_clean() {
+        let w = vec![0.5, -0.25, 0.125, 1.0];
+        let mut t = Tile::new(w, 2, 2, 4);
+        let levels = vec![3u32, 1];
+        let mut noisy = vec![0.0f32; 2];
+        let mut clean = vec![0.0f32; 2];
+        let mut rng = Rng::new(1);
+        t.current_sum(&levels, &mut noisy, 0.0, &mut rng);
+        t.current_sum_clean(&levels, &mut clean);
+        assert_eq!(noisy, clean);
+    }
+
+    #[test]
+    fn zero_level_rows_skipped_and_free() {
+        let w = vec![1.0; 4];
+        let mut t = Tile::new(w, 2, 2, 4);
+        let mut out = vec![0.0f32; 2];
+        let mut rng = Rng::new(2);
+        let e = t.current_sum(&[0, 0], &mut out, 0.5, &mut rng);
+        assert_eq!(out, vec![0.0, 0.0]);
+        assert_eq!(e, 0.0);
+    }
+
+    #[test]
+    fn energy_counts_weight_times_level() {
+        let w = vec![0.5, -0.5, 0.25, 0.25];
+        let mut t = Tile::new(w, 2, 2, 1); // single state: noiseless
+        let mut out = vec![0.0f32; 2];
+        let mut rng = Rng::new(3);
+        let e = t.current_sum(&[2, 4], &mut out, 0.0, &mut rng);
+        // row0: (0.5+0.5)*2 = 2 ; row1: (0.25+0.25)*4 = 2
+        assert!((e - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn noise_std_scales_with_sigma() {
+        let cols = 4;
+        let w = vec![0.0f32; cols]; // zero weights isolate the noise term
+        let mut t = Tile::new(w, 1, cols, 4);
+        let levels = vec![1u32];
+        let mut rng = Rng::new(4);
+        let spread = |t: &mut Tile, sigma: f32, rng: &mut Rng| {
+            let trials = 4000;
+            let mut sum = 0.0f64;
+            let mut sq = 0.0f64;
+            let mut out = vec![0.0f32; cols];
+            for _ in 0..trials {
+                out.fill(0.0);
+                t.current_sum(&levels, &mut out, sigma, rng);
+                for &o in &out {
+                    sum += o as f64;
+                    sq += (o as f64).powi(2);
+                }
+            }
+            let n = (trials * cols) as f64;
+            (sq / n - (sum / n).powi(2)).sqrt()
+        };
+        let s1 = spread(&mut t, 0.1, &mut rng);
+        let s2 = spread(&mut t, 0.2, &mut rng);
+        assert!((s2 / s1 - 2.0).abs() < 0.15, "ratio {}", s2 / s1);
+    }
+}

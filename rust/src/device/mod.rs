@@ -1,0 +1,210 @@
+//! EMT cell device model — the canonical Rust mirror of
+//! `python/compile/device.py` (keep the constants in sync; the integration
+//! tests cross-check both through the AOT artifacts).
+//!
+//! An analog cell storing weight `w` (normalised to layer full-scale
+//! `w_scale`) fluctuates between `m` RTN states. Read at state `l`:
+//!
+//! ```text
+//! r_l(w, rho) = w + sigma_abs(rho, intensity, w_scale) * c_l
+//! sigma_abs   = K_F * intensity / sqrt(rho) * w_scale
+//! ```
+//!
+//! with zero-mean unit-variance evenly spaced offsets `c_l` (eq. 7 of the
+//! paper; amplitude–energy coupling per Ielmini et al. [25]).
+
+pub mod rtn;
+
+pub use rtn::{RtnCell, RtnState};
+
+/// Default number of RTN states per cell.
+pub const DEFAULT_NUM_STATES: usize = 4;
+
+/// Fluctuation constant: relative sigma at rho == 1, intensity == 1.
+pub const K_F: f32 = 0.04;
+
+/// Device energy unit of one full-scale full-duty analog read (normalised;
+/// the `energy` module owns the absolute uJ calibration).
+pub const E0: f32 = 1.0;
+
+/// Default activation bits B_a (bit-planes in decomposed mode).
+/// B_a = 5 matches the paper's 5x decomposed-mode delay (Table 1).
+pub const DEFAULT_ACT_BITS: u32 = 5;
+
+/// Default signed weight bits B_w.
+pub const DEFAULT_WEIGHT_BITS: u32 = 8;
+
+/// Fluctuation intensity level (paper §5.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Intensity {
+    Weak,
+    Normal,
+    Strong,
+}
+
+impl Intensity {
+    pub const ALL: [Intensity; 3] = [Intensity::Weak, Intensity::Normal, Intensity::Strong];
+
+    /// Multiplier applied to the fluctuation amplitude.
+    pub fn factor(self) -> f32 {
+        match self {
+            Intensity::Weak => 0.5,
+            Intensity::Normal => 1.0,
+            Intensity::Strong => 2.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Intensity::Weak => "weak",
+            Intensity::Normal => "normal",
+            Intensity::Strong => "strong",
+        }
+    }
+}
+
+impl std::str::FromStr for Intensity {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "weak" => Ok(Intensity::Weak),
+            "normal" => Ok(Intensity::Normal),
+            "strong" => Ok(Intensity::Strong),
+            other => Err(format!("unknown intensity {other:?}")),
+        }
+    }
+}
+
+/// Zero-mean, unit-variance, evenly spaced state offsets `c_l`.
+///
+/// Mirrors `device.state_offsets` in Python exactly.
+pub fn state_offsets(m: usize) -> Vec<f32> {
+    assert!(m >= 1, "need at least one state");
+    if m == 1 {
+        return vec![0.0];
+    }
+    let mut raw: Vec<f64> = (0..m)
+        .map(|l| -1.0 + 2.0 * l as f64 / (m - 1) as f64)
+        .collect();
+    let mean = raw.iter().sum::<f64>() / m as f64;
+    for v in raw.iter_mut() {
+        *v -= mean;
+    }
+    let var = raw.iter().map(|v| v * v).sum::<f64>() / m as f64;
+    let std = var.sqrt();
+    raw.iter().map(|v| (*v / std) as f32).collect()
+}
+
+/// Relative fluctuation amplitude (fraction of full scale).
+#[inline]
+pub fn sigma_rel(rho: f32, intensity: f32) -> f32 {
+    K_F * intensity / rho.sqrt()
+}
+
+/// Absolute fluctuation amplitude in weight units.
+#[inline]
+pub fn sigma_abs(rho: f32, intensity: f32, w_scale: f32) -> f32 {
+    sigma_rel(rho, intensity) * w_scale
+}
+
+/// Energy of one analog read (normalised device units, eq. 19).
+///
+/// `w_abs_norm` in [0, 1] is |w| / w_scale; `act_level` is the integer DAC
+/// level (original mode) or the number of set bit-planes (decomposed mode).
+#[inline]
+pub fn read_energy(rho: f32, w_abs_norm: f32, act_level: f32) -> f32 {
+    E0 * rho * w_abs_norm * act_level
+}
+
+/// Device configuration shared by the simulation substrate.
+#[derive(Clone, Debug)]
+pub struct DeviceConfig {
+    pub num_states: usize,
+    pub intensity: Intensity,
+    /// Global energy coefficient used when a layer has no trained rho.
+    pub rho: f32,
+    pub act_bits: u32,
+    pub weight_bits: u32,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        DeviceConfig {
+            num_states: DEFAULT_NUM_STATES,
+            intensity: Intensity::Normal,
+            rho: 4.0,
+            act_bits: DEFAULT_ACT_BITS,
+            weight_bits: DEFAULT_WEIGHT_BITS,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offsets_zero_mean_unit_var() {
+        for m in [2usize, 3, 4, 8, 16] {
+            let c = state_offsets(m);
+            let mean: f32 = c.iter().sum::<f32>() / m as f32;
+            let var: f32 = c.iter().map(|v| v * v).sum::<f32>() / m as f32;
+            assert!(mean.abs() < 1e-5, "m={m} mean={mean}");
+            assert!((var - 1.0).abs() < 1e-4, "m={m} var={var}");
+        }
+    }
+
+    #[test]
+    fn offsets_match_python_m4() {
+        // python: device.state_offsets(4) == [-1.3416, -0.4472, 0.4472, 1.3416]
+        let c = state_offsets(4);
+        let want = [-1.341_640_8, -0.447_213_6, 0.447_213_6, 1.341_640_8];
+        for (got, want) in c.iter().zip(want.iter()) {
+            assert!((got - want).abs() < 1e-4, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn single_state_noiseless() {
+        assert_eq!(state_offsets(1), vec![0.0]);
+    }
+
+    #[test]
+    fn sigma_sqrt_law() {
+        let s1 = sigma_rel(1.0, 1.0);
+        let s4 = sigma_rel(4.0, 1.0);
+        assert!((s4 - s1 / 2.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn intensity_ordering() {
+        let w = sigma_rel(1.0, Intensity::Weak.factor());
+        let n = sigma_rel(1.0, Intensity::Normal.factor());
+        let s = sigma_rel(1.0, Intensity::Strong.factor());
+        assert!(w < n && n < s);
+        assert!((s - 4.0 * w).abs() < 1e-7);
+    }
+
+    #[test]
+    fn energy_linear() {
+        assert_eq!(read_energy(2.0, 0.5, 3.0), 2.0 * read_energy(1.0, 0.5, 3.0));
+        assert_eq!(read_energy(1.0, 1.0, 4.0), 2.0 * read_energy(1.0, 0.5, 4.0));
+    }
+
+    #[test]
+    fn decomposed_read_cheaper_eq19() {
+        // E_new = rho * popcount(level) <= E_ori = rho * level, strict for
+        // any level >= 2.
+        for level in 2u32..16 {
+            let e_ori = read_energy(1.0, 1.0, level as f32);
+            let e_new = read_energy(1.0, 1.0, level.count_ones() as f32);
+            assert!(e_new < e_ori, "level {level}");
+        }
+    }
+
+    #[test]
+    fn intensity_parse() {
+        assert_eq!("weak".parse::<Intensity>().unwrap(), Intensity::Weak);
+        assert!("loud".parse::<Intensity>().is_err());
+    }
+}

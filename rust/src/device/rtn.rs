@@ -1,0 +1,162 @@
+//! RTN (random telegraph noise) cell state machine.
+//!
+//! Physically each trap in the oxide captures/emits electrons with
+//! exponential dwell times, producing a multi-level telegraph signal in the
+//! cell conductance [8][39].  We model the composite as an `m`-state
+//! continuous-time Markov chain with uniform stationary distribution — the
+//! stationary picture is what eq. (7)/(8) of the paper samples (each read
+//! lands in state `l` with probability 1/m).
+//!
+//! Two sampling modes:
+//!  * [`RtnCell::sample_stationary`] — i.i.d. stationary reads (what the
+//!    paper's math assumes; used by the inference engine),
+//!  * [`RtnCell::advance`] — time-correlated trajectory (used by
+//!    `examples/device_explorer.rs` and the robustness tests to show the
+//!    stationary assumption is conservative).
+
+use crate::rng::Rng;
+
+/// State of one RTN cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RtnState(pub usize);
+
+/// One EMT cell with `m` RTN states.
+#[derive(Clone, Debug)]
+pub struct RtnCell {
+    /// Zero-mean unit-variance offsets `c_l`.
+    offsets: Vec<f32>,
+    /// Mean dwell time per state, in read cycles.
+    dwell: f32,
+    state: usize,
+}
+
+impl RtnCell {
+    pub fn new(num_states: usize, dwell_cycles: f32) -> Self {
+        RtnCell {
+            offsets: super::state_offsets(num_states),
+            dwell: dwell_cycles.max(1e-6),
+            state: 0,
+        }
+    }
+
+    pub fn num_states(&self) -> usize {
+        self.offsets.len()
+    }
+
+    pub fn state(&self) -> RtnState {
+        RtnState(self.state)
+    }
+
+    /// Current fluctuation offset `c_l` of the cell.
+    pub fn offset(&self) -> f32 {
+        self.offsets[self.state]
+    }
+
+    /// Draw an i.i.d. stationary state and return its offset.
+    #[inline]
+    pub fn sample_stationary(&mut self, rng: &mut Rng) -> f32 {
+        self.state = rng.below(self.offsets.len() as u32) as usize;
+        self.offsets[self.state]
+    }
+
+    /// Advance the Markov chain by `cycles` read cycles and return the
+    /// offset at the end.  Transition probability per cycle is
+    /// `1 - exp(-1/dwell)`; on transition the next state is uniform among
+    /// the others (composite multi-trap approximation).
+    pub fn advance(&mut self, cycles: u32, rng: &mut Rng) -> f32 {
+        let p_switch = 1.0 - (-1.0 / self.dwell).exp();
+        for _ in 0..cycles {
+            if rng.next_f32() < p_switch {
+                let m = self.offsets.len() as u32;
+                if m > 1 {
+                    let mut next = rng.below(m - 1) as usize;
+                    if next >= self.state {
+                        next += 1;
+                    }
+                    self.state = next;
+                }
+            }
+        }
+        self.offsets[self.state]
+    }
+
+    /// Noisy read of a stored (normalised) weight value at the CURRENT
+    /// state: `r_l(w, rho) = w + sigma_abs * c_l`.
+    #[inline]
+    pub fn read(&self, w: f32, sigma_abs: f32) -> f32 {
+        w + sigma_abs * self.offsets[self.state]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stationary_is_uniform() {
+        let mut cell = RtnCell::new(4, 10.0);
+        let mut rng = Rng::new(1);
+        let mut counts = [0usize; 4];
+        let n = 40_000;
+        for _ in 0..n {
+            cell.sample_stationary(&mut rng);
+            counts[cell.state().0] += 1;
+        }
+        for c in counts {
+            let frac = c as f64 / n as f64;
+            assert!((frac - 0.25).abs() < 0.02, "frac {frac}");
+        }
+    }
+
+    #[test]
+    fn stationary_offset_moments() {
+        let mut cell = RtnCell::new(4, 10.0);
+        let mut rng = Rng::new(2);
+        let n = 100_000;
+        let (mut sum, mut sq) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let o = cell.sample_stationary(&mut rng) as f64;
+            sum += o;
+            sq += o * o;
+        }
+        assert!((sum / n as f64).abs() < 0.02);
+        assert!((sq / n as f64 - 1.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn trajectory_converges_to_stationary() {
+        let mut cell = RtnCell::new(2, 5.0);
+        let mut rng = Rng::new(3);
+        let mut hi = 0usize;
+        let n = 20_000;
+        for _ in 0..n {
+            cell.advance(1, &mut rng);
+            if cell.state().0 == 1 {
+                hi += 1;
+            }
+        }
+        let frac = hi as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.05, "frac {frac}");
+    }
+
+    #[test]
+    fn long_dwell_is_sticky() {
+        let mut cell = RtnCell::new(2, 1e9);
+        let mut rng = Rng::new(4);
+        let s0 = cell.state().0;
+        cell.advance(100, &mut rng);
+        assert_eq!(cell.state().0, s0);
+    }
+
+    #[test]
+    fn read_applies_offset() {
+        let mut cell = RtnCell::new(4, 1.0);
+        let mut rng = Rng::new(5);
+        cell.sample_stationary(&mut rng);
+        let w = 0.5;
+        let sigma = 0.1;
+        assert!((cell.read(w, sigma) - (w + sigma * cell.offset())).abs() < 1e-7);
+        // noiseless when sigma == 0
+        assert_eq!(cell.read(w, 0.0), w);
+    }
+}

@@ -1,0 +1,259 @@
+//! Analytical energy model (NCPower-style [33][37] substitution).
+//!
+//! Per-layer analog read energy (eq. 19, Fig 2a):
+//!
+//! ```text
+//! E_cell(layer)  = cells * alpha * E0_PJ * rho * mean|w|_norm * duty
+//! ```
+//!
+//! where `duty` is the mean DAC level (original mode) or the mean number of
+//! set bit-planes (decomposed mode).  Peripheral energy per read cycle is
+//! DAC per active row + ADC per column; decomposed mode pays `B_a` cycles.
+//!
+//! Calibration: `E0_PJ`, `E_DAC_PJ`, `E_ADC_PJ` are chosen so that
+//! VGG-16/CIFAR at rho == 1 lands in the paper's tens-of-uJ range; all
+//! comparisons in EXPERIMENTS.md are ratios, which are calibration-free.
+
+use crate::device::{self, Intensity};
+use crate::models::{LayerMeta, ModelDesc};
+
+/// Energy of one full-scale unit-level analog cell read at rho == 1 (pJ).
+pub const E0_PJ: f64 = 0.05;
+/// DAC energy per active row per read cycle (pJ).
+pub const E_DAC_PJ: f64 = 0.02;
+/// ADC energy per column conversion per read cycle (pJ).
+pub const E_ADC_PJ: f64 = 0.2;
+
+/// Read mode of the crossbar.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadMode {
+    /// Single analog read with a multi-bit DAC level (paper "original").
+    Original,
+    /// Technique C: bit-serial over `act_bits` planes.
+    Decomposed,
+}
+
+/// Workload statistics of a trained model (measured or assumed).
+#[derive(Clone, Copy, Debug)]
+pub struct ReadStats {
+    /// Mean |w| / w_scale over programmed cells (Gaussian init: ~0.25).
+    pub mean_w_norm: f64,
+    /// Mean DAC integer level per read, original mode.
+    pub mean_level: f64,
+    /// Mean set bit-planes per read, decomposed mode.
+    pub mean_bits: f64,
+}
+
+impl ReadStats {
+    /// Defaults for B_a activation bits assuming half-range uniform
+    /// activation levels (used when no measured stats are available).
+    pub fn assumed(act_bits: u32) -> Self {
+        let max_level = ((1u64 << act_bits) - 1) as f64;
+        ReadStats {
+            mean_w_norm: 0.25,
+            mean_level: 0.3 * max_level,
+            mean_bits: 0.3 * act_bits as f64,
+        }
+    }
+}
+
+/// The analytical energy model.
+#[derive(Clone, Debug)]
+pub struct EnergyModel {
+    pub act_bits: u32,
+    pub stats: ReadStats,
+}
+
+impl EnergyModel {
+    pub fn new(act_bits: u32) -> Self {
+        EnergyModel {
+            act_bits,
+            stats: ReadStats::assumed(act_bits),
+        }
+    }
+
+    pub fn with_stats(act_bits: u32, stats: ReadStats) -> Self {
+        EnergyModel { act_bits, stats }
+    }
+
+    fn duty(&self, mode: ReadMode) -> f64 {
+        match mode {
+            ReadMode::Original => self.stats.mean_level,
+            ReadMode::Decomposed => self.stats.mean_bits,
+        }
+    }
+
+    fn cycles_per_read(&self, mode: ReadMode) -> f64 {
+        match mode {
+            ReadMode::Original => 1.0,
+            ReadMode::Decomposed => self.act_bits as f64,
+        }
+    }
+
+    /// Analog cell energy of one layer per inference (pJ).
+    pub fn layer_cell_pj(&self, meta: &LayerMeta, rho: f64, mode: ReadMode) -> f64 {
+        meta.reads() as f64 * E0_PJ * rho * self.stats.mean_w_norm * self.duty(mode)
+    }
+
+    /// Peripheral (DAC + ADC) energy of one layer per inference (pJ).
+    pub fn layer_peripheral_pj(&self, meta: &LayerMeta, mode: ReadMode) -> f64 {
+        let cycles = meta.alpha as f64 * self.cycles_per_read(mode);
+        cycles * (meta.fan_in as f64 * E_DAC_PJ + meta.out_features as f64 * E_ADC_PJ)
+    }
+
+    /// Total energy of one layer per inference (pJ).
+    pub fn layer_pj(&self, meta: &LayerMeta, rho: f64, mode: ReadMode) -> f64 {
+        self.layer_cell_pj(meta, rho, mode) + self.layer_peripheral_pj(meta, mode)
+    }
+
+    /// Whole-model energy per inference in uJ, with per-layer rho.
+    pub fn model_uj(&self, model: &ModelDesc, rhos: &[f64], mode: ReadMode) -> f64 {
+        assert_eq!(model.layers.len(), rhos.len(), "rho per layer");
+        let pj: f64 = model
+            .layers
+            .iter()
+            .zip(rhos.iter())
+            .map(|(l, &r)| self.layer_pj(l, r, mode))
+            .sum();
+        pj * 1e-6
+    }
+
+    /// Whole-model energy with a single global rho.
+    pub fn model_uj_uniform(&self, model: &ModelDesc, rho: f64, mode: ReadMode) -> f64 {
+        let rhos = vec![rho; model.layers.len()];
+        self.model_uj(model, &rhos, mode)
+    }
+
+    /// Invert `model_uj_uniform` for rho: find the global rho whose
+    /// energy equals `budget_uj` (cell energy is linear in rho, peripheral
+    /// constant, so this is a closed form).
+    pub fn rho_for_budget(
+        &self,
+        model: &ModelDesc,
+        budget_uj: f64,
+        mode: ReadMode,
+    ) -> Option<f64> {
+        let peripheral_pj: f64 = model
+            .layers
+            .iter()
+            .map(|l| self.layer_peripheral_pj(l, mode))
+            .sum();
+        let cell_at_rho1: f64 = model
+            .layers
+            .iter()
+            .map(|l| self.layer_cell_pj(l, 1.0, mode))
+            .sum();
+        let remaining = budget_uj * 1e6 - peripheral_pj;
+        if remaining <= 0.0 {
+            return None; // budget below the peripheral floor
+        }
+        Some(remaining / cell_at_rho1)
+    }
+}
+
+/// Fluctuation sigma that a model sees at a given uniform rho (relative to
+/// full-scale). Convenience glue for accuracy-vs-energy sweeps.
+pub fn sigma_at(rho: f64, intensity: Intensity) -> f64 {
+    device::sigma_rel(rho as f32, intensity.factor()) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::paper_scale::{vgg16, Resolution};
+
+    fn model() -> ModelDesc {
+        vgg16(Resolution::Cifar)
+    }
+
+    #[test]
+    fn energy_linear_in_rho() {
+        let em = EnergyModel::new(5);
+        let m = model();
+        let e1 = em.model_uj_uniform(&m, 1.0, ReadMode::Original);
+        let e2 = em.model_uj_uniform(&m, 2.0, ReadMode::Original);
+        let peri: f64 = m
+            .layers
+            .iter()
+            .map(|l| em.layer_peripheral_pj(l, ReadMode::Original))
+            .sum::<f64>()
+            * 1e-6;
+        assert!(((e2 - peri) - 2.0 * (e1 - peri)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decomposed_cell_energy_lower() {
+        // eq (20): mean_bits << mean_level
+        let em = EnergyModel::new(5);
+        let m = model();
+        let meta = &m.layers[0];
+        assert!(
+            em.layer_cell_pj(meta, 1.0, ReadMode::Decomposed)
+                < em.layer_cell_pj(meta, 1.0, ReadMode::Original)
+        );
+    }
+
+    #[test]
+    fn decomposed_peripheral_higher() {
+        let em = EnergyModel::new(5);
+        let m = model();
+        let meta = &m.layers[0];
+        assert!(
+            em.layer_peripheral_pj(meta, ReadMode::Decomposed)
+                > em.layer_peripheral_pj(meta, ReadMode::Original)
+        );
+    }
+
+    #[test]
+    fn vgg16_cifar_in_paper_range() {
+        // tens of uJ at moderate rho (Table 1 scale)
+        let em = EnergyModel::new(5);
+        let e = em.model_uj_uniform(&model(), 1.0, ReadMode::Original);
+        assert!((5.0..200.0).contains(&e), "vgg16 energy {e} uJ");
+    }
+
+    #[test]
+    fn rho_budget_roundtrip() {
+        let em = EnergyModel::new(5);
+        let m = model();
+        let budget = 16.0;
+        let rho = em.rho_for_budget(&m, budget, ReadMode::Original).unwrap();
+        let back = em.model_uj_uniform(&m, rho, ReadMode::Original);
+        assert!((back - budget).abs() / budget < 1e-9);
+    }
+
+    #[test]
+    fn budget_below_peripheral_floor_is_none() {
+        let em = EnergyModel::new(5);
+        assert!(em
+            .rho_for_budget(&model(), 1e-9, ReadMode::Original)
+            .is_none());
+    }
+
+    #[test]
+    fn depthwise_peripheral_overhead_dominates_conv() {
+        // the paper's MobileNet observation (§5.1): depthwise layers read
+        // only nine cells per output, so a much larger *fraction* of their
+        // energy goes to the peripheral circuits than for regular convs.
+        use crate::models::paper_scale::mobilenet;
+        let em = EnergyModel::new(5);
+        let m = mobilenet(Resolution::Cifar);
+        let ratio = |meta: &crate::models::LayerMeta| {
+            em.layer_peripheral_pj(meta, ReadMode::Original)
+                / em.layer_cell_pj(meta, 1.0, ReadMode::Original)
+        };
+        let dw = m.layers.iter().find(|l| l.kind == "dwconv").unwrap();
+        let conv = m
+            .layers
+            .iter()
+            .filter(|l| l.kind == "conv")
+            .max_by_key(|l| l.fan_in)
+            .unwrap();
+        assert!(
+            ratio(dw) > 5.0 * ratio(conv),
+            "depthwise peripheral fraction must dwarf conv: dw={} conv={}",
+            ratio(dw),
+            ratio(conv)
+        );
+    }
+}

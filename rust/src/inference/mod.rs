@@ -1,0 +1,204 @@
+//! Native noisy inference engine over the crossbar simulator.
+//!
+//! Runs fully-connected stacks directly on [`CrossbarArray`]s with
+//! ReLU between layers — the device-level ground truth used by the
+//! hot-path bench, the property tests, and the Pallas-kernel
+//! cross-validation.  (Full-model accuracy experiments run through the
+//! AOT artifacts; see `coordinator`.)
+
+use crate::crossbar::{CrossbarArray, ReadCounters};
+use crate::device::DeviceConfig;
+use crate::energy::ReadMode;
+use crate::rng::Rng;
+use crate::Result;
+
+/// One dense layer programmed on a crossbar, with a digital bias.
+pub struct NoisyLinear {
+    pub array: CrossbarArray,
+    pub bias: Vec<f32>,
+    pub d_in: usize,
+    pub d_out: usize,
+}
+
+impl NoisyLinear {
+    pub fn new(w: &[f32], bias: &[f32], d_in: usize, d_out: usize, cfg: &DeviceConfig) -> Self {
+        assert_eq!(bias.len(), d_out);
+        NoisyLinear {
+            array: CrossbarArray::program(w, d_in, d_out, cfg),
+            bias: bias.to_vec(),
+            d_in,
+            d_out,
+        }
+    }
+
+    pub fn forward(
+        &mut self,
+        x: &[f32],
+        out: &mut [f32],
+        mode: ReadMode,
+        cfg: &DeviceConfig,
+        rng: &mut Rng,
+    ) {
+        self.array
+            .mac(x, out, mode, cfg.act_bits, cfg.intensity.factor(), rng);
+        for (o, &b) in out.iter_mut().zip(self.bias.iter()) {
+            *o += b;
+        }
+    }
+
+    pub fn forward_clean(&self, x: &[f32], out: &mut [f32], cfg: &DeviceConfig) {
+        self.array.mac_clean(x, out, cfg.act_bits);
+        for (o, &b) in out.iter_mut().zip(self.bias.iter()) {
+            *o += b;
+        }
+    }
+}
+
+/// A stack of [`NoisyLinear`] layers with ReLU activations in between.
+pub struct NoisyMlp {
+    pub layers: Vec<NoisyLinear>,
+    scratch: Vec<Vec<f32>>,
+}
+
+impl NoisyMlp {
+    /// Build from per-layer (weights row-major (d_in, d_out), bias).
+    pub fn new(specs: &[(&[f32], &[f32], usize, usize)], cfg: &DeviceConfig) -> Result<Self> {
+        let mut layers = Vec::with_capacity(specs.len());
+        let mut scratch = Vec::with_capacity(specs.len());
+        for &(w, b, d_in, d_out) in specs {
+            anyhow::ensure!(w.len() == d_in * d_out, "weight shape mismatch");
+            layers.push(NoisyLinear::new(w, b, d_in, d_out, cfg));
+            scratch.push(vec![0.0f32; d_out]);
+        }
+        Ok(NoisyMlp { layers, scratch })
+    }
+
+    /// Noisy forward of one sample; returns the logits slice.
+    pub fn forward(
+        &mut self,
+        x: &[f32],
+        mode: ReadMode,
+        cfg: &DeviceConfig,
+        rng: &mut Rng,
+    ) -> &[f32] {
+        let n = self.layers.len();
+        for i in 0..n {
+            // split scratch so we can borrow input and output disjointly
+            let (head, tail) = self.scratch.split_at_mut(i);
+            let input: &[f32] = if i == 0 { x } else { &head[i - 1] };
+            let out = &mut tail[0];
+            // activations entering a crossbar must be non-negative (DAC)
+            let relu_in: Vec<f32>;
+            let input = if i == 0 {
+                input
+            } else {
+                relu_in = input.iter().map(|&v| v.max(0.0)).collect();
+                &relu_in[..]
+            };
+            self.layers[i].forward(input, out, mode, cfg, rng);
+        }
+        &self.scratch[n - 1]
+    }
+
+    /// Noiseless forward (reference).
+    pub fn forward_clean(&mut self, x: &[f32], cfg: &DeviceConfig) -> Vec<f32> {
+        let mut cur = x.to_vec();
+        for layer in &self.layers {
+            let mut out = vec![0.0f32; layer.d_out];
+            let input: Vec<f32> = cur.iter().map(|&v| v.max(0.0)).collect();
+            layer.forward_clean(&input, &mut out, cfg);
+            cur = out;
+        }
+        cur
+    }
+
+    /// Aggregate energy/cycle counters over all layers.
+    pub fn counters(&self) -> ReadCounters {
+        let mut total = ReadCounters::default();
+        for l in &self.layers {
+            total.merge(&l.array.counters);
+        }
+        total
+    }
+
+    pub fn num_cells(&self) -> usize {
+        self.layers.iter().map(|l| l.array.num_cells()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_mlp(cfg: &DeviceConfig) -> NoisyMlp {
+        let mut rng = Rng::new(1);
+        let dims = [(16usize, 12usize), (12, 8), (8, 4)];
+        let data: Vec<(Vec<f32>, Vec<f32>)> = dims
+            .iter()
+            .map(|&(i, o)| {
+                let w: Vec<f32> = (0..i * o).map(|_| rng.normal() * 0.3).collect();
+                let b: Vec<f32> = (0..o).map(|_| rng.normal() * 0.05).collect();
+                (w, b)
+            })
+            .collect();
+        let specs: Vec<(&[f32], &[f32], usize, usize)> = data
+            .iter()
+            .zip(dims.iter())
+            .map(|((w, b), &(i, o))| (w.as_slice(), b.as_slice(), i, o))
+            .collect();
+        NoisyMlp::new(&specs, cfg).unwrap()
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let cfg = DeviceConfig::default();
+        let mut mlp = mk_mlp(&cfg);
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..16).map(|_| rng.next_f32()).collect();
+        let y = mlp.forward(&x, ReadMode::Original, &cfg, &mut rng);
+        assert_eq!(y.len(), 4);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn noisy_tracks_clean_at_high_rho() {
+        let mut cfg = DeviceConfig::default();
+        cfg.rho = 64.0; // nearly noiseless
+        let mut mlp = mk_mlp(&cfg);
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..16).map(|_| rng.next_f32()).collect();
+        let clean = mlp.forward_clean(&x, &cfg);
+        let noisy = mlp.forward(&x, ReadMode::Original, &cfg, &mut rng).to_vec();
+        for (a, b) in noisy.iter().zip(clean.iter()) {
+            assert!((a - b).abs() < 0.25 * (b.abs() + 1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let cfg = DeviceConfig::default();
+        let mut mlp = mk_mlp(&cfg);
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..16).map(|_| rng.next_f32()).collect();
+        mlp.forward(&x, ReadMode::Original, &cfg, &mut rng);
+        let c1 = mlp.counters();
+        mlp.forward(&x, ReadMode::Original, &cfg, &mut rng);
+        let c2 = mlp.counters();
+        assert!(c2.cell_pj > c1.cell_pj);
+        assert_eq!(c2.cycles, 2 * c1.cycles);
+    }
+
+    #[test]
+    fn decomposed_more_cycles_less_cell_energy() {
+        let cfg = DeviceConfig::default();
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..16).map(|_| rng.next_f32()).collect();
+
+        let mut m1 = mk_mlp(&cfg);
+        m1.forward(&x, ReadMode::Original, &cfg, &mut rng);
+        let mut m2 = mk_mlp(&cfg);
+        m2.forward(&x, ReadMode::Decomposed, &cfg, &mut rng);
+        assert!(m2.counters().cycles > m1.counters().cycles);
+        assert!(m2.counters().cell_pj < m1.counters().cell_pj);
+    }
+}

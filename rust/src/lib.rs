@@ -1,0 +1,39 @@
+//! # emtopt — in-memory deep learning with emerging memory technology
+//!
+//! Production reproduction of *"Optimizing for In-memory Deep Learning with
+//! Emerging Memory Technology"* (Wang, Luo, Goh, Zhang, Wong; 2021).
+//!
+//! The paper proposes three co-design techniques for analog in-memory
+//! neural-network inference on unstable EMT (RRAM/PCRAM) cells:
+//!
+//! * **A — device-enhanced dataset**: noise-aware training with sampled
+//!   device fluctuation states,
+//! * **B — energy regularization**: a trainable per-layer energy
+//!   coefficient ρ optimized under the loss term `λ Σ α_t ρ |w_t|`,
+//! * **C — low-fluctuation decomposition**: bit-serial crossbar reads that
+//!   average out RTN fluctuation while cutting read energy.
+//!
+//! Architecture (see DESIGN.md): a Rust coordinator (this crate) owns the
+//! request path — it loads JAX/Pallas computations that were AOT-lowered to
+//! HLO text at build time (`make artifacts`) and executes them through the
+//! PJRT CPU client (`runtime`), alongside a native device/crossbar/energy
+//! simulation substrate used for the paper's hardware-level experiments.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod crossbar;
+pub mod data;
+pub mod device;
+pub mod energy;
+pub mod inference;
+pub mod metrics;
+pub mod models;
+pub mod quant;
+pub mod rng;
+pub mod runtime;
+pub mod timing;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,293 @@
+//! `emtopt` CLI — the coordinator leader entrypoint.
+//!
+//! Commands:
+//!   info      artifact + model inventory
+//!   train     train one (model, solution) and cache it under runs/cache
+//!   sweep     accuracy-vs-energy curve (Fig 9 primitive)
+//!   compare   ours-vs-SOTA at max accuracy (Fig 10/11 primitive)
+//!   serve     run the dynamic-batching inference router demo
+//!
+//! Flags: --model KEY --solution trad|a|ab|abc --intensity weak|normal|strong
+//!        --pretrain N --finetune N --lam F --seed N --artifacts DIR
+//!        --config FILE (TOML; flags override)
+
+use emtopt::baselines::Method;
+use emtopt::config::ExperimentConfig;
+use emtopt::coordinator::{self, store, Solution, TrainConfig};
+use emtopt::data::Suite;
+use emtopt::device::Intensity;
+use emtopt::energy::EnergyModel;
+use emtopt::metrics::{fmt_cells, fmt_delay_us, fmt_energy_uj, fmt_pct, Table};
+use emtopt::runtime::{Artifacts, Evaluator};
+use emtopt::timing::TimingModel;
+use emtopt::util::cli::Args;
+use emtopt::Result;
+
+const USAGE: &str = "\
+emtopt — in-memory deep learning with EMT (Wang et al., 2021)
+
+USAGE: emtopt <command> [--flags]
+
+COMMANDS:
+  info      artifact + model inventory
+  train     train one (model, solution); cached under runs/cache
+  sweep     accuracy-vs-energy curve of a solution (Fig 9 primitive)
+  compare   ours vs SOTA at max accuracy (Fig 10/11 primitive)
+  serve     dynamic-batching inference router demo
+
+FLAGS (defaults in parentheses):
+  --artifacts DIR     (artifacts)
+  --config FILE       TOML config; flags override
+  --model KEY         (tiny_resnet_10)
+  --solution S        trad|a|ab|abc (ab)
+  --intensity I       weak|normal|strong (normal)
+  --pretrain N        (120)   --finetune N (120)
+  --lam F             (0.3)   --seed N (7)
+  --requests N        serve: request count (256)
+";
+
+fn main() {
+    let code = match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:?}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse()?;
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::load(std::path::Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    // flags override config
+    cfg.artifacts = args.str_or("artifacts", &cfg.artifacts);
+    cfg.model = args.str_or("model", &cfg.model);
+    cfg.solution = args.str_or("solution", &cfg.solution);
+    cfg.intensity = args.str_or("intensity", &cfg.intensity);
+    cfg.train.pretrain_steps = args.parse_or("pretrain", cfg.train.pretrain_steps)?;
+    cfg.train.finetune_steps = args.parse_or("finetune", cfg.train.finetune_steps)?;
+    cfg.train.lam = args.parse_or("lam", cfg.train.lam)?;
+    cfg.train.seed = args.parse_or("seed", cfg.train.seed)?;
+
+    match args.command.as_deref() {
+        Some("info") => info(&cfg),
+        Some("train") => train(&cfg),
+        Some("sweep") => sweep(&cfg),
+        Some("compare") => compare(&cfg),
+        Some("serve") => serve(&cfg, args.parse_or("requests", 256u32)?),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn info(cfg: &ExperimentConfig) -> Result<()> {
+    let arts = Artifacts::open(&cfg.artifacts)?;
+    println!("platform: {}", arts.runtime.platform());
+    println!(
+        "device: {} RTN states, B_a={}, B_w={}",
+        arts.manifest.device.num_states,
+        arts.manifest.device.act_bits,
+        arts.manifest.device.weight_bits
+    );
+    let mut t = Table::new("Models", &["key", "layers", "cells", "reads/inf"]);
+    for key in arts.manifest.model_keys() {
+        let m = arts.model(&key)?;
+        let cells: u64 = m.layer_meta.iter().map(|l| l.cells).sum();
+        let reads: u64 = m.layer_meta.iter().map(|l| l.reads()).sum();
+        t.row(vec![
+            key.clone(),
+            m.n_layers.to_string(),
+            fmt_cells(cells as f64),
+            format!("{:.1}M", reads as f64 / 1e6),
+        ]);
+    }
+    t.print();
+    println!("{} artifacts in {}", arts.manifest.artifacts.len(), cfg.artifacts);
+    Ok(())
+}
+
+fn train(cfg: &ExperimentConfig) -> Result<()> {
+    let arts = Artifacts::open(&cfg.artifacts)?;
+    let sol = cfg.solution_parsed()?;
+    let inten = cfg.intensity_parsed()?;
+    let mut tc = cfg.train_config()?;
+    tc.log_every = 20;
+    let trained = coordinator::train_solution(&arts, &cfg.model, cfg.suite(), sol, &tc)?;
+    let path = store::cache_path(
+        &cfg.model,
+        sol,
+        inten.name(),
+        tc.pretrain_steps,
+        tc.finetune_steps,
+    );
+    store::save(&trained, &path)?;
+    println!(
+        "trained {} [{}]: rho = {:?}",
+        cfg.model,
+        sol.name(),
+        trained
+            .rho()
+            .iter()
+            .map(|r| (r * 100.0).round() / 100.0)
+            .collect::<Vec<_>>()
+    );
+    println!("saved to {}", path.display());
+    Ok(())
+}
+
+fn sweep(cfg: &ExperimentConfig) -> Result<()> {
+    let arts = Artifacts::open(&cfg.artifacts)?;
+    let sol = cfg.solution_parsed()?;
+    let inten = cfg.intensity_parsed()?;
+    let tc = cfg.train_config()?;
+    let trained = store::train_cached(&arts, &cfg.model, cfg.suite(), sol, &tc)?;
+    let evaluator = Evaluator::new(&arts, &cfg.model, sol.decomposed())?;
+    let setup = coordinator::EvalSetup {
+        suite: cfg.suite(),
+        intensity: inten,
+        batches: cfg.eval.batches,
+        seed: cfg.eval.seed,
+    };
+    let paper = coordinator::experiments::paper_model_for(&cfg.model)
+        .ok_or_else(|| anyhow::anyhow!("no paper-scale mapping for {}", cfg.model))?;
+    let em = EnergyModel::new(arts.manifest.device.act_bits);
+    let points = coordinator::sweep_accuracy_vs_energy(
+        &evaluator,
+        &trained,
+        &setup,
+        &paper,
+        sol.method(),
+        &em,
+        &coordinator::experiments::default_rho_grid(),
+    )?;
+    let mut t = Table::new(
+        format!("{} [{}] accuracy vs energy", cfg.model, sol.name()),
+        &["rho-scale", "mean rho", "energy (uJ)", "top-1", "top-5"],
+    );
+    for p in points {
+        t.row(vec![
+            format!("{:.3}", p.rho_scale),
+            format!("{:.2}", p.mean_rho),
+            fmt_energy_uj(p.energy_uj),
+            fmt_pct(p.top1),
+            fmt_pct(p.top5),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn compare(cfg: &ExperimentConfig) -> Result<()> {
+    let arts = Artifacts::open(&cfg.artifacts)?;
+    let inten = cfg.intensity_parsed()?;
+    let tc = cfg.train_config()?;
+    let suite = cfg.suite();
+    let em = EnergyModel::new(arts.manifest.device.act_bits);
+    let tm = TimingModel::new(arts.manifest.device.act_bits);
+    let paper = coordinator::experiments::paper_model_for(&cfg.model)
+        .ok_or_else(|| anyhow::anyhow!("no paper-scale mapping for {}", cfg.model))?;
+    let setup = coordinator::EvalSetup {
+        suite,
+        intensity: inten,
+        batches: cfg.eval.batches,
+        seed: cfg.eval.seed,
+    };
+    let grid = coordinator::experiments::default_rho_grid();
+
+    let mut t = Table::new(
+        format!("{} @ {}: energy at max accuracy", cfg.model, cfg.intensity),
+        &["method", "top-1", "energy (uJ)", "cells", "delay (us)"],
+    );
+    let methods = [
+        (Method::BinarizedEncoding, Solution::Traditional),
+        (Method::WeightScaling, Solution::Traditional),
+        (Method::FluctuationCompensation, Solution::Traditional),
+        (Method::OursAB, Solution::AB),
+        (Method::OursABC, Solution::ABC),
+    ];
+    for (method, sol) in methods {
+        let trained = store::train_cached(&arts, &cfg.model, suite, sol, &tc)?;
+        let evaluator = Evaluator::new(&arts, &cfg.model, sol.decomposed())?;
+        let pts = coordinator::sweep_accuracy_vs_energy(
+            &evaluator, &trained, &setup, &paper, method, &em, &grid,
+        )?;
+        if let Some(best) = coordinator::experiments::best_accuracy_point(&pts) {
+            let cost = emtopt::baselines::hardware_cost(
+                method,
+                &paper,
+                best.mean_rho,
+                inten.factor() as f64,
+                &em,
+                &tm,
+            );
+            t.row(vec![
+                method.name().into(),
+                fmt_pct(best.top1),
+                fmt_energy_uj(best.energy_uj),
+                fmt_cells(cost.cells),
+                fmt_delay_us(cost.delay_us),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn serve(cfg: &ExperimentConfig, requests: u32) -> Result<()> {
+    let suite = cfg.suite();
+    let trained = {
+        let arts = Artifacts::open(&cfg.artifacts)?;
+        let tc = cfg.train_config()?;
+        store::train_cached(&arts, &cfg.model, suite, Solution::AB, &tc)?
+    };
+    let server_cfg = coordinator::router::ServerConfig {
+        artifacts_dir: cfg.artifacts.clone(),
+        intensity: cfg.intensity_parsed()?,
+        ..Default::default()
+    };
+    let (client, stats, handle) = coordinator::router::serve(trained, server_cfg)?;
+
+    let dataset = emtopt::data::Dataset::new(suite, 42);
+    let t0 = std::time::Instant::now();
+    let workers = 8usize;
+    let per = requests as usize / workers;
+    let oks: Vec<std::thread::JoinHandle<u32>> = (0..workers)
+        .map(|w| {
+            let c = client.clone();
+            let d = dataset.clone();
+            std::thread::spawn(move || {
+                let mut ok = 0;
+                for i in 0..per {
+                    let (x, _) =
+                        d.batch(emtopt::data::Split::Test, (w * per + i) as u64, 1);
+                    if c.infer(x).is_ok() {
+                        ok += 1;
+                    }
+                }
+                ok
+            })
+        })
+        .collect();
+    let ok: u32 = oks.into_iter().map(|h| h.join().unwrap_or(0)).sum();
+    let dt = t0.elapsed();
+    println!(
+        "{ok}/{requests} ok in {:.2}s  ({:.0} req/s, mean queue {:.1} ms, batch fill {:.0}%)",
+        dt.as_secs_f64(),
+        requests as f64 / dt.as_secs_f64(),
+        stats.mean_queue_us() / 1000.0,
+        stats.mean_batch_fill(16) * 100.0,
+    );
+    drop(client);
+    handle.join().ok();
+    Ok(())
+}
+
+// Intensity is referenced in type signatures above; keep the import honest.
+#[allow(dead_code)]
+fn _unused(_: Intensity, _: Suite, _: TrainConfig) {}

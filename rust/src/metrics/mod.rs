@@ -1,0 +1,138 @@
+//! Result reporting: aligned table printing + experiment records.
+
+/// A printable results table (paper-style).
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row.iter()) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("## {}\n", self.title));
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for (i, (c, w)) in cells.iter().zip(widths.iter()).enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{c:<w$}"));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Human-readable energy (uJ with magnitude-aware precision, paper style:
+/// "4.1", "36", "23k").
+pub fn fmt_energy_uj(uj: f64) -> String {
+    if uj >= 10_000.0 {
+        format!("{:.0}k", uj / 1000.0)
+    } else if uj >= 100.0 {
+        format!("{uj:.0}")
+    } else if uj >= 10.0 {
+        format!("{uj:.0}")
+    } else {
+        format!("{uj:.1}")
+    }
+}
+
+/// Cell count, paper style ("15M", "3.2M").
+pub fn fmt_cells(cells: f64) -> String {
+    let m = cells / 1e6;
+    if m >= 10.0 {
+        format!("{m:.0}M")
+    } else {
+        format!("{m:.1}M")
+    }
+}
+
+/// Latency in us, paper style ("2.8", "14", "151").
+pub fn fmt_delay_us(us: f64) -> String {
+    if us >= 100.0 {
+        format!("{us:.0}")
+    } else if us >= 10.0 {
+        format!("{us:.0}")
+    } else {
+        format!("{us:.1}")
+    }
+}
+
+/// Percentage with one decimal.
+pub fn fmt_pct(frac: f64) -> String {
+    format!("{:.1}%", frac * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["Method", "Energy (uJ)"]);
+        t.row(vec!["Ours (A+B)".into(), "36".into()]);
+        t.row(vec!["Binarized".into(), "378".into()]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        assert!(s.contains("Ours (A+B)"));
+        let lines: Vec<&str> = s.lines().collect();
+        // header + separator + 2 rows + title
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only one".into()]);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_energy_uj(4.1234), "4.1");
+        assert_eq!(fmt_energy_uj(36.2), "36");
+        assert_eq!(fmt_energy_uj(23_000.0), "23k");
+        assert_eq!(fmt_cells(15_000_000.0), "15M");
+        assert_eq!(fmt_cells(3_200_000.0), "3.2M");
+        assert_eq!(fmt_delay_us(2.8), "2.8");
+        assert_eq!(fmt_delay_us(151.0), "151");
+        assert_eq!(fmt_pct(0.936), "93.6%");
+    }
+}

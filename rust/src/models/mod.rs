@@ -1,0 +1,119 @@
+//! Model descriptions.
+//!
+//! Two families:
+//!  * **paper-scale tables** ([`paper_scale`]): layer-by-layer descriptions
+//!    of the exact evaluation models of the paper (VGG-16, ResNet-18/34,
+//!    MobileNet at CIFAR-10 / ImageNet resolutions).  These drive the
+//!    energy / #cells / delay accounting of Tables 1–2 (the paper reports
+//!    these from an analytical model too, DESIGN.md §2).
+//!  * **tiny zoo** (from `artifacts/manifest.json`): the scaled-down
+//!    trainable stand-ins whose accuracy experiments run through the AOT
+//!    artifacts.
+
+pub mod paper_scale;
+
+/// Static metadata of one crossbar-mapped layer.
+///
+/// * `cells`  — number of EMT cells (== number of weights; one bipolar
+///   multi-level cell per weight in our scheme),
+/// * `fan_in` — crossbar rows contributing to one output (K of the MAC),
+/// * `alpha`  — reads of each weight per inference (conv: output area),
+/// * `out_features` — columns (ADC conversions per read cycle).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerMeta {
+    pub kind: String,
+    pub cells: u64,
+    pub fan_in: u64,
+    pub alpha: u64,
+    pub out_features: u64,
+}
+
+impl LayerMeta {
+    pub fn conv(k: u64, cin: u64, cout: u64, out_hw: u64) -> Self {
+        LayerMeta {
+            kind: "conv".into(),
+            cells: k * k * cin * cout,
+            fan_in: k * k * cin,
+            alpha: out_hw * out_hw,
+            out_features: cout,
+        }
+    }
+
+    pub fn dwconv(k: u64, c: u64, out_hw: u64) -> Self {
+        LayerMeta {
+            kind: "dwconv".into(),
+            cells: k * k * c,
+            fan_in: k * k,
+            alpha: out_hw * out_hw,
+            out_features: c,
+        }
+    }
+
+    pub fn dense(d_in: u64, d_out: u64) -> Self {
+        LayerMeta {
+            kind: "dense".into(),
+            cells: d_in * d_out,
+            fan_in: d_in,
+            alpha: 1,
+            out_features: d_out,
+        }
+    }
+
+    /// Total weight reads per inference.
+    pub fn reads(&self) -> u64 {
+        self.cells * self.alpha
+    }
+}
+
+/// A named stack of crossbar layers.
+#[derive(Clone, Debug)]
+pub struct ModelDesc {
+    pub name: String,
+    pub layers: Vec<LayerMeta>,
+}
+
+impl ModelDesc {
+    pub fn total_cells(&self) -> u64 {
+        self.layers.iter().map(|l| l.cells).sum()
+    }
+
+    pub fn total_reads(&self) -> u64 {
+        self.layers.iter().map(|l| l.reads()).sum()
+    }
+
+    /// Total read cycles per inference (each output position of each layer
+    /// is one crossbar read cycle; tiles of one layer fire in parallel).
+    pub fn total_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.alpha).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_meta() {
+        let m = LayerMeta::conv(3, 64, 128, 16);
+        assert_eq!(m.cells, 3 * 3 * 64 * 128);
+        assert_eq!(m.fan_in, 576);
+        assert_eq!(m.alpha, 256);
+        assert_eq!(m.reads(), m.cells * 256);
+    }
+
+    #[test]
+    fn dwconv_meta() {
+        let m = LayerMeta::dwconv(3, 64, 16);
+        assert_eq!(m.cells, 9 * 64);
+        assert_eq!(m.fan_in, 9); // the paper's depthwise observation: only
+                                 // nine rows per read -> peripheral-bound
+        assert_eq!(m.out_features, 64);
+    }
+
+    #[test]
+    fn dense_meta() {
+        let m = LayerMeta::dense(512, 10);
+        assert_eq!(m.cells, 5120);
+        assert_eq!(m.alpha, 1);
+    }
+}

@@ -1,0 +1,242 @@
+//! Paper-scale model layer tables: VGG-16, ResNet-18/34, MobileNet-v1 at
+//! CIFAR-10 (32x32) and ImageNet (224x224) resolutions.
+//!
+//! Cell counts reproduce the paper's Tables 1–2 "#Cells" column:
+//!   VGG-16 CIFAR ~15M, ResNet-18 CIFAR ~11M, MobileNet CIFAR ~3.2M,
+//!   ResNet-18 ImageNet ~12M, ResNet-34 ImageNet ~22M
+//! (one analog multi-level cell per weight; binarized encoding multiplies
+//! by its bit count — see `baselines`).
+
+use super::{LayerMeta, ModelDesc};
+
+/// Dataset resolution for the paper-scale tables.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Resolution {
+    /// 32x32, 10 classes.
+    Cifar,
+    /// 224x224, 1000 classes.
+    ImageNet,
+}
+
+/// VGG-16 (13 conv + 2 dense; CIFAR variant has a 512-d head).
+pub fn vgg16(res: Resolution) -> ModelDesc {
+    let mut layers = Vec::new();
+    let (mut hw, classes) = match res {
+        Resolution::Cifar => (32u64, 10u64),
+        Resolution::ImageNet => (224, 1000),
+    };
+    let cfg: &[(u64, u64)] = &[
+        (3, 64),
+        (64, 64), // pool
+        (64, 128),
+        (128, 128), // pool
+        (128, 256),
+        (256, 256),
+        (256, 256), // pool
+        (256, 512),
+        (512, 512),
+        (512, 512), // pool
+        (512, 512),
+        (512, 512),
+        (512, 512), // pool
+    ];
+    let pool_after = [1usize, 3, 6, 9, 12];
+    for (i, &(cin, cout)) in cfg.iter().enumerate() {
+        layers.push(LayerMeta::conv(3, cin, cout, hw));
+        if pool_after.contains(&i) {
+            hw /= 2;
+        }
+    }
+    match res {
+        Resolution::Cifar => {
+            layers.push(LayerMeta::dense(512, 512));
+            layers.push(LayerMeta::dense(512, classes));
+        }
+        Resolution::ImageNet => {
+            layers.push(LayerMeta::dense(512 * 7 * 7, 4096));
+            layers.push(LayerMeta::dense(4096, 4096));
+            layers.push(LayerMeta::dense(4096, classes));
+        }
+    }
+    ModelDesc {
+        name: format!("vgg16-{res:?}").to_lowercase(),
+        layers,
+    }
+}
+
+/// ResNet-18/34 (basic blocks).
+pub fn resnet(depth: u32, res: Resolution) -> ModelDesc {
+    let blocks: &[u64] = match depth {
+        18 => &[2, 2, 2, 2],
+        34 => &[3, 4, 6, 3],
+        other => panic!("unsupported resnet depth {other}"),
+    };
+    let mut layers = Vec::new();
+    let (mut hw, classes) = match res {
+        Resolution::Cifar => (32u64, 10u64),
+        Resolution::ImageNet => (224, 1000),
+    };
+    // stem
+    match res {
+        Resolution::Cifar => {
+            layers.push(LayerMeta::conv(3, 3, 64, hw));
+        }
+        Resolution::ImageNet => {
+            hw /= 2; // 7x7 stride-2 conv
+            layers.push(LayerMeta::conv(7, 3, 64, hw));
+            hw /= 2; // 3x3 max-pool stride 2
+        }
+    }
+    let mut cin = 64u64;
+    for (stage, &reps) in blocks.iter().enumerate() {
+        let cout = 64 << stage;
+        for r in 0..reps {
+            let stride = if stage > 0 && r == 0 { 2 } else { 1 };
+            if stride == 2 {
+                hw /= 2;
+            }
+            layers.push(LayerMeta::conv(3, cin, cout, hw));
+            layers.push(LayerMeta::conv(3, cout, cout, hw));
+            if stride == 2 || cin != cout {
+                layers.push(LayerMeta::conv(1, cin, cout, hw)); // projection
+            }
+            cin = cout;
+        }
+    }
+    layers.push(LayerMeta::dense(512, classes));
+    ModelDesc {
+        name: format!("resnet{depth}-{res:?}").to_lowercase(),
+        layers,
+    }
+}
+
+/// MobileNet-v1 width 1.0.
+pub fn mobilenet(res: Resolution) -> ModelDesc {
+    let mut layers = Vec::new();
+    let (mut hw, classes) = match res {
+        Resolution::Cifar => (32u64, 10u64),
+        Resolution::ImageNet => (224, 1000),
+    };
+    // stem conv stride 2 (stride 1 on CIFAR to keep spatial detail)
+    if res == Resolution::ImageNet {
+        hw /= 2;
+    }
+    layers.push(LayerMeta::conv(3, 3, 32, hw));
+    // (cin, cout, stride) of the 13 depthwise-separable blocks
+    let cfg: &[(u64, u64, u64)] = &[
+        (32, 64, 1),
+        (64, 128, 2),
+        (128, 128, 1),
+        (128, 256, 2),
+        (256, 256, 1),
+        (256, 512, 2),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 512, 1),
+        (512, 1024, 2),
+        (1024, 1024, 1),
+    ];
+    for &(cin, cout, stride) in cfg {
+        if stride == 2 {
+            hw /= 2;
+        }
+        layers.push(LayerMeta::dwconv(3, cin, hw));
+        layers.push(LayerMeta::conv(1, cin, cout, hw));
+    }
+    layers.push(LayerMeta::dense(1024, classes));
+    ModelDesc {
+        name: format!("mobilenet-{res:?}").to_lowercase(),
+        layers,
+    }
+}
+
+/// The paper's evaluation matrix: (display name, model) per suite.
+pub fn table1_models() -> Vec<(&'static str, ModelDesc)> {
+    vec![
+        ("VGG-16", vgg16(Resolution::Cifar)),
+        ("ResNet-18", resnet(18, Resolution::Cifar)),
+        ("MobileNet", mobilenet(Resolution::Cifar)),
+    ]
+}
+
+pub fn table2_models() -> Vec<(&'static str, ModelDesc)> {
+    vec![
+        ("ResNet-18", resnet(18, Resolution::ImageNet)),
+        ("ResNet-34", resnet(34, Resolution::ImageNet)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_cifar_cells_match_paper() {
+        // paper Table 1: 15M cells
+        let m = vgg16(Resolution::Cifar);
+        let cells = m.total_cells();
+        assert!(
+            (14_000_000..16_000_000).contains(&cells),
+            "vgg16 cells {cells}"
+        );
+    }
+
+    #[test]
+    fn resnet18_cifar_cells_match_paper() {
+        // paper Table 1: 11M cells
+        let cells = resnet(18, Resolution::Cifar).total_cells();
+        assert!(
+            (10_500_000..11_900_000).contains(&cells),
+            "resnet18 cells {cells}"
+        );
+    }
+
+    #[test]
+    fn mobilenet_cifar_cells_match_paper() {
+        // paper Table 1: 3.2M cells
+        let cells = mobilenet(Resolution::Cifar).total_cells();
+        assert!(
+            (3_000_000..3_500_000).contains(&cells),
+            "mobilenet cells {cells}"
+        );
+    }
+
+    #[test]
+    fn resnet_imagenet_cells_match_paper() {
+        // paper Table 2: 12M / 22M cells
+        let r18 = resnet(18, Resolution::ImageNet).total_cells();
+        let r34 = resnet(34, Resolution::ImageNet).total_cells();
+        assert!((11_000_000..12_500_000).contains(&r18), "r18 {r18}");
+        assert!((21_000_000..23_000_000).contains(&r34), "r34 {r34}");
+    }
+
+    #[test]
+    fn cifar_delay_cycles_match_paper_ratio() {
+        // paper Table 1 delay: VGG-16 2.8us, ResNet-18 6.8us at 1ns/read:
+        // cycle counts must land near 2800 / 6800.
+        let vgg = vgg16(Resolution::Cifar).total_cycles();
+        let r18 = resnet(18, Resolution::Cifar).total_cycles();
+        assert!((2_300..3_300).contains(&vgg), "vgg cycles {vgg}");
+        assert!((5_800..7_800).contains(&r18), "r18 cycles {r18}");
+    }
+
+    #[test]
+    fn mobilenet_has_depthwise_layers() {
+        let m = mobilenet(Resolution::Cifar);
+        assert!(m.layers.iter().any(|l| l.kind == "dwconv"));
+        // depthwise fan-in is 9 -> peripheral-bound reads
+        for l in m.layers.iter().filter(|l| l.kind == "dwconv") {
+            assert_eq!(l.fan_in, 9);
+        }
+    }
+
+    #[test]
+    fn resnet34_deeper_than_18() {
+        assert!(
+            resnet(34, Resolution::ImageNet).layers.len()
+                > resnet(18, Resolution::ImageNet).layers.len()
+        );
+    }
+}

@@ -1,0 +1,130 @@
+//! Quantisers — Rust mirror of `python/compile/quant.py`.
+//!
+//! Weights: signed symmetric B_w-bit levels (programmed conductances).
+//! Activations: unsigned B_a-bit levels (DAC input); decomposed mode splits
+//! the level into bit-planes (LSB first).
+
+/// Per-tensor full scale: max |w| (floored to avoid division by zero).
+pub fn weight_scale(w: &[f32]) -> f32 {
+    w.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-6)
+}
+
+/// Symmetric signed quantisation to `bits`. Returns integer levels in
+/// [-(2^(bits-1)-1), 2^(bits-1)-1] together with the scale.
+pub fn quant_weight(w: &[f32], bits: u32) -> (Vec<i32>, f32) {
+    let levels = (1i32 << (bits - 1)) - 1;
+    let s = weight_scale(w);
+    let q = w
+        .iter()
+        .map(|&v| {
+            let t = (v / s).clamp(-1.0, 1.0) * levels as f32;
+            t.round() as i32
+        })
+        .collect();
+    (q, s)
+}
+
+/// Dequantise weight levels.
+pub fn dequant_weight(q: &[i32], scale: f32, bits: u32) -> Vec<f32> {
+    let levels = ((1i32 << (bits - 1)) - 1) as f32;
+    q.iter().map(|&v| v as f32 / levels * scale).collect()
+}
+
+/// Unsigned activation quantisation to `bits` with a dynamic per-tensor
+/// scale. Returns (integer levels, scale): `x ≈ level * scale`.
+pub fn quant_act(x: &[f32], bits: u32) -> (Vec<u32>, f32) {
+    let n = ((1u32 << bits) - 1) as f32;
+    let max = x.iter().fold(0.0f32, |m, &v| m.max(v)).max(1e-6);
+    let s = max / n;
+    let q = x
+        .iter()
+        .map(|&v| ((v / s).round().clamp(0.0, n)) as u32)
+        .collect();
+    (q, s)
+}
+
+/// Bit-plane decomposition of one activation level (LSB first).
+#[inline]
+pub fn bit_plane(level: u32, p: u32) -> u32 {
+    (level >> p) & 1
+}
+
+/// Number of set bit-planes — the decomposed-mode read count (eq. 19).
+#[inline]
+pub fn popcount(level: u32) -> u32 {
+    level.count_ones()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn randvec(seed: u64, n: usize) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal()).collect()
+    }
+
+    #[test]
+    fn weight_roundtrip_error_bounded() {
+        for bits in [2u32, 4, 6, 8] {
+            let w = randvec(bits as u64, 512);
+            let (q, s) = quant_weight(&w, bits);
+            let deq = dequant_weight(&q, s, bits);
+            let step = s / ((1i32 << (bits - 1)) - 1) as f32;
+            for (a, b) in w.iter().zip(deq.iter()) {
+                assert!((a - b).abs() <= step / 2.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn weight_levels_in_range() {
+        let w = randvec(1, 256);
+        let (q, _) = quant_weight(&w, 8);
+        assert!(q.iter().all(|&v| (-127..=127).contains(&v)));
+    }
+
+    #[test]
+    fn act_levels_in_range() {
+        let x: Vec<f32> = randvec(2, 256).iter().map(|v| v.abs()).collect();
+        let (q, s) = quant_act(&x, 4);
+        assert!(q.iter().all(|&v| v <= 15));
+        for (lv, orig) in q.iter().zip(x.iter()) {
+            assert!((*lv as f32 * s - orig).abs() <= s / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn act_scale_hits_full_range() {
+        let x = vec![0.0, 0.25, 0.5, 1.0];
+        let (q, _) = quant_act(&x, 2);
+        assert_eq!(q, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn bit_planes_recompose() {
+        for level in 0u32..16 {
+            let recomposed: u32 = (0..4).map(|p| bit_plane(level, p) << p).sum();
+            assert_eq!(recomposed, level);
+        }
+    }
+
+    #[test]
+    fn popcount_le_level() {
+        for level in 0u32..256 {
+            assert!(popcount(level) <= level.max(1));
+        }
+    }
+
+    #[test]
+    fn degenerate_all_zero() {
+        let w = vec![0.0f32; 16];
+        let (q, s) = quant_weight(&w, 8);
+        assert!(q.iter().all(|&v| v == 0));
+        assert!(s > 0.0);
+        let (qa, sa) = quant_act(&w, 4);
+        assert!(qa.iter().all(|&v| v == 0));
+        assert!(sa > 0.0);
+    }
+}

@@ -1,0 +1,180 @@
+//! Deterministic, dependency-free RNG for the simulation substrate.
+//!
+//! We use SplitMix64 for seeding and a xoshiro256++-style generator for the
+//! hot path.  Cross-platform deterministic: every experiment in
+//! EXPERIMENTS.md is reproducible from its seed.
+
+/// SplitMix64 step — used for seeding and cheap stateless hashing.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Fast counter-based hash: maps (seed, index) to a u64. Stateless, so
+/// parallel loops can draw independent streams without shared state.
+#[inline]
+pub fn hash2(seed: u64, idx: u64) -> u64 {
+    let mut s = seed ^ idx.wrapping_mul(0xA24BAED4963EE407);
+    splitmix64(&mut s)
+}
+
+/// xoshiro256++ PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via SplitMix64 (never produces the all-zero state).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        // take the top 24 bits for an unbiased float mantissa
+        ((self.next_u64() >> 40) as f32) * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1) f64.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64) * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u32) -> u32 {
+        // Lemire's unbiased bounded sampling (single pass is fine here:
+        // the modulo bias of (2^32 % n)/2^32 is < 2^-24 for our n <= 256,
+        // far below any statistic we test — but do it right anyway).
+        let mut x = self.next_u64() as u32;
+        let mut m = (x as u64) * (n as u64);
+        let mut lo = m as u32;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64() as u32;
+                m = (x as u64) * (n as u64);
+                lo = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Standard normal via Box–Muller (cached second value not kept —
+    /// callers in the hot path use `normal_pair`).
+    #[inline]
+    pub fn normal(&mut self) -> f32 {
+        self.normal_pair().0
+    }
+
+    /// Two independent standard normals from one Box–Muller transform.
+    #[inline]
+    pub fn normal_pair(&mut self) -> (f32, f32) {
+        let u1 = (self.next_f64()).max(1e-12);
+        let u2 = self.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        ((r * c) as f32, (r * s) as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        assert_ne!(Rng::new(1).next_u64(), Rng::new(2).next_u64());
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Rng::new(42);
+        let n = 100_000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            let x = r.next_f32();
+            assert!((0.0..1.0).contains(&x));
+            sum += x as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_is_bounded_and_covers() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 7];
+        for _ in 0..10_000 {
+            let v = r.below(7) as usize;
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(9);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = r.normal() as f64;
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn hash2_decorrelates() {
+        let a = hash2(1, 0);
+        let b = hash2(1, 1);
+        let c = hash2(2, 0);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,236 @@
+//! `artifacts/manifest.json` schema — written by `python/compile/aot.py`,
+//! parsed with the in-crate JSON parser (`util::json`).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::models::LayerMeta;
+use crate::util::json::Json;
+use crate::Result;
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub device: DeviceMeta,
+    pub batches: Batches,
+    pub models: HashMap<String, ModelInfo>,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+#[derive(Clone, Debug)]
+pub struct DeviceMeta {
+    pub num_states: usize,
+    pub k_f: f32,
+    pub intensity: HashMap<String, f32>,
+    pub act_bits: u32,
+    pub weight_bits: u32,
+    pub e0: f32,
+}
+
+#[derive(Clone, Debug)]
+pub struct Batches {
+    pub train: usize,
+    pub eval: usize,
+    pub predict: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub model: String,
+    pub num_classes: usize,
+    pub n_layers: usize,
+    pub layer_meta: Vec<LayerMeta>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub model: String,
+    pub kind: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            shape,
+            dtype: j.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+fn layer_meta_from_json(j: &Json) -> Result<LayerMeta> {
+    Ok(LayerMeta {
+        kind: j.get("kind")?.as_str()?.to_string(),
+        cells: j.get("cells")?.as_u64()?,
+        fan_in: j.get("fan_in")?.as_u64()?,
+        alpha: j.get("alpha")?.as_u64()?,
+        out_features: j.get("out_features")?.as_u64()?,
+    })
+}
+
+impl Manifest {
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+
+        let d = j.get("device")?;
+        let mut intensity = HashMap::new();
+        for (k, v) in d.get("intensity")?.as_obj()? {
+            intensity.insert(k.clone(), v.as_f64()? as f32);
+        }
+        let device = DeviceMeta {
+            num_states: d.get("num_states")?.as_usize()?,
+            k_f: d.get("k_f")?.as_f64()? as f32,
+            intensity,
+            act_bits: d.get("act_bits")?.as_u64()? as u32,
+            weight_bits: d.get("weight_bits")?.as_u64()? as u32,
+            e0: d.get("e0")?.as_f64()? as f32,
+        };
+
+        let b = j.get("batches")?;
+        let batches = Batches {
+            train: b.get("train")?.as_usize()?,
+            eval: b.get("eval")?.as_usize()?,
+            predict: b.get("predict")?.as_usize()?,
+        };
+
+        let mut models = HashMap::new();
+        for (key, m) in j.get("models")?.as_obj()? {
+            let layer_meta = m
+                .get("layer_meta")?
+                .as_arr()?
+                .iter()
+                .map(layer_meta_from_json)
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                key.clone(),
+                ModelInfo {
+                    model: m.get("model")?.as_str()?.to_string(),
+                    num_classes: m.get("num_classes")?.as_usize()?,
+                    n_layers: m.get("n_layers")?.as_usize()?,
+                    layer_meta,
+                },
+            );
+        }
+
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts")?.as_arr()? {
+            let inputs = a
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactInfo {
+                name: a.get("name")?.as_str()?.to_string(),
+                model: a.get("model")?.as_str()?.to_string(),
+                kind: a.get("kind")?.as_str()?.to_string(),
+                file: a.get("file")?.as_str()?.to_string(),
+                inputs,
+                outputs,
+            });
+        }
+
+        Ok(Manifest {
+            device,
+            batches,
+            models,
+            artifacts,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_json_text(&text)
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn model(&self, key: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("model {key:?} not in manifest"))
+    }
+
+    /// Keys of all models in the manifest (sorted for determinism).
+    pub fn model_keys(&self) -> Vec<String> {
+        let mut keys: Vec<String> = self.models.keys().cloned().collect();
+        keys.sort();
+        keys
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "device": {"num_states": 4, "k_f": 0.04,
+                   "intensity": {"weak": 0.5, "normal": 1.0, "strong": 2.0},
+                   "act_bits": 5, "weight_bits": 8, "e0": 1.0},
+        "batches": {"train": 64, "eval": 256, "predict": 16},
+        "models": {"mlp_10": {"model": "mlp", "num_classes": 10, "n_layers": 3,
+            "layer_meta": [{"kind": "dense", "cells": 786432, "fan_in": 3072,
+                            "alpha": 1, "out_features": 256}]}},
+        "artifacts": [{"name": "mlp_10_eval", "model": "mlp_10", "kind": "eval",
+            "file": "mlp_10_eval.hlo.txt",
+            "inputs": [{"name": "param0", "shape": [3072, 256], "dtype": "f32"}],
+            "outputs": [{"name": "out0", "shape": [1], "dtype": "f32"}]}]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json_text(SAMPLE).unwrap();
+        assert_eq!(m.device.act_bits, 5);
+        assert_eq!(m.device.intensity["strong"], 2.0);
+        assert_eq!(m.batches.eval, 256);
+        assert_eq!(m.model("mlp_10").unwrap().n_layers, 3);
+        let a = m.artifact("mlp_10_eval").unwrap();
+        assert_eq!(a.inputs[0].numel(), 3072 * 256);
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn layer_meta_reads() {
+        let m = Manifest::from_json_text(SAMPLE).unwrap();
+        let meta = &m.model("mlp_10").unwrap().layer_meta[0];
+        assert_eq!(meta.reads(), 786432);
+    }
+
+    #[test]
+    fn model_keys_sorted() {
+        let m = Manifest::from_json_text(SAMPLE).unwrap();
+        assert_eq!(m.model_keys(), vec!["mlp_10".to_string()]);
+    }
+}

@@ -1,0 +1,183 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin).  The interchange format
+//! is HLO **text** — xla_extension 0.5.1 rejects jax>=0.5 serialized
+//! protos (64-bit instruction ids); the text parser reassigns ids.
+//! Pattern adapted from /opt/xla-example/load_hlo/.
+
+pub mod manifest;
+pub mod session;
+
+pub use manifest::{ArtifactInfo, Manifest, ModelInfo, TensorSpec};
+pub use session::{EvalResult, Evaluator, Predictor, TrainOutput, Trainer};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::Result;
+
+/// Shared PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load_hlo(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))
+    }
+}
+
+/// Artifact store: manifest + lazily compiled executables.
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    pub runtime: Runtime,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Artifacts {
+    /// Open an artifact directory produced by `make artifacts`.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        Ok(Artifacts {
+            dir,
+            manifest,
+            runtime: Runtime::cpu()?,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Default artifact dir: $EMTOPT_ARTIFACTS or ./artifacts.
+    pub fn open_default() -> Result<Self> {
+        let dir =
+            std::env::var("EMTOPT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(dir)
+    }
+
+    /// Get (compiling on first use) the executable of artifact `name`.
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let info = self.manifest.artifact(name)?.clone();
+            let exe = self.runtime.load_hlo(&self.dir.join(&info.file))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    pub fn model(&self, key: &str) -> Result<&ModelInfo> {
+        self.manifest.model(key)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// literal helpers
+// ---------------------------------------------------------------------------
+
+/// Build an f32 literal of the given shape.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product();
+    anyhow::ensure!(data.len() == numel, "shape/data mismatch");
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product();
+    anyhow::ensure!(data.len() == numel, "shape/data mismatch");
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+/// (1,)-shaped f32 literal (the flat-signature scalar convention).
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::vec1(&[v])
+}
+
+/// (1,)-shaped i32 literal.
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::vec1(&[v])
+}
+
+/// Execute an executable on literal args and unpack the tuple of outputs.
+/// Accepts owned or borrowed literals (`&[Literal]` or `&[&Literal]`).
+pub fn execute<L: std::borrow::Borrow<xla::Literal>>(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[L],
+) -> Result<Vec<xla::Literal>> {
+    let result = exe
+        .execute::<L>(args)
+        .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+    lit.to_tuple().map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+/// Read an f32 literal back into a Vec.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+// ---------------------------------------------------------------------------
+// rho parameterisation helpers (mirror python models.rho_of)
+// ---------------------------------------------------------------------------
+
+/// rho = clip(softplus(raw), 0.05, 100)
+pub fn rho_of_raw(raw: f32) -> f32 {
+    let sp = if raw > 30.0 { raw } else { (raw.exp() + 1.0).ln() };
+    sp.clamp(0.05, 100.0)
+}
+
+/// Inverse of `rho_of_raw` on its open interval: raw = ln(e^rho - 1).
+pub fn raw_of_rho(rho: f32) -> f32 {
+    let r = rho.clamp(0.0501, 99.9);
+    if r > 30.0 {
+        r
+    } else {
+        (r.exp() - 1.0).ln()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rho_raw_roundtrip() {
+        for rho in [0.06f32, 0.5, 1.0, 4.0, 20.0, 90.0] {
+            let raw = raw_of_rho(rho);
+            let back = rho_of_raw(raw);
+            assert!((back - rho).abs() / rho < 1e-4, "{rho} -> {raw} -> {back}");
+        }
+    }
+
+    #[test]
+    fn rho_clipped() {
+        assert_eq!(rho_of_raw(-100.0), 0.05);
+        assert_eq!(rho_of_raw(1000.0), 100.0);
+    }
+}

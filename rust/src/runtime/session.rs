@@ -1,0 +1,359 @@
+//! Train / eval / predict sessions over the AOT artifacts.
+//!
+//! The flat argument convention is defined in `python/compile/model.py`
+//! (docstring) and mirrored here:
+//!
+//! ```text
+//! train  in:  params(2L) rho_raw m(2L) v(2L) m_rho v_rho
+//!             step x y seed intensity lam rho_gate noise_gate
+//! train  out: params'(2L) rho_raw' m'(2L) v'(2L) m_rho' v_rho'
+//!             loss acc energy
+//! eval   in:  params(2L) rho_raw x y seed intensity noise_gate
+//! eval   out: top1 top5 loss_sum energy
+//! predict in: params(2L) rho_raw x seed intensity noise_gate
+//! predict out: logits
+//! ```
+
+use super::{execute, lit_f32, lit_i32, scalar_f32, scalar_i32, to_vec_f32, Artifacts};
+use crate::data::IMG_LEN;
+use crate::Result;
+
+/// Gate/knob inputs of one train step (solution selection, Fig 4).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainKnobs {
+    pub seed: i32,
+    pub intensity: f32,
+    pub lam: f32,
+    pub rho_gate: f32,
+    pub noise_gate: f32,
+}
+
+impl TrainKnobs {
+    /// Traditional optimizer: no noise awareness, fixed rho.
+    pub fn traditional() -> Self {
+        TrainKnobs {
+            seed: 0,
+            intensity: 1.0,
+            lam: 0.0,
+            rho_gate: 0.0,
+            noise_gate: 0.0,
+        }
+    }
+
+    /// Solution A: device-enhanced dataset (noise-aware training).
+    pub fn solution_a(intensity: f32) -> Self {
+        TrainKnobs {
+            seed: 0,
+            intensity,
+            lam: 0.0,
+            rho_gate: 0.0,
+            noise_gate: 1.0,
+        }
+    }
+
+    /// Solutions A+B / A+B+C: + energy regularization with trainable rho.
+    pub fn solution_ab(intensity: f32, lam: f32) -> Self {
+        TrainKnobs {
+            seed: 0,
+            intensity,
+            lam,
+            rho_gate: 1.0,
+            noise_gate: 1.0,
+        }
+    }
+}
+
+/// Scalar outputs of one train step.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainOutput {
+    pub loss: f32,
+    pub acc: f32,
+    /// Normalised analog read energy of the batch (device units).
+    pub energy: f32,
+}
+
+/// Owns the train executable + optimizer state for one model.
+pub struct Trainer {
+    exe: xla::PjRtLoadedExecutable,
+    pub model_key: String,
+    pub batch: usize,
+    pub n_layers: usize,
+    n_params: usize,
+    params: Vec<xla::Literal>,
+    rho_raw: Vec<f32>,
+    m: Vec<xla::Literal>,
+    v: Vec<xla::Literal>,
+    m_rho: Vec<f32>,
+    v_rho: Vec<f32>,
+    pub step: u32,
+}
+
+impl Trainer {
+    /// Compile the train artifact and initialise parameters through the
+    /// model's `init` artifact (He init, identical to the Python tests).
+    pub fn new(arts: &Artifacts, model_key: &str, decomposed: bool, seed: i32) -> Result<Self> {
+        let info = arts.model(model_key)?.clone();
+        let kind = if decomposed { "train_decomp" } else { "train" };
+        let train_info = arts.manifest.artifact(&format!("{model_key}_{kind}"))?;
+        let exe = arts.runtime.load_hlo(&arts.dir.join(&train_info.file))?;
+
+        let init_info = arts.manifest.artifact(&format!("{model_key}_init"))?;
+        let init_exe = arts.runtime.load_hlo(&arts.dir.join(&init_info.file))?;
+        let mut outs = execute(&init_exe, &[scalar_i32(seed)])?;
+        let rho_lit = outs.pop().ok_or_else(|| anyhow::anyhow!("empty init output"))?;
+        let rho_raw = to_vec_f32(&rho_lit)?;
+        let params = outs;
+        let n_params = params.len();
+        anyhow::ensure!(n_params == 2 * info.n_layers, "init output mismatch");
+
+        // zero optimizer state, shaped like params
+        let mut m = Vec::with_capacity(n_params);
+        let mut v = Vec::with_capacity(n_params);
+        for (i, spec) in train_info.inputs.iter().enumerate().take(n_params) {
+            let _ = i;
+            let zeros = vec![0.0f32; spec.numel()];
+            m.push(lit_f32(&zeros, &spec.shape)?);
+            v.push(lit_f32(&zeros, &spec.shape)?);
+        }
+        let batch = arts.manifest.batches.train;
+        Ok(Trainer {
+            exe,
+            model_key: model_key.to_string(),
+            batch,
+            n_layers: info.n_layers,
+            n_params,
+            params,
+            rho_raw,
+            m,
+            v,
+            m_rho: vec![0.0; info.n_layers],
+            v_rho: vec![0.0; info.n_layers],
+            step: 0,
+        })
+    }
+
+    /// Run one train step on a host batch (x: NHWC flattened, y labels).
+    pub fn step(&mut self, x: &[f32], y: &[i32], knobs: &TrainKnobs) -> Result<TrainOutput> {
+        anyhow::ensure!(x.len() == self.batch * IMG_LEN, "bad x batch");
+        anyhow::ensure!(y.len() == self.batch, "bad y batch");
+        let n = self.n_params;
+        let l = self.n_layers;
+
+        let rho_lit = lit_f32(&self.rho_raw, &[l])?;
+        let m_rho_lit = lit_f32(&self.m_rho, &[l])?;
+        let v_rho_lit = lit_f32(&self.v_rho, &[l])?;
+        let step_lit = scalar_f32(self.step as f32);
+        let x_lit = lit_f32(x, &[self.batch, 32, 32, 3])?;
+        let y_lit = lit_i32(y, &[self.batch])?;
+        let seed_lit = scalar_i32(knobs.seed);
+        let inten_lit = scalar_f32(knobs.intensity);
+        let lam_lit = scalar_f32(knobs.lam);
+        let rho_gate_lit = scalar_f32(knobs.rho_gate);
+        let noise_gate_lit = scalar_f32(knobs.noise_gate);
+
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 * n + 11);
+        args.extend(self.params.iter());
+        args.push(&rho_lit);
+        args.extend(self.m.iter());
+        args.extend(self.v.iter());
+        args.push(&m_rho_lit);
+        args.push(&v_rho_lit);
+        args.extend([
+            &step_lit,
+            &x_lit,
+            &y_lit,
+            &seed_lit,
+            &inten_lit,
+            &lam_lit,
+            &rho_gate_lit,
+            &noise_gate_lit,
+        ]);
+
+        let mut outs = execute(&self.exe, &args)?;
+        anyhow::ensure!(outs.len() == 3 * n + 3 + 3, "train output arity");
+        let energy = to_vec_f32(&outs.pop().unwrap())?[0];
+        let acc = to_vec_f32(&outs.pop().unwrap())?[0];
+        let loss = to_vec_f32(&outs.pop().unwrap())?[0];
+        self.v_rho = to_vec_f32(&outs.pop().unwrap())?;
+        self.m_rho = to_vec_f32(&outs.pop().unwrap())?;
+        self.v = outs.split_off(2 * n + 1);
+        self.m = outs.split_off(n + 1);
+        self.rho_raw = to_vec_f32(&outs.pop().unwrap())?;
+        self.params = outs;
+        self.step += 1;
+        Ok(TrainOutput { loss, acc, energy })
+    }
+
+    pub fn params(&self) -> &[xla::Literal] {
+        &self.params
+    }
+
+    pub fn rho_raw(&self) -> &[f32] {
+        &self.rho_raw
+    }
+
+    /// Trained per-layer rho values.
+    pub fn rho(&self) -> Vec<f32> {
+        self.rho_raw.iter().map(|&r| super::rho_of_raw(r)).collect()
+    }
+
+    /// Override rho (used by sweeps that scale the energy coefficient).
+    pub fn set_rho_raw(&mut self, raw: Vec<f32>) {
+        assert_eq!(raw.len(), self.n_layers);
+        self.rho_raw = raw;
+    }
+
+    /// Replace the parameters (e.g. resume from a cached pretrain) and
+    /// reset the optimizer state.
+    pub fn set_params(&mut self, params: &[(Vec<usize>, Vec<f32>)]) -> Result<()> {
+        anyhow::ensure!(params.len() == self.n_params, "param count mismatch");
+        let mut lits = Vec::with_capacity(params.len());
+        let mut m = Vec::with_capacity(params.len());
+        let mut v = Vec::with_capacity(params.len());
+        for (shape, data) in params {
+            lits.push(lit_f32(data, shape)?);
+            let zeros = vec![0.0f32; data.len()];
+            m.push(lit_f32(&zeros, shape)?);
+            v.push(lit_f32(&zeros, shape)?);
+        }
+        self.params = lits;
+        self.m = m;
+        self.v = v;
+        self.m_rho = vec![0.0; self.n_layers];
+        self.v_rho = vec![0.0; self.n_layers];
+        self.step = 0;
+        Ok(())
+    }
+}
+
+/// Aggregated evaluation metrics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalResult {
+    pub samples: u32,
+    pub top1: u32,
+    pub top5: u32,
+    pub loss_sum: f64,
+    /// Normalised analog energy summed over batches (device units).
+    pub energy: f64,
+}
+
+impl EvalResult {
+    pub fn top1_acc(&self) -> f64 {
+        self.top1 as f64 / self.samples.max(1) as f64
+    }
+
+    pub fn top5_acc(&self) -> f64 {
+        self.top5 as f64 / self.samples.max(1) as f64
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        self.loss_sum / self.samples.max(1) as f64
+    }
+
+    pub fn merge(&mut self, other: &EvalResult) {
+        self.samples += other.samples;
+        self.top1 += other.top1;
+        self.top5 += other.top5;
+        self.loss_sum += other.loss_sum;
+        self.energy += other.energy;
+    }
+}
+
+/// Owns an eval executable for one (model, read-mode).
+pub struct Evaluator {
+    exe: xla::PjRtLoadedExecutable,
+    pub model_key: String,
+    pub batch: usize,
+    pub decomposed: bool,
+}
+
+impl Evaluator {
+    pub fn new(arts: &Artifacts, model_key: &str, decomposed: bool) -> Result<Self> {
+        let kind = if decomposed { "eval_decomp" } else { "eval" };
+        let info = arts.manifest.artifact(&format!("{model_key}_{kind}"))?;
+        let exe = arts.runtime.load_hlo(&arts.dir.join(&info.file))?;
+        Ok(Evaluator {
+            exe,
+            model_key: model_key.to_string(),
+            batch: arts.manifest.batches.eval,
+            decomposed,
+        })
+    }
+
+    /// Evaluate one batch.
+    pub fn eval_batch(
+        &self,
+        params: &[xla::Literal],
+        rho_raw: &[f32],
+        x: &[f32],
+        y: &[i32],
+        seed: i32,
+        intensity: f32,
+        noise_gate: f32,
+    ) -> Result<EvalResult> {
+        anyhow::ensure!(x.len() == self.batch * IMG_LEN, "bad x batch");
+        let rho_lit = lit_f32(rho_raw, &[rho_raw.len()])?;
+        let x_lit = lit_f32(x, &[self.batch, 32, 32, 3])?;
+        let y_lit = lit_i32(y, &[self.batch])?;
+        let seed_lit = scalar_i32(seed);
+        let inten_lit = scalar_f32(intensity);
+        let gate_lit = scalar_f32(noise_gate);
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(params.len() + 6);
+        args.extend(params.iter());
+        args.extend([&rho_lit, &x_lit, &y_lit, &seed_lit, &inten_lit, &gate_lit]);
+        let outs = execute(&self.exe, &args)?;
+        anyhow::ensure!(outs.len() == 4, "eval output arity");
+        Ok(EvalResult {
+            samples: self.batch as u32,
+            top1: to_vec_f32(&outs[0])?[0] as u32,
+            top5: to_vec_f32(&outs[1])?[0] as u32,
+            loss_sum: to_vec_f32(&outs[2])?[0] as f64,
+            energy: to_vec_f32(&outs[3])?[0] as f64,
+        })
+    }
+}
+
+/// Owns a predict executable (logit service for the router example).
+pub struct Predictor {
+    exe: xla::PjRtLoadedExecutable,
+    pub model_key: String,
+    pub batch: usize,
+    pub num_classes: usize,
+}
+
+impl Predictor {
+    pub fn new(arts: &Artifacts, model_key: &str) -> Result<Self> {
+        let info = arts.manifest.artifact(&format!("{model_key}_predict"))?;
+        let exe = arts.runtime.load_hlo(&arts.dir.join(&info.file))?;
+        let num_classes = arts.model(model_key)?.num_classes;
+        Ok(Predictor {
+            exe,
+            model_key: model_key.to_string(),
+            batch: arts.manifest.batches.predict,
+            num_classes,
+        })
+    }
+
+    /// Run a batch of images through the noisy model; returns flat logits
+    /// (batch * num_classes).
+    pub fn predict(
+        &self,
+        params: &[xla::Literal],
+        rho_raw: &[f32],
+        x: &[f32],
+        seed: i32,
+        intensity: f32,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(x.len() == self.batch * IMG_LEN, "bad x batch");
+        let rho_lit = lit_f32(rho_raw, &[rho_raw.len()])?;
+        let x_lit = lit_f32(x, &[self.batch, 32, 32, 3])?;
+        let seed_lit = scalar_i32(seed);
+        let inten_lit = scalar_f32(intensity);
+        let gate_lit = scalar_f32(1.0);
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(params.len() + 5);
+        args.extend(params.iter());
+        args.extend([&rho_lit, &x_lit, &seed_lit, &inten_lit, &gate_lit]);
+        let outs = execute(&self.exe, &args)?;
+        to_vec_f32(&outs[0])
+    }
+}

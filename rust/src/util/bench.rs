@@ -1,0 +1,104 @@
+//! Micro-benchmark harness (offline substitute for criterion).
+//!
+//! Warmup + timed iterations with mean / stddev / min reporting, plus a
+//! `Samples`-style throughput helper.  The `cargo bench` targets use this
+//! to print both the paper-table reproductions and the hot-path timings.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchResult {
+    pub iters: u32,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    /// items/s given `items` processed per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / (self.mean_ns * 1e-9)
+    }
+}
+
+/// Time `f` over `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(warmup: u32, iters: u32, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_nanos() as f64);
+    }
+    let n = times.len() as f64;
+    let mean = times.iter().sum::<f64>() / n;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n;
+    let min = times.iter().cloned().fold(f64::MAX, f64::min);
+    BenchResult {
+        iters,
+        mean_ns: mean,
+        std_ns: var.sqrt(),
+        min_ns: min,
+    }
+}
+
+/// Run + pretty-print one named benchmark.
+pub fn report<F: FnMut()>(name: &str, warmup: u32, iters: u32, f: F) -> BenchResult {
+    let r = bench(warmup, iters, f);
+    let (val, unit) = if r.mean_ns > 1e9 {
+        (r.mean_ns / 1e9, "s")
+    } else if r.mean_ns > 1e6 {
+        (r.mean_ns / 1e6, "ms")
+    } else if r.mean_ns > 1e3 {
+        (r.mean_ns / 1e3, "us")
+    } else {
+        (r.mean_ns, "ns")
+    };
+    println!(
+        "bench {name:<44} {val:>9.2} {unit}/iter  (+/- {:.1}%, n={})",
+        100.0 * r.std_ns / r.mean_ns.max(1.0),
+        r.iters
+    );
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut acc = 0u64;
+        let r = bench(2, 10, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.mean_ns);
+        assert_eq!(r.iters, 10);
+        std::hint::black_box(acc);
+    }
+
+    #[test]
+    fn throughput_sane() {
+        let r = BenchResult {
+            iters: 1,
+            mean_ns: 1e9,
+            std_ns: 0.0,
+            min_ns: 1e9,
+        };
+        assert!((r.throughput(100.0) - 100.0).abs() < 1e-9);
+    }
+}

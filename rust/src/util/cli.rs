@@ -1,0 +1,106 @@
+//! Tiny `--flag value` argument parser (offline substitute for clap).
+
+use std::collections::BTreeMap;
+
+use crate::Result;
+
+/// Parsed command line: a subcommand plus `--key value` flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]).  The first bare token
+    /// is the subcommand; `--key value` pairs become flags; a trailing
+    /// `--key` with no value is a boolean flag.
+    pub fn parse() -> Result<Args> {
+        Self::from_vec(std::env::args().skip(1).collect())
+    }
+
+    pub fn from_vec(tokens: Vec<String>) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(key) = t.strip_prefix("--") {
+                if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    out.flags.insert(key.to_string(), tokens[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.bools.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                anyhow::ensure!(
+                    out.command.is_none(),
+                    "unexpected positional argument {t:?}"
+                );
+                out.command = Some(t.clone());
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad value for --{key}: {v:?}")),
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key) || self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = Args::from_vec(v(&["train", "--model", "mlp_10", "--steps", "50", "--fast"]))
+            .unwrap();
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.get("model"), Some("mlp_10"));
+        assert_eq!(a.parse_or("steps", 0u32).unwrap(), 50);
+        assert!(a.has("fast"));
+        assert!(!a.has("slow"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::from_vec(v(&["run"])).unwrap();
+        assert_eq!(a.str_or("model", "tiny_resnet_10"), "tiny_resnet_10");
+        assert_eq!(a.parse_or("lam", 0.3f32).unwrap(), 0.3);
+    }
+
+    #[test]
+    fn rejects_two_positionals() {
+        assert!(Args::from_vec(v(&["a", "b"])).is_err());
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = Args::from_vec(v(&["x", "--n", "abc"])).unwrap();
+        assert!(a.parse_or("n", 1u32).is_err());
+    }
+}

@@ -1,0 +1,6 @@
+//! Small dependency-free utilities (offline substitutes; Cargo.toml note).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod toml_lite;

@@ -1,0 +1,165 @@
+//! Minimal TOML subset parser (offline substitute for the `toml` crate).
+//!
+//! Supports what `ExperimentConfig` needs: `[section]` headers,
+//! `key = "string"`, `key = 123`, `key = 1.5`, `key = true`, comments (#).
+
+use std::collections::BTreeMap;
+
+use crate::Result;
+
+/// A flat TOML document: (section -> key -> raw value).  Top-level keys
+/// live in the "" section.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow::anyhow!("line {}: bad section", lineno + 1))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim().to_string();
+            let mut value = value.trim().to_string();
+            if value.starts_with('"') && value.ends_with('"') && value.len() >= 2 {
+                value = value[1..value.len() - 1].to_string();
+            }
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(
+        &self,
+        section: &str,
+        key: &str,
+        default: T,
+    ) -> Result<T> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad value for {section}.{key}: {v:?}")),
+        }
+    }
+
+    pub fn set(&mut self, section: &str, key: &str, value: impl Into<String>) {
+        self.sections
+            .entry(section.to_string())
+            .or_default()
+            .insert(key.to_string(), value.into());
+    }
+
+    /// Render back to TOML text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if let Some(top) = self.sections.get("") {
+            for (k, v) in top {
+                out.push_str(&render_kv(k, v));
+            }
+        }
+        for (name, kv) in &self.sections {
+            if name.is_empty() {
+                continue;
+            }
+            out.push_str(&format!("\n[{name}]\n"));
+            for (k, v) in kv {
+                out.push_str(&render_kv(k, v));
+            }
+        }
+        out
+    }
+}
+
+fn render_kv(k: &str, v: &str) -> String {
+    let quoted = v.parse::<f64>().is_err() && v != "true" && v != "false";
+    if quoted {
+        format!("{k} = \"{v}\"\n")
+    } else {
+        format!("{k} = {v}\n")
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // only strip # outside quotes (good enough for our configs)
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment
+model = "tiny_resnet_10"
+solution = "ab"
+
+[train]
+finetune_steps = 120   # steps
+lam = 0.3
+verbose = true
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get("", "model"), Some("tiny_resnet_10"));
+        assert_eq!(doc.parse_or("train", "finetune_steps", 0u32).unwrap(), 120);
+        assert_eq!(doc.parse_or("train", "lam", 0.0f32).unwrap(), 0.3);
+        assert_eq!(doc.parse_or("train", "verbose", false).unwrap(), true);
+        assert_eq!(doc.parse_or("train", "missing", 7u32).unwrap(), 7);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        let doc2 = TomlDoc::parse(&doc.render()).unwrap();
+        assert_eq!(doc, doc2);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("keynovalue").is_err());
+    }
+
+    #[test]
+    fn comments_inside_strings_kept() {
+        let doc = TomlDoc::parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc.get("", "k"), Some("a#b"));
+    }
+}

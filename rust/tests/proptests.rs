@@ -1,0 +1,182 @@
+//! Property-based tests over the simulation substrate (seeded random
+//! sweeps; proptest is unavailable offline — see Cargo.toml note — so we
+//! drive the same shrink-free random-case pattern with the crate RNG).
+
+use emtopt::crossbar::CrossbarArray;
+use emtopt::data::{Dataset, Split};
+use emtopt::device::{state_offsets, DeviceConfig};
+use emtopt::energy::{EnergyModel, ReadMode};
+use emtopt::quant;
+use emtopt::rng::Rng;
+
+/// Run `f` over `cases` random seeds (our mini-proptest driver).
+fn for_cases(cases: u64, mut f: impl FnMut(u64, &mut Rng)) {
+    for case in 0..cases {
+        let mut rng = Rng::new(0xB0B + case * 7919);
+        f(case, &mut rng);
+    }
+}
+
+#[test]
+fn prop_quant_weight_roundtrip_bounded() {
+    for_cases(50, |case, rng| {
+        let n = 1 + (rng.next_u64() % 512) as usize;
+        let bits = 2 + (case % 7) as u32;
+        let w: Vec<f32> = (0..n).map(|_| rng.normal() * (1.0 + case as f32)).collect();
+        let (q, s) = quant::quant_weight(&w, bits);
+        let deq = quant::dequant_weight(&q, s, bits);
+        let step = s / ((1i32 << (bits - 1)) - 1) as f32;
+        for (a, b) in w.iter().zip(deq.iter()) {
+            assert!((a - b).abs() <= step / 2.0 + 1e-5, "case {case}");
+        }
+    });
+}
+
+#[test]
+fn prop_quant_act_monotone() {
+    // quantisation must preserve ordering up to one step
+    for_cases(30, |case, rng| {
+        let n = 2 + (rng.next_u64() % 256) as usize;
+        let bits = 2 + (case % 6) as u32;
+        let x: Vec<f32> = (0..n).map(|_| rng.next_f32() * 3.0).collect();
+        let (q, _) = quant::quant_act(&x, bits);
+        for i in 0..n {
+            for j in 0..n {
+                if x[i] > x[j] {
+                    assert!(q[i] + 1 >= q[j], "ordering violated at case {case}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_bit_planes_recompose_any_level() {
+    for_cases(20, |_case, rng| {
+        let bits = 1 + (rng.next_u64() % 8) as u32;
+        let level = (rng.next_u64() % (1 << bits)) as u32;
+        let recomposed: u32 = (0..bits).map(|p| quant::bit_plane(level, p) << p).sum();
+        assert_eq!(recomposed, level);
+        assert!(quant::popcount(level) <= bits);
+    });
+}
+
+#[test]
+fn prop_state_offsets_zero_mean_unit_var() {
+    for m in 2..32 {
+        let c = state_offsets(m);
+        let mean: f64 = c.iter().map(|&v| v as f64).sum::<f64>() / m as f64;
+        let var: f64 = c.iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / m as f64;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn prop_crossbar_clean_mac_linear() {
+    // MAC(a*x) == a * MAC(x) for the noiseless path (up to requantisation:
+    // identical levels because the dynamic scale absorbs `a`)
+    for_cases(10, |case, rng| {
+        let k = 4 + (rng.next_u64() % 64) as usize;
+        let n = 1 + (rng.next_u64() % 32) as usize;
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let cfg = DeviceConfig::default();
+        let arr = CrossbarArray::program(&w, k, n, &cfg);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_f32()).collect();
+        let x2: Vec<f32> = x.iter().map(|&v| v * 3.0).collect();
+        let mut o1 = vec![0.0f32; n];
+        let mut o2 = vec![0.0f32; n];
+        arr.mac_clean(&x, &mut o1, 5);
+        arr.mac_clean(&x2, &mut o2, 5);
+        for (a, b) in o1.iter().zip(o2.iter()) {
+            assert!(
+                (3.0 * a - b).abs() <= 1e-3 * (b.abs() + 1.0),
+                "case {case}: {a} vs {b}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_crossbar_energy_counters_monotone() {
+    // more reads never decrease counters; energy scales with rho
+    for_cases(10, |case, rng| {
+        let k = 8 + (rng.next_u64() % 64) as usize;
+        let n = 4 + (rng.next_u64() % 16) as usize;
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.4).collect();
+        let x: Vec<f32> = (0..k).map(|_| rng.next_f32()).collect();
+        let mut out = vec![0.0f32; n];
+        let mut cfg = DeviceConfig::default();
+        cfg.rho = 1.0 + (case % 5) as f32;
+        let mut arr = CrossbarArray::program(&w, k, n, &cfg);
+        let mut last = 0.0;
+        for _ in 0..4 {
+            arr.mac(&x, &mut out, ReadMode::Original, 5, 1.0, rng);
+            assert!(arr.counters.cell_pj >= last);
+            last = arr.counters.cell_pj;
+        }
+    });
+}
+
+#[test]
+fn prop_energy_model_additive_over_layers() {
+    use emtopt::models::{LayerMeta, ModelDesc};
+    for_cases(20, |_case, rng| {
+        let em = EnergyModel::new(5);
+        let l1 = LayerMeta::conv(3, 1 + (rng.next_u64() % 64) as u64, 8, 16);
+        let l2 = LayerMeta::dense(1 + (rng.next_u64() % 512) as u64, 10);
+        let m12 = ModelDesc {
+            name: "m".into(),
+            layers: vec![l1.clone(), l2.clone()],
+        };
+        let e12 = em.model_uj_uniform(&m12, 2.0, ReadMode::Original);
+        let e1 = em.model_uj_uniform(
+            &ModelDesc {
+                name: "a".into(),
+                layers: vec![l1],
+            },
+            2.0,
+            ReadMode::Original,
+        );
+        let e2 = em.model_uj_uniform(
+            &ModelDesc {
+                name: "b".into(),
+                layers: vec![l2],
+            },
+            2.0,
+            ReadMode::Original,
+        );
+        assert!((e12 - e1 - e2).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn prop_dataset_total_determinism() {
+    // any (seed, split, index) triple regenerates the identical sample
+    for_cases(10, |case, rng| {
+        let ds = Dataset::with_params(2 + (case % 10) as usize, 0.5, rng.next_u64());
+        let idx = rng.next_u64() % 1000;
+        let mut a = vec![0.0f32; emtopt::data::IMG_LEN];
+        let mut b = vec![0.0f32; emtopt::data::IMG_LEN];
+        let la = ds.sample_into(Split::Train, idx, &mut a);
+        let lb = ds.sample_into(Split::Train, idx, &mut b);
+        assert_eq!(la, lb);
+        assert_eq!(a, b);
+    });
+}
+
+#[test]
+fn prop_router_stats_invariants() {
+    use emtopt::coordinator::router::ServerStats;
+    use std::sync::atomic::Ordering;
+    for_cases(20, |_case, rng| {
+        let s = ServerStats::default();
+        let batches = 1 + rng.next_u64() % 50;
+        let batch_size = 1 + (rng.next_u64() % 64) as usize;
+        let padded = rng.next_u64() % (batches * batch_size as u64);
+        s.batches.store(batches, Ordering::Relaxed);
+        s.padded_slots.store(padded, Ordering::Relaxed);
+        let fill = s.mean_batch_fill(batch_size);
+        assert!((0.0..=1.0).contains(&fill));
+    });
+}

@@ -1,0 +1,146 @@
+//! Runtime integration tests: artifacts -> PJRT -> numbers.
+//!
+//! These require `make artifacts` to have run; they are skipped (with a
+//! note) when artifacts/ is missing so `cargo test` works pre-build.
+
+use emtopt::data::{Dataset, Split, Suite};
+use emtopt::runtime::{execute, scalar_i32, to_vec_f32, Artifacts, Evaluator, Predictor, Trainer};
+use emtopt::runtime::session::TrainKnobs;
+
+fn arts() -> Option<Artifacts> {
+    match Artifacts::open_default() {
+        Ok(a) => Some(a),
+        Err(e) => {
+            eprintln!("skipping runtime test (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_consistent_with_files() {
+    let Some(arts) = arts() else { return };
+    assert!(!arts.manifest.artifacts.is_empty());
+    for a in &arts.manifest.artifacts {
+        assert!(
+            arts.dir.join(&a.file).exists(),
+            "artifact file missing: {}",
+            a.file
+        );
+    }
+    // every model has its six artifact kinds
+    for key in arts.manifest.model_keys() {
+        for kind in ["init", "train", "train_decomp", "eval", "eval_decomp", "predict"] {
+            assert!(
+                arts.manifest.artifact(&format!("{key}_{kind}")).is_ok(),
+                "{key} missing {kind}"
+            );
+        }
+    }
+}
+
+#[test]
+fn init_artifact_shapes_match_manifest() {
+    let Some(arts) = arts() else { return };
+    let info = arts.manifest.artifact("mlp_10_init").unwrap();
+    let exe = arts.runtime.load_hlo(&arts.dir.join(&info.file)).unwrap();
+    let outs = execute(&exe, &[scalar_i32(0)]).unwrap();
+    // params... + rho_raw
+    let train = arts.manifest.artifact("mlp_10_train").unwrap();
+    let n_params = arts.manifest.model("mlp_10").unwrap().n_layers * 2;
+    assert_eq!(outs.len(), n_params + 1);
+    for (lit, spec) in outs.iter().zip(train.inputs.iter()) {
+        assert_eq!(lit.element_count(), spec.numel(), "spec {}", spec.name);
+    }
+}
+
+#[test]
+fn init_is_deterministic_in_seed() {
+    let Some(arts) = arts() else { return };
+    let info = arts.manifest.artifact("mlp_10_init").unwrap();
+    let exe = arts.runtime.load_hlo(&arts.dir.join(&info.file)).unwrap();
+    let a = execute(&exe, &[scalar_i32(5)]).unwrap();
+    let b = execute(&exe, &[scalar_i32(5)]).unwrap();
+    let c = execute(&exe, &[scalar_i32(6)]).unwrap();
+    assert_eq!(to_vec_f32(&a[0]).unwrap(), to_vec_f32(&b[0]).unwrap());
+    assert_ne!(to_vec_f32(&a[0]).unwrap(), to_vec_f32(&c[0]).unwrap());
+}
+
+#[test]
+fn train_step_reduces_loss_through_pjrt() {
+    let Some(arts) = arts() else { return };
+    let mut trainer = Trainer::new(&arts, "mlp_10", false, 1).unwrap();
+    let ds = Dataset::new(Suite::Cifar, 1);
+    let knobs = TrainKnobs::traditional();
+    let mut losses = Vec::new();
+    for s in 0..10 {
+        let (x, y) = ds.batch(Split::Train, s * trainer.batch as u64, trainer.batch);
+        let out = trainer.step(&x, &y, &knobs).unwrap();
+        assert!(out.loss.is_finite());
+        losses.push(out.loss);
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss must fall: {losses:?}"
+    );
+}
+
+#[test]
+fn noise_gate_and_intensity_affect_eval() {
+    let Some(arts) = arts() else { return };
+    let mut trainer = Trainer::new(&arts, "mlp_10", false, 2).unwrap();
+    let ds = Dataset::new(Suite::Cifar, 2);
+    let knobs = TrainKnobs::traditional();
+    for s in 0..6 {
+        let (x, y) = ds.batch(Split::Train, s * trainer.batch as u64, trainer.batch);
+        trainer.step(&x, &y, &knobs).unwrap();
+    }
+    let evaluator = Evaluator::new(&arts, "mlp_10", false).unwrap();
+    let (x, y) = ds.batch(Split::Test, 0, evaluator.batch);
+    let params = trainer.params();
+    let rho = trainer.rho_raw();
+    // noiseless eval is deterministic across seeds
+    let a = evaluator.eval_batch(params, rho, &x, &y, 1, 1.0, 0.0).unwrap();
+    let b = evaluator.eval_batch(params, rho, &x, &y, 2, 1.0, 0.0).unwrap();
+    assert_eq!(a.top1, b.top1);
+    // strong noise must not beat the noiseless accuracy (statistically;
+    // use a very strong intensity for a clear margin)
+    let noisy = evaluator.eval_batch(params, rho, &x, &y, 3, 8.0, 1.0).unwrap();
+    assert!(
+        noisy.top1 <= a.top1,
+        "strong noise should not help: {} vs {}",
+        noisy.top1,
+        a.top1
+    );
+}
+
+#[test]
+fn decomposed_eval_runs_and_reports_lower_energy() {
+    let Some(arts) = arts() else { return };
+    let trainer = Trainer::new(&arts, "mlp_10", false, 3).unwrap();
+    let ds = Dataset::new(Suite::Cifar, 3);
+    let e_plain = Evaluator::new(&arts, "mlp_10", false).unwrap();
+    let e_dec = Evaluator::new(&arts, "mlp_10", true).unwrap();
+    let (x, y) = ds.batch(Split::Test, 0, e_plain.batch);
+    let a = e_plain
+        .eval_batch(trainer.params(), trainer.rho_raw(), &x, &y, 1, 1.0, 1.0)
+        .unwrap();
+    let b = e_dec
+        .eval_batch(trainer.params(), trainer.rho_raw(), &x, &y, 1, 1.0, 1.0)
+        .unwrap();
+    assert!(b.energy < a.energy, "eq. 20: {} vs {}", b.energy, a.energy);
+}
+
+#[test]
+fn predictor_shapes() {
+    let Some(arts) = arts() else { return };
+    let trainer = Trainer::new(&arts, "mlp_10", false, 4).unwrap();
+    let p = Predictor::new(&arts, "mlp_10").unwrap();
+    let ds = Dataset::new(Suite::Cifar, 4);
+    let (x, _) = ds.batch(Split::Test, 0, p.batch);
+    let logits = p
+        .predict(trainer.params(), trainer.rho_raw(), &x, 1, 1.0)
+        .unwrap();
+    assert_eq!(logits.len(), p.batch * p.num_classes);
+    assert!(logits.iter().all(|v| v.is_finite()));
+}
