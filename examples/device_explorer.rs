@@ -5,7 +5,7 @@
 //!
 //!     cargo run --release --example device_explorer
 
-use emtopt::crossbar::CrossbarArray;
+use emtopt::crossbar::{CrossbarArray, ReadCounters};
 use emtopt::device::{self, DeviceConfig, Intensity, RtnCell};
 use emtopt::energy::ReadMode;
 use emtopt::rng::Rng;
@@ -52,15 +52,18 @@ fn main() -> emtopt::Result<()> {
     );
     for rho in [0.25f32, 1.0, 4.0] {
         let std_of = |mode: ReadMode, rng: &mut Rng| {
-            let mut cfg = DeviceConfig::default();
-            cfg.rho = rho;
-            let mut arr = CrossbarArray::program(&w, k, n, &cfg);
+            let cfg = DeviceConfig {
+                rho,
+                ..DeviceConfig::default()
+            };
+            let arr = CrossbarArray::program(&w, k, n, &cfg);
             let trials = 300;
+            let mut counters = ReadCounters::default();
             let mut out = vec![0.0f32; n];
             let mut sum = vec![0.0f64; n];
             let mut sq = vec![0.0f64; n];
             for _ in 0..trials {
-                arr.mac(&x, &mut out, mode, 5, 1.0, rng);
+                arr.mac(&x, &mut out, mode, 5, 1.0, rng, &mut counters);
                 for c in 0..n {
                     sum[c] += out[c] as f64;
                     sq[c] += (out[c] as f64).powi(2);

@@ -1,74 +1,146 @@
-//! Quickstart: load the AOT artifacts, run one noisy inference batch, and
-//! inspect the native device simulator — the 60-second tour of the stack.
+//! Quickstart: the 60-second tour of the stack — one crossbar MAC, a
+//! batched noisy inference over the shared-state execution engine, a spin
+//! of the native serving router, and (with `--features aot`) one batch
+//! through the AOT artifacts.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
+//!     make artifacts && cargo run --release --example quickstart --features aot
 
-use emtopt::crossbar::CrossbarArray;
-use emtopt::data::{Dataset, Split, Suite};
+use std::sync::Arc;
+
+use emtopt::coordinator::router::{serve_native, NativeServerConfig};
+use emtopt::crossbar::{CrossbarArray, ReadCounters};
+use emtopt::data::{Dataset, Split, Suite, IMG_LEN};
 use emtopt::device::{self, DeviceConfig};
 use emtopt::energy::ReadMode;
+use emtopt::inference::template_classifier;
 use emtopt::rng::Rng;
-use emtopt::runtime::{execute, scalar_i32, to_vec_f32, Artifacts, Predictor};
 
 fn main() -> emtopt::Result<()> {
-    // --- Layer 3 runtime: load a jax/pallas-lowered model through PJRT ---
-    let arts = Artifacts::open_default()?;
-    println!("PJRT platform: {}", arts.runtime.platform());
-
-    // He-init parameters through the model's init artifact
-    let init = arts.manifest.artifact("mlp_10_init")?;
-    let init_exe = arts.runtime.load_hlo(&arts.dir.join(&init.file))?;
-    let mut outs = execute(&init_exe, &[scalar_i32(42)])?;
-    let rho_raw = to_vec_f32(&outs.pop().unwrap())?;
-    let params = outs;
+    // --- native device substrate: one crossbar MAC with RTN sampling ---
+    let cfg = DeviceConfig::default();
+    let mut rng = Rng::new(3);
+    let w: Vec<f32> = (0..64 * 16).map(|_| rng.normal() * 0.3).collect();
+    let arr = CrossbarArray::program(&w, 64, 16, &cfg);
+    let xin: Vec<f32> = (0..64).map(|_| rng.next_f32()).collect();
+    let mut out = vec![0.0f32; 16];
+    let mut counters = ReadCounters::default();
+    arr.mac(
+        &xin,
+        &mut out,
+        ReadMode::Original,
+        cfg.act_bits,
+        1.0,
+        &mut rng,
+        &mut counters,
+    );
     println!(
-        "initialised mlp_10: {} parameter tensors, {} crossbar layers",
-        params.len(),
-        rho_raw.len()
+        "crossbar MAC: {} cells, {:.1} pJ analog + {:.1} pJ peripheral",
+        arr.num_cells(),
+        counters.cell_pj,
+        counters.peripheral_pj
+    );
+    println!(
+        "device: sigma_rel(rho=1) = {:.3}, sigma_rel(rho=16) = {:.3}  (amplitude-energy tradeoff)",
+        device::sigma_rel(1.0, 1.0),
+        device::sigma_rel(16.0, 1.0)
     );
 
-    // one noisy inference batch (the EMT fluctuation is sampled INSIDE the
-    // lowered computation — eq. 11 of the paper, pallas kernel on the FC)
-    let predictor = Predictor::new(&arts, "mlp_10")?;
+    // --- batched execution engine: immutable model, per-sample RNG streams ---
     let dataset = Dataset::new(Suite::Cifar, emtopt::data::DATA_SEED);
-    let (x, y) = dataset.batch(Split::Test, 0, predictor.batch);
-    let logits = predictor.predict(&params, &rho_raw, &x, 1, 1.0)?;
-    let nc = predictor.num_classes;
-    let correct = (0..predictor.batch)
+    let model = Arc::new(template_classifier(&dataset, &cfg)?);
+    let batch = 32usize;
+    let mut xs = vec![0.0f32; batch * IMG_LEN];
+    let mut labels = Vec::with_capacity(batch);
+    for i in 0..batch {
+        labels.push(dataset.sample_into(
+            Split::Test,
+            i as u64,
+            &mut xs[i * IMG_LEN..(i + 1) * IMG_LEN],
+        ));
+    }
+    let mut batch_counters = ReadCounters::default();
+    let logits = model.forward_batch(&xs, ReadMode::Original, &cfg, 1, &mut batch_counters);
+    let nc = model.d_out();
+    let correct = (0..batch)
         .filter(|&i| {
             let row = &logits[i * nc..(i + 1) * nc];
             let pred = row
                 .iter()
                 .enumerate()
                 .max_by(|a, b| a.1.total_cmp(b.1))
-                .unwrap()
-                .0;
-            pred == y[i] as usize
+                .map(|(c, _)| c)
+                .unwrap_or(0);
+            pred == labels[i] as usize
         })
         .count();
     println!(
-        "noisy inference on untrained model: {correct}/{} correct (chance ~10%)",
-        predictor.batch
+        "batched noisy inference (template classifier, {} rayon threads): \
+         {correct}/{batch} correct, {:.1} nJ total",
+        rayon::current_num_threads(),
+        batch_counters.total_pj() / 1000.0
     );
 
-    // --- native device substrate: one crossbar MAC with RTN sampling ---
-    let cfg = DeviceConfig::default();
-    let mut rng = Rng::new(3);
-    let w: Vec<f32> = (0..64 * 16).map(|_| rng.normal() * 0.3).collect();
-    let mut arr = CrossbarArray::program(&w, 64, 16, &cfg);
-    let xin: Vec<f32> = (0..64).map(|_| rng.next_f32()).collect();
-    let mut out = vec![0.0f32; 16];
-    arr.mac(&xin, &mut out, ReadMode::Original, cfg.act_bits, 1.0, &mut rng);
+    // --- native serving engine: the same shared Arc<NoisyModel> behind the router ---
+    let (client, stats, engines) = serve_native(model.clone(), NativeServerConfig::default())?;
+    let mut served_correct = 0;
+    let served = 24u64;
+    for i in 0..served {
+        let mut img = vec![0.0f32; IMG_LEN];
+        let label = dataset.sample_into(Split::Test, 1000 + i, &mut img);
+        if client.classify(img)? == label as usize {
+            served_correct += 1;
+        }
+    }
     println!(
-        "crossbar MAC: {} cells, {:.1} pJ analog + {:.1} pJ peripheral",
-        arr.num_cells(),
-        arr.counters.cell_pj,
-        arr.counters.peripheral_pj
+        "router: {served_correct}/{served} correct, mean queue {:.2} ms, {:.1} nJ/request",
+        stats.mean_queue_us() / 1000.0,
+        stats.mean_energy_pj_per_request() / 1000.0
     );
-    println!(
-        "device: sigma_rel(rho=1) = {:.3}, sigma_rel(rho=16) = {:.3}  (eq. amplitude-energy tradeoff)",
-        device::sigma_rel(1.0, 1.0),
-        device::sigma_rel(16.0, 1.0)
-    );
+    drop(client);
+    for h in engines {
+        h.join().ok();
+    }
+
+    // --- AOT runtime: load a jax/pallas-lowered model through PJRT ---
+    #[cfg(feature = "aot")]
+    {
+        use emtopt::runtime::{execute, scalar_i32, to_vec_f32, Artifacts, Predictor};
+        let arts = Artifacts::open_default()?;
+        println!("PJRT platform: {}", arts.runtime.platform());
+        let init = arts.manifest.artifact("mlp_10_init")?;
+        let init_exe = arts.runtime.load_hlo(&arts.dir.join(&init.file))?;
+        let mut outs = execute(&init_exe, &[scalar_i32(42)])?;
+        let rho_raw = to_vec_f32(&outs.pop().unwrap())?;
+        let params = outs;
+        println!(
+            "initialised mlp_10: {} parameter tensors, {} crossbar layers",
+            params.len(),
+            rho_raw.len()
+        );
+        let predictor = Predictor::new(&arts, "mlp_10")?;
+        let (ax, ay) = dataset.batch(Split::Test, 0, predictor.batch);
+        let alogits = predictor.predict(&params, &rho_raw, &ax, 1, 1.0)?;
+        let anc = predictor.num_classes;
+        let acorrect = (0..predictor.batch)
+            .filter(|&i| {
+                let row = &alogits[i * anc..(i + 1) * anc];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .unwrap()
+                    .0;
+                pred == ay[i] as usize
+            })
+            .count();
+        println!(
+            "noisy AOT inference on untrained model: {acorrect}/{} correct (chance ~10%)",
+            predictor.batch
+        );
+    }
+    #[cfg(not(feature = "aot"))]
+    println!("(AOT/PJRT tour skipped: rebuild with --features aot and `make artifacts`)");
+
     Ok(())
 }

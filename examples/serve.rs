@@ -1,31 +1,44 @@
-//! Serving example: the dynamic-batching inference router in front of the
-//! noisy in-memory model, driven by concurrent client threads — reports
-//! throughput, queueing latency, and batch fill.
+//! Serving example: the dynamic-batching inference router over the NATIVE
+//! crossbar engine — one immutable `Arc<NoisyModel>` shared by a pool of
+//! batch workers (each batch additionally fans across rayon), driven by
+//! concurrent client threads.  Reports throughput, queueing latency,
+//! batch fill, and per-request device energy.
 //!
-//!     cargo run --release --example serve -- --requests 512 --clients 8
+//!     cargo run --release --example serve -- --requests 512 --clients 8 --workers 2
 
-use emtopt::coordinator::router::{serve, ServerConfig};
-use emtopt::coordinator::{self, store, Solution};
+use std::sync::Arc;
+
+use emtopt::coordinator::router::{serve_native, NativeServerConfig};
 use emtopt::data::{Dataset, Split, Suite};
+use emtopt::device::DeviceConfig;
+use emtopt::inference::template_classifier;
 use emtopt::util::cli::Args;
 
 fn main() -> emtopt::Result<()> {
     let args = Args::parse()?;
     let requests: u32 = args.parse_or("requests", 256)?;
     let clients: usize = args.parse_or("clients", 8)?;
-    let model_key = args.str_or("model", "mlp_10");
+    let workers: usize = args.parse_or("workers", 2)?;
 
-    // train (or load) the A+B model that gets deployed
-    let trained = {
-        let arts = emtopt::runtime::Artifacts::open_default()?;
-        let cfg = coordinator::experiments::schedule_for(&model_key);
-        store::train_cached(&arts, &model_key, Suite::Cifar, Solution::AB, &cfg)?
-    };
-
-    let (client, stats, engine) = serve(trained, ServerConfig::default())?;
+    let dev = DeviceConfig::default();
     let dataset = Dataset::new(Suite::Cifar, emtopt::data::DATA_SEED);
+    // the deployed model: nearest-template classifier programmed on a
+    // crossbar (real accuracy, no AOT training stack needed)
+    let model = Arc::new(template_classifier(&dataset, &dev)?);
+    println!(
+        "deploying template classifier ({} cells) on {workers} engine workers",
+        model.num_cells()
+    );
 
-    println!("serving {model_key} behind the router: {requests} requests from {clients} clients");
+    let server_cfg = NativeServerConfig {
+        workers,
+        device: dev,
+        ..Default::default()
+    };
+    let batch = server_cfg.batch;
+    let (client, stats, engines) = serve_native(model, server_cfg)?;
+
+    println!("serving {requests} requests from {clients} clients");
     let t0 = std::time::Instant::now();
     let per = (requests as usize).div_ceil(clients);
     let handles: Vec<_> = (0..clients)
@@ -39,14 +52,11 @@ fn main() -> emtopt::Result<()> {
                     let idx = (c * per + i) as u64;
                     let mut img = vec![0.0f32; emtopt::data::IMG_LEN];
                     let label = ds.sample_into(Split::Test, idx, &mut img);
-                    match cl.classify(img) {
-                        Ok(pred) => {
-                            ok += 1;
-                            if pred == label as usize {
-                                correct += 1;
-                            }
+                    if let Ok(pred) = cl.classify(img) {
+                        ok += 1;
+                        if pred == label as usize {
+                            correct += 1;
                         }
-                        Err(_) => {}
                     }
                 }
                 (ok, correct)
@@ -66,12 +76,17 @@ fn main() -> emtopt::Result<()> {
         ok as f64 / dt
     );
     println!(
-        "accuracy on served traffic: {:.1}% | mean queue {:.2} ms | batch fill {:.0}%",
+        "accuracy on served traffic: {:.1}% | mean queue {:.2} ms | \
+         mean infer {:.2} ms/batch | batch fill {:.0}% | {:.1} nJ/request",
         100.0 * correct as f64 / ok.max(1) as f64,
         stats.mean_queue_us() / 1000.0,
-        stats.mean_batch_fill(16) * 100.0
+        stats.mean_infer_us() / 1000.0,
+        stats.mean_batch_fill(batch) * 100.0,
+        stats.mean_energy_pj_per_request() / 1000.0
     );
     drop(client);
-    engine.join().ok();
+    for h in engines {
+        h.join().ok();
+    }
     Ok(())
 }

@@ -1,13 +1,19 @@
 //! Hot-path microbenchmarks (EXPERIMENTS.md §Perf).
 //!
 //! L3 native crossbar simulator: MAC-simulations/s in both read modes,
-//! tile current-sum throughput, dataset generation, and the PJRT
-//! dispatch overhead of one predict batch.
+//! tile current-sum throughput, the batched execution engine
+//! (`NoisyModel::forward_batch` vs the sequential single-sample loop),
+//! dataset generation, and — with `--features aot` — the PJRT dispatch
+//! overhead of one predict batch.
+//!
+//! Emits a machine-readable `BENCH_hotpath.json` throughput record in the
+//! working directory so successive PRs accumulate a perf trajectory.
 
-use emtopt::crossbar::CrossbarArray;
+use emtopt::crossbar::{CrossbarArray, MacScratch, ReadCounters};
 use emtopt::data::{Dataset, Split, Suite};
 use emtopt::device::DeviceConfig;
 use emtopt::energy::ReadMode;
+use emtopt::inference::NoisyModel;
 use emtopt::rng::Rng;
 use emtopt::util::bench::report;
 
@@ -20,26 +26,91 @@ fn main() -> emtopt::Result<()> {
     let x: Vec<f32> = (0..k).map(|_| rng.next_f32()).collect();
     let mut out = vec![0.0f32; n];
 
-    let mut arr = CrossbarArray::program(&w, k, n, &cfg);
+    let arr = CrossbarArray::program(&w, k, n, &cfg);
+    let mut counters = ReadCounters::default();
+    let mut scratch = MacScratch::default();
     let macs = (k * n) as f64;
 
     let r = report("crossbar 256x256 original read", 3, 50, || {
-        arr.mac(&x, &mut out, ReadMode::Original, 5, 1.0, &mut rng);
+        arr.mac_scratch(
+            &x,
+            &mut out,
+            ReadMode::Original,
+            5,
+            1.0,
+            &mut rng,
+            &mut counters,
+            &mut scratch,
+        );
     });
-    println!(
-        "  -> {:.1} M MAC-sim/s",
-        r.throughput(macs) / 1e6
-    );
+    let mac_original = r.throughput(macs);
+    println!("  -> {:.1} M MAC-sim/s", mac_original / 1e6);
 
     let r = report("crossbar 256x256 decomposed read (5 planes)", 3, 20, || {
-        arr.mac(&x, &mut out, ReadMode::Decomposed, 5, 1.0, &mut rng);
+        arr.mac_scratch(
+            &x,
+            &mut out,
+            ReadMode::Decomposed,
+            5,
+            1.0,
+            &mut rng,
+            &mut counters,
+            &mut scratch,
+        );
     });
-    println!("  -> {:.1} M MAC-sim/s", r.throughput(5.0 * macs) / 1e6);
+    let mac_decomposed = r.throughput(5.0 * macs);
+    println!("  -> {:.1} M MAC-sim/s", mac_decomposed / 1e6);
 
     let r = report("crossbar 256x256 clean reference read", 3, 100, || {
         arr.mac_clean(&x, &mut out, 5);
     });
-    println!("  -> {:.1} M MAC/s", r.throughput(macs) / 1e6);
+    let mac_clean = r.throughput(macs);
+    println!("  -> {:.1} M MAC/s", mac_clean / 1e6);
+
+    println!("\n=== hotpath: batched execution engine ===");
+    // MLP sized like the tiny-zoo mlp head: 256 -> 256 -> 128 -> 10
+    let dims = [(256usize, 256usize), (256, 128), (128, 10)];
+    let layer_data: Vec<(Vec<f32>, Vec<f32>)> = dims
+        .iter()
+        .map(|&(i, o)| {
+            let lw: Vec<f32> = (0..i * o).map(|_| rng.normal() * 0.2).collect();
+            let lb: Vec<f32> = (0..o).map(|_| rng.normal() * 0.02).collect();
+            (lw, lb)
+        })
+        .collect();
+    let specs: Vec<(&[f32], &[f32], usize, usize)> = layer_data
+        .iter()
+        .zip(dims.iter())
+        .map(|((lw, lb), &(i, o))| (lw.as_slice(), lb.as_slice(), i, o))
+        .collect();
+    let model = NoisyModel::new(&specs, &cfg)?;
+    let batch = 32usize;
+    let xs: Vec<f32> = (0..batch * model.d_in()).map(|_| rng.next_f32()).collect();
+    let threads = rayon::current_num_threads();
+
+    let mut c_seq = ReadCounters::default();
+    let r = report("forward_batch_seq  mlp(256-256-128-10) b=32", 2, 10, || {
+        let _ = model.forward_batch_seq(&xs, ReadMode::Original, &cfg, 7, &mut c_seq);
+    });
+    let seq_sps = r.throughput(batch as f64);
+    println!("  -> {seq_sps:.0} samples/s (single-sample loop)");
+
+    let mut c_par = ReadCounters::default();
+    let r = report("forward_batch      mlp(256-256-128-10) b=32", 2, 10, || {
+        let _ = model.forward_batch(&xs, ReadMode::Original, &cfg, 7, &mut c_par);
+    });
+    let par_sps = r.throughput(batch as f64);
+    let speedup = par_sps / seq_sps;
+    println!("  -> {par_sps:.0} samples/s on {threads} rayon threads ({speedup:.2}x)");
+
+    // parity spot-check: the parallel engine must be bit-identical
+    let mut ca = ReadCounters::default();
+    let mut cb = ReadCounters::default();
+    let ya = model.forward_batch_seq(&xs, ReadMode::Original, &cfg, 7, &mut ca);
+    let yb = model.forward_batch(&xs, ReadMode::Original, &cfg, 7, &mut cb);
+    assert_eq!(ya, yb, "batched engine parity violated");
+    assert_eq!(ca, cb, "batched engine counter parity violated");
+    println!("  parity: logits + counters bit-identical across engines");
 
     println!("\n=== hotpath: dataset generation ===");
     let ds = Dataset::new(Suite::Cifar, 1);
@@ -48,33 +119,55 @@ fn main() -> emtopt::Result<()> {
         let (_x, _y) = ds.batch(Split::Train, idx, 64);
         idx += 64;
     });
-    println!(
-        "  -> {:.2} M px/s",
-        r.throughput(64.0 * 3072.0) / 1e6
-    );
+    let dataset_px_s = r.throughput(64.0 * 3072.0);
+    println!("  -> {:.2} M px/s", dataset_px_s / 1e6);
 
-    println!("\n=== hotpath: PJRT predict dispatch ===");
-    match emtopt::runtime::Artifacts::open_default() {
-        Ok(arts) => {
-            let predictor = emtopt::runtime::Predictor::new(&arts, "mlp_10")?;
-            let init = arts.manifest.artifact("mlp_10_init")?;
-            let init_exe = arts.runtime.load_hlo(&arts.dir.join(&init.file))?;
-            let mut outs =
-                emtopt::runtime::execute(&init_exe, &[emtopt::runtime::scalar_i32(0)])?;
-            let rho = emtopt::runtime::to_vec_f32(&outs.pop().unwrap())?;
-            let params = outs;
-            let (x, _) = ds.batch(Split::Test, 0, predictor.batch);
-            let mut seed = 0i32;
-            let r = report("predict batch=16 (mlp_10, noisy)", 3, 30, || {
-                seed += 1;
-                predictor.predict(&params, &rho, &x, seed, 1.0).unwrap();
-            });
-            println!(
-                "  -> {:.0} img/s through the full noisy model",
-                r.throughput(predictor.batch as f64)
-            );
+    #[cfg(feature = "aot")]
+    {
+        println!("\n=== hotpath: PJRT predict dispatch ===");
+        match emtopt::runtime::Artifacts::open_default() {
+            Ok(arts) => {
+                let predictor = emtopt::runtime::Predictor::new(&arts, "mlp_10")?;
+                let init = arts.manifest.artifact("mlp_10_init")?;
+                let init_exe = arts.runtime.load_hlo(&arts.dir.join(&init.file))?;
+                let mut outs =
+                    emtopt::runtime::execute(&init_exe, &[emtopt::runtime::scalar_i32(0)])?;
+                let rho = emtopt::runtime::to_vec_f32(&outs.pop().unwrap())?;
+                let params = outs;
+                let (px, _) = ds.batch(Split::Test, 0, predictor.batch);
+                let mut seed = 0i32;
+                let r = report("predict batch=16 (mlp_10, noisy)", 3, 30, || {
+                    seed += 1;
+                    predictor.predict(&params, &rho, &px, seed, 1.0).unwrap();
+                });
+                println!(
+                    "  -> {:.0} img/s through the full noisy model",
+                    r.throughput(predictor.batch as f64)
+                );
+            }
+            Err(e) => println!("(skipping PJRT bench: {e})"),
         }
-        Err(e) => println!("(skipping PJRT bench: {e})"),
     }
+    #[cfg(not(feature = "aot"))]
+    println!("\n(PJRT dispatch bench skipped: built without --features aot)");
+
+    // machine-readable throughput record for the perf trajectory
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let json = format!(
+        "{{\n  \"bench\": \"hotpath\",\n  \"unix_time\": {unix_time},\n  \
+         \"rayon_threads\": {threads},\n  \
+         \"mac_sim_per_s_original\": {mac_original:.1},\n  \
+         \"mac_sim_per_s_decomposed\": {mac_decomposed:.1},\n  \
+         \"mac_per_s_clean\": {mac_clean:.1},\n  \
+         \"batch32_seq_samples_per_s\": {seq_sps:.1},\n  \
+         \"batch32_par_samples_per_s\": {par_sps:.1},\n  \
+         \"batch_speedup\": {speedup:.3},\n  \
+         \"dataset_px_per_s\": {dataset_px_s:.1}\n}}\n"
+    );
+    std::fs::write("BENCH_hotpath.json", json)?;
+    println!("\nwrote BENCH_hotpath.json");
     Ok(())
 }

@@ -11,13 +11,22 @@
 //! 3. [`find_energy_at_drop`] — invert the sweep: minimum energy whose
 //!    accuracy drop (vs the GPU/noiseless baseline) is within a target.
 
-use crate::baselines::{method_factors, Method};
+use crate::baselines::Method;
+#[cfg(feature = "aot")]
+use crate::baselines::method_factors;
 use crate::coordinator::Solution;
-use crate::data::{Dataset, Split, Suite};
+use crate::data::Suite;
+#[cfg(feature = "aot")]
+use crate::data::{Dataset, Split};
 use crate::device::Intensity;
-use crate::energy::{EnergyModel, ReadMode};
+#[cfg(feature = "aot")]
+use crate::energy::EnergyModel;
+use crate::energy::ReadMode;
 use crate::models::ModelDesc;
-use crate::runtime::{raw_of_rho, rho_of_raw, Artifacts, Evaluator, Trainer};
+use crate::runtime::{raw_of_rho, rho_of_raw};
+#[cfg(feature = "aot")]
+use crate::runtime::{Artifacts, Evaluator, Trainer};
+#[cfg(feature = "aot")]
 use crate::Result;
 
 /// Training schedule of one solution run.
@@ -58,6 +67,7 @@ pub struct TrainedModel {
 }
 
 impl TrainedModel {
+    #[cfg(feature = "aot")]
     pub fn params_literals(&self) -> Result<Vec<xla::Literal>> {
         self.params
             .iter()
@@ -87,6 +97,7 @@ impl TrainedModel {
 
 /// Clean pretrain of one tiny zoo model ("start from a well-trained
 /// model", §5).  Cached on disk: all four solutions of a model share it.
+#[cfg(feature = "aot")]
 pub fn pretrain_cached(
     arts: &Artifacts,
     model_key: &str,
@@ -127,6 +138,7 @@ pub fn pretrain_cached(
     Ok(trained)
 }
 
+#[cfg(feature = "aot")]
 fn export(
     arts: &Artifacts,
     model_key: &str,
@@ -149,6 +161,7 @@ fn export(
 }
 
 /// Clean-pretrain (cached) + solution fine-tune of one tiny zoo model.
+#[cfg(feature = "aot")]
 pub fn train_solution(
     arts: &Artifacts,
     model_key: &str,
@@ -207,6 +220,7 @@ impl Default for EvalSetup {
 
 /// Evaluate a trained model at a given global rho scale and effective
 /// sigma multiplier (baseline read schemes pass `sigma_mult != 1`).
+#[cfg(feature = "aot")]
 pub fn eval_at_scale(
     evaluator: &Evaluator,
     trained: &TrainedModel,
@@ -241,6 +255,7 @@ pub fn eval_at_scale(
 }
 
 /// Noiseless ("GPU baseline") accuracy of a trained model.
+#[cfg(feature = "aot")]
 pub fn eval_baseline(
     evaluator: &Evaluator,
     trained: &TrainedModel,
@@ -261,6 +276,7 @@ pub struct AccuracyPoint {
 
 /// Sweep a trained model over global rho scales; energy is reported on the
 /// paper-scale model `paper_model` with the method's hardware factors.
+#[cfg(feature = "aot")]
 #[allow(clippy::too_many_arguments)]
 pub fn sweep_accuracy_vs_energy(
     evaluator: &Evaluator,

@@ -10,12 +10,14 @@ pub mod router;
 pub mod store;
 
 pub use experiments::{
-    find_energy_at_drop, sweep_accuracy_vs_energy, train_solution, AccuracyPoint,
-    EvalSetup, TrainConfig, TrainedModel,
+    find_energy_at_drop, AccuracyPoint, EvalSetup, TrainConfig, TrainedModel,
 };
+#[cfg(feature = "aot")]
+pub use experiments::{sweep_accuracy_vs_energy, train_solution};
 
 use crate::baselines::Method;
 use crate::energy::ReadMode;
+#[cfg(feature = "aot")]
 use crate::runtime::session::TrainKnobs;
 
 /// The paper's solution ladder (Fig 4 / §5).
@@ -58,6 +60,7 @@ impl Solution {
     }
 
     /// Fine-tuning knobs for this solution.
+    #[cfg(feature = "aot")]
     pub fn knobs(self, intensity: f32, lam: f32) -> TrainKnobs {
         match self {
             Solution::Traditional => TrainKnobs::traditional(),
@@ -100,6 +103,7 @@ mod tests {
         assert!("xyz".parse::<Solution>().is_err());
     }
 
+    #[cfg(feature = "aot")]
     #[test]
     fn knob_gates_match_solutions() {
         let t = Solution::Traditional.knobs(1.0, 0.1);

@@ -2,11 +2,21 @@
 //!
 //! The serving front of the coordinator (vllm-router-style): clients
 //! submit single images; the router accumulates them into fixed-size
-//! device batches (padding stragglers), executes on a dedicated engine
-//! thread that owns the PJRT executable (PJRT handles are `!Send`, so the
-//! engine is pinned to one thread and fed over a channel — the same
-//! single-owner pattern a real accelerator queue uses), and fans the
-//! per-sample logits back to the callers.
+//! device batches (padding stragglers) and fans the per-sample logits
+//! back to the callers.
+//!
+//! Two engine backends share the same [`InferenceClient`] front:
+//!
+//! * **Native** ([`serve_native`]) — the default.  A pool of worker
+//!   threads shares one immutable `Arc<NoisyModel>` (the crossbar arrays
+//!   are `Send + Sync` shared state); each worker pulls a padded batch off
+//!   the dispatch queue and runs [`NoisyModel::forward_batch`], which
+//!   additionally fans the batch across rayon.  Per-batch energy/latency
+//!   is aggregated into [`ServerStats`].
+//! * **AOT** ([`serve`], `--features aot`) — the PJRT executable path.
+//!   PJRT handles are `!Send`, so that engine is pinned to one thread and
+//!   fed over a channel (the single-owner pattern a real accelerator
+//!   queue uses).
 //!
 //! Batching policy: fire when the batch is full OR `max_wait` elapsed
 //! since the oldest queued request (classic dynamic batching).
@@ -17,20 +27,42 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
-use crate::coordinator::TrainedModel;
-use crate::data::IMG_LEN;
-use crate::device::Intensity;
-use crate::runtime::{Artifacts, Predictor};
+use crate::crossbar::ReadCounters;
+use crate::device::DeviceConfig;
+use crate::energy::ReadMode;
+use crate::inference::NoisyModel;
+use crate::rng::hash2;
 use crate::Result;
+
+#[cfg(feature = "aot")]
+use crate::coordinator::TrainedModel;
+#[cfg(feature = "aot")]
+use crate::data::IMG_LEN;
+#[cfg(feature = "aot")]
+use crate::device::Intensity;
+#[cfg(feature = "aot")]
+use crate::runtime::{Artifacts, Predictor};
 
 /// One inference request: an image and a reply slot for the logits.
 struct Request {
     image: Vec<f32>,
     reply: mpsc::Sender<Result<Vec<f32>>>,
-    enqueued: std::time::Instant,
+    enqueued: Instant,
+}
+
+/// Lock-free add of an f64 stored as bits in an [`AtomicU64`].
+fn atomic_add_f64(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(actual) => cur = actual,
+        }
+    }
 }
 
 /// Server statistics (atomic, read from any thread).
@@ -41,6 +73,13 @@ pub struct ServerStats {
     pub padded_slots: AtomicU64,
     /// Cumulative queueing latency in microseconds.
     pub queue_us: AtomicU64,
+    /// Cumulative model-execution latency in microseconds (per batch).
+    pub infer_us: AtomicU64,
+    /// Cumulative device read cycles (native engine).
+    pub read_cycles: AtomicU64,
+    /// f64 bit-patterns of the cumulative analog / peripheral energy (pJ).
+    cell_pj_bits: AtomicU64,
+    peripheral_pj_bits: AtomicU64,
 }
 
 impl ServerStats {
@@ -62,6 +101,42 @@ impl ServerStats {
         let padded = self.padded_slots.load(Ordering::Relaxed);
         (total_slots - padded) as f64 / total_slots as f64
     }
+
+    /// Mean model-execution latency per batch, microseconds.
+    pub fn mean_infer_us(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.infer_us.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    /// Accumulate a batch's device energy/cycle accounting.
+    pub fn add_counters(&self, c: &ReadCounters) {
+        atomic_add_f64(&self.cell_pj_bits, c.cell_pj);
+        atomic_add_f64(&self.peripheral_pj_bits, c.peripheral_pj);
+        self.read_cycles.fetch_add(c.cycles, Ordering::Relaxed);
+    }
+
+    /// Snapshot of the cumulative device energy/cycle accounting.
+    pub fn energy(&self) -> ReadCounters {
+        ReadCounters {
+            cell_pj: f64::from_bits(self.cell_pj_bits.load(Ordering::Relaxed)),
+            peripheral_pj: f64::from_bits(self.peripheral_pj_bits.load(Ordering::Relaxed)),
+            cycles: self.read_cycles.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Mean analog+peripheral energy per served request, picojoules.
+    pub fn mean_energy_pj_per_request(&self) -> f64 {
+        let n = self.requests.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.energy().total_pj() / n as f64
+        }
+    }
 }
 
 /// Handle used by clients to submit requests (clonable across threads).
@@ -69,18 +144,25 @@ impl ServerStats {
 pub struct InferenceClient {
     tx: mpsc::Sender<Request>,
     pub num_classes: usize,
+    /// Expected input length (d_in of the deployed model).
+    pub input_len: usize,
 }
 
 impl InferenceClient {
-    /// Classify one image (len IMG_LEN); blocks until the logits arrive.
+    /// Classify one image (len `input_len`); blocks until the logits arrive.
     pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
-        anyhow::ensure!(image.len() == IMG_LEN, "image must be {IMG_LEN} floats");
+        anyhow::ensure!(
+            image.len() == self.input_len,
+            "image must be {} floats, got {}",
+            self.input_len,
+            image.len()
+        );
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(Request {
                 image,
                 reply,
-                enqueued: std::time::Instant::now(),
+                enqueued: Instant::now(),
             })
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
         rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
@@ -98,7 +180,190 @@ impl InferenceClient {
     }
 }
 
-/// Configuration of the serving loop.
+// ---------------------------------------------------------------------------
+// native engine: shared Arc<NoisyModel>, pool of batch workers
+// ---------------------------------------------------------------------------
+
+/// Configuration of the native serving engine.
+#[derive(Clone, Debug)]
+pub struct NativeServerConfig {
+    /// Device batch size (requests per crossbar dispatch).
+    pub batch: usize,
+    /// Engine worker threads sharing the model (each runs whole batches;
+    /// `forward_batch` additionally parallelises inside a batch via rayon).
+    pub workers: usize,
+    /// Max time the oldest request may wait before a partial batch fires.
+    pub max_wait: Duration,
+    pub mode: ReadMode,
+    pub device: DeviceConfig,
+    /// Base RNG seed; batch `b` samples stream `hash2(seed, b)`.
+    pub seed: u64,
+}
+
+impl Default for NativeServerConfig {
+    fn default() -> Self {
+        NativeServerConfig {
+            batch: 16,
+            workers: 2,
+            max_wait: Duration::from_millis(2),
+            mode: ReadMode::Original,
+            device: DeviceConfig::default(),
+            seed: 1,
+        }
+    }
+}
+
+/// One padded device batch handed from the batcher to a worker.
+struct Job {
+    requests: Vec<Request>,
+    batch_id: u64,
+}
+
+/// Everything a native engine worker needs (shared model + accounting).
+struct Worker {
+    model: Arc<NoisyModel>,
+    stats: Arc<ServerStats>,
+    device: DeviceConfig,
+    mode: ReadMode,
+    batch: usize,
+    seed: u64,
+}
+
+impl Worker {
+    fn run_batch(&self, job: Job) {
+        let d_in = self.model.d_in();
+        let nc = self.model.d_out();
+        let n = job.requests.len();
+        // Unlike the fixed-shape AOT executables, the native engine accepts
+        // any batch length — run exactly the real requests, so under-filled
+        // batches burn no device energy on padding (padded_slots still
+        // records the unfilled share for the batch-fill statistic).
+        let mut x = vec![0.0f32; n * d_in];
+        for (i, r) in job.requests.iter().enumerate() {
+            x[i * d_in..(i + 1) * d_in].copy_from_slice(&r.image);
+        }
+        let t0 = Instant::now();
+        let mut counters = ReadCounters::default();
+        let logits = self.model.forward_batch(
+            &x,
+            self.mode,
+            &self.device,
+            hash2(self.seed, job.batch_id),
+            &mut counters,
+        );
+        let infer_us = t0.elapsed().as_micros() as u64;
+
+        self.stats.requests.fetch_add(n as u64, Ordering::Relaxed);
+        self.stats.batches.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .padded_slots
+            .fetch_add((self.batch - n) as u64, Ordering::Relaxed);
+        self.stats.infer_us.fetch_add(infer_us, Ordering::Relaxed);
+        self.stats.add_counters(&counters);
+
+        for (i, r) in job.requests.iter().enumerate() {
+            self.stats
+                .queue_us
+                .fetch_add(r.enqueued.elapsed().as_micros() as u64, Ordering::Relaxed);
+            let _ = r.reply.send(Ok(logits[i * nc..(i + 1) * nc].to_vec()));
+        }
+    }
+}
+
+/// Spawn the router + native engine pool over a shared immutable model.
+///
+/// Returns the client handle, stats, and the engine thread handles (the
+/// batcher plus `cfg.workers` workers).  Drop all clients to stop the
+/// engine; then join the handles.
+pub fn serve_native(
+    model: Arc<NoisyModel>,
+    cfg: NativeServerConfig,
+) -> Result<(InferenceClient, Arc<ServerStats>, Vec<std::thread::JoinHandle<()>>)> {
+    anyhow::ensure!(cfg.batch > 0, "batch must be positive");
+    anyhow::ensure!(cfg.workers > 0, "need at least one worker");
+    let input_len = model.d_in();
+    let num_classes = model.d_out();
+
+    let (tx, rx) = mpsc::channel::<Request>();
+    let (job_tx, job_rx) = mpsc::channel::<Job>();
+    let job_rx = Arc::new(Mutex::new(job_rx));
+    let stats = Arc::new(ServerStats::default());
+    let mut handles = Vec::with_capacity(cfg.workers + 1);
+
+    // Batcher: collects requests into padded batches, hands them to the pool.
+    let (batch, max_wait) = (cfg.batch, cfg.max_wait);
+    handles.push(std::thread::spawn(move || {
+        let mut batch_id = 0u64;
+        loop {
+            let first = match rx.recv() {
+                Ok(r) => r,
+                Err(_) => return, // all clients dropped
+            };
+            let mut pending = Vec::with_capacity(batch);
+            pending.push(first);
+            let deadline = Instant::now() + max_wait;
+            while pending.len() < batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(r) => pending.push(r),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            let job = Job {
+                requests: pending,
+                batch_id,
+            };
+            batch_id += 1;
+            if job_tx.send(job).is_err() {
+                return; // workers gone
+            }
+        }
+    }));
+
+    // Worker pool: all workers read the same Arc<NoisyModel>.
+    for _ in 0..cfg.workers {
+        let worker = Worker {
+            model: model.clone(),
+            stats: stats.clone(),
+            device: cfg.device.clone(),
+            mode: cfg.mode,
+            batch: cfg.batch,
+            seed: cfg.seed,
+        };
+        let job_rx = job_rx.clone();
+        handles.push(std::thread::spawn(move || loop {
+            let job = {
+                let guard = job_rx.lock().expect("job queue poisoned");
+                match guard.recv() {
+                    Ok(j) => j,
+                    Err(_) => return, // batcher gone
+                }
+            };
+            worker.run_batch(job);
+        }));
+    }
+
+    Ok((
+        InferenceClient {
+            tx,
+            num_classes,
+            input_len,
+        },
+        stats,
+        handles,
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// AOT engine (PJRT executables; --features aot)
+// ---------------------------------------------------------------------------
+
+/// Configuration of the AOT serving loop.
+#[cfg(feature = "aot")]
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub artifacts_dir: String,
@@ -108,6 +373,7 @@ pub struct ServerConfig {
     pub seed: i32,
 }
 
+#[cfg(feature = "aot")]
 impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
@@ -119,8 +385,9 @@ impl Default for ServerConfig {
     }
 }
 
-/// Spawn the router + engine; returns the client handle, stats, and the
-/// engine join handle (drop all clients to stop the engine).
+/// Spawn the router + AOT engine; returns the client handle, stats, and
+/// the engine join handle (drop all clients to stop the engine).
+#[cfg(feature = "aot")]
 pub fn serve(
     model: TrainedModel,
     cfg: ServerConfig,
@@ -160,9 +427,9 @@ pub fn serve(
                     Err(_) => return Ok(()), // all clients dropped
                 };
                 pending.push(first);
-                let deadline = std::time::Instant::now() + cfg.max_wait;
+                let deadline = Instant::now() + cfg.max_wait;
                 while pending.len() < batch {
-                    let now = std::time::Instant::now();
+                    let now = Instant::now();
                     if now >= deadline {
                         break;
                     }
@@ -180,8 +447,10 @@ pub fn serve(
                 }
                 let padded = batch - pending.len();
                 seed = seed.wrapping_add(1);
+                let t0 = Instant::now();
                 let logits =
                     predictor.predict(&params, &rho_raw, &x, seed, cfg.intensity.factor())?;
+                let infer_us = t0.elapsed().as_micros() as u64;
                 let nc = predictor.num_classes;
 
                 stats_engine
@@ -191,6 +460,7 @@ pub fn serve(
                 stats_engine
                     .padded_slots
                     .fetch_add(padded as u64, Ordering::Relaxed);
+                stats_engine.infer_us.fetch_add(infer_us, Ordering::Relaxed);
 
                 for (i, r) in pending.drain(..).enumerate() {
                     let out = logits[i * nc..(i + 1) * nc].to_vec();
@@ -206,12 +476,21 @@ pub fn serve(
         }
     });
 
-    Ok((InferenceClient { tx, num_classes }, stats, handle))
+    Ok((
+        InferenceClient {
+            tx,
+            num_classes,
+            input_len: IMG_LEN,
+        },
+        stats,
+        handle,
+    ))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::Rng;
 
     #[test]
     fn stats_fill_fraction() {
@@ -227,5 +506,99 @@ mod tests {
         let s = ServerStats::default();
         assert_eq!(s.mean_queue_us(), 0.0);
         assert_eq!(s.mean_batch_fill(16), 0.0);
+        assert_eq!(s.mean_infer_us(), 0.0);
+        assert_eq!(s.mean_energy_pj_per_request(), 0.0);
+        assert_eq!(s.energy(), ReadCounters::default());
+    }
+
+    #[test]
+    fn stats_energy_accumulates_atomically() {
+        let s = Arc::new(ServerStats::default());
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let s = s.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        s.add_counters(&ReadCounters {
+                            cell_pj: 0.5,
+                            peripheral_pj: 0.25,
+                            cycles: 2,
+                        });
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let e = s.energy();
+        assert!((e.cell_pj - 2000.0).abs() < 1e-9);
+        assert!((e.peripheral_pj - 1000.0).abs() < 1e-9);
+        assert_eq!(e.cycles, 8000);
+    }
+
+    #[test]
+    fn native_engine_serves_concurrent_clients() {
+        // tiny model, shared by 2 workers, hit from 4 client threads
+        let dev = DeviceConfig::default();
+        let mut rng = Rng::new(3);
+        let (d_in, d_out) = (6usize, 3usize);
+        let w: Vec<f32> = (0..d_in * d_out).map(|_| rng.normal() * 0.4).collect();
+        let b = vec![0.0f32; d_out];
+        let model = Arc::new(
+            NoisyModel::new(&[(w.as_slice(), b.as_slice(), d_in, d_out)], &dev).unwrap(),
+        );
+        let cfg = NativeServerConfig {
+            batch: 4,
+            workers: 2,
+            max_wait: Duration::from_millis(1),
+            device: dev,
+            ..Default::default()
+        };
+        let (client, stats, handles) = serve_native(model, cfg).unwrap();
+        let per_client = 8u64;
+        let clients: Vec<_> = (0..4u64)
+            .map(|c| {
+                let cl = client.clone();
+                std::thread::spawn(move || {
+                    let mut ok = 0u64;
+                    for i in 0..per_client {
+                        let mut r = Rng::stream(100 + c, i);
+                        let img: Vec<f32> = (0..6).map(|_| r.next_f32()).collect();
+                        let logits = cl.infer(img).unwrap();
+                        assert_eq!(logits.len(), 3);
+                        assert!(logits.iter().all(|v| v.is_finite()));
+                        ok += 1;
+                    }
+                    ok
+                })
+            })
+            .collect();
+        let served: u64 = clients.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(served, 32);
+        assert_eq!(stats.requests.load(Ordering::Relaxed), 32);
+        assert!(stats.batches.load(Ordering::Relaxed) >= 8); // 32 reqs / batch 4
+        assert!(stats.energy().total_pj() > 0.0);
+        assert!(stats.mean_energy_pj_per_request() > 0.0);
+        drop(client);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn client_rejects_wrong_input_len() {
+        let dev = DeviceConfig::default();
+        let w = vec![0.1f32; 4 * 2];
+        let b = vec![0.0f32; 2];
+        let model =
+            Arc::new(NoisyModel::new(&[(w.as_slice(), b.as_slice(), 4, 2)], &dev).unwrap());
+        let (client, _stats, handles) =
+            serve_native(model, NativeServerConfig::default()).unwrap();
+        assert!(client.infer(vec![0.0; 3]).is_err());
+        drop(client);
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 }

@@ -148,6 +148,7 @@ pub fn cache_path(
 }
 
 /// Load from cache or train + save.
+#[cfg(feature = "aot")]
 pub fn train_cached(
     arts: &crate::runtime::Artifacts,
     model_key: &str,

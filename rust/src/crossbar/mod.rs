@@ -8,10 +8,18 @@
 //! read cycles, and supports both read modes plus the baselines' read
 //! schemes (multi-read averaging, binarized bit-slicing).
 //!
+//! **Ownership split (DESIGN.md):** a programmed [`CrossbarArray`] is
+//! immutable shared state — every read path takes `&self`, RTN sampling
+//! uses a caller-supplied [`Rng`], and energy/latency accounting
+//! accumulates into a caller-owned [`ReadCounters`].  That makes arrays
+//! `Send + Sync`, so one `Arc`'d array (or model) serves any number of
+//! concurrent MAC streams with per-stream deterministic noise and
+//! per-request energy attribution.
+//!
 //! The accuracy experiments of Tables 1–2 / Figs 9–11 run through the AOT
-//! artifacts (XLA is far faster for full models); this module is the
-//! ground-truth device simulation used for microexperiments, the hot-path
-//! bench, and cross-validation against the Pallas kernels.
+//! artifacts (XLA is far faster for full models; `--features aot`); this
+//! module is the ground-truth device simulation used for microexperiments,
+//! the hot-path bench, and cross-validation against the Pallas kernels.
 
 pub mod tile;
 
@@ -27,7 +35,11 @@ pub const TILE_ROWS: usize = 256;
 /// Crossbar tile columns (bitlines).
 pub const TILE_COLS: usize = 256;
 
-/// Running energy/latency accounting of a crossbar array.
+/// Energy/latency accounting of a sequence of crossbar reads.
+///
+/// Owned by the caller (a request, a sample, a bench iteration — whatever
+/// granularity the accounting needs), not by the array: the array itself
+/// stays immutable and shareable.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct ReadCounters {
     pub cell_pj: f64,
@@ -47,6 +59,16 @@ impl ReadCounters {
     }
 }
 
+/// Reusable scratch for MAC reads: DAC level and bit-plane buffers.
+///
+/// One instance per execution stream (thread); reusing it across layers
+/// and samples keeps the noisy forward path allocation-free.
+#[derive(Clone, Debug, Default)]
+pub struct MacScratch {
+    levels: Vec<u32>,
+    bits: Vec<u32>,
+}
+
 /// A (K, N) weight matrix programmed over crossbar tiles.
 #[derive(Clone, Debug)]
 pub struct CrossbarArray {
@@ -58,7 +80,6 @@ pub struct CrossbarArray {
     weight_bits: u32,
     /// per-array energy coefficient (paper: tunable per layer)
     pub rho: f32,
-    pub counters: ReadCounters,
 }
 
 impl CrossbarArray {
@@ -95,7 +116,6 @@ impl CrossbarArray {
             w_scale,
             weight_bits: cfg.weight_bits,
             rho: cfg.rho,
-            counters: ReadCounters::default(),
         }
     }
 
@@ -115,24 +135,49 @@ impl CrossbarArray {
 
     /// One full-array MAC: `y[n] = sum_k x[k] * w~[k, n]` with fresh RTN
     /// samples per cell read (eq. 11).  `x` are raw activations; they are
-    /// DAC-quantised to `cfg.act_bits` internally.
+    /// DAC-quantised to `act_bits` internally.
     ///
     /// In `Original` mode this is a single analog read; in `Decomposed`
     /// mode (technique C) it is `act_bits` bit-plane reads with fresh
     /// fluctuation each cycle (eq. 15).
+    ///
+    /// Energy/cycle accounting accumulates into `counters`.  Convenience
+    /// wrapper over [`CrossbarArray::mac_scratch`] that allocates a
+    /// throwaway [`MacScratch`]; hot loops should hold one scratch per
+    /// stream and call `mac_scratch` directly.
+    #[allow(clippy::too_many_arguments)]
     pub fn mac(
-        &mut self,
+        &self,
         x: &[f32],
         out: &mut [f32],
         mode: ReadMode,
         act_bits: u32,
         intensity: f32,
         rng: &mut Rng,
+        counters: &mut ReadCounters,
+    ) {
+        let mut scratch = MacScratch::default();
+        self.mac_scratch(x, out, mode, act_bits, intensity, rng, counters, &mut scratch);
+    }
+
+    /// Allocation-free MAC: like [`CrossbarArray::mac`] but reusing a
+    /// caller-owned scratch for the DAC levels and bit-plane buffers.
+    #[allow(clippy::too_many_arguments)]
+    pub fn mac_scratch(
+        &self,
+        x: &[f32],
+        out: &mut [f32],
+        mode: ReadMode,
+        act_bits: u32,
+        intensity: f32,
+        rng: &mut Rng,
+        counters: &mut ReadCounters,
+        scratch: &mut MacScratch,
     ) {
         assert_eq!(x.len(), self.rows);
         assert_eq!(out.len(), self.cols);
         out.fill(0.0);
-        let (levels, act_scale) = quant::quant_act(x, act_bits);
+        let act_scale = quant::quant_act_into(x, act_bits, &mut scratch.levels);
         let sigma_norm = device::sigma_rel(self.rho, intensity); // vs full-scale
         let rho = self.rho;
         let w_scale = self.w_scale;
@@ -144,11 +189,11 @@ impl CrossbarArray {
 
         match mode {
             ReadMode::Original => {
-                for (ti, t) in self.tiles.iter_mut().enumerate() {
+                for (ti, t) in self.tiles.iter().enumerate() {
                     let (ty, tx) = (ti / tiles_x, ti % tiles_x);
                     let r0 = ty * TILE_ROWS;
                     let c0 = tx * TILE_COLS;
-                    let lv = &levels[r0..r0 + t.rows()];
+                    let lv = &scratch.levels[r0..r0 + t.rows()];
                     let e = t.current_sum(
                         lv,
                         &mut out[c0..c0 + t.cols()],
@@ -164,16 +209,18 @@ impl CrossbarArray {
             ReadMode::Decomposed => {
                 for p in 0..act_bits {
                     let scale = (1u32 << p) as f32;
-                    for (ti, t) in self.tiles.iter_mut().enumerate() {
+                    for (ti, t) in self.tiles.iter().enumerate() {
                         let (ty, tx) = (ti / tiles_x, ti % tiles_x);
                         let r0 = ty * TILE_ROWS;
                         let c0 = tx * TILE_COLS;
-                        let bits: Vec<u32> = levels[r0..r0 + t.rows()]
-                            .iter()
-                            .map(|&l| quant::bit_plane(l, p))
-                            .collect();
+                        scratch.bits.clear();
+                        scratch.bits.extend(
+                            scratch.levels[r0..r0 + t.rows()]
+                                .iter()
+                                .map(|&l| quant::bit_plane(l, p)),
+                        );
                         let e = t.current_sum_scaled(
-                            &bits,
+                            &scratch.bits,
                             &mut out[c0..c0 + t.cols()],
                             scale,
                             sigma_norm,
@@ -191,9 +238,9 @@ impl CrossbarArray {
         for v in out.iter_mut() {
             *v *= act_scale * w_scale;
         }
-        self.counters.cell_pj += cell_pj;
-        self.counters.peripheral_pj += peri_pj;
-        self.counters.cycles += cycles;
+        counters.cell_pj += cell_pj;
+        counters.peripheral_pj += peri_pj;
+        counters.cycles += cycles;
     }
 
     /// Noiseless reference MAC (for error measurements).
@@ -225,6 +272,17 @@ mod tests {
         (0..n).map(|_| r.normal() * 0.5).collect()
     }
 
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    #[test]
+    fn programmed_array_is_shareable() {
+        // the whole point of the ownership split: programmed arrays are
+        // plain immutable data, safe to share across engine threads.
+        assert_send_sync::<CrossbarArray>();
+        assert_send_sync::<Tile>();
+        assert_send_sync::<ReadCounters>();
+    }
+
     #[test]
     fn clean_mac_matches_quantised_matmul() {
         let (k, n) = (64, 32);
@@ -250,7 +308,7 @@ mod tests {
     fn noisy_mac_centered_on_clean() {
         let (k, n) = (128, 16);
         let w = randw(3, k * n);
-        let mut arr = CrossbarArray::program(&w, k, n, &cfg());
+        let arr = CrossbarArray::program(&w, k, n, &cfg());
         let mut rng = Rng::new(4);
         let x: Vec<f32> = (0..k).map(|_| rng.next_f32()).collect();
         let mut clean = vec![0.0f32; n];
@@ -258,8 +316,9 @@ mod tests {
         let trials = 200;
         let mut mean = vec![0.0f64; n];
         let mut out = vec![0.0f32; n];
+        let mut counters = ReadCounters::default();
         for _ in 0..trials {
-            arr.mac(&x, &mut out, ReadMode::Original, 5, 1.0, &mut rng);
+            arr.mac(&x, &mut out, ReadMode::Original, 5, 1.0, &mut rng, &mut counters);
             for (m, &o) in mean.iter_mut().zip(out.iter()) {
                 *m += o as f64 / trials as f64;
             }
@@ -285,11 +344,12 @@ mod tests {
         let x: Vec<f32> = (0..k).map(|_| rng.next_f32()).collect();
         let trials = 300;
         let mut out = vec![0.0f32; n];
-        let mut spread = |arr: &mut CrossbarArray, mode, rng: &mut Rng| {
+        let mut spread = |arr: &CrossbarArray, mode, rng: &mut Rng| {
+            let mut counters = ReadCounters::default();
             let mut sum = vec![0.0f64; n];
             let mut sq = vec![0.0f64; n];
             for _ in 0..trials {
-                arr.mac(&x, &mut out, mode, 5, 1.0, rng);
+                arr.mac(&x, &mut out, mode, 5, 1.0, rng, &mut counters);
                 for c in 0..n {
                     sum[c] += out[c] as f64;
                     sq[c] += (out[c] as f64).powi(2);
@@ -303,8 +363,8 @@ mod tests {
                 .sum::<f64>()
                 / n as f64
         };
-        let s_ori = spread(&mut arr, ReadMode::Original, &mut rng);
-        let s_dec = spread(&mut arr, ReadMode::Decomposed, &mut rng);
+        let s_ori = spread(&arr, ReadMode::Original, &mut rng);
+        let s_dec = spread(&arr, ReadMode::Decomposed, &mut rng);
         assert!(
             s_dec < s_ori,
             "decomposed std {s_dec} must be < original {s_ori}"
@@ -320,14 +380,57 @@ mod tests {
         let x: Vec<f32> = (0..k).map(|_| rng.next_f32()).collect();
         let mut out = vec![0.0f32; n];
 
-        let mut a1 = CrossbarArray::program(&w, k, n, &cfg());
-        a1.mac(&x, &mut out, ReadMode::Original, 5, 1.0, &mut rng);
-        let mut a2 = CrossbarArray::program(&w, k, n, &cfg());
-        a2.mac(&x, &mut out, ReadMode::Decomposed, 5, 1.0, &mut rng);
-        assert!(a2.counters.cell_pj < a1.counters.cell_pj);
+        let arr = CrossbarArray::program(&w, k, n, &cfg());
+        let mut c1 = ReadCounters::default();
+        arr.mac(&x, &mut out, ReadMode::Original, 5, 1.0, &mut rng, &mut c1);
+        let mut c2 = ReadCounters::default();
+        arr.mac(&x, &mut out, ReadMode::Decomposed, 5, 1.0, &mut rng, &mut c2);
+        assert!(c2.cell_pj < c1.cell_pj);
         // ... at the cost of more cycles and peripheral energy
-        assert!(a2.counters.cycles > a1.counters.cycles);
-        assert!(a2.counters.peripheral_pj > a1.counters.peripheral_pj);
+        assert!(c2.cycles > c1.cycles);
+        assert!(c2.peripheral_pj > c1.peripheral_pj);
+    }
+
+    #[test]
+    fn mac_scratch_matches_mac() {
+        // the allocation-free path is bit-identical to the wrapper
+        let (k, n) = (96, 24);
+        let w = randw(12, k * n);
+        let arr = CrossbarArray::program(&w, k, n, &cfg());
+        let x: Vec<f32> = {
+            let mut rx = Rng::new(14);
+            (0..k).map(|_| rx.next_f32()).collect()
+        };
+        let mut r1 = Rng::new(13);
+        let mut r2 = Rng::new(13);
+        let mut scratch = MacScratch::default();
+        for mode in [ReadMode::Original, ReadMode::Decomposed] {
+            let (mut o1, mut o2) = (vec![0.0f32; n], vec![0.0f32; n]);
+            let mut c1 = ReadCounters::default();
+            let mut c2 = ReadCounters::default();
+            arr.mac(&x, &mut o1, mode, 5, 1.0, &mut r1, &mut c1);
+            arr.mac_scratch(&x, &mut o2, mode, 5, 1.0, &mut r2, &mut c2, &mut scratch);
+            assert_eq!(o1, o2);
+            assert_eq!(c1, c2);
+        }
+    }
+
+    #[test]
+    fn counters_are_caller_owned_and_mergeable() {
+        let (k, n) = (32, 8);
+        let w = randw(21, k * n);
+        let arr = CrossbarArray::program(&w, k, n, &cfg());
+        let mut rng = Rng::new(22);
+        let x: Vec<f32> = (0..k).map(|_| rng.next_f32()).collect();
+        let mut out = vec![0.0f32; n];
+        let mut a = ReadCounters::default();
+        let mut b = ReadCounters::default();
+        arr.mac(&x, &mut out, ReadMode::Original, 5, 1.0, &mut rng, &mut a);
+        arr.mac(&x, &mut out, ReadMode::Original, 5, 1.0, &mut rng, &mut b);
+        let mut merged = a;
+        merged.merge(&b);
+        assert_eq!(merged.cycles, 2);
+        assert!((merged.total_pj() - (a.total_pj() + b.total_pj())).abs() < 1e-12);
     }
 
     #[test]
@@ -356,15 +459,16 @@ mod tests {
             arr.mac_clean(&x, &mut clean, 5);
             let trials = 100;
             let mut err = 0.0f64;
+            let mut counters = ReadCounters::default();
             for _ in 0..trials {
-                arr.mac(&x, &mut out, ReadMode::Original, 5, 1.0, rng);
+                arr.mac(&x, &mut out, ReadMode::Original, 5, 1.0, rng, &mut counters);
                 err += out
                     .iter()
                     .zip(clean.iter())
                     .map(|(a, b)| ((a - b) as f64).powi(2))
                     .sum::<f64>();
             }
-            (err, arr.counters.cell_pj)
+            (err, counters.cell_pj)
         };
         let (err_lo, e_lo) = run(0.5, &mut rng);
         let (err_hi, e_hi) = run(8.0, &mut rng);

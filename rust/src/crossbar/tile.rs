@@ -3,9 +3,11 @@
 //!
 //! Hot path: `current_sum` is the innermost loop of the native simulator —
 //! it draws one RTN state per (active row, column) cell per read, exactly
-//! eq. (7)/(11).  State sampling uses a counter-based hash (no allocation,
-//! no shared RNG contention); the per-read noise term is
-//! `sigma_norm * c_l` added to the normalised programmed weight.
+//! eq. (7)/(11).  Reads take `&self` and a caller-supplied [`Rng`], so a
+//! programmed tile is immutable shared state: any number of threads can
+//! read it concurrently, each with its own RNG stream (no allocation, no
+//! shared RNG contention); the per-read noise term is `sigma_norm * c_l`
+//! added to the normalised programmed weight.
 
 use crate::device::state_offsets;
 use crate::rng::Rng;
@@ -51,7 +53,7 @@ impl Tile {
     /// `sum_{r,c} |w_norm[r,c]| * level[r]` (the caller multiplies by
     /// `E0 * rho`).
     pub fn current_sum(
-        &mut self,
+        &self,
         levels: &[u32],
         out: &mut [f32],
         sigma_norm: f32,
@@ -63,7 +65,7 @@ impl Tile {
     /// Current-sum with an output scale factor (used for bit-plane reads:
     /// `scale = 2^p`). `levels` are the DAC integer levels per row.
     pub fn current_sum_scaled(
-        &mut self,
+        &self,
         levels: &[u32],
         out: &mut [f32],
         scale: f32,
@@ -116,7 +118,7 @@ mod tests {
     #[test]
     fn zero_sigma_equals_clean() {
         let w = vec![0.5, -0.25, 0.125, 1.0];
-        let mut t = Tile::new(w, 2, 2, 4);
+        let t = Tile::new(w, 2, 2, 4);
         let levels = vec![3u32, 1];
         let mut noisy = vec![0.0f32; 2];
         let mut clean = vec![0.0f32; 2];
@@ -129,7 +131,7 @@ mod tests {
     #[test]
     fn zero_level_rows_skipped_and_free() {
         let w = vec![1.0; 4];
-        let mut t = Tile::new(w, 2, 2, 4);
+        let t = Tile::new(w, 2, 2, 4);
         let mut out = vec![0.0f32; 2];
         let mut rng = Rng::new(2);
         let e = t.current_sum(&[0, 0], &mut out, 0.5, &mut rng);
@@ -140,7 +142,7 @@ mod tests {
     #[test]
     fn energy_counts_weight_times_level() {
         let w = vec![0.5, -0.5, 0.25, 0.25];
-        let mut t = Tile::new(w, 2, 2, 1); // single state: noiseless
+        let t = Tile::new(w, 2, 2, 1); // single state: noiseless
         let mut out = vec![0.0f32; 2];
         let mut rng = Rng::new(3);
         let e = t.current_sum(&[2, 4], &mut out, 0.0, &mut rng);
@@ -152,10 +154,10 @@ mod tests {
     fn noise_std_scales_with_sigma() {
         let cols = 4;
         let w = vec![0.0f32; cols]; // zero weights isolate the noise term
-        let mut t = Tile::new(w, 1, cols, 4);
+        let t = Tile::new(w, 1, cols, 4);
         let levels = vec![1u32];
         let mut rng = Rng::new(4);
-        let spread = |t: &mut Tile, sigma: f32, rng: &mut Rng| {
+        let spread = |t: &Tile, sigma: f32, rng: &mut Rng| {
             let trials = 4000;
             let mut sum = 0.0f64;
             let mut sq = 0.0f64;
@@ -171,8 +173,8 @@ mod tests {
             let n = (trials * cols) as f64;
             (sq / n - (sum / n).powi(2)).sqrt()
         };
-        let s1 = spread(&mut t, 0.1, &mut rng);
-        let s2 = spread(&mut t, 0.2, &mut rng);
+        let s1 = spread(&t, 0.1, &mut rng);
+        let s2 = spread(&t, 0.2, &mut rng);
         assert!((s2 / s1 - 2.0).abs() < 0.15, "ratio {}", s2 / s1);
     }
 }

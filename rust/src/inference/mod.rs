@@ -2,15 +2,28 @@
 //!
 //! Runs fully-connected stacks directly on [`CrossbarArray`]s with
 //! ReLU between layers — the device-level ground truth used by the
-//! hot-path bench, the property tests, and the Pallas-kernel
+//! hot-path bench, the property tests, the native serving backend
+//! (`coordinator::router::serve_native`) and the Pallas-kernel
 //! cross-validation.  (Full-model accuracy experiments run through the
-//! AOT artifacts; see `coordinator`.)
+//! AOT artifacts; see `coordinator`, `--features aot`.)
+//!
+//! **Execution model (DESIGN.md):** a [`NoisyModel`] is immutable shared
+//! state — programmed once, then read concurrently from any number of
+//! threads.  All mutable per-stream state lives in a caller-owned
+//! [`Scratch`] arena (layer ping-pong buffers + MAC scratch; zero
+//! allocations per forward) and a caller-owned [`ReadCounters`].
+//! [`NoisyModel::forward_batch`] fans a batch across rayon workers with
+//! counter-based per-sample RNG streams (`Rng::stream(seed, i)`), so
+//! logits AND energy counters are bit-identical at any thread count.
 
-use crate::crossbar::{CrossbarArray, ReadCounters};
+use crate::crossbar::{CrossbarArray, MacScratch, ReadCounters};
+use crate::data::{Dataset, IMG_LEN};
 use crate::device::DeviceConfig;
 use crate::energy::ReadMode;
 use crate::rng::Rng;
 use crate::Result;
+
+use rayon::prelude::*;
 
 /// One dense layer programmed on a crossbar, with a digital bias.
 pub struct NoisyLinear {
@@ -31,16 +44,27 @@ impl NoisyLinear {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     pub fn forward(
-        &mut self,
+        &self,
         x: &[f32],
         out: &mut [f32],
         mode: ReadMode,
         cfg: &DeviceConfig,
         rng: &mut Rng,
+        counters: &mut ReadCounters,
+        scratch: &mut MacScratch,
     ) {
-        self.array
-            .mac(x, out, mode, cfg.act_bits, cfg.intensity.factor(), rng);
+        self.array.mac_scratch(
+            x,
+            out,
+            mode,
+            cfg.act_bits,
+            cfg.intensity.factor(),
+            rng,
+            counters,
+            scratch,
+        );
         for (o, &b) in out.iter_mut().zip(self.bias.iter()) {
             *o += b;
         }
@@ -54,54 +78,227 @@ impl NoisyLinear {
     }
 }
 
-/// A stack of [`NoisyLinear`] layers with ReLU activations in between.
-pub struct NoisyMlp {
-    pub layers: Vec<NoisyLinear>,
-    scratch: Vec<Vec<f32>>,
+/// Per-stream scratch arena: two ping-pong activation buffers sized to the
+/// widest layer, plus the MAC level/bit-plane scratch.  ReLU is applied in
+/// place in these buffers, so a whole forward pass allocates nothing.
+#[derive(Clone, Debug)]
+pub struct Scratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+    mac: MacScratch,
 }
 
-impl NoisyMlp {
+impl Scratch {
+    pub fn for_model(model: &NoisyModel) -> Self {
+        let w = model.max_width();
+        Scratch {
+            a: vec![0.0f32; w],
+            b: vec![0.0f32; w],
+            mac: MacScratch::default(),
+        }
+    }
+}
+
+/// A stack of [`NoisyLinear`] layers with ReLU activations in between —
+/// immutable once built, `Send + Sync`, shareable behind an `Arc`.
+pub struct NoisyModel {
+    layers: Vec<NoisyLinear>,
+}
+
+impl NoisyModel {
     /// Build from per-layer (weights row-major (d_in, d_out), bias).
     pub fn new(specs: &[(&[f32], &[f32], usize, usize)], cfg: &DeviceConfig) -> Result<Self> {
+        anyhow::ensure!(!specs.is_empty(), "model needs at least one layer");
         let mut layers = Vec::with_capacity(specs.len());
-        let mut scratch = Vec::with_capacity(specs.len());
-        for &(w, b, d_in, d_out) in specs {
-            anyhow::ensure!(w.len() == d_in * d_out, "weight shape mismatch");
+        for (i, &(w, b, d_in, d_out)) in specs.iter().enumerate() {
+            anyhow::ensure!(w.len() == d_in * d_out, "layer {i}: weight shape mismatch");
+            if i > 0 {
+                anyhow::ensure!(
+                    specs[i - 1].3 == d_in,
+                    "layer {i}: d_in {d_in} != previous d_out {}",
+                    specs[i - 1].3
+                );
+            }
             layers.push(NoisyLinear::new(w, b, d_in, d_out, cfg));
-            scratch.push(vec![0.0f32; d_out]);
         }
-        Ok(NoisyMlp { layers, scratch })
+        Ok(NoisyModel { layers })
     }
 
-    /// Noisy forward of one sample; returns the logits slice.
-    pub fn forward(
-        &mut self,
+    pub fn layers(&self) -> &[NoisyLinear] {
+        &self.layers
+    }
+
+    /// Input width of the first layer.
+    pub fn d_in(&self) -> usize {
+        self.layers[0].d_in
+    }
+
+    /// Output width of the last layer (number of logits).
+    pub fn d_out(&self) -> usize {
+        self.layers[self.layers.len() - 1].d_out
+    }
+
+    /// Widest layer output — the scratch buffer size.
+    pub fn max_width(&self) -> usize {
+        self.layers.iter().map(|l| l.d_out).max().unwrap_or(0)
+    }
+
+    pub fn num_cells(&self) -> usize {
+        self.layers.iter().map(|l| l.array.num_cells()).sum()
+    }
+
+    /// Noisy forward of one sample into the caller's scratch arena;
+    /// returns the logits slice (borrowed from `scratch`).  Activations
+    /// entering a crossbar are ReLU'd in place in the scratch buffers
+    /// (the raw input `x` is assumed DAC-compatible, i.e. non-negative).
+    pub fn forward_into<'s>(
+        &self,
+        x: &[f32],
+        scratch: &'s mut Scratch,
+        mode: ReadMode,
+        cfg: &DeviceConfig,
+        rng: &mut Rng,
+        counters: &mut ReadCounters,
+    ) -> &'s [f32] {
+        assert_eq!(x.len(), self.d_in(), "input width mismatch");
+        let Scratch { a, b, mac } = scratch;
+        for (i, layer) in self.layers.iter().enumerate() {
+            // ping-pong: even layers write a, odd layers write b
+            let (prev, cur): (&mut [f32], &mut [f32]) = if i % 2 == 0 {
+                (b.as_mut_slice(), a.as_mut_slice())
+            } else {
+                (a.as_mut_slice(), b.as_mut_slice())
+            };
+            let out = &mut cur[..layer.d_out];
+            if i == 0 {
+                layer.forward(x, out, mode, cfg, rng, counters, mac);
+            } else {
+                let input = &mut prev[..self.layers[i - 1].d_out];
+                for v in input.iter_mut() {
+                    *v = v.max(0.0); // ReLU in place — no temporary Vec
+                }
+                layer.forward(input, out, mode, cfg, rng, counters, mac);
+            }
+        }
+        let last = self.layers.len() - 1;
+        let d_out = self.layers[last].d_out;
+        if last % 2 == 0 {
+            &a[..d_out]
+        } else {
+            &b[..d_out]
+        }
+    }
+
+    /// Convenience single-sample forward (allocates its own scratch).
+    pub fn forward_single(
+        &self,
         x: &[f32],
         mode: ReadMode,
         cfg: &DeviceConfig,
         rng: &mut Rng,
-    ) -> &[f32] {
-        let n = self.layers.len();
-        for i in 0..n {
-            // split scratch so we can borrow input and output disjointly
-            let (head, tail) = self.scratch.split_at_mut(i);
-            let input: &[f32] = if i == 0 { x } else { &head[i - 1] };
-            let out = &mut tail[0];
-            // activations entering a crossbar must be non-negative (DAC)
-            let relu_in: Vec<f32>;
-            let input = if i == 0 {
-                input
-            } else {
-                relu_in = input.iter().map(|&v| v.max(0.0)).collect();
-                &relu_in[..]
-            };
-            self.layers[i].forward(input, out, mode, cfg, rng);
+        counters: &mut ReadCounters,
+    ) -> Vec<f32> {
+        let mut scratch = Scratch::for_model(self);
+        self.forward_into(x, &mut scratch, mode, cfg, rng, counters)
+            .to_vec()
+    }
+
+    /// Batched noisy forward: `xs` is `batch * d_in` row-major samples;
+    /// returns `batch * d_out` logits and accumulates the whole batch's
+    /// energy/cycle accounting into `counters`.
+    ///
+    /// Samples fan out across the current rayon thread pool.  Sample `i`
+    /// draws from the counter-based stream `Rng::stream(seed, i)` and
+    /// accumulates into its own private counters; per-sample counters are
+    /// merged in index order afterwards — so logits and counters are
+    /// **bit-identical for a given `seed` at any thread count**, and
+    /// identical to [`NoisyModel::forward_batch_seq`].
+    pub fn forward_batch(
+        &self,
+        xs: &[f32],
+        mode: ReadMode,
+        cfg: &DeviceConfig,
+        seed: u64,
+        counters: &mut ReadCounters,
+    ) -> Vec<f32> {
+        let d_in = self.d_in();
+        let d_out = self.d_out();
+        assert!(
+            xs.len() % d_in == 0,
+            "batch input length {} not a multiple of d_in {}",
+            xs.len(),
+            d_in
+        );
+        let batch = xs.len() / d_in;
+        let mut logits = vec![0.0f32; batch * d_out];
+        let per_sample: Vec<ReadCounters> = logits
+            .par_chunks_mut(d_out)
+            .enumerate()
+            .map_init(
+                || Scratch::for_model(self),
+                |scratch, (i, out)| {
+                    let mut rng = Rng::stream(seed, i as u64);
+                    let mut c = ReadCounters::default();
+                    let y = self.forward_into(
+                        &xs[i * d_in..(i + 1) * d_in],
+                        scratch,
+                        mode,
+                        cfg,
+                        &mut rng,
+                        &mut c,
+                    );
+                    out.copy_from_slice(y);
+                    c
+                },
+            )
+            .collect();
+        for c in &per_sample {
+            counters.merge(c);
         }
-        &self.scratch[n - 1]
+        logits
+    }
+
+    /// Sequential reference for [`NoisyModel::forward_batch`]: identical
+    /// per-sample RNG streams and identical counter merge order, one
+    /// thread, one reused scratch.  Used by the parity tests and as the
+    /// single-sample-loop baseline in the hot-path bench.
+    pub fn forward_batch_seq(
+        &self,
+        xs: &[f32],
+        mode: ReadMode,
+        cfg: &DeviceConfig,
+        seed: u64,
+        counters: &mut ReadCounters,
+    ) -> Vec<f32> {
+        let d_in = self.d_in();
+        let d_out = self.d_out();
+        assert!(xs.len() % d_in == 0, "batch input length mismatch");
+        let batch = xs.len() / d_in;
+        let mut logits = vec![0.0f32; batch * d_out];
+        let mut scratch = Scratch::for_model(self);
+        let mut per_sample = Vec::with_capacity(batch);
+        for i in 0..batch {
+            let mut rng = Rng::stream(seed, i as u64);
+            let mut c = ReadCounters::default();
+            let y = self.forward_into(
+                &xs[i * d_in..(i + 1) * d_in],
+                &mut scratch,
+                mode,
+                cfg,
+                &mut rng,
+                &mut c,
+            );
+            logits[i * d_out..(i + 1) * d_out].copy_from_slice(y);
+            per_sample.push(c);
+        }
+        for c in &per_sample {
+            counters.merge(c);
+        }
+        logits
     }
 
     /// Noiseless forward (reference).
-    pub fn forward_clean(&mut self, x: &[f32], cfg: &DeviceConfig) -> Vec<f32> {
+    pub fn forward_clean(&self, x: &[f32], cfg: &DeviceConfig) -> Vec<f32> {
         let mut cur = x.to_vec();
         for layer in &self.layers {
             let mut out = vec![0.0f32; layer.d_out];
@@ -111,26 +308,34 @@ impl NoisyMlp {
         }
         cur
     }
+}
 
-    /// Aggregate energy/cycle counters over all layers.
-    pub fn counters(&self) -> ReadCounters {
-        let mut total = ReadCounters::default();
-        for l in &self.layers {
-            total.merge(&l.array.counters);
+/// Nearest-template linear classifier over a [`Dataset`]'s class
+/// templates, programmed on a crossbar: `logit_c = x . t_c - |t_c|^2 / 2`
+/// (exact nearest-template decision as one noisy analog layer).  Gives the
+/// native serving path a model with real accuracy without needing the AOT
+/// training stack.
+pub fn template_classifier(dataset: &Dataset, cfg: &DeviceConfig) -> Result<NoisyModel> {
+    let nc = dataset.num_classes;
+    let d = IMG_LEN;
+    let mut w = vec![0.0f32; d * nc];
+    let mut b = vec![0.0f32; nc];
+    for c in 0..nc {
+        let t = dataset.template(c);
+        for (r, &tv) in t.iter().enumerate() {
+            w[r * nc + c] = tv;
         }
-        total
+        b[c] = -0.5 * t.iter().map(|&v| v * v).sum::<f32>();
     }
-
-    pub fn num_cells(&self) -> usize {
-        self.layers.iter().map(|l| l.array.num_cells()).sum()
-    }
+    NoisyModel::new(&[(w.as_slice(), b.as_slice(), d, nc)], cfg)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::{Split, Suite};
 
-    fn mk_mlp(cfg: &DeviceConfig) -> NoisyMlp {
+    fn mk_model(cfg: &DeviceConfig) -> NoisyModel {
         let mut rng = Rng::new(1);
         let dims = [(16usize, 12usize), (12, 8), (8, 4)];
         let data: Vec<(Vec<f32>, Vec<f32>)> = dims
@@ -146,59 +351,160 @@ mod tests {
             .zip(dims.iter())
             .map(|((w, b), &(i, o))| (w.as_slice(), b.as_slice(), i, o))
             .collect();
-        NoisyMlp::new(&specs, cfg).unwrap()
+        NoisyModel::new(&specs, cfg).unwrap()
+    }
+
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    #[test]
+    fn model_is_shareable() {
+        assert_send_sync::<NoisyModel>();
+        assert_send_sync::<NoisyLinear>();
+        assert_send_sync::<Scratch>();
     }
 
     #[test]
     fn forward_shapes_and_finite() {
         let cfg = DeviceConfig::default();
-        let mut mlp = mk_mlp(&cfg);
+        let model = mk_model(&cfg);
         let mut rng = Rng::new(2);
         let x: Vec<f32> = (0..16).map(|_| rng.next_f32()).collect();
-        let y = mlp.forward(&x, ReadMode::Original, &cfg, &mut rng);
+        let mut counters = ReadCounters::default();
+        let y = model.forward_single(&x, ReadMode::Original, &cfg, &mut rng, &mut counters);
         assert_eq!(y.len(), 4);
         assert!(y.iter().all(|v| v.is_finite()));
+        assert_eq!(model.d_in(), 16);
+        assert_eq!(model.d_out(), 4);
+        assert_eq!(model.max_width(), 12);
     }
 
     #[test]
     fn noisy_tracks_clean_at_high_rho() {
-        let mut cfg = DeviceConfig::default();
-        cfg.rho = 64.0; // nearly noiseless
-        let mut mlp = mk_mlp(&cfg);
+        let cfg = DeviceConfig {
+            rho: 64.0, // nearly noiseless
+            ..DeviceConfig::default()
+        };
+        let model = mk_model(&cfg);
         let mut rng = Rng::new(3);
         let x: Vec<f32> = (0..16).map(|_| rng.next_f32()).collect();
-        let clean = mlp.forward_clean(&x, &cfg);
-        let noisy = mlp.forward(&x, ReadMode::Original, &cfg, &mut rng).to_vec();
+        let clean = model.forward_clean(&x, &cfg);
+        let mut counters = ReadCounters::default();
+        let noisy = model.forward_single(&x, ReadMode::Original, &cfg, &mut rng, &mut counters);
         for (a, b) in noisy.iter().zip(clean.iter()) {
             assert!((a - b).abs() < 0.25 * (b.abs() + 1.0), "{a} vs {b}");
         }
     }
 
     #[test]
-    fn counters_accumulate() {
+    fn counters_accumulate_across_calls() {
         let cfg = DeviceConfig::default();
-        let mut mlp = mk_mlp(&cfg);
+        let model = mk_model(&cfg);
         let mut rng = Rng::new(4);
         let x: Vec<f32> = (0..16).map(|_| rng.next_f32()).collect();
-        mlp.forward(&x, ReadMode::Original, &cfg, &mut rng);
-        let c1 = mlp.counters();
-        mlp.forward(&x, ReadMode::Original, &cfg, &mut rng);
-        let c2 = mlp.counters();
-        assert!(c2.cell_pj > c1.cell_pj);
-        assert_eq!(c2.cycles, 2 * c1.cycles);
+        let mut counters = ReadCounters::default();
+        model.forward_single(&x, ReadMode::Original, &cfg, &mut rng, &mut counters);
+        let c1 = counters;
+        model.forward_single(&x, ReadMode::Original, &cfg, &mut rng, &mut counters);
+        assert!(counters.cell_pj > c1.cell_pj);
+        assert_eq!(counters.cycles, 2 * c1.cycles);
     }
 
     #[test]
     fn decomposed_more_cycles_less_cell_energy() {
         let cfg = DeviceConfig::default();
+        let model = mk_model(&cfg);
         let mut rng = Rng::new(5);
         let x: Vec<f32> = (0..16).map(|_| rng.next_f32()).collect();
 
-        let mut m1 = mk_mlp(&cfg);
-        m1.forward(&x, ReadMode::Original, &cfg, &mut rng);
-        let mut m2 = mk_mlp(&cfg);
-        m2.forward(&x, ReadMode::Decomposed, &cfg, &mut rng);
-        assert!(m2.counters().cycles > m1.counters().cycles);
-        assert!(m2.counters().cell_pj < m1.counters().cell_pj);
+        let mut c1 = ReadCounters::default();
+        model.forward_single(&x, ReadMode::Original, &cfg, &mut rng, &mut c1);
+        let mut c2 = ReadCounters::default();
+        model.forward_single(&x, ReadMode::Decomposed, &cfg, &mut rng, &mut c2);
+        assert!(c2.cycles > c1.cycles);
+        assert!(c2.cell_pj < c1.cell_pj);
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        // the same stream + the same scratch arena reproduce bit-identical
+        // logits; a fresh scratch does too (no state leaks between runs)
+        let cfg = DeviceConfig::default();
+        let model = mk_model(&cfg);
+        let x: Vec<f32> = {
+            let mut r = Rng::new(7);
+            (0..16).map(|_| r.next_f32()).collect()
+        };
+        let mut scratch = Scratch::for_model(&model);
+        let mut c = ReadCounters::default();
+        let mut rng = Rng::stream(99, 0);
+        let y1 = model
+            .forward_into(&x, &mut scratch, ReadMode::Original, &cfg, &mut rng, &mut c)
+            .to_vec();
+        let mut rng = Rng::stream(99, 0);
+        let y2 = model
+            .forward_into(&x, &mut scratch, ReadMode::Original, &cfg, &mut rng, &mut c)
+            .to_vec();
+        let mut rng = Rng::stream(99, 0);
+        let y3 = model.forward_single(&x, ReadMode::Original, &cfg, &mut rng, &mut c);
+        assert_eq!(y1, y2);
+        assert_eq!(y1, y3);
+    }
+
+    #[test]
+    fn batch_matches_sequential_quick() {
+        // quick in-module check; the full thread-count matrix lives in
+        // tests/batch_parity.rs
+        let cfg = DeviceConfig::default();
+        let model = mk_model(&cfg);
+        let xs: Vec<f32> = {
+            let mut r = Rng::new(8);
+            (0..16 * 6).map(|_| r.next_f32()).collect()
+        };
+        let mut c_par = ReadCounters::default();
+        let mut c_seq = ReadCounters::default();
+        let par = model.forward_batch(&xs, ReadMode::Original, &cfg, 42, &mut c_par);
+        let seq = model.forward_batch_seq(&xs, ReadMode::Original, &cfg, 42, &mut c_seq);
+        assert_eq!(par, seq);
+        assert_eq!(c_par, c_seq);
+        assert_eq!(par.len(), 6 * 4);
+    }
+
+    #[test]
+    fn template_classifier_classifies() {
+        let cfg = DeviceConfig::default();
+        let ds = Dataset::new(Suite::Cifar, 5);
+        let model = template_classifier(&ds, &cfg).unwrap();
+        assert_eq!(model.d_in(), IMG_LEN);
+        assert_eq!(model.d_out(), 10);
+        let n = 48usize;
+        let mut xs = vec![0.0f32; n * IMG_LEN];
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            labels.push(ds.sample_into(
+                Split::Test,
+                i as u64,
+                &mut xs[i * IMG_LEN..(i + 1) * IMG_LEN],
+            ));
+        }
+        let mut counters = ReadCounters::default();
+        let logits = model.forward_batch(&xs, ReadMode::Original, &cfg, 1, &mut counters);
+        let mut correct = 0;
+        for (i, &label) in labels.iter().enumerate() {
+            let row = &logits[i * 10..(i + 1) * 10];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(c, _)| c)
+                .unwrap();
+            if pred == label as usize {
+                correct += 1;
+            }
+        }
+        assert!(
+            correct as f64 / n as f64 > 0.8,
+            "template classifier should beat 80% on the noisy device, got {correct}/{n}"
+        );
+        assert!(counters.cell_pj > 0.0 && counters.cycles == n as u64);
     }
 }

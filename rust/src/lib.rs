@@ -14,10 +14,15 @@
 //!   average out RTN fluctuation while cutting read energy.
 //!
 //! Architecture (see DESIGN.md): a Rust coordinator (this crate) owns the
-//! request path — it loads JAX/Pallas computations that were AOT-lowered to
-//! HLO text at build time (`make artifacts`) and executes them through the
-//! PJRT CPU client (`runtime`), alongside a native device/crossbar/energy
-//! simulation substrate used for the paper's hardware-level experiments.
+//! request path.  The **native execution engine** — immutable
+//! `crossbar::CrossbarArray`s shared behind an `Arc`, the batched
+//! `inference::NoisyModel` with per-sample counter-based RNG streams, and
+//! the `coordinator::router` worker pool — serves traffic directly off the
+//! device simulation substrate.  With `--features aot` the crate
+//! additionally loads JAX/Pallas computations that were AOT-lowered to
+//! HLO text at build time (`make artifacts`) and executes them through
+//! the PJRT CPU client (`runtime`) for the paper's full-model accuracy
+//! experiments.
 
 pub mod baselines;
 pub mod config;

@@ -1,27 +1,41 @@
 //! `emtopt` CLI — the coordinator leader entrypoint.
 //!
 //! Commands:
-//!   info      artifact + model inventory
-//!   train     train one (model, solution) and cache it under runs/cache
-//!   sweep     accuracy-vs-energy curve (Fig 9 primitive)
-//!   compare   ours-vs-SOTA at max accuracy (Fig 10/11 primitive)
-//!   serve     run the dynamic-batching inference router demo
+//!   info      artifact + model inventory                  [--features aot]
+//!   train     train one (model, solution), cache it       [--features aot]
+//!   sweep     accuracy-vs-energy curve (Fig 9 primitive)  [--features aot]
+//!   compare   ours-vs-SOTA at max accuracy (Fig 10/11)    [--features aot]
+//!   serve     dynamic-batching router over the NATIVE crossbar engine
+//!
+//! `serve` runs entirely on the native device substrate (no XLA needed): a
+//! nearest-template classifier is programmed onto crossbar arrays and
+//! served by a pool of workers sharing one immutable model.
 //!
 //! Flags: --model KEY --solution trad|a|ab|abc --intensity weak|normal|strong
 //!        --pretrain N --finetune N --lam F --seed N --artifacts DIR
 //!        --config FILE (TOML; flags override)
 
-use emtopt::baselines::Method;
+use std::sync::Arc;
+
 use emtopt::config::ExperimentConfig;
-use emtopt::coordinator::{self, store, Solution, TrainConfig};
-use emtopt::data::Suite;
-use emtopt::device::Intensity;
-use emtopt::energy::EnergyModel;
-use emtopt::metrics::{fmt_cells, fmt_delay_us, fmt_energy_uj, fmt_pct, Table};
-use emtopt::runtime::{Artifacts, Evaluator};
-use emtopt::timing::TimingModel;
+use emtopt::coordinator::router::{serve_native, NativeServerConfig};
+use emtopt::data::{Dataset, Split};
+use emtopt::device::DeviceConfig;
 use emtopt::util::cli::Args;
 use emtopt::Result;
+
+#[cfg(feature = "aot")]
+use emtopt::baselines::Method;
+#[cfg(feature = "aot")]
+use emtopt::coordinator::{self, store, Solution};
+#[cfg(feature = "aot")]
+use emtopt::energy::EnergyModel;
+#[cfg(feature = "aot")]
+use emtopt::metrics::{fmt_cells, fmt_delay_us, fmt_energy_uj, fmt_pct, Table};
+#[cfg(feature = "aot")]
+use emtopt::runtime::{Artifacts, Evaluator};
+#[cfg(feature = "aot")]
+use emtopt::timing::TimingModel;
 
 const USAGE: &str = "\
 emtopt — in-memory deep learning with EMT (Wang et al., 2021)
@@ -29,11 +43,11 @@ emtopt — in-memory deep learning with EMT (Wang et al., 2021)
 USAGE: emtopt <command> [--flags]
 
 COMMANDS:
-  info      artifact + model inventory
-  train     train one (model, solution); cached under runs/cache
-  sweep     accuracy-vs-energy curve of a solution (Fig 9 primitive)
-  compare   ours vs SOTA at max accuracy (Fig 10/11 primitive)
-  serve     dynamic-batching inference router demo
+  info      artifact + model inventory                  [needs --features aot]
+  train     train one (model, solution); cached         [needs --features aot]
+  sweep     accuracy-vs-energy curve (Fig 9 primitive)  [needs --features aot]
+  compare   ours vs SOTA at max accuracy (Fig 10/11)    [needs --features aot]
+  serve     dynamic-batching router over the native crossbar engine
 
 FLAGS (defaults in parentheses):
   --artifacts DIR     (artifacts)
@@ -44,6 +58,7 @@ FLAGS (defaults in parentheses):
   --pretrain N        (120)   --finetune N (120)
   --lam F             (0.3)   --seed N (7)
   --requests N        serve: request count (256)
+  --workers N         serve: engine workers (2)
 ";
 
 fn main() {
@@ -78,7 +93,11 @@ fn run() -> Result<()> {
         Some("train") => train(&cfg),
         Some("sweep") => sweep(&cfg),
         Some("compare") => compare(&cfg),
-        Some("serve") => serve(&cfg, args.parse_or("requests", 256u32)?),
+        Some("serve") => serve(
+            &cfg,
+            args.parse_or("requests", 256u32)?,
+            args.parse_or("workers", 2usize)?,
+        ),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -86,6 +105,36 @@ fn run() -> Result<()> {
     }
 }
 
+#[cfg(not(feature = "aot"))]
+fn aot_missing(cmd: &str) -> Result<()> {
+    anyhow::bail!(
+        "`{cmd}` drives the PJRT/XLA artifact runtime, which is not compiled \
+         in; rebuild with `cargo build --release --features aot` (see \
+         rust/Cargo.toml for the xla dependency note)"
+    )
+}
+
+#[cfg(not(feature = "aot"))]
+fn info(_cfg: &ExperimentConfig) -> Result<()> {
+    aot_missing("info")
+}
+
+#[cfg(not(feature = "aot"))]
+fn train(_cfg: &ExperimentConfig) -> Result<()> {
+    aot_missing("train")
+}
+
+#[cfg(not(feature = "aot"))]
+fn sweep(_cfg: &ExperimentConfig) -> Result<()> {
+    aot_missing("sweep")
+}
+
+#[cfg(not(feature = "aot"))]
+fn compare(_cfg: &ExperimentConfig) -> Result<()> {
+    aot_missing("compare")
+}
+
+#[cfg(feature = "aot")]
 fn info(cfg: &ExperimentConfig) -> Result<()> {
     let arts = Artifacts::open(&cfg.artifacts)?;
     println!("platform: {}", arts.runtime.platform());
@@ -112,6 +161,7 @@ fn info(cfg: &ExperimentConfig) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "aot")]
 fn train(cfg: &ExperimentConfig) -> Result<()> {
     let arts = Artifacts::open(&cfg.artifacts)?;
     let sol = cfg.solution_parsed()?;
@@ -141,6 +191,7 @@ fn train(cfg: &ExperimentConfig) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "aot")]
 fn sweep(cfg: &ExperimentConfig) -> Result<()> {
     let arts = Artifacts::open(&cfg.artifacts)?;
     let sol = cfg.solution_parsed()?;
@@ -183,6 +234,7 @@ fn sweep(cfg: &ExperimentConfig) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "aot")]
 fn compare(cfg: &ExperimentConfig) -> Result<()> {
     let arts = Artifacts::open(&cfg.artifacts)?;
     let inten = cfg.intensity_parsed()?;
@@ -239,55 +291,81 @@ fn compare(cfg: &ExperimentConfig) -> Result<()> {
     Ok(())
 }
 
-fn serve(cfg: &ExperimentConfig, requests: u32) -> Result<()> {
+/// Serve on the native engine: a nearest-template classifier programmed on
+/// crossbar arrays, shared by a worker pool, hit by concurrent clients.
+fn serve(cfg: &ExperimentConfig, requests: u32, workers: usize) -> Result<()> {
     let suite = cfg.suite();
-    let trained = {
-        let arts = Artifacts::open(&cfg.artifacts)?;
-        let tc = cfg.train_config()?;
-        store::train_cached(&arts, &cfg.model, suite, Solution::AB, &tc)?
-    };
-    let server_cfg = coordinator::router::ServerConfig {
-        artifacts_dir: cfg.artifacts.clone(),
+    let sol = cfg.solution_parsed()?;
+    let dev = DeviceConfig {
         intensity: cfg.intensity_parsed()?,
+        ..DeviceConfig::default()
+    };
+    let dataset = Dataset::new(suite, emtopt::data::DATA_SEED);
+    let model = Arc::new(emtopt::inference::template_classifier(&dataset, &dev)?);
+    println!(
+        "native engine: template classifier, {} cells, {} workers, read mode {:?}",
+        model.num_cells(),
+        workers,
+        sol.read_mode()
+    );
+    let server_cfg = NativeServerConfig {
+        workers,
+        mode: sol.read_mode(),
+        device: dev,
         ..Default::default()
     };
-    let (client, stats, handle) = coordinator::router::serve(trained, server_cfg)?;
+    let batch = server_cfg.batch;
+    let (client, stats, engines) = serve_native(model, server_cfg)?;
 
-    let dataset = emtopt::data::Dataset::new(suite, 42);
     let t0 = std::time::Instant::now();
-    let workers = 8usize;
-    let per = requests as usize / workers;
-    let oks: Vec<std::thread::JoinHandle<u32>> = (0..workers)
-        .map(|w| {
-            let c = client.clone();
-            let d = dataset.clone();
+    let client_threads = 8usize;
+    let per = (requests as usize).div_ceil(client_threads);
+    let handles: Vec<_> = (0..client_threads)
+        .map(|c| {
+            let cl = client.clone();
+            let ds = dataset.clone();
             std::thread::spawn(move || {
-                let mut ok = 0;
+                let (mut ok, mut correct) = (0u32, 0u32);
                 for i in 0..per {
-                    let (x, _) =
-                        d.batch(emtopt::data::Split::Test, (w * per + i) as u64, 1);
-                    if c.infer(x).is_ok() {
+                    let idx = (c * per + i) as u64;
+                    let mut img = vec![0.0f32; emtopt::data::IMG_LEN];
+                    let label = ds.sample_into(Split::Test, idx, &mut img);
+                    if let Ok(pred) = cl.classify(img) {
                         ok += 1;
+                        if pred == label as usize {
+                            correct += 1;
+                        }
                     }
                 }
-                ok
+                (ok, correct)
             })
         })
         .collect();
-    let ok: u32 = oks.into_iter().map(|h| h.join().unwrap_or(0)).sum();
+    let (mut ok, mut correct) = (0u32, 0u32);
+    for h in handles {
+        let (o, c) = h.join().unwrap();
+        ok += o;
+        correct += c;
+    }
     let dt = t0.elapsed();
     println!(
-        "{ok}/{requests} ok in {:.2}s  ({:.0} req/s, mean queue {:.1} ms, batch fill {:.0}%)",
+        "{ok}/{} ok in {:.2}s  ({:.0} req/s)",
+        per * client_threads,
         dt.as_secs_f64(),
-        requests as f64 / dt.as_secs_f64(),
+        ok as f64 / dt.as_secs_f64(),
+    );
+    println!(
+        "accuracy {:.1}% | mean queue {:.2} ms | mean infer {:.2} ms/batch | \
+         batch fill {:.0}% | {:.1} nJ/request",
+        100.0 * correct as f64 / ok.max(1) as f64,
         stats.mean_queue_us() / 1000.0,
-        stats.mean_batch_fill(16) * 100.0,
+        stats.mean_infer_us() / 1000.0,
+        stats.mean_batch_fill(batch) * 100.0,
+        stats.mean_energy_pj_per_request() / 1000.0,
     );
     drop(client);
-    handle.join().ok();
+    for h in engines {
+        h.join().ok();
+    }
     Ok(())
 }
-
-// Intensity is referenced in type signatures above; keep the import honest.
-#[allow(dead_code)]
-fn _unused(_: Intensity, _: Suite, _: TrainConfig) {}

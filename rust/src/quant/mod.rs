@@ -33,14 +33,21 @@ pub fn dequant_weight(q: &[i32], scale: f32, bits: u32) -> Vec<f32> {
 /// Unsigned activation quantisation to `bits` with a dynamic per-tensor
 /// scale. Returns (integer levels, scale): `x ≈ level * scale`.
 pub fn quant_act(x: &[f32], bits: u32) -> (Vec<u32>, f32) {
+    let mut q = Vec::new();
+    let s = quant_act_into(x, bits, &mut q);
+    (q, s)
+}
+
+/// Allocation-free variant of [`quant_act`]: writes the levels into `out`
+/// (cleared and refilled, capacity reused) and returns the scale.  This is
+/// the hot-path entry used by the crossbar MAC scratch.
+pub fn quant_act_into(x: &[f32], bits: u32, out: &mut Vec<u32>) -> f32 {
     let n = ((1u32 << bits) - 1) as f32;
     let max = x.iter().fold(0.0f32, |m, &v| m.max(v)).max(1e-6);
     let s = max / n;
-    let q = x
-        .iter()
-        .map(|&v| ((v / s).round().clamp(0.0, n)) as u32)
-        .collect();
-    (q, s)
+    out.clear();
+    out.extend(x.iter().map(|&v| ((v / s).round().clamp(0.0, n)) as u32));
+    s
 }
 
 /// Bit-plane decomposition of one activation level (LSB first).
@@ -100,6 +107,19 @@ mod tests {
         let x = vec![0.0, 0.25, 0.5, 1.0];
         let (q, _) = quant_act(&x, 2);
         assert_eq!(q, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn quant_act_into_matches_and_reuses_capacity() {
+        let x: Vec<f32> = randvec(9, 128).iter().map(|v| v.abs()).collect();
+        let (q, s) = quant_act(&x, 5);
+        let mut buf = Vec::new();
+        let s2 = quant_act_into(&x, 5, &mut buf);
+        assert_eq!(q, buf);
+        assert_eq!(s, s2);
+        let cap = buf.capacity();
+        quant_act_into(&x, 5, &mut buf);
+        assert_eq!(buf.capacity(), cap, "no realloc on reuse");
     }
 
     #[test]

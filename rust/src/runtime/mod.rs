@@ -4,23 +4,35 @@
 //! is HLO **text** — xla_extension 0.5.1 rejects jax>=0.5 serialized
 //! protos (64-bit instruction ids); the text parser reassigns ids.
 //! Pattern adapted from /opt/xla-example/load_hlo/.
+//!
+//! Everything touching PJRT/XLA is behind the default-off `aot` feature
+//! (see rust/Cargo.toml), so the native execution engine builds without
+//! the XLA toolchain.  The manifest schema and the rho parameterisation
+//! helpers below are plain Rust and always available.
 
 pub mod manifest;
+#[cfg(feature = "aot")]
 pub mod session;
 
 pub use manifest::{ArtifactInfo, Manifest, ModelInfo, TensorSpec};
+#[cfg(feature = "aot")]
 pub use session::{EvalResult, Evaluator, Predictor, TrainOutput, Trainer};
 
+#[cfg(feature = "aot")]
 use std::collections::HashMap;
+#[cfg(feature = "aot")]
 use std::path::{Path, PathBuf};
 
+#[cfg(feature = "aot")]
 use crate::Result;
 
 /// Shared PJRT CPU client.
+#[cfg(feature = "aot")]
 pub struct Runtime {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "aot")]
 impl Runtime {
     pub fn cpu() -> Result<Self> {
         Ok(Runtime {
@@ -46,6 +58,7 @@ impl Runtime {
 }
 
 /// Artifact store: manifest + lazily compiled executables.
+#[cfg(feature = "aot")]
 pub struct Artifacts {
     pub dir: PathBuf,
     pub manifest: Manifest,
@@ -53,6 +66,7 @@ pub struct Artifacts {
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "aot")]
 impl Artifacts {
     /// Open an artifact directory produced by `make artifacts`.
     pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
@@ -93,6 +107,7 @@ impl Artifacts {
 // ---------------------------------------------------------------------------
 
 /// Build an f32 literal of the given shape.
+#[cfg(feature = "aot")]
 pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
     let numel: usize = shape.iter().product();
     anyhow::ensure!(data.len() == numel, "shape/data mismatch");
@@ -103,6 +118,7 @@ pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
 }
 
 /// Build an i32 literal of the given shape.
+#[cfg(feature = "aot")]
 pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
     let numel: usize = shape.iter().product();
     anyhow::ensure!(data.len() == numel, "shape/data mismatch");
@@ -113,17 +129,20 @@ pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
 }
 
 /// (1,)-shaped f32 literal (the flat-signature scalar convention).
+#[cfg(feature = "aot")]
 pub fn scalar_f32(v: f32) -> xla::Literal {
     xla::Literal::vec1(&[v])
 }
 
 /// (1,)-shaped i32 literal.
+#[cfg(feature = "aot")]
 pub fn scalar_i32(v: i32) -> xla::Literal {
     xla::Literal::vec1(&[v])
 }
 
 /// Execute an executable on literal args and unpack the tuple of outputs.
 /// Accepts owned or borrowed literals (`&[Literal]` or `&[&Literal]`).
+#[cfg(feature = "aot")]
 pub fn execute<L: std::borrow::Borrow<xla::Literal>>(
     exe: &xla::PjRtLoadedExecutable,
     args: &[L],
@@ -138,6 +157,7 @@ pub fn execute<L: std::borrow::Borrow<xla::Literal>>(
 }
 
 /// Read an f32 literal back into a Vec.
+#[cfg(feature = "aot")]
 pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
     lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))
 }

@@ -1,0 +1,144 @@
+//! Batched-vs-sequential parity of the shared-state execution engine
+//! (ISSUE 1 acceptance): `NoisyModel::forward_batch` must produce
+//! bit-identical logits AND bit-identical `ReadCounters` to a
+//! sample-by-sample loop under the fixed per-sample RNG streams
+//! `Rng::stream(seed, i)` — at 1, 2, and N threads, in both read modes.
+
+use emtopt::crossbar::ReadCounters;
+use emtopt::device::DeviceConfig;
+use emtopt::energy::ReadMode;
+use emtopt::inference::{NoisyModel, Scratch};
+use emtopt::rng::Rng;
+
+const DIMS: [(usize, usize); 3] = [(24, 20), (20, 12), (12, 6)];
+
+fn mk_model(cfg: &DeviceConfig, seed: u64) -> NoisyModel {
+    let mut rng = Rng::new(seed);
+    let data: Vec<(Vec<f32>, Vec<f32>)> = DIMS
+        .iter()
+        .map(|&(i, o)| {
+            let w: Vec<f32> = (0..i * o).map(|_| rng.normal() * 0.3).collect();
+            let b: Vec<f32> = (0..o).map(|_| rng.normal() * 0.05).collect();
+            (w, b)
+        })
+        .collect();
+    let specs: Vec<(&[f32], &[f32], usize, usize)> = data
+        .iter()
+        .zip(DIMS.iter())
+        .map(|((w, b), &(i, o))| (w.as_slice(), b.as_slice(), i, o))
+        .collect();
+    NoisyModel::new(&specs, cfg).unwrap()
+}
+
+fn batch_input(d_in: usize, batch: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..batch * d_in).map(|_| rng.next_f32()).collect()
+}
+
+#[test]
+fn batched_matches_sequential_at_1_2_and_n_threads() {
+    let cfg = DeviceConfig::default();
+    let model = mk_model(&cfg, 1);
+    let batch = 8usize;
+    let xs = batch_input(model.d_in(), batch, 2);
+    let seed = 42u64;
+    let n = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(4)
+        .max(3);
+
+    for mode in [ReadMode::Original, ReadMode::Decomposed] {
+        let mut c_seq = ReadCounters::default();
+        let seq = model.forward_batch_seq(&xs, mode, &cfg, seed, &mut c_seq);
+        assert_eq!(seq.len(), batch * model.d_out());
+
+        for threads in [1usize, 2, n] {
+            let pool = rayon::ThreadPoolBuilder::new()
+                .num_threads(threads)
+                .build()
+                .unwrap();
+            let (par, c_par) = pool.install(|| {
+                let mut c = ReadCounters::default();
+                let y = model.forward_batch(&xs, mode, &cfg, seed, &mut c);
+                (y, c)
+            });
+            assert_eq!(
+                seq, par,
+                "{mode:?}: logits must be bit-identical at {threads} threads"
+            );
+            assert_eq!(
+                c_seq, c_par,
+                "{mode:?}: counters must be bit-identical at {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn per_sample_streams_are_independent_of_batch_layout() {
+    // sample i of a batch must equal a lone forward with Rng::stream(seed, i):
+    // the stream discipline is the public contract that makes request-level
+    // results independent of how the router packs batches across workers.
+    let cfg = DeviceConfig::default();
+    let model = mk_model(&cfg, 3);
+    let batch = 5usize;
+    let xs = batch_input(model.d_in(), batch, 4);
+    let seed = 7u64;
+    let d_in = model.d_in();
+    let d_out = model.d_out();
+
+    let mut c_batch = ReadCounters::default();
+    let logits = model.forward_batch(&xs, ReadMode::Original, &cfg, seed, &mut c_batch);
+
+    let mut scratch = Scratch::for_model(&model);
+    let mut c_solo_total = ReadCounters::default();
+    for i in 0..batch {
+        let mut rng = Rng::stream(seed, i as u64);
+        let mut c = ReadCounters::default();
+        let y = model
+            .forward_into(
+                &xs[i * d_in..(i + 1) * d_in],
+                &mut scratch,
+                ReadMode::Original,
+                &cfg,
+                &mut rng,
+                &mut c,
+            )
+            .to_vec();
+        assert_eq!(
+            &logits[i * d_out..(i + 1) * d_out],
+            y.as_slice(),
+            "sample {i} must not depend on its batch neighbours"
+        );
+        c_solo_total.merge(&c);
+    }
+    assert_eq!(c_batch, c_solo_total);
+}
+
+#[test]
+fn counters_merge_in_sample_order_regardless_of_pool() {
+    // run the same batch in two pools with different thread counts and a
+    // third time on the global pool: every f64 in the counters must match
+    // exactly (merge order is index order, not completion order)
+    let cfg = DeviceConfig::default();
+    let model = mk_model(&cfg, 9);
+    let xs = batch_input(model.d_in(), 16, 10);
+    let run_in = |threads: usize| {
+        let pool = rayon::ThreadPoolBuilder::new()
+            .num_threads(threads)
+            .build()
+            .unwrap();
+        pool.install(|| {
+            let mut c = ReadCounters::default();
+            model.forward_batch(&xs, ReadMode::Decomposed, &cfg, 5, &mut c);
+            c
+        })
+    };
+    let a = run_in(1);
+    let b = run_in(4);
+    let mut c_global = ReadCounters::default();
+    model.forward_batch(&xs, ReadMode::Decomposed, &cfg, 5, &mut c_global);
+    assert_eq!(a, b);
+    assert_eq!(a, c_global);
+    assert!(a.cell_pj > 0.0 && a.cycles > 0);
+}

@@ -4,10 +4,10 @@
 
 use emtopt::baselines::{hardware_cost, Method};
 use emtopt::coordinator::{experiments, Solution, TrainedModel};
-use emtopt::crossbar::CrossbarArray;
+use emtopt::crossbar::{CrossbarArray, ReadCounters};
 use emtopt::device::{DeviceConfig, Intensity};
 use emtopt::energy::{EnergyModel, ReadMode};
-use emtopt::inference::NoisyMlp;
+use emtopt::inference::NoisyModel;
 use emtopt::models::paper_scale::{resnet, vgg16, Resolution};
 use emtopt::rng::Rng;
 use emtopt::timing::TimingModel;
@@ -20,14 +20,17 @@ fn native_sim_energy_matches_analytical_shape() {
     let mut rng = Rng::new(1);
     let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.3).collect();
     let x: Vec<f32> = (0..k).map(|_| rng.next_f32()).collect();
-    let mut out = vec![0.0f32; n];
 
     let run = |rho: f32, mode: ReadMode, rng: &mut Rng| {
-        let mut cfg = DeviceConfig::default();
-        cfg.rho = rho;
-        let mut arr = CrossbarArray::program(&w, k, n, &cfg);
-        arr.mac(&x, &mut out.clone(), mode, 5, 1.0, rng);
-        arr.counters.cell_pj
+        let cfg = DeviceConfig {
+            rho,
+            ..DeviceConfig::default()
+        };
+        let arr = CrossbarArray::program(&w, k, n, &cfg);
+        let mut out = vec![0.0f32; n];
+        let mut counters = ReadCounters::default();
+        arr.mac(&x, &mut out, mode, 5, 1.0, rng, &mut counters);
+        counters.cell_pj
     };
     let e1 = run(1.0, ReadMode::Original, &mut rng);
     let e2 = run(2.0, ReadMode::Original, &mut rng);
@@ -56,16 +59,19 @@ fn native_mlp_accuracy_degrades_with_intensity() {
         .collect();
 
     let agreement = |intensity: Intensity, rng: &mut Rng| {
-        let mut cfg = DeviceConfig::default();
-        cfg.intensity = intensity;
-        cfg.rho = 0.2; // noisy regime
-        let mut mlp = NoisyMlp::new(&specs, &cfg).unwrap();
+        let cfg = DeviceConfig {
+            intensity,
+            rho: 0.2, // noisy regime
+            ..DeviceConfig::default()
+        };
+        let model = NoisyModel::new(&specs, &cfg).unwrap();
+        let mut counters = ReadCounters::default();
         let mut same = 0;
         let trials = 60;
         for t in 0..trials {
             let mut r2 = Rng::new(100 + t);
             let x: Vec<f32> = (0..32).map(|_| r2.next_f32()).collect();
-            let clean = mlp.forward_clean(&x, &cfg);
+            let clean = model.forward_clean(&x, &cfg);
             let argmax = |v: &[f32]| {
                 v.iter()
                     .enumerate()
@@ -73,7 +79,7 @@ fn native_mlp_accuracy_degrades_with_intensity() {
                     .unwrap()
                     .0
             };
-            let noisy = mlp.forward(&x, ReadMode::Original, &cfg, rng).to_vec();
+            let noisy = model.forward_single(&x, ReadMode::Original, &cfg, rng, &mut counters);
             if argmax(&clean) == argmax(&noisy) {
                 same += 1;
             }

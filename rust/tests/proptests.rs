@@ -2,7 +2,7 @@
 //! sweeps; proptest is unavailable offline — see Cargo.toml note — so we
 //! drive the same shrink-free random-case pattern with the crate RNG).
 
-use emtopt::crossbar::CrossbarArray;
+use emtopt::crossbar::{CrossbarArray, ReadCounters};
 use emtopt::data::{Dataset, Split};
 use emtopt::device::{state_offsets, DeviceConfig};
 use emtopt::energy::{EnergyModel, ReadMode};
@@ -108,13 +108,41 @@ fn prop_crossbar_energy_counters_monotone() {
         let mut out = vec![0.0f32; n];
         let mut cfg = DeviceConfig::default();
         cfg.rho = 1.0 + (case % 5) as f32;
-        let mut arr = CrossbarArray::program(&w, k, n, &cfg);
+        let arr = CrossbarArray::program(&w, k, n, &cfg);
+        let mut counters = ReadCounters::default();
         let mut last = 0.0;
         for _ in 0..4 {
-            arr.mac(&x, &mut out, ReadMode::Original, 5, 1.0, rng);
-            assert!(arr.counters.cell_pj >= last);
-            last = arr.counters.cell_pj;
+            arr.mac(&x, &mut out, ReadMode::Original, 5, 1.0, rng, &mut counters);
+            assert!(counters.cell_pj >= last);
+            last = counters.cell_pj;
         }
+    });
+}
+
+#[test]
+fn prop_forward_batch_deterministic_per_seed() {
+    // same (model, inputs, seed) -> bit-identical logits and counters;
+    // different seeds -> different noise draws
+    use emtopt::inference::NoisyModel;
+    for_cases(5, |case, rng| {
+        let d_in = 4 + (rng.next_u64() % 24) as usize;
+        let d_out = 2 + (rng.next_u64() % 8) as usize;
+        let w: Vec<f32> = (0..d_in * d_out).map(|_| rng.normal() * 0.4).collect();
+        let b: Vec<f32> = (0..d_out).map(|_| rng.normal() * 0.05).collect();
+        let cfg = DeviceConfig::default();
+        let model =
+            NoisyModel::new(&[(w.as_slice(), b.as_slice(), d_in, d_out)], &cfg).unwrap();
+        let batch = 1 + (rng.next_u64() % 6) as usize;
+        let xs: Vec<f32> = (0..batch * d_in).map(|_| rng.next_f32()).collect();
+        let mut c1 = ReadCounters::default();
+        let mut c2 = ReadCounters::default();
+        let y1 = model.forward_batch(&xs, ReadMode::Original, &cfg, case, &mut c1);
+        let y2 = model.forward_batch(&xs, ReadMode::Original, &cfg, case, &mut c2);
+        assert_eq!(y1, y2, "case {case}: same seed must reproduce");
+        assert_eq!(c1, c2);
+        let mut c3 = ReadCounters::default();
+        let y3 = model.forward_batch(&xs, ReadMode::Original, &cfg, case + 1000, &mut c3);
+        assert_ne!(y1, y3, "case {case}: different seed must resample noise");
     });
 }
 
