@@ -1,24 +1,37 @@
-//! Serving example: the dynamic-batching inference router over the NATIVE
-//! crossbar engine — one immutable `Arc<NoisyModel>` shared by a pool of
-//! batch workers (each batch additionally fans across rayon), driven by
-//! concurrent client threads.  Reports throughput, queueing latency,
-//! batch fill, and per-request device energy.
+//! Serving example: the full network path — HTTP clients over real TCP
+//! sockets -> connection pool -> per-tier dynamic batcher -> native
+//! crossbar engine (one immutable `Arc<NoisyModel>` shared by every
+//! lane's worker pool).
 //!
-//!     cargo run --release --example serve -- --requests 512 --clients 8 --workers 2
+//! Boots `emtopt::server::serve_http` on an ephemeral localhost port,
+//! drives it with the open-loop load generator (keep-alive connections,
+//! mixed energy tiers by default), then prints the client-side report
+//! next to the server-side per-tier stats — the energy-accuracy knob of
+//! the paper (rho per tier) shows up directly in nJ/request.
+//!
+//!     cargo run --release --example serve -- --requests 512 --connections 8 --workers 2
+//!
+//! Flags: --requests N (512) --connections N (8) --workers N (2)
+//!        --qps F (0 = closed loop) --tier low|normal|high|mixed (mixed)
 
 use std::sync::Arc;
 
-use emtopt::coordinator::router::{serve_native, NativeServerConfig};
-use emtopt::data::{Dataset, Split, Suite};
+use emtopt::coordinator::router::NativeServerConfig;
+use emtopt::data::{Dataset, Suite};
 use emtopt::device::DeviceConfig;
 use emtopt::inference::template_classifier;
+use emtopt::server::loadgen::{self, LoadgenConfig};
+use emtopt::server::{parse_tier_arg, serve_http, HttpServerConfig};
 use emtopt::util::cli::Args;
 
 fn main() -> emtopt::Result<()> {
     let args = Args::parse()?;
-    let requests: u32 = args.parse_or("requests", 256)?;
-    let clients: usize = args.parse_or("clients", 8)?;
+    let requests: u64 = args.parse_or("requests", 512)?;
+    let connections: usize = args.parse_or("connections", 8)?;
     let workers: usize = args.parse_or("workers", 2)?;
+    let qps: f64 = args.parse_or("qps", 0.0)?;
+    let tier_arg = args.str_or("tier", "mixed");
+    let tier = parse_tier_arg(&tier_arg)?;
 
     let dev = DeviceConfig::default();
     let dataset = Dataset::new(Suite::Cifar, emtopt::data::DATA_SEED);
@@ -26,67 +39,39 @@ fn main() -> emtopt::Result<()> {
     // crossbar (real accuracy, no AOT training stack needed)
     let model = Arc::new(template_classifier(&dataset, &dev)?);
     println!(
-        "deploying template classifier ({} cells) on {workers} engine workers",
+        "deploying template classifier ({} cells) behind HTTP, {workers} workers per tier lane",
         model.num_cells()
     );
 
-    let server_cfg = NativeServerConfig {
-        workers,
-        device: dev,
-        ..Default::default()
-    };
-    let batch = server_cfg.batch;
-    let (client, stats, engines) = serve_native(model, server_cfg)?;
+    let handle = serve_http(
+        model,
+        HttpServerConfig {
+            addr: "127.0.0.1:0".into(), // ephemeral port
+            engine: NativeServerConfig {
+                workers,
+                device: dev,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )?;
+    println!("listening on http://{}", handle.addr());
+    for (plan, _) in handle.per_tier() {
+        println!("  {}", plan.describe());
+    }
 
-    println!("serving {requests} requests from {clients} clients");
-    let t0 = std::time::Instant::now();
-    let per = (requests as usize).div_ceil(clients);
-    let handles: Vec<_> = (0..clients)
-        .map(|c| {
-            let cl = client.clone();
-            let ds = dataset.clone();
-            std::thread::spawn(move || {
-                let mut ok = 0u32;
-                let mut correct = 0u32;
-                for i in 0..per {
-                    let idx = (c * per + i) as u64;
-                    let mut img = vec![0.0f32; emtopt::data::IMG_LEN];
-                    let label = ds.sample_into(Split::Test, idx, &mut img);
-                    if let Ok(pred) = cl.classify(img) {
-                        ok += 1;
-                        if pred == label as usize {
-                            correct += 1;
-                        }
-                    }
-                }
-                (ok, correct)
-            })
-        })
-        .collect();
-    let (mut ok, mut correct) = (0u32, 0u32);
-    for h in handles {
-        let (o, c) = h.join().unwrap();
-        ok += o;
-        correct += c;
-    }
-    let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "{ok} ok / {} sent in {dt:.2}s -> {:.0} req/s",
-        per * clients,
-        ok as f64 / dt
-    );
-    println!(
-        "accuracy on served traffic: {:.1}% | mean queue {:.2} ms | \
-         mean infer {:.2} ms/batch | batch fill {:.0}% | {:.1} nJ/request",
-        100.0 * correct as f64 / ok.max(1) as f64,
-        stats.mean_queue_us() / 1000.0,
-        stats.mean_infer_us() / 1000.0,
-        stats.mean_batch_fill(batch) * 100.0,
-        stats.mean_energy_pj_per_request() / 1000.0
-    );
-    drop(client);
-    for h in engines {
-        h.join().ok();
-    }
-    Ok(())
+    println!("\nloadgen: {requests} requests over {connections} TCP connections (tier {tier_arg})");
+    let report = loadgen::run(&LoadgenConfig {
+        addr: handle.addr().to_string(),
+        connections,
+        requests,
+        target_qps: qps,
+        tier,
+        classify: true,
+    })?;
+    println!("{}", report.render());
+
+    println!("\nserver side:");
+    print!("{}", handle.tier_summary());
+    handle.shutdown()
 }

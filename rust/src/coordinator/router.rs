@@ -24,9 +24,17 @@
 //! Channels are std::sync::mpsc (this build is offline — no tokio); each
 //! request carries its own reply channel, so any number of client threads
 //! can share one [`InferenceClient`].
+//!
+//! **Backpressure contract:** the request queue is a bounded
+//! `sync_channel` (`queue_depth`), and the batcher→worker job queue is
+//! bounded at `workers` jobs.  [`InferenceClient::infer`] blocks when the
+//! queue is full; [`InferenceClient::try_infer`] fails fast with a typed
+//! [`Overloaded`] error instead, which the HTTP front end
+//! (`server`) maps to `503 Service Unavailable`.  An overload therefore
+//! surfaces as latency or load-shedding, never as unbounded memory.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::mpsc::{self, RecvTimeoutError, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -34,6 +42,7 @@ use crate::crossbar::ReadCounters;
 use crate::device::DeviceConfig;
 use crate::energy::ReadMode;
 use crate::inference::NoisyModel;
+use crate::metrics::LatencyHistogram;
 use crate::rng::hash2;
 use crate::Result;
 
@@ -77,6 +86,9 @@ pub struct ServerStats {
     pub infer_us: AtomicU64,
     /// Cumulative device read cycles (native engine).
     pub read_cycles: AtomicU64,
+    /// Per-request end-to-end engine latency (enqueue -> reply), with
+    /// `p50/p95/p99` accessors for tail-latency reporting (`/metrics`).
+    pub latency: LatencyHistogram,
     /// f64 bit-patterns of the cumulative analog / peripheral energy (pJ).
     cell_pj_bits: AtomicU64,
     peripheral_pj_bits: AtomicU64,
@@ -139,18 +151,36 @@ impl ServerStats {
     }
 }
 
+/// Typed load-shedding error: the bounded request queue is full.
+///
+/// Returned (inside `anyhow::Error`) by [`InferenceClient::try_infer`];
+/// check with `err.is::<Overloaded>()`.  The HTTP front end maps it to
+/// `503 Service Unavailable`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Overloaded;
+
+impl std::fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "server overloaded: request queue full")
+    }
+}
+
+impl std::error::Error for Overloaded {}
+
 /// Handle used by clients to submit requests (clonable across threads).
 #[derive(Clone)]
 pub struct InferenceClient {
-    tx: mpsc::Sender<Request>,
+    tx: mpsc::SyncSender<Request>,
     pub num_classes: usize,
     /// Expected input length (d_in of the deployed model).
     pub input_len: usize,
 }
 
 impl InferenceClient {
-    /// Classify one image (len `input_len`); blocks until the logits arrive.
-    pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
+    fn make_request(
+        &self,
+        image: Vec<f32>,
+    ) -> Result<(Request, mpsc::Receiver<Result<Vec<f32>>>)> {
         anyhow::ensure!(
             image.len() == self.input_len,
             "image must be {} floats, got {}",
@@ -158,25 +188,45 @@ impl InferenceClient {
             image.len()
         );
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request {
+        Ok((
+            Request {
                 image,
                 reply,
                 enqueued: Instant::now(),
-            })
+            },
+            rx,
+        ))
+    }
+
+    /// Classify one image (len `input_len`); blocks until the logits
+    /// arrive.  If the bounded request queue is full, blocks until a slot
+    /// frees up (backpressure) — use [`InferenceClient::try_infer`] to
+    /// shed load instead.
+    pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
+        let (req, rx) = self.make_request(image)?;
+        self.tx
+            .send(req)
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
+    }
+
+    /// Like [`InferenceClient::infer`], but fails fast with a typed
+    /// [`Overloaded`] error when the bounded request queue is full instead
+    /// of blocking (admission control for the serving front end).
+    pub fn try_infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
+        let (req, rx) = self.make_request(image)?;
+        match self.tx.try_send(req) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) => return Err(anyhow::Error::new(Overloaded)),
+            Err(TrySendError::Disconnected(_)) => anyhow::bail!("server stopped"),
+        }
         rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
     }
 
     /// Classify and argmax.
     pub fn classify(&self, image: Vec<f32>) -> Result<usize> {
         let logits = self.infer(image)?;
-        Ok(logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.total_cmp(b.1))
-            .map(|(i, _)| i)
-            .unwrap_or(0))
+        Ok(crate::inference::argmax(&logits))
     }
 }
 
@@ -194,6 +244,9 @@ pub struct NativeServerConfig {
     pub workers: usize,
     /// Max time the oldest request may wait before a partial batch fires.
     pub max_wait: Duration,
+    /// Bounded request-queue depth: `infer` blocks and `try_infer`
+    /// returns [`Overloaded`] once this many requests are waiting.
+    pub queue_depth: usize,
     pub mode: ReadMode,
     pub device: DeviceConfig,
     /// Base RNG seed; batch `b` samples stream `hash2(seed, b)`.
@@ -206,6 +259,7 @@ impl Default for NativeServerConfig {
             batch: 16,
             workers: 2,
             max_wait: Duration::from_millis(2),
+            queue_depth: 256,
             mode: ReadMode::Original,
             device: DeviceConfig::default(),
             seed: 1,
@@ -262,9 +316,9 @@ impl Worker {
         self.stats.add_counters(&counters);
 
         for (i, r) in job.requests.iter().enumerate() {
-            self.stats
-                .queue_us
-                .fetch_add(r.enqueued.elapsed().as_micros() as u64, Ordering::Relaxed);
+            let total_us = r.enqueued.elapsed().as_micros() as u64;
+            self.stats.queue_us.fetch_add(total_us, Ordering::Relaxed);
+            self.stats.latency.record_us(total_us);
             let _ = r.reply.send(Ok(logits[i * nc..(i + 1) * nc].to_vec()));
         }
     }
@@ -281,11 +335,15 @@ pub fn serve_native(
 ) -> Result<(InferenceClient, Arc<ServerStats>, Vec<std::thread::JoinHandle<()>>)> {
     anyhow::ensure!(cfg.batch > 0, "batch must be positive");
     anyhow::ensure!(cfg.workers > 0, "need at least one worker");
+    anyhow::ensure!(cfg.queue_depth > 0, "queue_depth must be positive");
     let input_len = model.d_in();
     let num_classes = model.d_out();
 
-    let (tx, rx) = mpsc::channel::<Request>();
-    let (job_tx, job_rx) = mpsc::channel::<Job>();
+    // Bounded queues end-to-end: requests cap at `queue_depth`, and the
+    // batcher can run at most `workers` jobs ahead of the pool, so an
+    // overload propagates back to the clients instead of growing memory.
+    let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
+    let (job_tx, job_rx) = mpsc::sync_channel::<Job>(cfg.workers);
     let job_rx = Arc::new(Mutex::new(job_rx));
     let stats = Arc::new(ServerStats::default());
     let mut handles = Vec::with_capacity(cfg.workers + 1);
@@ -370,6 +428,8 @@ pub struct ServerConfig {
     pub intensity: Intensity,
     /// Max time the oldest request may wait before a partial batch fires.
     pub max_wait: Duration,
+    /// Bounded request-queue depth (see [`NativeServerConfig::queue_depth`]).
+    pub queue_depth: usize,
     pub seed: i32,
 }
 
@@ -380,6 +440,7 @@ impl Default for ServerConfig {
             artifacts_dir: "artifacts".into(),
             intensity: Intensity::Normal,
             max_wait: Duration::from_millis(5),
+            queue_depth: 256,
             seed: 1,
         }
     }
@@ -406,7 +467,8 @@ pub fn serve(
         .num_classes;
     let batch = probe.batches.predict;
 
-    let (tx, rx) = mpsc::channel::<Request>();
+    anyhow::ensure!(cfg.queue_depth > 0, "queue_depth must be positive");
+    let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
     let stats = Arc::new(ServerStats::default());
     let stats_engine = stats.clone();
 
@@ -464,9 +526,9 @@ pub fn serve(
 
                 for (i, r) in pending.drain(..).enumerate() {
                     let out = logits[i * nc..(i + 1) * nc].to_vec();
-                    stats_engine
-                        .queue_us
-                        .fetch_add(r.enqueued.elapsed().as_micros() as u64, Ordering::Relaxed);
+                    let total_us = r.enqueued.elapsed().as_micros() as u64;
+                    stats_engine.queue_us.fetch_add(total_us, Ordering::Relaxed);
+                    stats_engine.latency.record_us(total_us);
                     let _ = r.reply.send(Ok(out));
                 }
             }
@@ -580,6 +642,101 @@ mod tests {
         assert!(stats.batches.load(Ordering::Relaxed) >= 8); // 32 reqs / batch 4
         assert!(stats.energy().total_pj() > 0.0);
         assert!(stats.mean_energy_pj_per_request() > 0.0);
+        drop(client);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn latency_histogram_tracks_requests() {
+        let dev = DeviceConfig::default();
+        let w = vec![0.1f32; 8 * 4];
+        let b = vec![0.0f32; 4];
+        let model =
+            Arc::new(NoisyModel::new(&[(w.as_slice(), b.as_slice(), 8, 4)], &dev).unwrap());
+        let (client, stats, handles) =
+            serve_native(model, NativeServerConfig::default()).unwrap();
+        for i in 0..10u64 {
+            let mut r = Rng::stream(7, i);
+            let img: Vec<f32> = (0..8).map(|_| r.next_f32()).collect();
+            client.infer(img).unwrap();
+        }
+        assert_eq!(stats.latency.count(), 10);
+        let (p50, p95, p99) = (
+            stats.latency.p50_us(),
+            stats.latency.p95_us(),
+            stats.latency.p99_us(),
+        );
+        assert!(p50 > 0.0);
+        assert!(p50 <= p95 && p95 <= p99, "p50={p50} p95={p95} p99={p99}");
+        drop(client);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn try_infer_sheds_load_when_queue_full() {
+        // A deliberately slow model (two 192x192 layers) with queue_depth 1,
+        // one worker, batch 1: a burst of concurrent try_infer calls can
+        // park at most ~4 requests (in-flight + job queue + batcher +
+        // request queue); the rest must fail fast with Overloaded.
+        let dev = DeviceConfig::default();
+        let d = 192usize;
+        let mut rng = Rng::new(11);
+        let w1: Vec<f32> = (0..d * d).map(|_| rng.normal() * 0.1).collect();
+        let w2: Vec<f32> = (0..d * d).map(|_| rng.normal() * 0.1).collect();
+        let b = vec![0.0f32; d];
+        let model = Arc::new(
+            NoisyModel::new(
+                &[
+                    (w1.as_slice(), b.as_slice(), d, d),
+                    (w2.as_slice(), b.as_slice(), d, d),
+                ],
+                &dev,
+            )
+            .unwrap(),
+        );
+        let cfg = NativeServerConfig {
+            batch: 1,
+            workers: 1,
+            queue_depth: 1,
+            max_wait: Duration::from_millis(1),
+            device: dev,
+            ..Default::default()
+        };
+        let (client, stats, handles) = serve_native(model, cfg).unwrap();
+        let n = 16u64;
+        let clients: Vec<_> = (0..n)
+            .map(|c| {
+                let cl = client.clone();
+                std::thread::spawn(move || {
+                    let mut r = Rng::stream(400 + c, 0);
+                    let img: Vec<f32> = (0..192).map(|_| r.next_f32()).collect();
+                    match cl.try_infer(img) {
+                        Ok(logits) => {
+                            assert_eq!(logits.len(), 192);
+                            (1u64, 0u64)
+                        }
+                        Err(e) => {
+                            assert!(e.is::<Overloaded>(), "unexpected error: {e:?}");
+                            (0u64, 1u64)
+                        }
+                    }
+                })
+            })
+            .collect();
+        let (mut ok, mut shed) = (0u64, 0u64);
+        for h in clients {
+            let (o, s) = h.join().unwrap();
+            ok += o;
+            shed += s;
+        }
+        assert_eq!(ok + shed, n);
+        assert!(ok >= 1, "at least the first request must be admitted");
+        assert!(shed >= 1, "burst of {n} at queue_depth 1 must shed load");
+        assert_eq!(stats.requests.load(Ordering::Relaxed), ok);
         drop(client);
         for h in handles {
             h.join().unwrap();

@@ -33,6 +33,16 @@ pub enum ReadMode {
     Decomposed,
 }
 
+impl ReadMode {
+    /// Wire/report name (serving API responses, Prometheus labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            ReadMode::Original => "original",
+            ReadMode::Decomposed => "decomposed",
+        }
+    }
+}
+
 /// Workload statistics of a trained model (measured or assumed).
 #[derive(Clone, Copy, Debug)]
 pub struct ReadStats {

@@ -310,6 +310,18 @@ impl NoisyModel {
     }
 }
 
+/// Index of the largest logit (ties break to the lowest index; empty
+/// slices return 0).  Shared by `InferenceClient::classify` and the HTTP
+/// `/v1/classify` route so tie/NaN policy cannot diverge between them.
+pub fn argmax(logits: &[f32]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
 /// Nearest-template linear classifier over a [`Dataset`]'s class
 /// templates, programmed on a crossbar: `logit_c = x . t_c - |t_c|^2 / 2`
 /// (exact nearest-template decision as one noisy analog layer).  Gives the

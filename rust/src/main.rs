@@ -1,15 +1,17 @@
 //! `emtopt` CLI — the coordinator leader entrypoint.
 //!
 //! Commands:
-//!   info      artifact + model inventory                  [--features aot]
-//!   train     train one (model, solution), cache it       [--features aot]
-//!   sweep     accuracy-vs-energy curve (Fig 9 primitive)  [--features aot]
-//!   compare   ours-vs-SOTA at max accuracy (Fig 10/11)    [--features aot]
-//!   serve     dynamic-batching router over the NATIVE crossbar engine
+//!   info        artifact + model inventory                  [--features aot]
+//!   train       train one (model, solution), cache it       [--features aot]
+//!   sweep       accuracy-vs-energy curve (Fig 9 primitive)  [--features aot]
+//!   compare     ours-vs-SOTA at max accuracy (Fig 10/11)    [--features aot]
+//!   serve       in-process router demo over the NATIVE crossbar engine
+//!   serve-http  HTTP/1.1 front end over the native engine (energy tiers)
+//!   loadgen     open-loop load generator against a running serve-http
 //!
-//! `serve` runs entirely on the native device substrate (no XLA needed): a
-//! nearest-template classifier is programmed onto crossbar arrays and
-//! served by a pool of workers sharing one immutable model.
+//! The native serving commands run entirely on the device substrate (no
+//! XLA needed): a nearest-template classifier is programmed onto crossbar
+//! arrays and served by per-tier worker pools sharing one immutable model.
 //!
 //! Flags: --model KEY --solution trad|a|ab|abc --intensity weak|normal|strong
 //!        --pretrain N --finetune N --lam F --seed N --artifacts DIR
@@ -21,6 +23,8 @@ use emtopt::config::ExperimentConfig;
 use emtopt::coordinator::router::{serve_native, NativeServerConfig};
 use emtopt::data::{Dataset, Split};
 use emtopt::device::DeviceConfig;
+use emtopt::server::loadgen::{self, LoadgenConfig};
+use emtopt::server::{parse_tier_arg, serve_http, HttpServerConfig};
 use emtopt::util::cli::Args;
 use emtopt::Result;
 
@@ -43,11 +47,13 @@ emtopt — in-memory deep learning with EMT (Wang et al., 2021)
 USAGE: emtopt <command> [--flags]
 
 COMMANDS:
-  info      artifact + model inventory                  [needs --features aot]
-  train     train one (model, solution); cached         [needs --features aot]
-  sweep     accuracy-vs-energy curve (Fig 9 primitive)  [needs --features aot]
-  compare   ours vs SOTA at max accuracy (Fig 10/11)    [needs --features aot]
-  serve     dynamic-batching router over the native crossbar engine
+  info        artifact + model inventory                  [needs --features aot]
+  train       train one (model, solution); cached         [needs --features aot]
+  sweep       accuracy-vs-energy curve (Fig 9 primitive)  [needs --features aot]
+  compare     ours vs SOTA at max accuracy (Fig 10/11)    [needs --features aot]
+  serve       in-process router demo over the native crossbar engine
+  serve-http  HTTP/1.1 front end over the native engine (tiered energy lanes)
+  loadgen     open-loop load generator against a running serve-http
 
 FLAGS (defaults in parentheses):
   --artifacts DIR     (artifacts)
@@ -57,8 +63,20 @@ FLAGS (defaults in parentheses):
   --intensity I       weak|normal|strong (normal)
   --pretrain N        (120)   --finetune N (120)
   --lam F             (0.3)   --seed N (7)
-  --requests N        serve: request count (256)
-  --workers N         serve: engine workers (2)
+  --requests N        serve: request count (256); loadgen: total requests (1000)
+  --workers N         serve/serve-http: engine workers per lane (2)
+  --host H            serve-http: bind host (127.0.0.1)
+  --port N            serve-http: bind port, 0 = ephemeral (8080)
+  --duration S        serve-http: run seconds, 0 = until POST /admin/shutdown (0)
+  --batch N           serve-http: device batch size (16)
+  --queue-depth N     serve-http: bounded request queue per lane (256)
+  --conn-threads N    serve-http: connection handler threads (16)
+  --addr A            loadgen: target server (127.0.0.1:8080)
+  --connections N     loadgen: concurrent keep-alive connections (8)
+  --qps F             loadgen: aggregate target rate, 0 = closed loop (0)
+  --tier T            loadgen: low|normal|high|mixed (normal)
+  --endpoint E        loadgen: classify|infer (classify)
+  --out FILE          loadgen: report path (BENCH_serve.json)
 ";
 
 fn main() {
@@ -98,6 +116,8 @@ fn run() -> Result<()> {
             args.parse_or("requests", 256u32)?,
             args.parse_or("workers", 2usize)?,
         ),
+        Some("serve-http") => serve_http_cmd(&cfg, &args),
+        Some("loadgen") => loadgen_cmd(&args),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -367,5 +387,82 @@ fn serve(cfg: &ExperimentConfig, requests: u32, workers: usize) -> Result<()> {
     for h in engines {
         h.join().ok();
     }
+    Ok(())
+}
+
+/// Serve the native engine over HTTP: tiered energy lanes behind a
+/// thread-per-connection HTTP/1.1 front end.  Runs for `--duration`
+/// seconds, or until `POST /admin/shutdown`.
+fn serve_http_cmd(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
+    let host = args.str_or("host", "127.0.0.1");
+    let port: u16 = args.parse_or("port", 8080)?;
+    let duration: u64 = args.parse_or("duration", 0)?;
+    let dev = DeviceConfig {
+        intensity: cfg.intensity_parsed()?,
+        ..DeviceConfig::default()
+    };
+    let dataset = Dataset::new(cfg.suite(), emtopt::data::DATA_SEED);
+    let model = Arc::new(emtopt::inference::template_classifier(&dataset, &dev)?);
+    let http_cfg = HttpServerConfig {
+        addr: format!("{host}:{port}"),
+        conn_threads: args.parse_or("conn-threads", 16usize)?,
+        engine: NativeServerConfig {
+            batch: args.parse_or("batch", 16usize)?,
+            workers: args.parse_or("workers", 2usize)?,
+            queue_depth: args.parse_or("queue-depth", 256usize)?,
+            device: dev,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let handle = serve_http(model, http_cfg)?;
+    println!("serving on http://{}", handle.addr());
+    println!("  POST /v1/infer | /v1/classify   GET /healthz | /metrics   POST /admin/shutdown");
+    for (plan, _) in handle.per_tier() {
+        println!("  {}", plan.describe());
+    }
+    let t0 = std::time::Instant::now();
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        if handle.shutdown_requested() {
+            println!("shutdown requested via /admin/shutdown");
+            break;
+        }
+        if duration > 0 && t0.elapsed().as_secs() >= duration {
+            println!("--duration {duration}s elapsed");
+            break;
+        }
+    }
+    // final report before the graceful drain
+    println!("http responses by status:");
+    for (code, n) in handle.http_stats().by_code() {
+        if n > 0 {
+            println!("  {code}: {n}");
+        }
+    }
+    print!("{}", handle.tier_summary());
+    handle.shutdown()
+}
+
+/// Drive a running serve-http and write `BENCH_serve.json`.
+fn loadgen_cmd(args: &Args) -> Result<()> {
+    let endpoint = args.str_or("endpoint", "classify");
+    anyhow::ensure!(
+        endpoint == "classify" || endpoint == "infer",
+        "bad --endpoint {endpoint:?} (want classify|infer)"
+    );
+    let lg = LoadgenConfig {
+        addr: args.str_or("addr", "127.0.0.1:8080"),
+        connections: args.parse_or("connections", 8usize)?,
+        requests: args.parse_or("requests", 1000u64)?,
+        target_qps: args.parse_or("qps", 0.0f64)?,
+        tier: parse_tier_arg(&args.str_or("tier", "normal"))?,
+        classify: endpoint == "classify",
+    };
+    let report = loadgen::run(&lg)?;
+    println!("{}", report.render());
+    let out = args.str_or("out", "BENCH_serve.json");
+    loadgen::write_bench(&report, &out)?;
+    println!("wrote {out}");
     Ok(())
 }

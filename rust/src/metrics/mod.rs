@@ -1,4 +1,128 @@
-//! Result reporting: aligned table printing + experiment records.
+//! Result reporting: aligned table printing, experiment records, and the
+//! fixed-bucket atomic latency histogram used by the serving stack.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Upper bounds (inclusive, microseconds) of the fixed latency buckets.
+/// A final implicit overflow bucket catches everything above the last
+/// bound.  1-2-5 log spacing from 1 us to 50 s covers both the native
+/// engine (tens of us) and a heavily queued server (seconds).
+pub const LATENCY_BUCKET_BOUNDS_US: [u64; 23] = [
+    1,
+    2,
+    5,
+    10,
+    20,
+    50,
+    100,
+    200,
+    500,
+    1_000,
+    2_000,
+    5_000,
+    10_000,
+    20_000,
+    50_000,
+    100_000,
+    200_000,
+    500_000,
+    1_000_000,
+    2_000_000,
+    5_000_000,
+    10_000_000,
+    50_000_000,
+];
+
+/// Bucket count including the overflow bucket.
+pub const LATENCY_NUM_BUCKETS: usize = LATENCY_BUCKET_BOUNDS_US.len() + 1;
+
+/// Lock-free fixed-bucket latency histogram.
+///
+/// `record_us` is a single relaxed `fetch_add`, so any number of worker
+/// threads can record concurrently; quantiles are read from a snapshot
+/// with linear interpolation inside the winning bucket.  Bucket bounds
+/// are static ([`LATENCY_BUCKET_BOUNDS_US`]), which keeps the type
+/// allocation-free and `Default`-constructible inside `ServerStats`.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    counts: [AtomicU64; LATENCY_NUM_BUCKETS],
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    /// Record one latency observation (microseconds).
+    pub fn record_us(&self, us: u64) {
+        let idx = LATENCY_BUCKET_BOUNDS_US
+            .iter()
+            .position(|&b| us <= b)
+            .unwrap_or(LATENCY_NUM_BUCKETS - 1);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Per-bucket counts; the last entry is the overflow bucket.
+    pub fn snapshot(&self) -> [u64; LATENCY_NUM_BUCKETS] {
+        std::array::from_fn(|i| self.counts[i].load(Ordering::Relaxed))
+    }
+
+    /// Latency quantile in microseconds (`q` in [0, 1]), linearly
+    /// interpolated inside the winning bucket.  Returns 0.0 when empty;
+    /// observations in the overflow bucket report the last bound.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        let counts = self.snapshot();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * total as f64;
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = cum + c;
+            if next as f64 >= target {
+                let lower = if i == 0 {
+                    0
+                } else {
+                    LATENCY_BUCKET_BOUNDS_US[i - 1]
+                };
+                let upper = if i < LATENCY_BUCKET_BOUNDS_US.len() {
+                    LATENCY_BUCKET_BOUNDS_US[i]
+                } else {
+                    lower
+                };
+                let frac = ((target - cum as f64) / c as f64).clamp(0.0, 1.0);
+                return lower as f64 + frac * (upper - lower) as f64;
+            }
+            cum = next;
+        }
+        LATENCY_BUCKET_BOUNDS_US[LATENCY_BUCKET_BOUNDS_US.len() - 1] as f64
+    }
+
+    pub fn p50_us(&self) -> f64 {
+        self.quantile_us(0.50)
+    }
+
+    pub fn p95_us(&self) -> f64 {
+        self.quantile_us(0.95)
+    }
+
+    pub fn p99_us(&self) -> f64 {
+        self.quantile_us(0.99)
+    }
+}
 
 /// A printable results table (paper-style).
 #[derive(Clone, Debug, Default)]
@@ -122,6 +246,78 @@ mod tests {
     fn row_arity_checked() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(vec!["only one".into()]);
+    }
+
+    #[test]
+    fn histogram_empty_safe() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_us(0.5), 0.0);
+        assert_eq!(h.p99_us(), 0.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_interpolate() {
+        let h = LatencyHistogram::default();
+        // 1000 observations all in the (5, 10] bucket
+        for _ in 0..1000 {
+            h.record_us(8);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.p50_us();
+        assert!(p50 > 5.0 && p50 <= 10.0, "p50={p50}");
+        let p99 = h.p99_us();
+        assert!(p99 > p50 && p99 <= 10.0, "p99={p99}");
+    }
+
+    #[test]
+    fn histogram_spread_orders_quantiles() {
+        let h = LatencyHistogram::default();
+        // 90% fast (~10us), 5% medium (~1ms), 5% slow (~90ms)
+        for _ in 0..900 {
+            h.record_us(9);
+        }
+        for _ in 0..50 {
+            h.record_us(900);
+        }
+        for _ in 0..50 {
+            h.record_us(90_000);
+        }
+        let (p50, p95, p99) = (h.p50_us(), h.p95_us(), h.p99_us());
+        assert!(p50 <= 10.0, "p50={p50}");
+        assert!(p95 > 100.0 && p95 <= 1000.0, "p95={p95}");
+        assert!(p99 > 10_000.0 && p99 <= 100_000.0, "p99={p99}");
+    }
+
+    #[test]
+    fn histogram_overflow_bucket() {
+        let h = LatencyHistogram::default();
+        h.record_us(u64::MAX);
+        assert_eq!(h.count(), 1);
+        let last = *LATENCY_BUCKET_BOUNDS_US.last().unwrap() as f64;
+        assert_eq!(h.quantile_us(0.5), last);
+        let snap = h.snapshot();
+        assert_eq!(snap[LATENCY_NUM_BUCKETS - 1], 1);
+    }
+
+    #[test]
+    fn histogram_concurrent_recording() {
+        use std::sync::Arc;
+        let h = Arc::new(LatencyHistogram::default());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        h.record_us(t * 113 + i % 97);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
     }
 
     #[test]

@@ -1,0 +1,497 @@
+//! Minimal HTTP/1.1 framing over blocking byte streams (std::net only —
+//! this build is offline, no hyper/tokio; see the serde note in
+//! `util::json`).
+//!
+//! Covers exactly what the serving front end and the load generator
+//! need: request/response lines, headers, `Content-Length` bodies, and
+//! keep-alive.  No chunked transfer encoding, no HTTP/2 — clients that
+//! send anything else get a clean `400`.
+//!
+//! [`HttpConn`] owns the stream plus a carry-over buffer, so pipelined
+//! or coalesced bytes from a keep-alive peer are never lost between
+//! requests.  It is generic over `Read + Write` so the unit tests can
+//! drive it with in-memory streams.
+
+use std::io::{ErrorKind, Read, Write};
+
+use crate::Result;
+
+/// Maximum accepted request/response head (request line + headers).
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Socket-timeout retries tolerated *inside* one request/response before
+/// giving up.  The socket read timeout is tuned short so idle keep-alive
+/// connections notice shutdowns quickly (see `HttpServerConfig`); a slow
+/// peer mid-message gets this many grace periods (e.g. 20 x 250ms = 5s)
+/// instead of an instant `400`.
+const MID_MESSAGE_TIMEOUT_RETRIES: u32 = 20;
+
+/// Typed marker error: declared `Content-Length` exceeds the configured
+/// body cap.  The server maps it to `413 Payload Too Large`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PayloadTooLarge;
+
+impl std::fmt::Display for PayloadTooLarge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request body exceeds the configured limit")
+    }
+}
+
+impl std::error::Error for PayloadTooLarge {}
+
+/// One parsed HTTP request.
+#[derive(Clone, Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    /// Header names lower-cased, values trimmed.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Whether the connection should stay open after the response.
+    pub keep_alive: bool,
+}
+
+impl HttpRequest {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Outcome of waiting for one request on a keep-alive connection.
+#[derive(Debug)]
+pub enum RequestOutcome {
+    Request(HttpRequest),
+    /// Peer closed cleanly between requests.
+    Closed,
+    /// Socket read timeout fired while idle (no partial request buffered);
+    /// the caller re-checks its shutdown flag and retries.
+    TimedOut,
+}
+
+/// An HTTP response to be written.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, v: &crate::util::json::Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: v.render().into_bytes(),
+        }
+    }
+
+    /// `{"error": msg}` with the given status.
+    pub fn error_json(status: u16, msg: &str) -> Response {
+        Response::json(
+            status,
+            &crate::util::json::Json::obj(vec![(
+                "error",
+                crate::util::json::Json::Str(msg.to_string()),
+            )]),
+        )
+    }
+}
+
+/// Reason phrase for the status codes this stack emits.
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+enum Fill {
+    Data,
+    Eof,
+    Timeout,
+}
+
+enum HeadOutcome {
+    Head(Vec<u8>),
+    Closed,
+    TimedOut,
+}
+
+/// A buffered HTTP/1.1 connection (server or client side).
+pub struct HttpConn<S: Read + Write> {
+    stream: S,
+    buf: Vec<u8>,
+}
+
+impl<S: Read + Write> HttpConn<S> {
+    pub fn new(stream: S) -> Self {
+        HttpConn {
+            stream,
+            buf: Vec::new(),
+        }
+    }
+
+    pub fn into_inner(self) -> S {
+        self.stream
+    }
+
+    fn fill(&mut self) -> std::io::Result<Fill> {
+        let mut tmp = [0u8; 4096];
+        match self.stream.read(&mut tmp) {
+            Ok(0) => Ok(Fill::Eof),
+            Ok(n) => {
+                self.buf.extend_from_slice(&tmp[..n]);
+                Ok(Fill::Data)
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                Ok(Fill::Timeout)
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::ConnectionReset
+                        | ErrorKind::ConnectionAborted
+                        | ErrorKind::BrokenPipe
+                        | ErrorKind::UnexpectedEof
+                ) =>
+            {
+                Ok(Fill::Eof)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Drain one head (through the blank line) out of the buffer, if
+    /// complete.
+    fn take_head(&mut self) -> Option<Vec<u8>> {
+        let pos = self.buf.windows(4).position(|w| w == b"\r\n\r\n")?;
+        let head: Vec<u8> = self.buf[..pos].to_vec();
+        self.buf.drain(..pos + 4);
+        Some(head)
+    }
+
+    /// Read until a full head is buffered (or the peer goes away).
+    fn read_head(&mut self) -> Result<HeadOutcome> {
+        let mut timeouts = 0u32;
+        loop {
+            if let Some(h) = self.take_head() {
+                return Ok(HeadOutcome::Head(h));
+            }
+            anyhow::ensure!(self.buf.len() <= MAX_HEAD_BYTES, "head too large");
+            match self.fill()? {
+                Fill::Data => {}
+                Fill::Eof => {
+                    if self.buf.is_empty() {
+                        return Ok(HeadOutcome::Closed);
+                    }
+                    anyhow::bail!("connection closed mid-head");
+                }
+                Fill::Timeout => {
+                    if self.buf.is_empty() {
+                        return Ok(HeadOutcome::TimedOut);
+                    }
+                    timeouts += 1;
+                    anyhow::ensure!(
+                        timeouts < MID_MESSAGE_TIMEOUT_RETRIES,
+                        "timed out mid-head"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Read exactly `len` body bytes (the head is already consumed).
+    fn read_body(&mut self, len: usize) -> Result<Vec<u8>> {
+        let mut timeouts = 0u32;
+        while self.buf.len() < len {
+            match self.fill()? {
+                Fill::Data => {}
+                Fill::Eof => anyhow::bail!("connection closed mid-body"),
+                Fill::Timeout => {
+                    timeouts += 1;
+                    anyhow::ensure!(
+                        timeouts < MID_MESSAGE_TIMEOUT_RETRIES,
+                        "timed out reading body"
+                    );
+                }
+            }
+        }
+        Ok(self.buf.drain(..len).collect())
+    }
+
+    /// Wait for one request (server side).
+    pub fn read_request(&mut self, max_body: usize) -> Result<RequestOutcome> {
+        let head = match self.read_head()? {
+            HeadOutcome::Head(h) => h,
+            HeadOutcome::Closed => return Ok(RequestOutcome::Closed),
+            HeadOutcome::TimedOut => return Ok(RequestOutcome::TimedOut),
+        };
+        let text = std::str::from_utf8(&head)
+            .map_err(|_| anyhow::anyhow!("request head is not UTF-8"))?;
+        let mut lines = text.split("\r\n");
+        let request_line = lines.next().unwrap_or("");
+        let mut parts = request_line.split_whitespace();
+        let method = parts
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("empty request line"))?
+            .to_string();
+        let path = parts
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("request line has no path"))?
+            .to_string();
+        let version = parts
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("request line has no version"))?;
+        anyhow::ensure!(
+            version == "HTTP/1.1" || version == "HTTP/1.0",
+            "unsupported protocol {version:?}"
+        );
+        let headers = parse_headers(lines)?;
+        let content_length = content_length(&headers)?;
+        if content_length > max_body {
+            return Err(anyhow::Error::new(PayloadTooLarge));
+        }
+        let body = self.read_body(content_length)?;
+        let keep_alive = match headers
+            .iter()
+            .find(|(k, _)| k == "connection")
+            .map(|(_, v)| v.as_str())
+        {
+            Some(v) if v.eq_ignore_ascii_case("close") => false,
+            Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
+            _ => version == "HTTP/1.1",
+        };
+        Ok(RequestOutcome::Request(HttpRequest {
+            method,
+            path,
+            headers,
+            body,
+            keep_alive,
+        }))
+    }
+
+    /// Write a response (server side).
+    pub fn write_response(&mut self, resp: &Response, keep_alive: bool) -> std::io::Result<()> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+            resp.status,
+            status_text(resp.status),
+            resp.content_type,
+            resp.body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        );
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(&resp.body)?;
+        self.stream.flush()
+    }
+
+    /// Write a request (client side / load generator).
+    pub fn write_request(&mut self, method: &str, path: &str, body: &[u8]) -> std::io::Result<()> {
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nhost: emtopt\r\ncontent-type: application/json\r\n\
+             content-length: {}\r\nconnection: keep-alive\r\n\r\n",
+            body.len(),
+        );
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(body)?;
+        self.stream.flush()
+    }
+
+    /// Read one response (client side); returns `(status, body)`.
+    pub fn read_response(&mut self, max_body: usize) -> Result<(u16, Vec<u8>)> {
+        let head = match self.read_head()? {
+            HeadOutcome::Head(h) => h,
+            HeadOutcome::Closed => anyhow::bail!("server closed the connection"),
+            HeadOutcome::TimedOut => anyhow::bail!("timed out waiting for response"),
+        };
+        let text = std::str::from_utf8(&head)
+            .map_err(|_| anyhow::anyhow!("response head is not UTF-8"))?;
+        let mut lines = text.split("\r\n");
+        let status_line = lines.next().unwrap_or("");
+        let mut parts = status_line.split_whitespace();
+        let version = parts
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("empty status line"))?;
+        anyhow::ensure!(version.starts_with("HTTP/1."), "bad status line {status_line:?}");
+        let status: u16 = parts
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("status line has no code"))?
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad status code in {status_line:?}"))?;
+        let headers = parse_headers(lines)?;
+        let content_length = content_length(&headers)?;
+        anyhow::ensure!(content_length <= max_body, "response body too large");
+        let body = self.read_body(content_length)?;
+        Ok((status, body))
+    }
+}
+
+fn parse_headers<'a, I: Iterator<Item = &'a str>>(lines: I) -> Result<Vec<(String, String)>> {
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("malformed header line {line:?}"))?;
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    Ok(headers)
+}
+
+fn content_length(headers: &[(String, String)]) -> Result<usize> {
+    match headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .map(|(_, v)| v.as_str())
+    {
+        None => Ok(0),
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad content-length {v:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn conn(bytes: &[u8]) -> HttpConn<Cursor<Vec<u8>>> {
+        HttpConn::new(Cursor::new(bytes.to_vec()))
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /v1/infer HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\r\nhello";
+        let mut c = conn(raw);
+        match c.read_request(1024).unwrap() {
+            RequestOutcome::Request(r) => {
+                assert_eq!(r.method, "POST");
+                assert_eq!(r.path, "/v1/infer");
+                assert_eq!(r.body, b"hello");
+                assert!(r.keep_alive); // HTTP/1.1 default
+                assert_eq!(r.header("host"), Some("x"));
+            }
+            other => panic!("unexpected outcome {other:?}"),
+        }
+    }
+
+    #[test]
+    fn keep_alive_rules() {
+        let close = b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let mut c = conn(close);
+        match c.read_request(1024).unwrap() {
+            RequestOutcome::Request(r) => assert!(!r.keep_alive),
+            other => panic!("unexpected outcome {other:?}"),
+        }
+        let old = b"GET / HTTP/1.0\r\n\r\n";
+        let mut c = conn(old);
+        match c.read_request(1024).unwrap() {
+            RequestOutcome::Request(r) => assert!(!r.keep_alive),
+            other => panic!("unexpected outcome {other:?}"),
+        }
+        let old_ka = b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n";
+        let mut c = conn(old_ka);
+        match c.read_request(1024).unwrap() {
+            RequestOutcome::Request(r) => assert!(r.keep_alive),
+            other => panic!("unexpected outcome {other:?}"),
+        }
+    }
+
+    #[test]
+    fn two_pipelined_requests_survive_buffering() {
+        let raw =
+            b"GET /a HTTP/1.1\r\nContent-Length: 2\r\n\r\nxyGET /b HTTP/1.1\r\n\r\n".to_vec();
+        let mut c = HttpConn::new(Cursor::new(raw));
+        match c.read_request(1024).unwrap() {
+            RequestOutcome::Request(r) => {
+                assert_eq!(r.path, "/a");
+                assert_eq!(r.body, b"xy");
+            }
+            other => panic!("unexpected outcome {other:?}"),
+        }
+        match c.read_request(1024).unwrap() {
+            RequestOutcome::Request(r) => {
+                assert_eq!(r.path, "/b");
+                assert!(r.body.is_empty());
+            }
+            other => panic!("unexpected outcome {other:?}"),
+        }
+        assert!(matches!(c.read_request(1024).unwrap(), RequestOutcome::Closed));
+    }
+
+    #[test]
+    fn rejects_garbage_and_caps_body() {
+        let mut c = conn(b"NOT-HTTP\r\n\r\n");
+        assert!(c.read_request(1024).is_err());
+
+        let mut c = conn(b"POST / HTTP/1.1\r\nContent-Length: beef\r\n\r\n");
+        assert!(c.read_request(1024).is_err());
+
+        let mut c = conn(b"POST / HTTP/1.1\r\nContent-Length: 99\r\n\r\n");
+        let err = c.read_request(10).unwrap_err();
+        assert!(err.is::<PayloadTooLarge>());
+
+        let mut c = conn(b"POST / HTTP/1.1\r\nContent-Length: 9\r\n\r\nshort");
+        assert!(c.read_request(1024).is_err()); // body truncated by EOF
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        // write a response into a buffer, then parse it back client-side
+        let resp = Response::json(
+            200,
+            &crate::util::json::Json::obj(vec![(
+                "ok",
+                crate::util::json::Json::Bool(true),
+            )]),
+        );
+        let mut server = HttpConn::new(Cursor::new(Vec::new()));
+        server.write_response(&resp, true).unwrap();
+        let written = server.stream.into_inner();
+
+        let mut client = HttpConn::new(Cursor::new(written));
+        let (status, body) = client.read_response(1024).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"{\"ok\":true}");
+    }
+
+    #[test]
+    fn request_write_parses_back() {
+        let mut client = HttpConn::new(Cursor::new(Vec::new()));
+        client
+            .write_request("POST", "/v1/classify", b"{\"image\":[1]}")
+            .unwrap();
+        let written = client.stream.into_inner();
+
+        let mut server = HttpConn::new(Cursor::new(written));
+        match server.read_request(1024).unwrap() {
+            RequestOutcome::Request(r) => {
+                assert_eq!(r.method, "POST");
+                assert_eq!(r.path, "/v1/classify");
+                assert_eq!(r.body, b"{\"image\":[1]}");
+                assert!(r.keep_alive);
+            }
+            other => panic!("unexpected outcome {other:?}"),
+        }
+    }
+
+    #[test]
+    fn error_json_shape() {
+        let r = Response::error_json(503, "overloaded");
+        assert_eq!(r.status, 503);
+        let v = crate::util::json::Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str().unwrap(), "overloaded");
+    }
+}

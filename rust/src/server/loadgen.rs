@@ -1,0 +1,442 @@
+//! Open-loop HTTP load generator for the serving front end.
+//!
+//! Drives `POST /v1/infer` / `POST /v1/classify` over N keep-alive
+//! connections at a target aggregate QPS (0 = closed-loop, as fast as
+//! the connections allow).  Requests are deterministic dataset samples,
+//! so on `/v1/classify` the generator also scores served accuracy.
+//!
+//! Latency is measured from the request's **scheduled** send time when
+//! pacing (coordinated-omission-corrected: a stalled server inflates the
+//! tail instead of silently thinning the arrival rate), or from the
+//! actual send when running closed-loop.  The report carries
+//! p50/p95/p99/max, throughput, per-status counts, and is written as
+//! `BENCH_serve.json` for the perf trajectory.
+
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::data::{Dataset, Split, Suite, DATA_SEED, IMG_LEN};
+use crate::rng::Rng;
+use crate::util::json::Json;
+use crate::Result;
+
+use super::http::HttpConn;
+use super::EnergyTier;
+
+/// Load-generator configuration.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Target server, e.g. `127.0.0.1:8080`.
+    pub addr: String,
+    /// Concurrent keep-alive connections.
+    pub connections: usize,
+    /// Total requests across all connections.
+    pub requests: u64,
+    /// Aggregate target rate; 0.0 = closed loop (no pacing).
+    pub target_qps: f64,
+    /// Fixed tier, or `None` to cycle low/normal/high per request.
+    pub tier: Option<EnergyTier>,
+    /// Hit `/v1/classify` (and score accuracy) instead of `/v1/infer`.
+    pub classify: bool,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:8080".into(),
+            connections: 8,
+            requests: 1000,
+            target_qps: 0.0,
+            tier: Some(EnergyTier::Normal),
+            classify: true,
+        }
+    }
+}
+
+/// Aggregated result of one load-generation run.
+#[derive(Clone, Debug, Default)]
+pub struct LoadgenReport {
+    pub sent: u64,
+    pub ok: u64,
+    /// `503` responses (admission control sheds load under overload).
+    pub overloaded: u64,
+    /// Non-200, non-503 HTTP responses.
+    pub http_errors: u64,
+    /// Connect / socket / framing failures.
+    pub transport_errors: u64,
+    /// Correct classifications out of `labeled` (classify mode on the
+    /// native dataset only).
+    pub correct: u64,
+    pub labeled: u64,
+    pub elapsed_s: f64,
+    /// Completed-OK requests per second of wall clock.
+    pub throughput_rps: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub mean_us: f64,
+    pub max_us: u64,
+    pub connections: usize,
+    pub target_qps: f64,
+}
+
+impl LoadgenReport {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "loadgen: {} sent over {} connections in {:.2}s -> {:.0} req/s\n",
+            self.sent, self.connections, self.elapsed_s, self.throughput_rps
+        ));
+        s.push_str(&format!(
+            "  ok {} | overloaded(503) {} | http errors {} | transport errors {}\n",
+            self.ok, self.overloaded, self.http_errors, self.transport_errors
+        ));
+        if self.labeled > 0 {
+            s.push_str(&format!(
+                "  served accuracy {:.1}% ({}/{})\n",
+                100.0 * self.correct as f64 / self.labeled as f64,
+                self.correct,
+                self.labeled
+            ));
+        }
+        s.push_str(&format!(
+            "  latency p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms | mean {:.2} ms | max {:.2} ms",
+            self.p50_us as f64 / 1000.0,
+            self.p95_us as f64 / 1000.0,
+            self.p99_us as f64 / 1000.0,
+            self.mean_us / 1000.0,
+            self.max_us as f64 / 1000.0
+        ));
+        s
+    }
+
+    /// Machine-readable record (`BENCH_serve.json` schema).
+    pub fn to_json(&self) -> Json {
+        let latency = Json::obj(vec![
+            ("p50_us", Json::Num(self.p50_us as f64)),
+            ("p95_us", Json::Num(self.p95_us as f64)),
+            ("p99_us", Json::Num(self.p99_us as f64)),
+            ("mean_us", Json::Num(self.mean_us)),
+            ("max_us", Json::Num(self.max_us as f64)),
+        ]);
+        let unix_time = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        Json::obj(vec![
+            ("bench", Json::Str("serve".into())),
+            ("unix_time", Json::Num(unix_time as f64)),
+            ("connections", Json::Num(self.connections as f64)),
+            ("target_qps", Json::Num(self.target_qps)),
+            ("sent", Json::Num(self.sent as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("overloaded", Json::Num(self.overloaded as f64)),
+            ("http_errors", Json::Num(self.http_errors as f64)),
+            ("transport_errors", Json::Num(self.transport_errors as f64)),
+            ("correct", Json::Num(self.correct as f64)),
+            ("labeled", Json::Num(self.labeled as f64)),
+            ("elapsed_s", Json::Num(self.elapsed_s)),
+            ("throughput_rps", Json::Num(self.throughput_rps)),
+            ("latency_us", latency),
+        ])
+    }
+}
+
+/// Write the report to `path` (pretty enough for a CI artifact).
+pub fn write_bench(report: &LoadgenReport, path: &str) -> Result<()> {
+    std::fs::write(path, report.to_json().render() + "\n")?;
+    Ok(())
+}
+
+/// Exact percentile over a sorted sample (nearest-rank).
+pub fn percentile(sorted_us: &[u64], q: f64) -> u64 {
+    if sorted_us.is_empty() {
+        return 0;
+    }
+    let rank = (q * sorted_us.len() as f64).ceil() as usize;
+    sorted_us[rank.clamp(1, sorted_us.len()) - 1]
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct Counts {
+    sent: u64,
+    ok: u64,
+    overloaded: u64,
+    http_errors: u64,
+    transport_errors: u64,
+    correct: u64,
+    labeled: u64,
+}
+
+/// Open a keep-alive connection to the server, or `None` on failure.
+fn connect_http(addr: &str) -> Option<HttpConn<TcpStream>> {
+    let stream = TcpStream::connect(addr).ok()?;
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_nodelay(true);
+    Some(HttpConn::new(stream))
+}
+
+/// Probe `/healthz` for the deployed model's shape.
+fn probe(addr: &str) -> Result<(usize, usize)> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| anyhow::anyhow!("connecting to {addr}: {e}"))?;
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let mut conn = HttpConn::new(stream);
+    conn.write_request("GET", "/healthz", b"")?;
+    let (status, body) = conn.read_response(64 * 1024)?;
+    anyhow::ensure!(status == 200, "healthz returned {status}");
+    let v = Json::parse(std::str::from_utf8(&body)?)?;
+    Ok((
+        v.get("input_len")?.as_usize()?,
+        v.get("num_classes")?.as_usize()?,
+    ))
+}
+
+/// JSON body for one request (manual rendering keeps the hot loop free
+/// of intermediate `Json` trees).
+fn body_for(image: &[f32], tier: EnergyTier) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(image.len() * 10 + 32);
+    s.push_str("{\"image\":[");
+    for (i, v) in image.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "{v}");
+    }
+    let _ = write!(s, "],\"tier\":\"{}\"}}", tier.name());
+    s
+}
+
+/// Run the load generator; blocks until every connection finished.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    anyhow::ensure!(cfg.connections > 0, "need at least one connection");
+    anyhow::ensure!(cfg.requests > 0, "need at least one request");
+    let (input_len, num_classes) = probe(&cfg.addr)?;
+    // Native dataset when the deployed shape identifies a suite (gives
+    // labels for accuracy scoring); deterministic synthetic vectors
+    // otherwise — scoring a mismatched suite would report noise.
+    let suite = [Suite::Cifar, Suite::ImageNet]
+        .into_iter()
+        .find(|s| s.num_classes() == num_classes);
+    let dataset = match suite {
+        Some(s) if input_len == IMG_LEN => Some(Dataset::new(s, DATA_SEED)),
+        _ => None,
+    };
+    let interval = if cfg.target_qps > 0.0 {
+        Duration::from_secs_f64(1.0 / cfg.target_qps)
+    } else {
+        Duration::ZERO
+    };
+    let path = if cfg.classify { "/v1/classify" } else { "/v1/infer" };
+    let conns = cfg.connections as u64;
+    let base = cfg.requests / conns;
+    let extra = cfg.requests % conns;
+
+    let t0 = Instant::now();
+    let threads: Vec<_> = (0..conns)
+        .map(|c| {
+            let my_count = base + u64::from(c < extra);
+            let addr = cfg.addr.clone();
+            let dataset = dataset.clone();
+            let fixed_tier = cfg.tier;
+            let classify = cfg.classify;
+            std::thread::spawn(move || -> (Counts, Vec<u64>) {
+                let mut counts = Counts::default();
+                let mut latencies = Vec::with_capacity(my_count as usize);
+                let mut conn = connect_http(&addr);
+                let mut img = vec![0.0f32; input_len];
+                for k in 0..my_count {
+                    // striped global index -> evenly interleaved schedule
+                    let global = c + k * conns;
+                    let tier =
+                        fixed_tier.unwrap_or(EnergyTier::ALL[(global % 3) as usize]);
+                    let label = match &dataset {
+                        Some(ds) => Some(ds.sample_into(Split::Test, global, &mut img)),
+                        None => {
+                            let mut r = Rng::stream(0x10ad, global);
+                            for v in img.iter_mut() {
+                                *v = r.next_f32();
+                            }
+                            None
+                        }
+                    };
+                    // render the body before the latency clock starts, so
+                    // p50/p95/p99 measure network + server, not client-side
+                    // JSON formatting
+                    let body = body_for(&img, tier);
+                    let start = if interval.is_zero() {
+                        Instant::now()
+                    } else {
+                        let due = t0 + interval.mul_f64(global as f64);
+                        let now = Instant::now();
+                        if due > now {
+                            std::thread::sleep(due - now);
+                        }
+                        due
+                    };
+                    counts.sent += 1;
+                    // At-most-once submission with one reconnect: a failed
+                    // WRITE (nothing reached the server) is retried on a
+                    // fresh socket, so a connection the server closed costs
+                    // one reconnect, not the remaining schedule.  A lost
+                    // RESPONSE is never retried — the server may already
+                    // have executed the request, and a resend would break
+                    // the loadgen-report == /metrics reconciliation.
+                    let mut exchange = None;
+                    for _attempt in 0..2 {
+                        if conn.is_none() {
+                            conn = connect_http(&addr);
+                        }
+                        let Some(cn) = conn.as_mut() else { break };
+                        if cn.write_request("POST", path, body.as_bytes()).is_err() {
+                            conn = None; // dead socket, nothing submitted
+                            continue;
+                        }
+                        match cn.read_response(1 << 20) {
+                            Ok(r) => exchange = Some(r),
+                            Err(_) => conn = None,
+                        }
+                        break;
+                    }
+                    let (status, resp_body) = match exchange {
+                        Some(r) => r,
+                        None => {
+                            counts.transport_errors += 1;
+                            continue;
+                        }
+                    };
+                    let us = Instant::now()
+                        .saturating_duration_since(start)
+                        .as_micros() as u64;
+                    match status {
+                        200 => {
+                            counts.ok += 1;
+                            latencies.push(us);
+                            if classify {
+                                if let Some(label) = label {
+                                    counts.labeled += 1;
+                                    let pred = std::str::from_utf8(&resp_body)
+                                        .ok()
+                                        .and_then(|t| Json::parse(t).ok())
+                                        .and_then(|v| {
+                                            v.get("class").ok().and_then(|c| c.as_usize().ok())
+                                        });
+                                    if pred == Some(label as usize) {
+                                        counts.correct += 1;
+                                    }
+                                }
+                            }
+                        }
+                        503 => counts.overloaded += 1,
+                        _ => counts.http_errors += 1,
+                    }
+                }
+                (counts, latencies)
+            })
+        })
+        .collect();
+
+    let mut total = Counts::default();
+    let mut latencies: Vec<u64> = Vec::with_capacity(cfg.requests as usize);
+    for t in threads {
+        let (c, mut l) = t.join().map_err(|_| anyhow::anyhow!("loadgen thread panicked"))?;
+        total.sent += c.sent;
+        total.ok += c.ok;
+        total.overloaded += c.overloaded;
+        total.http_errors += c.http_errors;
+        total.transport_errors += c.transport_errors;
+        total.correct += c.correct;
+        total.labeled += c.labeled;
+        latencies.append(&mut l);
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    latencies.sort_unstable();
+    let mean_us = if latencies.is_empty() {
+        0.0
+    } else {
+        latencies.iter().sum::<u64>() as f64 / latencies.len() as f64
+    };
+    Ok(LoadgenReport {
+        sent: total.sent,
+        ok: total.ok,
+        overloaded: total.overloaded,
+        http_errors: total.http_errors,
+        transport_errors: total.transport_errors,
+        correct: total.correct,
+        labeled: total.labeled,
+        elapsed_s,
+        throughput_rps: if elapsed_s > 0.0 {
+            total.ok as f64 / elapsed_s
+        } else {
+            0.0
+        },
+        p50_us: percentile(&latencies, 0.50),
+        p95_us: percentile(&latencies, 0.95),
+        p99_us: percentile(&latencies, 0.99),
+        mean_us,
+        max_us: latencies.last().copied().unwrap_or(0),
+        connections: cfg.connections,
+        target_qps: cfg.target_qps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&xs, 0.50), 50);
+        assert_eq!(percentile(&xs, 0.95), 95);
+        assert_eq!(percentile(&xs, 0.99), 99);
+        assert_eq!(percentile(&xs, 1.0), 100);
+        assert_eq!(percentile(&xs, 0.0), 1);
+        assert_eq!(percentile(&[], 0.5), 0);
+        assert_eq!(percentile(&[7], 0.99), 7);
+    }
+
+    #[test]
+    fn body_renders_valid_json() {
+        let body = body_for(&[0.5, -1.25, 3.0], EnergyTier::High);
+        let v = Json::parse(&body).unwrap();
+        assert_eq!(v.get("tier").unwrap().as_str().unwrap(), "high");
+        assert_eq!(
+            v.get("image").unwrap().as_f32s().unwrap(),
+            vec![0.5, -1.25, 3.0]
+        );
+    }
+
+    #[test]
+    fn report_json_roundtrips() {
+        let r = LoadgenReport {
+            sent: 100,
+            ok: 98,
+            overloaded: 2,
+            elapsed_s: 1.5,
+            throughput_rps: 65.3,
+            p50_us: 800,
+            p95_us: 2000,
+            p99_us: 5000,
+            mean_us: 950.0,
+            max_us: 8000,
+            connections: 8,
+            ..Default::default()
+        };
+        let j = r.to_json();
+        let back = Json::parse(&j.render()).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str().unwrap(), "serve");
+        assert_eq!(back.get("sent").unwrap().as_u64().unwrap(), 100);
+        assert_eq!(
+            back.get("latency_us")
+                .unwrap()
+                .get("p99_us")
+                .unwrap()
+                .as_u64()
+                .unwrap(),
+            5000
+        );
+        assert!(r.render().contains("p99 5.00 ms"));
+    }
+}

@@ -1,0 +1,897 @@
+//! HTTP serving front end over the native crossbar engine.
+//!
+//! The network surface of the coordinator: a dependency-free HTTP/1.1
+//! server (`std::net::TcpListener`, thread-per-connection pool with
+//! keep-alive) in front of three [`serve_native`] lanes — one per
+//! **energy tier** — all sharing one immutable `Arc<NoisyModel>`.
+//!
+//! ```text
+//!   TCP clients ──> acceptor ──> conn pool ──> route ──> tier lane
+//!                                                        (batcher +
+//!                                                         worker pool)
+//! ```
+//!
+//! Endpoints:
+//!
+//! * `POST /v1/infer`     `{"image": [f32; d_in], "tier": "low|normal|high"}`
+//!   → `{"logits": [...], "tier": ..., "rho": ..., "mode": ...}`
+//! * `POST /v1/classify`  same body → adds `"class"` (argmax)
+//! * `GET  /healthz`      liveness + deployed-model shape
+//! * `GET  /metrics`      Prometheus text (see [`prom`])
+//! * `POST /admin/shutdown`  graceful drain
+//!
+//! **Energy tiers** surface the paper's energy–accuracy knob (eq. 7/8:
+//! fluctuation sigma ∝ 1/sqrt(rho)) as an API parameter: each tier maps
+//! an energy budget to a per-read energy coefficient rho through
+//! [`EnergyModel::rho_for_budget`], and the low tier additionally uses
+//! the decomposed (bit-serial, technique C) read mode.  A request's tier
+//! picks the lane — and therefore the noise level and the per-request
+//! device energy — it is served with.
+//!
+//! **Admission control:** requests enter a lane via
+//! [`InferenceClient::try_infer`]; a full bounded queue returns the typed
+//! `Overloaded` error, which this layer maps to `503`.  The acceptor
+//! additionally sheds whole connections with `503` when all handler
+//! threads are busy and the hand-off queue is full.  Overload never grows
+//! memory without bound.
+
+pub mod http;
+pub mod loadgen;
+pub mod prom;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::router::{
+    serve_native, InferenceClient, NativeServerConfig, Overloaded, ServerStats,
+};
+use crate::device::DeviceConfig;
+use crate::energy::{EnergyModel, ReadMode};
+use crate::inference::NoisyModel;
+use crate::models::{LayerMeta, ModelDesc};
+use crate::util::json::Json;
+use crate::Result;
+
+use self::http::{HttpConn, HttpRequest, PayloadTooLarge, RequestOutcome, Response};
+
+// ---------------------------------------------------------------------------
+// energy tiers
+// ---------------------------------------------------------------------------
+
+/// Per-request energy tier: the serving-time contract of the paper's
+/// energy–accuracy tradeoff.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EnergyTier {
+    /// Half the reference energy budget, decomposed (bit-serial) reads.
+    Low,
+    /// The reference budget (device-default rho), original reads.
+    Normal,
+    /// Twice the reference budget: higher rho, lower fluctuation sigma.
+    High,
+}
+
+impl EnergyTier {
+    pub const ALL: [EnergyTier; 3] = [EnergyTier::Low, EnergyTier::Normal, EnergyTier::High];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EnergyTier::Low => "low",
+            EnergyTier::Normal => "normal",
+            EnergyTier::High => "high",
+        }
+    }
+
+    /// Lane index (also the RNG seed offset of the tier's engine).
+    pub fn index(self) -> usize {
+        match self {
+            EnergyTier::Low => 0,
+            EnergyTier::Normal => 1,
+            EnergyTier::High => 2,
+        }
+    }
+
+    /// Energy budget as a multiple of the reference (device-default rho)
+    /// model energy.
+    fn budget_scale(self) -> f64 {
+        match self {
+            EnergyTier::Low => 0.5,
+            EnergyTier::Normal => 1.0,
+            EnergyTier::High => 2.0,
+        }
+    }
+
+    /// Low tier pays the B_a-cycle decomposed read (technique C) to keep
+    /// fluctuation bounded at its reduced rho; the others read original.
+    fn mode(self) -> ReadMode {
+        match self {
+            EnergyTier::Low => ReadMode::Decomposed,
+            EnergyTier::Normal | EnergyTier::High => ReadMode::Original,
+        }
+    }
+}
+
+impl std::str::FromStr for EnergyTier {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s {
+            "low" => Ok(EnergyTier::Low),
+            "normal" => Ok(EnergyTier::Normal),
+            "high" => Ok(EnergyTier::High),
+            other => Err(format!("unknown tier {other:?} (want low|normal|high)")),
+        }
+    }
+}
+
+/// Parse a CLI `--tier` argument: a fixed tier, or `"mixed"` (`None`,
+/// the loadgen cycles low/normal/high per request).
+pub fn parse_tier_arg(s: &str) -> Result<Option<EnergyTier>> {
+    if s == "mixed" {
+        return Ok(None);
+    }
+    s.parse().map(Some).map_err(|e: String| anyhow::anyhow!(e))
+}
+
+/// Resolved serving plan of one tier: the rho/read-mode pair its lane
+/// runs with, and the lane's expected per-inference energy.
+#[derive(Clone, Debug)]
+pub struct TierPlan {
+    pub tier: EnergyTier,
+    pub rho: f32,
+    pub mode: ReadMode,
+    /// Expected analytical energy per inference at the resolved rho/mode
+    /// — the tier's requested budget when achievable, or the closest
+    /// achievable value after rho clamping / the peripheral floor, so
+    /// the API never advertises a budget the lane cannot honour.
+    pub budget_uj: f64,
+}
+
+impl TierPlan {
+    /// One-line human summary for CLI banners (shared by `serve-http`
+    /// and the serving example so the two cannot drift).
+    pub fn describe(&self) -> String {
+        format!(
+            "tier {:<6}  rho {:>6.2}  mode {:<10}  budget {:.2} uJ/inference",
+            self.tier.name(),
+            self.rho,
+            self.mode.name(),
+            self.budget_uj
+        )
+    }
+}
+
+/// Describe a deployed [`NoisyModel`] as a dense-layer stack for the
+/// analytical energy model (every native layer is one crossbar-mapped
+/// dense layer, alpha == 1).
+pub fn model_desc(model: &NoisyModel) -> ModelDesc {
+    ModelDesc {
+        name: "deployed".into(),
+        layers: model
+            .layers()
+            .iter()
+            .map(|l| LayerMeta::dense(l.d_in as u64, l.d_out as u64))
+            .collect(),
+    }
+}
+
+/// Map the three tiers to (rho, read mode) for a deployed model: tier
+/// budgets are multiples of the model's energy at the device-default rho,
+/// inverted to rho via [`EnergyModel::rho_for_budget`] (cell energy is
+/// linear in rho, so the inversion is closed-form) and clamped to the
+/// device's sane range.
+pub fn tier_plans(model: &NoisyModel, device: &DeviceConfig) -> Vec<TierPlan> {
+    let desc = model_desc(model);
+    let em = EnergyModel::new(device.act_bits);
+    let reference_uj = em.model_uj_uniform(&desc, device.rho as f64, ReadMode::Original);
+    EnergyTier::ALL
+        .iter()
+        .map(|&tier| {
+            let target_uj = reference_uj * tier.budget_scale();
+            let mode = tier.mode();
+            // A target below the mode's peripheral floor is unachievable
+            // (rho_for_budget -> None): fall back to the minimum rho
+            // rather than silently burning the device default.
+            let rho = em
+                .rho_for_budget(&desc, target_uj, mode)
+                .unwrap_or(0.25)
+                .clamp(0.25, 64.0);
+            // Advertise what the lane will actually spend (== target
+            // whenever the target was achievable).
+            let budget_uj = em.model_uj_uniform(&desc, rho, mode);
+            TierPlan {
+                tier,
+                rho: rho as f32,
+                mode,
+                budget_uj,
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// tiered engine: one serve_native lane per tier over a shared model
+// ---------------------------------------------------------------------------
+
+struct Lane {
+    plan: TierPlan,
+    client: InferenceClient,
+    stats: Arc<ServerStats>,
+}
+
+/// Three native engine lanes (one per [`EnergyTier`]) over one shared
+/// immutable model.  Each lane has its own batcher, worker pool, bounded
+/// queue, and [`ServerStats`]; the crossbar arrays behind the `Arc` are
+/// shared by all of them.
+pub struct TieredEngine {
+    lanes: Vec<Lane>,
+}
+
+impl TieredEngine {
+    /// Spawn the three lanes; returns the engine plus all lane thread
+    /// handles (join them after dropping the engine).
+    pub fn start(
+        model: Arc<NoisyModel>,
+        base: &NativeServerConfig,
+    ) -> Result<(TieredEngine, Vec<std::thread::JoinHandle<()>>)> {
+        let plans = tier_plans(&model, &base.device);
+        let mut lanes = Vec::with_capacity(plans.len());
+        let mut handles = Vec::new();
+        for plan in plans {
+            let cfg = NativeServerConfig {
+                mode: plan.mode,
+                device: DeviceConfig {
+                    rho: plan.rho,
+                    ..base.device.clone()
+                },
+                seed: base.seed.wrapping_add(plan.tier.index() as u64),
+                ..base.clone()
+            };
+            let (client, stats, hs) = serve_native(model.clone(), cfg)?;
+            handles.extend(hs);
+            lanes.push(Lane {
+                plan,
+                client,
+                stats,
+            });
+        }
+        Ok((TieredEngine { lanes }, handles))
+    }
+
+    fn lane(&self, tier: EnergyTier) -> &Lane {
+        &self.lanes[tier.index()]
+    }
+
+    pub fn plan(&self, tier: EnergyTier) -> &TierPlan {
+        &self.lane(tier).plan
+    }
+
+    pub fn stats(&self, tier: EnergyTier) -> &Arc<ServerStats> {
+        &self.lane(tier).stats
+    }
+
+    /// `(plan, stats)` of every tier, in [`EnergyTier::ALL`] order.
+    pub fn per_tier(&self) -> Vec<(&TierPlan, &ServerStats)> {
+        self.lanes
+            .iter()
+            .map(|l| (&l.plan, l.stats.as_ref()))
+            .collect()
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.lanes[0].client.input_len
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.lanes[0].client.num_classes
+    }
+
+    /// Non-blocking admission into the tier's lane (typed `Overloaded`
+    /// error when its bounded queue is full).
+    pub fn try_infer(&self, tier: EnergyTier, image: Vec<f32>) -> Result<Vec<f32>> {
+        self.lane(tier).client.try_infer(image)
+    }
+
+    /// Blocking submit (backpressure instead of load-shedding).
+    pub fn infer(&self, tier: EnergyTier, image: Vec<f32>) -> Result<Vec<f32>> {
+        self.lane(tier).client.infer(image)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HTTP front end
+// ---------------------------------------------------------------------------
+
+/// Configuration of the HTTP front end.
+#[derive(Clone, Debug)]
+pub struct HttpServerConfig {
+    /// Bind address, e.g. `127.0.0.1:8080` (port 0 picks an ephemeral
+    /// port; read it back from [`ServerHandle::addr`]).
+    pub addr: String,
+    /// Connection-handler threads; each owns one connection at a time.
+    pub conn_threads: usize,
+    /// Accepted connections waiting for a free handler before the
+    /// acceptor sheds them with `503`.
+    pub conn_backlog: usize,
+    /// Request body cap (`413` above it).
+    pub max_body_bytes: usize,
+    /// Socket read timeout; bounds how quickly idle keep-alive
+    /// connections notice a shutdown.
+    pub read_timeout: Duration,
+    /// Engine config shared by the tier lanes (rho/mode overridden per
+    /// tier by [`tier_plans`]).
+    pub engine: NativeServerConfig,
+}
+
+impl Default for HttpServerConfig {
+    fn default() -> Self {
+        HttpServerConfig {
+            addr: "127.0.0.1:8080".into(),
+            conn_threads: 16,
+            conn_backlog: 64,
+            max_body_bytes: 1 << 20,
+            read_timeout: Duration::from_millis(250),
+            engine: NativeServerConfig::default(),
+        }
+    }
+}
+
+/// HTTP-layer counters (responses by status, connections accepted).
+#[derive(Debug, Default)]
+pub struct HttpStats {
+    pub connections: AtomicU64,
+    pub ok_200: AtomicU64,
+    pub bad_request_400: AtomicU64,
+    pub not_found_404: AtomicU64,
+    pub method_not_allowed_405: AtomicU64,
+    pub payload_too_large_413: AtomicU64,
+    pub internal_500: AtomicU64,
+    pub overloaded_503: AtomicU64,
+}
+
+impl HttpStats {
+    pub fn record(&self, status: u16) {
+        let cell = match status {
+            200 => &self.ok_200,
+            400 => &self.bad_request_400,
+            404 => &self.not_found_404,
+            405 => &self.method_not_allowed_405,
+            413 => &self.payload_too_large_413,
+            503 => &self.overloaded_503,
+            _ => &self.internal_500,
+        };
+        cell.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `(status, count)` pairs in ascending status order (zeros included,
+    /// so `/metrics` series are stable from the first scrape).
+    pub fn by_code(&self) -> Vec<(u16, u64)> {
+        vec![
+            (200, self.ok_200.load(Ordering::Relaxed)),
+            (400, self.bad_request_400.load(Ordering::Relaxed)),
+            (404, self.not_found_404.load(Ordering::Relaxed)),
+            (405, self.method_not_allowed_405.load(Ordering::Relaxed)),
+            (413, self.payload_too_large_413.load(Ordering::Relaxed)),
+            (500, self.internal_500.load(Ordering::Relaxed)),
+            (503, self.overloaded_503.load(Ordering::Relaxed)),
+        ]
+    }
+
+    /// Total responses written.
+    pub fn total(&self) -> u64 {
+        self.by_code().iter().map(|&(_, n)| n).sum()
+    }
+}
+
+struct ServerCtx {
+    engine: TieredEngine,
+    http: HttpStats,
+    shutdown: AtomicBool,
+    started: Instant,
+    addr: SocketAddr,
+    /// Free handler capacity not yet claimed by an accepted connection.
+    /// The acceptor *reserves* a unit (CAS decrement) before queueing a
+    /// connection and sheds with `503` when none is left; a handler
+    /// releases its unit when it finishes a connection.  Every queued
+    /// connection therefore has a handler that will reach it — with
+    /// keep-alive, a handler can own its connection indefinitely, so
+    /// queueing without a reservation would hang the client, not delay
+    /// it.
+    idle_handlers: AtomicU64,
+}
+
+/// Handle to a running server: bound address, stats, graceful shutdown.
+pub struct ServerHandle {
+    ctx: Arc<ServerCtx>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    conn_handles: Vec<std::thread::JoinHandle<()>>,
+    engine_handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.ctx.addr
+    }
+
+    pub fn http_stats(&self) -> &HttpStats {
+        &self.ctx.http
+    }
+
+    /// `(plan, stats)` of every engine tier.
+    pub fn per_tier(&self) -> Vec<(&TierPlan, &ServerStats)> {
+        self.ctx.engine.per_tier()
+    }
+
+    /// Per-tier serving summary (requests, tail latency, energy) for CLI
+    /// reports; tiers that served no traffic are omitted.
+    pub fn tier_summary(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (plan, stats) in self.per_tier() {
+            let n = stats.requests.load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
+            }
+            let _ = writeln!(
+                out,
+                "tier {:<6} {n:>6} requests | p50 {:.2} ms | p95 {:.2} ms | \
+                 p99 {:.2} ms | {:.1} nJ/request",
+                plan.tier.name(),
+                stats.latency.p50_us() / 1000.0,
+                stats.latency.p95_us() / 1000.0,
+                stats.latency.p99_us() / 1000.0,
+                stats.mean_energy_pj_per_request() / 1000.0
+            );
+        }
+        out
+    }
+
+    /// True once a shutdown was requested (flag, `/admin/shutdown`, or
+    /// [`ServerHandle::shutdown`]).
+    pub fn shutdown_requested(&self) -> bool {
+        self.ctx.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Request a shutdown without consuming the handle (the acceptor is
+    /// woken; call [`ServerHandle::shutdown`] to join everything).
+    pub fn request_shutdown(&self) {
+        self.ctx.shutdown.store(true, Ordering::SeqCst);
+        wake_acceptor(self.ctx.addr);
+    }
+
+    /// Graceful shutdown: stop accepting, drain handler threads, stop the
+    /// engine lanes, and join every thread.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.request_shutdown();
+        if let Some(h) = self.acceptor.take() {
+            h.join().map_err(|_| anyhow::anyhow!("acceptor panicked"))?;
+        }
+        for h in self.conn_handles.drain(..) {
+            h.join().map_err(|_| anyhow::anyhow!("connection handler panicked"))?;
+        }
+        // Handler threads are gone, so this is the last reference to the
+        // context; dropping it drops the lane clients, which stops the
+        // engine batchers and workers.
+        drop(self.ctx);
+        for h in self.engine_handles {
+            h.join().map_err(|_| anyhow::anyhow!("engine worker panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Atomically claim one unit of free handler capacity (false when none
+/// is left — the caller sheds the connection instead of queueing it).
+fn reserve_idle_handler(gauge: &AtomicU64) -> bool {
+    let mut cur = gauge.load(Ordering::SeqCst);
+    loop {
+        if cur == 0 {
+            return false;
+        }
+        match gauge.compare_exchange(cur, cur - 1, Ordering::SeqCst, Ordering::SeqCst) {
+            Ok(_) => return true,
+            Err(actual) => cur = actual,
+        }
+    }
+}
+
+/// Poke the acceptor out of its blocking `accept` so it can observe the
+/// shutdown flag.  An unspecified bind IP (0.0.0.0 / ::) is not
+/// connectable on every platform, so the poke targets loopback instead.
+fn wake_acceptor(addr: SocketAddr) {
+    let mut target = addr;
+    if target.ip().is_unspecified() {
+        target.set_ip(match target {
+            SocketAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+            SocketAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+        });
+    }
+    let _ = TcpStream::connect_timeout(&target, Duration::from_millis(200));
+}
+
+/// Best-effort graceful close after a response the peer must still be
+/// able to read: closing a socket with unread request bytes in its
+/// receive queue makes the kernel send RST, which can destroy the
+/// in-flight response — so signal end-of-response with a write shutdown
+/// and swallow (bounded) whatever the peer already sent.
+fn drain_and_close(stream: TcpStream) {
+    use std::io::Read as _;
+    let mut stream = stream;
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(10)));
+    let mut sink = [0u8; 4096];
+    for _ in 0..16 {
+        match stream.read(&mut sink) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
+}
+
+/// Connection-level load shedding: best-effort `503`, then
+/// [`drain_and_close`].  Runs on a short-lived throwaway thread:
+/// shedding happens exactly when the server is saturated, and the
+/// acceptor must keep accepting (to shed the next connection too)
+/// rather than block on a slow peer.
+fn shed_connection(ctx: &ServerCtx, stream: TcpStream) {
+    ctx.http.record(503);
+    std::thread::spawn(move || {
+        let mut conn = HttpConn::new(stream);
+        let _ = conn.write_response(
+            &Response::error_json(503, "server overloaded: all handlers busy"),
+            false,
+        );
+        drain_and_close(conn.into_inner());
+    });
+}
+
+/// Bind, spawn the engine lanes + connection pool + acceptor, and return
+/// immediately with a [`ServerHandle`].
+pub fn serve_http(model: Arc<NoisyModel>, cfg: HttpServerConfig) -> Result<ServerHandle> {
+    anyhow::ensure!(cfg.conn_threads > 0, "need at least one connection thread");
+    anyhow::ensure!(cfg.conn_backlog > 0, "conn_backlog must be positive");
+    let (engine, engine_handles) = TieredEngine::start(model, &cfg.engine)?;
+
+    let listener = TcpListener::bind(&cfg.addr)
+        .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+    let ctx = Arc::new(ServerCtx {
+        engine,
+        http: HttpStats::default(),
+        shutdown: AtomicBool::new(false),
+        started: Instant::now(),
+        addr,
+        // Starts at pool size so connections accepted before the handler
+        // threads' first park are queued, never spuriously shed.
+        idle_handlers: AtomicU64::new(cfg.conn_threads as u64),
+    });
+
+    // Hand accepted sockets to a fixed pool of handler threads over a
+    // bounded queue.  The acceptor sheds with 503 when no handler is
+    // idle (see `ServerCtx::idle_handlers`); the queue bound is the
+    // backstop for the gauge's race window.
+    let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(cfg.conn_backlog);
+    let conn_rx = Arc::new(Mutex::new(conn_rx));
+    let mut conn_handles = Vec::with_capacity(cfg.conn_threads);
+    for _ in 0..cfg.conn_threads {
+        let ctx = ctx.clone();
+        let conn_rx = conn_rx.clone();
+        let read_timeout = cfg.read_timeout;
+        let max_body = cfg.max_body_bytes;
+        conn_handles.push(std::thread::spawn(move || loop {
+            let stream = {
+                let guard = conn_rx.lock().expect("connection queue poisoned");
+                guard.recv()
+            };
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => return, // acceptor gone
+            };
+            // the acceptor already reserved this handler's capacity unit
+            serve_connection(&ctx, stream, read_timeout, max_body);
+            ctx.idle_handlers.fetch_add(1, Ordering::SeqCst);
+        }));
+    }
+
+    let acceptor_ctx = ctx.clone();
+    let acceptor = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            if acceptor_ctx.shutdown.load(Ordering::SeqCst) {
+                return; // drops conn_tx -> handlers drain and exit
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            acceptor_ctx.http.connections.fetch_add(1, Ordering::Relaxed);
+            // Reserve a free handler before queueing (see
+            // `ServerCtx::idle_handlers`); shed when none is left.
+            if !reserve_idle_handler(&acceptor_ctx.idle_handlers) {
+                shed_connection(&acceptor_ctx, stream);
+                continue;
+            }
+            match conn_tx.try_send(stream) {
+                Ok(()) => {}
+                Err(TrySendError::Full(stream)) => {
+                    // return the unused reservation
+                    acceptor_ctx.idle_handlers.fetch_add(1, Ordering::SeqCst);
+                    shed_connection(&acceptor_ctx, stream);
+                }
+                Err(TrySendError::Disconnected(_)) => return,
+            }
+        }
+    });
+
+    Ok(ServerHandle {
+        ctx,
+        acceptor: Some(acceptor),
+        conn_handles,
+        engine_handles,
+    })
+}
+
+/// Serve one connection until close, protocol error, or shutdown.
+fn serve_connection(
+    ctx: &ServerCtx,
+    stream: TcpStream,
+    read_timeout: Duration,
+    max_body: usize,
+) {
+    let _ = stream.set_read_timeout(Some(read_timeout));
+    // A peer that stops reading (full kernel send buffer) must error the
+    // handler out of write_all eventually, or shutdown could never join
+    // this thread.
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_nodelay(true);
+    let mut conn = HttpConn::new(stream);
+    loop {
+        if ctx.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match conn.read_request(max_body) {
+            Ok(RequestOutcome::TimedOut) => continue, // idle; re-check shutdown
+            Ok(RequestOutcome::Closed) => return,
+            Ok(RequestOutcome::Request(req)) => {
+                let keep_alive = req.keep_alive;
+                let resp = route(ctx, &req);
+                ctx.http.record(resp.status);
+                if conn.write_response(&resp, keep_alive).is_err() || !keep_alive {
+                    return;
+                }
+            }
+            Err(e) => {
+                let status = if e.is::<PayloadTooLarge>() { 413 } else { 400 };
+                ctx.http.record(status);
+                let _ = conn.write_response(&Response::error_json(status, &format!("{e}")), false);
+                // unread request bytes (e.g. an oversized body) would RST
+                // away the error response on a plain close
+                drain_and_close(conn.into_inner());
+                return;
+            }
+        }
+    }
+}
+
+fn route(ctx: &ServerCtx, req: &HttpRequest) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Response::json(
+            200,
+            &Json::obj(vec![
+                ("status", Json::Str("ok".into())),
+                ("input_len", Json::Num(ctx.engine.input_len() as f64)),
+                ("num_classes", Json::Num(ctx.engine.num_classes() as f64)),
+                (
+                    "uptime_s",
+                    Json::Num(ctx.started.elapsed().as_secs_f64()),
+                ),
+            ]),
+        ),
+        ("GET", "/metrics") => {
+            let body = prom::render(
+                &ctx.http,
+                &ctx.engine.per_tier(),
+                ctx.started.elapsed().as_secs_f64(),
+            );
+            Response {
+                status: 200,
+                content_type: "text/plain; version=0.0.4; charset=utf-8",
+                body: body.into_bytes(),
+            }
+        }
+        ("POST", "/v1/infer") => infer_route(ctx, req, false),
+        ("POST", "/v1/classify") => infer_route(ctx, req, true),
+        ("POST", "/admin/shutdown") => {
+            ctx.shutdown.store(true, Ordering::SeqCst);
+            wake_acceptor(ctx.addr);
+            Response::json(200, &Json::obj(vec![("status", Json::Str("shutting down".into()))]))
+        }
+        (_, "/healthz" | "/metrics" | "/v1/infer" | "/v1/classify" | "/admin/shutdown") => {
+            Response::error_json(405, &format!("method {} not allowed here", req.method))
+        }
+        (_, path) => Response::error_json(404, &format!("no route for {path}")),
+    }
+}
+
+fn infer_route(ctx: &ServerCtx, req: &HttpRequest, classify: bool) -> Response {
+    let (image, tier) = match parse_infer_body(&req.body, ctx.engine.input_len()) {
+        Ok(p) => p,
+        Err(e) => return Response::error_json(400, &format!("{e}")),
+    };
+    match ctx.engine.try_infer(tier, image) {
+        Ok(logits) => {
+            let plan = ctx.engine.plan(tier);
+            let mut fields = vec![
+                ("tier", Json::Str(tier.name().into())),
+                ("rho", Json::Num(plan.rho as f64)),
+                ("mode", Json::Str(plan.mode.name().into())),
+                ("logits", Json::f32_arr(&logits)),
+            ];
+            if classify {
+                let class = crate::inference::argmax(&logits);
+                fields.push(("class", Json::Num(class as f64)));
+            }
+            Response::json(200, &Json::obj(fields))
+        }
+        Err(e) if e.is::<Overloaded>() => Response::error_json(503, &format!("{e}")),
+        Err(e) => Response::error_json(500, &format!("{e}")),
+    }
+}
+
+fn parse_infer_body(body: &[u8], input_len: usize) -> Result<(Vec<f32>, EnergyTier)> {
+    let text =
+        std::str::from_utf8(body).map_err(|_| anyhow::anyhow!("body is not UTF-8"))?;
+    let v = Json::parse(text)?;
+    let image = v.get("image")?.as_f32s()?;
+    anyhow::ensure!(
+        image.len() == input_len,
+        "image must be {input_len} floats, got {}",
+        image.len()
+    );
+    // Non-finite pixels (e.g. 1e39 saturating to f32 infinity) would
+    // propagate into the logits and render as invalid JSON downstream.
+    anyhow::ensure!(
+        image.iter().all(|v| v.is_finite()),
+        "image values must be finite"
+    );
+    let tier = match v.opt("tier") {
+        None => EnergyTier::Normal,
+        Some(t) => t
+            .as_str()?
+            .parse()
+            .map_err(|e: String| anyhow::anyhow!(e))?,
+    };
+    Ok((image, tier))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn tiny_model(dev: &DeviceConfig) -> Arc<NoisyModel> {
+        let mut rng = Rng::new(21);
+        let (d_in, d_out) = (6usize, 3usize);
+        let w: Vec<f32> = (0..d_in * d_out).map(|_| rng.normal() * 0.4).collect();
+        let b = vec![0.0f32; d_out];
+        Arc::new(NoisyModel::new(&[(w.as_slice(), b.as_slice(), d_in, d_out)], dev).unwrap())
+    }
+
+    #[test]
+    fn tier_parsing() {
+        assert_eq!("low".parse::<EnergyTier>().unwrap(), EnergyTier::Low);
+        assert_eq!("normal".parse::<EnergyTier>().unwrap(), EnergyTier::Normal);
+        assert_eq!("high".parse::<EnergyTier>().unwrap(), EnergyTier::High);
+        assert!("turbo".parse::<EnergyTier>().is_err());
+        for t in EnergyTier::ALL {
+            assert_eq!(t.name().parse::<EnergyTier>().unwrap(), t);
+        }
+        assert_eq!(parse_tier_arg("mixed").unwrap(), None);
+        assert_eq!(parse_tier_arg("high").unwrap(), Some(EnergyTier::High));
+        assert!(parse_tier_arg("nope").is_err());
+    }
+
+    #[test]
+    fn tier_plans_track_budgets() {
+        let dev = DeviceConfig::default();
+        let model = tiny_model(&dev);
+        let plans = tier_plans(&model, &dev);
+        assert_eq!(plans.len(), 3);
+        // normal tier at the reference budget must recover the device rho
+        let normal = &plans[EnergyTier::Normal.index()];
+        assert_eq!(normal.mode, ReadMode::Original);
+        assert!(
+            (normal.rho - dev.rho).abs() < 1e-3,
+            "normal rho {} vs device {}",
+            normal.rho,
+            dev.rho
+        );
+        // budgets are ordered low < normal < high
+        let low = &plans[EnergyTier::Low.index()];
+        let high = &plans[EnergyTier::High.index()];
+        assert!(low.budget_uj < normal.budget_uj && normal.budget_uj < high.budget_uj);
+        // high tier buys a larger rho (lower fluctuation) than normal
+        assert!(high.rho > normal.rho);
+        assert_eq!(low.mode, ReadMode::Decomposed);
+        // all rhos clamped to the sane device range
+        for p in &plans {
+            assert!((0.25..=64.0).contains(&p.rho), "rho {}", p.rho);
+        }
+    }
+
+    #[test]
+    fn model_desc_mirrors_layers() {
+        let dev = DeviceConfig::default();
+        let model = tiny_model(&dev);
+        let desc = model_desc(&model);
+        assert_eq!(desc.layers.len(), 1);
+        assert_eq!(desc.layers[0].cells, 18);
+        assert_eq!(desc.layers[0].fan_in, 6);
+        assert_eq!(desc.layers[0].out_features, 3);
+    }
+
+    #[test]
+    fn tiered_engine_serves_all_tiers() {
+        let dev = DeviceConfig::default();
+        let model = tiny_model(&dev);
+        let base = NativeServerConfig {
+            batch: 4,
+            workers: 1,
+            max_wait: Duration::from_millis(1),
+            device: dev,
+            ..Default::default()
+        };
+        let (engine, handles) = TieredEngine::start(model, &base).unwrap();
+        assert_eq!(engine.input_len(), 6);
+        assert_eq!(engine.num_classes(), 3);
+        for tier in EnergyTier::ALL {
+            let mut r = Rng::stream(55, tier.index() as u64);
+            let img: Vec<f32> = (0..6).map(|_| r.next_f32()).collect();
+            let logits = engine.try_infer(tier, img).unwrap();
+            assert_eq!(logits.len(), 3);
+            assert!(logits.iter().all(|v| v.is_finite()));
+            assert_eq!(engine.stats(tier).requests.load(Ordering::Relaxed), 1);
+        }
+        // the decomposed low lane burns more cycles per request
+        let low_cycles = engine.stats(EnergyTier::Low).energy().cycles;
+        let normal_cycles = engine.stats(EnergyTier::Normal).energy().cycles;
+        assert!(low_cycles > normal_cycles);
+        drop(engine);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn http_stats_record_and_total() {
+        let s = HttpStats::default();
+        for code in [200, 200, 400, 404, 405, 413, 503, 500, 502] {
+            s.record(code);
+        }
+        let by = s.by_code();
+        assert_eq!(by.iter().find(|&&(c, _)| c == 200).unwrap().1, 2);
+        assert_eq!(by.iter().find(|&&(c, _)| c == 503).unwrap().1, 1);
+        // unknown codes land in the 500 bucket
+        assert_eq!(by.iter().find(|&&(c, _)| c == 500).unwrap().1, 2);
+        assert_eq!(s.total(), 9);
+    }
+
+    #[test]
+    fn parse_infer_body_validates() {
+        assert!(parse_infer_body(b"{\"image\":[1,2,3]}", 3).is_ok());
+        let (img, tier) =
+            parse_infer_body(b"{\"image\":[1,2,3],\"tier\":\"high\"}", 3).unwrap();
+        assert_eq!(img, vec![1.0, 2.0, 3.0]);
+        assert_eq!(tier, EnergyTier::High);
+        // defaults to normal
+        let (_, tier) = parse_infer_body(b"{\"image\":[0,0,0]}", 3).unwrap();
+        assert_eq!(tier, EnergyTier::Normal);
+        // shape mismatch, bad tier, bad json, missing key, non-finite pixel
+        assert!(parse_infer_body(b"{\"image\":[1,2]}", 3).is_err());
+        assert!(parse_infer_body(b"{\"image\":[1,2,3],\"tier\":\"x\"}", 3).is_err());
+        assert!(parse_infer_body(b"not json", 3).is_err());
+        assert!(parse_infer_body(b"{}", 3).is_err());
+        assert!(parse_infer_body(b"{\"image\":[1e39,0,0]}", 3).is_err());
+    }
+}

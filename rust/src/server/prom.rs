@@ -1,0 +1,321 @@
+//! Prometheus text-format rendering of the serving stats
+//! (`GET /metrics`).
+//!
+//! Exposes the HTTP-layer response counters, per-tier engine counters
+//! (requests, batches, queue/infer time, device energy and read cycles),
+//! the per-tier latency histogram with `p50/p95/p99` summary gauges, and
+//! the resolved tier plans (rho, energy budget) so a scrape shows the
+//! paper's energy–accuracy knob directly.
+
+use std::fmt::Write as _;
+
+use crate::coordinator::router::ServerStats;
+use crate::metrics::LATENCY_BUCKET_BOUNDS_US;
+
+use super::{HttpStats, TierPlan};
+
+fn header(out: &mut String, name: &str, kind: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+/// Render the full `/metrics` payload.
+pub fn render(http: &HttpStats, tiers: &[(&TierPlan, &ServerStats)], uptime_s: f64) -> String {
+    use std::sync::atomic::Ordering::Relaxed;
+
+    let mut out = String::with_capacity(4096);
+
+    header(
+        &mut out,
+        "emtopt_http_requests_total",
+        "counter",
+        "HTTP responses written, by status code.",
+    );
+    for (code, n) in http.by_code() {
+        let _ = writeln!(out, "emtopt_http_requests_total{{code=\"{code}\"}} {n}");
+    }
+
+    header(
+        &mut out,
+        "emtopt_http_connections_total",
+        "counter",
+        "TCP connections accepted.",
+    );
+    let _ = writeln!(
+        out,
+        "emtopt_http_connections_total {}",
+        http.connections.load(Relaxed)
+    );
+
+    header(
+        &mut out,
+        "emtopt_requests_total",
+        "counter",
+        "Requests served by the inference engine, by energy tier.",
+    );
+    for (plan, stats) in tiers {
+        let _ = writeln!(
+            out,
+            "emtopt_requests_total{{tier=\"{}\"}} {}",
+            plan.tier.name(),
+            stats.requests.load(Relaxed)
+        );
+    }
+
+    header(
+        &mut out,
+        "emtopt_batches_total",
+        "counter",
+        "Device batches dispatched, by energy tier.",
+    );
+    for (plan, stats) in tiers {
+        let _ = writeln!(
+            out,
+            "emtopt_batches_total{{tier=\"{}\"}} {}",
+            plan.tier.name(),
+            stats.batches.load(Relaxed)
+        );
+    }
+
+    header(
+        &mut out,
+        "emtopt_queue_us_total",
+        "counter",
+        "Cumulative enqueue-to-reply time in microseconds, by tier.",
+    );
+    for (plan, stats) in tiers {
+        let _ = writeln!(
+            out,
+            "emtopt_queue_us_total{{tier=\"{}\"}} {}",
+            plan.tier.name(),
+            stats.queue_us.load(Relaxed)
+        );
+    }
+
+    header(
+        &mut out,
+        "emtopt_infer_us_total",
+        "counter",
+        "Cumulative model-execution time in microseconds, by tier.",
+    );
+    for (plan, stats) in tiers {
+        let _ = writeln!(
+            out,
+            "emtopt_infer_us_total{{tier=\"{}\"}} {}",
+            plan.tier.name(),
+            stats.infer_us.load(Relaxed)
+        );
+    }
+
+    header(
+        &mut out,
+        "emtopt_read_cycles_total",
+        "counter",
+        "Device read cycles, by tier (decomposed mode pays B_a cycles).",
+    );
+    for (plan, stats) in tiers {
+        let _ = writeln!(
+            out,
+            "emtopt_read_cycles_total{{tier=\"{}\"}} {}",
+            plan.tier.name(),
+            stats.read_cycles.load(Relaxed)
+        );
+    }
+
+    header(
+        &mut out,
+        "emtopt_energy_cell_pj_total",
+        "counter",
+        "Cumulative analog cell read energy in picojoules, by tier.",
+    );
+    for (plan, stats) in tiers {
+        let _ = writeln!(
+            out,
+            "emtopt_energy_cell_pj_total{{tier=\"{}\"}} {}",
+            plan.tier.name(),
+            stats.energy().cell_pj
+        );
+    }
+
+    header(
+        &mut out,
+        "emtopt_energy_peripheral_pj_total",
+        "counter",
+        "Cumulative DAC/ADC peripheral energy in picojoules, by tier.",
+    );
+    for (plan, stats) in tiers {
+        let _ = writeln!(
+            out,
+            "emtopt_energy_peripheral_pj_total{{tier=\"{}\"}} {}",
+            plan.tier.name(),
+            stats.energy().peripheral_pj
+        );
+    }
+
+    header(
+        &mut out,
+        "emtopt_tier_rho",
+        "gauge",
+        "Per-read energy coefficient rho of each tier's lane (eq. 7/8).",
+    );
+    for (plan, _) in tiers {
+        let _ = writeln!(
+            out,
+            "emtopt_tier_rho{{tier=\"{}\"}} {}",
+            plan.tier.name(),
+            plan.rho
+        );
+    }
+
+    header(
+        &mut out,
+        "emtopt_tier_budget_uj",
+        "gauge",
+        "Per-inference energy budget of each tier in microjoules.",
+    );
+    for (plan, _) in tiers {
+        let _ = writeln!(
+            out,
+            "emtopt_tier_budget_uj{{tier=\"{}\"}} {}",
+            plan.tier.name(),
+            plan.budget_uj
+        );
+    }
+
+    header(
+        &mut out,
+        "emtopt_request_latency_us",
+        "histogram",
+        "End-to-end engine latency per request in microseconds, by tier.",
+    );
+    for (plan, stats) in tiers {
+        let tier = plan.tier.name();
+        let counts = stats.latency.snapshot();
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if i < LATENCY_BUCKET_BOUNDS_US.len() {
+                let _ = writeln!(
+                    out,
+                    "emtopt_request_latency_us_bucket{{tier=\"{tier}\",le=\"{}\"}} {cum}",
+                    LATENCY_BUCKET_BOUNDS_US[i]
+                );
+            } else {
+                let _ = writeln!(
+                    out,
+                    "emtopt_request_latency_us_bucket{{tier=\"{tier}\",le=\"+Inf\"}} {cum}"
+                );
+            }
+        }
+        // _count comes from the same snapshot as the buckets, so the
+        // histogram invariant (count == +Inf bucket) holds per scrape
+        // even while workers record concurrently.
+        let _ = writeln!(
+            out,
+            "emtopt_request_latency_us_count{{tier=\"{tier}\"}} {cum}"
+        );
+        let _ = writeln!(
+            out,
+            "emtopt_request_latency_us_sum{{tier=\"{tier}\"}} {}",
+            stats.queue_us.load(Relaxed)
+        );
+    }
+
+    // Precomputed tail quantiles live in their own gauge family — a
+    // histogram family may only carry _bucket/_sum/_count series.
+    header(
+        &mut out,
+        "emtopt_request_latency_quantile_us",
+        "gauge",
+        "Interpolated engine latency quantiles in microseconds, by tier.",
+    );
+    for (plan, stats) in tiers {
+        let tier = plan.tier.name();
+        for (q, v) in [
+            ("0.5", stats.latency.p50_us()),
+            ("0.95", stats.latency.p95_us()),
+            ("0.99", stats.latency.p99_us()),
+        ] {
+            let _ = writeln!(
+                out,
+                "emtopt_request_latency_quantile_us{{tier=\"{tier}\",quantile=\"{q}\"}} {v:.1}"
+            );
+        }
+    }
+
+    header(
+        &mut out,
+        "emtopt_uptime_seconds",
+        "gauge",
+        "Seconds since the server started.",
+    );
+    let _ = writeln!(out, "emtopt_uptime_seconds {uptime_s:.3}");
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::ReadMode;
+    use crate::server::EnergyTier;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn renders_expected_series() {
+        let http = HttpStats::default();
+        http.record(200);
+        http.record(200);
+        http.record(503);
+        let stats = ServerStats::default();
+        stats.requests.store(2, Ordering::Relaxed);
+        stats.batches.store(1, Ordering::Relaxed);
+        stats.latency.record_us(120);
+        stats.latency.record_us(380);
+        let plan = TierPlan {
+            tier: EnergyTier::Normal,
+            rho: 4.0,
+            mode: ReadMode::Original,
+            budget_uj: 1.5,
+        };
+        let text = render(&http, &[(&plan, &stats)], 12.5);
+
+        assert!(text.contains("emtopt_http_requests_total{code=\"200\"} 2"));
+        assert!(text.contains("emtopt_http_requests_total{code=\"503\"} 1"));
+        assert!(text.contains("emtopt_requests_total{tier=\"normal\"} 2"));
+        assert!(text.contains("emtopt_batches_total{tier=\"normal\"} 1"));
+        assert!(text.contains("emtopt_tier_rho{tier=\"normal\"} 4"));
+        assert!(text.contains("emtopt_request_latency_us_count{tier=\"normal\"} 2"));
+        assert!(text.contains("le=\"+Inf\"} 2"));
+        assert!(text.contains("quantile=\"0.99\""));
+        assert!(text.contains("emtopt_uptime_seconds 12.5"));
+        // every non-comment line is "name{labels} value" or "name value"
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            assert!(
+                line.rsplit_once(' ').is_some(),
+                "malformed metrics line {line:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let http = HttpStats::default();
+        let stats = ServerStats::default();
+        stats.latency.record_us(3); // (2, 5] bucket
+        stats.latency.record_us(40); // (20, 50]
+        let plan = TierPlan {
+            tier: EnergyTier::Low,
+            rho: 1.0,
+            mode: ReadMode::Decomposed,
+            budget_uj: 0.5,
+        };
+        let text = render(&http, &[(&plan, &stats)], 0.0);
+        assert!(text.contains("emtopt_request_latency_us_bucket{tier=\"low\",le=\"5\"} 1"));
+        assert!(text.contains("emtopt_request_latency_us_bucket{tier=\"low\",le=\"50\"} 2"));
+        assert!(text.contains("emtopt_request_latency_us_bucket{tier=\"low\",le=\"+Inf\"} 2"));
+    }
+}

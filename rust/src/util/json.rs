@@ -86,6 +86,28 @@ impl Json {
         }
     }
 
+    /// Numeric array as `Vec<f32>` (image payloads on the serving API).
+    pub fn as_f32s(&self) -> Result<Vec<f32>> {
+        let a = self.as_arr()?;
+        let mut out = Vec::with_capacity(a.len());
+        for v in a {
+            out.push(v.as_f64()? as f32);
+        }
+        Ok(out)
+    }
+
+    // -- builders ------------------------------------------------------------
+
+    /// Object from key/value pairs (response-building sugar).
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Numeric array from an `f32` slice (logits on the serving API).
+    pub fn f32_arr(xs: &[f32]) -> Json {
+        Json::Arr(xs.iter().map(|&v| Json::Num(v as f64)).collect())
+    }
+
     // -- writer --------------------------------------------------------------
 
     pub fn render(&self) -> String {
@@ -370,5 +392,28 @@ mod tests {
         let j = Json::parse("{\"a\": 1}").unwrap();
         assert!(j.get("b").is_err());
         assert!(j.opt("b").is_none());
+    }
+
+    #[test]
+    fn f32_helpers_roundtrip() {
+        let xs = [1.5f32, -2.0, 0.25];
+        let j = Json::f32_arr(&xs);
+        let back = j.as_f32s().unwrap();
+        assert_eq!(back, xs.to_vec());
+        // non-numeric element errors
+        assert!(Json::parse("[1, \"x\"]").unwrap().as_f32s().is_err());
+        assert!(Json::parse("{}").unwrap().as_f32s().is_err());
+    }
+
+    #[test]
+    fn obj_builder() {
+        let j = Json::obj(vec![
+            ("class", Json::Num(3.0)),
+            ("tier", Json::Str("low".into())),
+        ]);
+        assert_eq!(j.get("class").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("tier").unwrap().as_str().unwrap(), "low");
+        let back = Json::parse(&j.render()).unwrap();
+        assert_eq!(back, j);
     }
 }

@@ -1,0 +1,296 @@
+//! Integration tests for the HTTP serving stack: boot the real server on
+//! an ephemeral port and drive it over raw `TcpStream`s — happy path,
+//! malformed input -> 400, overload -> 503, and `/metrics` accounting.
+
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use emtopt::coordinator::router::NativeServerConfig;
+use emtopt::device::DeviceConfig;
+use emtopt::inference::NoisyModel;
+use emtopt::rng::Rng;
+use emtopt::server::http::HttpConn;
+use emtopt::server::{serve_http, HttpServerConfig, ServerHandle};
+use emtopt::util::json::Json;
+
+/// A small random dense stack programmed on the crossbar substrate.
+fn model(dims: &[(usize, usize)], seed: u64, dev: &DeviceConfig) -> Arc<NoisyModel> {
+    let mut rng = Rng::new(seed);
+    let data: Vec<(Vec<f32>, Vec<f32>)> = dims
+        .iter()
+        .map(|&(i, o)| {
+            let w: Vec<f32> = (0..i * o).map(|_| rng.normal() * 0.3).collect();
+            let b = vec![0.0f32; o];
+            (w, b)
+        })
+        .collect();
+    let specs: Vec<(&[f32], &[f32], usize, usize)> = data
+        .iter()
+        .zip(dims.iter())
+        .map(|((w, b), &(i, o))| (w.as_slice(), b.as_slice(), i, o))
+        .collect();
+    Arc::new(NoisyModel::new(&specs, dev).unwrap())
+}
+
+fn boot(engine: NativeServerConfig) -> ServerHandle {
+    let dev = engine.device.clone();
+    let m = model(&[(8, 3)], 3, &dev);
+    serve_http(
+        m,
+        HttpServerConfig {
+            addr: "127.0.0.1:0".into(),
+            engine,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+fn connect(handle: &ServerHandle) -> HttpConn<TcpStream> {
+    let stream = TcpStream::connect(handle.addr()).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    HttpConn::new(stream)
+}
+
+fn post(conn: &mut HttpConn<TcpStream>, path: &str, body: &str) -> (u16, Json) {
+    conn.write_request("POST", path, body.as_bytes()).unwrap();
+    let (status, body) = conn.read_response(1 << 20).unwrap();
+    let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    (status, v)
+}
+
+fn get(conn: &mut HttpConn<TcpStream>, path: &str) -> (u16, Vec<u8>) {
+    conn.write_request("GET", path, b"").unwrap();
+    conn.read_response(1 << 20).unwrap()
+}
+
+#[test]
+fn happy_path_infer_classify_tiers() {
+    let handle = boot(NativeServerConfig {
+        batch: 4,
+        workers: 1,
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    });
+    let mut conn = connect(&handle);
+
+    // healthz reports the deployed shape
+    let (status, body) = get(&mut conn, "/healthz");
+    assert_eq!(status, 200);
+    let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str().unwrap(), "ok");
+    assert_eq!(v.get("input_len").unwrap().as_usize().unwrap(), 8);
+    assert_eq!(v.get("num_classes").unwrap().as_usize().unwrap(), 3);
+
+    // infer: logits + echo of the tier plan
+    let img = "[0.1,0.2,0.3,0.4,0.5,0.6,0.7,0.8]";
+    let (status, v) = post(&mut conn, "/v1/infer", &format!("{{\"image\":{img}}}"));
+    assert_eq!(status, 200);
+    assert_eq!(v.get("logits").unwrap().as_arr().unwrap().len(), 3);
+    assert_eq!(v.get("tier").unwrap().as_str().unwrap(), "normal");
+    assert_eq!(v.get("mode").unwrap().as_str().unwrap(), "original");
+
+    // classify adds the argmax, and tiers select different lanes
+    let (status, v) = post(
+        &mut conn,
+        "/v1/classify",
+        &format!("{{\"image\":{img},\"tier\":\"low\"}}"),
+    );
+    assert_eq!(status, 200);
+    assert!(v.get("class").unwrap().as_usize().unwrap() < 3);
+    assert_eq!(v.get("tier").unwrap().as_str().unwrap(), "low");
+    assert_eq!(v.get("mode").unwrap().as_str().unwrap(), "decomposed");
+    let rho_low = v.get("rho").unwrap().as_f64().unwrap();
+
+    let (status, v) = post(
+        &mut conn,
+        "/v1/infer",
+        &format!("{{\"image\":{img},\"tier\":\"high\"}}"),
+    );
+    assert_eq!(status, 200);
+    let rho_high = v.get("rho").unwrap().as_f64().unwrap();
+    assert!(
+        rho_high > rho_low,
+        "high tier must buy a larger rho ({rho_high} vs {rho_low})"
+    );
+
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn bad_requests_get_4xx() {
+    let handle = boot(NativeServerConfig {
+        batch: 2,
+        workers: 1,
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    });
+    let mut conn = connect(&handle);
+
+    // malformed JSON
+    let (status, v) = post(&mut conn, "/v1/infer", "this is not json");
+    assert_eq!(status, 400);
+    assert!(v.get("error").is_ok());
+
+    // wrong image length
+    let (status, _) = post(&mut conn, "/v1/infer", "{\"image\":[1,2]}");
+    assert_eq!(status, 400);
+
+    // unknown tier
+    let (status, _) = post(
+        &mut conn,
+        "/v1/infer",
+        "{\"image\":[0,0,0,0,0,0,0,0],\"tier\":\"turbo\"}",
+    );
+    assert_eq!(status, 400);
+
+    // unknown route / wrong method (keep-alive survives error responses)
+    let (status, _) = post(&mut conn, "/v1/nope", "{}");
+    assert_eq!(status, 404);
+    let (status, _) = get(&mut conn, "/v1/infer");
+    assert_eq!(status, 405);
+
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn concurrent_load_matches_metrics() {
+    let handle = boot(NativeServerConfig {
+        batch: 4,
+        workers: 2,
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    });
+    let clients = 4usize;
+    let per_client = 16u64;
+    let threads: Vec<_> = (0..clients)
+        .map(|c| {
+            let mut conn = connect(&handle);
+            std::thread::spawn(move || {
+                let tiers = ["low", "normal", "high"];
+                let mut ok = 0u64;
+                for i in 0..per_client {
+                    let mut r = Rng::stream(77 + c as u64, i);
+                    let img: Vec<String> =
+                        (0..8).map(|_| format!("{}", r.next_f32())).collect();
+                    let body = format!(
+                        "{{\"image\":[{}],\"tier\":\"{}\"}}",
+                        img.join(","),
+                        tiers[(i % 3) as usize]
+                    );
+                    let (status, v) = post(&mut conn, "/v1/classify", &body);
+                    assert_eq!(status, 200);
+                    assert!(v.get("class").unwrap().as_usize().unwrap() < 3);
+                    ok += 1;
+                }
+                ok
+            })
+        })
+        .collect();
+    let ok: u64 = threads.into_iter().map(|t| t.join().unwrap()).sum();
+    let sent = clients as u64 * per_client;
+    assert_eq!(ok, sent);
+
+    // scrape /metrics and reconcile with what we sent
+    let mut conn = connect(&handle);
+    let (status, body) = get(&mut conn, "/metrics");
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).unwrap();
+
+    let series_sum = |name: &str| -> u64 {
+        text.lines()
+            .filter(|l| l.starts_with(name) && !l.starts_with('#'))
+            .map(|l| {
+                l.rsplit_once(' ')
+                    .map(|(_, v)| v.parse::<f64>().unwrap_or(0.0))
+                    .unwrap_or(0.0) as u64
+            })
+            .sum()
+    };
+    // every 200 we saw is a 200 the server recorded (no other clients);
+    // the scrape itself responds after rendering, so it is not counted
+    assert_eq!(series_sum("emtopt_http_requests_total{code=\"200\"}"), sent);
+    // the engine saw exactly the classify requests, spread over tiers
+    assert_eq!(series_sum("emtopt_requests_total{"), sent);
+    // tail-latency histogram observed every engine request
+    assert_eq!(series_sum("emtopt_request_latency_us_count{"), sent);
+    for tier in ["low", "normal", "high"] {
+        let line = format!("emtopt_requests_total{{tier=\"{tier}\"}}");
+        assert!(
+            series_sum(&line) > 0,
+            "tier {tier} lane must have served traffic"
+        );
+    }
+
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn overload_sheds_with_503() {
+    // one slow lane: queue_depth 1, one worker, batch 1, and a model big
+    // enough (2x 192x192 noisy layers) that a burst of concurrent
+    // requests cannot drain before admission control kicks in.
+    let dev = DeviceConfig::default();
+    let m = model(&[(192, 192), (192, 192)], 9, &dev);
+    let handle = serve_http(
+        m,
+        HttpServerConfig {
+            addr: "127.0.0.1:0".into(),
+            conn_threads: 24,
+            engine: NativeServerConfig {
+                batch: 1,
+                workers: 1,
+                queue_depth: 1,
+                max_wait: Duration::from_millis(1),
+                device: dev,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let burst = 16usize;
+    let threads: Vec<_> = (0..burst)
+        .map(|c| {
+            let mut conn = connect(&handle);
+            std::thread::spawn(move || {
+                let mut r = Rng::stream(900 + c as u64, 0);
+                let img: Vec<String> =
+                    (0..192).map(|_| format!("{}", r.next_f32())).collect();
+                let body = format!("{{\"image\":[{}]}}", img.join(","));
+                let (status, _) = post(&mut conn, "/v1/infer", &body);
+                status
+            })
+        })
+        .collect();
+    let statuses: Vec<u16> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    let ok = statuses.iter().filter(|&&s| s == 200).count();
+    let shed = statuses.iter().filter(|&&s| s == 503).count();
+    assert_eq!(ok + shed, burst, "only 200/503 expected, got {statuses:?}");
+    assert!(ok >= 1, "at least one request must be admitted");
+    assert!(shed >= 1, "burst of {burst} at queue_depth 1 must shed load");
+
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn graceful_shutdown_via_admin_endpoint() {
+    let handle = boot(NativeServerConfig {
+        batch: 2,
+        workers: 1,
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    });
+    assert!(!handle.shutdown_requested());
+    let mut conn = connect(&handle);
+    let (status, v) = post(&mut conn, "/admin/shutdown", "");
+    assert_eq!(status, 200);
+    assert_eq!(v.get("status").unwrap().as_str().unwrap(), "shutting down");
+    assert!(handle.shutdown_requested());
+    // full drain: every thread joins
+    handle.shutdown().unwrap();
+}
