@@ -13,6 +13,8 @@
 //!
 //! Flags: --requests N (512) --connections N (8) --workers N (2)
 //!        --qps F (0 = closed loop) --tier low|normal|high|mixed (mixed)
+//!        --batch N (1) — images per request body; >1 drives the
+//!        multi-image {"images": ...} batch path end to end
 
 use std::sync::Arc;
 
@@ -30,6 +32,7 @@ fn main() -> emtopt::Result<()> {
     let connections: usize = args.parse_or("connections", 8)?;
     let workers: usize = args.parse_or("workers", 2)?;
     let qps: f64 = args.parse_or("qps", 0.0)?;
+    let batch: usize = args.parse_or("batch", 1)?;
     let tier_arg = args.str_or("tier", "mixed");
     let tier = parse_tier_arg(&tier_arg)?;
 
@@ -60,7 +63,10 @@ fn main() -> emtopt::Result<()> {
         println!("  {}", plan.describe());
     }
 
-    println!("\nloadgen: {requests} requests over {connections} TCP connections (tier {tier_arg})");
+    println!(
+        "\nloadgen: {requests} requests over {connections} TCP connections \
+         (tier {tier_arg}, {batch} images/request)"
+    );
     let report = loadgen::run(&LoadgenConfig {
         addr: handle.addr().to_string(),
         connections,
@@ -68,6 +74,7 @@ fn main() -> emtopt::Result<()> {
         target_qps: qps,
         tier,
         classify: true,
+        batch,
     })?;
     println!("{}", report.render());
 

@@ -3,7 +3,22 @@
 //! The serving front of the coordinator (vllm-router-style): clients
 //! submit single images; the router accumulates them into fixed-size
 //! device batches (padding stragglers) and fans the per-sample logits
-//! back to the callers.
+//! back to the callers.  Clients with bulk traffic skip the wait
+//! entirely: [`InferenceClient::try_infer_batch`] submits a multi-image
+//! request that the batcher dispatches immediately as its own device
+//! batch (still through the same bounded queues — admission control is
+//! identical, and oversize batches fail fast with the typed
+//! [`BatchTooLarge`] error the HTTP layer maps to `413`).
+//!
+//! **Noise determinism (native engine):** every image draws its device
+//! noise from a content-derived stream, [`image_seed`]`(lane_seed,
+//! pixels)`, fed to [`NoisyModel::forward_batch_seeds`].  An image's
+//! logits therefore depend only on its own pixels and the lane seed —
+//! never on how the batcher packed it — so a multi-image request is
+//! bit-identical to the same images as sequential single requests at any
+//! worker/thread count.  The AOT backend cannot honour this: its
+//! executables take one seed scalar per padded batch (see DESIGN.md §8),
+//! so there batch packing does affect the noise draw.
 //!
 //! Two engine backends share the same [`InferenceClient`] front:
 //!
@@ -42,7 +57,7 @@ use crate::crossbar::ReadCounters;
 use crate::device::DeviceConfig;
 use crate::energy::ReadMode;
 use crate::inference::NoisyModel;
-use crate::metrics::LatencyHistogram;
+use crate::metrics::{BatchSizeHistogram, LatencyHistogram};
 use crate::rng::hash2;
 use crate::Result;
 
@@ -55,11 +70,29 @@ use crate::device::Intensity;
 #[cfg(feature = "aot")]
 use crate::runtime::{Artifacts, Predictor};
 
-/// One inference request: an image and a reply slot for the logits.
+/// One inference request: one or more images and a reply slot for the
+/// concatenated per-image logits.
 struct Request {
-    image: Vec<f32>,
+    /// `count * input_len` row-major pixels.
+    images: Vec<f32>,
+    /// Number of images (1 on the single-image path).
+    count: usize,
     reply: mpsc::Sender<Result<Vec<f32>>>,
     enqueued: Instant,
+}
+
+/// Content-derived noise seed of one request image: a fold of the pixel
+/// bit patterns under the lane seed.  Both router paths (dynamic batcher
+/// and direct client batches) seed sample RNGs with this, which is what
+/// makes a served image's logits independent of batch packing (see the
+/// module docs).  Deterministic across platforms — `f32::to_bits` of
+/// identical pixels is identical everywhere.
+pub fn image_seed(lane_seed: u64, image: &[f32]) -> u64 {
+    let mut h = hash2(lane_seed, image.len() as u64);
+    for v in image {
+        h = hash2(h, u64::from(v.to_bits()));
+    }
+    h
 }
 
 /// Lock-free add of an f64 stored as bits in an [`AtomicU64`].
@@ -77,7 +110,15 @@ fn atomic_add_f64(cell: &AtomicU64, v: f64) {
 /// Server statistics (atomic, read from any thread).
 #[derive(Debug, Default)]
 pub struct ServerStats {
+    /// Client requests replied to (a multi-image request counts once).
     pub requests: AtomicU64,
+    /// Images served (`>= requests` once multi-image bodies arrive).
+    pub images: AtomicU64,
+    /// Multi-image client requests served via the direct batch path.
+    pub client_batch_requests: AtomicU64,
+    /// Images per dispatched engine batch (1/2/4/... buckets), the
+    /// batch-amortisation signal surfaced on `/metrics`.
+    pub dispatch_batch_sizes: BatchSizeHistogram,
     pub batches: AtomicU64,
     pub padded_slots: AtomicU64,
     /// Cumulative queueing latency in microseconds.
@@ -167,6 +208,31 @@ impl std::fmt::Display for Overloaded {
 
 impl std::error::Error for Overloaded {}
 
+/// Typed admission error: a multi-image request exceeds the per-request
+/// image cap ([`NativeServerConfig::max_client_batch`]).
+///
+/// Returned (inside `anyhow::Error`) by the `*_batch` client methods;
+/// check with `err.is::<BatchTooLarge>()`.  The HTTP front end maps it to
+/// `413 Payload Too Large` — unlike [`Overloaded`] this is the client's
+/// fault and retrying unchanged will never succeed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchTooLarge {
+    pub count: usize,
+    pub max: usize,
+}
+
+impl std::fmt::Display for BatchTooLarge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "batch of {} images exceeds the per-request limit of {}",
+            self.count, self.max
+        )
+    }
+}
+
+impl std::error::Error for BatchTooLarge {}
+
 /// Handle used by clients to submit requests (clonable across threads).
 #[derive(Clone)]
 pub struct InferenceClient {
@@ -174,10 +240,30 @@ pub struct InferenceClient {
     pub num_classes: usize,
     /// Expected input length (d_in of the deployed model).
     pub input_len: usize,
+    /// Max images accepted in one multi-image request (see
+    /// [`BatchTooLarge`]).
+    pub max_client_batch: usize,
 }
 
 impl InferenceClient {
     fn make_request(
+        &self,
+        images: Vec<f32>,
+        count: usize,
+    ) -> (Request, mpsc::Receiver<Result<Vec<f32>>>) {
+        let (reply, rx) = mpsc::channel();
+        (
+            Request {
+                images,
+                count,
+                reply,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    fn make_single(
         &self,
         image: Vec<f32>,
     ) -> Result<(Request, mpsc::Receiver<Result<Vec<f32>>>)> {
@@ -187,15 +273,51 @@ impl InferenceClient {
             self.input_len,
             image.len()
         );
-        let (reply, rx) = mpsc::channel();
-        Ok((
-            Request {
-                image,
-                reply,
-                enqueued: Instant::now(),
-            },
-            rx,
-        ))
+        Ok(self.make_request(image, 1))
+    }
+
+    fn make_batch(
+        &self,
+        images: Vec<f32>,
+    ) -> Result<(Request, mpsc::Receiver<Result<Vec<f32>>>)> {
+        anyhow::ensure!(
+            !images.is_empty() && images.len() % self.input_len == 0,
+            "batch must be a non-empty multiple of {} floats, got {}",
+            self.input_len,
+            images.len()
+        );
+        let count = images.len() / self.input_len;
+        if count > self.max_client_batch {
+            return Err(anyhow::Error::new(BatchTooLarge {
+                count,
+                max: self.max_client_batch,
+            }));
+        }
+        Ok(self.make_request(images, count))
+    }
+
+    fn submit_blocking(
+        &self,
+        req: Request,
+        rx: mpsc::Receiver<Result<Vec<f32>>>,
+    ) -> Result<Vec<f32>> {
+        self.tx
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
+    }
+
+    fn submit_nonblocking(
+        &self,
+        req: Request,
+        rx: mpsc::Receiver<Result<Vec<f32>>>,
+    ) -> Result<Vec<f32>> {
+        match self.tx.try_send(req) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) => return Err(anyhow::Error::new(Overloaded)),
+            Err(TrySendError::Disconnected(_)) => anyhow::bail!("server stopped"),
+        }
+        rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
     }
 
     /// Classify one image (len `input_len`); blocks until the logits
@@ -203,24 +325,38 @@ impl InferenceClient {
     /// frees up (backpressure) — use [`InferenceClient::try_infer`] to
     /// shed load instead.
     pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
-        let (req, rx) = self.make_request(image)?;
-        self.tx
-            .send(req)
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
+        let (req, rx) = self.make_single(image)?;
+        self.submit_blocking(req, rx)
     }
 
     /// Like [`InferenceClient::infer`], but fails fast with a typed
     /// [`Overloaded`] error when the bounded request queue is full instead
     /// of blocking (admission control for the serving front end).
     pub fn try_infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
-        let (req, rx) = self.make_request(image)?;
-        match self.tx.try_send(req) {
-            Ok(()) => {}
-            Err(TrySendError::Full(_)) => return Err(anyhow::Error::new(Overloaded)),
-            Err(TrySendError::Disconnected(_)) => anyhow::bail!("server stopped"),
-        }
-        rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
+        let (req, rx) = self.make_single(image)?;
+        self.submit_nonblocking(req, rx)
+    }
+
+    /// Submit `count = images.len() / input_len` images as one request;
+    /// blocks until the concatenated `count * num_classes` logits arrive.
+    /// The batcher dispatches the whole request immediately (no
+    /// `max_wait`).  On the **native** backend, per-image logits are
+    /// bit-identical to the same images sent through
+    /// [`InferenceClient::infer`] one at a time (content-derived noise
+    /// seeds); the AOT backend draws noise from one per-batch seed
+    /// scalar, so no such guarantee holds there.
+    pub fn infer_batch(&self, images: Vec<f32>) -> Result<Vec<f32>> {
+        let (req, rx) = self.make_batch(images)?;
+        self.submit_blocking(req, rx)
+    }
+
+    /// Like [`InferenceClient::infer_batch`], but fails fast with
+    /// [`Overloaded`] when the bounded request queue is full (and with
+    /// [`BatchTooLarge`] when the request exceeds the per-request image
+    /// cap) instead of blocking.
+    pub fn try_infer_batch(&self, images: Vec<f32>) -> Result<Vec<f32>> {
+        let (req, rx) = self.make_batch(images)?;
+        self.submit_nonblocking(req, rx)
     }
 
     /// Classify and argmax.
@@ -247,9 +383,15 @@ pub struct NativeServerConfig {
     /// Bounded request-queue depth: `infer` blocks and `try_infer`
     /// returns [`Overloaded`] once this many requests are waiting.
     pub queue_depth: usize,
+    /// Max images accepted in one multi-image client request
+    /// ([`BatchTooLarge`] above it).  Bounds the memory one queue slot
+    /// can pin: the request queue holds at most
+    /// `queue_depth * max_client_batch` images.
+    pub max_client_batch: usize,
     pub mode: ReadMode,
     pub device: DeviceConfig,
-    /// Base RNG seed; batch `b` samples stream `hash2(seed, b)`.
+    /// Lane RNG seed; image `x` draws noise from
+    /// `Rng::new(image_seed(seed, x))` (see [`image_seed`]).
     pub seed: u64,
 }
 
@@ -260,6 +402,7 @@ impl Default for NativeServerConfig {
             workers: 2,
             max_wait: Duration::from_millis(2),
             queue_depth: 256,
+            max_client_batch: 64,
             mode: ReadMode::Original,
             device: DeviceConfig::default(),
             seed: 1,
@@ -267,10 +410,10 @@ impl Default for NativeServerConfig {
     }
 }
 
-/// One padded device batch handed from the batcher to a worker.
+/// One device batch handed from the batcher to a worker: accumulated
+/// single-image requests, or one multi-image request dispatched alone.
 struct Job {
     requests: Vec<Request>,
-    batch_id: u64,
 }
 
 /// Everything a native engine worker needs (shared model + accounting).
@@ -287,39 +430,54 @@ impl Worker {
     fn run_batch(&self, job: Job) {
         let d_in = self.model.d_in();
         let nc = self.model.d_out();
-        let n = job.requests.len();
+        let n_images: usize = job.requests.iter().map(|r| r.count).sum();
         // Unlike the fixed-shape AOT executables, the native engine accepts
-        // any batch length — run exactly the real requests, so under-filled
+        // any batch length — run exactly the real images, so under-filled
         // batches burn no device energy on padding (padded_slots still
         // records the unfilled share for the batch-fill statistic).
-        let mut x = vec![0.0f32; n * d_in];
-        for (i, r) in job.requests.iter().enumerate() {
-            x[i * d_in..(i + 1) * d_in].copy_from_slice(&r.image);
+        let mut x = vec![0.0f32; n_images * d_in];
+        let mut seeds = Vec::with_capacity(n_images);
+        let mut off = 0usize;
+        for r in &job.requests {
+            x[off * d_in..off * d_in + r.images.len()].copy_from_slice(&r.images);
+            for i in 0..r.count {
+                seeds.push(image_seed(self.seed, &r.images[i * d_in..(i + 1) * d_in]));
+            }
+            off += r.count;
         }
         let t0 = Instant::now();
         let mut counters = ReadCounters::default();
-        let logits = self.model.forward_batch(
-            &x,
-            self.mode,
-            &self.device,
-            hash2(self.seed, job.batch_id),
-            &mut counters,
-        );
+        let logits =
+            self.model
+                .forward_batch_seeds(&x, self.mode, &self.device, &seeds, &mut counters);
         let infer_us = t0.elapsed().as_micros() as u64;
 
-        self.stats.requests.fetch_add(n as u64, Ordering::Relaxed);
+        self.stats
+            .requests
+            .fetch_add(job.requests.len() as u64, Ordering::Relaxed);
+        self.stats.images.fetch_add(n_images as u64, Ordering::Relaxed);
         self.stats.batches.fetch_add(1, Ordering::Relaxed);
         self.stats
             .padded_slots
-            .fetch_add((self.batch - n) as u64, Ordering::Relaxed);
+            .fetch_add(self.batch.saturating_sub(n_images) as u64, Ordering::Relaxed);
         self.stats.infer_us.fetch_add(infer_us, Ordering::Relaxed);
+        self.stats.dispatch_batch_sizes.record(n_images as u64);
         self.stats.add_counters(&counters);
 
-        for (i, r) in job.requests.iter().enumerate() {
+        let mut off = 0usize;
+        for r in &job.requests {
+            if r.count > 1 {
+                self.stats
+                    .client_batch_requests
+                    .fetch_add(1, Ordering::Relaxed);
+            }
             let total_us = r.enqueued.elapsed().as_micros() as u64;
             self.stats.queue_us.fetch_add(total_us, Ordering::Relaxed);
             self.stats.latency.record_us(total_us);
-            let _ = r.reply.send(Ok(logits[i * nc..(i + 1) * nc].to_vec()));
+            let _ = r
+                .reply
+                .send(Ok(logits[off * nc..(off + r.count) * nc].to_vec()));
+            off += r.count;
         }
     }
 }
@@ -336,6 +494,7 @@ pub fn serve_native(
     anyhow::ensure!(cfg.batch > 0, "batch must be positive");
     anyhow::ensure!(cfg.workers > 0, "need at least one worker");
     anyhow::ensure!(cfg.queue_depth > 0, "queue_depth must be positive");
+    anyhow::ensure!(cfg.max_client_batch > 0, "max_client_batch must be positive");
     let input_len = model.d_in();
     let num_classes = model.d_out();
 
@@ -348,36 +507,51 @@ pub fn serve_native(
     let stats = Arc::new(ServerStats::default());
     let mut handles = Vec::with_capacity(cfg.workers + 1);
 
-    // Batcher: collects requests into padded batches, hands them to the pool.
+    // Batcher: collects single-image requests into batches and hands them
+    // to the pool.  A multi-image request is already a batch — it is
+    // dispatched as its own job immediately, never waiting out `max_wait`
+    // (the whole point of the client batch path), and never merged with
+    // accumulated singles (whose job fires first, preserving arrival
+    // order).
     let (batch, max_wait) = (cfg.batch, cfg.max_wait);
-    handles.push(std::thread::spawn(move || {
-        let mut batch_id = 0u64;
-        loop {
-            let first = match rx.recv() {
-                Ok(r) => r,
-                Err(_) => return, // all clients dropped
-            };
-            let mut pending = Vec::with_capacity(batch);
-            pending.push(first);
-            let deadline = Instant::now() + max_wait;
-            while pending.len() < batch {
-                let now = Instant::now();
-                if now >= deadline {
+    handles.push(std::thread::spawn(move || loop {
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all clients dropped
+        };
+        if first.count > 1 {
+            if job_tx.send(Job { requests: vec![first] }).is_err() {
+                return; // workers gone
+            }
+            continue;
+        }
+        let mut pending = Vec::with_capacity(batch);
+        pending.push(first);
+        // A multi-image request that arrives mid-accumulation closes the
+        // single-image batch early and follows it as its own job.
+        let mut express: Option<Request> = None;
+        let deadline = Instant::now() + max_wait;
+        while pending.len() < batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) if r.count > 1 => {
+                    express = Some(r);
                     break;
                 }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(r) => pending.push(r),
-                    Err(RecvTimeoutError::Timeout) => break,
-                    Err(RecvTimeoutError::Disconnected) => break,
-                }
+                Ok(r) => pending.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
             }
-            let job = Job {
-                requests: pending,
-                batch_id,
-            };
-            batch_id += 1;
-            if job_tx.send(job).is_err() {
-                return; // workers gone
+        }
+        if job_tx.send(Job { requests: pending }).is_err() {
+            return;
+        }
+        if let Some(r) = express {
+            if job_tx.send(Job { requests: vec![r] }).is_err() {
+                return;
             }
         }
     }));
@@ -410,6 +584,7 @@ pub fn serve_native(
             tx,
             num_classes,
             input_len,
+            max_client_batch: cfg.max_client_batch,
         },
         stats,
         handles,
@@ -482,21 +657,36 @@ pub fn serve(
             let mut seed = cfg.seed;
 
             let mut pending: Vec<Request> = Vec::with_capacity(batch);
+            // A request that does not fit the current padded batch is
+            // carried into the next one (the executable shape is fixed,
+            // so a batch can never run more than `batch` images).
+            let mut carry: Option<Request> = None;
             loop {
                 // Block for the first request of a batch.
-                let first = match rx.recv() {
-                    Ok(r) => r,
-                    Err(_) => return Ok(()), // all clients dropped
+                let first = match carry.take() {
+                    Some(r) => r,
+                    None => match rx.recv() {
+                        Ok(r) => r,
+                        Err(_) => return Ok(()), // all clients dropped
+                    },
                 };
+                let mut n_images = first.count;
                 pending.push(first);
                 let deadline = Instant::now() + cfg.max_wait;
-                while pending.len() < batch {
+                while n_images < batch {
                     let now = Instant::now();
                     if now >= deadline {
                         break;
                     }
                     match rx.recv_timeout(deadline - now) {
-                        Ok(r) => pending.push(r),
+                        Ok(r) => {
+                            if n_images + r.count > batch {
+                                carry = Some(r);
+                                break;
+                            }
+                            n_images += r.count;
+                            pending.push(r);
+                        }
                         Err(RecvTimeoutError::Timeout) => break,
                         Err(RecvTimeoutError::Disconnected) => break,
                     }
@@ -504,10 +694,13 @@ pub fn serve(
 
                 // Build the padded device batch.
                 let mut x = vec![0.0f32; batch * IMG_LEN];
-                for (i, r) in pending.iter().enumerate() {
-                    x[i * IMG_LEN..(i + 1) * IMG_LEN].copy_from_slice(&r.image);
+                let mut off = 0usize;
+                for r in &pending {
+                    x[off * IMG_LEN..off * IMG_LEN + r.images.len()]
+                        .copy_from_slice(&r.images);
+                    off += r.count;
                 }
-                let padded = batch - pending.len();
+                let padded = batch - n_images;
                 seed = seed.wrapping_add(1);
                 let t0 = Instant::now();
                 let logits =
@@ -518,14 +711,27 @@ pub fn serve(
                 stats_engine
                     .requests
                     .fetch_add(pending.len() as u64, Ordering::Relaxed);
+                stats_engine
+                    .images
+                    .fetch_add(n_images as u64, Ordering::Relaxed);
                 stats_engine.batches.fetch_add(1, Ordering::Relaxed);
                 stats_engine
                     .padded_slots
                     .fetch_add(padded as u64, Ordering::Relaxed);
                 stats_engine.infer_us.fetch_add(infer_us, Ordering::Relaxed);
+                stats_engine
+                    .dispatch_batch_sizes
+                    .record(n_images as u64);
 
-                for (i, r) in pending.drain(..).enumerate() {
-                    let out = logits[i * nc..(i + 1) * nc].to_vec();
+                let mut off = 0usize;
+                for r in pending.drain(..) {
+                    if r.count > 1 {
+                        stats_engine
+                            .client_batch_requests
+                            .fetch_add(1, Ordering::Relaxed);
+                    }
+                    let out = logits[off * nc..(off + r.count) * nc].to_vec();
+                    off += r.count;
                     let total_us = r.enqueued.elapsed().as_micros() as u64;
                     stats_engine.queue_us.fetch_add(total_us, Ordering::Relaxed);
                     stats_engine.latency.record_us(total_us);
@@ -543,6 +749,9 @@ pub fn serve(
             tx,
             num_classes,
             input_len: IMG_LEN,
+            // the AOT executable shape is fixed: one request can never
+            // carry more images than fit a single padded batch
+            max_client_batch: batch,
         },
         stats,
         handle,
@@ -646,6 +855,110 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn batch_request_bit_identical_to_singles_any_worker_count() {
+        // the same 5 images, three ways: one multi-image request on a
+        // 1-worker engine, sequential singles on a 3-worker engine, and a
+        // multi-image request on the 3-worker engine — all logits must be
+        // bit-identical (content-derived per-image seeds; DESIGN.md §3)
+        let dev = DeviceConfig::default();
+        let (d_in, d_out) = (6usize, 3usize);
+        let mk_engine = |workers: usize| {
+            let mut rng = Rng::new(13);
+            let w: Vec<f32> = (0..d_in * d_out).map(|_| rng.normal() * 0.4).collect();
+            let b = vec![0.0f32; d_out];
+            let model = Arc::new(
+                NoisyModel::new(&[(w.as_slice(), b.as_slice(), d_in, d_out)], &dev).unwrap(),
+            );
+            let cfg = NativeServerConfig {
+                batch: 4,
+                workers,
+                max_wait: Duration::from_millis(1),
+                device: dev.clone(),
+                ..Default::default()
+            };
+            serve_native(model, cfg).unwrap()
+        };
+        let (client_a, stats_a, handles_a) = mk_engine(1);
+        let (client_b, _stats_b, handles_b) = mk_engine(3);
+
+        let n = 5usize;
+        let mut images = Vec::with_capacity(n * d_in);
+        for i in 0..n {
+            let mut r = Rng::stream(500, i as u64);
+            for _ in 0..d_in {
+                images.push(r.next_f32());
+            }
+        }
+        let batch_a = client_a.try_infer_batch(images.clone()).unwrap();
+        let batch_b = client_b.infer_batch(images.clone()).unwrap();
+        assert_eq!(batch_a.len(), n * d_out);
+        assert_eq!(batch_a, batch_b, "batch logits must not depend on worker count");
+        for i in 0..n {
+            let single = client_b.infer(images[i * d_in..(i + 1) * d_in].to_vec()).unwrap();
+            assert_eq!(
+                single.as_slice(),
+                &batch_a[i * d_out..(i + 1) * d_out],
+                "image {i}: single-request logits must match the batch row"
+            );
+        }
+        // accounting: the batch was one request carrying n images
+        assert_eq!(stats_a.requests.load(Ordering::Relaxed), 1);
+        assert_eq!(stats_a.images.load(Ordering::Relaxed), n as u64);
+        assert_eq!(stats_a.client_batch_requests.load(Ordering::Relaxed), 1);
+        assert_eq!(stats_a.dispatch_batch_sizes.count(), 1);
+        drop(client_a);
+        drop(client_b);
+        for h in handles_a.into_iter().chain(handles_b) {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn batch_too_large_is_typed() {
+        let dev = DeviceConfig::default();
+        let w = vec![0.1f32; 4 * 2];
+        let b = vec![0.0f32; 2];
+        let model =
+            Arc::new(NoisyModel::new(&[(w.as_slice(), b.as_slice(), 4, 2)], &dev).unwrap());
+        let cfg = NativeServerConfig {
+            max_client_batch: 2,
+            device: dev,
+            ..Default::default()
+        };
+        let (client, _stats, handles) = serve_native(model, cfg).unwrap();
+        // 3 images > cap 2: typed BatchTooLarge from both flavours
+        let images = vec![0.25f32; 3 * 4];
+        let err = client.try_infer_batch(images.clone()).unwrap_err();
+        assert!(err.is::<BatchTooLarge>(), "unexpected error: {err:?}");
+        let err = client.infer_batch(images).unwrap_err();
+        assert!(err.is::<BatchTooLarge>(), "unexpected error: {err:?}");
+        // ragged / empty payloads are plain errors, not typed admission ones
+        assert!(client.try_infer_batch(vec![0.0; 5]).is_err());
+        assert!(client.try_infer_batch(Vec::new()).is_err());
+        // within the cap works
+        assert_eq!(client.infer_batch(vec![0.25f32; 2 * 4]).unwrap().len(), 2 * 2);
+        drop(client);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn image_seed_is_content_addressed() {
+        let a = [0.1f32, 0.2, 0.3];
+        let b = [0.1f32, 0.2, 0.3];
+        let c = [0.1f32, 0.2, 0.4];
+        assert_eq!(image_seed(7, &a), image_seed(7, &b));
+        assert_ne!(image_seed(7, &a), image_seed(8, &a), "lane seed must matter");
+        assert_ne!(image_seed(7, &a), image_seed(7, &c), "pixels must matter");
+        assert_ne!(
+            image_seed(7, &a),
+            image_seed(7, &a[..2]),
+            "length must matter"
+        );
     }
 
     #[test]

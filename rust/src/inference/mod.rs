@@ -221,6 +221,57 @@ impl NoisyModel {
         seed: u64,
         counters: &mut ReadCounters,
     ) -> Vec<f32> {
+        // Rng::stream(seed, i) == Rng::new(hash2(seed, i)), so routing
+        // through the per-sample-seed impl is bit-identical to the
+        // historical behaviour (pinned by tests/batch_parity.rs).
+        self.forward_batch_impl(xs, mode, cfg, counters, |i| crate::rng::hash2(seed, i as u64))
+    }
+
+    /// Like [`NoisyModel::forward_batch`], but sample `i` seeds its RNG
+    /// directly from `seeds[i]` instead of a shared batch seed.  This is
+    /// the serving router's path: each request image carries a
+    /// content-derived seed (`coordinator::router::image_seed`), so an
+    /// image's logits depend only on its own pixels and the lane seed —
+    /// never on how the router packed it into a device batch.  A
+    /// multi-image client batch is therefore bit-identical to the same
+    /// images sent as sequential single requests, at any worker or rayon
+    /// thread count.
+    pub fn forward_batch_seeds(
+        &self,
+        xs: &[f32],
+        mode: ReadMode,
+        cfg: &DeviceConfig,
+        seeds: &[u64],
+        counters: &mut ReadCounters,
+    ) -> Vec<f32> {
+        assert!(
+            xs.len() % self.d_in() == 0,
+            "batch input length {} not a multiple of d_in {}",
+            xs.len(),
+            self.d_in()
+        );
+        assert_eq!(
+            seeds.len(),
+            xs.len() / self.d_in(),
+            "one seed per sample required"
+        );
+        self.forward_batch_impl(xs, mode, cfg, counters, |i| seeds[i])
+    }
+
+    /// Shared batched-forward body: fan samples across rayon, sample `i`
+    /// drawing from `Rng::new(seed_of(i))`, per-sample counters merged in
+    /// index order (bit-identical at any thread count).
+    fn forward_batch_impl<F>(
+        &self,
+        xs: &[f32],
+        mode: ReadMode,
+        cfg: &DeviceConfig,
+        counters: &mut ReadCounters,
+        seed_of: F,
+    ) -> Vec<f32>
+    where
+        F: Fn(usize) -> u64 + Sync,
+    {
         let d_in = self.d_in();
         let d_out = self.d_out();
         assert!(
@@ -237,7 +288,7 @@ impl NoisyModel {
             .map_init(
                 || Scratch::for_model(self),
                 |scratch, (i, out)| {
-                    let mut rng = Rng::stream(seed, i as u64);
+                    let mut rng = Rng::new(seed_of(i));
                     let mut c = ReadCounters::default();
                     let y = self.forward_into(
                         &xs[i * d_in..(i + 1) * d_in],
@@ -479,6 +530,37 @@ mod tests {
         assert_eq!(par, seq);
         assert_eq!(c_par, c_seq);
         assert_eq!(par.len(), 6 * 4);
+    }
+
+    #[test]
+    fn batch_seeds_match_forward_batch_and_pack_independent() {
+        let cfg = DeviceConfig::default();
+        let model = mk_model(&cfg);
+        let n = 6usize;
+        let xs: Vec<f32> = {
+            let mut r = Rng::new(9);
+            (0..16 * n).map(|_| r.next_f32()).collect()
+        };
+        // explicit seeds hash2(s, i) reproduce forward_batch(seed = s)
+        let seeds: Vec<u64> = (0..n).map(|i| crate::rng::hash2(42, i as u64)).collect();
+        let mut c_a = ReadCounters::default();
+        let mut c_b = ReadCounters::default();
+        let a = model.forward_batch(&xs, ReadMode::Original, &cfg, 42, &mut c_a);
+        let b = model.forward_batch_seeds(&xs, ReadMode::Original, &cfg, &seeds, &mut c_b);
+        assert_eq!(a, b);
+        assert_eq!(c_a, c_b);
+        // a sample's logits depend only on (pixels, seed), not on batch
+        // packing: running sample 3 alone reproduces its in-batch row
+        let i = 3usize;
+        let mut c_solo = ReadCounters::default();
+        let solo = model.forward_batch_seeds(
+            &xs[i * 16..(i + 1) * 16],
+            ReadMode::Original,
+            &cfg,
+            &seeds[i..i + 1],
+            &mut c_solo,
+        );
+        assert_eq!(solo.as_slice(), &b[i * 4..(i + 1) * 4]);
     }
 
     #[test]

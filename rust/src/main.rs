@@ -23,7 +23,7 @@ use emtopt::config::ExperimentConfig;
 use emtopt::coordinator::router::{serve_native, NativeServerConfig};
 use emtopt::data::{Dataset, Split};
 use emtopt::device::DeviceConfig;
-use emtopt::server::loadgen::{self, LoadgenConfig};
+use emtopt::server::loadgen::{self, LadderConfig, LoadgenConfig};
 use emtopt::server::{parse_tier_arg, serve_http, HttpServerConfig};
 use emtopt::util::cli::Args;
 use emtopt::Result;
@@ -68,14 +68,21 @@ FLAGS (defaults in parentheses):
   --host H            serve-http: bind host (127.0.0.1)
   --port N            serve-http: bind port, 0 = ephemeral (8080)
   --duration S        serve-http: run seconds, 0 = until POST /admin/shutdown (0)
-  --batch N           serve-http: device batch size (16)
+  --batch N           serve-http: device batch size (16); loadgen: images
+                      per request body, >1 sends {\"images\": ...} (1)
   --queue-depth N     serve-http: bounded request queue per lane (256)
+  --max-client-batch N serve-http: images accepted per request, 413 above (64)
+  --max-body-mb N     serve-http: request body cap in MiB, 413 above (8)
   --conn-threads N    serve-http: connection handler threads (16)
   --addr A            loadgen: target server (127.0.0.1:8080)
   --connections N     loadgen: concurrent keep-alive connections (8)
   --qps F             loadgen: aggregate target rate, 0 = closed loop (0)
   --tier T            loadgen: low|normal|high|mixed (normal)
   --endpoint E        loadgen: classify|infer (classify)
+  --ladder            loadgen: sweep a qps ladder (0.25x..2x measured
+                      capacity) per tier and record the full curve
+  --ladder-points N   loadgen: rungs on the ladder (5)
+  --calib-requests N  loadgen: closed-loop calibration requests (= --requests)
   --out FILE          loadgen: report path (BENCH_serve.json)
 ";
 
@@ -406,10 +413,14 @@ fn serve_http_cmd(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
     let http_cfg = HttpServerConfig {
         addr: format!("{host}:{port}"),
         conn_threads: args.parse_or("conn-threads", 16usize)?,
+        // batch bodies are big (a 64-image CIFAR batch is ~2 MiB of JSON),
+        // so the body cap is a first-class knob
+        max_body_bytes: args.parse_or("max-body-mb", 8usize)? << 20,
         engine: NativeServerConfig {
             batch: args.parse_or("batch", 16usize)?,
             workers: args.parse_or("workers", 2usize)?,
             queue_depth: args.parse_or("queue-depth", 256usize)?,
+            max_client_batch: args.parse_or("max-client-batch", 64usize)?,
             device: dev,
             ..Default::default()
         },
@@ -444,7 +455,9 @@ fn serve_http_cmd(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
     handle.shutdown()
 }
 
-/// Drive a running serve-http and write `BENCH_serve.json`.
+/// Drive a running serve-http and write `BENCH_serve.json` — one
+/// operating point by default, or a full per-tier latency–throughput
+/// curve with `--ladder`.
 fn loadgen_cmd(args: &Args) -> Result<()> {
     let endpoint = args.str_or("endpoint", "classify");
     anyhow::ensure!(
@@ -458,11 +471,24 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         target_qps: args.parse_or("qps", 0.0f64)?,
         tier: parse_tier_arg(&args.str_or("tier", "normal"))?,
         classify: endpoint == "classify",
+        batch: args.parse_or("batch", 1usize)?,
     };
-    let report = loadgen::run(&lg)?;
-    println!("{}", report.render());
     let out = args.str_or("out", "BENCH_serve.json");
-    loadgen::write_bench(&report, &out)?;
+    if args.has("ladder") {
+        let points = args.parse_or("ladder-points", 5usize)?;
+        let ladder = LadderConfig {
+            base: lg,
+            fractions: loadgen::ladder_fractions(points),
+            calib_requests: args.parse_or("calib-requests", 0u64)?,
+        };
+        let report = loadgen::run_ladder(&ladder)?;
+        print!("{}", report.render());
+        loadgen::write_bench_ladder(&report, &out)?;
+    } else {
+        let report = loadgen::run(&lg)?;
+        println!("{}", report.render());
+        loadgen::write_bench(&report, &out)?;
+    }
     println!("wrote {out}");
     Ok(())
 }

@@ -5,9 +5,12 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Upper bounds (inclusive, microseconds) of the fixed latency buckets.
 /// A final implicit overflow bucket catches everything above the last
-/// bound.  1-2-5 log spacing from 1 us to 50 s covers both the native
-/// engine (tens of us) and a heavily queued server (seconds).
-pub const LATENCY_BUCKET_BOUNDS_US: [u64; 23] = [
+/// bound.  Strict 1-2-5 log spacing from 1 us to 50 s covers both the
+/// native engine (tens of us) and a heavily queued server (seconds);
+/// `bounds_follow_1_2_5_progression` pins the spacing so a skipped bound
+/// (the table once jumped 10 s -> 50 s) cannot silently coarsen the
+/// quantiles again.
+pub const LATENCY_BUCKET_BOUNDS_US: [u64; 24] = [
     1,
     2,
     5,
@@ -30,11 +33,19 @@ pub const LATENCY_BUCKET_BOUNDS_US: [u64; 23] = [
     2_000_000,
     5_000_000,
     10_000_000,
+    20_000_000,
     50_000_000,
 ];
 
 /// Bucket count including the overflow bucket.
 pub const LATENCY_NUM_BUCKETS: usize = LATENCY_BUCKET_BOUNDS_US.len() + 1;
+
+/// Quantile reported for observations that landed in the overflow bucket
+/// (above the last bound): the last finite bound, with no interpolation.
+/// The histogram cannot know how far past 50 s an observation went, so it
+/// reports this documented sentinel instead of fabricating a value.
+pub const LATENCY_OVERFLOW_REPORT_US: f64 =
+    LATENCY_BUCKET_BOUNDS_US[LATENCY_BUCKET_BOUNDS_US.len() - 1] as f64;
 
 /// Lock-free fixed-bucket latency histogram.
 ///
@@ -77,8 +88,11 @@ impl LatencyHistogram {
     }
 
     /// Latency quantile in microseconds (`q` in [0, 1]), linearly
-    /// interpolated inside the winning bucket.  Returns 0.0 when empty;
-    /// observations in the overflow bucket report the last bound.
+    /// interpolated inside the winning bucket.  Returns 0.0 when empty.
+    /// A quantile that lands in the overflow bucket (observations above
+    /// the last bound) reports [`LATENCY_OVERFLOW_REPORT_US`] — the last
+    /// finite bound, explicitly uninterpolated, since the bucket has no
+    /// upper edge to interpolate toward.
     pub fn quantile_us(&self, q: f64) -> f64 {
         let counts = self.snapshot();
         let total: u64 = counts.iter().sum();
@@ -93,22 +107,21 @@ impl LatencyHistogram {
             }
             let next = cum + c;
             if next as f64 >= target {
+                if i == LATENCY_BUCKET_BOUNDS_US.len() {
+                    return LATENCY_OVERFLOW_REPORT_US;
+                }
                 let lower = if i == 0 {
                     0
                 } else {
                     LATENCY_BUCKET_BOUNDS_US[i - 1]
                 };
-                let upper = if i < LATENCY_BUCKET_BOUNDS_US.len() {
-                    LATENCY_BUCKET_BOUNDS_US[i]
-                } else {
-                    lower
-                };
+                let upper = LATENCY_BUCKET_BOUNDS_US[i];
                 let frac = ((target - cum as f64) / c as f64).clamp(0.0, 1.0);
                 return lower as f64 + frac * (upper - lower) as f64;
             }
             cum = next;
         }
-        LATENCY_BUCKET_BOUNDS_US[LATENCY_BUCKET_BOUNDS_US.len() - 1] as f64
+        LATENCY_OVERFLOW_REPORT_US
     }
 
     pub fn p50_us(&self) -> f64 {
@@ -121,6 +134,53 @@ impl LatencyHistogram {
 
     pub fn p99_us(&self) -> f64 {
         self.quantile_us(0.99)
+    }
+}
+
+/// Upper bounds (inclusive, images) of the fixed batch-size buckets; a
+/// final implicit overflow bucket catches anything larger.  Powers of two
+/// up to the default device batch (16) and the default client batch cap
+/// region beyond it.
+pub const BATCH_SIZE_BUCKET_BOUNDS: [u64; 6] = [1, 2, 4, 8, 16, 32];
+
+/// Bucket count including the overflow bucket.
+pub const BATCH_SIZE_NUM_BUCKETS: usize = BATCH_SIZE_BUCKET_BOUNDS.len() + 1;
+
+/// Lock-free fixed-bucket histogram of images per dispatched engine
+/// batch — the serving stack's batch-amortisation signal (`/metrics`
+/// shows whether traffic actually fills device batches or trickles
+/// through one image at a time).
+#[derive(Debug)]
+pub struct BatchSizeHistogram {
+    counts: [AtomicU64; BATCH_SIZE_NUM_BUCKETS],
+}
+
+impl Default for BatchSizeHistogram {
+    fn default() -> Self {
+        BatchSizeHistogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl BatchSizeHistogram {
+    /// Record one dispatched batch of `n` images.
+    pub fn record(&self, n: u64) {
+        let idx = BATCH_SIZE_BUCKET_BOUNDS
+            .iter()
+            .position(|&b| n <= b)
+            .unwrap_or(BATCH_SIZE_NUM_BUCKETS - 1);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total number of recorded batches.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Per-bucket counts; the last entry is the overflow bucket.
+    pub fn snapshot(&self) -> [u64; BATCH_SIZE_NUM_BUCKETS] {
+        std::array::from_fn(|i| self.counts[i].load(Ordering::Relaxed))
     }
 }
 
@@ -290,14 +350,86 @@ mod tests {
     }
 
     #[test]
+    fn bounds_follow_1_2_5_progression() {
+        // strict 1-2-5 log spacing: consecutive ratios alternate 2x and
+        // 2.5x, and every bound's leading digit is 1, 2, or 5
+        for w in LATENCY_BUCKET_BOUNDS_US.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            assert!(
+                b == 2 * a || 2 * b == 5 * a,
+                "bounds {a} -> {b} break the 1-2-5 progression"
+            );
+        }
+        for &b in &LATENCY_BUCKET_BOUNDS_US {
+            let mut m = b;
+            while m % 10 == 0 {
+                m /= 10;
+            }
+            assert!(matches!(m, 1 | 2 | 5), "bound {b} is not a 1-2-5 value");
+        }
+        // the once-missing 20 s bound is present, and the table spans
+        // 1 us .. 50 s
+        assert!(LATENCY_BUCKET_BOUNDS_US.contains(&20_000_000));
+        assert_eq!(LATENCY_BUCKET_BOUNDS_US[0], 1);
+        assert_eq!(*LATENCY_BUCKET_BOUNDS_US.last().unwrap(), 50_000_000);
+    }
+
+    #[test]
     fn histogram_overflow_bucket() {
         let h = LatencyHistogram::default();
         h.record_us(u64::MAX);
         assert_eq!(h.count(), 1);
         let last = *LATENCY_BUCKET_BOUNDS_US.last().unwrap() as f64;
-        assert_eq!(h.quantile_us(0.5), last);
+        assert_eq!(LATENCY_OVERFLOW_REPORT_US, last);
+        assert_eq!(h.quantile_us(0.5), LATENCY_OVERFLOW_REPORT_US);
         let snap = h.snapshot();
         assert_eq!(snap[LATENCY_NUM_BUCKETS - 1], 1);
+    }
+
+    #[test]
+    fn histogram_all_overflow_reports_sentinel_at_any_q() {
+        // all observations above the last bound: every quantile reports
+        // the documented sentinel, never a zero-width interpolation below
+        // or above it
+        let h = LatencyHistogram::default();
+        for _ in 0..100 {
+            h.record_us(60_000_000);
+        }
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile_us(q), LATENCY_OVERFLOW_REPORT_US, "q={q}");
+        }
+    }
+
+    #[test]
+    fn histogram_quantile_extremes() {
+        // a single observation in the (5, 10] bucket: q=0 pins the lower
+        // edge, q=1 the upper edge, and everything between stays inside
+        let h = LatencyHistogram::default();
+        h.record_us(8);
+        assert_eq!(h.quantile_us(0.0), 5.0);
+        assert_eq!(h.quantile_us(1.0), 10.0);
+        let mid = h.quantile_us(0.5);
+        assert!((5.0..=10.0).contains(&mid), "mid={mid}");
+        // out-of-range q clamps rather than panicking
+        assert_eq!(h.quantile_us(-1.0), h.quantile_us(0.0));
+        assert_eq!(h.quantile_us(2.0), h.quantile_us(1.0));
+    }
+
+    #[test]
+    fn batch_size_histogram_buckets() {
+        let h = BatchSizeHistogram::default();
+        for n in [1u64, 1, 2, 3, 8, 16, 17, 64] {
+            h.record(n);
+        }
+        assert_eq!(h.count(), 8);
+        let snap = h.snapshot();
+        assert_eq!(snap[0], 2); // <= 1
+        assert_eq!(snap[1], 1); // (1, 2]
+        assert_eq!(snap[2], 1); // (2, 4]
+        assert_eq!(snap[3], 1); // (4, 8]
+        assert_eq!(snap[4], 1); // (8, 16]
+        assert_eq!(snap[5], 1); // (16, 32]
+        assert_eq!(snap[BATCH_SIZE_NUM_BUCKETS - 1], 1); // overflow
     }
 
     #[test]

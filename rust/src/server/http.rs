@@ -27,13 +27,22 @@ const MAX_HEAD_BYTES: usize = 16 * 1024;
 const MID_MESSAGE_TIMEOUT_RETRIES: u32 = 20;
 
 /// Typed marker error: declared `Content-Length` exceeds the configured
-/// body cap.  The server maps it to `413 Payload Too Large`.
+/// body cap.  The server maps it to `413 Payload Too Large`; the limit is
+/// carried so the error response tells clients (e.g. batch senders) how
+/// much the deployment actually accepts (`--max-body-mb` on `serve-http`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct PayloadTooLarge;
+pub struct PayloadTooLarge {
+    /// The configured body cap in bytes.
+    pub limit: usize,
+}
 
 impl std::fmt::Display for PayloadTooLarge {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "request body exceeds the configured limit")
+        write!(
+            f,
+            "request body exceeds the configured limit of {} bytes",
+            self.limit
+        )
     }
 }
 
@@ -258,7 +267,7 @@ impl<S: Read + Write> HttpConn<S> {
         let headers = parse_headers(lines)?;
         let content_length = content_length(&headers)?;
         if content_length > max_body {
-            return Err(anyhow::Error::new(PayloadTooLarge));
+            return Err(anyhow::Error::new(PayloadTooLarge { limit: max_body }));
         }
         let body = self.read_body(content_length)?;
         let keep_alive = match headers

@@ -4,6 +4,8 @@
 //! connections at a target aggregate QPS (0 = closed-loop, as fast as
 //! the connections allow).  Requests are deterministic dataset samples,
 //! so on `/v1/classify` the generator also scores served accuracy.
+//! With `batch > 1` each request carries a multi-image `{"images": ...}`
+//! body through the server's direct batch path.
 //!
 //! Latency is measured from the request's **scheduled** send time when
 //! pacing (coordinated-omission-corrected: a stalled server inflates the
@@ -11,6 +13,12 @@
 //! actual send when running closed-loop.  The report carries
 //! p50/p95/p99/max, throughput, per-status counts, and is written as
 //! `BENCH_serve.json` for the perf trajectory.
+//!
+//! [`run_ladder`] turns single operating points into a latency–throughput
+//! **curve**: it first measures closed-loop capacity per energy tier,
+//! then replays the schedule at a ladder of offered-load fractions
+//! (default 0.25x..2x of measured capacity), recording one report per
+//! rung — the `BENCH_serve.json` "ladder" schema CI asserts against.
 
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
@@ -38,6 +46,9 @@ pub struct LoadgenConfig {
     pub tier: Option<EnergyTier>,
     /// Hit `/v1/classify` (and score accuracy) instead of `/v1/infer`.
     pub classify: bool,
+    /// Images per request body: 1 sends `{"image": ...}`, more sends a
+    /// multi-image `{"images": ...}` body through the batch path.
+    pub batch: usize,
 }
 
 impl Default for LoadgenConfig {
@@ -49,6 +60,7 @@ impl Default for LoadgenConfig {
             target_qps: 0.0,
             tier: Some(EnergyTier::Normal),
             classify: true,
+            batch: 1,
         }
     }
 }
@@ -78,14 +90,24 @@ pub struct LoadgenReport {
     pub max_us: u64,
     pub connections: usize,
     pub target_qps: f64,
+    /// Images per request body (1 = single-image requests).
+    pub batch: usize,
 }
 
 impl LoadgenReport {
     pub fn render(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
-            "loadgen: {} sent over {} connections in {:.2}s -> {:.0} req/s\n",
-            self.sent, self.connections, self.elapsed_s, self.throughput_rps
+            "loadgen: {} sent over {} connections in {:.2}s -> {:.0} req/s{}\n",
+            self.sent,
+            self.connections,
+            self.elapsed_s,
+            self.throughput_rps,
+            if self.batch > 1 {
+                format!(" ({} images/request)", self.batch)
+            } else {
+                String::new()
+            }
         ));
         s.push_str(&format!(
             "  ok {} | overloaded(503) {} | http errors {} | transport errors {}\n",
@@ -119,14 +141,11 @@ impl LoadgenReport {
             ("mean_us", Json::Num(self.mean_us)),
             ("max_us", Json::Num(self.max_us as f64)),
         ]);
-        let unix_time = std::time::SystemTime::now()
-            .duration_since(std::time::UNIX_EPOCH)
-            .map(|d| d.as_secs())
-            .unwrap_or(0);
         Json::obj(vec![
             ("bench", Json::Str("serve".into())),
-            ("unix_time", Json::Num(unix_time as f64)),
+            ("unix_time", Json::Num(unix_time() as f64)),
             ("connections", Json::Num(self.connections as f64)),
+            ("batch", Json::Num(self.batch as f64)),
             ("target_qps", Json::Num(self.target_qps)),
             ("sent", Json::Num(self.sent as f64)),
             ("ok", Json::Num(self.ok as f64)),
@@ -140,6 +159,13 @@ impl LoadgenReport {
             ("latency_us", latency),
         ])
     }
+}
+
+fn unix_time() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
 }
 
 /// Write the report to `path` (pretty enough for a CI artifact).
@@ -176,8 +202,10 @@ fn connect_http(addr: &str) -> Option<HttpConn<TcpStream>> {
     Some(HttpConn::new(stream))
 }
 
-/// Probe `/healthz` for the deployed model's shape.
-fn probe(addr: &str) -> Result<(usize, usize)> {
+/// Probe `/healthz` for the deployed model's shape and the server's
+/// per-request image cap (`usize::MAX` when the server predates the
+/// `max_batch` field).
+fn probe(addr: &str) -> Result<(usize, usize, usize)> {
     let stream = TcpStream::connect(addr)
         .map_err(|e| anyhow::anyhow!("connecting to {addr}: {e}"))?;
     let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
@@ -186,23 +214,65 @@ fn probe(addr: &str) -> Result<(usize, usize)> {
     let (status, body) = conn.read_response(64 * 1024)?;
     anyhow::ensure!(status == 200, "healthz returned {status}");
     let v = Json::parse(std::str::from_utf8(&body)?)?;
+    let max_batch = match v.opt("max_batch") {
+        Some(m) => m.as_usize()?,
+        None => usize::MAX,
+    };
     Ok((
         v.get("input_len")?.as_usize()?,
         v.get("num_classes")?.as_usize()?,
+        max_batch,
     ))
 }
 
-/// JSON body for one request (manual rendering keeps the hot loop free
-/// of intermediate `Json` trees).
-fn body_for(image: &[f32], tier: EnergyTier) -> String {
+/// Clamp a sample to a JSON-renderable value: `{}` formats non-finite
+/// `f32`s as `NaN`/`inf`, which is not JSON — the server would answer an
+/// opaque `400` for every affected request.  Mirrors the server-side
+/// non-finite pixel rejection in `server/mod.rs`: neither end lets a
+/// non-finite value onto the wire.
+fn finite_or_zero(v: f32) -> f32 {
+    if v.is_finite() {
+        v
+    } else {
+        0.0
+    }
+}
+
+/// Render one `[p0,p1,...]` pixel row (manual rendering keeps the hot
+/// loop free of intermediate `Json` trees).
+fn push_image(s: &mut String, image: &[f32]) {
     use std::fmt::Write as _;
-    let mut s = String::with_capacity(image.len() * 10 + 32);
-    s.push_str("{\"image\":[");
+    s.push('[');
     for (i, v) in image.iter().enumerate() {
         if i > 0 {
             s.push(',');
         }
-        let _ = write!(s, "{v}");
+        let _ = write!(s, "{}", finite_or_zero(*v));
+    }
+    s.push(']');
+}
+
+/// JSON body for one single-image request.
+fn body_for(image: &[f32], tier: EnergyTier) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(image.len() * 10 + 32);
+    s.push_str("{\"image\":");
+    push_image(&mut s, image);
+    let _ = write!(s, ",\"tier\":\"{}\"}}", tier.name());
+    s
+}
+
+/// JSON body for one multi-image request: `images` is `count * input_len`
+/// row-major, rendered as `{"images":[[...],...],"tier":...}`.
+fn body_for_batch(images: &[f32], input_len: usize, tier: EnergyTier) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(images.len() * 10 + 48);
+    s.push_str("{\"images\":[");
+    for (i, row) in images.chunks(input_len).enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        push_image(&mut s, row);
     }
     let _ = write!(s, "],\"tier\":\"{}\"}}", tier.name());
     s
@@ -212,7 +282,15 @@ fn body_for(image: &[f32], tier: EnergyTier) -> String {
 pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     anyhow::ensure!(cfg.connections > 0, "need at least one connection");
     anyhow::ensure!(cfg.requests > 0, "need at least one request");
-    let (input_len, num_classes) = probe(&cfg.addr)?;
+    anyhow::ensure!(cfg.batch > 0, "need at least one image per request");
+    let batch = cfg.batch;
+    let (input_len, num_classes, max_batch) = probe(&cfg.addr)?;
+    // Fail fast with the real cause instead of a run of opaque 413s: the
+    // server advertises its per-request image cap on /healthz.
+    anyhow::ensure!(
+        batch <= max_batch,
+        "--batch {batch} exceeds the server's max_batch {max_batch} (see /healthz)"
+    );
     // Native dataset when the deployed shape identifies a suite (gives
     // labels for accuracy scoring); deterministic synthetic vectors
     // otherwise — scoring a mismatched suite would report noise.
@@ -245,26 +323,40 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                 let mut counts = Counts::default();
                 let mut latencies = Vec::with_capacity(my_count as usize);
                 let mut conn = connect_http(&addr);
-                let mut img = vec![0.0f32; input_len];
+                let mut img = vec![0.0f32; input_len * batch];
+                let mut labels: Vec<usize> = Vec::with_capacity(batch);
                 for k in 0..my_count {
                     // striped global index -> evenly interleaved schedule
                     let global = c + k * conns;
                     let tier =
                         fixed_tier.unwrap_or(EnergyTier::ALL[(global % 3) as usize]);
-                    let label = match &dataset {
-                        Some(ds) => Some(ds.sample_into(Split::Test, global, &mut img)),
-                        None => {
-                            let mut r = Rng::stream(0x10ad, global);
-                            for v in img.iter_mut() {
-                                *v = r.next_f32();
+                    labels.clear();
+                    for j in 0..batch {
+                        // image index space is dense across the whole run:
+                        // request `global` carries images [global*batch,
+                        // (global+1)*batch)
+                        let sample = global * batch as u64 + j as u64;
+                        let row = &mut img[j * input_len..(j + 1) * input_len];
+                        match &dataset {
+                            Some(ds) => {
+                                labels.push(ds.sample_into(Split::Test, sample, row) as usize)
                             }
-                            None
+                            None => {
+                                let mut r = Rng::stream(0x10ad, sample);
+                                for v in row.iter_mut() {
+                                    *v = r.next_f32();
+                                }
+                            }
                         }
-                    };
+                    }
                     // render the body before the latency clock starts, so
                     // p50/p95/p99 measure network + server, not client-side
                     // JSON formatting
-                    let body = body_for(&img, tier);
+                    let body = if batch == 1 {
+                        body_for(&img, tier)
+                    } else {
+                        body_for_batch(&img, input_len, tier)
+                    };
                     let start = if interval.is_zero() {
                         Instant::now()
                     } else {
@@ -313,17 +405,29 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                         200 => {
                             counts.ok += 1;
                             latencies.push(us);
-                            if classify {
-                                if let Some(label) = label {
-                                    counts.labeled += 1;
-                                    let pred = std::str::from_utf8(&resp_body)
-                                        .ok()
-                                        .and_then(|t| Json::parse(t).ok())
-                                        .and_then(|v| {
-                                            v.get("class").ok().and_then(|c| c.as_usize().ok())
-                                        });
-                                    if pred == Some(label as usize) {
-                                        counts.correct += 1;
+                            if classify && !labels.is_empty() {
+                                let parsed = std::str::from_utf8(&resp_body)
+                                    .ok()
+                                    .and_then(|t| Json::parse(t).ok());
+                                if let Some(v) = parsed {
+                                    if batch == 1 {
+                                        counts.labeled += 1;
+                                        let pred =
+                                            v.get("class").ok().and_then(|c| c.as_usize().ok());
+                                        if pred == Some(labels[0]) {
+                                            counts.correct += 1;
+                                        }
+                                    } else if let Ok(classes) =
+                                        v.get("classes").and_then(|c| c.as_arr())
+                                    {
+                                        counts.labeled += labels.len() as u64;
+                                        for (j, cls) in
+                                            classes.iter().enumerate().take(labels.len())
+                                        {
+                                            if cls.as_usize().ok() == Some(labels[j]) {
+                                                counts.correct += 1;
+                                            }
+                                        }
                                     }
                                 }
                             }
@@ -378,6 +482,198 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         max_us: latencies.last().copied().unwrap_or(0),
         connections: cfg.connections,
         target_qps: cfg.target_qps,
+        batch: cfg.batch,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// qps ladder: latency–throughput curves per energy tier
+// ---------------------------------------------------------------------------
+
+/// Ladder-sweep configuration: measure closed-loop capacity, then replay
+/// the schedule at `fractions` of it.
+#[derive(Clone, Debug)]
+pub struct LadderConfig {
+    /// Per-rung loadgen settings (`target_qps` is overridden per rung).
+    /// `tier: Some(t)` sweeps one curve for that tier; `None` (mixed)
+    /// sweeps one curve per energy tier.
+    pub base: LoadgenConfig,
+    /// Offered-load fractions of the measured capacity, strictly
+    /// ascending (see [`ladder_fractions`]).
+    pub fractions: Vec<f64>,
+    /// Requests of the closed-loop calibration run (0 = `base.requests`).
+    pub calib_requests: u64,
+}
+
+/// Evenly spaced offered-load fractions from 0.25x to 2x of measured
+/// capacity — below the knee, at it, and past saturation.
+pub fn ladder_fractions(points: usize) -> Vec<f64> {
+    let n = points.max(2);
+    (0..n)
+        .map(|i| 0.25 + (2.0 - 0.25) * i as f64 / (n - 1) as f64)
+        .collect()
+}
+
+/// One rung of a ladder sweep.
+#[derive(Clone, Debug)]
+pub struct LadderPoint {
+    /// Offered load as a fraction of the tier's measured capacity.
+    pub frac: f64,
+    pub report: LoadgenReport,
+}
+
+/// The latency–throughput curve of one energy tier.
+#[derive(Clone, Debug)]
+pub struct TierCurve {
+    /// Tier name (`low`/`normal`/`high`).
+    pub tier: String,
+    /// Closed-loop capacity measured by the calibration run, req/s.
+    pub capacity_rps: f64,
+    /// Rungs in ascending offered-load order.
+    pub points: Vec<LadderPoint>,
+}
+
+/// Result of a full ladder sweep (`BENCH_serve.json` "ladder" schema).
+#[derive(Clone, Debug)]
+pub struct LadderReport {
+    pub batch: usize,
+    pub connections: usize,
+    pub requests_per_point: u64,
+    pub tiers: Vec<TierCurve>,
+}
+
+impl LadderReport {
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        for t in &self.tiers {
+            let _ = writeln!(
+                s,
+                "ladder tier {:<6} capacity {:.0} req/s ({} images/request)",
+                t.tier, t.capacity_rps, self.batch
+            );
+            for p in &t.points {
+                let r = &p.report;
+                let _ = writeln!(
+                    s,
+                    "  {:>5.2}x  offered {:>7.1} qps -> {:>7.1} req/s | p50 {:.2} ms | \
+                     p99 {:.2} ms | ok {} | 503 {}",
+                    p.frac,
+                    r.target_qps,
+                    r.throughput_rps,
+                    r.p50_us as f64 / 1000.0,
+                    r.p99_us as f64 / 1000.0,
+                    r.ok,
+                    r.overloaded
+                );
+            }
+        }
+        s
+    }
+
+    /// Machine-readable record: one `{tier, capacity_rps, curve: [...]}`
+    /// entry per swept tier, each curve point a full [`LoadgenReport`]
+    /// plus its `qps_frac`.
+    pub fn to_json(&self) -> Json {
+        let tiers: Vec<Json> = self
+            .tiers
+            .iter()
+            .map(|t| {
+                let curve: Vec<Json> = t
+                    .points
+                    .iter()
+                    .map(|p| match p.report.to_json() {
+                        Json::Obj(mut m) => {
+                            m.insert("qps_frac".into(), Json::Num(p.frac));
+                            Json::Obj(m)
+                        }
+                        other => other,
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("tier", Json::Str(t.tier.clone())),
+                    ("capacity_rps", Json::Num(t.capacity_rps)),
+                    ("curve", Json::Arr(curve)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("bench", Json::Str("serve".into())),
+            ("mode", Json::Str("ladder".into())),
+            ("unix_time", Json::Num(unix_time() as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("connections", Json::Num(self.connections as f64)),
+            ("requests_per_point", Json::Num(self.requests_per_point as f64)),
+            ("tiers", Json::Arr(tiers)),
+        ])
+    }
+}
+
+/// Write a ladder report to `path` (the CI artifact).
+pub fn write_bench_ladder(report: &LadderReport, path: &str) -> Result<()> {
+    std::fs::write(path, report.to_json().render() + "\n")?;
+    Ok(())
+}
+
+/// Run the full ladder sweep; blocks until every rung of every tier
+/// finished.  Each swept tier gets its own closed-loop calibration run
+/// (capacities differ — the low tier pays decomposed reads), then one
+/// paced run per fraction, ascending, so every curve's offered qps is
+/// monotone by construction.
+pub fn run_ladder(cfg: &LadderConfig) -> Result<LadderReport> {
+    anyhow::ensure!(!cfg.fractions.is_empty(), "ladder needs at least one rung");
+    anyhow::ensure!(
+        cfg.fractions.windows(2).all(|w| w[0] < w[1]),
+        "ladder fractions must be strictly ascending"
+    );
+    anyhow::ensure!(
+        cfg.fractions.iter().all(|&f| f > 0.0),
+        "ladder fractions must be positive"
+    );
+    let tiers: Vec<EnergyTier> = match cfg.base.tier {
+        Some(t) => vec![t],
+        None => EnergyTier::ALL.to_vec(),
+    };
+    let mut curves = Vec::with_capacity(tiers.len());
+    for tier in tiers {
+        let calib = run(&LoadgenConfig {
+            tier: Some(tier),
+            target_qps: 0.0,
+            requests: if cfg.calib_requests > 0 {
+                cfg.calib_requests
+            } else {
+                cfg.base.requests
+            },
+            ..cfg.base.clone()
+        })?;
+        anyhow::ensure!(
+            calib.ok > 0,
+            "tier {}: calibration run served no requests",
+            tier.name()
+        );
+        // floor at 1 rps so a pathological calibration cannot produce a
+        // zero/negative pacing interval
+        let capacity_rps = calib.throughput_rps.max(1.0);
+        let mut points = Vec::with_capacity(cfg.fractions.len());
+        for &frac in &cfg.fractions {
+            let report = run(&LoadgenConfig {
+                tier: Some(tier),
+                target_qps: capacity_rps * frac,
+                ..cfg.base.clone()
+            })?;
+            points.push(LadderPoint { frac, report });
+        }
+        curves.push(TierCurve {
+            tier: tier.name().to_string(),
+            capacity_rps,
+            points,
+        });
+    }
+    Ok(LadderReport {
+        batch: cfg.base.batch,
+        connections: cfg.base.connections,
+        requests_per_point: cfg.base.requests,
+        tiers: curves,
     })
 }
 
@@ -394,7 +690,14 @@ mod tests {
         assert_eq!(percentile(&xs, 1.0), 100);
         assert_eq!(percentile(&xs, 0.0), 1);
         assert_eq!(percentile(&[], 0.5), 0);
+        // single-element input: every quantile is that element
+        assert_eq!(percentile(&[7], 0.0), 7);
+        assert_eq!(percentile(&[7], 0.5), 7);
         assert_eq!(percentile(&[7], 0.99), 7);
+        assert_eq!(percentile(&[7], 1.0), 7);
+        // two elements: nearest-rank splits at q = 0.5
+        assert_eq!(percentile(&[3, 9], 0.5), 3);
+        assert_eq!(percentile(&[3, 9], 0.51), 9);
     }
 
     #[test]
@@ -406,6 +709,86 @@ mod tests {
             v.get("image").unwrap().as_f32s().unwrap(),
             vec![0.5, -1.25, 3.0]
         );
+    }
+
+    #[test]
+    fn body_clamps_non_finite_samples() {
+        // NaN/inf render as `NaN`/`inf` under `{}`, which is not JSON —
+        // the generator must clamp before rendering
+        let body = body_for(
+            &[f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -1.5],
+            EnergyTier::Low,
+        );
+        let v = Json::parse(&body).expect("clamped body must parse as JSON");
+        assert_eq!(
+            v.get("image").unwrap().as_f32s().unwrap(),
+            vec![0.0, 0.0, 0.0, -1.5]
+        );
+    }
+
+    #[test]
+    fn batch_body_renders_rows() {
+        let images = [0.5f32, 1.0, f32::NAN, 2.0, 3.0, 4.0];
+        let body = body_for_batch(&images, 3, EnergyTier::Normal);
+        let v = Json::parse(&body).unwrap();
+        assert_eq!(v.get("tier").unwrap().as_str().unwrap(), "normal");
+        let rows = v.get("images").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].as_f32s().unwrap(), vec![0.5, 1.0, 0.0]);
+        assert_eq!(rows[1].as_f32s().unwrap(), vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn ladder_fractions_span_quarter_to_double() {
+        let fs = ladder_fractions(5);
+        assert_eq!(fs.len(), 5);
+        assert!((fs[0] - 0.25).abs() < 1e-12);
+        assert!((fs[4] - 2.0).abs() < 1e-12);
+        assert!(fs.windows(2).all(|w| w[0] < w[1]), "{fs:?}");
+        // degenerate request collapses to the 2-point minimum
+        assert_eq!(ladder_fractions(0).len(), 2);
+        let three = ladder_fractions(3);
+        assert!((three[1] - 1.125).abs() < 1e-12, "{three:?}");
+    }
+
+    #[test]
+    fn ladder_report_json_schema() {
+        let point = |frac: f64, qps: f64| LadderPoint {
+            frac,
+            report: LoadgenReport {
+                sent: 10,
+                ok: 10,
+                target_qps: qps,
+                throughput_rps: qps * 0.9,
+                batch: 4,
+                connections: 2,
+                ..Default::default()
+            },
+        };
+        let r = LadderReport {
+            batch: 4,
+            connections: 2,
+            requests_per_point: 10,
+            tiers: vec![TierCurve {
+                tier: "normal".into(),
+                capacity_rps: 100.0,
+                points: vec![point(0.25, 25.0), point(2.0, 200.0)],
+            }],
+        };
+        let j = Json::parse(&r.to_json().render()).unwrap();
+        assert_eq!(j.get("mode").unwrap().as_str().unwrap(), "ladder");
+        assert_eq!(j.get("batch").unwrap().as_usize().unwrap(), 4);
+        let tiers = j.get("tiers").unwrap().as_arr().unwrap();
+        assert_eq!(tiers.len(), 1);
+        assert_eq!(tiers[0].get("tier").unwrap().as_str().unwrap(), "normal");
+        let curve = tiers[0].get("curve").unwrap().as_arr().unwrap();
+        assert_eq!(curve.len(), 2);
+        assert!(
+            curve[0].get("target_qps").unwrap().as_f64().unwrap()
+                < curve[1].get("target_qps").unwrap().as_f64().unwrap()
+        );
+        assert_eq!(curve[0].get("qps_frac").unwrap().as_f64().unwrap(), 0.25);
+        assert!(r.render().contains("ladder tier normal"));
     }
 
     #[test]
@@ -422,12 +805,14 @@ mod tests {
             mean_us: 950.0,
             max_us: 8000,
             connections: 8,
+            batch: 4,
             ..Default::default()
         };
         let j = r.to_json();
         let back = Json::parse(&j.render()).unwrap();
         assert_eq!(back.get("bench").unwrap().as_str().unwrap(), "serve");
         assert_eq!(back.get("sent").unwrap().as_u64().unwrap(), 100);
+        assert_eq!(back.get("batch").unwrap().as_u64().unwrap(), 4);
         assert_eq!(
             back.get("latency_us")
                 .unwrap()

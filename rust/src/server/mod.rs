@@ -14,9 +14,14 @@
 //! Endpoints:
 //!
 //! * `POST /v1/infer`     `{"image": [f32; d_in], "tier": "low|normal|high"}`
-//!   → `{"logits": [...], "tier": ..., "rho": ..., "mode": ...}`
-//! * `POST /v1/classify`  same body → adds `"class"` (argmax)
-//! * `GET  /healthz`      liveness + deployed-model shape
+//!   → `{"logits": [...], "tier": ..., "rho": ..., "mode": ...}`;
+//!   or batch form `{"images": [[f32; d_in], ...], "tier": ...}`
+//!   → `{"logits": [[...], ...], "count": n, ...}` — per-image logits
+//!   bit-identical to the same images as sequential single requests
+//!   (content-seeded noise; see `coordinator::router::image_seed`)
+//! * `POST /v1/classify`  same bodies → adds `"class"` (argmax), or
+//!   `"classes"` for the batch form
+//! * `GET  /healthz`      liveness + deployed-model shape + batch cap
 //! * `GET  /metrics`      Prometheus text (see [`prom`])
 //! * `POST /admin/shutdown`  graceful drain
 //!
@@ -29,11 +34,14 @@
 //! device energy — it is served with.
 //!
 //! **Admission control:** requests enter a lane via
-//! [`InferenceClient::try_infer`]; a full bounded queue returns the typed
-//! `Overloaded` error, which this layer maps to `503`.  The acceptor
-//! additionally sheds whole connections with `503` when all handler
-//! threads are busy and the hand-off queue is full.  Overload never grows
-//! memory without bound.
+//! [`InferenceClient::try_infer`] (or `try_infer_batch` for multi-image
+//! bodies, which skip the dynamic-batcher wait but share the same bounded
+//! queue); a full bounded queue returns the typed `Overloaded` error,
+//! which this layer maps to `503`, and a batch above the per-request
+//! image cap returns the typed `BatchTooLarge`, mapped to `413`.  The
+//! acceptor additionally sheds whole connections with `503` when all
+//! handler threads are busy and the hand-off queue is full.  Overload
+//! never grows memory without bound.
 
 pub mod http;
 pub mod loadgen;
@@ -46,7 +54,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::router::{
-    serve_native, InferenceClient, NativeServerConfig, Overloaded, ServerStats,
+    serve_native, BatchTooLarge, InferenceClient, NativeServerConfig, Overloaded, ServerStats,
 };
 use crate::device::DeviceConfig;
 use crate::energy::{EnergyModel, ReadMode};
@@ -287,10 +295,23 @@ impl TieredEngine {
         self.lanes[0].client.num_classes
     }
 
+    /// Max images accepted in one multi-image request (identical across
+    /// lanes — they share one engine config).
+    pub fn max_client_batch(&self) -> usize {
+        self.lanes[0].client.max_client_batch
+    }
+
     /// Non-blocking admission into the tier's lane (typed `Overloaded`
     /// error when its bounded queue is full).
     pub fn try_infer(&self, tier: EnergyTier, image: Vec<f32>) -> Result<Vec<f32>> {
         self.lane(tier).client.try_infer(image)
+    }
+
+    /// Non-blocking multi-image submit: the whole request runs as one
+    /// device batch, skipping the dynamic-batcher wait (typed
+    /// `Overloaded` / `BatchTooLarge` on admission failure).
+    pub fn try_infer_batch(&self, tier: EnergyTier, images: Vec<f32>) -> Result<Vec<f32>> {
+        self.lane(tier).client.try_infer_batch(images)
     }
 
     /// Blocking submit (backpressure instead of load-shedding).
@@ -330,7 +351,11 @@ impl Default for HttpServerConfig {
             addr: "127.0.0.1:8080".into(),
             conn_threads: 16,
             conn_backlog: 64,
-            max_body_bytes: 1 << 20,
+            // Must fit the batches the engine default advertises on
+            // /healthz: max_client_batch (64) CIFAR images are ~2 MiB of
+            // JSON (~30 KiB per image), so 8 MiB leaves headroom —
+            // a server must never 413 a batch it claims to accept.
+            max_body_bytes: 8 << 20,
             read_timeout: Duration::from_millis(250),
             engine: NativeServerConfig::default(),
         }
@@ -683,6 +708,10 @@ fn route(ctx: &ServerCtx, req: &HttpRequest) -> Response {
                 ("input_len", Json::Num(ctx.engine.input_len() as f64)),
                 ("num_classes", Json::Num(ctx.engine.num_classes() as f64)),
                 (
+                    "max_batch",
+                    Json::Num(ctx.engine.max_client_batch() as f64),
+                ),
+                (
                     "uptime_s",
                     Json::Num(ctx.started.elapsed().as_secs_f64()),
                 ),
@@ -714,47 +743,125 @@ fn route(ctx: &ServerCtx, req: &HttpRequest) -> Response {
     }
 }
 
+/// Parsed inference request body: one image, or a client-batched set.
+enum InferPayload {
+    Single(Vec<f32>),
+    /// `count * input_len` row-major images from an `"images"` body.
+    Batch { images: Vec<f32>, count: usize },
+}
+
+/// Map an engine admission error to its HTTP status: `Overloaded` is the
+/// server's problem (`503`, retryable), `BatchTooLarge` the client's
+/// (`413`, never retryable unchanged), anything else a `500`.
+fn engine_error_response(e: &anyhow::Error) -> Response {
+    let status = if e.is::<Overloaded>() {
+        503
+    } else if e.is::<BatchTooLarge>() {
+        413
+    } else {
+        500
+    };
+    Response::error_json(status, &format!("{e}"))
+}
+
 fn infer_route(ctx: &ServerCtx, req: &HttpRequest, classify: bool) -> Response {
-    let (image, tier) = match parse_infer_body(&req.body, ctx.engine.input_len()) {
+    let (payload, tier) = match parse_infer_body(&req.body, ctx.engine.input_len()) {
         Ok(p) => p,
         Err(e) => return Response::error_json(400, &format!("{e}")),
     };
-    match ctx.engine.try_infer(tier, image) {
-        Ok(logits) => {
-            let plan = ctx.engine.plan(tier);
-            let mut fields = vec![
-                ("tier", Json::Str(tier.name().into())),
-                ("rho", Json::Num(plan.rho as f64)),
-                ("mode", Json::Str(plan.mode.name().into())),
-                ("logits", Json::f32_arr(&logits)),
-            ];
-            if classify {
-                let class = crate::inference::argmax(&logits);
-                fields.push(("class", Json::Num(class as f64)));
+    let plan = ctx.engine.plan(tier);
+    let mut fields = vec![
+        ("tier", Json::Str(tier.name().into())),
+        ("rho", Json::Num(plan.rho as f64)),
+        ("mode", Json::Str(plan.mode.name().into())),
+    ];
+    match payload {
+        InferPayload::Single(image) => match ctx.engine.try_infer(tier, image) {
+            Ok(logits) => {
+                fields.push(("logits", Json::f32_arr(&logits)));
+                if classify {
+                    let class = crate::inference::argmax(&logits);
+                    fields.push(("class", Json::Num(class as f64)));
+                }
+                Response::json(200, &Json::obj(fields))
             }
-            Response::json(200, &Json::obj(fields))
+            Err(e) => engine_error_response(&e),
+        },
+        InferPayload::Batch { images, count } => {
+            match ctx.engine.try_infer_batch(tier, images) {
+                Ok(logits) => {
+                    let nc = ctx.engine.num_classes();
+                    fields.push(("count", Json::Num(count as f64)));
+                    fields.push((
+                        "logits",
+                        Json::Arr(logits.chunks(nc).map(Json::f32_arr).collect()),
+                    ));
+                    if classify {
+                        fields.push((
+                            "classes",
+                            Json::Arr(
+                                logits
+                                    .chunks(nc)
+                                    .map(|row| {
+                                        Json::Num(crate::inference::argmax(row) as f64)
+                                    })
+                                    .collect(),
+                            ),
+                        ));
+                    }
+                    Response::json(200, &Json::obj(fields))
+                }
+                Err(e) => engine_error_response(&e),
+            }
         }
-        Err(e) if e.is::<Overloaded>() => Response::error_json(503, &format!("{e}")),
-        Err(e) => Response::error_json(500, &format!("{e}")),
     }
 }
 
-fn parse_infer_body(body: &[u8], input_len: usize) -> Result<(Vec<f32>, EnergyTier)> {
+/// Validate one image row: expected width, all-finite pixels.
+/// Non-finite pixels (e.g. 1e39 saturating to f32 infinity) would
+/// propagate into the logits and render as invalid JSON downstream.
+fn check_image(image: &[f32], input_len: usize, what: &str) -> Result<()> {
+    anyhow::ensure!(
+        image.len() == input_len,
+        "{what} must be {input_len} floats, got {}",
+        image.len()
+    );
+    anyhow::ensure!(
+        image.iter().all(|v| v.is_finite()),
+        "{what} values must be finite"
+    );
+    Ok(())
+}
+
+fn parse_infer_body(body: &[u8], input_len: usize) -> Result<(InferPayload, EnergyTier)> {
     let text =
         std::str::from_utf8(body).map_err(|_| anyhow::anyhow!("body is not UTF-8"))?;
     let v = Json::parse(text)?;
-    let image = v.get("image")?.as_f32s()?;
-    anyhow::ensure!(
-        image.len() == input_len,
-        "image must be {input_len} floats, got {}",
-        image.len()
-    );
-    // Non-finite pixels (e.g. 1e39 saturating to f32 infinity) would
-    // propagate into the logits and render as invalid JSON downstream.
-    anyhow::ensure!(
-        image.iter().all(|v| v.is_finite()),
-        "image values must be finite"
-    );
+    let payload = match (v.opt("image"), v.opt("images")) {
+        (Some(_), Some(_)) => {
+            anyhow::bail!("body must carry either \"image\" or \"images\", not both")
+        }
+        (Some(img), None) => {
+            let image = img.as_f32s()?;
+            check_image(&image, input_len, "image")?;
+            InferPayload::Single(image)
+        }
+        (None, Some(arr)) => {
+            let rows = arr.as_arr()?;
+            anyhow::ensure!(!rows.is_empty(), "\"images\" must contain at least one image");
+            let mut images = Vec::with_capacity(rows.len() * input_len);
+            for (i, row) in rows.iter().enumerate() {
+                let r = row.as_f32s()?;
+                check_image(&r, input_len, &format!("images[{i}]"))?;
+                images.extend_from_slice(&r);
+            }
+            InferPayload::Batch {
+                images,
+                count: rows.len(),
+            }
+        }
+        (None, None) => anyhow::bail!("missing key \"image\" (or batch key \"images\")"),
+    };
     let tier = match v.opt("tier") {
         None => EnergyTier::Normal,
         Some(t) => t
@@ -762,7 +869,7 @@ fn parse_infer_body(body: &[u8], input_len: usize) -> Result<(Vec<f32>, EnergyTi
             .parse()
             .map_err(|e: String| anyhow::anyhow!(e))?,
     };
-    Ok((image, tier))
+    Ok((payload, tier))
 }
 
 #[cfg(test)]
@@ -880,9 +987,12 @@ mod tests {
     #[test]
     fn parse_infer_body_validates() {
         assert!(parse_infer_body(b"{\"image\":[1,2,3]}", 3).is_ok());
-        let (img, tier) =
+        let (payload, tier) =
             parse_infer_body(b"{\"image\":[1,2,3],\"tier\":\"high\"}", 3).unwrap();
-        assert_eq!(img, vec![1.0, 2.0, 3.0]);
+        match payload {
+            InferPayload::Single(img) => assert_eq!(img, vec![1.0, 2.0, 3.0]),
+            InferPayload::Batch { .. } => panic!("expected a single-image payload"),
+        }
         assert_eq!(tier, EnergyTier::High);
         // defaults to normal
         let (_, tier) = parse_infer_body(b"{\"image\":[0,0,0]}", 3).unwrap();
@@ -893,5 +1003,26 @@ mod tests {
         assert!(parse_infer_body(b"not json", 3).is_err());
         assert!(parse_infer_body(b"{}", 3).is_err());
         assert!(parse_infer_body(b"{\"image\":[1e39,0,0]}", 3).is_err());
+    }
+
+    #[test]
+    fn parse_infer_body_batch_form() {
+        // well-formed batch: 2 images of width 3, flattened row-major
+        let (payload, tier) =
+            parse_infer_body(b"{\"images\":[[1,2,3],[4,5,6]],\"tier\":\"low\"}", 3).unwrap();
+        match payload {
+            InferPayload::Batch { images, count } => {
+                assert_eq!(count, 2);
+                assert_eq!(images, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+            }
+            InferPayload::Single(_) => panic!("expected a batch payload"),
+        }
+        assert_eq!(tier, EnergyTier::Low);
+        // ragged rows, empty batch, both keys, non-finite row, non-array row
+        assert!(parse_infer_body(b"{\"images\":[[1,2,3],[4,5]]}", 3).is_err());
+        assert!(parse_infer_body(b"{\"images\":[]}", 3).is_err());
+        assert!(parse_infer_body(b"{\"image\":[1,2,3],\"images\":[[1,2,3]]}", 3).is_err());
+        assert!(parse_infer_body(b"{\"images\":[[1e39,0,0]]}", 3).is_err());
+        assert!(parse_infer_body(b"{\"images\":[1,2,3]}", 3).is_err());
     }
 }

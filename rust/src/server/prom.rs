@@ -10,7 +10,7 @@
 use std::fmt::Write as _;
 
 use crate::coordinator::router::ServerStats;
-use crate::metrics::LATENCY_BUCKET_BOUNDS_US;
+use crate::metrics::{BATCH_SIZE_BUCKET_BOUNDS, LATENCY_BUCKET_BOUNDS_US};
 
 use super::{HttpStats, TierPlan};
 
@@ -64,6 +64,36 @@ pub fn render(http: &HttpStats, tiers: &[(&TierPlan, &ServerStats)], uptime_s: f
 
     header(
         &mut out,
+        "emtopt_images_total",
+        "counter",
+        "Images served by the inference engine, by energy tier (>= requests once multi-image bodies arrive).",
+    );
+    for (plan, stats) in tiers {
+        let _ = writeln!(
+            out,
+            "emtopt_images_total{{tier=\"{}\"}} {}",
+            plan.tier.name(),
+            stats.images.load(Relaxed)
+        );
+    }
+
+    header(
+        &mut out,
+        "emtopt_client_batch_requests_total",
+        "counter",
+        "Multi-image client requests served via the direct batch path, by tier.",
+    );
+    for (plan, stats) in tiers {
+        let _ = writeln!(
+            out,
+            "emtopt_client_batch_requests_total{{tier=\"{}\"}} {}",
+            plan.tier.name(),
+            stats.client_batch_requests.load(Relaxed)
+        );
+    }
+
+    header(
+        &mut out,
         "emtopt_batches_total",
         "counter",
         "Device batches dispatched, by energy tier.",
@@ -74,6 +104,42 @@ pub fn render(http: &HttpStats, tiers: &[(&TierPlan, &ServerStats)], uptime_s: f
             "emtopt_batches_total{{tier=\"{}\"}} {}",
             plan.tier.name(),
             stats.batches.load(Relaxed)
+        );
+    }
+
+    header(
+        &mut out,
+        "emtopt_dispatch_batch_size",
+        "histogram",
+        "Images per dispatched engine batch, by energy tier (batch-amortisation signal).",
+    );
+    for (plan, stats) in tiers {
+        let tier = plan.tier.name();
+        let counts = stats.dispatch_batch_sizes.snapshot();
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if i < BATCH_SIZE_BUCKET_BOUNDS.len() {
+                let _ = writeln!(
+                    out,
+                    "emtopt_dispatch_batch_size_bucket{{tier=\"{tier}\",le=\"{}\"}} {cum}",
+                    BATCH_SIZE_BUCKET_BOUNDS[i]
+                );
+            } else {
+                let _ = writeln!(
+                    out,
+                    "emtopt_dispatch_batch_size_bucket{{tier=\"{tier}\",le=\"+Inf\"}} {cum}"
+                );
+            }
+        }
+        let _ = writeln!(out, "emtopt_dispatch_batch_size_count{{tier=\"{tier}\"}} {cum}");
+        // _sum = total images; the images counter is written by the same
+        // worker immediately after the histogram record, so a scrape can
+        // be at most one batch out of step
+        let _ = writeln!(
+            out,
+            "emtopt_dispatch_batch_size_sum{{tier=\"{tier}\"}} {}",
+            stats.images.load(Relaxed)
         );
     }
 
@@ -269,7 +335,10 @@ mod tests {
         http.record(503);
         let stats = ServerStats::default();
         stats.requests.store(2, Ordering::Relaxed);
+        stats.images.store(5, Ordering::Relaxed);
+        stats.client_batch_requests.store(1, Ordering::Relaxed);
         stats.batches.store(1, Ordering::Relaxed);
+        stats.dispatch_batch_sizes.record(5);
         stats.latency.record_us(120);
         stats.latency.record_us(380);
         let plan = TierPlan {
@@ -283,7 +352,14 @@ mod tests {
         assert!(text.contains("emtopt_http_requests_total{code=\"200\"} 2"));
         assert!(text.contains("emtopt_http_requests_total{code=\"503\"} 1"));
         assert!(text.contains("emtopt_requests_total{tier=\"normal\"} 2"));
+        assert!(text.contains("emtopt_images_total{tier=\"normal\"} 5"));
+        assert!(text.contains("emtopt_client_batch_requests_total{tier=\"normal\"} 1"));
         assert!(text.contains("emtopt_batches_total{tier=\"normal\"} 1"));
+        // 5 images landed in the (4, 8] bucket; count/sum close the family
+        assert!(text.contains("emtopt_dispatch_batch_size_bucket{tier=\"normal\",le=\"4\"} 0"));
+        assert!(text.contains("emtopt_dispatch_batch_size_bucket{tier=\"normal\",le=\"8\"} 1"));
+        assert!(text.contains("emtopt_dispatch_batch_size_count{tier=\"normal\"} 1"));
+        assert!(text.contains("emtopt_dispatch_batch_size_sum{tier=\"normal\"} 5"));
         assert!(text.contains("emtopt_tier_rho{tier=\"normal\"} 4"));
         assert!(text.contains("emtopt_request_latency_us_count{tier=\"normal\"} 2"));
         assert!(text.contains("le=\"+Inf\"} 2"));

@@ -67,6 +67,12 @@ fn get(conn: &mut HttpConn<TcpStream>, path: &str) -> (u16, Vec<u8>) {
     conn.read_response(1 << 20).unwrap()
 }
 
+/// Render one pixel row as a JSON array literal.
+fn image_json(row: &[f32]) -> String {
+    let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+    format!("[{}]", cells.join(","))
+}
+
 #[test]
 fn happy_path_infer_classify_tiers() {
     let handle = boot(NativeServerConfig {
@@ -77,13 +83,14 @@ fn happy_path_infer_classify_tiers() {
     });
     let mut conn = connect(&handle);
 
-    // healthz reports the deployed shape
+    // healthz reports the deployed shape and the batch cap
     let (status, body) = get(&mut conn, "/healthz");
     assert_eq!(status, 200);
     let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
     assert_eq!(v.get("status").unwrap().as_str().unwrap(), "ok");
     assert_eq!(v.get("input_len").unwrap().as_usize().unwrap(), 8);
     assert_eq!(v.get("num_classes").unwrap().as_usize().unwrap(), 3);
+    assert_eq!(v.get("max_batch").unwrap().as_usize().unwrap(), 64);
 
     // infer: logits + echo of the tier plan
     let img = "[0.1,0.2,0.3,0.4,0.5,0.6,0.7,0.8]";
@@ -153,6 +160,152 @@ fn bad_requests_get_4xx() {
     let (status, _) = get(&mut conn, "/v1/infer");
     assert_eq!(status, 405);
 
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn batch_body_bit_identical_to_sequential_singles() {
+    // Acceptance contract of the batch path: the same model + seed behind
+    // two servers with different per-lane worker counts; per-image logits
+    // of one multi-image body must be bit-identical to the same images as
+    // sequential single requests, on either server (content-derived noise
+    // seeds make results independent of batch packing and thread count).
+    let mk = |workers: usize| {
+        boot(NativeServerConfig {
+            batch: 4,
+            workers,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        })
+    };
+    let a = mk(1);
+    let b = mk(3);
+    let n = 5usize;
+    let rows: Vec<Vec<f32>> = (0..n)
+        .map(|i| {
+            let mut r = Rng::stream(4242, i as u64);
+            (0..8).map(|_| r.next_f32()).collect()
+        })
+        .collect();
+    let rows_json: Vec<String> = rows.iter().map(|r| image_json(r)).collect();
+    let body = format!("{{\"images\":[{}],\"tier\":\"high\"}}", rows_json.join(","));
+
+    let batch_logits = |handle: &ServerHandle| -> Vec<Vec<f32>> {
+        let mut conn = connect(handle);
+        let (status, v) = post(&mut conn, "/v1/infer", &body);
+        assert_eq!(status, 200);
+        assert_eq!(v.get("count").unwrap().as_usize().unwrap(), n);
+        assert_eq!(v.get("tier").unwrap().as_str().unwrap(), "high");
+        v.get("logits")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|row| row.as_f32s().unwrap())
+            .collect()
+    };
+    let la = batch_logits(&a);
+    let lb = batch_logits(&b);
+    assert_eq!(la.len(), n);
+    assert_eq!(la, lb, "batch logits must not depend on worker count");
+
+    // sequential singles (server b) reproduce every batch row bit-exactly
+    let mut conn = connect(&b);
+    for (i, rj) in rows_json.iter().enumerate() {
+        let (status, v) = post(
+            &mut conn,
+            "/v1/infer",
+            &format!("{{\"image\":{rj},\"tier\":\"high\"}}"),
+        );
+        assert_eq!(status, 200);
+        assert_eq!(
+            v.get("logits").unwrap().as_f32s().unwrap(),
+            la[i],
+            "image {i}: single-request logits diverged from the batch row"
+        );
+    }
+    a.shutdown().unwrap();
+    b.shutdown().unwrap();
+}
+
+#[test]
+fn batch_parse_and_admission_errors() {
+    let dev = DeviceConfig::default();
+    let m = model(&[(8, 3)], 3, &dev);
+    let handle = serve_http(
+        m,
+        HttpServerConfig {
+            addr: "127.0.0.1:0".into(),
+            engine: NativeServerConfig {
+                batch: 4,
+                workers: 1,
+                max_wait: Duration::from_millis(1),
+                max_client_batch: 2,
+                device: dev,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut conn = connect(&handle);
+    let img = "[0.1,0.2,0.3,0.4,0.5,0.6,0.7,0.8]";
+
+    // ragged rows
+    let (status, v) = post(
+        &mut conn,
+        "/v1/infer",
+        &format!("{{\"images\":[{img},[1,2]]}}"),
+    );
+    assert_eq!(status, 400);
+    assert!(v.get("error").is_ok());
+    // empty batch
+    let (status, _) = post(&mut conn, "/v1/infer", "{\"images\":[]}");
+    assert_eq!(status, 400);
+    // both body forms at once
+    let (status, _) = post(
+        &mut conn,
+        "/v1/infer",
+        &format!("{{\"image\":{img},\"images\":[{img}]}}"),
+    );
+    assert_eq!(status, 400);
+    // non-finite pixel in a row
+    let (status, _) = post(&mut conn, "/v1/infer", "{\"images\":[[1e39,0,0,0,0,0,0,0]]}");
+    assert_eq!(status, 400);
+    // 3 images over the max_client_batch=2 cap -> typed 413
+    let (status, v) = post(
+        &mut conn,
+        "/v1/infer",
+        &format!("{{\"images\":[{img},{img},{img}]}}"),
+    );
+    assert_eq!(status, 413);
+    assert!(v.get("error").unwrap().as_str().unwrap().contains("limit"));
+
+    // within the cap: classify returns per-image classes
+    let (status, v) = post(
+        &mut conn,
+        "/v1/classify",
+        &format!("{{\"images\":[{img},{img}]}}"),
+    );
+    assert_eq!(status, 200);
+    let classes = v.get("classes").unwrap().as_arr().unwrap();
+    assert_eq!(classes.len(), 2);
+    // identical pixels + content-derived seeds -> identical predictions
+    assert_eq!(
+        classes[0].as_usize().unwrap(),
+        classes[1].as_usize().unwrap()
+    );
+
+    // engine accounting: one multi-image request, two images, on /metrics
+    let (status, body) = get(&mut conn, "/metrics");
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).unwrap();
+    assert!(text
+        .lines()
+        .any(|l| l == "emtopt_client_batch_requests_total{tier=\"normal\"} 1"));
+    assert!(text
+        .lines()
+        .any(|l| l == "emtopt_images_total{tier=\"normal\"} 2"));
     handle.shutdown().unwrap();
 }
 
