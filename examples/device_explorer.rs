@@ -63,7 +63,7 @@ fn main() -> emtopt::Result<()> {
             let mut sum = vec![0.0f64; n];
             let mut sq = vec![0.0f64; n];
             for _ in 0..trials {
-                arr.mac(&x, &mut out, mode, 5, 1.0, rng, &mut counters);
+                arr.mac(&x, &mut out, arr.read_plan(mode), 5, 1.0, rng, &mut counters);
                 for c in 0..n {
                     sum[c] += out[c] as f64;
                     sq[c] += (out[c] as f64).powi(2);

@@ -28,7 +28,7 @@ fn main() -> emtopt::Result<()> {
     arr.mac(
         &xin,
         &mut out,
-        ReadMode::Original,
+        arr.read_plan(ReadMode::Original),
         cfg.act_bits,
         1.0,
         &mut rng,
@@ -60,7 +60,8 @@ fn main() -> emtopt::Result<()> {
         ));
     }
     let mut batch_counters = ReadCounters::default();
-    let logits = model.forward_batch(&xs, ReadMode::Original, &cfg, 1, &mut batch_counters);
+    let plan = model.uniform_plan(ReadMode::Original);
+    let logits = model.forward_batch(&xs, &plan, &cfg, 1, &mut batch_counters);
     let nc = model.d_out();
     let correct = (0..batch)
         .filter(|&i| {

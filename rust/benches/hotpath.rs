@@ -35,7 +35,7 @@ fn main() -> emtopt::Result<()> {
         arr.mac_scratch(
             &x,
             &mut out,
-            ReadMode::Original,
+            arr.read_plan(ReadMode::Original),
             5,
             1.0,
             &mut rng,
@@ -50,7 +50,7 @@ fn main() -> emtopt::Result<()> {
         arr.mac_scratch(
             &x,
             &mut out,
-            ReadMode::Decomposed,
+            arr.read_plan(ReadMode::Decomposed),
             5,
             1.0,
             &mut rng,
@@ -84,20 +84,25 @@ fn main() -> emtopt::Result<()> {
         .map(|((lw, lb), &(i, o))| (lw.as_slice(), lb.as_slice(), i, o))
         .collect();
     let model = NoisyModel::new(&specs, &cfg)?;
+    // the serving plan the engine sections run under (uniform analytic;
+    // its source is recorded in BENCH_hotpath.json so perf points are
+    // attributable to the plan that produced them)
+    let plan = model.uniform_plan(ReadMode::Original);
+    let plan_source = plan.source.name();
     let batch = 32usize;
     let xs: Vec<f32> = (0..batch * model.d_in()).map(|_| rng.next_f32()).collect();
     let threads = rayon::current_num_threads();
 
     let mut c_seq = ReadCounters::default();
     let r = report("forward_batch_seq  mlp(256-256-128-10) b=32", 2, 10, || {
-        let _ = model.forward_batch_seq(&xs, ReadMode::Original, &cfg, 7, &mut c_seq);
+        let _ = model.forward_batch_seq(&xs, &plan, &cfg, 7, &mut c_seq);
     });
     let seq_sps = r.throughput(batch as f64);
     println!("  -> {seq_sps:.0} samples/s (single-sample loop)");
 
     let mut c_par = ReadCounters::default();
     let r = report("forward_batch      mlp(256-256-128-10) b=32", 2, 10, || {
-        let _ = model.forward_batch(&xs, ReadMode::Original, &cfg, 7, &mut c_par);
+        let _ = model.forward_batch(&xs, &plan, &cfg, 7, &mut c_par);
     });
     let par_sps = r.throughput(batch as f64);
     let speedup = par_sps / seq_sps;
@@ -106,8 +111,8 @@ fn main() -> emtopt::Result<()> {
     // parity spot-check: the parallel engine must be bit-identical
     let mut ca = ReadCounters::default();
     let mut cb = ReadCounters::default();
-    let ya = model.forward_batch_seq(&xs, ReadMode::Original, &cfg, 7, &mut ca);
-    let yb = model.forward_batch(&xs, ReadMode::Original, &cfg, 7, &mut cb);
+    let ya = model.forward_batch_seq(&xs, &plan, &cfg, 7, &mut ca);
+    let yb = model.forward_batch(&xs, &plan, &cfg, 7, &mut cb);
     assert_eq!(ya, yb, "batched engine parity violated");
     assert_eq!(ca, cb, "batched engine counter parity violated");
     println!("  parity: logits + counters bit-identical across engines");
@@ -158,6 +163,7 @@ fn main() -> emtopt::Result<()> {
         .unwrap_or(0);
     let json = format!(
         "{{\n  \"bench\": \"hotpath\",\n  \"unix_time\": {unix_time},\n  \
+         \"plan_source\": \"{plan_source}\",\n  \
          \"rayon_threads\": {threads},\n  \
          \"mac_sim_per_s_original\": {mac_original:.1},\n  \
          \"mac_sim_per_s_decomposed\": {mac_decomposed:.1},\n  \

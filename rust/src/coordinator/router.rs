@@ -55,7 +55,7 @@ use std::time::{Duration, Instant};
 
 use crate::crossbar::ReadCounters;
 use crate::device::DeviceConfig;
-use crate::energy::ReadMode;
+use crate::energy::{EnergyPlan, ReadMode};
 use crate::inference::NoisyModel;
 use crate::metrics::{BatchSizeHistogram, LatencyHistogram};
 use crate::rng::hash2;
@@ -110,6 +110,11 @@ fn atomic_add_f64(cell: &AtomicU64, v: f64) {
 /// Server statistics (atomic, read from any thread).
 #[derive(Debug, Default)]
 pub struct ServerStats {
+    /// Client requests admitted into the bounded queue (incremented at
+    /// submit time; `requests` is incremented at reply time, so
+    /// `submitted - requests` is the live queue depth, see
+    /// [`ServerStats::queued_requests`]).
+    pub submitted: AtomicU64,
     /// Client requests replied to (a multi-image request counts once).
     pub requests: AtomicU64,
     /// Images served (`>= requests` once multi-image bodies arrive).
@@ -181,6 +186,42 @@ impl ServerStats {
         }
     }
 
+    /// Requests currently waiting or in flight (admitted but not yet
+    /// replied).  A point-in-time gauge — submit and reply race by
+    /// design, so transient off-by-a-few reads are expected.
+    pub fn queued_requests(&self) -> u64 {
+        self.submitted
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.requests.load(Ordering::Relaxed))
+    }
+
+    /// Honest back-off hint for a shed request (`Retry-After` on `503`):
+    /// current queue depth x amortised per-request execution time,
+    /// rounded up to whole seconds and clamped to [1, 30].  `infer_us`
+    /// accumulates per batch, so dividing by served requests amortises
+    /// batching for free.
+    pub fn retry_after_s(&self) -> u64 {
+        let served = self.requests.load(Ordering::Relaxed);
+        let per_request_us = if served == 0 {
+            10_000.0 // no history yet: assume 10 ms/request
+        } else {
+            self.infer_us.load(Ordering::Relaxed) as f64 / served as f64
+        };
+        let wait_s = self.queued_requests() as f64 * per_request_us / 1e6;
+        (wait_s.ceil() as u64).clamp(1, 30)
+    }
+
+    /// Mean analog+peripheral energy per image served, microjoules —
+    /// the observed side of the planned-vs-observed `/metrics` pair.
+    pub fn mean_energy_uj_per_image(&self) -> f64 {
+        let n = self.images.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.energy().total_pj() * 1e-6 / n as f64
+        }
+    }
+
     /// Mean analog+peripheral energy per served request, picojoules.
     pub fn mean_energy_pj_per_request(&self) -> f64 {
         let n = self.requests.load(Ordering::Relaxed);
@@ -237,6 +278,9 @@ impl std::error::Error for BatchTooLarge {}
 #[derive(Clone)]
 pub struct InferenceClient {
     tx: mpsc::SyncSender<Request>,
+    /// Lane stats (shared with the engine): the client stamps
+    /// `submitted` on successful admission so queue depth is observable.
+    stats: Arc<ServerStats>,
     pub num_classes: usize,
     /// Expected input length (d_in of the deployed model).
     pub input_len: usize,
@@ -304,6 +348,7 @@ impl InferenceClient {
         self.tx
             .send(req)
             .map_err(|_| anyhow::anyhow!("server stopped"))?;
+        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
         rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
     }
 
@@ -317,7 +362,13 @@ impl InferenceClient {
             Err(TrySendError::Full(_)) => return Err(anyhow::Error::new(Overloaded)),
             Err(TrySendError::Disconnected(_)) => anyhow::bail!("server stopped"),
         }
+        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
         rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
+    }
+
+    /// Lane stats handle (queue depth, energy, latency accessors).
+    pub fn stats(&self) -> &Arc<ServerStats> {
+        &self.stats
     }
 
     /// Classify one image (len `input_len`); blocks until the logits
@@ -388,7 +439,11 @@ pub struct NativeServerConfig {
     /// can pin: the request queue holds at most
     /// `queue_depth * max_client_batch` images.
     pub max_client_batch: usize,
-    pub mode: ReadMode,
+    /// Per-layer energy allocation this lane reads with.  `None` falls
+    /// back to the deployed model's uniform plan (each array at its
+    /// programming-time rho) in `Original` mode; `Some` is validated
+    /// against the model at [`serve_native`] start.
+    pub plan: Option<EnergyPlan>,
     pub device: DeviceConfig,
     /// Lane RNG seed; image `x` draws noise from
     /// `Rng::new(image_seed(seed, x))` (see [`image_seed`]).
@@ -403,7 +458,7 @@ impl Default for NativeServerConfig {
             max_wait: Duration::from_millis(2),
             queue_depth: 256,
             max_client_batch: 64,
-            mode: ReadMode::Original,
+            plan: None,
             device: DeviceConfig::default(),
             seed: 1,
         }
@@ -421,7 +476,9 @@ struct Worker {
     model: Arc<NoisyModel>,
     stats: Arc<ServerStats>,
     device: DeviceConfig,
-    mode: ReadMode,
+    /// The lane's resolved per-layer energy plan (validated, one entry
+    /// per model layer).
+    plan: EnergyPlan,
     batch: usize,
     seed: u64,
 }
@@ -449,7 +506,7 @@ impl Worker {
         let mut counters = ReadCounters::default();
         let logits =
             self.model
-                .forward_batch_seeds(&x, self.mode, &self.device, &seeds, &mut counters);
+                .forward_batch_seeds(&x, &self.plan, &self.device, &seeds, &mut counters);
         let infer_us = t0.elapsed().as_micros() as u64;
 
         self.stats
@@ -495,6 +552,11 @@ pub fn serve_native(
     anyhow::ensure!(cfg.workers > 0, "need at least one worker");
     anyhow::ensure!(cfg.queue_depth > 0, "queue_depth must be positive");
     anyhow::ensure!(cfg.max_client_batch > 0, "max_client_batch must be positive");
+    let plan = match cfg.plan.clone() {
+        Some(p) => p,
+        None => model.uniform_plan(ReadMode::Original),
+    };
+    plan.validate(model.layers().len())?;
     let input_len = model.d_in();
     let num_classes = model.d_out();
 
@@ -562,7 +624,7 @@ pub fn serve_native(
             model: model.clone(),
             stats: stats.clone(),
             device: cfg.device.clone(),
-            mode: cfg.mode,
+            plan: plan.clone(),
             batch: cfg.batch,
             seed: cfg.seed,
         };
@@ -582,6 +644,7 @@ pub fn serve_native(
     Ok((
         InferenceClient {
             tx,
+            stats: stats.clone(),
             num_classes,
             input_len,
             max_client_batch: cfg.max_client_batch,
@@ -747,6 +810,7 @@ pub fn serve(
     Ok((
         InferenceClient {
             tx,
+            stats: stats.clone(),
             num_classes,
             input_len: IMG_LEN,
             // the AOT executable shape is fixed: one request can never

@@ -20,6 +20,40 @@ use crate::Result;
 const MAGIC: &[u8; 4] = b"EMTM";
 const VERSION: u32 = 1;
 
+/// Validate a model's trained rho vector against its parameters.
+///
+/// Serving trusts `rho_raw` end-to-end (it shapes every tier's
+/// [`EnergyPlan`](crate::energy::EnergyPlan)), so corruption must be
+/// caught at the store boundary, not three layers up: every raw entry
+/// must be finite, its softplus-decoded rho finite and positive, and the
+/// vector must carry exactly one entry per weight tensor (ndim >= 2 —
+/// biases are digital and carry no rho).  Enforced by both [`save`]
+/// (reject before a bad vector reaches disk) and [`load`] (reject
+/// hand-edited or truncated files).
+pub fn validate(model: &TrainedModel) -> Result<()> {
+    for (i, &raw) in model.rho_raw.iter().enumerate() {
+        anyhow::ensure!(raw.is_finite(), "rho_raw[{i}] = {raw} is not finite");
+        let rho = crate::runtime::rho_of_raw(raw);
+        anyhow::ensure!(
+            rho.is_finite() && rho > 0.0,
+            "rho_raw[{i}] = {raw} decodes to non-positive rho {rho}"
+        );
+    }
+    let weight_tensors = model
+        .params
+        .iter()
+        .filter(|(shape, _)| shape.len() >= 2)
+        .count();
+    if weight_tensors > 0 {
+        anyhow::ensure!(
+            model.rho_raw.len() == weight_tensors,
+            "rho_raw has {} entries but the model has {weight_tensors} weight tensors",
+            model.rho_raw.len()
+        );
+    }
+    Ok(())
+}
+
 fn sol_tag(s: Solution) -> u8 {
     match s {
         Solution::Traditional => 0,
@@ -69,8 +103,10 @@ fn r_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
         .collect())
 }
 
-/// Save a trained model.
+/// Save a trained model (validating its rho vector first — see
+/// [`validate`]).
 pub fn save(model: &TrainedModel, path: &Path) -> Result<()> {
+    validate(model)?;
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
@@ -124,13 +160,15 @@ pub fn load(path: &Path) -> Result<TrainedModel> {
         params.push((shape, data));
     }
     let loss_trace = r_f32s(&mut r)?;
-    Ok(TrainedModel {
+    let model = TrainedModel {
         model_key,
         solution,
         params,
         rho_raw,
         loss_trace,
-    })
+    };
+    validate(&model)?;
+    Ok(model)
 }
 
 /// Cache path of a (model, solution, intensity, schedule) combination.
@@ -186,6 +224,8 @@ mod tests {
             params: vec![
                 (vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
                 (vec![3], vec![0.1, 0.2, 0.3]),
+                (vec![3, 4], vec![0.5; 12]),
+                (vec![4], vec![0.0; 4]),
             ],
             rho_raw: vec![4.0, 3.0],
             loss_trace: vec![2.3, 1.1, 0.6],
@@ -214,6 +254,54 @@ mod tests {
         let path = dir.join("bad.emtm");
         std::fs::write(&path, b"not a model").unwrap();
         assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_rejects_invalid_rho_raw() {
+        let dir = std::env::temp_dir().join("emtopt_store_validate");
+        let path = dir.join("bad.emtm");
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut m = sample();
+            m.rho_raw[1] = bad;
+            let err = save(&m, &path).unwrap_err();
+            assert!(err.to_string().contains("not finite"), "{err}");
+        }
+        // layer-count mismatch: 2 weight tensors need exactly 2 entries
+        let mut m = sample();
+        m.rho_raw = vec![4.0];
+        assert!(save(&m, &path).is_err());
+        let mut m = sample();
+        m.rho_raw = vec![4.0, 3.0, 2.0];
+        assert!(save(&m, &path).is_err());
+        assert!(!path.exists(), "a rejected save must not touch disk");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_corrupted_rho_raw() {
+        // Hand-corrupt a valid file: rho_raw starts right after
+        // magic(4) + version(4) + key_len(4) + key + solution_tag(1) +
+        // vec_len(4); flip the first entry's bytes to NaN.
+        let dir = std::env::temp_dir().join("emtopt_store_validate_load");
+        let path = dir.join("m.emtm");
+        let m = sample();
+        save(&m, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let off = 4 + 4 + 4 + m.model_key.len() + 1 + 4;
+        bytes[off..off + 4].copy_from_slice(&f32::NAN.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(err.to_string().contains("not finite"), "{err}");
+        // truncate the rho vector (drop the last entry's bytes and patch
+        // the length prefix): layer-count mismatch at load time
+        save(&m, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[off - 4..off].copy_from_slice(&1u32.to_le_bytes());
+        bytes.drain(off + 4..off + 8);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(err.to_string().contains("weight tensors"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -25,8 +25,8 @@ pub mod tile;
 
 pub use tile::Tile;
 
-use crate::device::{self, DeviceConfig};
-use crate::energy::{ReadMode, E0_PJ, E_ADC_PJ, E_DAC_PJ};
+use crate::device::DeviceConfig;
+use crate::energy::{LayerPlan, ReadMode, E0_PJ, E_ADC_PJ, E_DAC_PJ};
 use crate::quant;
 use crate::rng::Rng;
 
@@ -78,7 +78,9 @@ pub struct CrossbarArray {
     tiles_x: usize, // tiles along columns
     w_scale: f32,
     weight_bits: u32,
-    /// per-array energy coefficient (paper: tunable per layer)
+    /// Programming-time default energy coefficient — the fallback
+    /// [`read_plan`](CrossbarArray::read_plan) rho when no serving
+    /// [`EnergyPlan`](crate::energy::EnergyPlan) overrides it per read.
     pub rho: f32,
 }
 
@@ -133,9 +135,19 @@ impl CrossbarArray {
         self.rows * self.cols
     }
 
+    /// The array's default read plan: its programming-time rho (the
+    /// layer's fallback when no [`EnergyPlan`](crate::energy::EnergyPlan)
+    /// overrides it) at the given mode.
+    pub fn read_plan(&self, mode: ReadMode) -> LayerPlan {
+        LayerPlan::new(self.rho, mode)
+    }
+
     /// One full-array MAC: `y[n] = sum_k x[k] * w~[k, n]` with fresh RTN
     /// samples per cell read (eq. 11).  `x` are raw activations; they are
-    /// DAC-quantised to `act_bits` internally.
+    /// DAC-quantised to `act_bits` internally.  The read's energy
+    /// coefficient and mode come from `plan` — the layer's entry of the
+    /// serving [`EnergyPlan`](crate::energy::EnergyPlan), or
+    /// [`CrossbarArray::read_plan`] for the programmed default.
     ///
     /// In `Original` mode this is a single analog read; in `Decomposed`
     /// mode (technique C) it is `act_bits` bit-plane reads with fresh
@@ -150,14 +162,14 @@ impl CrossbarArray {
         &self,
         x: &[f32],
         out: &mut [f32],
-        mode: ReadMode,
+        plan: LayerPlan,
         act_bits: u32,
         intensity: f32,
         rng: &mut Rng,
         counters: &mut ReadCounters,
     ) {
         let mut scratch = MacScratch::default();
-        self.mac_scratch(x, out, mode, act_bits, intensity, rng, counters, &mut scratch);
+        self.mac_scratch(x, out, plan, act_bits, intensity, rng, counters, &mut scratch);
     }
 
     /// Allocation-free MAC: like [`CrossbarArray::mac`] but reusing a
@@ -167,7 +179,7 @@ impl CrossbarArray {
         &self,
         x: &[f32],
         out: &mut [f32],
-        mode: ReadMode,
+        plan: LayerPlan,
         act_bits: u32,
         intensity: f32,
         rng: &mut Rng,
@@ -178,8 +190,9 @@ impl CrossbarArray {
         assert_eq!(out.len(), self.cols);
         out.fill(0.0);
         let act_scale = quant::quant_act_into(x, act_bits, &mut scratch.levels);
-        let sigma_norm = device::sigma_rel(self.rho, intensity); // vs full-scale
-        let rho = self.rho;
+        let sigma_norm = plan.sigma_rel(intensity); // vs full-scale
+        let rho = plan.rho;
+        let mode = plan.mode;
         let w_scale = self.w_scale;
         let tiles_x = self.tiles_x;
 
@@ -318,7 +331,8 @@ mod tests {
         let mut out = vec![0.0f32; n];
         let mut counters = ReadCounters::default();
         for _ in 0..trials {
-            arr.mac(&x, &mut out, ReadMode::Original, 5, 1.0, &mut rng, &mut counters);
+            let plan = arr.read_plan(ReadMode::Original);
+            arr.mac(&x, &mut out, plan, 5, 1.0, &mut rng, &mut counters);
             for (m, &o) in mean.iter_mut().zip(out.iter()) {
                 *m += o as f64 / trials as f64;
             }
@@ -349,7 +363,7 @@ mod tests {
             let mut sum = vec![0.0f64; n];
             let mut sq = vec![0.0f64; n];
             for _ in 0..trials {
-                arr.mac(&x, &mut out, mode, 5, 1.0, rng, &mut counters);
+                arr.mac(&x, &mut out, arr.read_plan(mode), 5, 1.0, rng, &mut counters);
                 for c in 0..n {
                     sum[c] += out[c] as f64;
                     sq[c] += (out[c] as f64).powi(2);
@@ -382,9 +396,9 @@ mod tests {
 
         let arr = CrossbarArray::program(&w, k, n, &cfg());
         let mut c1 = ReadCounters::default();
-        arr.mac(&x, &mut out, ReadMode::Original, 5, 1.0, &mut rng, &mut c1);
+        arr.mac(&x, &mut out, arr.read_plan(ReadMode::Original), 5, 1.0, &mut rng, &mut c1);
         let mut c2 = ReadCounters::default();
-        arr.mac(&x, &mut out, ReadMode::Decomposed, 5, 1.0, &mut rng, &mut c2);
+        arr.mac(&x, &mut out, arr.read_plan(ReadMode::Decomposed), 5, 1.0, &mut rng, &mut c2);
         assert!(c2.cell_pj < c1.cell_pj);
         // ... at the cost of more cycles and peripheral energy
         assert!(c2.cycles > c1.cycles);
@@ -408,8 +422,9 @@ mod tests {
             let (mut o1, mut o2) = (vec![0.0f32; n], vec![0.0f32; n]);
             let mut c1 = ReadCounters::default();
             let mut c2 = ReadCounters::default();
-            arr.mac(&x, &mut o1, mode, 5, 1.0, &mut r1, &mut c1);
-            arr.mac_scratch(&x, &mut o2, mode, 5, 1.0, &mut r2, &mut c2, &mut scratch);
+            arr.mac(&x, &mut o1, arr.read_plan(mode), 5, 1.0, &mut r1, &mut c1);
+            let plan = arr.read_plan(mode);
+            arr.mac_scratch(&x, &mut o2, plan, 5, 1.0, &mut r2, &mut c2, &mut scratch);
             assert_eq!(o1, o2);
             assert_eq!(c1, c2);
         }
@@ -425,8 +440,8 @@ mod tests {
         let mut out = vec![0.0f32; n];
         let mut a = ReadCounters::default();
         let mut b = ReadCounters::default();
-        arr.mac(&x, &mut out, ReadMode::Original, 5, 1.0, &mut rng, &mut a);
-        arr.mac(&x, &mut out, ReadMode::Original, 5, 1.0, &mut rng, &mut b);
+        arr.mac(&x, &mut out, arr.read_plan(ReadMode::Original), 5, 1.0, &mut rng, &mut a);
+        arr.mac(&x, &mut out, arr.read_plan(ReadMode::Original), 5, 1.0, &mut rng, &mut b);
         let mut merged = a;
         merged.merge(&b);
         assert_eq!(merged.cycles, 2);
@@ -461,7 +476,8 @@ mod tests {
             let mut err = 0.0f64;
             let mut counters = ReadCounters::default();
             for _ in 0..trials {
-                arr.mac(&x, &mut out, ReadMode::Original, 5, 1.0, rng, &mut counters);
+                let plan = arr.read_plan(ReadMode::Original);
+                arr.mac(&x, &mut out, plan, 5, 1.0, rng, &mut counters);
                 err += out
                     .iter()
                     .zip(clean.iter())

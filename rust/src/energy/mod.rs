@@ -43,6 +43,142 @@ impl ReadMode {
     }
 }
 
+/// Where a serving [`EnergyPlan`] came from: solved analytically from the
+/// layer geometry, or rescaled from a trained per-layer rho vector
+/// (technique B, `store::load`).  Advertised end-to-end: `/healthz`,
+/// `/v1/infer` responses, `/metrics`, and the `BENCH_*.json` records all
+/// carry the source so a serving measurement is attributable to the plan
+/// that produced it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanSource {
+    /// Uniform or water-filled rho from the analytical energy model.
+    Analytic,
+    /// Trained per-layer rho vector, rescaled to the serving budget.
+    Trained,
+}
+
+impl PlanSource {
+    /// Wire/report name (serving API responses, Prometheus labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanSource::Analytic => "analytic",
+            PlanSource::Trained => "trained",
+        }
+    }
+}
+
+/// Read plan of one layer: the energy coefficient its cells are read at
+/// and the read mode of the access.  This is what the device layer
+/// actually consumes — `CrossbarArray::mac*` takes the layer's entry, so
+/// per-layer energy shaping reaches the noise draw, not just the report.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerPlan {
+    /// Per-read energy coefficient (eq. 7/8: sigma ∝ 1/sqrt(rho)).
+    pub rho: f32,
+    pub mode: ReadMode,
+}
+
+impl LayerPlan {
+    pub fn new(rho: f32, mode: ReadMode) -> Self {
+        LayerPlan { rho, mode }
+    }
+
+    /// Relative fluctuation sigma this layer sees (fraction of full
+    /// scale) at a given intensity factor.
+    pub fn sigma_rel(&self, intensity: f32) -> f32 {
+        device::sigma_rel(self.rho, intensity)
+    }
+}
+
+/// Per-layer energy allocation of a whole model: one [`LayerPlan`] per
+/// layer plus the provenance of the vector.  The forward paths
+/// (`NoisyModel::forward_*`) consume this instead of a global
+/// `(ReadMode, rho)` scalar pair, so a noise-sensitive layer can buy a
+/// larger rho than its neighbours (the paper's technique B at serving
+/// time).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EnergyPlan {
+    layers: Vec<LayerPlan>,
+    pub source: PlanSource,
+}
+
+impl EnergyPlan {
+    /// Build from explicit per-layer entries.
+    pub fn new(layers: Vec<LayerPlan>, source: PlanSource) -> Self {
+        EnergyPlan { layers, source }
+    }
+
+    /// The classic global knob: every layer at the same (rho, mode).
+    pub fn uniform(n_layers: usize, rho: f32, mode: ReadMode) -> Self {
+        EnergyPlan {
+            layers: vec![LayerPlan::new(rho, mode); n_layers],
+            source: PlanSource::Analytic,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// The plan entry of layer `i` (panics out of range, like indexing).
+    pub fn layer(&self, i: usize) -> LayerPlan {
+        self.layers[i]
+    }
+
+    pub fn layers(&self) -> &[LayerPlan] {
+        &self.layers
+    }
+
+    /// Per-layer rho values (reporting order == layer order).
+    pub fn rhos(&self) -> Vec<f32> {
+        self.layers.iter().map(|l| l.rho).collect()
+    }
+
+    pub fn mean_rho(&self) -> f32 {
+        if self.layers.is_empty() {
+            return 0.0;
+        }
+        self.layers.iter().map(|l| l.rho).sum::<f32>() / self.layers.len() as f32
+    }
+
+    /// Read mode of the first layer — tier plans keep one mode for the
+    /// whole stack, so this is the lane's mode for reporting.
+    pub fn lead_mode(&self) -> ReadMode {
+        self.layers.first().map(|l| l.mode).unwrap_or(ReadMode::Original)
+    }
+
+    /// Worst-case per-layer relative fluctuation sigma at an intensity
+    /// factor — the accuracy-risk summary of a plan.
+    pub fn max_sigma_rel(&self, intensity: f32) -> f32 {
+        self.layers
+            .iter()
+            .map(|l| l.sigma_rel(intensity))
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Check the plan is usable against a deployed model: one entry per
+    /// layer, every rho finite and positive.
+    pub fn validate(&self, n_layers: usize) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.layers.len() == n_layers,
+            "energy plan has {} layers, model has {n_layers}",
+            self.layers.len()
+        );
+        for (i, l) in self.layers.iter().enumerate() {
+            anyhow::ensure!(
+                l.rho.is_finite() && l.rho > 0.0,
+                "layer {i}: rho {} must be finite and positive",
+                l.rho
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Workload statistics of a trained model (measured or assumed).
 #[derive(Clone, Copy, Debug)]
 pub struct ReadStats {
@@ -136,7 +272,10 @@ impl EnergyModel {
 
     /// Invert `model_uj_uniform` for rho: find the global rho whose
     /// energy equals `budget_uj` (cell energy is linear in rho, peripheral
-    /// constant, so this is a closed form).
+    /// constant, so this is a closed form).  The f64-exact scalar sibling
+    /// of [`EnergyModel::plan_for_budget`] — plans store per-layer rho as
+    /// `f32` (the device's precision), so callers that only need the
+    /// uniform knob keep the full-precision closed form here.
     pub fn rho_for_budget(
         &self,
         model: &ModelDesc,
@@ -158,6 +297,137 @@ impl EnergyModel {
             return None; // budget below the peripheral floor
         }
         Some(remaining / cell_at_rho1)
+    }
+
+    /// Per-layer expected energy of a plan, picojoules.
+    pub fn plan_layer_pj(&self, model: &ModelDesc, plan: &EnergyPlan) -> Vec<f64> {
+        assert_eq!(model.layers.len(), plan.len(), "plan entry per layer");
+        model
+            .layers
+            .iter()
+            .zip(plan.layers().iter())
+            .map(|(meta, l)| self.layer_pj(meta, l.rho as f64, l.mode))
+            .collect()
+    }
+
+    /// Whole-model energy of a plan per inference, microjoules.
+    pub fn plan_uj(&self, model: &ModelDesc, plan: &EnergyPlan) -> f64 {
+        self.plan_layer_pj(model, plan).iter().sum::<f64>() * 1e-6
+    }
+
+    /// Budget → plan solver (closed-form water-filling).
+    ///
+    /// Splits `budget_uj` across layers so the whole-model energy hits
+    /// the budget exactly.  With per-layer noise-sensitivity weights
+    /// `g_l` it minimises `sum_l g_l * sigma_l^2` subject to the budget:
+    /// sigma^2 ∝ 1/rho and cell energy is linear in rho, so the
+    /// Lagrangian optimum is `rho_l ∝ sqrt(g_l / c_l)` with `c_l` the
+    /// layer's cell energy at rho == 1 — a closed form, no iteration.
+    /// Without sensitivity stats every layer gets the same rho (the
+    /// uniform fallback, identical to [`EnergyModel::rho_for_budget`]).
+    ///
+    /// Returns `None` when the budget does not clear the mode's
+    /// peripheral floor (DAC/ADC energy is rho-independent; no rho
+    /// allocation can hit such a budget).
+    pub fn plan_for_budget(
+        &self,
+        model: &ModelDesc,
+        budget_uj: f64,
+        mode: ReadMode,
+        sensitivity: Option<&[f64]>,
+    ) -> Option<EnergyPlan> {
+        let n = model.layers.len();
+        if n == 0 {
+            return None; // a plan over zero layers is meaningless
+        }
+        if let Some(g) = sensitivity {
+            assert_eq!(g.len(), n, "sensitivity weight per layer");
+        }
+        let cell1: Vec<f64> = model
+            .layers
+            .iter()
+            .map(|l| self.layer_cell_pj(l, 1.0, mode))
+            .collect();
+        let peripheral_pj: f64 = model
+            .layers
+            .iter()
+            .map(|l| self.layer_peripheral_pj(l, mode))
+            .sum();
+        let remaining = budget_uj * 1e6 - peripheral_pj;
+        if remaining <= 0.0 {
+            return None; // budget at or below the peripheral floor
+        }
+        // relative shape of the allocation: uniform, or sqrt(g/c).
+        // Non-positive weights are floored to a tiny fraction of the
+        // largest one: the mathematical optimum for a zero-sensitivity
+        // layer is rho -> 0, but a zero-rho entry is an invalid plan
+        // (infinite sigma), so the starved layer keeps a sliver instead.
+        let shape: Vec<f64> = match sensitivity {
+            None => vec![1.0; n],
+            Some(g) => {
+                let g_max = g.iter().cloned().fold(0.0f64, f64::max);
+                if g_max <= 0.0 {
+                    return None; // no layer is sensitive: no shape exists
+                }
+                cell1
+                    .iter()
+                    .zip(g.iter())
+                    .map(|(&c, &gl)| {
+                        (gl.max(1e-6 * g_max) / c.max(f64::MIN_POSITIVE)).sqrt()
+                    })
+                    .collect()
+            }
+        };
+        let denom: f64 = cell1.iter().zip(shape.iter()).map(|(&c, &s)| c * s).sum();
+        if denom <= 0.0 {
+            return None; // degenerate model (no cell reads)
+        }
+        let scale = remaining / denom;
+        Some(EnergyPlan::new(
+            shape
+                .iter()
+                .map(|&s| LayerPlan::new((scale * s) as f32, mode))
+                .collect(),
+            PlanSource::Analytic,
+        ))
+    }
+
+    /// Rescale a trained per-layer rho vector (technique B) onto a
+    /// serving budget: `rho_l = s * trained_l` with one global `s`, so
+    /// the trained **relative** allocation between layers is preserved
+    /// exactly while the total energy hits `budget_uj`.  `None` when the
+    /// budget does not clear the peripheral floor.
+    pub fn plan_from_trained(
+        &self,
+        model: &ModelDesc,
+        trained_rho: &[f32],
+        budget_uj: f64,
+        mode: ReadMode,
+    ) -> Option<EnergyPlan> {
+        assert_eq!(model.layers.len(), trained_rho.len(), "trained rho per layer");
+        let peripheral_pj: f64 = model
+            .layers
+            .iter()
+            .map(|l| self.layer_peripheral_pj(l, mode))
+            .sum();
+        let cell_at_trained: f64 = model
+            .layers
+            .iter()
+            .zip(trained_rho.iter())
+            .map(|(l, &r)| self.layer_cell_pj(l, r as f64, mode))
+            .sum();
+        let remaining = budget_uj * 1e6 - peripheral_pj;
+        if remaining <= 0.0 || cell_at_trained <= 0.0 {
+            return None;
+        }
+        let scale = remaining / cell_at_trained;
+        Some(EnergyPlan::new(
+            trained_rho
+                .iter()
+                .map(|&r| LayerPlan::new((scale * r as f64) as f32, mode))
+                .collect(),
+            PlanSource::Trained,
+        ))
     }
 }
 
@@ -238,6 +508,167 @@ mod tests {
         assert!(em
             .rho_for_budget(&model(), 1e-9, ReadMode::Original)
             .is_none());
+    }
+
+    #[test]
+    fn plan_for_budget_uniform_matches_rho_for_budget() {
+        let em = EnergyModel::new(5);
+        let m = model();
+        let budget = 16.0;
+        let plan = em
+            .plan_for_budget(&m, budget, ReadMode::Original, None)
+            .unwrap();
+        assert_eq!(plan.len(), m.layers.len());
+        assert_eq!(plan.source, PlanSource::Analytic);
+        let rho = em.rho_for_budget(&m, budget, ReadMode::Original).unwrap();
+        for l in plan.layers() {
+            // plans store rho at device precision (f32)
+            assert!(
+                (l.rho as f64 - rho).abs() / rho < 1e-6,
+                "{} vs {rho}",
+                l.rho
+            );
+        }
+        // the plan hits the budget (up to f32 rho storage)
+        assert!((em.plan_uj(&m, &plan) - budget).abs() / budget < 1e-6);
+    }
+
+    #[test]
+    fn plan_for_budget_peripheral_floor_edge() {
+        // budget exactly at the peripheral floor: no energy is left for
+        // cell reads, so no rho allocation exists -> None (and anything
+        // epsilon above it is solvable)
+        let em = EnergyModel::new(5);
+        let m = model();
+        let floor_uj = m
+            .layers
+            .iter()
+            .map(|l| em.layer_peripheral_pj(l, ReadMode::Original))
+            .sum::<f64>()
+            * 1e-6;
+        // at (a hair below, guarding the uJ<->pJ rounding) the floor: None
+        assert!(em
+            .plan_for_budget(&m, floor_uj * (1.0 - 1e-9), ReadMode::Original, None)
+            .is_none());
+        // epsilon above it: solvable, every layer strictly positive
+        let plan = em
+            .plan_for_budget(&m, floor_uj * 1.01, ReadMode::Original, None)
+            .unwrap();
+        assert!(plan.layers().iter().all(|l| l.rho > 0.0));
+    }
+
+    #[test]
+    fn plan_for_budget_single_layer_model() {
+        let em = EnergyModel::new(5);
+        let m = ModelDesc {
+            name: "one".into(),
+            layers: vec![LayerMeta::dense(64, 10)],
+        };
+        let budget = 0.5;
+        let plan = em
+            .plan_for_budget(&m, budget, ReadMode::Original, None)
+            .unwrap();
+        assert_eq!(plan.len(), 1);
+        assert!((em.plan_uj(&m, &plan) - budget).abs() / budget < 1e-6);
+        // with one layer, sensitivity weights cannot change the answer
+        let weighted = em
+            .plan_for_budget(&m, budget, ReadMode::Original, Some(&[42.0]))
+            .unwrap();
+        assert!((weighted.layer(0).rho / plan.layer(0).rho - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn plan_for_budget_water_filling_favours_sensitive_layers() {
+        // two identical layers, one 4x more noise-sensitive: the optimum
+        // rho ratio is sqrt(4) = 2, and the budget still holds exactly
+        let em = EnergyModel::new(5);
+        let m = ModelDesc {
+            name: "two".into(),
+            layers: vec![LayerMeta::dense(128, 32), LayerMeta::dense(128, 32)],
+        };
+        let budget = 2.0;
+        let plan = em
+            .plan_for_budget(&m, budget, ReadMode::Original, Some(&[4.0, 1.0]))
+            .unwrap();
+        let r = plan.rhos();
+        assert!(
+            (r[0] / r[1] - 2.0).abs() < 1e-4,
+            "water-filling ratio {} vs sqrt(4)",
+            r[0] / r[1]
+        );
+        assert!((em.plan_uj(&m, &plan) - budget).abs() / budget < 1e-6);
+        // and it beats the uniform plan on sensitivity-weighted sigma^2
+        let uniform = em
+            .plan_for_budget(&m, budget, ReadMode::Original, None)
+            .unwrap();
+        let cost = |p: &EnergyPlan| -> f64 {
+            [4.0, 1.0]
+                .iter()
+                .zip(p.layers().iter())
+                .map(|(g, l)| g * (l.sigma_rel(1.0) as f64).powi(2))
+                .sum()
+        };
+        assert!(cost(&plan) < cost(&uniform));
+        // a zero-sensitivity layer is floored, never starved to rho == 0
+        // (which would be an invalid plan with infinite sigma)
+        let floored = em
+            .plan_for_budget(&m, budget, ReadMode::Original, Some(&[0.0, 1.0]))
+            .unwrap();
+        assert!(floored.validate(2).is_ok(), "{floored:?}");
+        assert!(floored.layer(0).rho > 0.0 && floored.layer(0).rho < floored.layer(1).rho);
+        // all-zero sensitivity: no allocation shape exists
+        assert!(em
+            .plan_for_budget(&m, budget, ReadMode::Original, Some(&[0.0, 0.0]))
+            .is_none());
+    }
+
+    #[test]
+    fn plan_from_trained_preserves_layer_ratios() {
+        let em = EnergyModel::new(5);
+        let m = ModelDesc {
+            name: "two".into(),
+            layers: vec![LayerMeta::dense(64, 48), LayerMeta::dense(48, 10)],
+        };
+        let trained = [2.0f32, 6.0];
+        for budget in [0.5, 2.0, 8.0] {
+            let plan = em
+                .plan_from_trained(&m, &trained, budget, ReadMode::Original)
+                .unwrap();
+            assert_eq!(plan.source, PlanSource::Trained);
+            let r = plan.rhos();
+            assert!(
+                (r[1] / r[0] - 3.0).abs() < 1e-4,
+                "budget {budget}: trained 1:3 ratio must survive rescaling, got {r:?}"
+            );
+            assert!((em.plan_uj(&m, &plan) - budget).abs() / budget < 1e-6);
+        }
+        // below the peripheral floor: unsolvable, same as the analytic path
+        assert!(em
+            .plan_from_trained(&m, &trained, 1e-9, ReadMode::Original)
+            .is_none());
+    }
+
+    #[test]
+    fn plan_validate_rejects_bad_shapes() {
+        let plan = EnergyPlan::uniform(3, 4.0, ReadMode::Original);
+        assert!(plan.validate(3).is_ok());
+        assert!(plan.validate(2).is_err(), "layer-count mismatch");
+        let bad = EnergyPlan::new(
+            vec![
+                LayerPlan::new(4.0, ReadMode::Original),
+                LayerPlan::new(f32::NAN, ReadMode::Original),
+            ],
+            PlanSource::Analytic,
+        );
+        assert!(bad.validate(2).is_err(), "non-finite rho");
+        let neg = EnergyPlan::new(
+            vec![LayerPlan::new(-1.0, ReadMode::Original)],
+            PlanSource::Analytic,
+        );
+        assert!(neg.validate(1).is_err(), "non-positive rho");
+        assert_eq!(plan.mean_rho(), 4.0);
+        assert_eq!(plan.lead_mode(), ReadMode::Original);
+        assert_eq!(PlanSource::Trained.name(), "trained");
     }
 
     #[test]

@@ -19,7 +19,7 @@
 use crate::crossbar::{CrossbarArray, MacScratch, ReadCounters};
 use crate::data::{Dataset, IMG_LEN};
 use crate::device::DeviceConfig;
-use crate::energy::ReadMode;
+use crate::energy::{EnergyPlan, LayerPlan, ReadMode};
 use crate::rng::Rng;
 use crate::Result;
 
@@ -49,7 +49,7 @@ impl NoisyLinear {
         &self,
         x: &[f32],
         out: &mut [f32],
-        mode: ReadMode,
+        plan: LayerPlan,
         cfg: &DeviceConfig,
         rng: &mut Rng,
         counters: &mut ReadCounters,
@@ -58,7 +58,7 @@ impl NoisyLinear {
         self.array.mac_scratch(
             x,
             out,
-            mode,
+            plan,
             cfg.act_bits,
             cfg.intensity.factor(),
             rng,
@@ -143,6 +143,16 @@ impl NoisyModel {
         self.layers.iter().map(|l| l.d_out).max().unwrap_or(0)
     }
 
+    /// The model's default [`EnergyPlan`]: every layer at its array's
+    /// programming-time rho, reading in `mode` — bit-identical to the
+    /// pre-plan behaviour where reads always used the programmed rho.
+    pub fn uniform_plan(&self, mode: ReadMode) -> EnergyPlan {
+        EnergyPlan::new(
+            self.layers.iter().map(|l| l.array.read_plan(mode)).collect(),
+            crate::energy::PlanSource::Analytic,
+        )
+    }
+
     pub fn num_cells(&self) -> usize {
         self.layers.iter().map(|l| l.array.num_cells()).sum()
     }
@@ -155,12 +165,13 @@ impl NoisyModel {
         &self,
         x: &[f32],
         scratch: &'s mut Scratch,
-        mode: ReadMode,
+        plan: &EnergyPlan,
         cfg: &DeviceConfig,
         rng: &mut Rng,
         counters: &mut ReadCounters,
     ) -> &'s [f32] {
         assert_eq!(x.len(), self.d_in(), "input width mismatch");
+        assert_eq!(plan.len(), self.layers.len(), "plan entry per layer");
         let Scratch { a, b, mac } = scratch;
         for (i, layer) in self.layers.iter().enumerate() {
             // ping-pong: even layers write a, odd layers write b
@@ -171,13 +182,13 @@ impl NoisyModel {
             };
             let out = &mut cur[..layer.d_out];
             if i == 0 {
-                layer.forward(x, out, mode, cfg, rng, counters, mac);
+                layer.forward(x, out, plan.layer(i), cfg, rng, counters, mac);
             } else {
                 let input = &mut prev[..self.layers[i - 1].d_out];
                 for v in input.iter_mut() {
                     *v = v.max(0.0); // ReLU in place — no temporary Vec
                 }
-                layer.forward(input, out, mode, cfg, rng, counters, mac);
+                layer.forward(input, out, plan.layer(i), cfg, rng, counters, mac);
             }
         }
         let last = self.layers.len() - 1;
@@ -193,13 +204,13 @@ impl NoisyModel {
     pub fn forward_single(
         &self,
         x: &[f32],
-        mode: ReadMode,
+        plan: &EnergyPlan,
         cfg: &DeviceConfig,
         rng: &mut Rng,
         counters: &mut ReadCounters,
     ) -> Vec<f32> {
         let mut scratch = Scratch::for_model(self);
-        self.forward_into(x, &mut scratch, mode, cfg, rng, counters)
+        self.forward_into(x, &mut scratch, plan, cfg, rng, counters)
             .to_vec()
     }
 
@@ -216,7 +227,7 @@ impl NoisyModel {
     pub fn forward_batch(
         &self,
         xs: &[f32],
-        mode: ReadMode,
+        plan: &EnergyPlan,
         cfg: &DeviceConfig,
         seed: u64,
         counters: &mut ReadCounters,
@@ -224,7 +235,7 @@ impl NoisyModel {
         // Rng::stream(seed, i) == Rng::new(hash2(seed, i)), so routing
         // through the per-sample-seed impl is bit-identical to the
         // historical behaviour (pinned by tests/batch_parity.rs).
-        self.forward_batch_impl(xs, mode, cfg, counters, |i| crate::rng::hash2(seed, i as u64))
+        self.forward_batch_impl(xs, plan, cfg, counters, |i| crate::rng::hash2(seed, i as u64))
     }
 
     /// Like [`NoisyModel::forward_batch`], but sample `i` seeds its RNG
@@ -239,7 +250,7 @@ impl NoisyModel {
     pub fn forward_batch_seeds(
         &self,
         xs: &[f32],
-        mode: ReadMode,
+        plan: &EnergyPlan,
         cfg: &DeviceConfig,
         seeds: &[u64],
         counters: &mut ReadCounters,
@@ -255,7 +266,7 @@ impl NoisyModel {
             xs.len() / self.d_in(),
             "one seed per sample required"
         );
-        self.forward_batch_impl(xs, mode, cfg, counters, |i| seeds[i])
+        self.forward_batch_impl(xs, plan, cfg, counters, |i| seeds[i])
     }
 
     /// Shared batched-forward body: fan samples across rayon, sample `i`
@@ -264,7 +275,7 @@ impl NoisyModel {
     fn forward_batch_impl<F>(
         &self,
         xs: &[f32],
-        mode: ReadMode,
+        plan: &EnergyPlan,
         cfg: &DeviceConfig,
         counters: &mut ReadCounters,
         seed_of: F,
@@ -293,7 +304,7 @@ impl NoisyModel {
                     let y = self.forward_into(
                         &xs[i * d_in..(i + 1) * d_in],
                         scratch,
-                        mode,
+                        plan,
                         cfg,
                         &mut rng,
                         &mut c,
@@ -316,7 +327,7 @@ impl NoisyModel {
     pub fn forward_batch_seq(
         &self,
         xs: &[f32],
-        mode: ReadMode,
+        plan: &EnergyPlan,
         cfg: &DeviceConfig,
         seed: u64,
         counters: &mut ReadCounters,
@@ -334,7 +345,7 @@ impl NoisyModel {
             let y = self.forward_into(
                 &xs[i * d_in..(i + 1) * d_in],
                 &mut scratch,
-                mode,
+                plan,
                 cfg,
                 &mut rng,
                 &mut c,
@@ -433,7 +444,8 @@ mod tests {
         let mut rng = Rng::new(2);
         let x: Vec<f32> = (0..16).map(|_| rng.next_f32()).collect();
         let mut counters = ReadCounters::default();
-        let y = model.forward_single(&x, ReadMode::Original, &cfg, &mut rng, &mut counters);
+        let plan = model.uniform_plan(ReadMode::Original);
+        let y = model.forward_single(&x, &plan, &cfg, &mut rng, &mut counters);
         assert_eq!(y.len(), 4);
         assert!(y.iter().all(|v| v.is_finite()));
         assert_eq!(model.d_in(), 16);
@@ -452,7 +464,8 @@ mod tests {
         let x: Vec<f32> = (0..16).map(|_| rng.next_f32()).collect();
         let clean = model.forward_clean(&x, &cfg);
         let mut counters = ReadCounters::default();
-        let noisy = model.forward_single(&x, ReadMode::Original, &cfg, &mut rng, &mut counters);
+        let plan = model.uniform_plan(ReadMode::Original);
+        let noisy = model.forward_single(&x, &plan, &cfg, &mut rng, &mut counters);
         for (a, b) in noisy.iter().zip(clean.iter()) {
             assert!((a - b).abs() < 0.25 * (b.abs() + 1.0), "{a} vs {b}");
         }
@@ -465,9 +478,10 @@ mod tests {
         let mut rng = Rng::new(4);
         let x: Vec<f32> = (0..16).map(|_| rng.next_f32()).collect();
         let mut counters = ReadCounters::default();
-        model.forward_single(&x, ReadMode::Original, &cfg, &mut rng, &mut counters);
+        let plan = model.uniform_plan(ReadMode::Original);
+        model.forward_single(&x, &plan, &cfg, &mut rng, &mut counters);
         let c1 = counters;
-        model.forward_single(&x, ReadMode::Original, &cfg, &mut rng, &mut counters);
+        model.forward_single(&x, &plan, &cfg, &mut rng, &mut counters);
         assert!(counters.cell_pj > c1.cell_pj);
         assert_eq!(counters.cycles, 2 * c1.cycles);
     }
@@ -480,9 +494,11 @@ mod tests {
         let x: Vec<f32> = (0..16).map(|_| rng.next_f32()).collect();
 
         let mut c1 = ReadCounters::default();
-        model.forward_single(&x, ReadMode::Original, &cfg, &mut rng, &mut c1);
+        let ori = model.uniform_plan(ReadMode::Original);
+        let dec = model.uniform_plan(ReadMode::Decomposed);
+        model.forward_single(&x, &ori, &cfg, &mut rng, &mut c1);
         let mut c2 = ReadCounters::default();
-        model.forward_single(&x, ReadMode::Decomposed, &cfg, &mut rng, &mut c2);
+        model.forward_single(&x, &dec, &cfg, &mut rng, &mut c2);
         assert!(c2.cycles > c1.cycles);
         assert!(c2.cell_pj < c1.cell_pj);
     }
@@ -499,16 +515,17 @@ mod tests {
         };
         let mut scratch = Scratch::for_model(&model);
         let mut c = ReadCounters::default();
+        let plan = model.uniform_plan(ReadMode::Original);
         let mut rng = Rng::stream(99, 0);
         let y1 = model
-            .forward_into(&x, &mut scratch, ReadMode::Original, &cfg, &mut rng, &mut c)
+            .forward_into(&x, &mut scratch, &plan, &cfg, &mut rng, &mut c)
             .to_vec();
         let mut rng = Rng::stream(99, 0);
         let y2 = model
-            .forward_into(&x, &mut scratch, ReadMode::Original, &cfg, &mut rng, &mut c)
+            .forward_into(&x, &mut scratch, &plan, &cfg, &mut rng, &mut c)
             .to_vec();
         let mut rng = Rng::stream(99, 0);
-        let y3 = model.forward_single(&x, ReadMode::Original, &cfg, &mut rng, &mut c);
+        let y3 = model.forward_single(&x, &plan, &cfg, &mut rng, &mut c);
         assert_eq!(y1, y2);
         assert_eq!(y1, y3);
     }
@@ -525,8 +542,9 @@ mod tests {
         };
         let mut c_par = ReadCounters::default();
         let mut c_seq = ReadCounters::default();
-        let par = model.forward_batch(&xs, ReadMode::Original, &cfg, 42, &mut c_par);
-        let seq = model.forward_batch_seq(&xs, ReadMode::Original, &cfg, 42, &mut c_seq);
+        let plan = model.uniform_plan(ReadMode::Original);
+        let par = model.forward_batch(&xs, &plan, &cfg, 42, &mut c_par);
+        let seq = model.forward_batch_seq(&xs, &plan, &cfg, 42, &mut c_seq);
         assert_eq!(par, seq);
         assert_eq!(c_par, c_seq);
         assert_eq!(par.len(), 6 * 4);
@@ -545,8 +563,9 @@ mod tests {
         let seeds: Vec<u64> = (0..n).map(|i| crate::rng::hash2(42, i as u64)).collect();
         let mut c_a = ReadCounters::default();
         let mut c_b = ReadCounters::default();
-        let a = model.forward_batch(&xs, ReadMode::Original, &cfg, 42, &mut c_a);
-        let b = model.forward_batch_seeds(&xs, ReadMode::Original, &cfg, &seeds, &mut c_b);
+        let plan = model.uniform_plan(ReadMode::Original);
+        let a = model.forward_batch(&xs, &plan, &cfg, 42, &mut c_a);
+        let b = model.forward_batch_seeds(&xs, &plan, &cfg, &seeds, &mut c_b);
         assert_eq!(a, b);
         assert_eq!(c_a, c_b);
         // a sample's logits depend only on (pixels, seed), not on batch
@@ -555,7 +574,7 @@ mod tests {
         let mut c_solo = ReadCounters::default();
         let solo = model.forward_batch_seeds(
             &xs[i * 16..(i + 1) * 16],
-            ReadMode::Original,
+            &plan,
             &cfg,
             &seeds[i..i + 1],
             &mut c_solo,
@@ -581,7 +600,8 @@ mod tests {
             ));
         }
         let mut counters = ReadCounters::default();
-        let logits = model.forward_batch(&xs, ReadMode::Original, &cfg, 1, &mut counters);
+        let plan = model.uniform_plan(ReadMode::Original);
+        let logits = model.forward_batch(&xs, &plan, &cfg, 1, &mut counters);
         let mut correct = 0;
         for (i, &label) in labels.iter().enumerate() {
             let row = &logits[i * 10..(i + 1) * 10];

@@ -74,6 +74,11 @@ FLAGS (defaults in parentheses):
   --max-client-batch N serve-http: images accepted per request, 413 above (64)
   --max-body-mb N     serve-http: request body cap in MiB, 413 above (8)
   --conn-threads N    serve-http: connection handler threads (16)
+  --max-conns-per-peer N serve-http: simultaneous connections per peer IP,
+                      429 above (64)
+  --model-store FILE  serve-http: stored model (.emtm) whose trained
+                      per-layer rho shapes the tier energy plans
+                      (plan source \"trained\"; analytic otherwise)
   --addr A            loadgen: target server (127.0.0.1:8080)
   --connections N     loadgen: concurrent keep-alive connections (8)
   --qps F             loadgen: aggregate target rate, 0 = closed loop (0)
@@ -337,12 +342,12 @@ fn serve(cfg: &ExperimentConfig, requests: u32, workers: usize) -> Result<()> {
     );
     let server_cfg = NativeServerConfig {
         workers,
-        mode: sol.read_mode(),
+        plan: Some(model.uniform_plan(sol.read_mode())),
         device: dev,
         ..Default::default()
     };
     let batch = server_cfg.batch;
-    let (client, stats, engines) = serve_native(model, server_cfg)?;
+    let (client, stats, engines) = serve_native(model.clone(), server_cfg)?;
 
     let t0 = std::time::Instant::now();
     let client_threads = 8usize;
@@ -410,9 +415,21 @@ fn serve_http_cmd(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
     };
     let dataset = Dataset::new(cfg.suite(), emtopt::data::DATA_SEED);
     let model = Arc::new(emtopt::inference::template_classifier(&dataset, &dev)?);
+    // trained per-layer rho (technique B) from a stored model: the tier
+    // plans rescale it to each budget; analytic plans otherwise
+    let trained_rho = match args.get("model-store") {
+        Some(path) => {
+            let rho = emtopt::server::load_trained_rho(std::path::Path::new(path))?;
+            println!("model store {path}: trained rho {rho:?}");
+            Some(rho)
+        }
+        None => None,
+    };
     let http_cfg = HttpServerConfig {
         addr: format!("{host}:{port}"),
         conn_threads: args.parse_or("conn-threads", 16usize)?,
+        max_conns_per_peer: args.parse_or("max-conns-per-peer", 64usize)?,
+        trained_rho,
         // batch bodies are big (a 64-image CIFAR batch is ~2 MiB of JSON),
         // so the body cap is a first-class knob
         max_body_bytes: args.parse_or("max-body-mb", 8usize)? << 20,

@@ -86,6 +86,8 @@ pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// Extra response headers (e.g. `retry-after` on `503`/`429`).
+    pub headers: Vec<(&'static str, String)>,
 }
 
 impl Response {
@@ -94,6 +96,7 @@ impl Response {
             status,
             content_type: "application/json",
             body: v.render().into_bytes(),
+            headers: Vec::new(),
         }
     }
 
@@ -107,6 +110,18 @@ impl Response {
             )]),
         )
     }
+
+    /// Attach an extra response header.
+    pub fn with_header(mut self, name: &'static str, value: String) -> Response {
+        self.headers.push((name, value));
+        self
+    }
+
+    /// Attach `retry-after: <seconds>` — the honest back-off hint shed
+    /// (`503`) and peer-capped (`429`) clients should honour.
+    pub fn with_retry_after(self, seconds: u64) -> Response {
+        self.with_header("retry-after", seconds.to_string())
+    }
 }
 
 /// Reason phrase for the status codes this stack emits.
@@ -117,6 +132,7 @@ pub fn status_text(code: u16) -> &'static str {
         404 => "Not Found",
         405 => "Method Not Allowed",
         413 => "Payload Too Large",
+        429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         _ => "Unknown",
@@ -290,14 +306,19 @@ impl<S: Read + Write> HttpConn<S> {
 
     /// Write a response (server side).
     pub fn write_response(&mut self, resp: &Response, keep_alive: bool) -> std::io::Result<()> {
-        let head = format!(
-            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+        use std::fmt::Write as _;
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n",
             resp.status,
             status_text(resp.status),
             resp.content_type,
             resp.body.len(),
             if keep_alive { "keep-alive" } else { "close" },
         );
+        for (name, value) in &resp.headers {
+            let _ = write!(head, "{name}: {value}\r\n");
+        }
+        head.push_str("\r\n");
         self.stream.write_all(head.as_bytes())?;
         self.stream.write_all(&resp.body)?;
         self.stream.flush()
@@ -317,6 +338,17 @@ impl<S: Read + Write> HttpConn<S> {
 
     /// Read one response (client side); returns `(status, body)`.
     pub fn read_response(&mut self, max_body: usize) -> Result<(u16, Vec<u8>)> {
+        let (status, _headers, body) = self.read_response_parts(max_body)?;
+        Ok((status, body))
+    }
+
+    /// Read one response including its headers (client side); returns
+    /// `(status, headers, body)` — header names lower-cased.  Used by
+    /// clients that honour `retry-after` back-off hints.
+    pub fn read_response_parts(
+        &mut self,
+        max_body: usize,
+    ) -> Result<(u16, Vec<(String, String)>, Vec<u8>)> {
         let head = match self.read_head()? {
             HeadOutcome::Head(h) => h,
             HeadOutcome::Closed => anyhow::bail!("server closed the connection"),
@@ -340,7 +372,7 @@ impl<S: Read + Write> HttpConn<S> {
         let content_length = content_length(&headers)?;
         anyhow::ensure!(content_length <= max_body, "response body too large");
         let body = self.read_body(content_length)?;
-        Ok((status, body))
+        Ok((status, headers, body))
     }
 }
 
@@ -494,6 +526,24 @@ mod tests {
             }
             other => panic!("unexpected outcome {other:?}"),
         }
+    }
+
+    #[test]
+    fn extra_headers_roundtrip() {
+        let resp = Response::error_json(503, "overloaded").with_retry_after(7);
+        let mut server = HttpConn::new(Cursor::new(Vec::new()));
+        server.write_response(&resp, false).unwrap();
+        let written = server.stream.into_inner();
+        let mut client = HttpConn::new(Cursor::new(written));
+        let (status, headers, body) = client.read_response_parts(1024).unwrap();
+        assert_eq!(status, 503);
+        assert!(!body.is_empty());
+        let ra = headers
+            .iter()
+            .find(|(k, _)| k == "retry-after")
+            .map(|(_, v)| v.as_str());
+        assert_eq!(ra, Some("7"));
+        assert_eq!(status_text(429), "Too Many Requests");
     }
 
     #[test]

@@ -92,6 +92,9 @@ pub struct LoadgenReport {
     pub target_qps: f64,
     /// Images per request body (1 = single-image requests).
     pub batch: usize,
+    /// Energy-plan provenance the server advertised on `/healthz`
+    /// (`trained`/`analytic`; empty when probing an older server).
+    pub plan_source: String,
 }
 
 impl LoadgenReport {
@@ -146,6 +149,7 @@ impl LoadgenReport {
             ("unix_time", Json::Num(unix_time() as f64)),
             ("connections", Json::Num(self.connections as f64)),
             ("batch", Json::Num(self.batch as f64)),
+            ("plan_source", Json::Str(self.plan_source.clone())),
             ("target_qps", Json::Num(self.target_qps)),
             ("sent", Json::Num(self.sent as f64)),
             ("ok", Json::Num(self.ok as f64)),
@@ -202,10 +206,21 @@ fn connect_http(addr: &str) -> Option<HttpConn<TcpStream>> {
     Some(HttpConn::new(stream))
 }
 
-/// Probe `/healthz` for the deployed model's shape and the server's
-/// per-request image cap (`usize::MAX` when the server predates the
-/// `max_batch` field).
-fn probe(addr: &str) -> Result<(usize, usize, usize)> {
+/// What a `/healthz` probe learned about the deployed server.
+struct ProbeInfo {
+    input_len: usize,
+    num_classes: usize,
+    /// Per-request image cap (`usize::MAX` when the server predates the
+    /// `max_batch` field).
+    max_batch: usize,
+    /// Energy-plan provenance (`trained`/`analytic`; empty on servers
+    /// that predate the field).
+    plan_source: String,
+}
+
+/// Probe `/healthz` for the deployed model's shape, the server's
+/// per-request image cap, and the energy-plan source it serves with.
+fn probe(addr: &str) -> Result<ProbeInfo> {
     let stream = TcpStream::connect(addr)
         .map_err(|e| anyhow::anyhow!("connecting to {addr}: {e}"))?;
     let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
@@ -218,11 +233,16 @@ fn probe(addr: &str) -> Result<(usize, usize, usize)> {
         Some(m) => m.as_usize()?,
         None => usize::MAX,
     };
-    Ok((
-        v.get("input_len")?.as_usize()?,
-        v.get("num_classes")?.as_usize()?,
+    let plan_source = match v.opt("plan_source") {
+        Some(ps) => ps.as_str()?.to_string(),
+        None => String::new(),
+    };
+    Ok(ProbeInfo {
+        input_len: v.get("input_len")?.as_usize()?,
+        num_classes: v.get("num_classes")?.as_usize()?,
         max_batch,
-    ))
+        plan_source,
+    })
 }
 
 /// Clamp a sample to a JSON-renderable value: `{}` formats non-finite
@@ -284,7 +304,9 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     anyhow::ensure!(cfg.requests > 0, "need at least one request");
     anyhow::ensure!(cfg.batch > 0, "need at least one image per request");
     let batch = cfg.batch;
-    let (input_len, num_classes, max_batch) = probe(&cfg.addr)?;
+    let info = probe(&cfg.addr)?;
+    let (input_len, num_classes, max_batch) =
+        (info.input_len, info.num_classes, info.max_batch);
     // Fail fast with the real cause instead of a run of opaque 413s: the
     // server advertises its per-request image cap on /healthz.
     anyhow::ensure!(
@@ -483,6 +505,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         connections: cfg.connections,
         target_qps: cfg.target_qps,
         batch: cfg.batch,
+        plan_source: info.plan_source,
     })
 }
 
@@ -539,6 +562,8 @@ pub struct LadderReport {
     pub batch: usize,
     pub connections: usize,
     pub requests_per_point: u64,
+    /// Energy-plan provenance the server advertised during the sweep.
+    pub plan_source: String,
     pub tiers: Vec<TierCurve>,
 }
 
@@ -601,6 +626,7 @@ impl LadderReport {
             ("bench", Json::Str("serve".into())),
             ("mode", Json::Str("ladder".into())),
             ("unix_time", Json::Num(unix_time() as f64)),
+            ("plan_source", Json::Str(self.plan_source.clone())),
             ("batch", Json::Num(self.batch as f64)),
             ("connections", Json::Num(self.connections as f64)),
             ("requests_per_point", Json::Num(self.requests_per_point as f64)),
@@ -673,6 +699,11 @@ pub fn run_ladder(cfg: &LadderConfig) -> Result<LadderReport> {
         batch: cfg.base.batch,
         connections: cfg.base.connections,
         requests_per_point: cfg.base.requests,
+        plan_source: curves
+            .first()
+            .and_then(|c| c.points.first())
+            .map(|p| p.report.plan_source.clone())
+            .unwrap_or_default(),
         tiers: curves,
     })
 }
@@ -769,6 +800,7 @@ mod tests {
             batch: 4,
             connections: 2,
             requests_per_point: 10,
+            plan_source: "analytic".into(),
             tiers: vec![TierCurve {
                 tier: "normal".into(),
                 capacity_rps: 100.0,
@@ -777,6 +809,7 @@ mod tests {
         };
         let j = Json::parse(&r.to_json().render()).unwrap();
         assert_eq!(j.get("mode").unwrap().as_str().unwrap(), "ladder");
+        assert_eq!(j.get("plan_source").unwrap().as_str().unwrap(), "analytic");
         assert_eq!(j.get("batch").unwrap().as_usize().unwrap(), 4);
         let tiers = j.get("tiers").unwrap().as_arr().unwrap();
         assert_eq!(tiers.len(), 1);

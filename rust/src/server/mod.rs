@@ -21,33 +21,44 @@
 //!   (content-seeded noise; see `coordinator::router::image_seed`)
 //! * `POST /v1/classify`  same bodies → adds `"class"` (argmax), or
 //!   `"classes"` for the batch form
-//! * `GET  /healthz`      liveness + deployed-model shape + batch cap
+//! * `GET  /healthz`      liveness + deployed-model shape + batch cap +
+//!   energy-plan advertisement (`plan_source`, per-tier rho vectors)
 //! * `GET  /metrics`      Prometheus text (see [`prom`])
 //! * `POST /admin/shutdown`  graceful drain
 //!
 //! **Energy tiers** surface the paper's energy–accuracy knob (eq. 7/8:
-//! fluctuation sigma ∝ 1/sqrt(rho)) as an API parameter: each tier maps
-//! an energy budget to a per-read energy coefficient rho through
-//! [`EnergyModel::rho_for_budget`], and the low tier additionally uses
-//! the decomposed (bit-serial, technique C) read mode.  A request's tier
-//! picks the lane — and therefore the noise level and the per-request
-//! device energy — it is served with.
+//! fluctuation sigma ∝ 1/sqrt(rho)) as an API parameter: each tier
+//! resolves an energy budget to a full per-layer [`EnergyPlan`] through
+//! [`tier_plans`] — a trained rho vector rescaled to the budget when
+//! `--model-store` provides one ([`EnergyModel::plan_from_trained`]),
+//! the closed-form analytic split otherwise
+//! ([`EnergyModel::plan_for_budget`]) — and the low tier additionally
+//! uses the decomposed (bit-serial, technique C) read mode.  A
+//! request's tier picks the lane — and therefore the per-layer noise
+//! level and the per-request device energy — it is served with; the
+//! plan source and per-layer rho are advertised on `/healthz`,
+//! `/v1/infer` responses, and `/metrics` (planned-vs-observed
+//! uJ/inference).
 //!
 //! **Admission control:** requests enter a lane via
 //! [`InferenceClient::try_infer`] (or `try_infer_batch` for multi-image
 //! bodies, which skip the dynamic-batcher wait but share the same bounded
 //! queue); a full bounded queue returns the typed `Overloaded` error,
-//! which this layer maps to `503`, and a batch above the per-request
-//! image cap returns the typed `BatchTooLarge`, mapped to `413`.  The
-//! acceptor additionally sheds whole connections with `503` when all
-//! handler threads are busy and the hand-off queue is full.  Overload
+//! which this layer maps to `503` (carrying a `Retry-After` hint derived
+//! from the lane's live queue depth x amortised infer time), and a batch
+//! above the per-request image cap returns the typed `BatchTooLarge`,
+//! mapped to `413`.  The acceptor additionally sheds whole connections
+//! with `503` when all handler threads are busy and the hand-off queue
+//! is full, and answers `429 Too Many Requests` to a peer IP holding
+//! more than `max_conns_per_peer` simultaneous connections.  Overload
 //! never grows memory without bound.
 
 pub mod http;
 pub mod loadgen;
 pub mod prom;
 
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::collections::HashMap;
+use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -57,7 +68,7 @@ use crate::coordinator::router::{
     serve_native, BatchTooLarge, InferenceClient, NativeServerConfig, Overloaded, ServerStats,
 };
 use crate::device::DeviceConfig;
-use crate::energy::{EnergyModel, ReadMode};
+use crate::energy::{EnergyModel, EnergyPlan, LayerPlan, PlanSource, ReadMode};
 use crate::inference::NoisyModel;
 use crate::models::{LayerMeta, ModelDesc};
 use crate::util::json::Json;
@@ -142,29 +153,45 @@ pub fn parse_tier_arg(s: &str) -> Result<Option<EnergyTier>> {
     s.parse().map(Some).map_err(|e: String| anyhow::anyhow!(e))
 }
 
-/// Resolved serving plan of one tier: the rho/read-mode pair its lane
-/// runs with, and the lane's expected per-inference energy.
+/// Resolved serving plan of one tier: the full per-layer [`EnergyPlan`]
+/// its lane reads with, plus summary scalars for reporting.
 #[derive(Clone, Debug)]
 pub struct TierPlan {
     pub tier: EnergyTier,
+    /// Mean per-layer rho (the scalar summary; per-layer values live in
+    /// [`TierPlan::plan`]).
     pub rho: f32,
     pub mode: ReadMode,
-    /// Expected analytical energy per inference at the resolved rho/mode
+    /// Expected analytical energy per inference under the resolved plan
     /// — the tier's requested budget when achievable, or the closest
     /// achievable value after rho clamping / the peripheral floor, so
     /// the API never advertises a budget the lane cannot honour.
     pub budget_uj: f64,
+    /// The per-layer allocation the lane's device reads actually use.
+    pub plan: EnergyPlan,
 }
 
 impl TierPlan {
+    /// Plan provenance (`trained` when a store rho vector shaped it).
+    pub fn source(&self) -> PlanSource {
+        self.plan.source
+    }
+
     /// One-line human summary for CLI banners (shared by `serve-http`
     /// and the serving example so the two cannot drift).
     pub fn describe(&self) -> String {
+        let rhos = self.plan.rhos();
+        let (lo, hi) = rhos.iter().fold((f32::MAX, f32::MIN), |(lo, hi), &r| {
+            (lo.min(r), hi.max(r))
+        });
         format!(
-            "tier {:<6}  rho {:>6.2}  mode {:<10}  budget {:.2} uJ/inference",
+            "tier {:<6}  rho {:>6.2} [{:.2}..{:.2}]  mode {:<10}  {:<8}  budget {:.2} uJ/inference",
             self.tier.name(),
             self.rho,
+            lo,
+            hi,
             self.mode.name(),
+            self.source().name(),
             self.budget_uj
         )
     }
@@ -184,38 +211,104 @@ pub fn model_desc(model: &NoisyModel) -> ModelDesc {
     }
 }
 
-/// Map the three tiers to (rho, read mode) for a deployed model: tier
-/// budgets are multiples of the model's energy at the device-default rho,
-/// inverted to rho via [`EnergyModel::rho_for_budget`] (cell energy is
-/// linear in rho, so the inversion is closed-form) and clamped to the
-/// device's sane range.
-pub fn tier_plans(model: &NoisyModel, device: &DeviceConfig) -> Vec<TierPlan> {
+/// Rho range a tier lane may run a layer at (device-sane bounds; a plan
+/// entry outside it is clamped and the advertised budget recomputed).
+pub const TIER_RHO_MIN: f32 = 0.25;
+pub const TIER_RHO_MAX: f32 = 64.0;
+
+/// Load the trained per-layer rho vector of a stored model
+/// (`store::save` format): the `--model-store` path of `serve-http`.
+/// Returns the rho values (softplus-decoded from `rho_raw`), validated
+/// finite/positive; layer-count validation happens in [`tier_plans`]
+/// where the deployed model is known.
+pub fn load_trained_rho(path: &std::path::Path) -> Result<Vec<f32>> {
+    let trained = crate::coordinator::store::load(path)?;
+    let rho = trained.rho();
+    anyhow::ensure!(
+        !rho.is_empty(),
+        "{}: stored model carries no trained rho vector",
+        path.display()
+    );
+    Ok(rho)
+}
+
+/// Resolve each tier to a full per-layer [`EnergyPlan`] for a deployed
+/// model.  Tier budgets are multiples of the model's energy at the
+/// device-default rho.  With a trained rho vector (`--model-store`) the
+/// vector is rescaled onto each tier budget preserving its relative
+/// layer allocation ([`EnergyModel::plan_from_trained`], plan source
+/// `trained`); otherwise the analytic solver fills the budget uniformly
+/// ([`EnergyModel::plan_for_budget`], source `analytic`).  Per-layer rho
+/// is clamped to the device-sane range and the advertised budget is
+/// recomputed from the clamped plan, so the API never advertises a
+/// budget the lane cannot honour.
+pub fn tier_plans(
+    model: &NoisyModel,
+    device: &DeviceConfig,
+    trained_rho: Option<&[f32]>,
+) -> Result<Vec<TierPlan>> {
     let desc = model_desc(model);
+    let n_layers = desc.layers.len();
+    if let Some(r) = trained_rho {
+        anyhow::ensure!(
+            r.len() == n_layers,
+            "trained rho vector has {} layers, deployed model has {n_layers}",
+            r.len()
+        );
+        anyhow::ensure!(
+            r.iter().all(|v| v.is_finite() && *v > 0.0),
+            "trained rho vector must be finite and positive: {r:?}"
+        );
+    }
     let em = EnergyModel::new(device.act_bits);
     let reference_uj = em.model_uj_uniform(&desc, device.rho as f64, ReadMode::Original);
-    EnergyTier::ALL
+    Ok(EnergyTier::ALL
         .iter()
         .map(|&tier| {
             let target_uj = reference_uj * tier.budget_scale();
             let mode = tier.mode();
             // A target below the mode's peripheral floor is unachievable
-            // (rho_for_budget -> None): fall back to the minimum rho
-            // rather than silently burning the device default.
-            let rho = em
-                .rho_for_budget(&desc, target_uj, mode)
-                .unwrap_or(0.25)
-                .clamp(0.25, 64.0);
+            // (solver -> None): fall back to the minimum-rho plan rather
+            // than silently burning the device default.  The fallback
+            // keeps the tier's plan source — a trained vector keeps its
+            // shape at the minimum scale — so every tier of one engine
+            // always advertises the same provenance (`/healthz` and the
+            // CI smoke assert exactly that), and the recomputed budget
+            // below reports what the lane will actually spend.
+            let solved = match trained_rho {
+                Some(r) => em.plan_from_trained(&desc, r, target_uj, mode).unwrap_or_else(|| {
+                    let min = r.iter().cloned().fold(f32::MAX, f32::min);
+                    EnergyPlan::new(
+                        r.iter()
+                            .map(|&v| LayerPlan::new(v * (TIER_RHO_MIN / min), mode))
+                            .collect(),
+                        PlanSource::Trained,
+                    )
+                }),
+                None => em
+                    .plan_for_budget(&desc, target_uj, mode, None)
+                    .unwrap_or_else(|| EnergyPlan::uniform(n_layers, TIER_RHO_MIN, mode)),
+            };
+            let plan = EnergyPlan::new(
+                solved
+                    .layers()
+                    .iter()
+                    .map(|l| LayerPlan::new(l.rho.clamp(TIER_RHO_MIN, TIER_RHO_MAX), l.mode))
+                    .collect(),
+                solved.source,
+            );
             // Advertise what the lane will actually spend (== target
-            // whenever the target was achievable).
-            let budget_uj = em.model_uj_uniform(&desc, rho, mode);
+            // whenever the target was achievable without clamping).
+            let budget_uj = em.plan_uj(&desc, &plan);
             TierPlan {
                 tier,
-                rho: rho as f32,
+                rho: plan.mean_rho(),
                 mode,
                 budget_uj,
+                plan,
             }
         })
-        .collect()
+        .collect())
 }
 
 // ---------------------------------------------------------------------------
@@ -238,21 +331,20 @@ pub struct TieredEngine {
 
 impl TieredEngine {
     /// Spawn the three lanes; returns the engine plus all lane thread
-    /// handles (join them after dropping the engine).
+    /// handles (join them after dropping the engine).  `trained_rho` is
+    /// the per-layer trained rho vector of a stored model
+    /// ([`load_trained_rho`]), or `None` for the analytic plans.
     pub fn start(
         model: Arc<NoisyModel>,
         base: &NativeServerConfig,
+        trained_rho: Option<&[f32]>,
     ) -> Result<(TieredEngine, Vec<std::thread::JoinHandle<()>>)> {
-        let plans = tier_plans(&model, &base.device);
+        let plans = tier_plans(&model, &base.device, trained_rho)?;
         let mut lanes = Vec::with_capacity(plans.len());
         let mut handles = Vec::new();
         for plan in plans {
             let cfg = NativeServerConfig {
-                mode: plan.mode,
-                device: DeviceConfig {
-                    rho: plan.rho,
-                    ..base.device.clone()
-                },
+                plan: Some(plan.plan.clone()),
                 seed: base.seed.wrapping_add(plan.tier.index() as u64),
                 ..base.clone()
             };
@@ -265,6 +357,12 @@ impl TieredEngine {
             });
         }
         Ok((TieredEngine { lanes }, handles))
+    }
+
+    /// Plan provenance of the lanes (identical across tiers: one model,
+    /// one source).
+    pub fn plan_source(&self) -> PlanSource {
+        self.lanes[0].plan.source()
     }
 
     fn lane(&self, tier: EnergyTier) -> &Lane {
@@ -340,8 +438,18 @@ pub struct HttpServerConfig {
     /// Socket read timeout; bounds how quickly idle keep-alive
     /// connections notice a shutdown.
     pub read_timeout: Duration,
-    /// Engine config shared by the tier lanes (rho/mode overridden per
-    /// tier by [`tier_plans`]).
+    /// Max simultaneous connections accepted from one peer IP; above it
+    /// the acceptor answers `429 Too Many Requests` and closes (typed
+    /// rejection, counted on `/metrics`).  Keep-alive clients hold their
+    /// connection between requests, so this bounds per-peer handler
+    /// capture, not request rate.
+    pub max_conns_per_peer: usize,
+    /// Per-layer trained rho vector for the tier plans
+    /// ([`load_trained_rho`]; `serve-http --model-store`).  `None` uses
+    /// the analytic plans.
+    pub trained_rho: Option<Vec<f32>>,
+    /// Engine config shared by the tier lanes (per-layer plan overridden
+    /// per tier by [`tier_plans`]).
     pub engine: NativeServerConfig,
 }
 
@@ -357,6 +465,10 @@ impl Default for HttpServerConfig {
             // a server must never 413 a batch it claims to accept.
             max_body_bytes: 8 << 20,
             read_timeout: Duration::from_millis(250),
+            // generous: CI drives 8+ loadgen connections from localhost;
+            // the cap is a hostile-peer guard, not a fairness scheduler
+            max_conns_per_peer: 64,
+            trained_rho: None,
             engine: NativeServerConfig::default(),
         }
     }
@@ -371,6 +483,9 @@ pub struct HttpStats {
     pub not_found_404: AtomicU64,
     pub method_not_allowed_405: AtomicU64,
     pub payload_too_large_413: AtomicU64,
+    /// Per-peer connection-cap rejections (whole connections, not
+    /// requests: the peer was over [`HttpServerConfig::max_conns_per_peer`]).
+    pub too_many_requests_429: AtomicU64,
     pub internal_500: AtomicU64,
     pub overloaded_503: AtomicU64,
 }
@@ -383,6 +498,7 @@ impl HttpStats {
             404 => &self.not_found_404,
             405 => &self.method_not_allowed_405,
             413 => &self.payload_too_large_413,
+            429 => &self.too_many_requests_429,
             503 => &self.overloaded_503,
             _ => &self.internal_500,
         };
@@ -398,6 +514,7 @@ impl HttpStats {
             (404, self.not_found_404.load(Ordering::Relaxed)),
             (405, self.method_not_allowed_405.load(Ordering::Relaxed)),
             (413, self.payload_too_large_413.load(Ordering::Relaxed)),
+            (429, self.too_many_requests_429.load(Ordering::Relaxed)),
             (500, self.internal_500.load(Ordering::Relaxed)),
             (503, self.overloaded_503.load(Ordering::Relaxed)),
         ]
@@ -415,6 +532,13 @@ struct ServerCtx {
     shutdown: AtomicBool,
     started: Instant,
     addr: SocketAddr,
+    /// Live connection count per peer IP (incremented at accept, after
+    /// the cap check; decremented when the owning handler finishes the
+    /// connection).  Entries are removed at zero so the map stays
+    /// bounded by the number of distinct live peers.
+    peers: Mutex<HashMap<IpAddr, u32>>,
+    /// See [`HttpServerConfig::max_conns_per_peer`].
+    max_conns_per_peer: usize,
     /// Free handler capacity not yet claimed by an accepted connection.
     /// The acceptor *reserves* a unit (CAS decrement) before queueing a
     /// connection and sheds with `503` when none is left; a handler
@@ -555,7 +679,8 @@ fn drain_and_close(stream: TcpStream) {
     }
 }
 
-/// Connection-level load shedding: best-effort `503`, then
+/// Connection-level load shedding: best-effort `503` (with a minimal
+/// back-off hint — no lane context exists at the acceptor), then
 /// [`drain_and_close`].  Runs on a short-lived throwaway thread:
 /// shedding happens exactly when the server is saturated, and the
 /// acceptor must keep accepting (to shed the next connection too)
@@ -565,11 +690,45 @@ fn shed_connection(ctx: &ServerCtx, stream: TcpStream) {
     std::thread::spawn(move || {
         let mut conn = HttpConn::new(stream);
         let _ = conn.write_response(
-            &Response::error_json(503, "server overloaded: all handlers busy"),
+            &Response::error_json(503, "server overloaded: all handlers busy")
+                .with_retry_after(1),
             false,
         );
         drain_and_close(conn.into_inner());
     });
+}
+
+/// Per-peer cap rejection: typed `429` with a back-off hint, then
+/// [`drain_and_close`] — same throwaway-thread discipline as
+/// [`shed_connection`].  Unlike `503` this is the peer's fault: it must
+/// close (or reuse) existing connections, not retry with more.
+fn reject_peer_connection(ctx: &ServerCtx, stream: TcpStream, cap: usize) {
+    ctx.http.record(429);
+    std::thread::spawn(move || {
+        let mut conn = HttpConn::new(stream);
+        let _ = conn.write_response(
+            &Response::error_json(
+                429,
+                &format!("too many connections from this peer (cap {cap})"),
+            )
+            .with_retry_after(1),
+            false,
+        );
+        drain_and_close(conn.into_inner());
+    });
+}
+
+/// Drop one unit of a peer's live-connection count (removing the entry
+/// at zero so the map stays bounded).
+fn release_peer(peers: &Mutex<HashMap<IpAddr, u32>>, ip: Option<IpAddr>) {
+    let Some(ip) = ip else { return };
+    let mut map = peers.lock().expect("peer map poisoned");
+    if let Some(n) = map.get_mut(&ip) {
+        *n -= 1;
+        if *n == 0 {
+            map.remove(&ip);
+        }
+    }
 }
 
 /// Bind, spawn the engine lanes + connection pool + acceptor, and return
@@ -577,7 +736,9 @@ fn shed_connection(ctx: &ServerCtx, stream: TcpStream) {
 pub fn serve_http(model: Arc<NoisyModel>, cfg: HttpServerConfig) -> Result<ServerHandle> {
     anyhow::ensure!(cfg.conn_threads > 0, "need at least one connection thread");
     anyhow::ensure!(cfg.conn_backlog > 0, "conn_backlog must be positive");
-    let (engine, engine_handles) = TieredEngine::start(model, &cfg.engine)?;
+    anyhow::ensure!(cfg.max_conns_per_peer > 0, "max_conns_per_peer must be positive");
+    let (engine, engine_handles) =
+        TieredEngine::start(model, &cfg.engine, cfg.trained_rho.as_deref())?;
 
     let listener = TcpListener::bind(&cfg.addr)
         .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
@@ -588,6 +749,8 @@ pub fn serve_http(model: Arc<NoisyModel>, cfg: HttpServerConfig) -> Result<Serve
         shutdown: AtomicBool::new(false),
         started: Instant::now(),
         addr,
+        peers: Mutex::new(HashMap::new()),
+        max_conns_per_peer: cfg.max_conns_per_peer,
         // Starts at pool size so connections accepted before the handler
         // threads' first park are queued, never spuriously shed.
         idle_handlers: AtomicU64::new(cfg.conn_threads as u64),
@@ -597,7 +760,7 @@ pub fn serve_http(model: Arc<NoisyModel>, cfg: HttpServerConfig) -> Result<Serve
     // bounded queue.  The acceptor sheds with 503 when no handler is
     // idle (see `ServerCtx::idle_handlers`); the queue bound is the
     // backstop for the gauge's race window.
-    let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(cfg.conn_backlog);
+    let (conn_tx, conn_rx) = mpsc::sync_channel::<(TcpStream, Option<IpAddr>)>(cfg.conn_backlog);
     let conn_rx = Arc::new(Mutex::new(conn_rx));
     let mut conn_handles = Vec::with_capacity(cfg.conn_threads);
     for _ in 0..cfg.conn_threads {
@@ -610,12 +773,14 @@ pub fn serve_http(model: Arc<NoisyModel>, cfg: HttpServerConfig) -> Result<Serve
                 let guard = conn_rx.lock().expect("connection queue poisoned");
                 guard.recv()
             };
-            let stream = match stream {
+            let (stream, peer_ip) = match stream {
                 Ok(s) => s,
                 Err(_) => return, // acceptor gone
             };
             // the acceptor already reserved this handler's capacity unit
+            // and charged the peer's connection count
             serve_connection(&ctx, stream, read_timeout, max_body);
+            release_peer(&ctx.peers, peer_ip);
             ctx.idle_handlers.fetch_add(1, Ordering::SeqCst);
         }));
     }
@@ -631,17 +796,34 @@ pub fn serve_http(model: Arc<NoisyModel>, cfg: HttpServerConfig) -> Result<Serve
                 Err(_) => continue,
             };
             acceptor_ctx.http.connections.fetch_add(1, Ordering::Relaxed);
+            // Per-peer cap first: a peer over its connection budget gets
+            // a typed 429 before it can claim handler capacity.  The
+            // count is charged here and released by the handler that
+            // finishes the connection.
+            let peer_ip = stream.peer_addr().ok().map(|a| a.ip());
+            if let Some(ip) = peer_ip {
+                let mut peers = acceptor_ctx.peers.lock().expect("peer map poisoned");
+                let n = peers.entry(ip).or_insert(0);
+                if *n as usize >= acceptor_ctx.max_conns_per_peer {
+                    drop(peers);
+                    reject_peer_connection(&acceptor_ctx, stream, acceptor_ctx.max_conns_per_peer);
+                    continue;
+                }
+                *n += 1;
+            }
             // Reserve a free handler before queueing (see
             // `ServerCtx::idle_handlers`); shed when none is left.
             if !reserve_idle_handler(&acceptor_ctx.idle_handlers) {
+                release_peer(&acceptor_ctx.peers, peer_ip);
                 shed_connection(&acceptor_ctx, stream);
                 continue;
             }
-            match conn_tx.try_send(stream) {
+            match conn_tx.try_send((stream, peer_ip)) {
                 Ok(()) => {}
-                Err(TrySendError::Full(stream)) => {
-                    // return the unused reservation
+                Err(TrySendError::Full((stream, peer_ip))) => {
+                    // return the unused reservation and peer charge
                     acceptor_ctx.idle_handlers.fetch_add(1, Ordering::SeqCst);
+                    release_peer(&acceptor_ctx.peers, peer_ip);
                     shed_connection(&acceptor_ctx, stream);
                 }
                 Err(TrySendError::Disconnected(_)) => return,
@@ -701,22 +883,43 @@ fn serve_connection(
 
 fn route(ctx: &ServerCtx, req: &HttpRequest) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => Response::json(
-            200,
-            &Json::obj(vec![
-                ("status", Json::Str("ok".into())),
-                ("input_len", Json::Num(ctx.engine.input_len() as f64)),
-                ("num_classes", Json::Num(ctx.engine.num_classes() as f64)),
-                (
-                    "max_batch",
-                    Json::Num(ctx.engine.max_client_batch() as f64),
-                ),
-                (
-                    "uptime_s",
-                    Json::Num(ctx.started.elapsed().as_secs_f64()),
-                ),
-            ]),
-        ),
+        ("GET", "/healthz") => {
+            let tiers: Vec<Json> = ctx
+                .engine
+                .per_tier()
+                .iter()
+                .map(|(plan, _)| {
+                    Json::obj(vec![
+                        ("tier", Json::Str(plan.tier.name().into())),
+                        ("mode", Json::Str(plan.mode.name().into())),
+                        ("source", Json::Str(plan.source().name().into())),
+                        ("planned_uj", Json::Num(plan.budget_uj)),
+                        ("rho", Json::f32_arr(&plan.plan.rhos())),
+                    ])
+                })
+                .collect();
+            Response::json(
+                200,
+                &Json::obj(vec![
+                    ("status", Json::Str("ok".into())),
+                    ("input_len", Json::Num(ctx.engine.input_len() as f64)),
+                    ("num_classes", Json::Num(ctx.engine.num_classes() as f64)),
+                    (
+                        "max_batch",
+                        Json::Num(ctx.engine.max_client_batch() as f64),
+                    ),
+                    (
+                        "plan_source",
+                        Json::Str(ctx.engine.plan_source().name().into()),
+                    ),
+                    ("tiers", Json::Arr(tiers)),
+                    (
+                        "uptime_s",
+                        Json::Num(ctx.started.elapsed().as_secs_f64()),
+                    ),
+                ]),
+            )
+        }
         ("GET", "/metrics") => {
             let body = prom::render(
                 &ctx.http,
@@ -727,6 +930,7 @@ fn route(ctx: &ServerCtx, req: &HttpRequest) -> Response {
                 status: 200,
                 content_type: "text/plain; version=0.0.4; charset=utf-8",
                 body: body.into_bytes(),
+                headers: Vec::new(),
             }
         }
         ("POST", "/v1/infer") => infer_route(ctx, req, false),
@@ -751,16 +955,16 @@ enum InferPayload {
 }
 
 /// Map an engine admission error to its HTTP status: `Overloaded` is the
-/// server's problem (`503`, retryable), `BatchTooLarge` the client's
-/// (`413`, never retryable unchanged), anything else a `500`.
-fn engine_error_response(e: &anyhow::Error) -> Response {
-    let status = if e.is::<Overloaded>() {
-        503
-    } else if e.is::<BatchTooLarge>() {
-        413
-    } else {
-        500
-    };
+/// server's problem (`503`, retryable — carrying an honest `Retry-After`
+/// derived from the lane's live queue depth x amortised infer time),
+/// `BatchTooLarge` the client's (`413`, never retryable unchanged),
+/// anything else a `500`.
+fn engine_error_response(e: &anyhow::Error, lane_stats: &ServerStats) -> Response {
+    if e.is::<Overloaded>() {
+        return Response::error_json(503, &format!("{e}"))
+            .with_retry_after(lane_stats.retry_after_s());
+    }
+    let status = if e.is::<BatchTooLarge>() { 413 } else { 500 };
     Response::error_json(status, &format!("{e}"))
 }
 
@@ -773,6 +977,8 @@ fn infer_route(ctx: &ServerCtx, req: &HttpRequest, classify: bool) -> Response {
     let mut fields = vec![
         ("tier", Json::Str(tier.name().into())),
         ("rho", Json::Num(plan.rho as f64)),
+        ("rho_per_layer", Json::f32_arr(&plan.plan.rhos())),
+        ("plan_source", Json::Str(plan.source().name().into())),
         ("mode", Json::Str(plan.mode.name().into())),
     ];
     match payload {
@@ -785,7 +991,7 @@ fn infer_route(ctx: &ServerCtx, req: &HttpRequest, classify: bool) -> Response {
                 }
                 Response::json(200, &Json::obj(fields))
             }
-            Err(e) => engine_error_response(&e),
+            Err(e) => engine_error_response(&e, ctx.engine.stats(tier)),
         },
         InferPayload::Batch { images, count } => {
             match ctx.engine.try_infer_batch(tier, images) {
@@ -811,7 +1017,7 @@ fn infer_route(ctx: &ServerCtx, req: &HttpRequest, classify: bool) -> Response {
                     }
                     Response::json(200, &Json::obj(fields))
                 }
-                Err(e) => engine_error_response(&e),
+                Err(e) => engine_error_response(&e, ctx.engine.stats(tier)),
             }
         }
     }
@@ -903,7 +1109,7 @@ mod tests {
     fn tier_plans_track_budgets() {
         let dev = DeviceConfig::default();
         let model = tiny_model(&dev);
-        let plans = tier_plans(&model, &dev);
+        let plans = tier_plans(&model, &dev, None).unwrap();
         assert_eq!(plans.len(), 3);
         // normal tier at the reference budget must recover the device rho
         let normal = &plans[EnergyTier::Normal.index()];
@@ -924,7 +1130,51 @@ mod tests {
         // all rhos clamped to the sane device range
         for p in &plans {
             assert!((0.25..=64.0).contains(&p.rho), "rho {}", p.rho);
+            assert_eq!(p.source(), PlanSource::Analytic);
+            assert_eq!(p.plan.len(), 1);
         }
+    }
+
+    #[test]
+    fn tier_plans_trained_preserve_layer_ratios() {
+        // a two-layer model + a trained rho vector: every tier's plan
+        // must keep the trained 1:3 allocation (rescaled to its budget)
+        // and advertise the trained source
+        let dev = DeviceConfig::default();
+        let mut rng = Rng::new(31);
+        let dims = [(8usize, 6usize), (6, 3)];
+        let data: Vec<(Vec<f32>, Vec<f32>)> = dims
+            .iter()
+            .map(|&(i, o)| {
+                let w: Vec<f32> = (0..i * o).map(|_| rng.normal() * 0.4).collect();
+                (w, vec![0.0f32; o])
+            })
+            .collect();
+        let specs: Vec<(&[f32], &[f32], usize, usize)> = data
+            .iter()
+            .zip(dims.iter())
+            .map(|((w, b), &(i, o))| (w.as_slice(), b.as_slice(), i, o))
+            .collect();
+        let model = NoisyModel::new(&specs, &dev).unwrap();
+        let trained = [2.0f32, 6.0];
+        let plans = tier_plans(&model, &dev, Some(&trained)).unwrap();
+        for p in &plans {
+            assert_eq!(p.source(), PlanSource::Trained);
+            let r = p.plan.rhos();
+            assert_eq!(r.len(), 2);
+            assert!(
+                (r[1] / r[0] - 3.0).abs() < 1e-3,
+                "tier {}: trained ratio lost, got {r:?}",
+                p.tier.name()
+            );
+        }
+        // budgets still ordered
+        assert!(plans[0].budget_uj < plans[1].budget_uj);
+        assert!(plans[1].budget_uj < plans[2].budget_uj);
+        // validation: wrong layer count and non-finite vectors are typed errors
+        assert!(tier_plans(&model, &dev, Some(&[1.0])).is_err());
+        assert!(tier_plans(&model, &dev, Some(&[1.0, f32::NAN])).is_err());
+        assert!(tier_plans(&model, &dev, Some(&[1.0, -2.0])).is_err());
     }
 
     #[test]
@@ -949,7 +1199,7 @@ mod tests {
             device: dev,
             ..Default::default()
         };
-        let (engine, handles) = TieredEngine::start(model, &base).unwrap();
+        let (engine, handles) = TieredEngine::start(model, &base, None).unwrap();
         assert_eq!(engine.input_len(), 6);
         assert_eq!(engine.num_classes(), 3);
         for tier in EnergyTier::ALL {

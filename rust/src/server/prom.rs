@@ -66,7 +66,8 @@ pub fn render(http: &HttpStats, tiers: &[(&TierPlan, &ServerStats)], uptime_s: f
         &mut out,
         "emtopt_images_total",
         "counter",
-        "Images served by the inference engine, by energy tier (>= requests once multi-image bodies arrive).",
+        "Images served by the inference engine, by energy tier (>= requests \
+         once multi-image bodies arrive).",
     );
     for (plan, stats) in tiers {
         let _ = writeln!(
@@ -220,9 +221,36 @@ pub fn render(http: &HttpStats, tiers: &[(&TierPlan, &ServerStats)], uptime_s: f
 
     header(
         &mut out,
+        "emtopt_http_peer_rejected_total",
+        "counter",
+        "Connections rejected with 429 by the per-peer connection cap.",
+    );
+    let _ = writeln!(
+        out,
+        "emtopt_http_peer_rejected_total {}",
+        http.too_many_requests_429.load(Relaxed)
+    );
+
+    header(
+        &mut out,
+        "emtopt_queue_depth",
+        "gauge",
+        "Requests admitted but not yet replied (live queue depth), by tier.",
+    );
+    for (plan, stats) in tiers {
+        let _ = writeln!(
+            out,
+            "emtopt_queue_depth{{tier=\"{}\"}} {}",
+            plan.tier.name(),
+            stats.queued_requests()
+        );
+    }
+
+    header(
+        &mut out,
         "emtopt_tier_rho",
         "gauge",
-        "Per-read energy coefficient rho of each tier's lane (eq. 7/8).",
+        "Mean per-layer energy coefficient rho of each tier's lane (eq. 7/8).",
     );
     for (plan, _) in tiers {
         let _ = writeln!(
@@ -230,6 +258,37 @@ pub fn render(http: &HttpStats, tiers: &[(&TierPlan, &ServerStats)], uptime_s: f
             "emtopt_tier_rho{{tier=\"{}\"}} {}",
             plan.tier.name(),
             plan.rho
+        );
+    }
+
+    header(
+        &mut out,
+        "emtopt_tier_layer_rho",
+        "gauge",
+        "Per-layer energy coefficient rho of each tier's plan (technique B shaping).",
+    );
+    for (plan, _) in tiers {
+        for (i, r) in plan.plan.rhos().iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "emtopt_tier_layer_rho{{tier=\"{}\",layer=\"{i}\"}} {r}",
+                plan.tier.name()
+            );
+        }
+    }
+
+    header(
+        &mut out,
+        "emtopt_tier_plan_info",
+        "gauge",
+        "Plan provenance of each tier's lane (constant 1; source label carries the value).",
+    );
+    for (plan, _) in tiers {
+        let _ = writeln!(
+            out,
+            "emtopt_tier_plan_info{{tier=\"{}\",source=\"{}\"}} 1",
+            plan.tier.name(),
+            plan.source().name()
         );
     }
 
@@ -245,6 +304,36 @@ pub fn render(http: &HttpStats, tiers: &[(&TierPlan, &ServerStats)], uptime_s: f
             "emtopt_tier_budget_uj{{tier=\"{}\"}} {}",
             plan.tier.name(),
             plan.budget_uj
+        );
+    }
+
+    header(
+        &mut out,
+        "emtopt_tier_planned_uj_per_inference",
+        "gauge",
+        "Planned (analytical) energy per inference of each tier's plan in microjoules.",
+    );
+    for (plan, _) in tiers {
+        let _ = writeln!(
+            out,
+            "emtopt_tier_planned_uj_per_inference{{tier=\"{}\"}} {}",
+            plan.tier.name(),
+            plan.budget_uj
+        );
+    }
+
+    header(
+        &mut out,
+        "emtopt_tier_observed_uj_per_inference",
+        "gauge",
+        "Observed device energy per served image in microjoules (planned-vs-observed pair).",
+    );
+    for (plan, stats) in tiers {
+        let _ = writeln!(
+            out,
+            "emtopt_tier_observed_uj_per_inference{{tier=\"{}\"}} {}",
+            plan.tier.name(),
+            stats.mean_energy_uj_per_image()
         );
     }
 
@@ -323,7 +412,7 @@ pub fn render(http: &HttpStats, tiers: &[(&TierPlan, &ServerStats)], uptime_s: f
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::energy::ReadMode;
+    use crate::energy::{EnergyPlan, ReadMode};
     use crate::server::EnergyTier;
     use std::sync::atomic::Ordering;
 
@@ -346,6 +435,7 @@ mod tests {
             rho: 4.0,
             mode: ReadMode::Original,
             budget_uj: 1.5,
+            plan: EnergyPlan::uniform(2, 4.0, ReadMode::Original),
         };
         let text = render(&http, &[(&plan, &stats)], 12.5);
 
@@ -361,6 +451,12 @@ mod tests {
         assert!(text.contains("emtopt_dispatch_batch_size_count{tier=\"normal\"} 1"));
         assert!(text.contains("emtopt_dispatch_batch_size_sum{tier=\"normal\"} 5"));
         assert!(text.contains("emtopt_tier_rho{tier=\"normal\"} 4"));
+        assert!(text.contains("emtopt_tier_layer_rho{tier=\"normal\",layer=\"1\"} 4"));
+        assert!(text.contains("emtopt_tier_plan_info{tier=\"normal\",source=\"analytic\"} 1"));
+        assert!(text.contains("emtopt_tier_planned_uj_per_inference{tier=\"normal\"} 1.5"));
+        assert!(text.contains("emtopt_tier_observed_uj_per_inference{tier=\"normal\"} 0"));
+        assert!(text.contains("emtopt_http_peer_rejected_total 0"));
+        assert!(text.contains("emtopt_queue_depth{tier=\"normal\"} 0"));
         assert!(text.contains("emtopt_request_latency_us_count{tier=\"normal\"} 2"));
         assert!(text.contains("le=\"+Inf\"} 2"));
         assert!(text.contains("quantile=\"0.99\""));
@@ -388,6 +484,7 @@ mod tests {
             rho: 1.0,
             mode: ReadMode::Decomposed,
             budget_uj: 0.5,
+            plan: EnergyPlan::uniform(1, 1.0, ReadMode::Decomposed),
         };
         let text = render(&http, &[(&plan, &stats)], 0.0);
         assert!(text.contains("emtopt_request_latency_us_bucket{tier=\"low\",le=\"5\"} 1"));

@@ -6,7 +6,7 @@
 
 use emtopt::crossbar::ReadCounters;
 use emtopt::device::DeviceConfig;
-use emtopt::energy::ReadMode;
+use emtopt::energy::{EnergyPlan, LayerPlan, PlanSource, ReadMode};
 use emtopt::inference::{NoisyModel, Scratch};
 use emtopt::rng::Rng;
 
@@ -48,8 +48,9 @@ fn batched_matches_sequential_at_1_2_and_n_threads() {
         .max(3);
 
     for mode in [ReadMode::Original, ReadMode::Decomposed] {
+        let plan = model.uniform_plan(mode);
         let mut c_seq = ReadCounters::default();
-        let seq = model.forward_batch_seq(&xs, mode, &cfg, seed, &mut c_seq);
+        let seq = model.forward_batch_seq(&xs, &plan, &cfg, seed, &mut c_seq);
         assert_eq!(seq.len(), batch * model.d_out());
 
         for threads in [1usize, 2, n] {
@@ -59,7 +60,7 @@ fn batched_matches_sequential_at_1_2_and_n_threads() {
                 .unwrap();
             let (par, c_par) = pool.install(|| {
                 let mut c = ReadCounters::default();
-                let y = model.forward_batch(&xs, mode, &cfg, seed, &mut c);
+                let y = model.forward_batch(&xs, &plan, &cfg, seed, &mut c);
                 (y, c)
             });
             assert_eq!(
@@ -87,8 +88,9 @@ fn per_sample_streams_are_independent_of_batch_layout() {
     let d_in = model.d_in();
     let d_out = model.d_out();
 
+    let plan = model.uniform_plan(ReadMode::Original);
     let mut c_batch = ReadCounters::default();
-    let logits = model.forward_batch(&xs, ReadMode::Original, &cfg, seed, &mut c_batch);
+    let logits = model.forward_batch(&xs, &plan, &cfg, seed, &mut c_batch);
 
     let mut scratch = Scratch::for_model(&model);
     let mut c_solo_total = ReadCounters::default();
@@ -99,7 +101,7 @@ fn per_sample_streams_are_independent_of_batch_layout() {
             .forward_into(
                 &xs[i * d_in..(i + 1) * d_in],
                 &mut scratch,
-                ReadMode::Original,
+                &plan,
                 &cfg,
                 &mut rng,
                 &mut c,
@@ -122,6 +124,7 @@ fn counters_merge_in_sample_order_regardless_of_pool() {
     // exactly (merge order is index order, not completion order)
     let cfg = DeviceConfig::default();
     let model = mk_model(&cfg, 9);
+    let plan = model.uniform_plan(ReadMode::Decomposed);
     let xs = batch_input(model.d_in(), 16, 10);
     let run_in = |threads: usize| {
         let pool = rayon::ThreadPoolBuilder::new()
@@ -130,15 +133,105 @@ fn counters_merge_in_sample_order_regardless_of_pool() {
             .unwrap();
         pool.install(|| {
             let mut c = ReadCounters::default();
-            model.forward_batch(&xs, ReadMode::Decomposed, &cfg, 5, &mut c);
+            model.forward_batch(&xs, &plan, &cfg, 5, &mut c);
             c
         })
     };
     let a = run_in(1);
     let b = run_in(4);
     let mut c_global = ReadCounters::default();
-    model.forward_batch(&xs, ReadMode::Decomposed, &cfg, 5, &mut c_global);
+    model.forward_batch(&xs, &plan, &cfg, 5, &mut c_global);
     assert_eq!(a, b);
     assert_eq!(a, c_global);
     assert!(a.cell_pj > 0.0 && a.cycles > 0);
+}
+
+/// A deliberately lopsided plan: every layer at a different rho, the
+/// middle layer additionally bit-serial.  Exercises the per-layer plan
+/// path end to end (ISSUE 4: technique B shaping in the native engine).
+fn non_uniform_plan() -> EnergyPlan {
+    EnergyPlan::new(
+        vec![
+            LayerPlan::new(1.5, ReadMode::Original),
+            LayerPlan::new(6.0, ReadMode::Decomposed),
+            LayerPlan::new(0.5, ReadMode::Original),
+        ],
+        PlanSource::Trained,
+    )
+}
+
+#[test]
+fn non_uniform_plan_parity_at_1_2_and_n_threads() {
+    // ISSUE 4 acceptance: forward_batch_seeds under a non-uniform plan
+    // stays bit-identical (logits AND counters) at any thread count.
+    let cfg = DeviceConfig::default();
+    let model = mk_model(&cfg, 21);
+    let plan = non_uniform_plan();
+    let batch = 7usize;
+    let xs = batch_input(model.d_in(), batch, 22);
+    let seeds: Vec<u64> = (0..batch).map(|i| 0xBEEF + i as u64 * 101).collect();
+    let n = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(4)
+        .max(3);
+
+    let mut c_ref = ReadCounters::default();
+    let reference = model.forward_batch_seeds(&xs, &plan, &cfg, &seeds, &mut c_ref);
+    assert_eq!(reference.len(), batch * model.d_out());
+    for threads in [1usize, 2, n] {
+        let pool = rayon::ThreadPoolBuilder::new()
+            .num_threads(threads)
+            .build()
+            .unwrap();
+        let (par, c_par) = pool.install(|| {
+            let mut c = ReadCounters::default();
+            let y = model.forward_batch_seeds(&xs, &plan, &cfg, &seeds, &mut c);
+            (y, c)
+        });
+        assert_eq!(
+            reference, par,
+            "non-uniform plan: logits must be bit-identical at {threads} threads"
+        );
+        assert_eq!(
+            c_ref, c_par,
+            "non-uniform plan: counters must be bit-identical at {threads} threads"
+        );
+    }
+    // and the seeded batch still equals per-sample solo forwards
+    for i in 0..batch {
+        let mut c = ReadCounters::default();
+        let solo = model.forward_batch_seeds(
+            &xs[i * model.d_in()..(i + 1) * model.d_in()],
+            &plan,
+            &cfg,
+            &seeds[i..i + 1],
+            &mut c,
+        );
+        assert_eq!(
+            solo.as_slice(),
+            &reference[i * model.d_out()..(i + 1) * model.d_out()],
+            "sample {i} must not depend on batch packing under a non-uniform plan"
+        );
+    }
+}
+
+#[test]
+fn non_uniform_plan_changes_energy_and_noise() {
+    // the plan must actually reach the device: per-layer rho shapes the
+    // energy accounting, and a different plan draws different noise
+    let cfg = DeviceConfig::default();
+    let model = mk_model(&cfg, 23);
+    let xs = batch_input(model.d_in(), 4, 24);
+    let seeds: Vec<u64> = (0..4u64).map(|i| 7 + i).collect();
+    let run = |plan: &EnergyPlan| {
+        let mut c = ReadCounters::default();
+        let y = model.forward_batch_seeds(&xs, plan, &cfg, &seeds, &mut c);
+        (y, c)
+    };
+    let (y_uniform, c_uniform) = run(&model.uniform_plan(ReadMode::Original));
+    let (y_plan, c_plan) = run(&non_uniform_plan());
+    assert_ne!(y_uniform, y_plan, "plan rho must reach the noise draw");
+    assert_ne!(c_uniform.cell_pj, c_plan.cell_pj, "plan rho must reach the energy accounting");
+    // decomposed middle layer pays extra cycles vs the all-original plan
+    assert!(c_plan.cycles > c_uniform.cycles);
 }

@@ -7,11 +7,14 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use emtopt::coordinator::router::NativeServerConfig;
+use emtopt::coordinator::{store, Solution, TrainedModel};
 use emtopt::device::DeviceConfig;
+use emtopt::energy::EnergyModel;
 use emtopt::inference::NoisyModel;
 use emtopt::rng::Rng;
+use emtopt::runtime::raw_of_rho;
 use emtopt::server::http::HttpConn;
-use emtopt::server::{serve_http, HttpServerConfig, ServerHandle};
+use emtopt::server::{model_desc, serve_http, HttpServerConfig, ServerHandle};
 use emtopt::util::json::Json;
 
 /// A small random dense stack programmed on the crossbar substrate.
@@ -67,6 +70,25 @@ fn get(conn: &mut HttpConn<TcpStream>, path: &str) -> (u16, Vec<u8>) {
     conn.read_response(1 << 20).unwrap()
 }
 
+/// POST returning status, headers and parsed body.
+fn post_parts(
+    conn: &mut HttpConn<TcpStream>,
+    path: &str,
+    body: &str,
+) -> (u16, Vec<(String, String)>, Json) {
+    conn.write_request("POST", path, body.as_bytes()).unwrap();
+    let (status, headers, body) = conn.read_response_parts(1 << 20).unwrap();
+    let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    (status, headers, v)
+}
+
+fn header_value<'h>(headers: &'h [(String, String)], name: &str) -> Option<&'h str> {
+    headers
+        .iter()
+        .find(|(k, _)| k == name)
+        .map(|(_, v)| v.as_str())
+}
+
 /// Render one pixel row as a JSON array literal.
 fn image_json(row: &[f32]) -> String {
     let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
@@ -91,6 +113,15 @@ fn happy_path_infer_classify_tiers() {
     assert_eq!(v.get("input_len").unwrap().as_usize().unwrap(), 8);
     assert_eq!(v.get("num_classes").unwrap().as_usize().unwrap(), 3);
     assert_eq!(v.get("max_batch").unwrap().as_usize().unwrap(), 64);
+    // the energy-plan subsystem advertises its provenance + per-tier rho
+    assert_eq!(v.get("plan_source").unwrap().as_str().unwrap(), "analytic");
+    let tiers = v.get("tiers").unwrap().as_arr().unwrap();
+    assert_eq!(tiers.len(), 3);
+    for t in tiers {
+        assert_eq!(t.get("source").unwrap().as_str().unwrap(), "analytic");
+        assert_eq!(t.get("rho").unwrap().as_f32s().unwrap().len(), 1);
+        assert!(t.get("planned_uj").unwrap().as_f64().unwrap() > 0.0);
+    }
 
     // infer: logits + echo of the tier plan
     let img = "[0.1,0.2,0.3,0.4,0.5,0.6,0.7,0.8]";
@@ -99,6 +130,8 @@ fn happy_path_infer_classify_tiers() {
     assert_eq!(v.get("logits").unwrap().as_arr().unwrap().len(), 3);
     assert_eq!(v.get("tier").unwrap().as_str().unwrap(), "normal");
     assert_eq!(v.get("mode").unwrap().as_str().unwrap(), "original");
+    assert_eq!(v.get("plan_source").unwrap().as_str().unwrap(), "analytic");
+    assert_eq!(v.get("rho_per_layer").unwrap().as_f32s().unwrap().len(), 1);
 
     // classify adds the argmax, and tiers select different lanes
     let (status, v) = post(
@@ -415,17 +448,27 @@ fn overload_sheds_with_503() {
                 let img: Vec<String> =
                     (0..192).map(|_| format!("{}", r.next_f32())).collect();
                 let body = format!("{{\"image\":[{}]}}", img.join(","));
-                let (status, _) = post(&mut conn, "/v1/infer", &body);
-                status
+                let (status, headers, _) = post_parts(&mut conn, "/v1/infer", &body);
+                let retry_after = header_value(&headers, "retry-after")
+                    .map(|v| v.parse::<u64>().expect("retry-after must be an integer"));
+                (status, retry_after)
             })
         })
         .collect();
-    let statuses: Vec<u16> = threads.into_iter().map(|t| t.join().unwrap()).collect();
-    let ok = statuses.iter().filter(|&&s| s == 200).count();
-    let shed = statuses.iter().filter(|&&s| s == 503).count();
+    let statuses: Vec<(u16, Option<u64>)> =
+        threads.into_iter().map(|t| t.join().unwrap()).collect();
+    let ok = statuses.iter().filter(|&&(s, _)| s == 200).count();
+    let shed = statuses.iter().filter(|&&(s, _)| s == 503).count();
     assert_eq!(ok + shed, burst, "only 200/503 expected, got {statuses:?}");
     assert!(ok >= 1, "at least one request must be admitted");
     assert!(shed >= 1, "burst of {burst} at queue_depth 1 must shed load");
+    // every 503 carries an honest, bounded Retry-After back-off hint
+    for (status, retry_after) in &statuses {
+        if *status == 503 {
+            let ra = retry_after.expect("503 must carry retry-after");
+            assert!((1..=30).contains(&ra), "retry-after {ra} out of range");
+        }
+    }
 
     handle.shutdown().unwrap();
 }
@@ -446,4 +489,257 @@ fn graceful_shutdown_via_admin_endpoint() {
     assert!(handle.shutdown_requested());
     // full drain: every thread joins
     handle.shutdown().unwrap();
+}
+
+#[test]
+fn per_peer_connection_cap_rejects_with_429() {
+    // a tight cap: 2 live connections per peer IP
+    let dev = DeviceConfig::default();
+    let m = model(&[(8, 3)], 3, &dev);
+    let handle = serve_http(
+        m,
+        HttpServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_conns_per_peer: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // two connections get served; make sure both are past the acceptor
+    let img = "[0.1,0.2,0.3,0.4,0.5,0.6,0.7,0.8]";
+    let mut c1 = connect(&handle);
+    let mut c2 = connect(&handle);
+    let (status, _) = post(&mut c1, "/v1/infer", &format!("{{\"image\":{img}}}"));
+    assert_eq!(status, 200);
+    let (status, _) = post(&mut c2, "/v1/infer", &format!("{{\"image\":{img}}}"));
+    assert_eq!(status, 200);
+
+    // the third connection from the same IP is rejected outright with a
+    // typed 429 + back-off hint (no request ever sent)
+    let mut c3 = connect(&handle);
+    let (status, headers, body) = c3.read_response_parts(1 << 20).unwrap();
+    assert_eq!(status, 429);
+    assert!(header_value(&headers, "retry-after").is_some());
+    let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert!(v.get("error").unwrap().as_str().unwrap().contains("cap 2"));
+
+    // closing a connection frees the slot: a fresh connection serves
+    // again once the handler notices the close (read-timeout bounded)
+    drop(c1);
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let served = loop {
+        let mut c = connect(&handle);
+        let wrote = c.write_request("GET", "/healthz", b"").is_ok();
+        match c.read_response(1 << 20) {
+            Ok((200, _)) if wrote => break true,
+            _ if std::time::Instant::now() > deadline => break false,
+            _ => std::thread::sleep(Duration::from_millis(50)),
+        }
+    };
+    assert!(served, "slot must free up after the peer closes a connection");
+
+    // the rejection is visible on /metrics (reuse the live keep-alive
+    // connection: a fresh one could race the slot just freed above)
+    let (status, metrics) = get(&mut c2, "/metrics");
+    assert_eq!(status, 200);
+    let text = String::from_utf8(metrics).unwrap();
+    let rejected: f64 = text
+        .lines()
+        .find(|l| l.starts_with("emtopt_http_peer_rejected_total"))
+        .and_then(|l| l.rsplit_once(' '))
+        .map(|(_, v)| v.parse().unwrap())
+        .unwrap();
+    assert!(rejected >= 1.0, "peer rejection counter must tick: {rejected}");
+    assert!(text
+        .lines()
+        .any(|l| l.starts_with("emtopt_http_requests_total{code=\"429\"}")));
+
+    drop(c2);
+    handle.shutdown().unwrap();
+}
+
+/// Store fixture for the trained-plan end-to-end tests: a 2-layer model
+/// with trained rho (2.0, 8.0) — a deliberately lopsided 1:4 allocation.
+fn trained_fixture(dir: &std::path::Path) -> std::path::PathBuf {
+    let trained = TrainedModel {
+        model_key: "fixture_8_6_3".into(),
+        solution: Solution::AB,
+        params: vec![
+            (vec![8, 6], vec![0.1; 48]),
+            (vec![6], vec![0.0; 6]),
+            (vec![6, 3], vec![0.1; 18]),
+            (vec![3], vec![0.0; 3]),
+        ],
+        rho_raw: vec![raw_of_rho(2.0), raw_of_rho(8.0)],
+        loss_trace: vec![1.0, 0.5],
+    };
+    let path = dir.join("fixture.emtm");
+    store::save(&trained, &path).unwrap();
+    path
+}
+
+#[test]
+fn trained_store_plan_flows_store_to_http() {
+    // ISSUE 4 acceptance: a non-uniform EnergyPlan flows
+    // store -> tier plans -> inference -> HTTP.  With a fixture store
+    // model, /v1/infer returns per-layer rho matching the stored rho_raw
+    // rescaled to the tier budget, and batch logits stay bit-identical
+    // across worker counts under that plan.
+    let dir = std::env::temp_dir().join("emtopt_http_trained_fixture");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = trained_fixture(&dir);
+    let trained_rho = emtopt::server::load_trained_rho(&path).unwrap();
+    assert_eq!(trained_rho.len(), 2);
+
+    let dev = DeviceConfig::default();
+    let mk = |workers: usize| {
+        let m = model(&[(8, 6), (6, 3)], 11, &dev);
+        serve_http(
+            m,
+            HttpServerConfig {
+                addr: "127.0.0.1:0".into(),
+                trained_rho: Some(trained_rho.clone()),
+                engine: NativeServerConfig {
+                    batch: 4,
+                    workers,
+                    max_wait: Duration::from_millis(1),
+                    device: dev.clone(),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    };
+    let a = mk(1);
+    let b = mk(3);
+    let mut conn = connect(&a);
+
+    // healthz advertises the trained source
+    let (status, body) = get(&mut conn, "/healthz");
+    assert_eq!(status, 200);
+    let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(v.get("plan_source").unwrap().as_str().unwrap(), "trained");
+
+    // every tier: rho_per_layer preserves the stored 1:4 allocation,
+    // rescaled to the tier budget (checked against the analytic model)
+    let img = "[0.1,0.2,0.3,0.4,0.5,0.6,0.7,0.8]";
+    let desc = {
+        let m = model(&[(8, 6), (6, 3)], 11, &dev);
+        model_desc(&m)
+    };
+    let em = EnergyModel::new(dev.act_bits);
+    let reference_uj =
+        em.model_uj_uniform(&desc, dev.rho as f64, emtopt::energy::ReadMode::Original);
+    let mut per_tier_rho: Vec<Vec<f32>> = Vec::new();
+    for (tier, scale) in [("low", 0.5), ("normal", 1.0), ("high", 2.0)] {
+        let (status, v) = post(
+            &mut conn,
+            "/v1/infer",
+            &format!("{{\"image\":{img},\"tier\":\"{tier}\"}}"),
+        );
+        assert_eq!(status, 200);
+        assert_eq!(v.get("plan_source").unwrap().as_str().unwrap(), "trained");
+        let rho = v.get("rho_per_layer").unwrap().as_f32s().unwrap();
+        assert_eq!(rho.len(), 2);
+        assert!(
+            (rho[1] / rho[0] - 4.0).abs() < 1e-3,
+            "tier {tier}: stored 1:4 rho allocation lost, got {rho:?}"
+        );
+        // rescaled to the tier budget: the plan's analytic energy equals
+        // the tier's target (no clamping at these magnitudes)
+        let plan = emtopt::energy::EnergyPlan::new(
+            rho.iter()
+                .map(|&r| {
+                    emtopt::energy::LayerPlan::new(
+                        r,
+                        if tier == "low" {
+                            emtopt::energy::ReadMode::Decomposed
+                        } else {
+                            emtopt::energy::ReadMode::Original
+                        },
+                    )
+                })
+                .collect(),
+            emtopt::energy::PlanSource::Trained,
+        );
+        let planned = em.plan_uj(&desc, &plan);
+        let target = reference_uj * scale;
+        assert!(
+            (planned - target).abs() / target < 1e-3,
+            "tier {tier}: plan energy {planned} must hit the tier budget {target}"
+        );
+        per_tier_rho.push(rho);
+    }
+    // a larger budget at the same read mode buys elementwise-larger rho
+    // (low reads decomposed — cheaper cells — so it is not comparable)
+    for l in 0..2 {
+        assert!(per_tier_rho[2][l] > per_tier_rho[1][l]);
+    }
+
+    // batch-parity under the trained plan across worker counts
+    let n = 5usize;
+    let rows: Vec<Vec<f32>> = (0..n)
+        .map(|i| {
+            let mut r = Rng::stream(777, i as u64);
+            (0..8).map(|_| r.next_f32()).collect()
+        })
+        .collect();
+    let rows_json: Vec<String> = rows.iter().map(|r| image_json(r)).collect();
+    let body = format!("{{\"images\":[{}],\"tier\":\"normal\"}}", rows_json.join(","));
+    let batch_logits = |handle: &ServerHandle| -> Vec<Vec<f32>> {
+        let mut conn = connect(handle);
+        let (status, v) = post(&mut conn, "/v1/infer", &body);
+        assert_eq!(status, 200);
+        v.get("logits")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|row| row.as_f32s().unwrap())
+            .collect()
+    };
+    let la = batch_logits(&a);
+    let lb = batch_logits(&b);
+    assert_eq!(la, lb, "trained-plan batch logits must not depend on worker count");
+    // and singles reproduce the batch rows bit-exactly
+    let mut conn_b = connect(&b);
+    for (i, rj) in rows_json.iter().enumerate() {
+        let (status, v) = post(
+            &mut conn_b,
+            "/v1/infer",
+            &format!("{{\"image\":{rj},\"tier\":\"normal\"}}"),
+        );
+        assert_eq!(status, 200);
+        assert_eq!(v.get("logits").unwrap().as_f32s().unwrap(), la[i]);
+    }
+
+    a.shutdown().unwrap();
+    b.shutdown().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn trained_store_layer_mismatch_is_rejected_at_boot() {
+    // a 2-layer trained vector cannot serve a 1-layer model: serve_http
+    // must fail fast with a typed error, not silently fall back
+    let dir = std::env::temp_dir().join("emtopt_http_trained_mismatch");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = trained_fixture(&dir);
+    let trained_rho = emtopt::server::load_trained_rho(&path).unwrap();
+    let dev = DeviceConfig::default();
+    let m = model(&[(8, 3)], 3, &dev);
+    let err = serve_http(
+        m,
+        HttpServerConfig {
+            addr: "127.0.0.1:0".into(),
+            trained_rho: Some(trained_rho),
+            ..Default::default()
+        },
+    )
+    .err()
+    .expect("layer-count mismatch must refuse to boot");
+    assert!(err.to_string().contains("layers"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
 }

@@ -29,7 +29,7 @@ fn native_sim_energy_matches_analytical_shape() {
         let arr = CrossbarArray::program(&w, k, n, &cfg);
         let mut out = vec![0.0f32; n];
         let mut counters = ReadCounters::default();
-        arr.mac(&x, &mut out, mode, 5, 1.0, rng, &mut counters);
+        arr.mac(&x, &mut out, arr.read_plan(mode), 5, 1.0, rng, &mut counters);
         counters.cell_pj
     };
     let e1 = run(1.0, ReadMode::Original, &mut rng);
@@ -79,7 +79,13 @@ fn native_mlp_accuracy_degrades_with_intensity() {
                     .unwrap()
                     .0
             };
-            let noisy = model.forward_single(&x, ReadMode::Original, &cfg, rng, &mut counters);
+            let noisy = model.forward_single(
+                &x,
+                &model.uniform_plan(ReadMode::Original),
+                &cfg,
+                rng,
+                &mut counters,
+            );
             if argmax(&clean) == argmax(&noisy) {
                 same += 1;
             }
@@ -135,7 +141,7 @@ fn store_roundtrip_runtime_shapes() {
             (vec![3, 3, 3, 16], vec![0.5; 3 * 3 * 3 * 16]),
             (vec![16], vec![0.0; 16]),
         ],
-        rho_raw: vec![4.0; 10],
+        rho_raw: vec![4.0; 1],
         loss_trace: vec![2.3, 1.0],
     };
     let dir = std::env::temp_dir().join("emtopt_integration_store");

@@ -112,7 +112,7 @@ fn prop_crossbar_energy_counters_monotone() {
         let mut counters = ReadCounters::default();
         let mut last = 0.0;
         for _ in 0..4 {
-            arr.mac(&x, &mut out, ReadMode::Original, 5, 1.0, rng, &mut counters);
+            arr.mac(&x, &mut out, arr.read_plan(ReadMode::Original), 5, 1.0, rng, &mut counters);
             assert!(counters.cell_pj >= last);
             last = counters.cell_pj;
         }
@@ -136,12 +136,13 @@ fn prop_forward_batch_deterministic_per_seed() {
         let xs: Vec<f32> = (0..batch * d_in).map(|_| rng.next_f32()).collect();
         let mut c1 = ReadCounters::default();
         let mut c2 = ReadCounters::default();
-        let y1 = model.forward_batch(&xs, ReadMode::Original, &cfg, case, &mut c1);
-        let y2 = model.forward_batch(&xs, ReadMode::Original, &cfg, case, &mut c2);
+        let plan = model.uniform_plan(ReadMode::Original);
+        let y1 = model.forward_batch(&xs, &plan, &cfg, case, &mut c1);
+        let y2 = model.forward_batch(&xs, &plan, &cfg, case, &mut c2);
         assert_eq!(y1, y2, "case {case}: same seed must reproduce");
         assert_eq!(c1, c2);
         let mut c3 = ReadCounters::default();
-        let y3 = model.forward_batch(&xs, ReadMode::Original, &cfg, case + 1000, &mut c3);
+        let y3 = model.forward_batch(&xs, &plan, &cfg, case + 1000, &mut c3);
         assert_ne!(y1, y3, "case {case}: different seed must resample noise");
     });
 }
