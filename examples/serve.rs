@@ -1,7 +1,7 @@
 //! Serving example: the full network path — HTTP clients over real TCP
-//! sockets -> connection pool -> per-tier dynamic batcher -> native
-//! crossbar engine (one immutable `Arc<NoisyModel>` shared by every
-//! lane's worker pool).
+//! sockets -> connection pool -> per-tier bounded queues -> unified
+//! scheduler (one shared work-stealing worker pool over one immutable
+//! `Arc<NoisyModel>`).
 //!
 //! Boots `emtopt::server::serve_http` on an ephemeral localhost port,
 //! drives it with the open-loop load generator (keep-alive connections,
@@ -42,7 +42,7 @@ fn main() -> emtopt::Result<()> {
     // crossbar (real accuracy, no AOT training stack needed)
     let model = Arc::new(template_classifier(&dataset, &dev)?);
     println!(
-        "deploying template classifier ({} cells) behind HTTP, {workers} workers per tier lane",
+        "deploying template classifier ({} cells) behind HTTP, {workers} shared workers",
         model.num_cells()
     );
 

@@ -1,57 +1,51 @@
-//! Inference request router + dynamic batcher.
+//! Inference request router: the client-facing front of the engines.
 //!
-//! The serving front of the coordinator (vllm-router-style): clients
-//! submit single images; the router accumulates them into fixed-size
-//! device batches (padding stragglers) and fans the per-sample logits
-//! back to the callers.  Clients with bulk traffic skip the wait
-//! entirely: [`InferenceClient::try_infer_batch`] submits a multi-image
-//! request that the batcher dispatches immediately as its own device
-//! batch (still through the same bounded queues — admission control is
-//! identical, and oversize batches fail fast with the typed
-//! [`BatchTooLarge`] error the HTTP layer maps to `413`).
+//! Clients submit single images or multi-image batches through a
+//! clonable [`InferenceClient`].  Clients with bulk traffic skip any
+//! batching wait: [`InferenceClient::try_infer_batch`] submits a
+//! multi-image request that dispatches as its own device batch (still
+//! through the same bounded queues — admission control is identical,
+//! and oversize batches fail fast with the typed [`BatchTooLarge`]
+//! error the HTTP layer maps to `413`).
 //!
 //! **Noise determinism (native engine):** every image draws its device
 //! noise from a content-derived stream, [`image_seed`]`(lane_seed,
 //! pixels)`, fed to [`NoisyModel::forward_batch_seeds`].  An image's
 //! logits therefore depend only on its own pixels and the lane seed —
-//! never on how the batcher packed it — so a multi-image request is
-//! bit-identical to the same images as sequential single requests at any
-//! worker/thread count.  The AOT backend cannot honour this: its
-//! executables take one seed scalar per padded batch (see DESIGN.md §8),
-//! so there batch packing does affect the noise draw.
+//! never on how the scheduler packed or which worker ran it — so a
+//! multi-image request is bit-identical to the same images as
+//! sequential single requests at any worker/thread count, even with
+//! work stealing active.  The AOT backend cannot honour this: its
+//! executables take one seed scalar per padded batch (see DESIGN.md
+//! §8), so there batch packing does affect the noise draw.
 //!
 //! Two engine backends share the same [`InferenceClient`] front:
 //!
-//! * **Native** ([`serve_native`]) — the default.  A pool of worker
-//!   threads shares one immutable `Arc<NoisyModel>` (the crossbar arrays
-//!   are `Send + Sync` shared state); each worker pulls a padded batch off
-//!   the dispatch queue and runs [`NoisyModel::forward_batch`], which
-//!   additionally fans the batch across rayon.  Per-batch energy/latency
-//!   is aggregated into [`ServerStats`].
+//! * **Native** ([`serve_native`]) — the default: a single-lane
+//!   [`scheduler::Engine`](crate::scheduler::Engine) (shared worker
+//!   pool, bounded per-lane queue, dynamic batching inside the
+//!   workers).  The tiered HTTP front end (`server`) starts one
+//!   multi-lane engine instead and wraps each lane in a client via
+//!   [`clients_for_engine`] — one pool serves every tier, stealing
+//!   capacity toward the loaded lanes (DESIGN.md §10).
 //! * **AOT** ([`serve`], `--features aot`) — the PJRT executable path.
-//!   PJRT handles are `!Send`, so that engine is pinned to one thread and
-//!   fed over a channel (the single-owner pattern a real accelerator
-//!   queue uses).
+//!   PJRT handles are `!Send`, so that engine is pinned to one thread
+//!   and fed over a channel (the single-owner pattern a real
+//!   accelerator queue uses).
 //!
-//! Batching policy: fire when the batch is full OR `max_wait` elapsed
-//! since the oldest queued request (classic dynamic batching).
-//!
-//! Channels are std::sync::mpsc (this build is offline — no tokio); each
-//! request carries its own reply channel, so any number of client threads
-//! can share one [`InferenceClient`].
-//!
-//! **Backpressure contract:** the request queue is a bounded
-//! `sync_channel` (`queue_depth`), and the batcher→worker job queue is
-//! bounded at `workers` jobs.  [`InferenceClient::infer`] blocks when the
-//! queue is full; [`InferenceClient::try_infer`] fails fast with a typed
-//! [`Overloaded`] error instead, which the HTTP front end
-//! (`server`) maps to `503 Service Unavailable`.  An overload therefore
-//! surfaces as latency or load-shedding, never as unbounded memory.
+//! **Backpressure contract:** each lane's request queue is bounded
+//! (`queue_depth`).  [`InferenceClient::infer`] blocks when the queue
+//! is full; [`InferenceClient::try_infer`] fails fast with a typed
+//! [`Overloaded`] error instead, which the HTTP front end maps to `503
+//! Service Unavailable`.  With an energy budget configured, admission
+//! additionally consults the engine's governor, whose typed
+//! `EnergyShed` refusal also maps to `503` (see `scheduler::governor`).
+//! An overload therefore surfaces as latency or load-shedding, never as
+//! unbounded memory.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, RecvTimeoutError, TrySendError};
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
 use crate::crossbar::ReadCounters;
 use crate::device::DeviceConfig;
@@ -59,7 +53,13 @@ use crate::energy::{EnergyPlan, ReadMode};
 use crate::inference::NoisyModel;
 use crate::metrics::{BatchSizeHistogram, LatencyHistogram};
 use crate::rng::hash2;
+use crate::scheduler::{Engine, LaneSpec};
 use crate::Result;
+
+#[cfg(feature = "aot")]
+use std::sync::mpsc::{self, RecvTimeoutError, TrySendError};
+#[cfg(feature = "aot")]
+use std::time::Instant;
 
 #[cfg(feature = "aot")]
 use crate::coordinator::TrainedModel;
@@ -70,8 +70,11 @@ use crate::device::Intensity;
 #[cfg(feature = "aot")]
 use crate::runtime::{Artifacts, Predictor};
 
-/// One inference request: one or more images and a reply slot for the
-/// concatenated per-image logits.
+/// One inference request on the channel-fed AOT engine: one or more
+/// images and a reply slot for the concatenated per-image logits.  (The
+/// native scheduler keeps its own queue item type; see
+/// `scheduler::Engine`.)
+#[cfg(feature = "aot")]
 struct Request {
     /// `count * input_len` row-major pixels.
     images: Vec<f32>,
@@ -82,11 +85,12 @@ struct Request {
 }
 
 /// Content-derived noise seed of one request image: a fold of the pixel
-/// bit patterns under the lane seed.  Both router paths (dynamic batcher
-/// and direct client batches) seed sample RNGs with this, which is what
-/// makes a served image's logits independent of batch packing (see the
-/// module docs).  Deterministic across platforms — `f32::to_bits` of
-/// identical pixels is identical everywhere.
+/// bit patterns under the lane seed.  Both native paths (dynamic
+/// batching and direct client batches) seed sample RNGs with this,
+/// which is what makes a served image's logits independent of batch
+/// packing and worker identity (see the module docs).  Deterministic
+/// across platforms — `f32::to_bits` of identical pixels is identical
+/// everywhere.
 pub fn image_seed(lane_seed: u64, image: &[f32]) -> u64 {
     let mut h = hash2(lane_seed, image.len() as u64);
     for v in image {
@@ -111,8 +115,8 @@ fn atomic_add_f64(cell: &AtomicU64, v: f64) {
 #[derive(Debug, Default)]
 pub struct ServerStats {
     /// Client requests admitted into the bounded queue (incremented at
-    /// submit time; `requests` is incremented at reply time, so
-    /// `submitted - requests` is the live queue depth, see
+    /// admission time; `requests` is incremented at reply time, so
+    /// `submitted - requests` is the live in-flight count, see
     /// [`ServerStats::queued_requests`]).
     pub submitted: AtomicU64,
     /// Client requests replied to (a multi-image request counts once).
@@ -188,7 +192,9 @@ impl ServerStats {
 
     /// Requests currently waiting or in flight (admitted but not yet
     /// replied).  A point-in-time gauge — submit and reply race by
-    /// design, so transient off-by-a-few reads are expected.
+    /// design, so transient off-by-a-few reads are expected.  The
+    /// scheduler additionally exposes the *true* per-lane queue length
+    /// (waiting only, not in flight) via its snapshot.
     pub fn queued_requests(&self) -> u64 {
         self.submitted
             .load(Ordering::Relaxed)
@@ -274,12 +280,20 @@ impl std::fmt::Display for BatchTooLarge {
 
 impl std::error::Error for BatchTooLarge {}
 
+/// Where a client's requests go: a lane of the native scheduler engine,
+/// or the channel feeding the single-owner AOT engine.
+#[derive(Clone)]
+enum ClientBackend {
+    Scheduler { engine: Engine, lane: usize },
+    #[cfg(feature = "aot")]
+    Channel(mpsc::SyncSender<Request>),
+}
+
 /// Handle used by clients to submit requests (clonable across threads).
 #[derive(Clone)]
 pub struct InferenceClient {
-    tx: mpsc::SyncSender<Request>,
-    /// Lane stats (shared with the engine): the client stamps
-    /// `submitted` on successful admission so queue depth is observable.
+    backend: ClientBackend,
+    /// Lane stats (shared with the engine).
     stats: Arc<ServerStats>,
     pub num_classes: usize,
     /// Expected input length (d_in of the deployed model).
@@ -290,40 +304,17 @@ pub struct InferenceClient {
 }
 
 impl InferenceClient {
-    fn make_request(
-        &self,
-        images: Vec<f32>,
-        count: usize,
-    ) -> (Request, mpsc::Receiver<Result<Vec<f32>>>) {
-        let (reply, rx) = mpsc::channel();
-        (
-            Request {
-                images,
-                count,
-                reply,
-                enqueued: Instant::now(),
-            },
-            rx,
-        )
-    }
-
-    fn make_single(
-        &self,
-        image: Vec<f32>,
-    ) -> Result<(Request, mpsc::Receiver<Result<Vec<f32>>>)> {
+    fn check_single(&self, image: &[f32]) -> Result<()> {
         anyhow::ensure!(
             image.len() == self.input_len,
             "image must be {} floats, got {}",
             self.input_len,
             image.len()
         );
-        Ok(self.make_request(image, 1))
+        Ok(())
     }
 
-    fn make_batch(
-        &self,
-        images: Vec<f32>,
-    ) -> Result<(Request, mpsc::Receiver<Result<Vec<f32>>>)> {
+    fn check_batch(&self, images: &[f32]) -> Result<usize> {
         anyhow::ensure!(
             !images.is_empty() && images.len() % self.input_len == 0,
             "batch must be a non-empty multiple of {} floats, got {}",
@@ -337,33 +328,42 @@ impl InferenceClient {
                 max: self.max_client_batch,
             }));
         }
-        Ok(self.make_request(images, count))
+        Ok(count)
     }
 
-    fn submit_blocking(
-        &self,
-        req: Request,
-        rx: mpsc::Receiver<Result<Vec<f32>>>,
-    ) -> Result<Vec<f32>> {
-        self.tx
-            .send(req)
-            .map_err(|_| anyhow::anyhow!("server stopped"))?;
-        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
-        rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
-    }
-
-    fn submit_nonblocking(
-        &self,
-        req: Request,
-        rx: mpsc::Receiver<Result<Vec<f32>>>,
-    ) -> Result<Vec<f32>> {
-        match self.tx.try_send(req) {
-            Ok(()) => {}
-            Err(TrySendError::Full(_)) => return Err(anyhow::Error::new(Overloaded)),
-            Err(TrySendError::Disconnected(_)) => anyhow::bail!("server stopped"),
+    /// Submit and wait for the logits (admission first, then the reply).
+    fn submit(&self, images: Vec<f32>, count: usize, block: bool) -> Result<Vec<f32>> {
+        match &self.backend {
+            ClientBackend::Scheduler { engine, lane } => {
+                let rx = engine.submit(*lane, images, count, block)?;
+                rx.recv()
+                    .map_err(|_| anyhow::anyhow!("server dropped request"))?
+            }
+            #[cfg(feature = "aot")]
+            ClientBackend::Channel(tx) => {
+                let (reply, rx) = mpsc::channel();
+                let req = Request {
+                    images,
+                    count,
+                    reply,
+                    enqueued: Instant::now(),
+                };
+                if block {
+                    tx.send(req).map_err(|_| anyhow::anyhow!("server stopped"))?;
+                } else {
+                    match tx.try_send(req) {
+                        Ok(()) => {}
+                        Err(TrySendError::Full(_)) => {
+                            return Err(anyhow::Error::new(Overloaded))
+                        }
+                        Err(TrySendError::Disconnected(_)) => anyhow::bail!("server stopped"),
+                    }
+                }
+                self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+                rx.recv()
+                    .map_err(|_| anyhow::anyhow!("server dropped request"))?
+            }
         }
-        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
-        rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))?
     }
 
     /// Lane stats handle (queue depth, energy, latency accessors).
@@ -374,31 +374,37 @@ impl InferenceClient {
     /// Classify one image (len `input_len`); blocks until the logits
     /// arrive.  If the bounded request queue is full, blocks until a slot
     /// frees up (backpressure) — use [`InferenceClient::try_infer`] to
-    /// shed load instead.
+    /// shed load instead.  On an engine with an energy budget armed,
+    /// admission can still fail fast with a typed `EnergyShed` error:
+    /// an exhausted budget clears on the governor's window timescale
+    /// (seconds), not on queue drain, so blocking for it would be a
+    /// stall, not backpressure.
     pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
-        let (req, rx) = self.make_single(image)?;
-        self.submit_blocking(req, rx)
+        self.check_single(&image)?;
+        self.submit(image, 1, true)
     }
 
     /// Like [`InferenceClient::infer`], but fails fast with a typed
     /// [`Overloaded`] error when the bounded request queue is full instead
     /// of blocking (admission control for the serving front end).
     pub fn try_infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
-        let (req, rx) = self.make_single(image)?;
-        self.submit_nonblocking(req, rx)
+        self.check_single(&image)?;
+        self.submit(image, 1, false)
     }
 
     /// Submit `count = images.len() / input_len` images as one request;
     /// blocks until the concatenated `count * num_classes` logits arrive.
-    /// The batcher dispatches the whole request immediately (no
-    /// `max_wait`).  On the **native** backend, per-image logits are
-    /// bit-identical to the same images sent through
+    /// The engine dispatches the whole request immediately as its own
+    /// device batch (no `max_wait`).  On the **native** backend,
+    /// per-image logits are bit-identical to the same images sent through
     /// [`InferenceClient::infer`] one at a time (content-derived noise
     /// seeds); the AOT backend draws noise from one per-batch seed
-    /// scalar, so no such guarantee holds there.
+    /// scalar, so no such guarantee holds there.  Like
+    /// [`InferenceClient::infer`], a governed engine may refuse with a
+    /// typed `EnergyShed` instead of blocking.
     pub fn infer_batch(&self, images: Vec<f32>) -> Result<Vec<f32>> {
-        let (req, rx) = self.make_batch(images)?;
-        self.submit_blocking(req, rx)
+        let count = self.check_batch(&images)?;
+        self.submit(images, count, true)
     }
 
     /// Like [`InferenceClient::infer_batch`], but fails fast with
@@ -406,8 +412,8 @@ impl InferenceClient {
     /// [`BatchTooLarge`] when the request exceeds the per-request image
     /// cap) instead of blocking.
     pub fn try_infer_batch(&self, images: Vec<f32>) -> Result<Vec<f32>> {
-        let (req, rx) = self.make_batch(images)?;
-        self.submit_nonblocking(req, rx)
+        let count = self.check_batch(&images)?;
+        self.submit(images, count, false)
     }
 
     /// Classify and argmax.
@@ -418,7 +424,7 @@ impl InferenceClient {
 }
 
 // ---------------------------------------------------------------------------
-// native engine: shared Arc<NoisyModel>, pool of batch workers
+// native engine: thin wrappers over scheduler::Engine
 // ---------------------------------------------------------------------------
 
 /// Configuration of the native serving engine.
@@ -426,17 +432,20 @@ impl InferenceClient {
 pub struct NativeServerConfig {
     /// Device batch size (requests per crossbar dispatch).
     pub batch: usize,
-    /// Engine worker threads sharing the model (each runs whole batches;
-    /// `forward_batch` additionally parallelises inside a batch via rayon).
+    /// Worker threads in the engine's **shared** pool (`forward_batch`
+    /// additionally parallelises inside a batch via rayon).  A tiered
+    /// engine shares this pool across all its lanes — capacity moves
+    /// between tiers with load instead of being statically split.
     pub workers: usize,
     /// Max time the oldest request may wait before a partial batch fires.
     pub max_wait: Duration,
-    /// Bounded request-queue depth: `infer` blocks and `try_infer`
-    /// returns [`Overloaded`] once this many requests are waiting.
+    /// Bounded request-queue depth per lane: `infer` blocks and
+    /// `try_infer` returns [`Overloaded`] once this many requests are
+    /// waiting on the lane.
     pub queue_depth: usize,
     /// Max images accepted in one multi-image client request
     /// ([`BatchTooLarge`] above it).  Bounds the memory one queue slot
-    /// can pin: the request queue holds at most
+    /// can pin: a lane's queue holds at most
     /// `queue_depth * max_client_batch` images.
     pub max_client_batch: usize,
     /// Per-layer energy allocation this lane reads with.  `None` falls
@@ -448,6 +457,15 @@ pub struct NativeServerConfig {
     /// Lane RNG seed; image `x` draws noise from
     /// `Rng::new(image_seed(seed, x))` (see [`image_seed`]).
     pub seed: u64,
+    /// Interval of the scheduler's capacity rebalancer (multi-lane
+    /// engines only).  `Duration::ZERO` disables the background loop —
+    /// tests drive `Engine::rebalance_once` manually instead.
+    pub rebalance_interval: Duration,
+    /// Fleet-level energy budget in uJ/s: when the rolling observed
+    /// device energy rate exceeds it, the engine's governor sheds the
+    /// lowest-priority lanes with a typed `EnergyShed` error (HTTP
+    /// `503` + `Retry-After`).  `None` disables the governor.
+    pub energy_budget_uj_s: Option<f64>,
 }
 
 impl Default for NativeServerConfig {
@@ -461,197 +479,54 @@ impl Default for NativeServerConfig {
             plan: None,
             device: DeviceConfig::default(),
             seed: 1,
+            rebalance_interval: Duration::from_millis(50),
+            energy_budget_uj_s: None,
         }
     }
 }
 
-/// One device batch handed from the batcher to a worker: accumulated
-/// single-image requests, or one multi-image request dispatched alone.
-struct Job {
-    requests: Vec<Request>,
+/// Build one [`InferenceClient`] per engine lane (the tiered HTTP front
+/// end's path; [`serve_native`] is the single-lane flavour).  Clients
+/// are clonable and share the engine's stop token — the engine stops
+/// once every client (and the engine handle itself) is dropped.
+pub fn clients_for_engine(engine: &Engine, max_client_batch: usize) -> Vec<InferenceClient> {
+    (0..engine.n_lanes())
+        .map(|lane| InferenceClient {
+            backend: ClientBackend::Scheduler {
+                engine: engine.clone(),
+                lane,
+            },
+            stats: engine.stats(lane).clone(),
+            num_classes: engine.d_out(),
+            input_len: engine.d_in(),
+            max_client_batch,
+        })
+        .collect()
 }
 
-/// Everything a native engine worker needs (shared model + accounting).
-struct Worker {
-    model: Arc<NoisyModel>,
-    stats: Arc<ServerStats>,
-    device: DeviceConfig,
-    /// The lane's resolved per-layer energy plan (validated, one entry
-    /// per model layer).
-    plan: EnergyPlan,
-    batch: usize,
-    seed: u64,
-}
-
-impl Worker {
-    fn run_batch(&self, job: Job) {
-        let d_in = self.model.d_in();
-        let nc = self.model.d_out();
-        let n_images: usize = job.requests.iter().map(|r| r.count).sum();
-        // Unlike the fixed-shape AOT executables, the native engine accepts
-        // any batch length — run exactly the real images, so under-filled
-        // batches burn no device energy on padding (padded_slots still
-        // records the unfilled share for the batch-fill statistic).
-        let mut x = vec![0.0f32; n_images * d_in];
-        let mut seeds = Vec::with_capacity(n_images);
-        let mut off = 0usize;
-        for r in &job.requests {
-            x[off * d_in..off * d_in + r.images.len()].copy_from_slice(&r.images);
-            for i in 0..r.count {
-                seeds.push(image_seed(self.seed, &r.images[i * d_in..(i + 1) * d_in]));
-            }
-            off += r.count;
-        }
-        let t0 = Instant::now();
-        let mut counters = ReadCounters::default();
-        let logits =
-            self.model
-                .forward_batch_seeds(&x, &self.plan, &self.device, &seeds, &mut counters);
-        let infer_us = t0.elapsed().as_micros() as u64;
-
-        self.stats
-            .requests
-            .fetch_add(job.requests.len() as u64, Ordering::Relaxed);
-        self.stats.images.fetch_add(n_images as u64, Ordering::Relaxed);
-        self.stats.batches.fetch_add(1, Ordering::Relaxed);
-        self.stats
-            .padded_slots
-            .fetch_add(self.batch.saturating_sub(n_images) as u64, Ordering::Relaxed);
-        self.stats.infer_us.fetch_add(infer_us, Ordering::Relaxed);
-        self.stats.dispatch_batch_sizes.record(n_images as u64);
-        self.stats.add_counters(&counters);
-
-        let mut off = 0usize;
-        for r in &job.requests {
-            if r.count > 1 {
-                self.stats
-                    .client_batch_requests
-                    .fetch_add(1, Ordering::Relaxed);
-            }
-            let total_us = r.enqueued.elapsed().as_micros() as u64;
-            self.stats.queue_us.fetch_add(total_us, Ordering::Relaxed);
-            self.stats.latency.record_us(total_us);
-            let _ = r
-                .reply
-                .send(Ok(logits[off * nc..(off + r.count) * nc].to_vec()));
-            off += r.count;
-        }
-    }
-}
-
-/// Spawn the router + native engine pool over a shared immutable model.
+/// Spawn a single-lane scheduler engine over a shared immutable model.
 ///
-/// Returns the client handle, stats, and the engine thread handles (the
-/// batcher plus `cfg.workers` workers).  Drop all clients to stop the
-/// engine; then join the handles.
+/// Returns the client handle, stats, and the engine thread handles.
+/// Drop all clients to stop the engine; then join the handles.
 pub fn serve_native(
     model: Arc<NoisyModel>,
     cfg: NativeServerConfig,
 ) -> Result<(InferenceClient, Arc<ServerStats>, Vec<std::thread::JoinHandle<()>>)> {
-    anyhow::ensure!(cfg.batch > 0, "batch must be positive");
-    anyhow::ensure!(cfg.workers > 0, "need at least one worker");
-    anyhow::ensure!(cfg.queue_depth > 0, "queue_depth must be positive");
     anyhow::ensure!(cfg.max_client_batch > 0, "max_client_batch must be positive");
     let plan = match cfg.plan.clone() {
         Some(p) => p,
         None => model.uniform_plan(ReadMode::Original),
     };
-    plan.validate(model.layers().len())?;
-    let input_len = model.d_in();
-    let num_classes = model.d_out();
-
-    // Bounded queues end-to-end: requests cap at `queue_depth`, and the
-    // batcher can run at most `workers` jobs ahead of the pool, so an
-    // overload propagates back to the clients instead of growing memory.
-    let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
-    let (job_tx, job_rx) = mpsc::sync_channel::<Job>(cfg.workers);
-    let job_rx = Arc::new(Mutex::new(job_rx));
-    let stats = Arc::new(ServerStats::default());
-    let mut handles = Vec::with_capacity(cfg.workers + 1);
-
-    // Batcher: collects single-image requests into batches and hands them
-    // to the pool.  A multi-image request is already a batch — it is
-    // dispatched as its own job immediately, never waiting out `max_wait`
-    // (the whole point of the client batch path), and never merged with
-    // accumulated singles (whose job fires first, preserving arrival
-    // order).
-    let (batch, max_wait) = (cfg.batch, cfg.max_wait);
-    handles.push(std::thread::spawn(move || loop {
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // all clients dropped
-        };
-        if first.count > 1 {
-            if job_tx.send(Job { requests: vec![first] }).is_err() {
-                return; // workers gone
-            }
-            continue;
-        }
-        let mut pending = Vec::with_capacity(batch);
-        pending.push(first);
-        // A multi-image request that arrives mid-accumulation closes the
-        // single-image batch early and follows it as its own job.
-        let mut express: Option<Request> = None;
-        let deadline = Instant::now() + max_wait;
-        while pending.len() < batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) if r.count > 1 => {
-                    express = Some(r);
-                    break;
-                }
-                Ok(r) => pending.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        }
-        if job_tx.send(Job { requests: pending }).is_err() {
-            return;
-        }
-        if let Some(r) = express {
-            if job_tx.send(Job { requests: vec![r] }).is_err() {
-                return;
-            }
-        }
-    }));
-
-    // Worker pool: all workers read the same Arc<NoisyModel>.
-    for _ in 0..cfg.workers {
-        let worker = Worker {
-            model: model.clone(),
-            stats: stats.clone(),
-            device: cfg.device.clone(),
-            plan: plan.clone(),
-            batch: cfg.batch,
-            seed: cfg.seed,
-        };
-        let job_rx = job_rx.clone();
-        handles.push(std::thread::spawn(move || loop {
-            let job = {
-                let guard = job_rx.lock().expect("job queue poisoned");
-                match guard.recv() {
-                    Ok(j) => j,
-                    Err(_) => return, // batcher gone
-                }
-            };
-            worker.run_batch(job);
-        }));
-    }
-
-    Ok((
-        InferenceClient {
-            tx,
-            stats: stats.clone(),
-            num_classes,
-            input_len,
-            max_client_batch: cfg.max_client_batch,
-        },
-        stats,
-        handles,
-    ))
+    let lanes = vec![LaneSpec {
+        plan,
+        seed: cfg.seed,
+    }];
+    let (engine, handles) = Engine::start(model, &cfg, lanes)?;
+    let stats = engine.stats(0).clone();
+    let client = clients_for_engine(&engine, cfg.max_client_batch)
+        .pop()
+        .expect("single-lane engine yields one client");
+    Ok((client, stats, handles))
 }
 
 // ---------------------------------------------------------------------------
@@ -809,7 +684,7 @@ pub fn serve(
 
     Ok((
         InferenceClient {
-            tx,
+            backend: ClientBackend::Channel(tx),
             stats: stats.clone(),
             num_classes,
             input_len: IMG_LEN,
@@ -1057,8 +932,8 @@ mod tests {
     fn try_infer_sheds_load_when_queue_full() {
         // A deliberately slow model (two 192x192 layers) with queue_depth 1,
         // one worker, batch 1: a burst of concurrent try_infer calls can
-        // park at most ~4 requests (in-flight + job queue + batcher +
-        // request queue); the rest must fail fast with Overloaded.
+        // park at most a few requests (in flight + the one queue slot);
+        // the rest must fail fast with Overloaded.
         let dev = DeviceConfig::default();
         let d = 192usize;
         let mut rng = Rng::new(11);

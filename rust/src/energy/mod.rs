@@ -14,6 +14,9 @@
 //! VGG-16/CIFAR at rho == 1 lands in the paper's tens-of-uJ range; all
 //! comparisons in EXPERIMENTS.md are ratios, which are calibration-free.
 
+use std::sync::Mutex;
+use std::time::Duration;
+
 use crate::device::{self, Intensity};
 use crate::models::{LayerMeta, ModelDesc};
 
@@ -431,6 +434,128 @@ impl EnergyModel {
     }
 }
 
+// ---------------------------------------------------------------------------
+// rolling energy accounting + fleet budget math (serving-time energy SLO)
+// ---------------------------------------------------------------------------
+
+/// Ring slots of the [`EnergyMeter`] window (16 slots keeps the rate
+/// estimate within one-sixteenth of the window of the true value while
+/// the state stays a fixed-size array).
+pub const ENERGY_METER_SLOTS: usize = 16;
+
+/// Rolling-window energy meter: the **observed** side of the serving
+/// energy SLO.  Batch workers record their device energy (uJ) with a
+/// monotonic microsecond timestamp; [`EnergyMeter::rate_uj_s`] reports
+/// the uJ/s spent over the trailing window.  The window is a fixed ring
+/// of [`ENERGY_METER_SLOTS`] coarse slots, so memory is constant no
+/// matter the request rate, and a slot falls out of the sum exactly one
+/// window after it was filled.
+#[derive(Debug)]
+pub struct EnergyMeter {
+    slot_us: u64,
+    /// `(slot id, uJ sum)` ring; recording happens once per dispatched
+    /// batch (not per read), so a mutex is plenty.
+    slots: Mutex<Vec<(u64, f64)>>,
+}
+
+impl EnergyMeter {
+    pub fn new(window: Duration) -> Self {
+        let slot_us = (window.as_micros() as u64 / ENERGY_METER_SLOTS as u64).max(1);
+        EnergyMeter {
+            slot_us,
+            slots: Mutex::new(vec![(u64::MAX, 0.0); ENERGY_METER_SLOTS]),
+        }
+    }
+
+    /// Effective window length in seconds (slot-rounded).
+    pub fn window_s(&self) -> f64 {
+        (self.slot_us * ENERGY_METER_SLOTS as u64) as f64 / 1e6
+    }
+
+    /// Record `uj` microjoules observed at monotonic time `t_us`.
+    pub fn record(&self, t_us: u64, uj: f64) {
+        let id = t_us / self.slot_us;
+        let mut slots = self.slots.lock().expect("energy meter poisoned");
+        let slot = &mut slots[(id % ENERGY_METER_SLOTS as u64) as usize];
+        if slot.0 != id {
+            *slot = (id, 0.0);
+        }
+        slot.1 += uj;
+    }
+
+    /// Rolling energy rate over the window ending at `t_us`, uJ/s.
+    pub fn rate_uj_s(&self, t_us: u64) -> f64 {
+        let id_now = t_us / self.slot_us;
+        let slots = self.slots.lock().expect("energy meter poisoned");
+        let sum: f64 = slots
+            .iter()
+            .filter(|&&(id, _)| {
+                id != u64::MAX && id <= id_now && id_now - id < ENERGY_METER_SLOTS as u64
+            })
+            .map(|&(_, uj)| uj)
+            .sum();
+        sum / self.window_s()
+    }
+}
+
+/// Over-budget ratio per extra shed tier: at `budget < rate <= 1.5x`
+/// only the lowest tier sheds; each further 1.5x multiple sheds the
+/// next tier up (the top tier is never shed, see
+/// [`EnergyBudget::shed_lanes`]).
+pub const SHED_ESCALATE_RATIO: f64 = 1.5;
+
+/// Fleet-level serving energy budget (uJ/s) and its shedding policy —
+/// the closed loop on the paper's accuracy-per-joule contract: when the
+/// rolling observed rate exceeds the budget, the cheapest (lowest-tier)
+/// work is refused first, so the remaining joules buy the accuracy the
+/// premium tiers paid for.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyBudget {
+    /// Target ceiling for the rolling device energy rate, uJ/s
+    /// (validated positive at governor construction).
+    pub budget_uj_s: f64,
+}
+
+impl EnergyBudget {
+    /// Budget minus observed rate: positive = headroom, negative = the
+    /// overshoot the governor is currently shedding against.
+    pub fn headroom_uj_s(&self, rate_uj_s: f64) -> f64 {
+        self.budget_uj_s - rate_uj_s
+    }
+
+    /// How many of the lowest-priority lanes to shed at `rate_uj_s`:
+    /// 0 within budget, 1 just above it, one more lane per
+    /// [`SHED_ESCALATE_RATIO`] multiple of over-budget.  The
+    /// highest-priority lane is **never** shed — for premium traffic the
+    /// budget surfaces as a throughput squeeze, not a hard `503`, so a
+    /// single-lane engine with a budget never sheds at all.
+    pub fn shed_lanes(&self, rate_uj_s: f64, n_lanes: usize) -> usize {
+        if rate_uj_s <= self.budget_uj_s {
+            return 0;
+        }
+        let ratio = rate_uj_s / self.budget_uj_s;
+        let mut shed = 1usize;
+        let mut threshold = SHED_ESCALATE_RATIO;
+        while ratio > threshold && shed + 1 < n_lanes {
+            shed += 1;
+            threshold *= SHED_ESCALATE_RATIO;
+        }
+        shed.min(n_lanes.saturating_sub(1))
+    }
+
+    /// Honest `Retry-After` for an energy-shed request: the time the
+    /// rolling window needs to decay back under budget if no further
+    /// energy were spent — `window_s * (1 - budget/rate)` — rounded up
+    /// and clamped to [1, 30] s.
+    pub fn retry_after_s(&self, rate_uj_s: f64, window_s: f64) -> u64 {
+        if rate_uj_s <= self.budget_uj_s {
+            return 1;
+        }
+        let wait = window_s * (1.0 - self.budget_uj_s / rate_uj_s);
+        (wait.ceil() as u64).clamp(1, 30)
+    }
+}
+
 /// Fluctuation sigma that a model sees at a given uniform rho (relative to
 /// full-scale). Convenience glue for accuracy-vs-energy sweeps.
 pub fn sigma_at(rho: f64, intensity: Intensity) -> f64 {
@@ -669,6 +794,52 @@ mod tests {
         assert_eq!(plan.mean_rho(), 4.0);
         assert_eq!(plan.lead_mode(), ReadMode::Original);
         assert_eq!(PlanSource::Trained.name(), "trained");
+    }
+
+    #[test]
+    fn energy_meter_rolls_its_window() {
+        // 1 s window -> 62.5 ms slots, window_s exactly 1.0
+        let m = EnergyMeter::new(Duration::from_secs(1));
+        assert!((m.window_s() - 1.0).abs() < 1e-12);
+        assert_eq!(m.rate_uj_s(0), 0.0);
+        m.record(0, 50.0);
+        m.record(10_000, 50.0); // same window
+        assert!((m.rate_uj_s(10_000) - 100.0).abs() < 1e-9);
+        // a fresh spend half a window later still sees the old one
+        m.record(500_000, 100.0);
+        assert!((m.rate_uj_s(500_000) - 200.0).abs() < 1e-9);
+        // two windows later everything has fallen out
+        assert_eq!(m.rate_uj_s(2_600_000), 0.0);
+        // and slots are reused, not accumulated forever
+        m.record(2_600_000, 30.0);
+        assert!((m.rate_uj_s(2_600_000) - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn budget_shed_lanes_escalate_lowest_first() {
+        let b = EnergyBudget { budget_uj_s: 10.0 };
+        assert_eq!(b.shed_lanes(5.0, 3), 0, "under budget sheds nothing");
+        assert_eq!(b.shed_lanes(10.0, 3), 0, "at budget sheds nothing");
+        assert_eq!(b.shed_lanes(12.0, 3), 1, "just over: lowest tier only");
+        assert_eq!(b.shed_lanes(20.0, 3), 2, "2x over: two lowest tiers");
+        assert_eq!(b.shed_lanes(1e6, 3), 2, "the top tier is never shed");
+        // a single-lane engine never sheds (its only lane is the top one)
+        assert_eq!(b.shed_lanes(1e6, 1), 0);
+        assert!((b.headroom_uj_s(4.0) - 6.0).abs() < 1e-12);
+        assert!((b.headroom_uj_s(14.0) + 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn budget_retry_after_tracks_window_decay() {
+        let b = EnergyBudget { budget_uj_s: 10.0 };
+        // under budget: minimal back-off
+        assert_eq!(b.retry_after_s(5.0, 2.0), 1);
+        // 2x over a 2 s window: half the window must decay -> 1 s
+        assert_eq!(b.retry_after_s(20.0, 2.0), 1);
+        // far over: approaches the full window, rounded up
+        assert_eq!(b.retry_after_s(1e9, 2.0), 2);
+        // clamped to the [1, 30] s hint range
+        assert_eq!(b.retry_after_s(1e9, 100.0), 30);
     }
 
     #[test]

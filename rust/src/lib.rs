@@ -37,6 +37,7 @@ pub mod models;
 pub mod quant;
 pub mod rng;
 pub mod runtime;
+pub mod scheduler;
 pub mod server;
 pub mod timing;
 pub mod util;

@@ -64,7 +64,7 @@ FLAGS (defaults in parentheses):
   --pretrain N        (120)   --finetune N (120)
   --lam F             (0.3)   --seed N (7)
   --requests N        serve: request count (256); loadgen: total requests (1000)
-  --workers N         serve/serve-http: engine workers per lane (2)
+  --workers N         serve/serve-http: workers in the shared engine pool (2)
   --host H            serve-http: bind host (127.0.0.1)
   --port N            serve-http: bind port, 0 = ephemeral (8080)
   --duration S        serve-http: run seconds, 0 = until POST /admin/shutdown (0)
@@ -79,6 +79,10 @@ FLAGS (defaults in parentheses):
   --model-store FILE  serve-http: stored model (.emtm) whose trained
                       per-layer rho shapes the tier energy plans
                       (plan source \"trained\"; analytic otherwise)
+  --energy-budget-uj-s F serve-http: fleet energy budget in uJ/s — over
+                      it, low tiers shed with 503 + Retry-After (off)
+  --rebalance-ms N    serve-http: scheduler rebalance interval, 0
+                      disables the loop (50)
   --addr A            loadgen: target server (127.0.0.1:8080)
   --connections N     loadgen: concurrent keep-alive connections (8)
   --qps F             loadgen: aggregate target rate, 0 = closed loop (0)
@@ -87,6 +91,9 @@ FLAGS (defaults in parentheses):
   --ladder            loadgen: sweep a qps ladder (0.25x..2x measured
                       capacity) per tier and record the full curve
   --ladder-points N   loadgen: rungs on the ladder (5)
+  --batch-sweep LIST  loadgen: with --ladder, sweep these images-per-
+                      request sizes per tier (e.g. 1,4,16) to map the
+                      batch-amortisation surface
   --calib-requests N  loadgen: closed-loop calibration requests (= --requests)
   --out FILE          loadgen: report path (BENCH_serve.json)
 ";
@@ -425,6 +432,16 @@ fn serve_http_cmd(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
         }
         None => None,
     };
+    // fleet energy budget: arms the scheduler's governor (energy-SLO
+    // admission control; low tiers shed with 503 when the rolling uJ/s
+    // runs over)
+    let energy_budget_uj_s = match args.get("energy-budget-uj-s") {
+        Some(v) => Some(
+            v.parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("bad --energy-budget-uj-s {v:?}"))?,
+        ),
+        None => None,
+    };
     let http_cfg = HttpServerConfig {
         addr: format!("{host}:{port}"),
         conn_threads: args.parse_or("conn-threads", 16usize)?,
@@ -438,6 +455,10 @@ fn serve_http_cmd(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
             workers: args.parse_or("workers", 2usize)?,
             queue_depth: args.parse_or("queue-depth", 256usize)?,
             max_client_batch: args.parse_or("max-client-batch", 64usize)?,
+            rebalance_interval: std::time::Duration::from_millis(
+                args.parse_or("rebalance-ms", 50u64)?,
+            ),
+            energy_budget_uj_s,
             device: dev,
             ..Default::default()
         },
@@ -448,6 +469,9 @@ fn serve_http_cmd(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
     println!("  POST /v1/infer | /v1/classify   GET /healthz | /metrics   POST /admin/shutdown");
     for (plan, _) in handle.per_tier() {
         println!("  {}", plan.describe());
+    }
+    if let Some(b) = energy_budget_uj_s {
+        println!("  energy governor armed: budget {b} uJ/s (low tiers shed over it)");
     }
     let t0 = std::time::Instant::now();
     loop {
@@ -491,12 +515,28 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         batch: args.parse_or("batch", 1usize)?,
     };
     let out = args.str_or("out", "BENCH_serve.json");
+    let batch_sweep: Vec<usize> = match args.get("batch-sweep") {
+        Some(s) => s
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("bad --batch-sweep entry {t:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?,
+        None => Vec::new(),
+    };
+    anyhow::ensure!(
+        batch_sweep.is_empty() || args.has("ladder"),
+        "--batch-sweep requires --ladder"
+    );
     if args.has("ladder") {
         let points = args.parse_or("ladder-points", 5usize)?;
         let ladder = LadderConfig {
             base: lg,
             fractions: loadgen::ladder_fractions(points),
             calib_requests: args.parse_or("calib-requests", 0u64)?,
+            batch_sweep,
         };
         let report = loadgen::run_ladder(&ladder)?;
         print!("{}", report.render());

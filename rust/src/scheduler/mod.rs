@@ -1,0 +1,675 @@
+//! Unified adaptive scheduler: ONE shared worker pool over per-lane
+//! bounded queues, replacing the three statically-partitioned
+//! `serve_native` engines the tiered HTTP front end used to spawn.
+//!
+//! ```text
+//!              queue "low"   queue "normal"   queue "high"
+//!  submit ──►  [bounded]     [bounded]        [bounded]
+//!                   \             |              /
+//!                    └──── shared worker pool ──┘
+//!                     (home lanes + deficit-weighted stealing)
+//!                          rebalancer  ·  EnergyGovernor
+//! ```
+//!
+//! * **Work stealing.**  Every free worker picks the next lane by
+//!   deficit-weighted round-robin over the non-empty queues
+//!   ([`pick_lane`]): each eligible lane earns its rebalancer-set
+//!   pressure weight as credit per pick and the winner pays the whole
+//!   round, so pull frequency tracks load exactly, a burst on one tier
+//!   is served by the whole pool, and — because every weight is
+//!   floored at 1 — no backlogged lane can starve.  Ties favour the
+//!   worker's *home* lane (the rebalancer's capacity assignment);
+//!   serving a foreign lane is counted as a steal.
+//! * **Rebalancer.**  A background loop (interval
+//!   `NativeServerConfig::rebalance_interval`; [`Engine::rebalance_once`]
+//!   steps it manually for deterministic tests) recomputes home
+//!   assignments from live queue depth and p99 per lane
+//!   ([`rebalance::assign`]) — effective capacity follows load.
+//! * **Energy governor.**  With `NativeServerConfig::energy_budget_uj_s`
+//!   set, admission consults an [`EnergyGovernor`]: when the rolling
+//!   observed uJ/s exceeds the budget, the lowest-priority lanes shed
+//!   with the typed [`EnergyShed`] error (HTTP `503` + `Retry-After`).
+//! * **Drain.**  [`Engine::begin_drain`] freezes the rebalancer and
+//!   switches the pool to strict highest-priority-first pulls, so a
+//!   graceful shutdown flushes premium work before cheap work.
+//!
+//! **Determinism.**  Work stealing cannot change results: every served
+//! image draws its noise from the content-derived seed
+//! `image_seed(lane_seed, pixels)` (`coordinator::router`), which
+//! depends only on the image bytes and its lane — never on which worker
+//! ran it, how the pool batched it, or what the rebalancer did in
+//! between.  The batch-parity suites pin this end to end.
+
+pub mod governor;
+pub mod rebalance;
+
+pub use governor::{EnergyGovernor, EnergyShed};
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::router::{image_seed, NativeServerConfig, Overloaded, ServerStats};
+use crate::crossbar::ReadCounters;
+use crate::device::DeviceConfig;
+use crate::energy::EnergyPlan;
+use crate::inference::NoisyModel;
+use crate::Result;
+
+/// One scheduling lane: the per-layer energy plan its reads use and the
+/// RNG lane seed its images derive their noise streams from.  Lane
+/// index doubles as drain/shed priority — index 0 is the lowest
+/// priority (shed first, drained last).
+#[derive(Clone, Debug)]
+pub struct LaneSpec {
+    pub plan: EnergyPlan,
+    pub seed: u64,
+}
+
+/// One queued request: one or more images plus the reply slot for the
+/// concatenated per-image logits.
+struct WorkItem {
+    /// `count * d_in` row-major pixels.
+    images: Vec<f32>,
+    count: usize,
+    reply: mpsc::Sender<Result<Vec<f32>>>,
+    enqueued: Instant,
+}
+
+/// Per-lane engine state outside the scheduler mutex.
+struct Lane {
+    plan: EnergyPlan,
+    seed: u64,
+    stats: Arc<ServerStats>,
+    /// Batches of this lane executed by a worker homed elsewhere.
+    steals: AtomicU64,
+    /// Lock-free mirror of the lane's queue length (the true per-lane
+    /// depth gauge on `/metrics`; updated on every push and pull).
+    queue_len: AtomicU64,
+}
+
+/// Mutable scheduling state (one mutex: queues are popped in batches and
+/// the real work — crossbar reads — happens outside the lock).
+struct Sched {
+    queues: Vec<VecDeque<WorkItem>>,
+    /// Worker index -> home lane.
+    homes: Vec<usize>,
+    /// Per-lane steal weights (rebalancer-set pressure scores).
+    weights: Vec<f64>,
+    /// Deficit-round-robin credits for the steal pick.
+    deficits: Vec<f64>,
+    stopped: bool,
+}
+
+struct Shared {
+    model: Arc<NoisyModel>,
+    device: DeviceConfig,
+    batch: usize,
+    max_wait: Duration,
+    queue_depth: usize,
+    lanes: Vec<Lane>,
+    sched: Mutex<Sched>,
+    /// Signalled on push, drain and stop (workers wait here).
+    work_cv: Condvar,
+    /// Signalled on pull (blocking submitters wait here for queue space).
+    space_cv: Condvar,
+    /// Signalled on stop only: the rebalancer sleeps here, so per-submit
+    /// `work_cv` notifications never wake it on the hot path.
+    rebalance_cv: Condvar,
+    draining: AtomicBool,
+    rebalance_moves: AtomicU64,
+    governor: Option<EnergyGovernor>,
+}
+
+/// Stops the engine when the last clone drops: workers finish the
+/// queued work, then exit (mirrors the old channel-disconnect shutdown).
+struct StopToken {
+    shared: Arc<Shared>,
+}
+
+impl Drop for StopToken {
+    fn drop(&mut self) {
+        if let Ok(mut s) = self.shared.sched.lock() {
+            s.stopped = true;
+        }
+        self.shared.work_cv.notify_all();
+        self.shared.space_cv.notify_all();
+        self.shared.rebalance_cv.notify_all();
+    }
+}
+
+/// Handle to a running engine (clonable; the engine stops when the last
+/// clone — including every client built over it — is dropped).
+#[derive(Clone)]
+pub struct Engine {
+    shared: Arc<Shared>,
+    _stop: Arc<StopToken>,
+}
+
+/// Point-in-time scheduler observability, rendered on `/metrics`.
+#[derive(Clone, Debug)]
+pub struct EngineSnapshot {
+    /// Per-lane state, in lane (priority) order.
+    pub lanes: Vec<LaneSnapshot>,
+    /// Cumulative workers moved between homes by the rebalancer.
+    pub rebalance_moves: u64,
+    /// `(rolling observed uJ/s, budget uJ/s)` when the governor is armed.
+    pub energy: Option<(f64, f64)>,
+    pub draining: bool,
+}
+
+/// One lane's slice of an [`EngineSnapshot`].
+#[derive(Clone, Debug)]
+pub struct LaneSnapshot {
+    /// Requests currently waiting in the lane's bounded queue (the true
+    /// per-lane depth, not the submitted-minus-replied derivation).
+    pub queue_len: usize,
+    /// Workers currently homed on this lane (effective capacity share).
+    pub effective_workers: usize,
+    /// Batches served for this lane by workers homed elsewhere.
+    pub steals: u64,
+    /// Requests the energy governor refused on this lane.
+    pub governor_shed: u64,
+}
+
+impl Engine {
+    /// Spawn the shared pool (plus the rebalancer when there is more
+    /// than one lane and `cfg.rebalance_interval` is non-zero) over one
+    /// immutable model.  `cfg.plan`/`cfg.seed` are ignored in favour of
+    /// the per-lane specs.  Returns the engine handle and every thread
+    /// handle (join them after dropping the engine and its clients).
+    pub fn start(
+        model: Arc<NoisyModel>,
+        cfg: &NativeServerConfig,
+        lanes: Vec<LaneSpec>,
+    ) -> Result<(Engine, Vec<std::thread::JoinHandle<()>>)> {
+        anyhow::ensure!(!lanes.is_empty(), "engine needs at least one lane");
+        anyhow::ensure!(cfg.batch > 0, "batch must be positive");
+        anyhow::ensure!(cfg.workers > 0, "need at least one worker");
+        anyhow::ensure!(cfg.queue_depth > 0, "queue_depth must be positive");
+        for (i, l) in lanes.iter().enumerate() {
+            l.plan
+                .validate(model.layers().len())
+                .map_err(|e| anyhow::anyhow!("lane {i}: {e}"))?;
+        }
+        if let Some(b) = cfg.energy_budget_uj_s {
+            anyhow::ensure!(
+                b.is_finite() && b > 0.0,
+                "energy budget must be a positive uJ/s value, got {b}"
+            );
+        }
+        let n = lanes.len();
+        let governor = cfg.energy_budget_uj_s.map(|b| EnergyGovernor::new(b, n));
+        let shared = Arc::new(Shared {
+            model,
+            device: cfg.device.clone(),
+            batch: cfg.batch,
+            max_wait: cfg.max_wait,
+            queue_depth: cfg.queue_depth,
+            lanes: lanes
+                .into_iter()
+                .map(|l| Lane {
+                    plan: l.plan,
+                    seed: l.seed,
+                    stats: Arc::new(ServerStats::default()),
+                    steals: AtomicU64::new(0),
+                    queue_len: AtomicU64::new(0),
+                })
+                .collect(),
+            sched: Mutex::new(Sched {
+                queues: (0..n).map(|_| VecDeque::new()).collect(),
+                homes: (0..cfg.workers).map(|w| w % n).collect(),
+                weights: vec![1.0; n],
+                deficits: vec![0.0; n],
+                stopped: false,
+            }),
+            work_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            rebalance_cv: Condvar::new(),
+            draining: AtomicBool::new(false),
+            rebalance_moves: AtomicU64::new(0),
+            governor,
+        });
+        let mut handles = Vec::with_capacity(cfg.workers + 1);
+        for w in 0..cfg.workers {
+            let sh = shared.clone();
+            handles.push(std::thread::spawn(move || worker_loop(&sh, w)));
+        }
+        if n > 1 && !cfg.rebalance_interval.is_zero() {
+            let sh = shared.clone();
+            let interval = cfg.rebalance_interval;
+            handles.push(std::thread::spawn(move || rebalancer_loop(&sh, interval)));
+        }
+        let engine = Engine {
+            _stop: Arc::new(StopToken {
+                shared: shared.clone(),
+            }),
+            shared,
+        };
+        Ok((engine, handles))
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.shared.lanes.len()
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.shared.model.d_in()
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.shared.model.d_out()
+    }
+
+    /// The lane's stats handle (same [`ServerStats`] contract the old
+    /// per-tier engines exposed).
+    pub fn stats(&self, lane: usize) -> &Arc<ServerStats> {
+        &self.shared.lanes[lane].stats
+    }
+
+    pub fn plan(&self, lane: usize) -> &EnergyPlan {
+        &self.shared.lanes[lane].plan
+    }
+
+    pub fn energy_budget_uj_s(&self) -> Option<f64> {
+        self.shared.governor.as_ref().map(|g| g.budget_uj_s())
+    }
+
+    /// Freeze rebalancing and switch the pool to strict
+    /// highest-priority-first pulls (graceful-shutdown drain order).
+    pub fn begin_drain(&self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+        // wake accumulating workers so partial batches flush immediately
+        self.shared.work_cv.notify_all();
+    }
+
+    /// One rebalance step (the background loop calls this on its
+    /// interval; tests call it directly for a deterministic clock).
+    /// Returns the number of workers moved; a no-op while draining.
+    pub fn rebalance_once(&self) -> usize {
+        rebalance_shared(&self.shared)
+    }
+
+    /// Scheduler observability for `/metrics`.
+    pub fn snapshot(&self) -> EngineSnapshot {
+        let homes = {
+            let s = self.shared.sched.lock().expect("scheduler poisoned");
+            s.homes.clone()
+        };
+        let mut eff = vec![0usize; self.shared.lanes.len()];
+        for &h in &homes {
+            eff[h] += 1;
+        }
+        EngineSnapshot {
+            lanes: self
+                .shared
+                .lanes
+                .iter()
+                .enumerate()
+                .map(|(i, lane)| LaneSnapshot {
+                    queue_len: lane.queue_len.load(Ordering::Relaxed) as usize,
+                    effective_workers: eff[i],
+                    steals: lane.steals.load(Ordering::Relaxed),
+                    governor_shed: self
+                        .shared
+                        .governor
+                        .as_ref()
+                        .map_or(0, |g| g.shed_count(i)),
+                })
+                .collect(),
+            rebalance_moves: self.shared.rebalance_moves.load(Ordering::Relaxed),
+            energy: self
+                .shared
+                .governor
+                .as_ref()
+                .map(|g| (g.rate_uj_s(), g.budget_uj_s())),
+            draining: self.shared.draining.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Submit `count` images to `lane`; returns the reply receiver.
+    /// Admission order: governor (typed [`EnergyShed`]) first, then the
+    /// lane's bounded queue — full means a typed [`Overloaded`] error
+    /// (`block == false`) or waiting for space (`block == true`).
+    pub(crate) fn submit(
+        &self,
+        lane: usize,
+        images: Vec<f32>,
+        count: usize,
+        block: bool,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
+        let shared = &self.shared;
+        if let Some(gov) = &shared.governor {
+            gov.admit(lane)?;
+        }
+        let (reply, rx) = mpsc::channel();
+        let item = WorkItem {
+            images,
+            count,
+            reply,
+            enqueued: Instant::now(),
+        };
+        let mut s = shared.sched.lock().expect("scheduler poisoned");
+        loop {
+            anyhow::ensure!(!s.stopped, "server stopped");
+            if s.queues[lane].len() < shared.queue_depth {
+                break;
+            }
+            if !block {
+                return Err(anyhow::Error::new(Overloaded));
+            }
+            s = shared.space_cv.wait(s).expect("scheduler poisoned");
+        }
+        s.queues[lane].push_back(item);
+        shared.lanes[lane]
+            .queue_len
+            .store(s.queues[lane].len() as u64, Ordering::Relaxed);
+        shared.lanes[lane]
+            .stats
+            .submitted
+            .fetch_add(1, Ordering::Relaxed);
+        drop(s);
+        shared.work_cv.notify_all();
+        Ok(rx)
+    }
+}
+
+/// Choose the lane a free worker should serve, or `None` when every
+/// queue is empty.  Draining: strictly highest-priority-first (highest
+/// lane index), so a graceful shutdown flushes premium work before
+/// cheap work.  Normal operation: deficit-weighted round-robin across
+/// the non-empty lanes — every eligible lane earns its weight as
+/// credit, the winner pays the whole round — so pull frequency tracks
+/// the rebalancer's pressure weights, and since every weight is
+/// floored at 1 a backlogged lane always wins within a bounded number
+/// of rounds (no starvation, unlike a naive home-queue-first pick).
+/// Credit ties favour the worker's home lane.  Returns the lane and
+/// whether the pick was a steal (a lane other than the worker's home).
+fn pick_lane(s: &mut Sched, worker: usize, draining: bool) -> Option<(usize, bool)> {
+    if draining {
+        // a drain flush is priority policy, not work stealing: never
+        // counted as a steal, whatever the worker's home is
+        return (0..s.queues.len())
+            .rev()
+            .find(|&l| !s.queues[l].is_empty())
+            .map(|l| (l, false));
+    }
+    let eligible: Vec<usize> = (0..s.queues.len())
+        .filter(|&l| !s.queues[l].is_empty())
+        .collect();
+    if eligible.is_empty() {
+        return None;
+    }
+    let home = s.homes[worker];
+    let round: f64 = eligible.iter().map(|&l| s.weights[l]).sum();
+    let mut best = eligible[0];
+    for &l in &eligible {
+        s.deficits[l] += s.weights[l];
+        if l != best
+            && (s.deficits[l] > s.deficits[best]
+                || (s.deficits[l] == s.deficits[best] && l == home))
+        {
+            best = l;
+        }
+    }
+    s.deficits[best] -= round;
+    Some((best, best != home))
+}
+
+/// One worker of the shared pool: pick a lane, collect one device batch
+/// from its queue, run it against the shared model.
+fn worker_loop(shared: &Shared, worker: usize) {
+    loop {
+        let mut s = shared.sched.lock().expect("scheduler poisoned");
+        // wait for work anywhere (or the stop flag + drained queues)
+        let lane = loop {
+            let draining = shared.draining.load(Ordering::SeqCst);
+            if let Some((lane, stolen)) = pick_lane(&mut s, worker, draining) {
+                if stolen {
+                    shared.lanes[lane].steals.fetch_add(1, Ordering::Relaxed);
+                }
+                break lane;
+            }
+            if s.stopped {
+                return;
+            }
+            s = shared.work_cv.wait(s).expect("scheduler poisoned");
+        };
+        // Collect one device batch: a multi-image request always runs
+        // alone (the express path — it already is a batch); singles
+        // accumulate up to `batch`, waiting out `max_wait` for
+        // stragglers (classic dynamic batching) unless the engine is
+        // draining or stopping.  Arrival order within a lane is
+        // preserved: singles queued ahead of a multi dispatch first.
+        let mut items: Vec<WorkItem> = Vec::new();
+        if s.queues[lane].front().is_some_and(|r| r.count > 1) {
+            items.push(s.queues[lane].pop_front().expect("checked non-empty"));
+        } else {
+            let deadline = Instant::now() + shared.max_wait;
+            loop {
+                while items.len() < shared.batch {
+                    match s.queues[lane].front() {
+                        Some(r) if r.count == 1 => {
+                            items.push(s.queues[lane].pop_front().expect("checked front"));
+                        }
+                        _ => break, // empty, or a multi that must run alone
+                    }
+                }
+                if items.len() >= shared.batch
+                    || s.stopped
+                    || shared.draining.load(Ordering::SeqCst)
+                    || s.queues[lane].front().is_some_and(|r| r.count > 1)
+                {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _timeout) = shared
+                    .work_cv
+                    .wait_timeout(s, deadline - now)
+                    .expect("scheduler poisoned");
+                s = guard;
+            }
+        }
+        shared.lanes[lane]
+            .queue_len
+            .store(s.queues[lane].len() as u64, Ordering::Relaxed);
+        drop(s);
+        shared.space_cv.notify_all();
+        run_batch(shared, lane, items);
+    }
+}
+
+/// Execute one collected batch on the shared model and fan the per-image
+/// logits back to the callers (identical accounting to the old per-lane
+/// engines; per-image noise seeds stay content-derived, so results are
+/// independent of which worker ran the batch).
+fn run_batch(shared: &Shared, lane_idx: usize, items: Vec<WorkItem>) {
+    let lane = &shared.lanes[lane_idx];
+    let model = &shared.model;
+    let d_in = model.d_in();
+    let nc = model.d_out();
+    let n_images: usize = items.iter().map(|r| r.count).sum();
+    let mut x = vec![0.0f32; n_images * d_in];
+    let mut seeds = Vec::with_capacity(n_images);
+    let mut off = 0usize;
+    for r in &items {
+        x[off * d_in..off * d_in + r.images.len()].copy_from_slice(&r.images);
+        for i in 0..r.count {
+            seeds.push(image_seed(lane.seed, &r.images[i * d_in..(i + 1) * d_in]));
+        }
+        off += r.count;
+    }
+    let t0 = Instant::now();
+    let mut counters = ReadCounters::default();
+    let logits = model.forward_batch_seeds(&x, &lane.plan, &shared.device, &seeds, &mut counters);
+    let infer_us = t0.elapsed().as_micros() as u64;
+
+    let stats = &lane.stats;
+    stats.requests.fetch_add(items.len() as u64, Ordering::Relaxed);
+    stats.images.fetch_add(n_images as u64, Ordering::Relaxed);
+    stats.batches.fetch_add(1, Ordering::Relaxed);
+    stats
+        .padded_slots
+        .fetch_add(shared.batch.saturating_sub(n_images) as u64, Ordering::Relaxed);
+    stats.infer_us.fetch_add(infer_us, Ordering::Relaxed);
+    stats.dispatch_batch_sizes.record(n_images as u64);
+    stats.add_counters(&counters);
+    if let Some(gov) = &shared.governor {
+        gov.record_uj(counters.total_pj() * 1e-6);
+    }
+
+    let mut off = 0usize;
+    for r in &items {
+        if r.count > 1 {
+            stats.client_batch_requests.fetch_add(1, Ordering::Relaxed);
+        }
+        let total_us = r.enqueued.elapsed().as_micros() as u64;
+        stats.queue_us.fetch_add(total_us, Ordering::Relaxed);
+        stats.latency.record_us(total_us);
+        let _ = r
+            .reply
+            .send(Ok(logits[off * nc..(off + r.count) * nc].to_vec()));
+        off += r.count;
+    }
+}
+
+/// One rebalance step over the live queue depths and per-lane p99s.
+fn rebalance_shared(shared: &Shared) -> usize {
+    if shared.draining.load(Ordering::SeqCst) {
+        return 0; // capacity is frozen during a drain
+    }
+    let mut s = shared.sched.lock().expect("scheduler poisoned");
+    if s.stopped {
+        return 0;
+    }
+    let loads: Vec<rebalance::LaneLoad> = shared
+        .lanes
+        .iter()
+        .enumerate()
+        .map(|(i, lane)| rebalance::LaneLoad {
+            queue_len: s.queues[i].len(),
+            p99_us: lane.stats.latency.p99_us(),
+        })
+        .collect();
+    let (homes, weights, moves) = rebalance::assign(&s.homes, &loads);
+    s.homes = homes;
+    s.weights = weights;
+    drop(s);
+    if moves > 0 {
+        shared.rebalance_moves.fetch_add(moves as u64, Ordering::Relaxed);
+    }
+    moves
+}
+
+/// Background rebalancer: one [`rebalance_shared`] step per interval,
+/// waking early only for the stop flag (its own condvar — per-request
+/// `work_cv` traffic never touches this thread).
+fn rebalancer_loop(shared: &Shared, interval: Duration) {
+    loop {
+        let deadline = Instant::now() + interval;
+        let mut s = shared.sched.lock().expect("scheduler poisoned");
+        loop {
+            if s.stopped {
+                return;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _timeout) = shared
+                .rebalance_cv
+                .wait_timeout(s, deadline - now)
+                .expect("scheduler poisoned");
+            s = guard;
+        }
+        drop(s);
+        rebalance_shared(shared);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_item(count: usize) -> WorkItem {
+        let (reply, _rx) = mpsc::channel();
+        WorkItem {
+            images: vec![0.0; count],
+            count,
+            reply,
+            enqueued: Instant::now(),
+        }
+    }
+
+    fn sched_with(queued: &[usize]) -> Sched {
+        Sched {
+            queues: queued
+                .iter()
+                .map(|&n| (0..n).map(|_| dummy_item(1)).collect())
+                .collect(),
+            homes: vec![0],
+            weights: vec![1.0; queued.len()],
+            deficits: vec![0.0; queued.len()],
+            stopped: false,
+        }
+    }
+
+    #[test]
+    fn drain_prefers_highest_priority_lane() {
+        // ISSUE 5 satellite: drain order is highest-priority-first, not
+        // lane-creation order — lane 2 flushes before lane 0.  Drain
+        // flushes are priority policy, never counted as steals.
+        let mut s = sched_with(&[2, 0, 1]);
+        assert_eq!(pick_lane(&mut s, 0, true), Some((2, false)));
+        s.queues[2].clear();
+        assert_eq!(pick_lane(&mut s, 0, true), Some((0, false)));
+        s.queues[0].clear();
+        assert_eq!(pick_lane(&mut s, 0, true), None);
+    }
+
+    #[test]
+    fn home_lane_wins_credit_ties() {
+        // equal weights and credits: the worker's home lane takes the
+        // pick (capacity bias without starving anyone)
+        let mut s = sched_with(&[1, 1, 1]);
+        s.homes = vec![1];
+        assert_eq!(pick_lane(&mut s, 0, false), Some((1, false)));
+    }
+
+    #[test]
+    fn saturated_home_cannot_starve_other_lanes() {
+        // the regression the DRR pick exists for: a worker homed on a
+        // lane whose queue never empties must still serve the others
+        // within a bounded number of rounds
+        let mut s = sched_with(&[8, 0, 1]);
+        s.weights = vec![9.0, 1.0, 1.0]; // rebalancer marked lane 0 hot
+        let mut served_high = false;
+        for _ in 0..32 {
+            let (lane, _) = pick_lane(&mut s, 0, false).unwrap();
+            if lane == 2 {
+                served_high = true;
+                break;
+            }
+        }
+        assert!(served_high, "lane 2 starved behind the saturated home lane");
+    }
+
+    #[test]
+    fn steal_pick_follows_weights() {
+        // home (lane 0) empty; lanes 1 and 2 non-empty with weights 1:3
+        // -> over 8 picks the deficit round-robin serves them 2:6
+        let mut s = sched_with(&[0, 4, 4]);
+        s.weights = vec![1.0, 1.0, 3.0];
+        let mut picks = [0usize; 3];
+        for _ in 0..8 {
+            let (lane, stolen) = pick_lane(&mut s, 0, false).unwrap();
+            assert!(stolen, "home is empty: every pick is a steal");
+            picks[lane] += 1;
+        }
+        assert_eq!(picks, [0, 2, 6], "weighted round-robin must hold exactly");
+    }
+}

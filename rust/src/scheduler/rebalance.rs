@@ -1,0 +1,153 @@
+//! Pure capacity-rebalancing policy of the unified scheduler.
+//!
+//! The engine keeps a *home* lane per worker (a soft preference — a
+//! worker whose home queue is empty steals from any non-empty lane, see
+//! `scheduler::pick_lane`).  The rebalancer periodically recomputes the
+//! home assignment from live per-lane pressure (queue depth + tail
+//! latency), so a tier burst pulls effective capacity toward itself
+//! instead of queueing behind idle workers pinned to quiet tiers.
+//!
+//! Everything here is a pure function of its inputs — no clocks, no
+//! atomics — so the policy is unit-testable with a deterministic clock
+//! by construction: one [`assign`] call *is* one rebalance interval.
+
+/// Live pressure observation of one lane at rebalance time.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LaneLoad {
+    /// Requests waiting in the lane's bounded queue.
+    pub queue_len: usize,
+    /// The lane's p99 enqueue-to-reply latency, microseconds
+    /// (cumulative histogram — a slow-burning signal next to the
+    /// instantaneous queue depth).
+    pub p99_us: f64,
+}
+
+/// Pressure score of one lane: every queued request counts 1, and every
+/// 10 ms of p99 tail counts like one queued request.  The `1.0` floor
+/// keeps an idle lane from being starved to weight zero (it still wins
+/// steals occasionally and re-earns capacity the moment traffic lands).
+pub fn lane_score(load: &LaneLoad) -> f64 {
+    1.0 + load.queue_len as f64 + load.p99_us / 10_000.0
+}
+
+/// One rebalance step: recompute per-lane worker targets proportional to
+/// pressure (largest-remainder rounding, ties to the higher-priority
+/// lane), then move the minimum number of workers from over- to
+/// under-provisioned lanes.  Deterministic: identical inputs give
+/// identical assignments, and a second step on an unchanged load is a
+/// no-op.  Returns `(new homes, new steal weights, workers moved)`.
+pub fn assign(prev: &[usize], loads: &[LaneLoad]) -> (Vec<usize>, Vec<f64>, usize) {
+    let n_lanes = loads.len();
+    let workers = prev.len();
+    let scores: Vec<f64> = loads.iter().map(lane_score).collect();
+    let total: f64 = scores.iter().sum();
+    let raw: Vec<f64> = scores.iter().map(|s| s / total * workers as f64).collect();
+    let mut target: Vec<usize> = raw.iter().map(|r| r.floor() as usize).collect();
+    let mut rem: Vec<(usize, f64)> = raw
+        .iter()
+        .enumerate()
+        .map(|(i, r)| (i, r - r.floor()))
+        .collect();
+    // biggest remainder first; ties break toward the higher lane index
+    // (higher priority), so the premium tier wins the odd worker out
+    rem.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(b.0.cmp(&a.0))
+    });
+    let mut left = workers - target.iter().sum::<usize>();
+    for (i, _) in rem {
+        if left == 0 {
+            break;
+        }
+        target[i] += 1;
+        left -= 1;
+    }
+
+    let mut have = vec![0usize; n_lanes];
+    for &h in prev {
+        have[h] += 1;
+    }
+    let mut homes = prev.to_vec();
+    let mut moves = 0usize;
+    for home in homes.iter_mut() {
+        let from = *home;
+        if have[from] <= target[from] {
+            continue;
+        }
+        if let Some(to) = (0..n_lanes).find(|&l| have[l] < target[l]) {
+            have[from] -= 1;
+            have[to] += 1;
+            *home = to;
+            moves += 1;
+        }
+    }
+    (homes, scores, moves)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(queue_len: usize) -> LaneLoad {
+        LaneLoad {
+            queue_len,
+            p99_us: 0.0,
+        }
+    }
+
+    #[test]
+    fn saturated_lane_takes_workers_in_one_step() {
+        // ISSUE 5 satellite: a saturated `high` queue (lane 2) steals the
+        // workers of idle `low`/`normal` lanes within ONE rebalance
+        // interval — one assign() call is one interval, no clock needed.
+        let prev = vec![0, 1, 2];
+        let (homes, weights, moves) = assign(&prev, &[q(0), q(0), q(12)]);
+        assert_eq!(homes, vec![2, 2, 2], "all capacity must move to the hot lane");
+        assert_eq!(moves, 2);
+        assert!(weights[2] > weights[0], "steal weights must favour the hot lane");
+    }
+
+    #[test]
+    fn balanced_load_reaches_a_stable_fixpoint() {
+        // equal pressure: one step lands on the canonical split, and a
+        // second step on the same load moves nothing (no churn)
+        let prev = vec![0, 1, 2, 0];
+        let loads = [q(0), q(0), q(0)];
+        let (homes, _, _) = assign(&prev, &loads);
+        let (homes2, _, moves2) = assign(&homes, &loads);
+        assert_eq!(homes, homes2);
+        assert_eq!(moves2, 0, "unchanged load must not reshuffle workers");
+        // every lane keeps at least one home at this worker count
+        for lane in 0..3 {
+            assert!(homes.iter().any(|&h| h == lane), "lane {lane} starved: {homes:?}");
+        }
+    }
+
+    #[test]
+    fn p99_pressure_attracts_capacity() {
+        // identical queues, but one lane carries a 100 ms p99 tail: the
+        // tail alone (worth ~10 queued requests) pulls workers over
+        let prev = vec![0, 1, 2];
+        let slow = LaneLoad {
+            queue_len: 0,
+            p99_us: 100_000.0,
+        };
+        let (homes, _, moves) = assign(&prev, &[q(0), slow, q(0)]);
+        assert!(moves >= 1);
+        let on_slow = homes.iter().filter(|&&h| h == 1).count();
+        assert!(on_slow >= 2, "tail-heavy lane must gain workers: {homes:?}");
+    }
+
+    #[test]
+    fn priority_wins_remainder_ties() {
+        // all idle, 2 workers over 3 lanes: the odd split favours the
+        // higher-priority lanes (1 and 2), never strands both on low
+        let (homes, _, _) = assign(&[0, 1], &[q(0), q(0), q(0)]);
+        let mut counts = [0usize; 3];
+        for &h in &homes {
+            counts[h] += 1;
+        }
+        assert_eq!(counts, [0, 1, 1], "{homes:?}");
+    }
+}

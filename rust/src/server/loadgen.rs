@@ -95,6 +95,9 @@ pub struct LoadgenReport {
     /// Energy-plan provenance the server advertised on `/healthz`
     /// (`trained`/`analytic`; empty when probing an older server).
     pub plan_source: String,
+    /// Fleet energy budget (uJ/s) the server advertised on `/healthz`
+    /// (`None` when no governor is armed or the server predates it).
+    pub energy_budget_uj_s: Option<f64>,
 }
 
 impl LoadgenReport {
@@ -150,6 +153,13 @@ impl LoadgenReport {
             ("connections", Json::Num(self.connections as f64)),
             ("batch", Json::Num(self.batch as f64)),
             ("plan_source", Json::Str(self.plan_source.clone())),
+            (
+                "energy_budget",
+                match self.energy_budget_uj_s {
+                    Some(b) => Json::Num(b),
+                    None => Json::Null,
+                },
+            ),
             ("target_qps", Json::Num(self.target_qps)),
             ("sent", Json::Num(self.sent as f64)),
             ("ok", Json::Num(self.ok as f64)),
@@ -216,10 +226,13 @@ struct ProbeInfo {
     /// Energy-plan provenance (`trained`/`analytic`; empty on servers
     /// that predate the field).
     plan_source: String,
+    /// Fleet energy budget in uJ/s (`None` when no governor is armed).
+    energy_budget_uj_s: Option<f64>,
 }
 
 /// Probe `/healthz` for the deployed model's shape, the server's
-/// per-request image cap, and the energy-plan source it serves with.
+/// per-request image cap, the energy-plan source it serves with, and
+/// its fleet energy budget (if any).
 fn probe(addr: &str) -> Result<ProbeInfo> {
     let stream = TcpStream::connect(addr)
         .map_err(|e| anyhow::anyhow!("connecting to {addr}: {e}"))?;
@@ -237,11 +250,16 @@ fn probe(addr: &str) -> Result<ProbeInfo> {
         Some(ps) => ps.as_str()?.to_string(),
         None => String::new(),
     };
+    // Json::Null (governor disarmed) and a missing key both map to None
+    let energy_budget_uj_s = v
+        .opt("energy_budget_uj_s")
+        .and_then(|b| b.as_f64().ok());
     Ok(ProbeInfo {
         input_len: v.get("input_len")?.as_usize()?,
         num_classes: v.get("num_classes")?.as_usize()?,
         max_batch,
         plan_source,
+        energy_budget_uj_s,
     })
 }
 
@@ -506,6 +524,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         target_qps: cfg.target_qps,
         batch: cfg.batch,
         plan_source: info.plan_source,
+        energy_budget_uj_s: info.energy_budget_uj_s,
     })
 }
 
@@ -526,6 +545,10 @@ pub struct LadderConfig {
     pub fractions: Vec<f64>,
     /// Requests of the closed-loop calibration run (0 = `base.requests`).
     pub calib_requests: u64,
+    /// Images-per-request sizes to sweep (`--batch-sweep 1,4,16`): each
+    /// tier gets one calibrated curve per batch size, mapping the
+    /// batch-amortisation surface.  Empty = just `base.batch`.
+    pub batch_sweep: Vec<usize>,
 }
 
 /// Evenly spaced offered-load fractions from 0.25x to 2x of measured
@@ -545,11 +568,14 @@ pub struct LadderPoint {
     pub report: LoadgenReport,
 }
 
-/// The latency–throughput curve of one energy tier.
+/// The latency–throughput curve of one (energy tier, batch size) pair.
 #[derive(Clone, Debug)]
 pub struct TierCurve {
     /// Tier name (`low`/`normal`/`high`).
     pub tier: String,
+    /// Images per request body on this curve (a `--batch-sweep` run
+    /// emits one curve per swept size; otherwise the base batch).
+    pub batch: usize,
     /// Closed-loop capacity measured by the calibration run, req/s.
     pub capacity_rps: f64,
     /// Rungs in ascending offered-load order.
@@ -564,6 +590,10 @@ pub struct LadderReport {
     pub requests_per_point: u64,
     /// Energy-plan provenance the server advertised during the sweep.
     pub plan_source: String,
+    /// Fleet energy budget the server advertised (`None` = no governor).
+    pub energy_budget_uj_s: Option<f64>,
+    /// Batch sizes swept per tier (empty when not sweeping).
+    pub batch_sweep: Vec<usize>,
     pub tiers: Vec<TierCurve>,
 }
 
@@ -575,7 +605,7 @@ impl LadderReport {
             let _ = writeln!(
                 s,
                 "ladder tier {:<6} capacity {:.0} req/s ({} images/request)",
-                t.tier, t.capacity_rps, self.batch
+                t.tier, t.capacity_rps, t.batch
             );
             for p in &t.points {
                 let r = &p.report;
@@ -617,6 +647,7 @@ impl LadderReport {
                     .collect();
                 Json::obj(vec![
                     ("tier", Json::Str(t.tier.clone())),
+                    ("batch", Json::Num(t.batch as f64)),
                     ("capacity_rps", Json::Num(t.capacity_rps)),
                     ("curve", Json::Arr(curve)),
                 ])
@@ -627,7 +658,23 @@ impl LadderReport {
             ("mode", Json::Str("ladder".into())),
             ("unix_time", Json::Num(unix_time() as f64)),
             ("plan_source", Json::Str(self.plan_source.clone())),
+            (
+                "energy_budget",
+                match self.energy_budget_uj_s {
+                    Some(b) => Json::Num(b),
+                    None => Json::Null,
+                },
+            ),
             ("batch", Json::Num(self.batch as f64)),
+            (
+                "batch_sweep",
+                Json::Arr(
+                    self.batch_sweep
+                        .iter()
+                        .map(|&b| Json::Num(b as f64))
+                        .collect(),
+                ),
+            ),
             ("connections", Json::Num(self.connections as f64)),
             ("requests_per_point", Json::Num(self.requests_per_point as f64)),
             ("tiers", Json::Arr(tiers)),
@@ -642,8 +689,9 @@ pub fn write_bench_ladder(report: &LadderReport, path: &str) -> Result<()> {
 }
 
 /// Run the full ladder sweep; blocks until every rung of every tier
-/// finished.  Each swept tier gets its own closed-loop calibration run
-/// (capacities differ — the low tier pays decomposed reads), then one
+/// finished.  Each swept (tier, batch size) pair gets its own
+/// closed-loop calibration run (capacities differ — the low tier pays
+/// decomposed reads, and bigger batches amortise dispatch), then one
 /// paced run per fraction, ascending, so every curve's offered qps is
 /// monotone by construction.
 pub fn run_ladder(cfg: &LadderConfig) -> Result<LadderReport> {
@@ -656,54 +704,76 @@ pub fn run_ladder(cfg: &LadderConfig) -> Result<LadderReport> {
         cfg.fractions.iter().all(|&f| f > 0.0),
         "ladder fractions must be positive"
     );
+    let batches: Vec<usize> = if cfg.batch_sweep.is_empty() {
+        vec![cfg.base.batch]
+    } else {
+        anyhow::ensure!(
+            cfg.batch_sweep.iter().all(|&b| b > 0),
+            "batch sweep entries must be positive"
+        );
+        let mut b = cfg.batch_sweep.clone();
+        b.sort_unstable();
+        b.dedup();
+        b
+    };
     let tiers: Vec<EnergyTier> = match cfg.base.tier {
         Some(t) => vec![t],
         None => EnergyTier::ALL.to_vec(),
     };
-    let mut curves = Vec::with_capacity(tiers.len());
+    let mut curves = Vec::with_capacity(tiers.len() * batches.len());
     for tier in tiers {
-        let calib = run(&LoadgenConfig {
-            tier: Some(tier),
-            target_qps: 0.0,
-            requests: if cfg.calib_requests > 0 {
-                cfg.calib_requests
-            } else {
-                cfg.base.requests
-            },
-            ..cfg.base.clone()
-        })?;
-        anyhow::ensure!(
-            calib.ok > 0,
-            "tier {}: calibration run served no requests",
-            tier.name()
-        );
-        // floor at 1 rps so a pathological calibration cannot produce a
-        // zero/negative pacing interval
-        let capacity_rps = calib.throughput_rps.max(1.0);
-        let mut points = Vec::with_capacity(cfg.fractions.len());
-        for &frac in &cfg.fractions {
-            let report = run(&LoadgenConfig {
+        for &batch in &batches {
+            let calib = run(&LoadgenConfig {
                 tier: Some(tier),
-                target_qps: capacity_rps * frac,
+                target_qps: 0.0,
+                batch,
+                requests: if cfg.calib_requests > 0 {
+                    cfg.calib_requests
+                } else {
+                    cfg.base.requests
+                },
                 ..cfg.base.clone()
             })?;
-            points.push(LadderPoint { frac, report });
+            anyhow::ensure!(
+                calib.ok > 0,
+                "tier {} batch {batch}: calibration run served no requests",
+                tier.name()
+            );
+            // floor at 1 rps so a pathological calibration cannot produce
+            // a zero/negative pacing interval
+            let capacity_rps = calib.throughput_rps.max(1.0);
+            let mut points = Vec::with_capacity(cfg.fractions.len());
+            for &frac in &cfg.fractions {
+                let report = run(&LoadgenConfig {
+                    tier: Some(tier),
+                    target_qps: capacity_rps * frac,
+                    batch,
+                    ..cfg.base.clone()
+                })?;
+                points.push(LadderPoint { frac, report });
+            }
+            curves.push(TierCurve {
+                tier: tier.name().to_string(),
+                batch,
+                capacity_rps,
+                points,
+            });
         }
-        curves.push(TierCurve {
-            tier: tier.name().to_string(),
-            capacity_rps,
-            points,
-        });
     }
+    let first = curves.first().and_then(|c| c.points.first());
     Ok(LadderReport {
         batch: cfg.base.batch,
         connections: cfg.base.connections,
         requests_per_point: cfg.base.requests,
-        plan_source: curves
-            .first()
-            .and_then(|c| c.points.first())
+        plan_source: first
             .map(|p| p.report.plan_source.clone())
             .unwrap_or_default(),
+        energy_budget_uj_s: first.and_then(|p| p.report.energy_budget_uj_s),
+        batch_sweep: if cfg.batch_sweep.is_empty() {
+            Vec::new()
+        } else {
+            batches
+        },
         tiers: curves,
     })
 }
@@ -801,8 +871,11 @@ mod tests {
             connections: 2,
             requests_per_point: 10,
             plan_source: "analytic".into(),
+            energy_budget_uj_s: Some(25.0),
+            batch_sweep: vec![1, 4],
             tiers: vec![TierCurve {
                 tier: "normal".into(),
+                batch: 4,
                 capacity_rps: 100.0,
                 points: vec![point(0.25, 25.0), point(2.0, 200.0)],
             }],
@@ -811,9 +884,15 @@ mod tests {
         assert_eq!(j.get("mode").unwrap().as_str().unwrap(), "ladder");
         assert_eq!(j.get("plan_source").unwrap().as_str().unwrap(), "analytic");
         assert_eq!(j.get("batch").unwrap().as_usize().unwrap(), 4);
+        // the energy budget and swept batch sizes are part of the record
+        assert_eq!(j.get("energy_budget").unwrap().as_f64().unwrap(), 25.0);
+        let sweep = j.get("batch_sweep").unwrap().as_arr().unwrap();
+        assert_eq!(sweep.len(), 2);
+        assert_eq!(sweep[1].as_usize().unwrap(), 4);
         let tiers = j.get("tiers").unwrap().as_arr().unwrap();
         assert_eq!(tiers.len(), 1);
         assert_eq!(tiers[0].get("tier").unwrap().as_str().unwrap(), "normal");
+        assert_eq!(tiers[0].get("batch").unwrap().as_usize().unwrap(), 4);
         let curve = tiers[0].get("curve").unwrap().as_arr().unwrap();
         assert_eq!(curve.len(), 2);
         assert!(
@@ -822,6 +901,13 @@ mod tests {
         );
         assert_eq!(curve[0].get("qps_frac").unwrap().as_f64().unwrap(), 0.25);
         assert!(r.render().contains("ladder tier normal"));
+        // a governor-less report records an explicit null budget
+        let no_budget = LadderReport {
+            energy_budget_uj_s: None,
+            ..r
+        };
+        let j = Json::parse(&no_budget.to_json().render()).unwrap();
+        assert_eq!(*j.get("energy_budget").unwrap(), Json::Null);
     }
 
     #[test]

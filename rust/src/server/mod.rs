@@ -2,13 +2,17 @@
 //!
 //! The network surface of the coordinator: a dependency-free HTTP/1.1
 //! server (`std::net::TcpListener`, thread-per-connection pool with
-//! keep-alive) in front of three [`serve_native`] lanes — one per
-//! **energy tier** — all sharing one immutable `Arc<NoisyModel>`.
+//! keep-alive) in front of ONE unified [`scheduler::Engine`] with a
+//! lane per **energy tier** — a single shared worker pool over
+//! per-tier bounded queues, all reading one immutable
+//! `Arc<NoisyModel>`.
 //!
 //! ```text
-//!   TCP clients ──> acceptor ──> conn pool ──> route ──> tier lane
-//!                                                        (batcher +
-//!                                                         worker pool)
+//!   TCP clients ──> acceptor ──> conn pool ──> route ──> tier queue
+//!                                                            │
+//!                                              shared worker pool
+//!                                        (work stealing + rebalancer
+//!                                             + energy governor)
 //! ```
 //!
 //! Endpoints:
@@ -40,14 +44,19 @@
 //! `/v1/infer` responses, and `/metrics` (planned-vs-observed
 //! uJ/inference).
 //!
-//! **Admission control:** requests enter a lane via
+//! **Admission control:** requests enter a tier queue via
 //! [`InferenceClient::try_infer`] (or `try_infer_batch` for multi-image
-//! bodies, which skip the dynamic-batcher wait but share the same bounded
-//! queue); a full bounded queue returns the typed `Overloaded` error,
-//! which this layer maps to `503` (carrying a `Retry-After` hint derived
-//! from the lane's live queue depth x amortised infer time), and a batch
-//! above the per-request image cap returns the typed `BatchTooLarge`,
-//! mapped to `413`.  The acceptor additionally sheds whole connections
+//! bodies, which dispatch as their own device batch but share the same
+//! bounded queue); a full bounded queue returns the typed `Overloaded`
+//! error, which this layer maps to `503` (carrying a `Retry-After` hint
+//! derived from the lane's live queue depth x amortised infer time),
+//! and a batch above the per-request image cap returns the typed
+//! `BatchTooLarge`, mapped to `413`.  With `--energy-budget-uj-s` set,
+//! the engine's governor additionally sheds the lowest tiers with a
+//! typed `EnergyShed` (`503` + window-decay `Retry-After`) whenever the
+//! rolling observed uJ/s runs over the fleet budget — the paper's
+//! accuracy-per-joule contract as admission control.  The acceptor
+//! additionally sheds whole connections
 //! with `503` when all handler threads are busy and the hand-off queue
 //! is full, and answers `429 Too Many Requests` to a peer IP holding
 //! more than `max_conns_per_peer` simultaneous connections.  Overload
@@ -65,12 +74,14 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::router::{
-    serve_native, BatchTooLarge, InferenceClient, NativeServerConfig, Overloaded, ServerStats,
+    clients_for_engine, BatchTooLarge, InferenceClient, NativeServerConfig, Overloaded,
+    ServerStats,
 };
 use crate::device::DeviceConfig;
 use crate::energy::{EnergyModel, EnergyPlan, LayerPlan, PlanSource, ReadMode};
 use crate::inference::NoisyModel;
 use crate::models::{LayerMeta, ModelDesc};
+use crate::scheduler::{self, EnergyShed, EngineSnapshot, LaneSpec};
 use crate::util::json::Json;
 use crate::Result;
 
@@ -312,109 +323,137 @@ pub fn tier_plans(
 }
 
 // ---------------------------------------------------------------------------
-// tiered engine: one serve_native lane per tier over a shared model
+// tiered engine: one scheduler lane per tier over a shared worker pool
 // ---------------------------------------------------------------------------
 
-struct Lane {
-    plan: TierPlan,
-    client: InferenceClient,
-    stats: Arc<ServerStats>,
-}
-
-/// Three native engine lanes (one per [`EnergyTier`]) over one shared
-/// immutable model.  Each lane has its own batcher, worker pool, bounded
-/// queue, and [`ServerStats`]; the crossbar arrays behind the `Arc` are
-/// shared by all of them.
+/// The three energy tiers as lanes of ONE unified [`scheduler::Engine`]:
+/// a single shared worker pool pulls from per-tier bounded queues
+/// (deficit-weighted work stealing), a rebalancer loop follows load,
+/// and — when configured — an energy governor enforces the fleet uJ/s
+/// budget at admission.  Lane index == [`EnergyTier::index`], so `low`
+/// is the lowest scheduling priority (shed first, drained last).
 pub struct TieredEngine {
-    lanes: Vec<Lane>,
+    engine: scheduler::Engine,
+    plans: Vec<TierPlan>,
+    /// One validating client handle per tier lane.
+    clients: Vec<InferenceClient>,
 }
 
 impl TieredEngine {
-    /// Spawn the three lanes; returns the engine plus all lane thread
-    /// handles (join them after dropping the engine).  `trained_rho` is
-    /// the per-layer trained rho vector of a stored model
+    /// Spawn the engine; returns it plus all its thread handles (join
+    /// them after dropping the engine).  `base.workers` is the size of
+    /// the **shared** pool (not per tier).  `trained_rho` is the
+    /// per-layer trained rho vector of a stored model
     /// ([`load_trained_rho`]), or `None` for the analytic plans.
     pub fn start(
         model: Arc<NoisyModel>,
         base: &NativeServerConfig,
         trained_rho: Option<&[f32]>,
     ) -> Result<(TieredEngine, Vec<std::thread::JoinHandle<()>>)> {
+        anyhow::ensure!(base.max_client_batch > 0, "max_client_batch must be positive");
         let plans = tier_plans(&model, &base.device, trained_rho)?;
-        let mut lanes = Vec::with_capacity(plans.len());
-        let mut handles = Vec::new();
-        for plan in plans {
-            let cfg = NativeServerConfig {
-                plan: Some(plan.plan.clone()),
-                seed: base.seed.wrapping_add(plan.tier.index() as u64),
-                ..base.clone()
-            };
-            let (client, stats, hs) = serve_native(model.clone(), cfg)?;
-            handles.extend(hs);
-            lanes.push(Lane {
-                plan,
-                client,
-                stats,
-            });
-        }
-        Ok((TieredEngine { lanes }, handles))
+        let lanes: Vec<LaneSpec> = plans
+            .iter()
+            .map(|p| LaneSpec {
+                plan: p.plan.clone(),
+                seed: base.seed.wrapping_add(p.tier.index() as u64),
+            })
+            .collect();
+        let (engine, handles) = scheduler::Engine::start(model, base, lanes)?;
+        let clients = clients_for_engine(&engine, base.max_client_batch);
+        Ok((
+            TieredEngine {
+                engine,
+                plans,
+                clients,
+            },
+            handles,
+        ))
     }
 
     /// Plan provenance of the lanes (identical across tiers: one model,
     /// one source).
     pub fn plan_source(&self) -> PlanSource {
-        self.lanes[0].plan.source()
-    }
-
-    fn lane(&self, tier: EnergyTier) -> &Lane {
-        &self.lanes[tier.index()]
+        self.plans[0].source()
     }
 
     pub fn plan(&self, tier: EnergyTier) -> &TierPlan {
-        &self.lane(tier).plan
+        &self.plans[tier.index()]
     }
 
     pub fn stats(&self, tier: EnergyTier) -> &Arc<ServerStats> {
-        &self.lane(tier).stats
+        self.engine.stats(tier.index())
     }
 
     /// `(plan, stats)` of every tier, in [`EnergyTier::ALL`] order.
     pub fn per_tier(&self) -> Vec<(&TierPlan, &ServerStats)> {
-        self.lanes
+        self.plans
             .iter()
-            .map(|l| (&l.plan, l.stats.as_ref()))
+            .enumerate()
+            .map(|(i, p)| (p, self.engine.stats(i).as_ref()))
             .collect()
     }
 
+    /// Scheduler observability (per-tier queue length, effective
+    /// workers, steals, governor state) for `/metrics`.
+    pub fn snapshot(&self) -> EngineSnapshot {
+        self.engine.snapshot()
+    }
+
+    /// One manual rebalance step (deterministic-clock tests; the
+    /// background loop runs on `base.rebalance_interval` otherwise).
+    pub fn rebalance_once(&self) -> usize {
+        self.engine.rebalance_once()
+    }
+
+    /// Freeze rebalancing and drain highest-priority-first (graceful
+    /// shutdown).
+    pub fn begin_drain(&self) {
+        self.engine.begin_drain()
+    }
+
+    /// The configured fleet energy budget, if the governor is armed.
+    pub fn energy_budget_uj_s(&self) -> Option<f64> {
+        self.engine.energy_budget_uj_s()
+    }
+
     pub fn input_len(&self) -> usize {
-        self.lanes[0].client.input_len
+        self.clients[0].input_len
     }
 
     pub fn num_classes(&self) -> usize {
-        self.lanes[0].client.num_classes
+        self.clients[0].num_classes
     }
 
     /// Max images accepted in one multi-image request (identical across
     /// lanes — they share one engine config).
     pub fn max_client_batch(&self) -> usize {
-        self.lanes[0].client.max_client_batch
+        self.clients[0].max_client_batch
     }
 
-    /// Non-blocking admission into the tier's lane (typed `Overloaded`
-    /// error when its bounded queue is full).
+    /// Non-blocking admission into the tier's queue (typed `Overloaded`
+    /// when it is full, `EnergyShed` when the governor refuses the tier).
     pub fn try_infer(&self, tier: EnergyTier, image: Vec<f32>) -> Result<Vec<f32>> {
-        self.lane(tier).client.try_infer(image)
+        self.clients[tier.index()].try_infer(image)
     }
 
     /// Non-blocking multi-image submit: the whole request runs as one
-    /// device batch, skipping the dynamic-batcher wait (typed
-    /// `Overloaded` / `BatchTooLarge` on admission failure).
+    /// device batch, skipping the dynamic-batching wait (typed
+    /// `Overloaded` / `BatchTooLarge` / `EnergyShed` on admission
+    /// failure).
     pub fn try_infer_batch(&self, tier: EnergyTier, images: Vec<f32>) -> Result<Vec<f32>> {
-        self.lane(tier).client.try_infer_batch(images)
+        self.clients[tier.index()].try_infer_batch(images)
     }
 
     /// Blocking submit (backpressure instead of load-shedding).
     pub fn infer(&self, tier: EnergyTier, image: Vec<f32>) -> Result<Vec<f32>> {
-        self.lane(tier).client.infer(image)
+        self.clients[tier.index()].infer(image)
+    }
+
+    /// Blocking multi-image submit (backpressure flavour of
+    /// [`TieredEngine::try_infer_batch`]).
+    pub fn infer_batch(&self, tier: EnergyTier, images: Vec<f32>) -> Result<Vec<f32>> {
+        self.clients[tier.index()].infer_batch(images)
     }
 }
 
@@ -604,9 +643,12 @@ impl ServerHandle {
     }
 
     /// Request a shutdown without consuming the handle (the acceptor is
-    /// woken; call [`ServerHandle::shutdown`] to join everything).
+    /// woken; call [`ServerHandle::shutdown`] to join everything).  The
+    /// engine enters drain mode immediately: rebalance moves freeze and
+    /// queued work flushes highest-tier-first.
     pub fn request_shutdown(&self) {
         self.ctx.shutdown.store(true, Ordering::SeqCst);
+        self.ctx.engine.begin_drain();
         wake_acceptor(self.ctx.addr);
     }
 
@@ -912,6 +954,13 @@ fn route(ctx: &ServerCtx, req: &HttpRequest) -> Response {
                         "plan_source",
                         Json::Str(ctx.engine.plan_source().name().into()),
                     ),
+                    (
+                        "energy_budget_uj_s",
+                        match ctx.engine.energy_budget_uj_s() {
+                            Some(b) => Json::Num(b),
+                            None => Json::Null,
+                        },
+                    ),
                     ("tiers", Json::Arr(tiers)),
                     (
                         "uptime_s",
@@ -924,6 +973,7 @@ fn route(ctx: &ServerCtx, req: &HttpRequest) -> Response {
             let body = prom::render(
                 &ctx.http,
                 &ctx.engine.per_tier(),
+                &ctx.engine.snapshot(),
                 ctx.started.elapsed().as_secs_f64(),
             );
             Response {
@@ -937,6 +987,8 @@ fn route(ctx: &ServerCtx, req: &HttpRequest) -> Response {
         ("POST", "/v1/classify") => infer_route(ctx, req, true),
         ("POST", "/admin/shutdown") => {
             ctx.shutdown.store(true, Ordering::SeqCst);
+            // drain order: freeze rebalancing, flush high tiers first
+            ctx.engine.begin_drain();
             wake_acceptor(ctx.addr);
             Response::json(200, &Json::obj(vec![("status", Json::Str("shutting down".into()))]))
         }
@@ -954,12 +1006,16 @@ enum InferPayload {
     Batch { images: Vec<f32>, count: usize },
 }
 
-/// Map an engine admission error to its HTTP status: `Overloaded` is the
-/// server's problem (`503`, retryable — carrying an honest `Retry-After`
-/// derived from the lane's live queue depth x amortised infer time),
-/// `BatchTooLarge` the client's (`413`, never retryable unchanged),
-/// anything else a `500`.
+/// Map an engine admission error to its HTTP status: `EnergyShed` and
+/// `Overloaded` are the server's problem (`503`, retryable — the former
+/// carries the governor's window-decay `Retry-After`, the latter an
+/// honest hint derived from the lane's live queue depth x amortised
+/// infer time), `BatchTooLarge` the client's (`413`, never retryable
+/// unchanged), anything else a `500`.
 fn engine_error_response(e: &anyhow::Error, lane_stats: &ServerStats) -> Response {
+    if let Some(shed) = e.downcast_ref::<EnergyShed>() {
+        return Response::error_json(503, &format!("{e}")).with_retry_after(shed.retry_after_s);
+    }
     if e.is::<Overloaded>() {
         return Response::error_json(503, &format!("{e}"))
             .with_retry_after(lane_stats.retry_after_s());
@@ -1196,12 +1252,16 @@ mod tests {
             batch: 4,
             workers: 1,
             max_wait: Duration::from_millis(1),
+            // manual stepping only: keeps the single worker's home pinned
+            // so the steal accounting below is deterministic
+            rebalance_interval: Duration::ZERO,
             device: dev,
             ..Default::default()
         };
         let (engine, handles) = TieredEngine::start(model, &base, None).unwrap();
         assert_eq!(engine.input_len(), 6);
         assert_eq!(engine.num_classes(), 3);
+        assert_eq!(engine.energy_budget_uj_s(), None);
         for tier in EnergyTier::ALL {
             let mut r = Rng::stream(55, tier.index() as u64);
             let img: Vec<f32> = (0..6).map(|_| r.next_f32()).collect();
@@ -1214,6 +1274,26 @@ mod tests {
         let low_cycles = engine.stats(EnergyTier::Low).energy().cycles;
         let normal_cycles = engine.stats(EnergyTier::Normal).energy().cycles;
         assert!(low_cycles > normal_cycles);
+        // scheduler observability: one snapshot lane per tier, the whole
+        // (single-worker) pool accounted for, queues drained, no governor
+        let snap = engine.snapshot();
+        assert_eq!(snap.lanes.len(), 3);
+        assert_eq!(
+            snap.lanes.iter().map(|l| l.effective_workers).sum::<usize>(),
+            1
+        );
+        assert!(snap.lanes.iter().all(|l| l.queue_len == 0));
+        assert!(snap.lanes.iter().all(|l| l.governor_shed == 0));
+        assert!(snap.energy.is_none());
+        assert!(!snap.draining);
+        // one worker homed on one lane served all three tiers: the other
+        // two lanes' batches were (counted) steals
+        let steals: u64 = snap.lanes.iter().map(|l| l.steals).sum();
+        assert!(steals >= 2, "expected cross-lane steals, got {snap:?}");
+        // drain mode flips the snapshot flag and freezes rebalancing
+        engine.begin_drain();
+        assert!(engine.snapshot().draining);
+        assert_eq!(engine.rebalance_once(), 0, "rebalance frozen during drain");
         drop(engine);
         for h in handles {
             h.join().unwrap();

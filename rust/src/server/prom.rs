@@ -3,14 +3,18 @@
 //!
 //! Exposes the HTTP-layer response counters, per-tier engine counters
 //! (requests, batches, queue/infer time, device energy and read cycles),
-//! the per-tier latency histogram with `p50/p95/p99` summary gauges, and
-//! the resolved tier plans (rho, energy budget) so a scrape shows the
-//! paper's energy–accuracy knob directly.
+//! the per-tier latency histogram with `p50/p95/p99` summary gauges, the
+//! resolved tier plans (rho, energy budget), and the unified scheduler's
+//! state (true per-tier queue length, effective workers, steal and
+//! rebalance counters, governor shed counts and budget headroom) so a
+//! scrape shows the paper's energy–accuracy knob — and where the shared
+//! capacity currently sits — directly.
 
 use std::fmt::Write as _;
 
 use crate::coordinator::router::ServerStats;
 use crate::metrics::{BATCH_SIZE_BUCKET_BOUNDS, LATENCY_BUCKET_BOUNDS_US};
+use crate::scheduler::EngineSnapshot;
 
 use super::{HttpStats, TierPlan};
 
@@ -19,8 +23,14 @@ fn header(out: &mut String, name: &str, kind: &str, help: &str) {
     let _ = writeln!(out, "# TYPE {name} {kind}");
 }
 
-/// Render the full `/metrics` payload.
-pub fn render(http: &HttpStats, tiers: &[(&TierPlan, &ServerStats)], uptime_s: f64) -> String {
+/// Render the full `/metrics` payload.  `sched.lanes` must align with
+/// `tiers` (both are in [`super::EnergyTier::ALL`] order).
+pub fn render(
+    http: &HttpStats,
+    tiers: &[(&TierPlan, &ServerStats)],
+    sched: &EngineSnapshot,
+    uptime_s: f64,
+) -> String {
     use std::sync::atomic::Ordering::Relaxed;
 
     let mut out = String::with_capacity(4096);
@@ -231,19 +241,113 @@ pub fn render(http: &HttpStats, tiers: &[(&TierPlan, &ServerStats)], uptime_s: f
         http.too_many_requests_429.load(Relaxed)
     );
 
+    // The pre-scheduler gauge derived queue depth as submitted-minus-
+    // replied per tier; it stays as an AGGREGATE for dashboard
+    // continuity, while emtopt_tier_queue_len below reports the true
+    // per-tier queue length straight from the scheduler's queues.
     header(
         &mut out,
         "emtopt_queue_depth",
         "gauge",
-        "Requests admitted but not yet replied (live queue depth), by tier.",
+        "Requests admitted but not yet replied, all tiers (aggregate; \
+         see emtopt_tier_queue_len for true per-tier queue lengths).",
     );
-    for (plan, stats) in tiers {
+    let in_flight: u64 = tiers.iter().map(|(_, stats)| stats.queued_requests()).sum();
+    let _ = writeln!(out, "emtopt_queue_depth {in_flight}");
+
+    header(
+        &mut out,
+        "emtopt_tier_queue_len",
+        "gauge",
+        "Requests waiting in the tier's bounded scheduler queue (true \
+         per-tier queue length, excluding work already in flight).",
+    );
+    for ((plan, _), lane) in tiers.iter().zip(sched.lanes.iter()) {
         let _ = writeln!(
             out,
-            "emtopt_queue_depth{{tier=\"{}\"}} {}",
+            "emtopt_tier_queue_len{{tier=\"{}\"}} {}",
             plan.tier.name(),
-            stats.queued_requests()
+            lane.queue_len
         );
+    }
+
+    header(
+        &mut out,
+        "emtopt_tier_effective_workers",
+        "gauge",
+        "Workers of the shared pool currently homed on the tier \
+         (effective capacity share set by the rebalancer).",
+    );
+    for ((plan, _), lane) in tiers.iter().zip(sched.lanes.iter()) {
+        let _ = writeln!(
+            out,
+            "emtopt_tier_effective_workers{{tier=\"{}\"}} {}",
+            plan.tier.name(),
+            lane.effective_workers
+        );
+    }
+
+    header(
+        &mut out,
+        "emtopt_steals_total",
+        "counter",
+        "Batches of the tier executed by a worker homed on another tier \
+         (work-stealing activity).",
+    );
+    for ((plan, _), lane) in tiers.iter().zip(sched.lanes.iter()) {
+        let _ = writeln!(
+            out,
+            "emtopt_steals_total{{tier=\"{}\"}} {}",
+            plan.tier.name(),
+            lane.steals
+        );
+    }
+
+    header(
+        &mut out,
+        "emtopt_rebalance_moves_total",
+        "counter",
+        "Workers moved between tier homes by the capacity rebalancer.",
+    );
+    let _ = writeln!(out, "emtopt_rebalance_moves_total {}", sched.rebalance_moves);
+
+    header(
+        &mut out,
+        "emtopt_governor_shed_total",
+        "counter",
+        "Requests refused by the energy governor (503 EnergyShed), by tier.",
+    );
+    for ((plan, _), lane) in tiers.iter().zip(sched.lanes.iter()) {
+        let _ = writeln!(
+            out,
+            "emtopt_governor_shed_total{{tier=\"{}\"}} {}",
+            plan.tier.name(),
+            lane.governor_shed
+        );
+    }
+
+    if let Some((rate, budget)) = sched.energy {
+        header(
+            &mut out,
+            "emtopt_energy_rate_uj_s",
+            "gauge",
+            "Rolling observed device energy rate in uJ/s (governor window).",
+        );
+        let _ = writeln!(out, "emtopt_energy_rate_uj_s {rate}");
+        header(
+            &mut out,
+            "emtopt_energy_budget_uj_s",
+            "gauge",
+            "Configured fleet energy budget in uJ/s.",
+        );
+        let _ = writeln!(out, "emtopt_energy_budget_uj_s {budget}");
+        header(
+            &mut out,
+            "emtopt_energy_budget_headroom_uj_s",
+            "gauge",
+            "Budget minus rolling observed rate (negative while shedding).",
+        );
+        let _ = writeln!(out, "emtopt_energy_budget_headroom_uj_s {}", budget - rate);
     }
 
     header(
@@ -413,8 +517,25 @@ pub fn render(http: &HttpStats, tiers: &[(&TierPlan, &ServerStats)], uptime_s: f
 mod tests {
     use super::*;
     use crate::energy::{EnergyPlan, ReadMode};
+    use crate::scheduler::LaneSnapshot;
     use crate::server::EnergyTier;
     use std::sync::atomic::Ordering;
+
+    fn snapshot_with(lanes: usize, energy: Option<(f64, f64)>) -> EngineSnapshot {
+        EngineSnapshot {
+            lanes: (0..lanes)
+                .map(|i| LaneSnapshot {
+                    queue_len: 3 + i,
+                    effective_workers: 2,
+                    steals: 7,
+                    governor_shed: 4,
+                })
+                .collect(),
+            rebalance_moves: 9,
+            energy,
+            draining: false,
+        }
+    }
 
     #[test]
     fn renders_expected_series() {
@@ -424,6 +545,7 @@ mod tests {
         http.record(503);
         let stats = ServerStats::default();
         stats.requests.store(2, Ordering::Relaxed);
+        stats.submitted.store(3, Ordering::Relaxed);
         stats.images.store(5, Ordering::Relaxed);
         stats.client_batch_requests.store(1, Ordering::Relaxed);
         stats.batches.store(1, Ordering::Relaxed);
@@ -437,7 +559,8 @@ mod tests {
             budget_uj: 1.5,
             plan: EnergyPlan::uniform(2, 4.0, ReadMode::Original),
         };
-        let text = render(&http, &[(&plan, &stats)], 12.5);
+        let sched = snapshot_with(1, Some((12.0, 10.0)));
+        let text = render(&http, &[(&plan, &stats)], &sched, 12.5);
 
         assert!(text.contains("emtopt_http_requests_total{code=\"200\"} 2"));
         assert!(text.contains("emtopt_http_requests_total{code=\"503\"} 1"));
@@ -456,7 +579,18 @@ mod tests {
         assert!(text.contains("emtopt_tier_planned_uj_per_inference{tier=\"normal\"} 1.5"));
         assert!(text.contains("emtopt_tier_observed_uj_per_inference{tier=\"normal\"} 0"));
         assert!(text.contains("emtopt_http_peer_rejected_total 0"));
-        assert!(text.contains("emtopt_queue_depth{tier=\"normal\"} 0"));
+        // the legacy gauge is now the submitted-minus-replied AGGREGATE...
+        assert!(text.contains("emtopt_queue_depth 1"));
+        // ...next to the scheduler's true per-tier state
+        assert!(text.contains("emtopt_tier_queue_len{tier=\"normal\"} 3"));
+        assert!(text.contains("emtopt_tier_effective_workers{tier=\"normal\"} 2"));
+        assert!(text.contains("emtopt_steals_total{tier=\"normal\"} 7"));
+        assert!(text.contains("emtopt_rebalance_moves_total 9"));
+        assert!(text.contains("emtopt_governor_shed_total{tier=\"normal\"} 4"));
+        // governor armed: rate, budget, and (negative) headroom gauges
+        assert!(text.contains("emtopt_energy_rate_uj_s 12"));
+        assert!(text.contains("emtopt_energy_budget_uj_s 10"));
+        assert!(text.contains("emtopt_energy_budget_headroom_uj_s -2"));
         assert!(text.contains("emtopt_request_latency_us_count{tier=\"normal\"} 2"));
         assert!(text.contains("le=\"+Inf\"} 2"));
         assert!(text.contains("quantile=\"0.99\""));
@@ -474,6 +608,26 @@ mod tests {
     }
 
     #[test]
+    fn governor_gauges_absent_without_budget() {
+        let http = HttpStats::default();
+        let stats = ServerStats::default();
+        let plan = TierPlan {
+            tier: EnergyTier::Normal,
+            rho: 4.0,
+            mode: ReadMode::Original,
+            budget_uj: 1.5,
+            plan: EnergyPlan::uniform(1, 4.0, ReadMode::Original),
+        };
+        let sched = snapshot_with(1, None);
+        let text = render(&http, &[(&plan, &stats)], &sched, 0.0);
+        // shed counters always render (zeros keep the series stable)...
+        assert!(text.contains("emtopt_governor_shed_total{tier=\"normal\"} 4"));
+        // ...but the budget gauges only exist when a budget is armed
+        assert!(!text.contains("emtopt_energy_budget_uj_s"));
+        assert!(!text.contains("emtopt_energy_rate_uj_s"));
+    }
+
+    #[test]
     fn histogram_buckets_are_cumulative() {
         let http = HttpStats::default();
         let stats = ServerStats::default();
@@ -486,7 +640,7 @@ mod tests {
             budget_uj: 0.5,
             plan: EnergyPlan::uniform(1, 1.0, ReadMode::Decomposed),
         };
-        let text = render(&http, &[(&plan, &stats)], 0.0);
+        let text = render(&http, &[(&plan, &stats)], &snapshot_with(1, None), 0.0);
         assert!(text.contains("emtopt_request_latency_us_bucket{tier=\"low\",le=\"5\"} 1"));
         assert!(text.contains("emtopt_request_latency_us_bucket{tier=\"low\",le=\"50\"} 2"));
         assert!(text.contains("emtopt_request_latency_us_bucket{tier=\"low\",le=\"+Inf\"} 2"));

@@ -474,6 +474,124 @@ fn overload_sheds_with_503() {
 }
 
 #[test]
+fn energy_governor_sheds_low_tiers_with_503() {
+    // ISSUE 5: fleet energy budget as admission control.  A budget far
+    // below one inference's device energy means the first served request
+    // exhausts it; afterwards low/normal shed with 503 + Retry-After
+    // while the high tier keeps serving, and the governor's counters and
+    // budget gauges appear on /metrics.
+    let dev = DeviceConfig::default();
+    let m = model(&[(8, 3)], 3, &dev);
+    let handle = serve_http(
+        m,
+        HttpServerConfig {
+            addr: "127.0.0.1:0".into(),
+            engine: NativeServerConfig {
+                batch: 4,
+                workers: 1,
+                max_wait: Duration::from_millis(1),
+                energy_budget_uj_s: Some(1e-8),
+                device: dev,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut conn = connect(&handle);
+    let img = "[0.1,0.2,0.3,0.4,0.5,0.6,0.7,0.8]";
+
+    // healthz advertises the armed budget
+    let (status, body) = get(&mut conn, "/healthz");
+    assert_eq!(status, 200);
+    let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let budget = v.get("energy_budget_uj_s").unwrap().as_f64().unwrap();
+    assert!((budget - 1e-8).abs() < 1e-14, "advertised budget {budget}");
+
+    // A high-tier request (never shed) burns energy, pushing the rolling
+    // rate far over the budget, so the immediately following low/normal
+    // requests shed.  The recorded energy falls out of the 2 s governor
+    // window, so on a badly stalled runner a later request could sneak
+    // back in — the bounded retry refreshes the window and keeps the
+    // test deterministic in practice.
+    let mut observed = None;
+    for _attempt in 0..5 {
+        let (status, _) = post(
+            &mut conn,
+            "/v1/infer",
+            &format!("{{\"image\":{img},\"tier\":\"high\"}}"),
+        );
+        assert_eq!(status, 200, "the high tier is never energy-shed");
+        let (low_status, headers, v) = post_parts(
+            &mut conn,
+            "/v1/infer",
+            &format!("{{\"image\":{img},\"tier\":\"low\"}}"),
+        );
+        let (normal_status, _, _) = post_parts(
+            &mut conn,
+            "/v1/infer",
+            &format!("{{\"image\":{img},\"tier\":\"normal\"}}"),
+        );
+        if low_status == 503 && normal_status == 503 {
+            observed = Some((headers, v));
+            break;
+        }
+    }
+    let (headers, v) = observed.expect("low/normal must shed while the budget is exhausted");
+    assert!(
+        v.get("error").unwrap().as_str().unwrap().contains("energy budget"),
+        "shed error must name the budget: {v:?}"
+    );
+    let ra: u64 = header_value(&headers, "retry-after")
+        .expect("energy shed must carry retry-after")
+        .parse()
+        .unwrap();
+    assert!((1..=30).contains(&ra), "retry-after {ra} out of range");
+    // the highest tier keeps the serving contract throughout
+    let (status, _) = post(
+        &mut conn,
+        "/v1/infer",
+        &format!("{{\"image\":{img},\"tier\":\"high\"}}"),
+    );
+    assert_eq!(status, 200);
+
+    // shed counters + budget gauges on /metrics (>= 1: the retry loop
+    // above may have shed more than once)
+    let (status, body) = get(&mut conn, "/metrics");
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).unwrap();
+    let shed_count = |tier: &str| -> u64 {
+        let prefix = format!("emtopt_governor_shed_total{{tier=\"{tier}\"}} ");
+        text.lines()
+            .find_map(|l| l.strip_prefix(prefix.as_str()))
+            .expect("shed counter series must render")
+            .parse()
+            .unwrap()
+    };
+    assert!(shed_count("low") >= 1);
+    assert!(shed_count("normal") >= 1);
+    assert_eq!(shed_count("high"), 0, "the high tier is never shed");
+    assert!(text.lines().any(|l| l.starts_with("emtopt_energy_rate_uj_s ")));
+    assert!(text
+        .lines()
+        .any(|l| l.starts_with("emtopt_energy_budget_uj_s ")));
+    let headroom = text
+        .lines()
+        .find(|l| l.starts_with("emtopt_energy_budget_headroom_uj_s "))
+        .and_then(|l| l.rsplit_once(' '))
+        .map(|(_, v)| v.parse::<f64>().unwrap())
+        .expect("headroom gauge must render when the governor is armed");
+    assert!(headroom < 0.0, "exhausted budget must show negative headroom");
+    // true per-tier queue length gauge: everything drained by now
+    for tier in ["low", "normal", "high"] {
+        let line = format!("emtopt_tier_queue_len{{tier=\"{tier}\"}} 0");
+        assert!(text.lines().any(|l| l == line), "missing {line}");
+    }
+
+    handle.shutdown().unwrap();
+}
+
+#[test]
 fn graceful_shutdown_via_admin_endpoint() {
     let handle = boot(NativeServerConfig {
         batch: 2,

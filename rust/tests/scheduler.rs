@@ -1,0 +1,324 @@
+//! Unified-scheduler integration tests (ISSUE 5 acceptance): work
+//! stealing across tier lanes must preserve batch/sequential bit-parity
+//! at 1, 2 and N workers, and the rebalancer must shift effective
+//! capacity onto a saturated tier within one (manually stepped,
+//! deterministic) rebalance interval.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use emtopt::coordinator::router::{serve_native, NativeServerConfig};
+use emtopt::device::DeviceConfig;
+use emtopt::inference::NoisyModel;
+use emtopt::rng::Rng;
+use emtopt::server::{tier_plans, EnergyTier, TieredEngine};
+
+/// A small random dense stack programmed on the crossbar substrate.
+fn model(dims: &[(usize, usize)], seed: u64, dev: &DeviceConfig) -> Arc<NoisyModel> {
+    let mut rng = Rng::new(seed);
+    let data: Vec<(Vec<f32>, Vec<f32>)> = dims
+        .iter()
+        .map(|&(i, o)| {
+            let w: Vec<f32> = (0..i * o).map(|_| rng.normal() * 0.3).collect();
+            let b = vec![0.0f32; o];
+            (w, b)
+        })
+        .collect();
+    let specs: Vec<(&[f32], &[f32], usize, usize)> = data
+        .iter()
+        .zip(dims.iter())
+        .map(|((w, b), &(i, o))| (w.as_slice(), b.as_slice(), i, o))
+        .collect();
+    Arc::new(NoisyModel::new(&specs, dev).unwrap())
+}
+
+#[test]
+fn parity_under_active_stealing_at_1_2_and_n_workers() {
+    // The same 5 images through the high tier — as one multi-image batch
+    // and as sequential singles — while background threads keep the low
+    // tier saturated, so high-tier work is routinely served by stolen /
+    // rebalanced workers.  All logits must be bit-identical to each
+    // other AND across engines with 1, 2 and N shared workers:
+    // content-derived noise seeds make results independent of which
+    // worker ran what (DESIGN.md §10).
+    let dev = DeviceConfig::default();
+    let n_threads = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(4)
+        .max(3);
+    let (d_in, d_out) = (8usize, 3usize);
+    let n = 5usize;
+    let rows: Vec<Vec<f32>> = (0..n)
+        .map(|i| {
+            let mut r = Rng::stream(4242, i as u64);
+            (0..d_in).map(|_| r.next_f32()).collect()
+        })
+        .collect();
+    let flat: Vec<f32> = rows.concat();
+
+    let mut reference: Option<Vec<f32>> = None;
+    for workers in [1usize, 2, n_threads] {
+        let m = model(&[(8, 6), (6, 3)], 17, &dev);
+        let base = NativeServerConfig {
+            batch: 4,
+            workers,
+            max_wait: Duration::from_millis(1),
+            // fast rebalancing: homes churn while the probe runs
+            rebalance_interval: Duration::from_millis(5),
+            device: dev.clone(),
+            ..Default::default()
+        };
+        let (engine, handles) = TieredEngine::start(m, &base, None).unwrap();
+        let engine = Arc::new(engine);
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let noise: Vec<_> = (0..2u64)
+            .map(|t| {
+                let engine = engine.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut i = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        let mut r = Rng::stream(9_000 + t, i);
+                        let img: Vec<f32> = (0..8).map(|_| r.next_f32()).collect();
+                        // shed results are fine — the point is pressure
+                        let _ = engine.try_infer(EnergyTier::Low, img);
+                        i += 1;
+                    }
+                })
+            })
+            .collect();
+
+        let batch_logits = engine.infer_batch(EnergyTier::High, flat.clone()).unwrap();
+        assert_eq!(batch_logits.len(), n * d_out);
+        for (i, row) in rows.iter().enumerate() {
+            let single = engine.infer(EnergyTier::High, row.clone()).unwrap();
+            assert_eq!(
+                single.as_slice(),
+                &batch_logits[i * d_out..(i + 1) * d_out],
+                "workers {workers}, image {i}: singles must match the batch row under stealing"
+            );
+        }
+        match &reference {
+            None => reference = Some(batch_logits),
+            Some(r) => assert_eq!(
+                r, &batch_logits,
+                "worker count {workers} changed the logits"
+            ),
+        }
+
+        stop.store(true, Ordering::Relaxed);
+        for h in noise {
+            h.join().unwrap();
+        }
+        drop(engine);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}
+
+#[test]
+fn rebalancer_moves_workers_to_a_saturated_tier() {
+    // A deliberately slow model keeps the high-tier queue deep while the
+    // low/normal tiers sit idle.  The background loop is disabled
+    // (rebalance_interval zero); ONE manual rebalance_once() step — the
+    // deterministic-clock equivalent of one interval — must move every
+    // worker's home onto the saturated tier.
+    let dev = DeviceConfig::default();
+    let m = model(&[(192, 192), (192, 192)], 7, &dev);
+    let base = NativeServerConfig {
+        batch: 1,
+        workers: 3,
+        max_wait: Duration::from_millis(1),
+        queue_depth: 256,
+        rebalance_interval: Duration::ZERO, // manual stepping only
+        device: dev.clone(),
+        ..Default::default()
+    };
+    let (engine, handles) = TieredEngine::start(m, &base, None).unwrap();
+    let engine = Arc::new(engine);
+
+    // initial static split: one home per tier
+    let snap = engine.snapshot();
+    assert_eq!(
+        snap.lanes
+            .iter()
+            .map(|l| l.effective_workers)
+            .collect::<Vec<_>>(),
+        vec![1, 1, 1]
+    );
+
+    // saturate high while low/normal stay idle
+    let burst = 24usize;
+    let waiters: Vec<_> = (0..burst)
+        .map(|i| {
+            let engine = engine.clone();
+            std::thread::spawn(move || {
+                let mut r = Rng::stream(100 + i as u64, 0);
+                let img: Vec<f32> = (0..192).map(|_| r.next_f32()).collect();
+                engine.infer(EnergyTier::High, img).unwrap()
+            })
+        })
+        .collect();
+    // wait until a deep backlog is visible on the high queue (the model
+    // is slow enough that it cannot drain between here and the step)
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while engine.snapshot().lanes[EnergyTier::High.index()].queue_len < 16 {
+        assert!(
+            Instant::now() < deadline,
+            "high queue never built a backlog: {:?}",
+            engine.snapshot()
+        );
+        std::thread::yield_now();
+    }
+
+    let moves = engine.rebalance_once();
+    assert!(moves >= 2, "one step must re-home the idle lanes' workers, moved {moves}");
+    let snap = engine.snapshot();
+    assert_eq!(
+        snap.lanes[EnergyTier::High.index()].effective_workers,
+        3,
+        "all effective capacity must sit on the saturated tier: {snap:?}"
+    );
+    assert_eq!(snap.lanes[EnergyTier::Low.index()].effective_workers, 0);
+    assert_eq!(snap.rebalance_moves, moves as u64);
+
+    for w in waiters {
+        let logits = w.join().unwrap();
+        assert_eq!(logits.len(), 192);
+    }
+    drop(engine);
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn adaptive_pool_beats_fixed_split_on_a_saturated_tier() {
+    // ISSUE 5 acceptance: with a saturated `high` tier and idle
+    // `low`/`normal` tiers, the adaptive shared pool (all 3 workers
+    // converge on the hot queue) drains the burst measurably faster
+    // than the fixed per-tier split it replaced, at equal total
+    // workers.  The baseline is emulated exactly: under the old static
+    // 3x-lane layout, the high tier owned 1 of 3 workers — i.e. a
+    // single-lane engine with 1 worker running the same high-tier plan.
+    let cores = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(1);
+    if cores < 2 {
+        return; // one core serialises both configurations identically
+    }
+    let dev = DeviceConfig::default();
+    let burst = 24usize;
+    let drain_time = |infer: &(dyn Fn(Vec<f32>) -> emtopt::Result<Vec<f32>> + Sync)| {
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for i in 0..burst {
+                let mut r = Rng::stream(3_000 + i as u64, 0);
+                let img: Vec<f32> = (0..192).map(|_| r.next_f32()).collect();
+                scope.spawn(move || {
+                    assert_eq!(infer(img).unwrap().len(), 192);
+                });
+            }
+        });
+        t0.elapsed()
+    };
+
+    // adaptive: one shared 3-worker pool behind the tiered engine
+    let m = model(&[(192, 192), (192, 192)], 7, &dev);
+    let base = NativeServerConfig {
+        batch: 1,
+        workers: 3,
+        max_wait: Duration::from_millis(1),
+        device: dev.clone(),
+        ..Default::default()
+    };
+    let (engine, handles) = TieredEngine::start(m, &base, None).unwrap();
+    let adaptive = drain_time(&|img| engine.infer(EnergyTier::High, img));
+    drop(engine);
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // fixed split: the high tier's old static share (1 worker), same
+    // model, same per-layer plan, same lane seed
+    let m = model(&[(192, 192), (192, 192)], 7, &dev);
+    let high_plan = tier_plans(&m, &dev, None).unwrap()[EnergyTier::High.index()]
+        .plan
+        .clone();
+    let cfg = NativeServerConfig {
+        batch: 1,
+        workers: 1,
+        max_wait: Duration::from_millis(1),
+        plan: Some(high_plan),
+        seed: base.seed.wrapping_add(EnergyTier::High.index() as u64),
+        device: dev,
+        ..Default::default()
+    };
+    let (client, _stats, handles) = serve_native(m, cfg).unwrap();
+    let fixed = drain_time(&|img| client.infer(img));
+    drop(client);
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let speedup = fixed.as_secs_f64() / adaptive.as_secs_f64().max(1e-9);
+    assert!(
+        speedup > 1.2,
+        "adaptive scheduler must beat the fixed split at equal total \
+         workers: fixed {fixed:?} vs adaptive {adaptive:?} ({speedup:.2}x)"
+    );
+}
+
+#[test]
+fn governor_budget_sheds_low_first_and_keeps_high_serving() {
+    // A tiny budget: the first (high-tier) request's energy already blows
+    // it, so low and normal shed with the typed error while high keeps
+    // serving — the energy-SLO contract end to end on the engine API.
+    let dev = DeviceConfig::default();
+    let m = model(&[(8, 3)], 3, &dev);
+    let base = NativeServerConfig {
+        batch: 2,
+        workers: 1,
+        max_wait: Duration::from_millis(1),
+        rebalance_interval: Duration::ZERO,
+        // orders of magnitude below one inference's device energy: the
+        // first served request exhausts it for the whole 2 s window
+        energy_budget_uj_s: Some(1e-8),
+        device: dev.clone(),
+        ..Default::default()
+    };
+    let (engine, handles) = TieredEngine::start(m, &base, None).unwrap();
+    assert_eq!(engine.energy_budget_uj_s(), Some(1e-8));
+
+    let img = |s: u64| -> Vec<f32> {
+        let mut r = Rng::stream(s, 0);
+        (0..8).map(|_| r.next_f32()).collect()
+    };
+    // within budget (no energy observed yet): everything serves
+    assert!(engine.try_infer(EnergyTier::Low, img(1)).is_ok());
+    // that request's energy pushes the rolling rate far over the budget
+    let err = engine.try_infer(EnergyTier::Low, img(2)).unwrap_err();
+    assert!(
+        err.is::<emtopt::scheduler::EnergyShed>(),
+        "expected a typed EnergyShed, got {err:?}"
+    );
+    assert!(engine.try_infer(EnergyTier::Normal, img(3)).is_err());
+    assert!(
+        engine.try_infer(EnergyTier::High, img(4)).is_ok(),
+        "the top tier must keep serving under an exhausted budget"
+    );
+    let snap = engine.snapshot();
+    assert_eq!(snap.lanes[EnergyTier::Low.index()].governor_shed, 1);
+    assert_eq!(snap.lanes[EnergyTier::Normal.index()].governor_shed, 1);
+    assert_eq!(snap.lanes[EnergyTier::High.index()].governor_shed, 0);
+    let (rate, budget) = snap.energy.expect("governor armed");
+    assert!(rate > budget, "rate {rate} must exceed budget {budget}");
+
+    drop(engine);
+    for h in handles {
+        h.join().unwrap();
+    }
+}
