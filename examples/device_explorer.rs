@@ -44,7 +44,12 @@ fn main() -> emtopt::Result<()> {
 
     println!("\n=== decomposition fluctuation averaging (eq. 16-18) ===");
     let (k, n) = (128usize, 8usize);
-    let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.3).collect();
+    // bulk Box–Muller draw: both halves of every pair land in the buffer
+    let mut w = vec![0.0f32; k * n];
+    rng.fill_normal(&mut w);
+    for v in &mut w {
+        *v *= 0.3;
+    }
     let x: Vec<f32> = (0..k).map(|_| rng.next_f32()).collect();
     println!(
         "{:>8} {:>16} {:>16} {:>8}",

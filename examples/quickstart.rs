@@ -20,7 +20,12 @@ fn main() -> emtopt::Result<()> {
     // --- native device substrate: one crossbar MAC with RTN sampling ---
     let cfg = DeviceConfig::default();
     let mut rng = Rng::new(3);
-    let w: Vec<f32> = (0..64 * 16).map(|_| rng.normal() * 0.3).collect();
+    // bulk Box–Muller draw: both halves of every pair land in the buffer
+    let mut w = vec![0.0f32; 64 * 16];
+    rng.fill_normal(&mut w);
+    for v in &mut w {
+        *v *= 0.3;
+    }
     let arr = CrossbarArray::program(&w, 64, 16, &cfg);
     let xin: Vec<f32> = (0..64).map(|_| rng.next_f32()).collect();
     let mut out = vec![0.0f32; 16];

@@ -1,6 +1,9 @@
 //! Hot-path microbenchmarks (EXPERIMENTS.md §Perf).
 //!
 //! L3 native crossbar simulator: MAC-simulations/s in both read modes,
+//! the fused tile read kernel vs its checked-in scalar reference and the
+//! pre-PR-6 per-cell kernel (the `kernel_vs_scalar_ratio` field is the
+//! CI perf-regression gate input — see `hotpath_gate.json`),
 //! tile current-sum throughput, the batched execution engine
 //! (`NoisyModel::forward_batch` vs the sequential single-sample loop),
 //! dataset generation, and — with `--features aot` — the PJRT dispatch
@@ -9,9 +12,9 @@
 //! Emits a machine-readable `BENCH_hotpath.json` throughput record in the
 //! working directory so successive PRs accumulate a perf trajectory.
 
-use emtopt::crossbar::{CrossbarArray, MacScratch, ReadCounters};
+use emtopt::crossbar::{CrossbarArray, MacScratch, ReadCounters, Tile};
 use emtopt::data::{Dataset, Split, Suite};
-use emtopt::device::DeviceConfig;
+use emtopt::device::{state_offsets, DeviceConfig};
 use emtopt::energy::ReadMode;
 use emtopt::inference::NoisyModel;
 use emtopt::rng::Rng;
@@ -22,7 +25,12 @@ fn main() -> emtopt::Result<()> {
     let cfg = DeviceConfig::default();
     let (k, n) = (256usize, 256usize);
     let mut rng = Rng::new(1);
-    let w: Vec<f32> = (0..k * n).map(|_| rng.normal() * 0.3).collect();
+    // bulk Box–Muller: both halves of every pair are used (PR 6)
+    let mut w = vec![0.0f32; k * n];
+    rng.fill_normal(&mut w);
+    for v in &mut w {
+        *v *= 0.3;
+    }
     let x: Vec<f32> = (0..k).map(|_| rng.next_f32()).collect();
     let mut out = vec![0.0f32; n];
 
@@ -67,14 +75,78 @@ fn main() -> emtopt::Result<()> {
     let mac_clean = r.throughput(macs);
     println!("  -> {:.1} M MAC/s", mac_clean / 1e6);
 
+    println!("\n=== hotpath: tile read kernel (fused vs scalar reference) ===");
+    // One full noisy tile read: every row active, default 4-state device,
+    // representative sigma.  The fused/scalar-ref ratio is measured in
+    // the SAME process on the SAME tile, so machine speed cancels out of
+    // it — that ratio is what the CI perf gate pins (hotpath_gate.json).
+    let m = cfg.num_states;
+    let sigma = 0.2f32;
+    let tile = Tile::new(w.clone(), k, n, m);
+    let levels: Vec<u32> = (0..k as u32).map(|r| 1 + (r % 15)).collect();
+
+    let r = report("tile 256x256 fused kernel", 3, 60, || {
+        out.fill(0.0);
+        let e = tile.current_sum_scaled(&levels, &mut out, 1.0, sigma, &mut rng);
+        std::hint::black_box(e);
+    });
+    let kernel_fused = r.throughput(macs);
+    println!("  -> {:.1} M MAC-sim/s", kernel_fused / 1e6);
+
+    let r = report("tile 256x256 scalar reference", 3, 30, || {
+        out.fill(0.0);
+        let e = tile.current_sum_scaled_ref(&levels, &mut out, 1.0, sigma, &mut rng);
+        std::hint::black_box(e);
+    });
+    let kernel_scalar_ref = r.throughput(macs);
+    println!("  -> {:.1} M MAC-sim/s", kernel_scalar_ref / 1e6);
+    let kernel_ratio = kernel_fused / kernel_scalar_ref;
+    println!("  fused / scalar-ref ratio: {kernel_ratio:.2}x (CI gate input)");
+
+    // The pre-PR-6 kernel — one Lemire `below(m)` rejection sample and
+    // one energy accumulate per CELL — reimplemented here so the record
+    // keeps carrying the speedup evidence after the library dropped it.
+    let offsets = state_offsets(m);
+    let tile_w = tile.w_norm();
+    let r = report("tile 256x256 legacy per-cell kernel", 3, 15, || {
+        out.fill(0.0);
+        let mut energy = 0.0f64;
+        for row in 0..k {
+            let lv = levels[row] as f32;
+            let wrow = &tile_w[row * n..(row + 1) * n];
+            let mut row_abs = 0.0f32;
+            for (c, &wv) in wrow.iter().enumerate() {
+                let state = rng.below(m as u32) as usize;
+                out[c] += lv * (wv + sigma * offsets[state]);
+                row_abs += wv.abs();
+            }
+            energy += (row_abs * lv) as f64;
+        }
+        std::hint::black_box(energy);
+    });
+    let kernel_legacy = r.throughput(macs);
+    let kernel_speedup = kernel_fused / kernel_legacy;
+    println!(
+        "  -> {:.1} M MAC-sim/s legacy — fused is {kernel_speedup:.2}x faster",
+        kernel_legacy / 1e6
+    );
+
     println!("\n=== hotpath: batched execution engine ===");
     // MLP sized like the tiny-zoo mlp head: 256 -> 256 -> 128 -> 10
     let dims = [(256usize, 256usize), (256, 128), (128, 10)];
     let layer_data: Vec<(Vec<f32>, Vec<f32>)> = dims
         .iter()
         .map(|&(i, o)| {
-            let lw: Vec<f32> = (0..i * o).map(|_| rng.normal() * 0.2).collect();
-            let lb: Vec<f32> = (0..o).map(|_| rng.normal() * 0.02).collect();
+            let mut lw = vec![0.0f32; i * o];
+            rng.fill_normal(&mut lw);
+            for v in &mut lw {
+                *v *= 0.2;
+            }
+            let mut lb = vec![0.0f32; o];
+            rng.fill_normal(&mut lb);
+            for v in &mut lb {
+                *v *= 0.02;
+            }
             (lw, lb)
         })
         .collect();
@@ -168,6 +240,11 @@ fn main() -> emtopt::Result<()> {
          \"mac_sim_per_s_original\": {mac_original:.1},\n  \
          \"mac_sim_per_s_decomposed\": {mac_decomposed:.1},\n  \
          \"mac_per_s_clean\": {mac_clean:.1},\n  \
+         \"kernel_mac_per_s_fused\": {kernel_fused:.1},\n  \
+         \"kernel_mac_per_s_scalar_ref\": {kernel_scalar_ref:.1},\n  \
+         \"kernel_vs_scalar_ratio\": {kernel_ratio:.4},\n  \
+         \"kernel_mac_per_s_percell_legacy\": {kernel_legacy:.1},\n  \
+         \"speedup_vs_percell\": {kernel_speedup:.3},\n  \
          \"batch32_seq_samples_per_s\": {seq_sps:.1},\n  \
          \"batch32_par_samples_per_s\": {par_sps:.1},\n  \
          \"batch_speedup\": {speedup:.3},\n  \

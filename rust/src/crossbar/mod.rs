@@ -63,10 +63,17 @@ impl ReadCounters {
 ///
 /// One instance per execution stream (thread); reusing it across layers
 /// and samples keeps the noisy forward path allocation-free.
+///
+/// `planes` is *plane-major*: `planes[p * rows + r]` is bit `p` of row
+/// `r`'s DAC level, derived once per [`CrossbarArray::mac_scratch`] call
+/// by [`quant::bit_planes_into`].  Decomposed mode then reads each
+/// (plane, tile-row) as one contiguous slice — previously the bit-plane
+/// of every row was re-derived per tile per plane, i.e. `tiles_x` times
+/// too often on wide arrays.
 #[derive(Clone, Debug, Default)]
 pub struct MacScratch {
     levels: Vec<u32>,
-    bits: Vec<u32>,
+    planes: Vec<u32>,
 }
 
 /// A (K, N) weight matrix programmed over crossbar tiles.
@@ -220,20 +227,18 @@ impl CrossbarArray {
                 cycles += 1;
             }
             ReadMode::Decomposed => {
-                for p in 0..act_bits {
+                // derive all bit-planes once, plane-major (see MacScratch)
+                quant::bit_planes_into(&scratch.levels, act_bits, &mut scratch.planes);
+                let rows_total = self.rows;
+                for p in 0..act_bits as usize {
                     let scale = (1u32 << p) as f32;
+                    let plane = &scratch.planes[p * rows_total..(p + 1) * rows_total];
                     for (ti, t) in self.tiles.iter().enumerate() {
                         let (ty, tx) = (ti / tiles_x, ti % tiles_x);
                         let r0 = ty * TILE_ROWS;
                         let c0 = tx * TILE_COLS;
-                        scratch.bits.clear();
-                        scratch.bits.extend(
-                            scratch.levels[r0..r0 + t.rows()]
-                                .iter()
-                                .map(|&l| quant::bit_plane(l, p)),
-                        );
                         let e = t.current_sum_scaled(
-                            &scratch.bits,
+                            &plane[r0..r0 + t.rows()],
                             &mut out[c0..c0 + t.cols()],
                             scale,
                             sigma_norm,
@@ -427,6 +432,34 @@ mod tests {
             arr.mac_scratch(&x, &mut o2, plan, 5, 1.0, &mut r2, &mut c2, &mut scratch);
             assert_eq!(o1, o2);
             assert_eq!(c1, c2);
+        }
+    }
+
+    #[test]
+    fn noisy_parity_across_tile_boundaries() {
+        // multi-tile shapes exercise the plane-major scratch slicing per
+        // (plane, tile): mac and mac_scratch must stay bit-identical in
+        // both modes, and repeated same-seed reads must reproduce
+        let (k, n) = (TILE_ROWS + 13, TILE_COLS + 9);
+        let w = randw(31, k * n);
+        let arr = CrossbarArray::program(&w, k, n, &cfg());
+        let x: Vec<f32> = {
+            let mut rx = Rng::new(32);
+            (0..k).map(|_| rx.next_f32()).collect()
+        };
+        let mut scratch = MacScratch::default();
+        for mode in [ReadMode::Original, ReadMode::Decomposed] {
+            let (mut o1, mut o2) = (vec![0.0f32; n], vec![0.0f32; n]);
+            let mut c1 = ReadCounters::default();
+            let mut c2 = ReadCounters::default();
+            let mut r1 = Rng::new(33);
+            let mut r2 = Rng::new(33);
+            arr.mac(&x, &mut o1, arr.read_plan(mode), 5, 1.0, &mut r1, &mut c1);
+            let plan = arr.read_plan(mode);
+            arr.mac_scratch(&x, &mut o2, plan, 5, 1.0, &mut r2, &mut c2, &mut scratch);
+            assert_eq!(o1, o2);
+            assert_eq!(c1, c2);
+            assert!(o1.iter().all(|v| v.is_finite()));
         }
     }
 

@@ -1,18 +1,49 @@
 //! One crossbar tile: a dense block of analog cells with per-cell RTN
 //! state sampled on every read.
 //!
-//! Hot path: `current_sum` is the innermost loop of the native simulator —
-//! it draws one RTN state per (active row, column) cell per read, exactly
-//! eq. (7)/(11).  Reads take `&self` and a caller-supplied [`Rng`], so a
-//! programmed tile is immutable shared state: any number of threads can
-//! read it concurrently, each with its own RNG stream (no allocation, no
-//! shared RNG contention); the per-read noise term is `sigma_norm * c_l`
-//! added to the normalised programmed weight.
+//! Hot path: `current_sum_scaled` is the innermost loop of the native
+//! simulator — it draws one RTN state per (active row, column) cell per
+//! read, exactly eq. (7)/(11).  Reads take `&self` and a caller-supplied
+//! [`Rng`], so a programmed tile is immutable shared state: any number of
+//! threads can read it concurrently, each with its own RNG stream (no
+//! allocation, no shared RNG contention); the per-read noise term is
+//! `sigma_norm * c_l` added to the normalised programmed weight.
+//!
+//! # Kernel shape (PR 6, DESIGN.md §11)
+//!
+//! The read kernel is flat and branch-free so the compiler can
+//! autovectorize it:
+//!
+//! 1. per active row, [`Rng::fill_state_indices`] bulk-samples one RTN
+//!    state index per column (eight per `next_u64`, multiply-shift map)
+//!    into a stack buffer — no per-cell rejection loop;
+//! 2. a gather pass turns indices into `noise[c] = sigma_norm *
+//!    offsets[idx]`;
+//! 3. a fused accumulate over [`chunks_exact`](slice::chunks_exact)
+//!    8-lanes computes `out[c] += scale * lv * (w[c] + noise[c])`;
+//! 4. the analog energy term uses per-row `|w|` sums precomputed at
+//!    [`Tile::new`], so energy accounting is O(rows) per read instead of
+//!    O(rows·cols).
+//!
+//! Zero-level rows are skipped entirely (they drive no current, draw no
+//! noise, and cost no energy), and a noiseless read (`sigma_norm == 0`
+//! or a single-state device) consumes no RNG at all.
+//!
+//! [`Tile::current_sum_scaled_ref`] is the checked-in scalar reference:
+//! the same noise stream and arithmetic in a naive per-cell loop.  It is
+//! the bit-exactness oracle for the fused kernel in the test suite and
+//! the denominator of the `kernel_vs_scalar_ratio` CI perf gate
+//! (`benches/hotpath.rs`).
 
 use crate::device::state_offsets;
 use crate::rng::Rng;
 
-/// A (rows <= 256, cols <= 256) tile of programmed cells.
+/// Widest tile the read kernel supports: the per-read index and noise
+/// scratch are fixed-size stack buffers of this many lanes (matches
+/// [`crate::crossbar::TILE_COLS`]).
+pub const MAX_TILE_COLS: usize = 256;
+
+/// A (rows <= 256, cols <= [`MAX_TILE_COLS`]) tile of programmed cells.
 #[derive(Clone, Debug)]
 pub struct Tile {
     /// Programmed weights normalised to full scale, row-major (rows, cols).
@@ -21,16 +52,31 @@ pub struct Tile {
     cols: usize,
     /// RTN state offsets `c_l` (zero-mean, unit-variance).
     offsets: Vec<f32>,
+    /// Per-row `sum_c |w_norm[r, c]|`, precomputed at programming time:
+    /// the cell-energy term of a read is `sum_r row_abs[r] * level[r]`
+    /// (the |w| sum factors out of eq. 20), so energy accounting no
+    /// longer walks every cell.
+    row_abs: Vec<f32>,
 }
 
 impl Tile {
     pub fn new(w_norm: Vec<f32>, rows: usize, cols: usize, num_states: usize) -> Self {
         assert_eq!(w_norm.len(), rows * cols);
+        assert!(cols <= MAX_TILE_COLS, "tile wider than the kernel lane buffer");
+        let row_abs = if cols == 0 {
+            vec![0.0; rows]
+        } else {
+            w_norm
+                .chunks_exact(cols)
+                .map(|row| row.iter().map(|w| w.abs()).sum())
+                .collect()
+        };
         Tile {
             w_norm,
             rows,
             cols,
             offsets: state_offsets(num_states),
+            row_abs,
         }
     }
 
@@ -44,6 +90,11 @@ impl Tile {
 
     pub fn w_norm(&self) -> &[f32] {
         &self.w_norm
+    }
+
+    /// Per-row `|w_norm|` sums (see [`Tile::new`]).
+    pub fn row_abs(&self) -> &[f32] {
+        &self.row_abs
     }
 
     /// Analog current-sum read (original mode): for every column
@@ -64,6 +115,10 @@ impl Tile {
 
     /// Current-sum with an output scale factor (used for bit-plane reads:
     /// `scale = 2^p`). `levels` are the DAC integer levels per row.
+    ///
+    /// This is the fused SIMD-friendly kernel; see the module docs for
+    /// the lane layout and [`Tile::current_sum_scaled_ref`] for the
+    /// bit-identical scalar reference.
     pub fn current_sum_scaled(
         &self,
         levels: &[u32],
@@ -74,21 +129,98 @@ impl Tile {
     ) -> f64 {
         assert_eq!(levels.len(), self.rows);
         assert_eq!(out.len(), self.cols);
+        let cols = self.cols;
         let m = self.offsets.len() as u32;
+        // noiseless reads (sigma 0, or a single-state device whose only
+        // offset is 0) skip RTN sampling and consume no RNG
+        let sample_noise = sigma_norm != 0.0 && m > 1;
+        let mut idx = [0u8; MAX_TILE_COLS];
+        let mut noise = [0.0f32; MAX_TILE_COLS];
         let mut energy = 0.0f64;
         for r in 0..self.rows {
             let level = levels[r];
             if level == 0 {
-                continue; // zero input drives no current
+                continue; // zero input drives no current — and draws no noise
             }
             let lv = level as f32;
-            let row = &self.w_norm[r * self.cols..(r + 1) * self.cols];
+            let coef = scale * lv;
+            let row = &self.w_norm[r * cols..(r + 1) * cols];
+            if sample_noise {
+                // fresh RTN state per cell read (eq. 7), bulk-sampled
+                rng.fill_state_indices(m, &mut idx[..cols]);
+                for (nz, &i) in noise[..cols].iter_mut().zip(&idx[..cols]) {
+                    *nz = sigma_norm * self.offsets[i as usize];
+                }
+                // fused branch-free accumulate over 8-wide lanes
+                let mut o8 = out.chunks_exact_mut(8);
+                let mut w8 = row.chunks_exact(8);
+                let mut n8 = noise[..cols].chunks_exact(8);
+                for ((o, w), nz) in (&mut o8).zip(&mut w8).zip(&mut n8) {
+                    for l in 0..8 {
+                        o[l] += coef * (w[l] + nz[l]);
+                    }
+                }
+                for ((o, &w), &nz) in o8
+                    .into_remainder()
+                    .iter_mut()
+                    .zip(w8.remainder())
+                    .zip(n8.remainder())
+                {
+                    *o += coef * (w + nz);
+                }
+            } else {
+                for (o, &w) in out.iter_mut().zip(row) {
+                    *o += coef * w;
+                }
+            }
+            energy += (self.row_abs[r] * lv) as f64;
+        }
+        energy
+    }
+
+    /// Checked-in scalar reference kernel: the *same* noise stream and
+    /// arithmetic as [`Tile::current_sum_scaled`] (bulk per-row state
+    /// indices, identical rounding), evaluated cell-by-cell with
+    /// per-cell energy accumulation — the pre-PR-6 loop shape.
+    ///
+    /// Outputs and energy are bit-identical to the fused kernel (pinned
+    /// by `fused_matches_scalar_reference`); only the speed differs.
+    /// `benches/hotpath.rs` reports the fused/reference throughput ratio
+    /// and CI gates on it regressing >15%.
+    pub fn current_sum_scaled_ref(
+        &self,
+        levels: &[u32],
+        out: &mut [f32],
+        scale: f32,
+        sigma_norm: f32,
+        rng: &mut Rng,
+    ) -> f64 {
+        assert_eq!(levels.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        let cols = self.cols;
+        let m = self.offsets.len() as u32;
+        let sample_noise = sigma_norm != 0.0 && m > 1;
+        let mut idx = [0u8; MAX_TILE_COLS];
+        let mut energy = 0.0f64;
+        for r in 0..self.rows {
+            let level = levels[r];
+            if level == 0 {
+                continue;
+            }
+            let lv = level as f32;
+            let coef = scale * lv;
+            let row = &self.w_norm[r * cols..(r + 1) * cols];
+            if sample_noise {
+                rng.fill_state_indices(m, &mut idx[..cols]);
+            }
             let mut row_w_abs = 0.0f32;
             for (c, &w) in row.iter().enumerate() {
-                // fresh RTN state per cell read (eq. 7)
-                let state = rng.below(m) as usize;
-                let noisy = w + sigma_norm * self.offsets[state];
-                out[c] += scale * lv * noisy;
+                if sample_noise {
+                    let nz = sigma_norm * self.offsets[idx[c] as usize];
+                    out[c] += coef * (w + nz);
+                } else {
+                    out[c] += coef * w;
+                }
                 row_w_abs += w.abs();
             }
             energy += (row_w_abs * lv) as f64;
@@ -129,6 +261,19 @@ mod tests {
     }
 
     #[test]
+    fn noiseless_reads_consume_no_rng() {
+        // sigma 0 and m = 1 both skip sampling entirely
+        let t4 = Tile::new(vec![1.0; 4], 2, 2, 4);
+        let t1 = Tile::new(vec![1.0; 4], 2, 2, 1);
+        let mut out = vec![0.0f32; 2];
+        let mut rng = Rng::new(5);
+        let before = rng.clone().next_u64();
+        t4.current_sum(&[1, 1], &mut out, 0.0, &mut rng);
+        t1.current_sum(&[1, 1], &mut out, 0.5, &mut rng);
+        assert_eq!(rng.next_u64(), before);
+    }
+
+    #[test]
     fn zero_level_rows_skipped_and_free() {
         let w = vec![1.0; 4];
         let t = Tile::new(w, 2, 2, 4);
@@ -137,6 +282,9 @@ mod tests {
         let e = t.current_sum(&[0, 0], &mut out, 0.5, &mut rng);
         assert_eq!(out, vec![0.0, 0.0]);
         assert_eq!(e, 0.0);
+        // skipped rows also draw no noise: the stream did not advance
+        let mut fresh = Rng::new(2);
+        assert_eq!(rng.next_u64(), fresh.next_u64());
     }
 
     #[test]
@@ -148,6 +296,39 @@ mod tests {
         let e = t.current_sum(&[2, 4], &mut out, 0.0, &mut rng);
         // row0: (0.5+0.5)*2 = 2 ; row1: (0.25+0.25)*4 = 2
         assert!((e - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn row_abs_precomputed_at_program_time() {
+        let w = vec![0.5, -0.5, 0.25, 0.25, -1.0, 0.0];
+        let t = Tile::new(w, 3, 2, 4);
+        assert_eq!(t.row_abs(), &[1.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn fused_matches_scalar_reference() {
+        // the fused kernel and the checked-in scalar reference share one
+        // noise stream and produce bit-identical outputs and energy —
+        // this is the refreshed golden contract for the PR-6 stream
+        let (rows, cols) = (5, 37); // odd width exercises remainder lanes
+        let mut wr = Rng::new(100);
+        for &m in &[2usize, 3, 4, 256] {
+            let w: Vec<f32> = (0..rows * cols).map(|_| wr.normal() * 0.5).collect();
+            let t = Tile::new(w, rows, cols, m);
+            let levels: Vec<u32> = (0..rows as u32).map(|r| r % 4).collect();
+            for &(scale, sigma) in &[(1.0f32, 0.2f32), (4.0, 0.05), (1.0, 0.0)] {
+                let mut r1 = Rng::new(m as u64 + 7);
+                let mut r2 = Rng::new(m as u64 + 7);
+                let mut o1 = vec![0.0f32; cols];
+                let mut o2 = vec![0.0f32; cols];
+                let e1 = t.current_sum_scaled(&levels, &mut o1, scale, sigma, &mut r1);
+                let e2 = t.current_sum_scaled_ref(&levels, &mut o2, scale, sigma, &mut r2);
+                assert_eq!(o1, o2, "m={m} scale={scale} sigma={sigma}");
+                assert_eq!(e1, e2, "m={m} energy");
+                // both consumed the same stream
+                assert_eq!(r1.next_u64(), r2.next_u64());
+            }
+        }
     }
 
     #[test]

@@ -88,6 +88,10 @@ FLAGS (defaults in parentheses):
   --qps F             loadgen: aggregate target rate, 0 = closed loop (0)
   --tier T            loadgen: low|normal|high|mixed (normal)
   --endpoint E        loadgen: classify|infer (classify)
+  --blocking          loadgen: send \"blocking\": true on every request,
+                      driving the server's backpressure infer path (wait
+                      for queue space) instead of load-shedding 503s —
+                      compare the two tails in BENCH_serve.json
   --ladder            loadgen: sweep a qps ladder (0.25x..2x measured
                       capacity) per tier and record the full curve
   --ladder-points N   loadgen: rungs on the ladder (5)
@@ -513,6 +517,7 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         tier: parse_tier_arg(&args.str_or("tier", "normal"))?,
         classify: endpoint == "classify",
         batch: args.parse_or("batch", 1usize)?,
+        blocking: args.has("blocking"),
     };
     let out = args.str_or("out", "BENCH_serve.json");
     let batch_sweep: Vec<usize> = match args.get("batch-sweep") {

@@ -94,34 +94,7 @@ impl LatencyHistogram {
     /// finite bound, explicitly uninterpolated, since the bucket has no
     /// upper edge to interpolate toward.
     pub fn quantile_us(&self, q: f64) -> f64 {
-        let counts = self.snapshot();
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return 0.0;
-        }
-        let target = q.clamp(0.0, 1.0) * total as f64;
-        let mut cum = 0u64;
-        for (i, &c) in counts.iter().enumerate() {
-            if c == 0 {
-                continue;
-            }
-            let next = cum + c;
-            if next as f64 >= target {
-                if i == LATENCY_BUCKET_BOUNDS_US.len() {
-                    return LATENCY_OVERFLOW_REPORT_US;
-                }
-                let lower = if i == 0 {
-                    0
-                } else {
-                    LATENCY_BUCKET_BOUNDS_US[i - 1]
-                };
-                let upper = LATENCY_BUCKET_BOUNDS_US[i];
-                let frac = ((target - cum as f64) / c as f64).clamp(0.0, 1.0);
-                return lower as f64 + frac * (upper - lower) as f64;
-            }
-            cum = next;
-        }
-        LATENCY_OVERFLOW_REPORT_US
+        latency_quantile_from_counts(&self.snapshot(), q)
     }
 
     pub fn p50_us(&self) -> f64 {
@@ -134,6 +107,78 @@ impl LatencyHistogram {
 
     pub fn p99_us(&self) -> f64 {
         self.quantile_us(0.99)
+    }
+}
+
+/// Quantile over an explicit bucket-count array (the shared kernel of
+/// [`LatencyHistogram::quantile_us`] and [`LatencyWindow`]).  Semantics
+/// match `quantile_us`: 0.0 when empty, linear interpolation inside the
+/// winning bucket, [`LATENCY_OVERFLOW_REPORT_US`] for the overflow
+/// bucket.
+pub fn latency_quantile_from_counts(counts: &[u64; LATENCY_NUM_BUCKETS], q: f64) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let target = q.clamp(0.0, 1.0) * total as f64;
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        let next = cum + c;
+        if next as f64 >= target {
+            if i == LATENCY_BUCKET_BOUNDS_US.len() {
+                return LATENCY_OVERFLOW_REPORT_US;
+            }
+            let lower = if i == 0 {
+                0
+            } else {
+                LATENCY_BUCKET_BOUNDS_US[i - 1]
+            };
+            let upper = LATENCY_BUCKET_BOUNDS_US[i];
+            let frac = ((target - cum as f64) / c as f64).clamp(0.0, 1.0);
+            return lower as f64 + frac * (upper - lower) as f64;
+        }
+        cum = next;
+    }
+    LATENCY_OVERFLOW_REPORT_US
+}
+
+/// Delta-window view over a [`LatencyHistogram`]: remembers the bucket
+/// counts at the previous observation and computes quantiles over only
+/// the samples recorded *since* — the signal the scheduler's rebalancer
+/// wants.  The cumulative histogram never forgets, so one slow cold
+/// start would otherwise skew a lane's p99 (and therefore its pressure
+/// score) for the rest of the process lifetime.
+///
+/// An empty window reports 0.0: a lane that completed nothing in the
+/// interval exerts no *tail* pressure (its backlog still shows up via
+/// queue depth).  Cumulative fallback is deliberately avoided — it would
+/// resurrect the cold-start skew for every idle interval.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyWindow {
+    prev: [u64; LATENCY_NUM_BUCKETS],
+}
+
+impl LatencyWindow {
+    /// A fresh window: the first `advance_quantile_us` call covers every
+    /// observation recorded so far.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quantile over the observations recorded in `hist` since the last
+    /// call, then advance the window to now.  Returns 0.0 for an empty
+    /// window (see type docs).
+    pub fn advance_quantile_us(&mut self, hist: &LatencyHistogram, q: f64) -> f64 {
+        let now = hist.snapshot();
+        let mut delta = [0u64; LATENCY_NUM_BUCKETS];
+        for (d, (&n, &p)) in delta.iter_mut().zip(now.iter().zip(self.prev.iter())) {
+            *d = n.saturating_sub(p);
+        }
+        self.prev = now;
+        latency_quantile_from_counts(&delta, q)
     }
 }
 
@@ -413,6 +458,50 @@ mod tests {
         // out-of-range q clamps rather than panicking
         assert_eq!(h.quantile_us(-1.0), h.quantile_us(0.0));
         assert_eq!(h.quantile_us(2.0), h.quantile_us(1.0));
+    }
+
+    #[test]
+    fn latency_window_forgets_cold_start() {
+        // a slow cold start (50 x ~90 ms) permanently dominates the
+        // cumulative p99, but the window sees only the current interval
+        let h = LatencyHistogram::default();
+        let mut w = LatencyWindow::new();
+        for _ in 0..50 {
+            h.record_us(90_000);
+        }
+        let cold = w.advance_quantile_us(&h, 0.99);
+        assert!(cold > 10_000.0, "cold-start window p99 {cold}");
+        // steady state: 1000 fast requests in the next interval
+        for _ in 0..1000 {
+            h.record_us(9);
+        }
+        let steady = w.advance_quantile_us(&h, 0.99);
+        assert!(steady <= 10.0, "windowed p99 {steady} still skewed");
+        // ... while the cumulative histogram never forgets
+        assert!(h.p99_us() > 10_000.0, "cumulative p99 {}", h.p99_us());
+    }
+
+    #[test]
+    fn latency_window_empty_interval_reports_zero() {
+        let h = LatencyHistogram::default();
+        let mut w = LatencyWindow::new();
+        h.record_us(90_000);
+        assert!(w.advance_quantile_us(&h, 0.99) > 0.0);
+        // no new samples: no tail pressure, NOT the cumulative fallback
+        assert_eq!(w.advance_quantile_us(&h, 0.99), 0.0);
+    }
+
+    #[test]
+    fn latency_window_first_advance_matches_cumulative() {
+        let h = LatencyHistogram::default();
+        for _ in 0..900 {
+            h.record_us(9);
+        }
+        for _ in 0..100 {
+            h.record_us(900);
+        }
+        let mut w = LatencyWindow::new();
+        assert_eq!(w.advance_quantile_us(&h, 0.99), h.p99_us());
     }
 
     #[test]

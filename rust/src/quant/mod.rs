@@ -62,6 +62,22 @@ pub fn popcount(level: u32) -> u32 {
     level.count_ones()
 }
 
+/// Plane-major bit-plane decomposition of a whole level vector:
+/// `out[p * levels.len() + r] = bit_plane(levels[r], p)` for `p` in
+/// `0..act_bits` (LSB first, matching the decomposed read order).
+///
+/// `out` is cleared and refilled (capacity reused).  The crossbar MAC
+/// derives this once per read into its scratch, so decomposed mode reads
+/// each plane as one contiguous slice instead of re-deriving
+/// [`bit_plane`] per tile per plane.
+pub fn bit_planes_into(levels: &[u32], act_bits: u32, out: &mut Vec<u32>) {
+    out.clear();
+    out.reserve(act_bits as usize * levels.len());
+    for p in 0..act_bits {
+        out.extend(levels.iter().map(|&l| bit_plane(l, p)));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,6 +144,34 @@ mod tests {
             let recomposed: u32 = (0..4).map(|p| bit_plane(level, p) << p).sum();
             assert_eq!(recomposed, level);
         }
+    }
+
+    #[test]
+    fn bit_planes_into_plane_major_and_reuses_capacity() {
+        let levels = vec![0u32, 1, 2, 3, 21, 30, 31];
+        let bits = 5u32;
+        let mut planes = Vec::new();
+        bit_planes_into(&levels, bits, &mut planes);
+        assert_eq!(planes.len(), bits as usize * levels.len());
+        for p in 0..bits {
+            for (r, &l) in levels.iter().enumerate() {
+                assert_eq!(
+                    planes[p as usize * levels.len() + r],
+                    bit_plane(l, p),
+                    "plane {p} row {r}"
+                );
+            }
+        }
+        // planes recompose the levels
+        for (r, &l) in levels.iter().enumerate() {
+            let re: u32 = (0..bits)
+                .map(|p| planes[p as usize * levels.len() + r] << p)
+                .sum();
+            assert_eq!(re, l);
+        }
+        let cap = planes.capacity();
+        bit_planes_into(&levels, bits, &mut planes);
+        assert_eq!(planes.capacity(), cap, "no realloc on reuse");
     }
 
     #[test]

@@ -23,8 +23,11 @@
 //! * **Rebalancer.**  A background loop (interval
 //!   `NativeServerConfig::rebalance_interval`; [`Engine::rebalance_once`]
 //!   steps it manually for deterministic tests) recomputes home
-//!   assignments from live queue depth and p99 per lane
-//!   ([`rebalance::assign`]) — effective capacity follows load.
+//!   assignments from live queue depth and the *windowed* p99 per lane
+//!   — the tail of the current interval only, via
+//!   [`crate::metrics::LatencyWindow`], so a slow cold start cannot skew
+//!   pressure forever ([`rebalance::assign`]) — effective capacity
+//!   follows load.
 //! * **Energy governor.**  With `NativeServerConfig::energy_budget_uj_s`
 //!   set, admission consults an [`EnergyGovernor`]: when the rolling
 //!   observed uJ/s exceeds the budget, the lowest-priority lanes shed
@@ -55,6 +58,7 @@ use crate::crossbar::ReadCounters;
 use crate::device::DeviceConfig;
 use crate::energy::EnergyPlan;
 use crate::inference::NoisyModel;
+use crate::metrics::LatencyWindow;
 use crate::Result;
 
 /// One scheduling lane: the per-layer energy plan its reads use and the
@@ -87,6 +91,12 @@ struct Lane {
     /// Lock-free mirror of the lane's queue length (the true per-lane
     /// depth gauge on `/metrics`; updated on every push and pull).
     queue_len: AtomicU64,
+    /// Rebalancer-owned delta window over `stats.latency`: pressure uses
+    /// the p99 of the *current rebalance interval*, not the cumulative
+    /// histogram (which never forgets — one slow cold start would skew
+    /// this lane's pressure score forever).  Only `rebalance_shared`
+    /// advances it.
+    p99_window: Mutex<LatencyWindow>,
 }
 
 /// Mutable scheduling state (one mutex: queues are popped in batches and
@@ -215,6 +225,7 @@ impl Engine {
                     stats: Arc::new(ServerStats::default()),
                     steals: AtomicU64::new(0),
                     queue_len: AtomicU64::new(0),
+                    p99_window: Mutex::new(LatencyWindow::new()),
                 })
                 .collect(),
             sched: Mutex::new(Sched {
@@ -537,7 +548,9 @@ fn run_batch(shared: &Shared, lane_idx: usize, items: Vec<WorkItem>) {
     }
 }
 
-/// One rebalance step over the live queue depths and per-lane p99s.
+/// One rebalance step over the live queue depths and per-lane *windowed*
+/// p99s (the tail of requests completed since the previous step — see
+/// `Lane::p99_window`).
 fn rebalance_shared(shared: &Shared) -> usize {
     if shared.draining.load(Ordering::SeqCst) {
         return 0; // capacity is frozen during a drain
@@ -552,7 +565,11 @@ fn rebalance_shared(shared: &Shared) -> usize {
         .enumerate()
         .map(|(i, lane)| rebalance::LaneLoad {
             queue_len: s.queues[i].len(),
-            p99_us: lane.stats.latency.p99_us(),
+            p99_us: lane
+                .p99_window
+                .lock()
+                .expect("p99 window poisoned")
+                .advance_quantile_us(&lane.stats.latency, 0.99),
         })
         .collect();
     let (homes, weights, moves) = rebalance::assign(&s.homes, &loads);

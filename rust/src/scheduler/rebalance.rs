@@ -16,9 +16,13 @@
 pub struct LaneLoad {
     /// Requests waiting in the lane's bounded queue.
     pub queue_len: usize,
-    /// The lane's p99 enqueue-to-reply latency, microseconds
-    /// (cumulative histogram — a slow-burning signal next to the
-    /// instantaneous queue depth).
+    /// The lane's p99 enqueue-to-reply latency over the *current
+    /// rebalance interval*, microseconds (a
+    /// [`crate::metrics::LatencyWindow`] delta over the lane histogram —
+    /// the cumulative p99 never forgets, so one slow cold start would
+    /// bias this lane's pressure for the process lifetime).  0 when the
+    /// lane completed nothing in the interval: no completions means no
+    /// tail pressure; a backlog still registers through `queue_len`.
     pub p99_us: f64,
 }
 

@@ -49,6 +49,11 @@ pub struct LoadgenConfig {
     /// Images per request body: 1 sends `{"image": ...}`, more sends a
     /// multi-image `{"images": ...}` body through the batch path.
     pub batch: usize,
+    /// Send `"blocking": true` on every request, driving the server's
+    /// backpressure `infer` path (wait for queue space) instead of the
+    /// default load-shedding path (503 under overload).  Lets one
+    /// `BENCH_serve.json` compare backpressure vs shedding tails.
+    pub blocking: bool,
 }
 
 impl Default for LoadgenConfig {
@@ -61,6 +66,7 @@ impl Default for LoadgenConfig {
             tier: Some(EnergyTier::Normal),
             classify: true,
             batch: 1,
+            blocking: false,
         }
     }
 }
@@ -92,6 +98,9 @@ pub struct LoadgenReport {
     pub target_qps: f64,
     /// Images per request body (1 = single-image requests).
     pub batch: usize,
+    /// Whether requests opted into the backpressure path
+    /// (`"blocking": true`) instead of the default load-shedding path.
+    pub blocking: bool,
     /// Energy-plan provenance the server advertised on `/healthz`
     /// (`trained`/`analytic`; empty when probing an older server).
     pub plan_source: String,
@@ -115,6 +124,9 @@ impl LoadgenReport {
                 String::new()
             }
         ));
+        if self.blocking {
+            s.push_str("  mode: blocking (backpressure infer path)\n");
+        }
         s.push_str(&format!(
             "  ok {} | overloaded(503) {} | http errors {} | transport errors {}\n",
             self.ok, self.overloaded, self.http_errors, self.transport_errors
@@ -152,6 +164,7 @@ impl LoadgenReport {
             ("unix_time", Json::Num(unix_time() as f64)),
             ("connections", Json::Num(self.connections as f64)),
             ("batch", Json::Num(self.batch as f64)),
+            ("blocking", Json::Bool(self.blocking)),
             ("plan_source", Json::Str(self.plan_source.clone())),
             (
                 "energy_budget",
@@ -290,21 +303,31 @@ fn push_image(s: &mut String, image: &[f32]) {
     s.push(']');
 }
 
-/// JSON body for one single-image request.
-fn body_for(image: &[f32], tier: EnergyTier) -> String {
+/// JSON body for one single-image request.  `blocking` is only rendered
+/// when set, so default runs keep byte-identical bodies with older
+/// generators (and exercise servers that predate the flag).
+fn body_for(image: &[f32], tier: EnergyTier, blocking: bool) -> String {
     use std::fmt::Write as _;
-    let mut s = String::with_capacity(image.len() * 10 + 32);
+    let mut s = String::with_capacity(image.len() * 10 + 48);
     s.push_str("{\"image\":");
     push_image(&mut s, image);
+    if blocking {
+        s.push_str(",\"blocking\":true");
+    }
     let _ = write!(s, ",\"tier\":\"{}\"}}", tier.name());
     s
 }
 
 /// JSON body for one multi-image request: `images` is `count * input_len`
 /// row-major, rendered as `{"images":[[...],...],"tier":...}`.
-fn body_for_batch(images: &[f32], input_len: usize, tier: EnergyTier) -> String {
+fn body_for_batch(
+    images: &[f32],
+    input_len: usize,
+    tier: EnergyTier,
+    blocking: bool,
+) -> String {
     use std::fmt::Write as _;
-    let mut s = String::with_capacity(images.len() * 10 + 48);
+    let mut s = String::with_capacity(images.len() * 10 + 64);
     s.push_str("{\"images\":[");
     for (i, row) in images.chunks(input_len).enumerate() {
         if i > 0 {
@@ -312,7 +335,11 @@ fn body_for_batch(images: &[f32], input_len: usize, tier: EnergyTier) -> String 
         }
         push_image(&mut s, row);
     }
-    let _ = write!(s, "],\"tier\":\"{}\"}}", tier.name());
+    s.push(']');
+    if blocking {
+        s.push_str(",\"blocking\":true");
+    }
+    let _ = write!(s, ",\"tier\":\"{}\"}}", tier.name());
     s
 }
 
@@ -359,6 +386,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
             let dataset = dataset.clone();
             let fixed_tier = cfg.tier;
             let classify = cfg.classify;
+            let blocking = cfg.blocking;
             std::thread::spawn(move || -> (Counts, Vec<u64>) {
                 let mut counts = Counts::default();
                 let mut latencies = Vec::with_capacity(my_count as usize);
@@ -393,9 +421,9 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                     // p50/p95/p99 measure network + server, not client-side
                     // JSON formatting
                     let body = if batch == 1 {
-                        body_for(&img, tier)
+                        body_for(&img, tier, blocking)
                     } else {
-                        body_for_batch(&img, input_len, tier)
+                        body_for_batch(&img, input_len, tier, blocking)
                     };
                     let start = if interval.is_zero() {
                         Instant::now()
@@ -523,6 +551,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         connections: cfg.connections,
         target_qps: cfg.target_qps,
         batch: cfg.batch,
+        blocking: cfg.blocking,
         plan_source: info.plan_source,
         energy_budget_uj_s: info.energy_budget_uj_s,
     })
@@ -588,6 +617,11 @@ pub struct LadderReport {
     pub batch: usize,
     pub connections: usize,
     pub requests_per_point: u64,
+    /// Whether the sweep drove the backpressure path (`--blocking`): a
+    /// blocking ladder's past-saturation rungs trade 503s for queueing
+    /// tail latency, so the two modes' curves are only comparable when
+    /// the record says which one was measured.
+    pub blocking: bool,
     /// Energy-plan provenance the server advertised during the sweep.
     pub plan_source: String,
     /// Fleet energy budget the server advertised (`None` = no governor).
@@ -666,6 +700,7 @@ impl LadderReport {
                 },
             ),
             ("batch", Json::Num(self.batch as f64)),
+            ("blocking", Json::Bool(self.blocking)),
             (
                 "batch_sweep",
                 Json::Arr(
@@ -765,6 +800,7 @@ pub fn run_ladder(cfg: &LadderConfig) -> Result<LadderReport> {
         batch: cfg.base.batch,
         connections: cfg.base.connections,
         requests_per_point: cfg.base.requests,
+        blocking: cfg.base.blocking,
         plan_source: first
             .map(|p| p.report.plan_source.clone())
             .unwrap_or_default(),
@@ -803,13 +839,31 @@ mod tests {
 
     #[test]
     fn body_renders_valid_json() {
-        let body = body_for(&[0.5, -1.25, 3.0], EnergyTier::High);
+        let body = body_for(&[0.5, -1.25, 3.0], EnergyTier::High, false);
         let v = Json::parse(&body).unwrap();
         assert_eq!(v.get("tier").unwrap().as_str().unwrap(), "high");
         assert_eq!(
             v.get("image").unwrap().as_f32s().unwrap(),
             vec![0.5, -1.25, 3.0]
         );
+        // the shedding default omits the flag entirely (byte-compatible
+        // with servers that predate it)
+        assert!(v.opt("blocking").is_none());
+    }
+
+    #[test]
+    fn blocking_flag_renders_into_both_body_forms() {
+        let single = body_for(&[1.0, 2.0], EnergyTier::Low, true);
+        let v = Json::parse(&single).unwrap();
+        assert_eq!(*v.get("blocking").unwrap(), Json::Bool(true));
+        assert_eq!(v.get("tier").unwrap().as_str().unwrap(), "low");
+        let batch = body_for_batch(&[1.0, 2.0, 3.0, 4.0], 2, EnergyTier::Normal, true);
+        let v = Json::parse(&batch).unwrap();
+        assert_eq!(*v.get("blocking").unwrap(), Json::Bool(true));
+        assert_eq!(v.get("images").unwrap().as_arr().unwrap().len(), 2);
+        // and stays absent from batch bodies by default
+        let batch = body_for_batch(&[1.0, 2.0], 2, EnergyTier::Normal, false);
+        assert!(Json::parse(&batch).unwrap().opt("blocking").is_none());
     }
 
     #[test]
@@ -819,6 +873,7 @@ mod tests {
         let body = body_for(
             &[f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -1.5],
             EnergyTier::Low,
+            false,
         );
         let v = Json::parse(&body).expect("clamped body must parse as JSON");
         assert_eq!(
@@ -830,7 +885,7 @@ mod tests {
     #[test]
     fn batch_body_renders_rows() {
         let images = [0.5f32, 1.0, f32::NAN, 2.0, 3.0, 4.0];
-        let body = body_for_batch(&images, 3, EnergyTier::Normal);
+        let body = body_for_batch(&images, 3, EnergyTier::Normal, false);
         let v = Json::parse(&body).unwrap();
         assert_eq!(v.get("tier").unwrap().as_str().unwrap(), "normal");
         let rows = v.get("images").unwrap().as_arr().unwrap();
@@ -870,6 +925,7 @@ mod tests {
             batch: 4,
             connections: 2,
             requests_per_point: 10,
+            blocking: true,
             plan_source: "analytic".into(),
             energy_budget_uj_s: Some(25.0),
             batch_sweep: vec![1, 4],
@@ -884,6 +940,7 @@ mod tests {
         assert_eq!(j.get("mode").unwrap().as_str().unwrap(), "ladder");
         assert_eq!(j.get("plan_source").unwrap().as_str().unwrap(), "analytic");
         assert_eq!(j.get("batch").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(*j.get("blocking").unwrap(), Json::Bool(true));
         // the energy budget and swept batch sizes are part of the record
         assert_eq!(j.get("energy_budget").unwrap().as_f64().unwrap(), 25.0);
         let sweep = j.get("batch_sweep").unwrap().as_arr().unwrap();

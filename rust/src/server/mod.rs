@@ -1025,7 +1025,7 @@ fn engine_error_response(e: &anyhow::Error, lane_stats: &ServerStats) -> Respons
 }
 
 fn infer_route(ctx: &ServerCtx, req: &HttpRequest, classify: bool) -> Response {
-    let (payload, tier) = match parse_infer_body(&req.body, ctx.engine.input_len()) {
+    let (payload, tier, blocking) = match parse_infer_body(&req.body, ctx.engine.input_len()) {
         Ok(p) => p,
         Err(e) => return Response::error_json(400, &format!("{e}")),
     };
@@ -1038,19 +1038,33 @@ fn infer_route(ctx: &ServerCtx, req: &HttpRequest, classify: bool) -> Response {
         ("mode", Json::Str(plan.mode.name().into())),
     ];
     match payload {
-        InferPayload::Single(image) => match ctx.engine.try_infer(tier, image) {
-            Ok(logits) => {
-                fields.push(("logits", Json::f32_arr(&logits)));
-                if classify {
-                    let class = crate::inference::argmax(&logits);
-                    fields.push(("class", Json::Num(class as f64)));
+        InferPayload::Single(image) => {
+            // blocking = backpressure (wait for queue space), default =
+            // load-shedding (typed Overloaded -> 503)
+            let result = if blocking {
+                ctx.engine.infer(tier, image)
+            } else {
+                ctx.engine.try_infer(tier, image)
+            };
+            match result {
+                Ok(logits) => {
+                    fields.push(("logits", Json::f32_arr(&logits)));
+                    if classify {
+                        let class = crate::inference::argmax(&logits);
+                        fields.push(("class", Json::Num(class as f64)));
+                    }
+                    Response::json(200, &Json::obj(fields))
                 }
-                Response::json(200, &Json::obj(fields))
+                Err(e) => engine_error_response(&e, ctx.engine.stats(tier)),
             }
-            Err(e) => engine_error_response(&e, ctx.engine.stats(tier)),
-        },
+        }
         InferPayload::Batch { images, count } => {
-            match ctx.engine.try_infer_batch(tier, images) {
+            let result = if blocking {
+                ctx.engine.infer_batch(tier, images)
+            } else {
+                ctx.engine.try_infer_batch(tier, images)
+            };
+            match result {
                 Ok(logits) => {
                     let nc = ctx.engine.num_classes();
                     fields.push(("count", Json::Num(count as f64)));
@@ -1095,7 +1109,7 @@ fn check_image(image: &[f32], input_len: usize, what: &str) -> Result<()> {
     Ok(())
 }
 
-fn parse_infer_body(body: &[u8], input_len: usize) -> Result<(InferPayload, EnergyTier)> {
+fn parse_infer_body(body: &[u8], input_len: usize) -> Result<(InferPayload, EnergyTier, bool)> {
     let text =
         std::str::from_utf8(body).map_err(|_| anyhow::anyhow!("body is not UTF-8"))?;
     let v = Json::parse(text)?;
@@ -1131,7 +1145,15 @@ fn parse_infer_body(body: &[u8], input_len: usize) -> Result<(InferPayload, Ener
             .parse()
             .map_err(|e: String| anyhow::anyhow!(e))?,
     };
-    Ok((payload, tier))
+    // `"blocking": true` opts this request into the backpressure path:
+    // a full queue makes the handler wait for space instead of shedding
+    // with 503 (default stays load-shedding — the ladder compares both).
+    let blocking = match v.opt("blocking") {
+        None => false,
+        Some(Json::Bool(b)) => *b,
+        Some(_) => anyhow::bail!("\"blocking\" must be a boolean"),
+    };
+    Ok((payload, tier, blocking))
 }
 
 #[cfg(test)]
@@ -1317,16 +1339,26 @@ mod tests {
     #[test]
     fn parse_infer_body_validates() {
         assert!(parse_infer_body(b"{\"image\":[1,2,3]}", 3).is_ok());
-        let (payload, tier) =
+        let (payload, tier, blocking) =
             parse_infer_body(b"{\"image\":[1,2,3],\"tier\":\"high\"}", 3).unwrap();
         match payload {
             InferPayload::Single(img) => assert_eq!(img, vec![1.0, 2.0, 3.0]),
             InferPayload::Batch { .. } => panic!("expected a single-image payload"),
         }
         assert_eq!(tier, EnergyTier::High);
+        assert!(!blocking, "blocking must default off (load-shedding)");
         // defaults to normal
-        let (_, tier) = parse_infer_body(b"{\"image\":[0,0,0]}", 3).unwrap();
+        let (_, tier, _) = parse_infer_body(b"{\"image\":[0,0,0]}", 3).unwrap();
         assert_eq!(tier, EnergyTier::Normal);
+        // explicit blocking flag, both values
+        let (_, _, b) =
+            parse_infer_body(b"{\"image\":[0,0,0],\"blocking\":true}", 3).unwrap();
+        assert!(b);
+        let (_, _, b) =
+            parse_infer_body(b"{\"image\":[0,0,0],\"blocking\":false}", 3).unwrap();
+        assert!(!b);
+        // non-boolean blocking is a 400
+        assert!(parse_infer_body(b"{\"image\":[0,0,0],\"blocking\":1}", 3).is_err());
         // shape mismatch, bad tier, bad json, missing key, non-finite pixel
         assert!(parse_infer_body(b"{\"image\":[1,2]}", 3).is_err());
         assert!(parse_infer_body(b"{\"image\":[1,2,3],\"tier\":\"x\"}", 3).is_err());
@@ -1338,7 +1370,7 @@ mod tests {
     #[test]
     fn parse_infer_body_batch_form() {
         // well-formed batch: 2 images of width 3, flattened row-major
-        let (payload, tier) =
+        let (payload, tier, _) =
             parse_infer_body(b"{\"images\":[[1,2,3],[4,5,6]],\"tier\":\"low\"}", 3).unwrap();
         match payload {
             InferPayload::Batch { images, count } => {
