@@ -1,0 +1,33 @@
+//! Stamps the build-info triple (`trace::build_info`): rustc version and
+//! git sha, falling back to "unknown" when either is unavailable (e.g. a
+//! source tarball).  No dependencies; runs the local toolchain/git only.
+
+use std::process::Command;
+
+fn capture(cmd: &str, args: &[&str]) -> Option<String> {
+    let out = Command::new(cmd).args(args).output().ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    let s = String::from_utf8(out.stdout).ok()?;
+    let s = s.trim();
+    if s.is_empty() {
+        None
+    } else {
+        Some(s.to_string())
+    }
+}
+
+fn main() {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let rustc_version = capture(&rustc, &["--version"])
+        .map(|v| v.trim_start_matches("rustc ").to_string())
+        .unwrap_or_else(|| "unknown".to_string());
+    let git_sha = capture("git", &["rev-parse", "--short=12", "HEAD"])
+        .unwrap_or_else(|| "unknown".to_string());
+    println!("cargo:rustc-env=EMTOPT_RUSTC={rustc_version}");
+    println!("cargo:rustc-env=EMTOPT_GIT_SHA={git_sha}");
+    // re-stamp when HEAD moves (harmless no-op outside a git checkout)
+    println!("cargo:rerun-if-changed=../.git/HEAD");
+    println!("cargo:rerun-if-changed=build.rs");
+}

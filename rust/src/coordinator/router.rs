@@ -53,7 +53,8 @@ use crate::energy::{EnergyPlan, ReadMode};
 use crate::inference::NoisyModel;
 use crate::metrics::{BatchSizeHistogram, LatencyHistogram};
 use crate::rng::hash2;
-use crate::scheduler::{Engine, LaneSpec};
+use crate::scheduler::{Engine, LaneSpec, Reply};
+use crate::trace::{StageHistograms, TraceContext};
 use crate::Result;
 
 #[cfg(feature = "aot")]
@@ -139,6 +140,12 @@ pub struct ServerStats {
     /// Per-request end-to-end engine latency (enqueue -> reply), with
     /// `p50/p95/p99` accessors for tail-latency reporting (`/metrics`).
     pub latency: LatencyHistogram,
+    /// Per-stage latency histograms (queue_wait / batch_wait / compute /
+    /// write) feeding `emtopt_stage_latency_us` on `/metrics`.  The
+    /// scheduler records the first three at reply fan-out; the HTTP
+    /// front end records the write stage after the response hits the
+    /// socket.
+    pub stages: StageHistograms,
     /// f64 bit-patterns of the cumulative analog / peripheral energy (pJ).
     cell_pj_bits: AtomicU64,
     peripheral_pj_bits: AtomicU64,
@@ -333,9 +340,25 @@ impl InferenceClient {
 
     /// Submit and wait for the logits (admission first, then the reply).
     fn submit(&self, images: Vec<f32>, count: usize, block: bool) -> Result<Vec<f32>> {
+        self.submit_traced(images, count, block, &TraceContext::internal())
+            .map(|r| r.logits)
+    }
+
+    /// Submit and wait for the full [`Reply`] — logits plus the span
+    /// record the scheduler filled in (queue/batch/compute spans, worker
+    /// attribution, observed energy).  The AOT channel backend cannot
+    /// attribute spans per request; it returns a default record carrying
+    /// only the trace identity.
+    fn submit_traced(
+        &self,
+        images: Vec<f32>,
+        count: usize,
+        block: bool,
+        tctx: &TraceContext,
+    ) -> Result<Reply> {
         match &self.backend {
             ClientBackend::Scheduler { engine, lane } => {
-                let rx = engine.submit(*lane, images, count, block)?;
+                let rx = engine.submit(*lane, images, count, block, tctx)?;
                 rx.recv()
                     .map_err(|_| anyhow::anyhow!("server dropped request"))?
             }
@@ -360,8 +383,18 @@ impl InferenceClient {
                     }
                 }
                 self.stats.submitted.fetch_add(1, Ordering::Relaxed);
-                rx.recv()
-                    .map_err(|_| anyhow::anyhow!("server dropped request"))?
+                let logits = rx
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("server dropped request"))??;
+                Ok(Reply {
+                    logits,
+                    span: crate::trace::SpanRecord {
+                        trace_id: tctx.trace_id,
+                        start_us: tctx.start_us,
+                        images: count,
+                        ..Default::default()
+                    },
+                })
             }
         }
     }
@@ -414,6 +447,28 @@ impl InferenceClient {
     pub fn try_infer_batch(&self, images: Vec<f32>) -> Result<Vec<f32>> {
         let count = self.check_batch(&images)?;
         self.submit(images, count, false)
+    }
+
+    /// Traced single-image flavour of [`InferenceClient::infer`] /
+    /// [`InferenceClient::try_infer`] (`block` selects which): returns
+    /// the logits together with the request's [`Reply::span`] so the
+    /// HTTP layer can finish the record (write/total) and feed the
+    /// flight recorder.
+    pub fn infer_traced(&self, image: Vec<f32>, block: bool, tctx: &TraceContext) -> Result<Reply> {
+        self.check_single(&image)?;
+        self.submit_traced(image, 1, block, tctx)
+    }
+
+    /// Traced multi-image flavour of [`InferenceClient::infer_batch`] /
+    /// [`InferenceClient::try_infer_batch`] (`block` selects which).
+    pub fn infer_batch_traced(
+        &self,
+        images: Vec<f32>,
+        block: bool,
+        tctx: &TraceContext,
+    ) -> Result<Reply> {
+        let count = self.check_batch(&images)?;
+        self.submit_traced(images, count, block, tctx)
     }
 
     /// Classify and argmax.

@@ -57,6 +57,14 @@ impl ReadCounters {
         self.peripheral_pj += other.peripheral_pj;
         self.cycles += other.cycles;
     }
+
+    /// Energy (uJ) accumulated since `prev`, an earlier snapshot of these
+    /// counters — the per-layer/per-request attribution primitive the
+    /// tracing subsystem uses.  Counters only ever grow, so the delta is
+    /// non-negative for a genuine snapshot.
+    pub fn uj_since(&self, prev: &ReadCounters) -> f64 {
+        (self.total_pj() - prev.total_pj()) * 1e-6
+    }
 }
 
 /// Reusable scratch for MAC reads: DAC level and bit-plane buffers.

@@ -21,9 +21,21 @@ use crate::data::{Dataset, IMG_LEN};
 use crate::device::DeviceConfig;
 use crate::energy::{EnergyPlan, LayerPlan, ReadMode};
 use crate::rng::Rng;
+use crate::trace::{LayerSpans, MAX_TRACE_LAYERS};
 use crate::Result;
 
 use rayon::prelude::*;
+
+/// Per-sample trace output of [`NoisyModel::forward_batch_seeds_traced`]:
+/// the sample's own energy/cycle counters (for per-request attribution)
+/// plus wall time and observed uJ per layer.  Tracing reads the clock and
+/// snapshots counters — it never touches the RNG stream, so the traced
+/// path is bit-identical to the untraced one (pinned by tests).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SampleTrace {
+    pub counters: ReadCounters,
+    pub layers: LayerSpans,
+}
 
 /// One dense layer programmed on a crossbar, with a digital bias.
 pub struct NoisyLinear {
@@ -170,10 +182,47 @@ impl NoisyModel {
         rng: &mut Rng,
         counters: &mut ReadCounters,
     ) -> &'s [f32] {
+        self.forward_into_impl(x, scratch, plan, cfg, rng, counters, None)
+    }
+
+    /// [`NoisyModel::forward_into`] with per-layer span capture: wall
+    /// time and counter-delta uJ per layer land in `spans` (first
+    /// [`MAX_TRACE_LAYERS`] layers; `spans.n` is the true layer count).
+    /// Identical RNG stream and logits as the untraced path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_into_traced<'s>(
+        &self,
+        x: &[f32],
+        scratch: &'s mut Scratch,
+        plan: &EnergyPlan,
+        cfg: &DeviceConfig,
+        rng: &mut Rng,
+        counters: &mut ReadCounters,
+        spans: &mut LayerSpans,
+    ) -> &'s [f32] {
+        self.forward_into_impl(x, scratch, plan, cfg, rng, counters, Some(spans))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn forward_into_impl<'s>(
+        &self,
+        x: &[f32],
+        scratch: &'s mut Scratch,
+        plan: &EnergyPlan,
+        cfg: &DeviceConfig,
+        rng: &mut Rng,
+        counters: &mut ReadCounters,
+        mut spans: Option<&mut LayerSpans>,
+    ) -> &'s [f32] {
         assert_eq!(x.len(), self.d_in(), "input width mismatch");
         assert_eq!(plan.len(), self.layers.len(), "plan entry per layer");
         let Scratch { a, b, mac } = scratch;
         for (i, layer) in self.layers.iter().enumerate() {
+            // span capture reads the clock and snapshots the counters;
+            // the RNG stream is untouched, so traced == untraced bitwise
+            let span_t0 = spans
+                .as_ref()
+                .map(|_| (std::time::Instant::now(), *counters));
             // ping-pong: even layers write a, odd layers write b
             let (prev, cur): (&mut [f32], &mut [f32]) = if i % 2 == 0 {
                 (b.as_mut_slice(), a.as_mut_slice())
@@ -189,6 +238,13 @@ impl NoisyModel {
                     *v = v.max(0.0); // ReLU in place — no temporary Vec
                 }
                 layer.forward(input, out, plan.layer(i), cfg, rng, counters, mac);
+            }
+            if let (Some(sp), Some((t0, c0))) = (spans.as_deref_mut(), span_t0) {
+                sp.n = self.layers.len();
+                if i < MAX_TRACE_LAYERS {
+                    sp.us[i] = t0.elapsed().as_micros().min(u32::MAX as u128) as u32;
+                    sp.uj[i] = counters.uj_since(&c0) as f32;
+                }
             }
         }
         let last = self.layers.len() - 1;
@@ -267,6 +323,60 @@ impl NoisyModel {
             "one seed per sample required"
         );
         self.forward_batch_impl(xs, plan, cfg, counters, |i| seeds[i])
+    }
+
+    /// [`NoisyModel::forward_batch_seeds`] with per-sample tracing: the
+    /// returned `Vec<SampleTrace>` carries each sample's own energy
+    /// counters and per-layer spans (the serving stack's per-request
+    /// attribution).  Same per-sample RNG streams and the same
+    /// index-order counter merge into `counters` as the untraced path —
+    /// logits and merged counters are bit-identical to
+    /// [`NoisyModel::forward_batch_seeds`] at any thread count.
+    pub fn forward_batch_seeds_traced(
+        &self,
+        xs: &[f32],
+        plan: &EnergyPlan,
+        cfg: &DeviceConfig,
+        seeds: &[u64],
+        counters: &mut ReadCounters,
+    ) -> (Vec<f32>, Vec<SampleTrace>) {
+        let d_in = self.d_in();
+        let d_out = self.d_out();
+        assert!(
+            xs.len() % d_in == 0,
+            "batch input length {} not a multiple of d_in {}",
+            xs.len(),
+            d_in
+        );
+        let batch = xs.len() / d_in;
+        assert_eq!(seeds.len(), batch, "one seed per sample required");
+        let mut logits = vec![0.0f32; batch * d_out];
+        let traces: Vec<SampleTrace> = logits
+            .par_chunks_mut(d_out)
+            .enumerate()
+            .map_init(
+                || Scratch::for_model(self),
+                |scratch, (i, out)| {
+                    let mut rng = Rng::new(seeds[i]);
+                    let mut trace = SampleTrace::default();
+                    let y = self.forward_into_impl(
+                        &xs[i * d_in..(i + 1) * d_in],
+                        scratch,
+                        plan,
+                        cfg,
+                        &mut rng,
+                        &mut trace.counters,
+                        Some(&mut trace.layers),
+                    );
+                    out.copy_from_slice(y);
+                    trace
+                },
+            )
+            .collect();
+        for t in &traces {
+            counters.merge(&t.counters);
+        }
+        (logits, traces)
     }
 
     /// Shared batched-forward body: fan samples across rayon, sample `i`
@@ -580,6 +690,43 @@ mod tests {
             &mut c_solo,
         );
         assert_eq!(solo.as_slice(), &b[i * 4..(i + 1) * 4]);
+    }
+
+    #[test]
+    fn traced_batch_is_bit_identical_and_attributes_energy() {
+        // tracing reads clocks/counters only: logits and merged counters
+        // must match the untraced path exactly, and per-sample/per-layer
+        // energy must reconcile with the merged totals
+        let cfg = DeviceConfig::default();
+        let model = mk_model(&cfg);
+        let n = 5usize;
+        let xs: Vec<f32> = {
+            let mut r = Rng::new(17);
+            (0..16 * n).map(|_| r.next_f32()).collect()
+        };
+        let seeds: Vec<u64> = (0..n).map(|i| crate::rng::hash2(7, i as u64)).collect();
+        let plan = model.uniform_plan(ReadMode::Decomposed);
+        let mut c_plain = ReadCounters::default();
+        let plain = model.forward_batch_seeds(&xs, &plan, &cfg, &seeds, &mut c_plain);
+        let mut c_traced = ReadCounters::default();
+        let (traced, traces) =
+            model.forward_batch_seeds_traced(&xs, &plan, &cfg, &seeds, &mut c_traced);
+        assert_eq!(plain, traced);
+        assert_eq!(c_plain, c_traced);
+        assert_eq!(traces.len(), n);
+        let sum: f64 = traces.iter().map(|t| t.counters.total_pj()).sum();
+        assert!((sum - c_traced.total_pj()).abs() < 1e-9);
+        for t in &traces {
+            assert_eq!(t.layers.n, 3);
+            // per-layer uJ sums to the sample's counters
+            let layer_uj: f64 = t.layers.uj.iter().map(|&u| u as f64).sum();
+            let sample_uj = t.counters.total_pj() * 1e-6;
+            assert!(
+                (layer_uj - sample_uj).abs() < 1e-6 * sample_uj.max(1e-12) + 1e-9,
+                "{layer_uj} vs {sample_uj}"
+            );
+            assert!(t.counters.cycles > 0);
+        }
     }
 
     #[test]

@@ -40,6 +40,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod server;
 pub mod timing;
+pub mod trace;
 pub mod util;
 
 /// Crate-wide result type.

@@ -99,6 +99,8 @@ FLAGS (defaults in parentheses):
                       request sizes per tier (e.g. 1,4,16) to map the
                       batch-amortisation surface
   --calib-requests N  loadgen: closed-loop calibration requests (= --requests)
+  --trace-sample N    loadgen: mark every Nth request \"trace\": true and
+                      summarize the echoed span breakdowns (0 = off)
   --out FILE          loadgen: report path (BENCH_serve.json)
 ";
 
@@ -470,7 +472,10 @@ fn serve_http_cmd(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
     };
     let handle = serve_http(model, http_cfg)?;
     println!("serving on http://{}", handle.addr());
-    println!("  POST /v1/infer | /v1/classify   GET /healthz | /metrics   POST /admin/shutdown");
+    println!(
+        "  POST /v1/infer | /v1/classify   GET /healthz | /metrics | /admin/trace   \
+         POST /admin/shutdown"
+    );
     for (plan, _) in handle.per_tier() {
         println!("  {}", plan.describe());
     }
@@ -518,6 +523,7 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         classify: endpoint == "classify",
         batch: args.parse_or("batch", 1usize)?,
         blocking: args.has("blocking"),
+        trace_sample: args.parse_or("trace-sample", 0usize)?,
     };
     let out = args.str_or("out", "BENCH_serve.json");
     let batch_sweep: Vec<usize> = match args.get("batch-sweep") {

@@ -57,12 +57,14 @@ pub const LATENCY_OVERFLOW_REPORT_US: f64 =
 #[derive(Debug)]
 pub struct LatencyHistogram {
     counts: [AtomicU64; LATENCY_NUM_BUCKETS],
+    sum_us: AtomicU64,
 }
 
 impl Default for LatencyHistogram {
     fn default() -> Self {
         LatencyHistogram {
             counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
         }
     }
 }
@@ -75,11 +77,19 @@ impl LatencyHistogram {
             .position(|&b| us <= b)
             .unwrap_or(LATENCY_NUM_BUCKETS - 1);
         self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
     }
 
     /// Total number of recorded observations.
     pub fn count(&self) -> u64 {
         self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sum of all recorded observations (microseconds) — the exact
+    /// `_sum` a Prometheus histogram exposition needs, which bucket
+    /// counts alone cannot reconstruct.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
     }
 
     /// Per-bucket counts; the last entry is the overflow bucket.
@@ -359,6 +369,17 @@ mod tests {
         assert_eq!(h.count(), 0);
         assert_eq!(h.quantile_us(0.5), 0.0);
         assert_eq!(h.p99_us(), 0.0);
+    }
+
+    #[test]
+    fn histogram_tracks_exact_sum() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.sum_us(), 0);
+        for us in [3u64, 8, 900, 90_000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.sum_us(), 3 + 8 + 900 + 90_000);
+        assert_eq!(h.count(), 4);
     }
 
     #[test]

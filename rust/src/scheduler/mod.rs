@@ -59,7 +59,17 @@ use crate::device::DeviceConfig;
 use crate::energy::EnergyPlan;
 use crate::inference::NoisyModel;
 use crate::metrics::LatencyWindow;
+use crate::trace::{SpanRecord, Stage, TraceContext};
 use crate::Result;
+
+/// One reply off the engine: the request's concatenated per-image logits
+/// plus its span record so far.  The scheduler fills queue/batch/compute
+/// spans, worker/steal attribution and per-request energy; the HTTP
+/// layer completes `write_us`/`total_us` and feeds the flight recorder.
+pub struct Reply {
+    pub logits: Vec<f32>,
+    pub span: SpanRecord,
+}
 
 /// One scheduling lane: the per-layer energy plan its reads use and the
 /// RNG lane seed its images derive their noise streams from.  Lane
@@ -77,8 +87,15 @@ struct WorkItem {
     /// `count * d_in` row-major pixels.
     images: Vec<f32>,
     count: usize,
-    reply: mpsc::Sender<Result<Vec<f32>>>,
+    reply: mpsc::Sender<Result<Reply>>,
     enqueued: Instant,
+    /// Trace identity minted at HTTP parse time (id + recorder-epoch
+    /// start timestamp); internal for non-HTTP callers.
+    trace_id: u64,
+    start_us: u64,
+    /// When a worker pulled this item off its lane queue (queue_wait
+    /// ends here; batch_wait runs from here to dispatch).
+    picked: Option<Instant>,
 }
 
 /// Per-lane engine state outside the scheduler mutex.
@@ -343,13 +360,16 @@ impl Engine {
     /// Admission order: governor (typed [`EnergyShed`]) first, then the
     /// lane's bounded queue — full means a typed [`Overloaded`] error
     /// (`block == false`) or waiting for space (`block == true`).
+    /// `tctx` is the request's trace identity (use
+    /// [`TraceContext::internal`] for non-HTTP callers).
     pub(crate) fn submit(
         &self,
         lane: usize,
         images: Vec<f32>,
         count: usize,
         block: bool,
-    ) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
+        tctx: &TraceContext,
+    ) -> Result<mpsc::Receiver<Result<Reply>>> {
         let shared = &self.shared;
         if let Some(gov) = &shared.governor {
             gov.admit(lane)?;
@@ -360,6 +380,9 @@ impl Engine {
             count,
             reply,
             enqueued: Instant::now(),
+            trace_id: tctx.trace_id,
+            start_us: tctx.start_us,
+            picked: None,
         };
         let mut s = shared.sched.lock().expect("scheduler poisoned");
         loop {
@@ -434,13 +457,13 @@ fn worker_loop(shared: &Shared, worker: usize) {
     loop {
         let mut s = shared.sched.lock().expect("scheduler poisoned");
         // wait for work anywhere (or the stop flag + drained queues)
-        let lane = loop {
+        let (lane, stolen) = loop {
             let draining = shared.draining.load(Ordering::SeqCst);
             if let Some((lane, stolen)) = pick_lane(&mut s, worker, draining) {
                 if stolen {
                     shared.lanes[lane].steals.fetch_add(1, Ordering::Relaxed);
                 }
-                break lane;
+                break (lane, stolen);
             }
             if s.stopped {
                 return;
@@ -455,14 +478,18 @@ fn worker_loop(shared: &Shared, worker: usize) {
         // preserved: singles queued ahead of a multi dispatch first.
         let mut items: Vec<WorkItem> = Vec::new();
         if s.queues[lane].front().is_some_and(|r| r.count > 1) {
-            items.push(s.queues[lane].pop_front().expect("checked non-empty"));
+            let mut it = s.queues[lane].pop_front().expect("checked non-empty");
+            it.picked = Some(Instant::now());
+            items.push(it);
         } else {
             let deadline = Instant::now() + shared.max_wait;
             loop {
                 while items.len() < shared.batch {
                     match s.queues[lane].front() {
                         Some(r) if r.count == 1 => {
-                            items.push(s.queues[lane].pop_front().expect("checked front"));
+                            let mut it = s.queues[lane].pop_front().expect("checked front");
+                            it.picked = Some(Instant::now());
+                            items.push(it);
                         }
                         _ => break, // empty, or a multi that must run alone
                     }
@@ -490,15 +517,19 @@ fn worker_loop(shared: &Shared, worker: usize) {
             .store(s.queues[lane].len() as u64, Ordering::Relaxed);
         drop(s);
         shared.space_cv.notify_all();
-        run_batch(shared, lane, items);
+        run_batch(shared, lane, worker, stolen, items);
     }
 }
 
 /// Execute one collected batch on the shared model and fan the per-image
 /// logits back to the callers (identical accounting to the old per-lane
 /// engines; per-image noise seeds stay content-derived, so results are
-/// independent of which worker ran the batch).
-fn run_batch(shared: &Shared, lane_idx: usize, items: Vec<WorkItem>) {
+/// independent of which worker ran the batch).  Each reply carries the
+/// request's span record: queue_wait (enqueue→pick), batch_wait
+/// (pick→dispatch), compute (whole-batch forward wall time — what the
+/// rider actually waited on), plus the request's own samples' observed
+/// energy and per-layer breakdown from the traced forward.
+fn run_batch(shared: &Shared, lane_idx: usize, worker: usize, stolen: bool, items: Vec<WorkItem>) {
     let lane = &shared.lanes[lane_idx];
     let model = &shared.model;
     let d_in = model.d_in();
@@ -516,7 +547,8 @@ fn run_batch(shared: &Shared, lane_idx: usize, items: Vec<WorkItem>) {
     }
     let t0 = Instant::now();
     let mut counters = ReadCounters::default();
-    let logits = model.forward_batch_seeds(&x, &lane.plan, &shared.device, &seeds, &mut counters);
+    let (logits, traces) =
+        model.forward_batch_seeds_traced(&x, &lane.plan, &shared.device, &seeds, &mut counters);
     let infer_us = t0.elapsed().as_micros() as u64;
 
     let stats = &lane.stats;
@@ -541,9 +573,38 @@ fn run_batch(shared: &Shared, lane_idx: usize, items: Vec<WorkItem>) {
         let total_us = r.enqueued.elapsed().as_micros() as u64;
         stats.queue_us.fetch_add(total_us, Ordering::Relaxed);
         stats.latency.record_us(total_us);
-        let _ = r
-            .reply
-            .send(Ok(logits[off * nc..(off + r.count) * nc].to_vec()));
+
+        let queue_wait_us = r
+            .picked
+            .map_or(0, |p| p.duration_since(r.enqueued).as_micros() as u64);
+        let batch_wait_us = r
+            .picked
+            .map_or(0, |p| t0.duration_since(p).as_micros() as u64);
+        let mut span = SpanRecord {
+            trace_id: r.trace_id,
+            start_us: r.start_us,
+            tier: lane_idx,
+            worker,
+            stolen,
+            batch_images: n_images,
+            images: r.count,
+            queue_wait_us,
+            batch_wait_us,
+            compute_us: infer_us,
+            ..SpanRecord::default()
+        };
+        for t in &traces[off..off + r.count] {
+            span.energy_uj += t.counters.total_pj() * 1e-6;
+            span.layers.merge(&t.layers);
+        }
+        stats.stages.record(Stage::QueueWait, queue_wait_us);
+        stats.stages.record(Stage::BatchWait, batch_wait_us);
+        stats.stages.record(Stage::Compute, infer_us);
+
+        let _ = r.reply.send(Ok(Reply {
+            logits: logits[off * nc..(off + r.count) * nc].to_vec(),
+            span,
+        }));
         off += r.count;
     }
 }
@@ -619,6 +680,9 @@ mod tests {
             count,
             reply,
             enqueued: Instant::now(),
+            trace_id: 0,
+            start_us: 0,
+            picked: None,
         }
     }
 

@@ -19,11 +19,22 @@
 //! then replays the schedule at a ladder of offered-load fractions
 //! (default 0.25x..2x of measured capacity), recording one report per
 //! rung — the `BENCH_serve.json` "ladder" schema CI asserts against.
+//!
+//! Every run additionally scrapes the server's `emtopt_stage_latency_us`
+//! histograms before and after, so each report (and therefore each
+//! ladder rung) carries a per-(tier, stage) `stage_breakdown` delta
+//! covering exactly its own requests.  `--trace-sample N` marks every
+//! Nth request with `"trace": true` and summarizes the echoed inline
+//! span breakdowns; default bodies stay byte-identical.
 
+use std::collections::BTreeMap;
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
 use crate::data::{Dataset, Split, Suite, DATA_SEED, IMG_LEN};
+use crate::metrics::{
+    latency_quantile_from_counts, LATENCY_BUCKET_BOUNDS_US, LATENCY_NUM_BUCKETS,
+};
 use crate::rng::Rng;
 use crate::util::json::Json;
 use crate::Result;
@@ -54,6 +65,11 @@ pub struct LoadgenConfig {
     /// default load-shedding path (503 under overload).  Lets one
     /// `BENCH_serve.json` compare backpressure vs shedding tails.
     pub blocking: bool,
+    /// Mark every Nth request (by global index) with `"trace": true`
+    /// and collect the echoed inline span breakdowns.  0 disables
+    /// sampling and keeps request bodies byte-identical to older
+    /// generators.
+    pub trace_sample: usize,
 }
 
 impl Default for LoadgenConfig {
@@ -67,6 +83,7 @@ impl Default for LoadgenConfig {
             classify: true,
             batch: 1,
             blocking: false,
+            trace_sample: 0,
         }
     }
 }
@@ -107,6 +124,46 @@ pub struct LoadgenReport {
     /// Fleet energy budget (uJ/s) the server advertised on `/healthz`
     /// (`None` when no governor is armed or the server predates it).
     pub energy_budget_uj_s: Option<f64>,
+    /// Per-(tier, stage) latency breakdown from the server's
+    /// `emtopt_stage_latency_us` histograms — the before/after scrape
+    /// delta covering exactly this run's requests.  Empty when the
+    /// server predates the family or the scrape failed.
+    pub stage_breakdown: Vec<StageStat>,
+    /// `"trace": true` sampling period used (0 = off).
+    pub trace_sample: usize,
+    /// OK responses that echoed an inline span breakdown.
+    pub trace_sampled: u64,
+    /// Mean stage times across the sampled inline echoes, microseconds:
+    /// `[queue_wait, batch_wait, compute]` (the echo omits write/total).
+    pub trace_inline_mean_us: [f64; 3],
+}
+
+/// Summary of one (tier, stage) cell of the server's stage-latency
+/// histograms over a loadgen run (quantiles interpolated from the
+/// bucket-count delta, mean from the exact `_sum` delta).
+#[derive(Clone, Debug, Default)]
+pub struct StageStat {
+    pub tier: String,
+    pub stage: String,
+    pub count: u64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+impl StageStat {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tier", Json::Str(self.tier.clone())),
+            ("stage", Json::Str(self.stage.clone())),
+            ("count", Json::Num(self.count as f64)),
+            ("mean_us", Json::Num(self.mean_us)),
+            ("p50_us", Json::Num(self.p50_us)),
+            ("p95_us", Json::Num(self.p95_us)),
+            ("p99_us", Json::Num(self.p99_us)),
+        ])
+    }
 }
 
 impl LoadgenReport {
@@ -147,6 +204,24 @@ impl LoadgenReport {
             self.mean_us / 1000.0,
             self.max_us as f64 / 1000.0
         ));
+        for st in &self.stage_breakdown {
+            s.push_str(&format!(
+                "\n  stage {:<6} {:<10} n {:>6} | mean {:>8.1} us | p50 {:>8.1} | \
+                 p95 {:>8.1} | p99 {:>8.1}",
+                st.tier, st.stage, st.count, st.mean_us, st.p50_us, st.p95_us, st.p99_us
+            ));
+        }
+        if self.trace_sample > 0 {
+            s.push_str(&format!(
+                "\n  traced 1/{}: {} echoes | inline mean queue_wait {:.1} us | \
+                 batch_wait {:.1} us | compute {:.1} us",
+                self.trace_sample,
+                self.trace_sampled,
+                self.trace_inline_mean_us[0],
+                self.trace_inline_mean_us[1],
+                self.trace_inline_mean_us[2]
+            ));
+        }
         s
     }
 
@@ -159,7 +234,7 @@ impl LoadgenReport {
             ("mean_us", Json::Num(self.mean_us)),
             ("max_us", Json::Num(self.max_us as f64)),
         ]);
-        Json::obj(vec![
+        let mut fields = vec![
             ("bench", Json::Str("serve".into())),
             ("unix_time", Json::Num(unix_time() as f64)),
             ("connections", Json::Num(self.connections as f64)),
@@ -184,7 +259,24 @@ impl LoadgenReport {
             ("elapsed_s", Json::Num(self.elapsed_s)),
             ("throughput_rps", Json::Num(self.throughput_rps)),
             ("latency_us", latency),
-        ])
+            (
+                "stage_breakdown",
+                Json::Arr(self.stage_breakdown.iter().map(|s| s.to_json()).collect()),
+            ),
+        ];
+        if self.trace_sample > 0 {
+            fields.push(("trace_sample", Json::Num(self.trace_sample as f64)));
+            fields.push(("trace_sampled", Json::Num(self.trace_sampled as f64)));
+            fields.push((
+                "trace_inline_mean_us",
+                Json::obj(vec![
+                    ("queue_wait", Json::Num(self.trace_inline_mean_us[0])),
+                    ("batch_wait", Json::Num(self.trace_inline_mean_us[1])),
+                    ("compute", Json::Num(self.trace_inline_mean_us[2])),
+                ]),
+            ));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -219,6 +311,8 @@ struct Counts {
     transport_errors: u64,
     correct: u64,
     labeled: u64,
+    /// OK responses that echoed an inline `"trace"` breakdown.
+    trace_sampled: u64,
 }
 
 /// Open a keep-alive connection to the server, or `None` on failure.
@@ -276,6 +370,126 @@ fn probe(addr: &str) -> Result<ProbeInfo> {
     })
 }
 
+/// One (tier, stage) cell of a scraped `emtopt_stage_latency_us`
+/// exposition: cumulative bucket counts (as exposed, `le`-ordered),
+/// `_count`, and the exact `_sum`.
+#[derive(Clone, Copy, Debug, Default)]
+struct StageCell {
+    cum: [u64; LATENCY_NUM_BUCKETS],
+    count: u64,
+    sum_us: u64,
+}
+
+/// Scraped stage histograms keyed by (tier, stage); `BTreeMap` keeps the
+/// derived breakdown deterministically ordered.
+type StageScrape = BTreeMap<(String, String), StageCell>;
+
+/// Parse `emtopt_stage_latency_us_{bucket,count,sum}` lines out of a
+/// Prometheus text exposition; everything else is skipped.  Unknown `le`
+/// bounds are ignored rather than misfiled, so a server with a different
+/// bucket table degrades to count/sum-only stats.
+fn parse_stage_scrape(text: &str) -> StageScrape {
+    let mut map = StageScrape::new();
+    for line in text.lines() {
+        let Some(rest) = line.strip_prefix("emtopt_stage_latency_us_") else {
+            continue;
+        };
+        let (kind, rest) = match rest.split_once('{') {
+            Some(kv) => kv,
+            None => continue,
+        };
+        let Some((labels, value)) = rest.split_once('}') else {
+            continue;
+        };
+        let Ok(value) = value.trim().parse::<u64>() else {
+            continue;
+        };
+        let (mut tier, mut stage, mut le) = (None, None, None);
+        for kv in labels.split(',') {
+            let Some((k, v)) = kv.split_once('=') else {
+                continue;
+            };
+            let v = v.trim_matches('"');
+            match k {
+                "tier" => tier = Some(v),
+                "stage" => stage = Some(v),
+                "le" => le = Some(v),
+                _ => {}
+            }
+        }
+        let (Some(tier), Some(stage)) = (tier, stage) else {
+            continue;
+        };
+        let cell = map
+            .entry((tier.to_string(), stage.to_string()))
+            .or_default();
+        match kind {
+            "bucket" => {
+                let idx = match le {
+                    Some("+Inf") => Some(LATENCY_NUM_BUCKETS - 1),
+                    Some(b) => b
+                        .parse::<u64>()
+                        .ok()
+                        .and_then(|b| LATENCY_BUCKET_BOUNDS_US.iter().position(|&x| x == b)),
+                    None => None,
+                };
+                if let Some(idx) = idx {
+                    cell.cum[idx] = value;
+                }
+            }
+            "count" => cell.count = value,
+            "sum" => cell.sum_us = value,
+            _ => {}
+        }
+    }
+    map
+}
+
+/// Scrape `/metrics` and extract the stage-latency histograms.
+fn scrape_stages(addr: &str) -> Result<StageScrape> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| anyhow::anyhow!("connecting to {addr}: {e}"))?;
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let mut conn = HttpConn::new(stream);
+    conn.write_request("GET", "/metrics", b"")?;
+    let (status, body) = conn.read_response(4 << 20)?;
+    anyhow::ensure!(status == 200, "metrics returned {status}");
+    Ok(parse_stage_scrape(std::str::from_utf8(&body)?))
+}
+
+/// Per-(tier, stage) breakdown of the samples recorded **between** two
+/// scrapes: per-bucket deltas feed the shared quantile kernel, the
+/// `_sum` delta gives the exact mean.  Cells with no new samples are
+/// dropped (an idle tier produces no rows, not zero rows).
+fn stage_breakdown(before: &StageScrape, after: &StageScrape) -> Vec<StageStat> {
+    let zero = StageCell::default();
+    let mut out = Vec::new();
+    for (key, a) in after {
+        let b = before.get(key).unwrap_or(&zero);
+        let count = a.count.saturating_sub(b.count);
+        if count == 0 {
+            continue;
+        }
+        // de-cumulate each exposition, then diff per bucket
+        let mut counts = [0u64; LATENCY_NUM_BUCKETS];
+        for i in 0..LATENCY_NUM_BUCKETS {
+            let ai = a.cum[i].saturating_sub(if i > 0 { a.cum[i - 1] } else { 0 });
+            let bi = b.cum[i].saturating_sub(if i > 0 { b.cum[i - 1] } else { 0 });
+            counts[i] = ai.saturating_sub(bi);
+        }
+        out.push(StageStat {
+            tier: key.0.clone(),
+            stage: key.1.clone(),
+            count,
+            mean_us: a.sum_us.saturating_sub(b.sum_us) as f64 / count as f64,
+            p50_us: latency_quantile_from_counts(&counts, 0.50),
+            p95_us: latency_quantile_from_counts(&counts, 0.95),
+            p99_us: latency_quantile_from_counts(&counts, 0.99),
+        });
+    }
+    out
+}
+
 /// Clamp a sample to a JSON-renderable value: `{}` formats non-finite
 /// `f32`s as `NaN`/`inf`, which is not JSON — the server would answer an
 /// opaque `400` for every affected request.  Mirrors the server-side
@@ -303,16 +517,19 @@ fn push_image(s: &mut String, image: &[f32]) {
     s.push(']');
 }
 
-/// JSON body for one single-image request.  `blocking` is only rendered
-/// when set, so default runs keep byte-identical bodies with older
-/// generators (and exercise servers that predate the flag).
-fn body_for(image: &[f32], tier: EnergyTier, blocking: bool) -> String {
+/// JSON body for one single-image request.  `blocking` and `trace` are
+/// only rendered when set, so default runs keep byte-identical bodies
+/// with older generators (and exercise servers that predate the flags).
+fn body_for(image: &[f32], tier: EnergyTier, blocking: bool, trace: bool) -> String {
     use std::fmt::Write as _;
     let mut s = String::with_capacity(image.len() * 10 + 48);
     s.push_str("{\"image\":");
     push_image(&mut s, image);
     if blocking {
         s.push_str(",\"blocking\":true");
+    }
+    if trace {
+        s.push_str(",\"trace\":true");
     }
     let _ = write!(s, ",\"tier\":\"{}\"}}", tier.name());
     s
@@ -325,6 +542,7 @@ fn body_for_batch(
     input_len: usize,
     tier: EnergyTier,
     blocking: bool,
+    trace: bool,
 ) -> String {
     use std::fmt::Write as _;
     let mut s = String::with_capacity(images.len() * 10 + 64);
@@ -338,6 +556,9 @@ fn body_for_batch(
     s.push(']');
     if blocking {
         s.push_str(",\"blocking\":true");
+    }
+    if trace {
+        s.push_str(",\"trace\":true");
     }
     let _ = write!(s, ",\"tier\":\"{}\"}}", tier.name());
     s
@@ -378,6 +599,11 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let base = cfg.requests / conns;
     let extra = cfg.requests % conns;
 
+    // Stage-histogram scrape bracketing the run: the delta attributes
+    // exactly this run's requests.  Tolerated to fail (older server,
+    // scrape race) — the breakdown is then empty, never wrong.
+    let scrape_before = scrape_stages(&cfg.addr).unwrap_or_default();
+
     let t0 = Instant::now();
     let threads: Vec<_> = (0..conns)
         .map(|c| {
@@ -387,9 +613,11 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
             let fixed_tier = cfg.tier;
             let classify = cfg.classify;
             let blocking = cfg.blocking;
-            std::thread::spawn(move || -> (Counts, Vec<u64>) {
+            let trace_sample = cfg.trace_sample as u64;
+            std::thread::spawn(move || -> (Counts, Vec<u64>, Vec<[u64; 3]>) {
                 let mut counts = Counts::default();
                 let mut latencies = Vec::with_capacity(my_count as usize);
+                let mut spans: Vec<[u64; 3]> = Vec::new();
                 let mut conn = connect_http(&addr);
                 let mut img = vec![0.0f32; input_len * batch];
                 let mut labels: Vec<usize> = Vec::with_capacity(batch);
@@ -420,10 +648,11 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                     // render the body before the latency clock starts, so
                     // p50/p95/p99 measure network + server, not client-side
                     // JSON formatting
+                    let traced = trace_sample > 0 && global % trace_sample == 0;
                     let body = if batch == 1 {
-                        body_for(&img, tier, blocking)
+                        body_for(&img, tier, blocking, traced)
                     } else {
-                        body_for_batch(&img, input_len, tier, blocking)
+                        body_for_batch(&img, input_len, tier, blocking, traced)
                     };
                     let start = if interval.is_zero() {
                         Instant::now()
@@ -473,11 +702,15 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                         200 => {
                             counts.ok += 1;
                             latencies.push(us);
-                            if classify && !labels.is_empty() {
-                                let parsed = std::str::from_utf8(&resp_body)
+                            let parsed = if (classify && !labels.is_empty()) || traced {
+                                std::str::from_utf8(&resp_body)
                                     .ok()
-                                    .and_then(|t| Json::parse(t).ok());
-                                if let Some(v) = parsed {
+                                    .and_then(|t| Json::parse(t).ok())
+                            } else {
+                                None
+                            };
+                            if let Some(v) = &parsed {
+                                if classify && !labels.is_empty() {
                                     if batch == 1 {
                                         counts.labeled += 1;
                                         let pred =
@@ -498,21 +731,36 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                                         }
                                     }
                                 }
+                                if traced {
+                                    if let Some(t) = v.opt("trace") {
+                                        let g = |k: &str| {
+                                            t.get(k).ok().and_then(|x| x.as_u64().ok()).unwrap_or(0)
+                                        };
+                                        counts.trace_sampled += 1;
+                                        spans.push([
+                                            g("queue_wait_us"),
+                                            g("batch_wait_us"),
+                                            g("compute_us"),
+                                        ]);
+                                    }
+                                }
                             }
                         }
                         503 => counts.overloaded += 1,
                         _ => counts.http_errors += 1,
                     }
                 }
-                (counts, latencies)
+                (counts, latencies, spans)
             })
         })
         .collect();
 
     let mut total = Counts::default();
     let mut latencies: Vec<u64> = Vec::with_capacity(cfg.requests as usize);
+    let mut spans: Vec<[u64; 3]> = Vec::new();
     for t in threads {
-        let (c, mut l) = t.join().map_err(|_| anyhow::anyhow!("loadgen thread panicked"))?;
+        let (c, mut l, mut s) =
+            t.join().map_err(|_| anyhow::anyhow!("loadgen thread panicked"))?;
         total.sent += c.sent;
         total.ok += c.ok;
         total.overloaded += c.overloaded;
@@ -520,9 +768,25 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         total.transport_errors += c.transport_errors;
         total.correct += c.correct;
         total.labeled += c.labeled;
+        total.trace_sampled += c.trace_sampled;
         latencies.append(&mut l);
+        spans.append(&mut s);
     }
     let elapsed_s = t0.elapsed().as_secs_f64();
+    let scrape_after = scrape_stages(&cfg.addr).unwrap_or_default();
+    let breakdown = stage_breakdown(&scrape_before, &scrape_after);
+    let trace_inline_mean_us = if spans.is_empty() {
+        [0.0; 3]
+    } else {
+        let n = spans.len() as f64;
+        let mut m = [0.0; 3];
+        for s in &spans {
+            for (acc, &v) in m.iter_mut().zip(s.iter()) {
+                *acc += v as f64 / n;
+            }
+        }
+        m
+    };
     latencies.sort_unstable();
     let mean_us = if latencies.is_empty() {
         0.0
@@ -554,6 +818,10 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         blocking: cfg.blocking,
         plan_source: info.plan_source,
         energy_budget_uj_s: info.energy_budget_uj_s,
+        stage_breakdown: breakdown,
+        trace_sample: cfg.trace_sample,
+        trace_sampled: total.trace_sampled,
+        trace_inline_mean_us,
     })
 }
 
@@ -839,31 +1107,99 @@ mod tests {
 
     #[test]
     fn body_renders_valid_json() {
-        let body = body_for(&[0.5, -1.25, 3.0], EnergyTier::High, false);
+        let body = body_for(&[0.5, -1.25, 3.0], EnergyTier::High, false, false);
         let v = Json::parse(&body).unwrap();
         assert_eq!(v.get("tier").unwrap().as_str().unwrap(), "high");
         assert_eq!(
             v.get("image").unwrap().as_f32s().unwrap(),
             vec![0.5, -1.25, 3.0]
         );
-        // the shedding default omits the flag entirely (byte-compatible
-        // with servers that predate it)
+        // the shedding default omits the flags entirely (byte-compatible
+        // with servers that predate them)
         assert!(v.opt("blocking").is_none());
+        assert!(v.opt("trace").is_none());
     }
 
     #[test]
     fn blocking_flag_renders_into_both_body_forms() {
-        let single = body_for(&[1.0, 2.0], EnergyTier::Low, true);
+        let single = body_for(&[1.0, 2.0], EnergyTier::Low, true, false);
         let v = Json::parse(&single).unwrap();
         assert_eq!(*v.get("blocking").unwrap(), Json::Bool(true));
         assert_eq!(v.get("tier").unwrap().as_str().unwrap(), "low");
-        let batch = body_for_batch(&[1.0, 2.0, 3.0, 4.0], 2, EnergyTier::Normal, true);
+        let batch = body_for_batch(&[1.0, 2.0, 3.0, 4.0], 2, EnergyTier::Normal, true, false);
         let v = Json::parse(&batch).unwrap();
         assert_eq!(*v.get("blocking").unwrap(), Json::Bool(true));
         assert_eq!(v.get("images").unwrap().as_arr().unwrap().len(), 2);
         // and stays absent from batch bodies by default
-        let batch = body_for_batch(&[1.0, 2.0], 2, EnergyTier::Normal, false);
+        let batch = body_for_batch(&[1.0, 2.0], 2, EnergyTier::Normal, false, false);
         assert!(Json::parse(&batch).unwrap().opt("blocking").is_none());
+    }
+
+    #[test]
+    fn trace_flag_renders_into_both_body_forms() {
+        let single = body_for(&[1.0], EnergyTier::Normal, false, true);
+        let v = Json::parse(&single).unwrap();
+        assert_eq!(*v.get("trace").unwrap(), Json::Bool(true));
+        let batch = body_for_batch(&[1.0, 2.0], 2, EnergyTier::Normal, true, true);
+        let v = Json::parse(&batch).unwrap();
+        assert_eq!(*v.get("trace").unwrap(), Json::Bool(true));
+        assert_eq!(*v.get("blocking").unwrap(), Json::Bool(true));
+        // untraced bodies are byte-identical with pre-trace generators
+        assert_eq!(
+            body_for(&[1.0], EnergyTier::Normal, false, false),
+            "{\"image\":[1],\"tier\":\"normal\"}"
+        );
+    }
+
+    #[test]
+    fn stage_scrape_parses_and_diffs() {
+        // two scrapes of one (tier, stage) cell: 1 sample in (100, 200]
+        // before; 2 more samples land in (100, 200] and (500, 1000]
+        let before = parse_stage_scrape(
+            "# HELP emtopt_stage_latency_us x\n\
+             emtopt_stage_latency_us_bucket{tier=\"normal\",stage=\"compute\",le=\"100\"} 0\n\
+             emtopt_stage_latency_us_bucket{tier=\"normal\",stage=\"compute\",le=\"200\"} 1\n\
+             emtopt_stage_latency_us_bucket{tier=\"normal\",stage=\"compute\",le=\"+Inf\"} 1\n\
+             emtopt_stage_latency_us_count{tier=\"normal\",stage=\"compute\"} 1\n\
+             emtopt_stage_latency_us_sum{tier=\"normal\",stage=\"compute\"} 150\n",
+        );
+        let after = parse_stage_scrape(
+            "emtopt_stage_latency_us_bucket{tier=\"normal\",stage=\"compute\",le=\"100\"} 0\n\
+             emtopt_stage_latency_us_bucket{tier=\"normal\",stage=\"compute\",le=\"200\"} 2\n\
+             emtopt_stage_latency_us_bucket{tier=\"normal\",stage=\"compute\",le=\"1000\"} 3\n\
+             emtopt_stage_latency_us_bucket{tier=\"normal\",stage=\"compute\",le=\"+Inf\"} 3\n\
+             emtopt_stage_latency_us_count{tier=\"normal\",stage=\"compute\"} 3\n\
+             emtopt_stage_latency_us_sum{tier=\"normal\",stage=\"compute\"} 1050\n\
+             emtopt_stage_latency_us_count{tier=\"low\",stage=\"write\"} 0\n\
+             unrelated_metric 7\n",
+        );
+        let stats = stage_breakdown(&before, &after);
+        // the idle (low, write) cell produces no row
+        assert_eq!(stats.len(), 1);
+        let st = &stats[0];
+        assert_eq!((st.tier.as_str(), st.stage.as_str()), ("normal", "compute"));
+        assert_eq!(st.count, 2);
+        // exact mean from the _sum delta: (1050 - 150) / 2
+        assert!((st.mean_us - 450.0).abs() < 1e-9, "mean {}", st.mean_us);
+        // delta samples: one in (100, 200], one in (500, 1000]
+        assert!(st.p50_us > 100.0 && st.p50_us <= 200.0, "p50 {}", st.p50_us);
+        assert!(st.p99_us > 500.0 && st.p99_us <= 1000.0, "p99 {}", st.p99_us);
+    }
+
+    #[test]
+    fn stage_breakdown_handles_fresh_server() {
+        // no `before` entry at all (server restarted or first scrape
+        // failed): the whole `after` state is attributed to the run
+        let after = parse_stage_scrape(
+            "emtopt_stage_latency_us_bucket{tier=\"low\",stage=\"queue_wait\",le=\"10\"} 4\n\
+             emtopt_stage_latency_us_bucket{tier=\"low\",stage=\"queue_wait\",le=\"+Inf\"} 4\n\
+             emtopt_stage_latency_us_count{tier=\"low\",stage=\"queue_wait\"} 4\n\
+             emtopt_stage_latency_us_sum{tier=\"low\",stage=\"queue_wait\"} 32\n",
+        );
+        let stats = stage_breakdown(&StageScrape::new(), &after);
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].count, 4);
+        assert!((stats[0].mean_us - 8.0).abs() < 1e-9);
     }
 
     #[test]
@@ -873,6 +1209,7 @@ mod tests {
         let body = body_for(
             &[f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -1.5],
             EnergyTier::Low,
+            false,
             false,
         );
         let v = Json::parse(&body).expect("clamped body must parse as JSON");
@@ -885,7 +1222,7 @@ mod tests {
     #[test]
     fn batch_body_renders_rows() {
         let images = [0.5f32, 1.0, f32::NAN, 2.0, 3.0, 4.0];
-        let body = body_for_batch(&images, 3, EnergyTier::Normal, false);
+        let body = body_for_batch(&images, 3, EnergyTier::Normal, false, false);
         let v = Json::parse(&body).unwrap();
         assert_eq!(v.get("tier").unwrap().as_str().unwrap(), "normal");
         let rows = v.get("images").unwrap().as_arr().unwrap();
@@ -982,6 +1319,18 @@ mod tests {
             max_us: 8000,
             connections: 8,
             batch: 4,
+            stage_breakdown: vec![StageStat {
+                tier: "normal".into(),
+                stage: "compute".into(),
+                count: 98,
+                mean_us: 420.0,
+                p50_us: 400.0,
+                p95_us: 800.0,
+                p99_us: 950.0,
+            }],
+            trace_sample: 4,
+            trace_sampled: 25,
+            trace_inline_mean_us: [5.0, 10.0, 400.0],
             ..Default::default()
         };
         let j = r.to_json();
@@ -998,6 +1347,29 @@ mod tests {
                 .unwrap(),
             5000
         );
+        let breakdown = back.get("stage_breakdown").unwrap().as_arr().unwrap();
+        assert_eq!(breakdown.len(), 1);
+        assert_eq!(breakdown[0].get("stage").unwrap().as_str().unwrap(), "compute");
+        assert_eq!(breakdown[0].get("count").unwrap().as_u64().unwrap(), 98);
+        assert_eq!(back.get("trace_sample").unwrap().as_u64().unwrap(), 4);
+        assert_eq!(
+            back.get("trace_inline_mean_us")
+                .unwrap()
+                .get("compute")
+                .unwrap()
+                .as_f64()
+                .unwrap(),
+            400.0
+        );
         assert!(r.render().contains("p99 5.00 ms"));
+        assert!(r.render().contains("stage normal compute"));
+        assert!(r.render().contains("traced 1/4"));
+        // an untraced report keeps the legacy schema: breakdown is
+        // present (empty), the trace_* fields are absent entirely
+        let plain = LoadgenReport::default();
+        let back = Json::parse(&plain.to_json().render()).unwrap();
+        assert!(back.get("stage_breakdown").unwrap().as_arr().unwrap().is_empty());
+        assert!(back.opt("trace_sample").is_none());
+        assert!(back.opt("trace_inline_mean_us").is_none());
     }
 }

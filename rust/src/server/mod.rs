@@ -25,9 +25,14 @@
 //!   (content-seeded noise; see `coordinator::router::image_seed`)
 //! * `POST /v1/classify`  same bodies → adds `"class"` (argmax), or
 //!   `"classes"` for the batch form
-//! * `GET  /healthz`      liveness + deployed-model shape + batch cap +
-//!   energy-plan advertisement (`plan_source`, per-tier rho vectors)
+//! * `GET  /healthz`      liveness + build-info triple + deployed-model
+//!   shape + batch cap + energy-plan advertisement (`plan_source`,
+//!   per-tier rho vectors)
 //! * `GET  /metrics`      Prometheus text (see [`prom`])
+//! * `GET  /admin/trace`  flight-recorder dump: the last N complete
+//!   request traces as Chrome trace-event JSON (Perfetto-loadable); a
+//!   request body may also set `"trace": true` to get its own span
+//!   breakdown echoed inline (see [`crate::trace`])
 //! * `POST /admin/shutdown`  graceful drain
 //!
 //! **Energy tiers** surface the paper's energy–accuracy knob (eq. 7/8:
@@ -74,14 +79,15 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::router::{
-    clients_for_engine, BatchTooLarge, InferenceClient, NativeServerConfig, Overloaded,
-    ServerStats,
+    clients_for_engine, image_seed, BatchTooLarge, InferenceClient, NativeServerConfig,
+    Overloaded, ServerStats,
 };
 use crate::device::DeviceConfig;
 use crate::energy::{EnergyModel, EnergyPlan, LayerPlan, PlanSource, ReadMode};
 use crate::inference::NoisyModel;
 use crate::models::{LayerMeta, ModelDesc};
-use crate::scheduler::{self, EnergyShed, EngineSnapshot, LaneSpec};
+use crate::scheduler::{self, EnergyShed, EngineSnapshot, LaneSpec, Reply};
+use crate::trace::{self, FlightRecorder, SpanRecord, Stage, TraceContext};
 use crate::util::json::Json;
 use crate::Result;
 
@@ -455,6 +461,30 @@ impl TieredEngine {
     pub fn infer_batch(&self, tier: EnergyTier, images: Vec<f32>) -> Result<Vec<f32>> {
         self.clients[tier.index()].infer_batch(images)
     }
+
+    /// Traced single-image submit (`block` picks backpressure vs
+    /// load-shedding): returns the logits plus the span record the
+    /// scheduler filled in for this request.
+    pub fn infer_traced(
+        &self,
+        tier: EnergyTier,
+        image: Vec<f32>,
+        block: bool,
+        tctx: &TraceContext,
+    ) -> Result<Reply> {
+        self.clients[tier.index()].infer_traced(image, block, tctx)
+    }
+
+    /// Traced multi-image submit (see [`TieredEngine::infer_traced`]).
+    pub fn infer_batch_traced(
+        &self,
+        tier: EnergyTier,
+        images: Vec<f32>,
+        block: bool,
+        tctx: &TraceContext,
+    ) -> Result<Reply> {
+        self.clients[tier.index()].infer_batch_traced(images, block, tctx)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -565,12 +595,25 @@ impl HttpStats {
     }
 }
 
+/// A request's completed engine span awaiting its final two fields —
+/// `write_us` and `total_us` can only be measured after the response
+/// bytes hit the socket, so [`route`] hands the record back to
+/// [`serve_connection`], which completes it and feeds the flight
+/// recorder + the tier's write-stage histogram.
+struct PendingTrace {
+    span: SpanRecord,
+    /// Monotonic anchor at HTTP parse start (the `total_us` origin).
+    t_start: Instant,
+}
+
 struct ServerCtx {
     engine: TieredEngine,
     http: HttpStats,
     shutdown: AtomicBool,
     started: Instant,
     addr: SocketAddr,
+    /// Ring of the last N complete request traces (`GET /admin/trace`).
+    recorder: FlightRecorder,
     /// Live connection count per peer IP (incremented at accept, after
     /// the cap check; decremented when the owning handler finishes the
     /// connection).  Entries are removed at zero so the map stays
@@ -791,6 +834,7 @@ pub fn serve_http(model: Arc<NoisyModel>, cfg: HttpServerConfig) -> Result<Serve
         shutdown: AtomicBool::new(false),
         started: Instant::now(),
         addr,
+        recorder: FlightRecorder::new(trace::DEFAULT_FLIGHT_CAPACITY),
         peers: Mutex::new(HashMap::new()),
         max_conns_per_peer: cfg.max_conns_per_peer,
         // Starts at pool size so connections accepted before the handler
@@ -904,9 +948,23 @@ fn serve_connection(
             Ok(RequestOutcome::Closed) => return,
             Ok(RequestOutcome::Request(req)) => {
                 let keep_alive = req.keep_alive;
-                let resp = route(ctx, &req);
+                let (resp, pending) = route(ctx, &req);
                 ctx.http.record(resp.status);
-                if conn.write_response(&resp, keep_alive).is_err() || !keep_alive {
+                let t_write = Instant::now();
+                let write_ok = conn.write_response(&resp, keep_alive).is_ok();
+                if let Some(p) = pending {
+                    let mut span = p.span;
+                    span.write_us = t_write.elapsed().as_micros() as u64;
+                    span.total_us = p.t_start.elapsed().as_micros() as u64;
+                    if let Some(&tier) = EnergyTier::ALL.get(span.tier) {
+                        ctx.engine
+                            .stats(tier)
+                            .stages
+                            .record(Stage::Write, span.write_us);
+                    }
+                    ctx.recorder.push(span);
+                }
+                if !write_ok || !keep_alive {
                     return;
                 }
             }
@@ -923,8 +981,8 @@ fn serve_connection(
     }
 }
 
-fn route(ctx: &ServerCtx, req: &HttpRequest) -> Response {
-    match (req.method.as_str(), req.path.as_str()) {
+fn route(ctx: &ServerCtx, req: &HttpRequest) -> (Response, Option<PendingTrace>) {
+    let resp = match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             let tiers: Vec<Json> = ctx
                 .engine
@@ -940,10 +998,14 @@ fn route(ctx: &ServerCtx, req: &HttpRequest) -> Response {
                     ])
                 })
                 .collect();
+            let bi = trace::build_info();
             Response::json(
                 200,
                 &Json::obj(vec![
                     ("status", Json::Str("ok".into())),
+                    ("version", Json::Str(bi.version.into())),
+                    ("rustc", Json::Str(bi.rustc.into())),
+                    ("git_sha", Json::Str(bi.git_sha.into())),
                     ("input_len", Json::Num(ctx.engine.input_len() as f64)),
                     ("num_classes", Json::Num(ctx.engine.num_classes() as f64)),
                     (
@@ -983,8 +1045,15 @@ fn route(ctx: &ServerCtx, req: &HttpRequest) -> Response {
                 headers: Vec::new(),
             }
         }
-        ("POST", "/v1/infer") => infer_route(ctx, req, false),
-        ("POST", "/v1/classify") => infer_route(ctx, req, true),
+        ("GET", "/admin/trace") => {
+            // the last N complete request traces as Chrome trace-event
+            // JSON (Perfetto / chrome://tracing / about:tracing)
+            let records = ctx.recorder.snapshot();
+            let names: Vec<&str> = EnergyTier::ALL.iter().map(|t| t.name()).collect();
+            Response::json(200, &trace::to_chrome_json(&records, &names))
+        }
+        ("POST", "/v1/infer") => return infer_route(ctx, req, false),
+        ("POST", "/v1/classify") => return infer_route(ctx, req, true),
         ("POST", "/admin/shutdown") => {
             ctx.shutdown.store(true, Ordering::SeqCst);
             // drain order: freeze rebalancing, flush high tiers first
@@ -992,11 +1061,14 @@ fn route(ctx: &ServerCtx, req: &HttpRequest) -> Response {
             wake_acceptor(ctx.addr);
             Response::json(200, &Json::obj(vec![("status", Json::Str("shutting down".into()))]))
         }
-        (_, "/healthz" | "/metrics" | "/v1/infer" | "/v1/classify" | "/admin/shutdown") => {
-            Response::error_json(405, &format!("method {} not allowed here", req.method))
-        }
+        (
+            _,
+            "/healthz" | "/metrics" | "/v1/infer" | "/v1/classify" | "/admin/shutdown"
+            | "/admin/trace",
+        ) => Response::error_json(405, &format!("method {} not allowed here", req.method)),
         (_, path) => Response::error_json(404, &format!("no route for {path}")),
-    }
+    };
+    (resp, None)
 }
 
 /// Parsed inference request body: one image, or a client-batched set.
@@ -1024,11 +1096,23 @@ fn engine_error_response(e: &anyhow::Error, lane_stats: &ServerStats) -> Respons
     Response::error_json(status, &format!("{e}"))
 }
 
-fn infer_route(ctx: &ServerCtx, req: &HttpRequest, classify: bool) -> Response {
-    let (payload, tier, blocking) = match parse_infer_body(&req.body, ctx.engine.input_len()) {
-        Ok(p) => p,
-        Err(e) => return Response::error_json(400, &format!("{e}")),
-    };
+/// Salt folding request pixels into a trace id ([`image_seed`] under a
+/// fixed lane-independent seed).  The id is content-derived like the
+/// noise seeds but from a *different* fold, and tracing only ever reads
+/// it — the RNG streams never see it.
+const TRACE_ID_SALT: u64 = 0x7472_6163_655f_6964; // "trace_id"
+
+fn infer_route(
+    ctx: &ServerCtx,
+    req: &HttpRequest,
+    classify: bool,
+) -> (Response, Option<PendingTrace>) {
+    let t_start = Instant::now();
+    let (payload, tier, blocking, trace_echo) =
+        match parse_infer_body(&req.body, ctx.engine.input_len()) {
+            Ok(p) => p,
+            Err(e) => return (Response::error_json(400, &format!("{e}")), None),
+        };
     let plan = ctx.engine.plan(tier);
     let mut fields = vec![
         ("tier", Json::Str(tier.name().into())),
@@ -1039,33 +1123,43 @@ fn infer_route(ctx: &ServerCtx, req: &HttpRequest, classify: bool) -> Response {
     ];
     match payload {
         InferPayload::Single(image) => {
+            let tctx = TraceContext {
+                trace_id: image_seed(TRACE_ID_SALT, &image),
+                start_us: ctx.recorder.now_us(),
+                t_start,
+            };
             // blocking = backpressure (wait for queue space), default =
             // load-shedding (typed Overloaded -> 503)
-            let result = if blocking {
-                ctx.engine.infer(tier, image)
-            } else {
-                ctx.engine.try_infer(tier, image)
-            };
-            match result {
-                Ok(logits) => {
-                    fields.push(("logits", Json::f32_arr(&logits)));
+            match ctx.engine.infer_traced(tier, image, blocking, &tctx) {
+                Ok(reply) => {
+                    fields.push(("logits", Json::f32_arr(&reply.logits)));
                     if classify {
-                        let class = crate::inference::argmax(&logits);
+                        let class = crate::inference::argmax(&reply.logits);
                         fields.push(("class", Json::Num(class as f64)));
                     }
-                    Response::json(200, &Json::obj(fields))
+                    if trace_echo {
+                        fields.push(("trace", reply.span.to_inline_json(tier.name())));
+                    }
+                    (
+                        Response::json(200, &Json::obj(fields)),
+                        Some(PendingTrace {
+                            span: reply.span,
+                            t_start,
+                        }),
+                    )
                 }
-                Err(e) => engine_error_response(&e, ctx.engine.stats(tier)),
+                Err(e) => (engine_error_response(&e, ctx.engine.stats(tier)), None),
             }
         }
         InferPayload::Batch { images, count } => {
-            let result = if blocking {
-                ctx.engine.infer_batch(tier, images)
-            } else {
-                ctx.engine.try_infer_batch(tier, images)
+            let tctx = TraceContext {
+                trace_id: image_seed(TRACE_ID_SALT, &images),
+                start_us: ctx.recorder.now_us(),
+                t_start,
             };
-            match result {
-                Ok(logits) => {
+            match ctx.engine.infer_batch_traced(tier, images, blocking, &tctx) {
+                Ok(reply) => {
+                    let logits = &reply.logits;
                     let nc = ctx.engine.num_classes();
                     fields.push(("count", Json::Num(count as f64)));
                     fields.push((
@@ -1085,9 +1179,18 @@ fn infer_route(ctx: &ServerCtx, req: &HttpRequest, classify: bool) -> Response {
                             ),
                         ));
                     }
-                    Response::json(200, &Json::obj(fields))
+                    if trace_echo {
+                        fields.push(("trace", reply.span.to_inline_json(tier.name())));
+                    }
+                    (
+                        Response::json(200, &Json::obj(fields)),
+                        Some(PendingTrace {
+                            span: reply.span,
+                            t_start,
+                        }),
+                    )
                 }
-                Err(e) => engine_error_response(&e, ctx.engine.stats(tier)),
+                Err(e) => (engine_error_response(&e, ctx.engine.stats(tier)), None),
             }
         }
     }
@@ -1109,7 +1212,10 @@ fn check_image(image: &[f32], input_len: usize, what: &str) -> Result<()> {
     Ok(())
 }
 
-fn parse_infer_body(body: &[u8], input_len: usize) -> Result<(InferPayload, EnergyTier, bool)> {
+fn parse_infer_body(
+    body: &[u8],
+    input_len: usize,
+) -> Result<(InferPayload, EnergyTier, bool, bool)> {
     let text =
         std::str::from_utf8(body).map_err(|_| anyhow::anyhow!("body is not UTF-8"))?;
     let v = Json::parse(text)?;
@@ -1153,7 +1259,14 @@ fn parse_infer_body(body: &[u8], input_len: usize) -> Result<(InferPayload, Ener
         Some(Json::Bool(b)) => *b,
         Some(_) => anyhow::bail!("\"blocking\" must be a boolean"),
     };
-    Ok((payload, tier, blocking))
+    // `"trace": true` echoes this request's span breakdown inline in the
+    // response (the flight recorder records every request regardless).
+    let trace_echo = match v.opt("trace") {
+        None => false,
+        Some(Json::Bool(b)) => *b,
+        Some(_) => anyhow::bail!("\"trace\" must be a boolean"),
+    };
+    Ok((payload, tier, blocking, trace_echo))
 }
 
 #[cfg(test)]
@@ -1339,7 +1452,7 @@ mod tests {
     #[test]
     fn parse_infer_body_validates() {
         assert!(parse_infer_body(b"{\"image\":[1,2,3]}", 3).is_ok());
-        let (payload, tier, blocking) =
+        let (payload, tier, blocking, trace_echo) =
             parse_infer_body(b"{\"image\":[1,2,3],\"tier\":\"high\"}", 3).unwrap();
         match payload {
             InferPayload::Single(img) => assert_eq!(img, vec![1.0, 2.0, 3.0]),
@@ -1347,16 +1460,23 @@ mod tests {
         }
         assert_eq!(tier, EnergyTier::High);
         assert!(!blocking, "blocking must default off (load-shedding)");
+        assert!(!trace_echo, "trace echo must default off");
         // defaults to normal
-        let (_, tier, _) = parse_infer_body(b"{\"image\":[0,0,0]}", 3).unwrap();
+        let (_, tier, _, _) = parse_infer_body(b"{\"image\":[0,0,0]}", 3).unwrap();
         assert_eq!(tier, EnergyTier::Normal);
         // explicit blocking flag, both values
-        let (_, _, b) =
+        let (_, _, b, _) =
             parse_infer_body(b"{\"image\":[0,0,0],\"blocking\":true}", 3).unwrap();
         assert!(b);
-        let (_, _, b) =
+        let (_, _, b, _) =
             parse_infer_body(b"{\"image\":[0,0,0],\"blocking\":false}", 3).unwrap();
         assert!(!b);
+        // explicit trace flag, both values; non-boolean is a 400
+        let (_, _, _, t) = parse_infer_body(b"{\"image\":[0,0,0],\"trace\":true}", 3).unwrap();
+        assert!(t);
+        let (_, _, _, t) = parse_infer_body(b"{\"image\":[0,0,0],\"trace\":false}", 3).unwrap();
+        assert!(!t);
+        assert!(parse_infer_body(b"{\"image\":[0,0,0],\"trace\":\"yes\"}", 3).is_err());
         // non-boolean blocking is a 400
         assert!(parse_infer_body(b"{\"image\":[0,0,0],\"blocking\":1}", 3).is_err());
         // shape mismatch, bad tier, bad json, missing key, non-finite pixel
@@ -1370,7 +1490,7 @@ mod tests {
     #[test]
     fn parse_infer_body_batch_form() {
         // well-formed batch: 2 images of width 3, flattened row-major
-        let (payload, tier, _) =
+        let (payload, tier, _, _) =
             parse_infer_body(b"{\"images\":[[1,2,3],[4,5,6]],\"tier\":\"low\"}", 3).unwrap();
         match payload {
             InferPayload::Batch { images, count } => {

@@ -15,6 +15,7 @@ use std::fmt::Write as _;
 use crate::coordinator::router::ServerStats;
 use crate::metrics::{BATCH_SIZE_BUCKET_BOUNDS, LATENCY_BUCKET_BOUNDS_US};
 use crate::scheduler::EngineSnapshot;
+use crate::trace::{self, Stage};
 
 use super::{HttpStats, TierPlan};
 
@@ -34,6 +35,19 @@ pub fn render(
     use std::sync::atomic::Ordering::Relaxed;
 
     let mut out = String::with_capacity(4096);
+
+    header(
+        &mut out,
+        "emtopt_build_info",
+        "gauge",
+        "Build provenance (constant 1; version/rustc/git_sha labels carry the values).",
+    );
+    let bi = trace::build_info();
+    let _ = writeln!(
+        out,
+        "emtopt_build_info{{version=\"{}\",rustc=\"{}\",git_sha=\"{}\"}} 1",
+        bi.version, bi.rustc, bi.git_sha
+    );
 
     header(
         &mut out,
@@ -504,6 +518,50 @@ pub fn render(
 
     header(
         &mut out,
+        "emtopt_stage_latency_us",
+        "histogram",
+        "Per-stage request-path latency in microseconds, by tier and stage \
+         (queue_wait | batch_wait | compute | write), fed by the span tracer.",
+    );
+    for (plan, stats) in tiers {
+        let tier = plan.tier.name();
+        for stage in Stage::ALL {
+            let h = stats.stages.hist(stage);
+            let counts = h.snapshot();
+            let mut cum = 0u64;
+            for (i, &c) in counts.iter().enumerate() {
+                cum += c;
+                if i < LATENCY_BUCKET_BOUNDS_US.len() {
+                    let _ = writeln!(
+                        out,
+                        "emtopt_stage_latency_us_bucket{{tier=\"{tier}\",stage=\"{}\",le=\"{}\"}} {cum}",
+                        stage.name(),
+                        LATENCY_BUCKET_BOUNDS_US[i]
+                    );
+                } else {
+                    let _ = writeln!(
+                        out,
+                        "emtopt_stage_latency_us_bucket{{tier=\"{tier}\",stage=\"{}\",le=\"+Inf\"}} {cum}",
+                        stage.name()
+                    );
+                }
+            }
+            let _ = writeln!(
+                out,
+                "emtopt_stage_latency_us_count{{tier=\"{tier}\",stage=\"{}\"}} {cum}",
+                stage.name()
+            );
+            let _ = writeln!(
+                out,
+                "emtopt_stage_latency_us_sum{{tier=\"{tier}\",stage=\"{}\"}} {}",
+                stage.name(),
+                h.sum_us()
+            );
+        }
+    }
+
+    header(
+        &mut out,
         "emtopt_uptime_seconds",
         "gauge",
         "Seconds since the server started.",
@@ -552,6 +610,8 @@ mod tests {
         stats.dispatch_batch_sizes.record(5);
         stats.latency.record_us(120);
         stats.latency.record_us(380);
+        stats.stages.record(Stage::Compute, 120);
+        stats.stages.record(Stage::QueueWait, 8);
         let plan = TierPlan {
             tier: EnergyTier::Normal,
             rho: 4.0,
@@ -594,6 +654,29 @@ mod tests {
         assert!(text.contains("emtopt_request_latency_us_count{tier=\"normal\"} 2"));
         assert!(text.contains("le=\"+Inf\"} 2"));
         assert!(text.contains("quantile=\"0.99\""));
+        // stage histograms: one compute sample in (100, 200], one
+        // queue_wait sample in (5, 10]; exact _sum from the histogram
+        assert!(text.contains(
+            "emtopt_stage_latency_us_bucket{tier=\"normal\",stage=\"compute\",le=\"200\"} 1"
+        ));
+        assert!(text.contains(
+            "emtopt_stage_latency_us_bucket{tier=\"normal\",stage=\"compute\",le=\"100\"} 0"
+        ));
+        assert!(text
+            .contains("emtopt_stage_latency_us_count{tier=\"normal\",stage=\"compute\"} 1"));
+        assert!(
+            text.contains("emtopt_stage_latency_us_sum{tier=\"normal\",stage=\"compute\"} 120")
+        );
+        assert!(text
+            .contains("emtopt_stage_latency_us_count{tier=\"normal\",stage=\"queue_wait\"} 1"));
+        // untouched stages still render a stable (all-zero) series
+        assert!(
+            text.contains("emtopt_stage_latency_us_count{tier=\"normal\",stage=\"write\"} 0")
+        );
+        // build provenance gauge is always present with all three labels
+        assert!(text.contains("emtopt_build_info{version=\""));
+        assert!(text.contains(",rustc=\""));
+        assert!(text.contains(",git_sha=\""));
         assert!(text.contains("emtopt_uptime_seconds 12.5"));
         // every non-comment line is "name{labels} value" or "name value"
         for line in text.lines() {

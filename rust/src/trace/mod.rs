@@ -1,0 +1,569 @@
+//! Request-path tracing: per-stage spans from socket to crossbar tile.
+//!
+//! Always-on, dependency-free, and deliberately boring: a request picks
+//! up a [`TraceContext`] at HTTP parse time (trace id = the request's
+//! content-derived seed, anchors = monotonic `Instant`s) and the
+//! scheduler/engine fill in a fixed-size [`SpanRecord`] as the request
+//! moves through admission -> lane queue -> worker pickup (which lane,
+//! which worker, stolen or home) -> batch formation -> device compute
+//! (per-layer spans with observed uJ from the `ReadCounters` path) ->
+//! response serialization/write.
+//!
+//! Three consumers (DESIGN.md §12):
+//!
+//! * per-stage latency histograms on `/metrics`
+//!   (`emtopt_stage_latency_us{tier,stage}`, reusing
+//!   [`metrics::LatencyHistogram`]);
+//! * a lock-cheap [`FlightRecorder`] ring of the last N complete traces,
+//!   dumped by `GET /admin/trace` as Chrome trace-event JSON (loadable
+//!   in Perfetto / `chrome://tracing`), plus a `"trace": true` request
+//!   flag echoing one request's breakdown inline;
+//! * `loadgen` scrapes the stage histograms per ladder rung into the
+//!   `stage_breakdown` section of `BENCH_serve.json`.
+//!
+//! Determinism contract: tracing reads clocks and energy counters and
+//! writes atomics — it never touches the RNG stream, so noisy outputs
+//! are bit-identical with tracing on (it is never off).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::metrics::LatencyHistogram;
+use crate::util::json::Json;
+
+/// Per-layer spans kept in the fixed-size record.  Deeper models get the
+/// first `MAX_TRACE_LAYERS` layers traced and the rest folded into the
+/// aggregate compute span — the record never allocates.
+pub const MAX_TRACE_LAYERS: usize = 16;
+
+/// Default flight-recorder capacity (last N complete traces).
+pub const DEFAULT_FLIGHT_CAPACITY: usize = 256;
+
+// ---------------------------------------------------------------------------
+// span taxonomy
+// ---------------------------------------------------------------------------
+
+/// The four request-path stages every request passes through.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Admission to worker pickup: time the request sat in its lane queue.
+    QueueWait = 0,
+    /// Worker pickup to batch dispatch: time spent waiting for the device
+    /// batch to fill (or `max_wait` to expire).
+    BatchWait = 1,
+    /// Device batch forward: the crossbar compute the request rode in.
+    Compute = 2,
+    /// Response serialization + socket write-back.
+    Write = 3,
+}
+
+/// Number of stages in [`Stage::ALL`].
+pub const NUM_STAGES: usize = 4;
+
+impl Stage {
+    pub const ALL: [Stage; NUM_STAGES] =
+        [Stage::QueueWait, Stage::BatchWait, Stage::Compute, Stage::Write];
+
+    /// Prometheus label value / span name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchWait => "batch_wait",
+            Stage::Compute => "compute",
+            Stage::Write => "write",
+        }
+    }
+}
+
+/// Per-tier stage latency histograms — the `/metrics` consumer.  One
+/// lock-free [`LatencyHistogram`] per stage, `Default`-constructible so
+/// it lives inside `ServerStats` without touching its construction.
+#[derive(Debug, Default)]
+pub struct StageHistograms {
+    hists: [LatencyHistogram; NUM_STAGES],
+}
+
+impl StageHistograms {
+    pub fn record(&self, stage: Stage, us: u64) {
+        self.hists[stage as usize].record_us(us);
+    }
+
+    pub fn hist(&self, stage: Stage) -> &LatencyHistogram {
+        &self.hists[stage as usize]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the per-request record
+// ---------------------------------------------------------------------------
+
+/// Per-layer compute spans for one request: wall time and observed
+/// energy per traced layer.  Fixed-size, index = layer index.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LayerSpans {
+    pub us: [u32; MAX_TRACE_LAYERS],
+    pub uj: [f32; MAX_TRACE_LAYERS],
+    /// Number of layers the model actually has (clamped to
+    /// [`MAX_TRACE_LAYERS`] for the arrays; the aggregate compute span
+    /// still covers the untraced tail).
+    pub n: usize,
+}
+
+impl LayerSpans {
+    /// Add another sample's layer spans (client-batch requests attribute
+    /// the sum of their samples to the request).
+    pub fn merge(&mut self, other: &LayerSpans) {
+        self.n = self.n.max(other.n);
+        for i in 0..self.n.min(MAX_TRACE_LAYERS) {
+            self.us[i] = self.us[i].saturating_add(other.us[i]);
+            self.uj[i] += other.uj[i];
+        }
+    }
+}
+
+/// One request's complete span breakdown — the fixed-size record the
+/// flight recorder keeps and `"trace": true` echoes inline.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SpanRecord {
+    /// Content-derived request seed (same fold the noise seeding uses —
+    /// read-only; tracing never advances any RNG).
+    pub trace_id: u64,
+    /// Microseconds since the flight recorder's epoch at HTTP parse time
+    /// (the Chrome trace `ts` origin).
+    pub start_us: u64,
+    /// Lane index == energy tier index.
+    pub tier: usize,
+    /// Worker that dispatched the batch this request rode in.
+    pub worker: usize,
+    /// Whether the pick was a steal (worker's home lane != `tier`).
+    pub stolen: bool,
+    /// Images in the dispatched device batch (including padding slots'
+    /// siblings — the amortisation this request actually got).
+    pub batch_images: usize,
+    /// Images in this request (1 for singles, >1 for client batches).
+    pub images: usize,
+    pub queue_wait_us: u64,
+    pub batch_wait_us: u64,
+    pub compute_us: u64,
+    /// Response serialization + socket write (filled at the HTTP layer;
+    /// zero in the inline `"trace": true` echo, whose bytes are already
+    /// formed before the write happens).
+    pub write_us: u64,
+    /// End-to-end: HTTP parse start -> response written.  Zero until the
+    /// HTTP layer completes the record.
+    pub total_us: u64,
+    /// Observed energy attributed to this request's samples (uJ).
+    pub energy_uj: f64,
+    pub layers: LayerSpans,
+}
+
+impl SpanRecord {
+    /// Sum of the four stage spans — must never exceed `total_us` once
+    /// the record is complete (parse/admission/reply-hop overhead is the
+    /// remainder; pinned by tests).
+    pub fn stage_sum_us(&self) -> u64 {
+        self.queue_wait_us + self.batch_wait_us + self.compute_us + self.write_us
+    }
+
+    /// Inline JSON breakdown for the `"trace": true` response echo.
+    /// `write_us`/`total_us` are omitted: the response bytes are formed
+    /// before the write span can finish (use `/admin/trace` for those).
+    pub fn to_inline_json(&self, tier_name: &str) -> Json {
+        let mut layers = Vec::with_capacity(self.layers.n.min(MAX_TRACE_LAYERS));
+        for i in 0..self.layers.n.min(MAX_TRACE_LAYERS) {
+            layers.push(Json::obj(vec![
+                ("layer", Json::Num(i as f64)),
+                ("us", Json::Num(self.layers.us[i] as f64)),
+                ("uj", Json::Num(self.layers.uj[i] as f64)),
+            ]));
+        }
+        Json::obj(vec![
+            ("trace_id", Json::Str(format!("{:#018x}", self.trace_id))),
+            ("tier", Json::Str(tier_name.to_string())),
+            ("worker", Json::Num(self.worker as f64)),
+            ("stolen", Json::Bool(self.stolen)),
+            ("batch_images", Json::Num(self.batch_images as f64)),
+            ("queue_wait_us", Json::Num(self.queue_wait_us as f64)),
+            ("batch_wait_us", Json::Num(self.batch_wait_us as f64)),
+            ("compute_us", Json::Num(self.compute_us as f64)),
+            ("energy_uj", Json::Num(self.energy_uj)),
+            ("layers", Json::Arr(layers)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// trace context (HTTP-parse-time anchor)
+// ---------------------------------------------------------------------------
+
+/// Created at HTTP parse time and threaded through admission; the
+/// scheduler copies `trace_id`/`start_us` into the [`SpanRecord`] it
+/// returns with the reply.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceContext {
+    pub trace_id: u64,
+    pub start_us: u64,
+    /// Monotonic anchor at parse start — the `total_us` origin.
+    pub t_start: Instant,
+}
+
+impl TraceContext {
+    /// Context for internal (non-HTTP) submitters: spans still feed the
+    /// stage histograms, the record just carries a zero id/origin.
+    pub fn internal() -> TraceContext {
+        TraceContext {
+            trace_id: 0,
+            start_us: 0,
+            t_start: Instant::now(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// flight recorder
+// ---------------------------------------------------------------------------
+
+/// Lock-cheap ring of the last N complete traces.
+///
+/// `push` claims a slot with one relaxed `fetch_add` and then
+/// `try_lock`s only that slot; under contention the record is dropped
+/// (counted), never blocked on — the request path must not stall on the
+/// observer.  `snapshot` locks slots one at a time, so a dump can at
+/// worst displace a handful of concurrent pushes.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    slots: Vec<Mutex<Option<SpanRecord>>>,
+    cursor: AtomicUsize,
+    dropped: AtomicU64,
+    epoch: Instant,
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize) -> FlightRecorder {
+        let capacity = capacity.max(1);
+        FlightRecorder {
+            slots: (0..capacity).map(|_| Mutex::new(None)).collect(),
+            cursor: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+            epoch: Instant::now(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Microseconds since the recorder's epoch — the shared `ts` origin
+    /// for every trace this process emits.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Records dropped because their slot was contended.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Store one complete record; drops (never blocks) under contention.
+    pub fn push(&self, rec: SpanRecord) {
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed) % self.slots.len();
+        match self.slots[i].try_lock() {
+            Ok(mut slot) => *slot = Some(rec),
+            Err(_) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// The current ring contents, oldest-first by `start_us`.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        let mut out: Vec<SpanRecord> = self
+            .slots
+            .iter()
+            .filter_map(|s| s.try_lock().ok().and_then(|g| *g))
+            .collect();
+        out.sort_by_key(|r| r.start_us);
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event rendering (GET /admin/trace)
+// ---------------------------------------------------------------------------
+
+/// Render records as Chrome trace-event JSON (the "JSON Array Format"
+/// with a `traceEvents` wrapper) — loadable in Perfetto and
+/// `chrome://tracing`.  Convention: `pid` = tier index (named via
+/// process_name metadata), `tid` = worker index, `ts`/`dur` in
+/// microseconds since the recorder epoch.  Stages are laid end-to-end
+/// from `start_us`; the small parse/reply-hop gaps are folded into the
+/// queue_wait start rather than drawn (documented in DESIGN.md §12).
+pub fn to_chrome_json(records: &[SpanRecord], tier_names: &[&str]) -> Json {
+    let mut events = Vec::new();
+    let mut tiers_seen = [false; 16];
+    for r in records {
+        if let Some(seen) = tiers_seen.get_mut(r.tier) {
+            if !*seen {
+                *seen = true;
+                let name = tier_names.get(r.tier).copied().unwrap_or("tier");
+                events.push(Json::obj(vec![
+                    ("name", Json::Str("process_name".into())),
+                    ("ph", Json::Str("M".into())),
+                    ("pid", Json::Num(r.tier as f64)),
+                    ("tid", Json::Num(0.0)),
+                    (
+                        "args",
+                        Json::obj(vec![("name", Json::Str(format!("tier:{name}")))]),
+                    ),
+                ]));
+            }
+        }
+        let spans = [
+            (Stage::QueueWait, r.queue_wait_us),
+            (Stage::BatchWait, r.batch_wait_us),
+            (Stage::Compute, r.compute_us),
+            (Stage::Write, r.write_us),
+        ];
+        let mut ts = r.start_us;
+        for (stage, dur) in spans {
+            let mut args = vec![("trace_id", Json::Str(format!("{:#018x}", r.trace_id)))];
+            if stage == Stage::Compute {
+                args.push(("energy_uj", Json::Num(r.energy_uj)));
+                args.push(("stolen", Json::Bool(r.stolen)));
+                args.push(("batch_images", Json::Num(r.batch_images as f64)));
+                args.push(("total_us", Json::Num(r.total_us as f64)));
+            }
+            events.push(Json::obj(vec![
+                ("name", Json::Str(stage.name().into())),
+                ("cat", Json::Str("request".into())),
+                ("ph", Json::Str("X".into())),
+                ("ts", Json::Num(ts as f64)),
+                ("dur", Json::Num(dur as f64)),
+                ("pid", Json::Num(r.tier as f64)),
+                ("tid", Json::Num(r.worker as f64)),
+                ("args", Json::obj(args)),
+            ]));
+            if stage == Stage::Compute {
+                let mut lts = ts;
+                for i in 0..r.layers.n.min(MAX_TRACE_LAYERS) {
+                    events.push(Json::obj(vec![
+                        ("name", Json::Str(format!("layer{i}"))),
+                        ("cat", Json::Str("layer".into())),
+                        ("ph", Json::Str("X".into())),
+                        ("ts", Json::Num(lts as f64)),
+                        ("dur", Json::Num(r.layers.us[i] as f64)),
+                        ("pid", Json::Num(r.tier as f64)),
+                        ("tid", Json::Num(r.worker as f64)),
+                        (
+                            "args",
+                            Json::obj(vec![("uj", Json::Num(r.layers.uj[i] as f64))]),
+                        ),
+                    ]));
+                    lts += r.layers.us[i] as u64;
+                }
+            }
+            ts += dur;
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// build info
+// ---------------------------------------------------------------------------
+
+/// The provenance triple `/metrics` and `/healthz` both advertise
+/// (standard Prometheus build-info pattern).  `rustc`/`git_sha` are
+/// stamped by `build.rs` (falling back to "unknown" outside a git
+/// checkout); the version is the crate version.
+#[derive(Clone, Copy, Debug)]
+pub struct BuildInfo {
+    pub version: &'static str,
+    pub rustc: &'static str,
+    pub git_sha: &'static str,
+}
+
+/// The build-info triple baked into this binary.
+pub fn build_info() -> BuildInfo {
+    BuildInfo {
+        version: env!("CARGO_PKG_VERSION"),
+        rustc: env!("EMTOPT_RUSTC"),
+        git_sha: env!("EMTOPT_GIT_SHA"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(trace_id: u64, start_us: u64) -> SpanRecord {
+        SpanRecord {
+            trace_id,
+            start_us,
+            tier: 1,
+            worker: 0,
+            stolen: false,
+            batch_images: 4,
+            images: 1,
+            queue_wait_us: 10,
+            batch_wait_us: 20,
+            compute_us: 300,
+            write_us: 5,
+            total_us: 400,
+            energy_uj: 1.25,
+            layers: LayerSpans {
+                us: {
+                    let mut a = [0u32; MAX_TRACE_LAYERS];
+                    a[0] = 200;
+                    a[1] = 100;
+                    a
+                },
+                uj: {
+                    let mut a = [0f32; MAX_TRACE_LAYERS];
+                    a[0] = 1.0;
+                    a[1] = 0.25;
+                    a
+                },
+                n: 2,
+            },
+        }
+    }
+
+    #[test]
+    fn stage_names_and_order() {
+        let names: Vec<_> = Stage::ALL.iter().map(|s| s.name()).collect();
+        assert_eq!(names, ["queue_wait", "batch_wait", "compute", "write"]);
+        let h = StageHistograms::default();
+        h.record(Stage::Compute, 42);
+        assert_eq!(h.hist(Stage::Compute).count(), 1);
+        assert_eq!(h.hist(Stage::QueueWait).count(), 0);
+    }
+
+    #[test]
+    fn stage_sum_is_bounded_by_total() {
+        let r = rec(7, 0);
+        assert!(r.stage_sum_us() <= r.total_us);
+        assert_eq!(r.stage_sum_us(), 335);
+    }
+
+    #[test]
+    fn ring_keeps_last_n_oldest_first() {
+        let fr = FlightRecorder::new(4);
+        for i in 0..10u64 {
+            fr.push(rec(i, i * 100));
+        }
+        let snap = fr.snapshot();
+        assert_eq!(snap.len(), 4);
+        let ids: Vec<u64> = snap.iter().map(|r| r.trace_id).collect();
+        assert_eq!(ids, [6, 7, 8, 9]);
+        assert_eq!(fr.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_wraps_under_concurrent_load_without_losing_structure() {
+        use std::sync::Arc;
+        let fr = Arc::new(FlightRecorder::new(16));
+        let threads: Vec<_> = (0..4u64)
+            .map(|t| {
+                let fr = fr.clone();
+                std::thread::spawn(move || {
+                    for i in 0..500u64 {
+                        fr.push(rec(t * 1000 + i, t * 1000 + i));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let snap = fr.snapshot();
+        // dropped-not-blocked: whatever survived is structurally intact
+        assert!(snap.len() <= 16);
+        assert!(!snap.is_empty());
+        for r in &snap {
+            // every record is one of the pushed ones, not torn
+            assert_eq!(r.trace_id, r.start_us);
+            assert_eq!(r.stage_sum_us(), 335);
+        }
+        // the ring saw 2000 pushes; drops are possible but bounded by
+        // actual contention, not systematic
+        assert!(fr.dropped() < 2000);
+    }
+
+    #[test]
+    fn chrome_json_shape_parses_and_orders() {
+        let records = [rec(1, 100), rec(2, 700)];
+        let j = to_chrome_json(&records, &["low", "normal", "high"]);
+        let text = j.render();
+        let back = Json::parse(&text).unwrap();
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 process_name metadata + per record: 4 stage + 2 layer events
+        assert_eq!(events.len(), 1 + 2 * (4 + 2));
+        let meta = &events[0];
+        assert_eq!(meta.get("ph").unwrap().as_str().unwrap(), "M");
+        assert_eq!(
+            meta.get("args").unwrap().get("name").unwrap().as_str().unwrap(),
+            "tier:normal"
+        );
+        // complete events: stages laid end-to-end from start_us
+        let stages: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("cat").map(|c| c.as_str().unwrap()) == Ok("request"))
+            .collect();
+        assert_eq!(stages.len(), 8);
+        let first = stages[0];
+        assert_eq!(first.get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(first.get("name").unwrap().as_str().unwrap(), "queue_wait");
+        assert_eq!(first.get("ts").unwrap().as_u64().unwrap(), 100);
+        let compute = stages
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str().unwrap() == "compute")
+            .unwrap();
+        assert_eq!(compute.get("ts").unwrap().as_u64().unwrap(), 130);
+        assert_eq!(compute.get("dur").unwrap().as_u64().unwrap(), 300);
+        let args = compute.get("args").unwrap();
+        assert!(args.get("energy_uj").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(
+            args.get("trace_id").unwrap().as_str().unwrap(),
+            "0x0000000000000001"
+        );
+    }
+
+    #[test]
+    fn inline_json_echo_shape() {
+        let j = rec(0xabc, 0).to_inline_json("low");
+        assert_eq!(j.get("tier").unwrap().as_str().unwrap(), "low");
+        assert_eq!(j.get("queue_wait_us").unwrap().as_u64().unwrap(), 10);
+        assert_eq!(j.get("compute_us").unwrap().as_u64().unwrap(), 300);
+        assert_eq!(j.get("layers").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(
+            j.get("trace_id").unwrap().as_str().unwrap(),
+            "0x0000000000000abc"
+        );
+        // write/total are NOT echoed inline (bytes formed pre-write)
+        assert!(j.opt("write_us").is_none());
+        assert!(j.opt("total_us").is_none());
+    }
+
+    #[test]
+    fn layer_spans_merge_sums() {
+        let mut a = rec(1, 0).layers;
+        let b = rec(2, 0).layers;
+        a.merge(&b);
+        assert_eq!(a.n, 2);
+        assert_eq!(a.us[0], 400);
+        assert_eq!(a.uj[1], 0.5);
+    }
+
+    #[test]
+    fn build_info_is_stamped() {
+        let b = build_info();
+        assert!(!b.version.is_empty());
+        assert!(!b.rustc.is_empty());
+        assert!(!b.git_sha.is_empty());
+    }
+}

@@ -592,6 +592,176 @@ fn energy_governor_sheds_low_tiers_with_503() {
 }
 
 #[test]
+fn trace_echo_reconciles_with_flight_recorder_and_metrics() {
+    // PR 7 acceptance: the span tracer is always-on and observable three
+    // ways — the inline `"trace": true` echo, the `/admin/trace` flight
+    // recorder (Chrome trace-event JSON), and the per-stage histograms
+    // on /metrics — and the three views reconcile with each other.
+    let handle = boot(NativeServerConfig {
+        batch: 4,
+        workers: 1,
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    });
+    let mut conn = connect(&handle);
+
+    // healthz carries the build-provenance triple
+    let (status, body) = get(&mut conn, "/healthz");
+    assert_eq!(status, 200);
+    let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    for key in ["version", "rustc", "git_sha"] {
+        let s = v.get(key).unwrap().as_str().unwrap();
+        assert!(!s.is_empty(), "healthz {key} must be non-empty");
+    }
+
+    let img_a = "[0.1,0.2,0.3,0.4,0.5,0.6,0.7,0.8]";
+    let img_b = "[0.9,0.8,0.7,0.6,0.5,0.4,0.3,0.2]";
+
+    // tracing must not perturb the noise: traced and untraced logits of
+    // the same pixels are bit-identical (content-derived seeds, and the
+    // tracer only reads clocks/counters, never the RNG)
+    let (status, plain) = post(&mut conn, "/v1/infer", &format!("{{\"image\":{img_a}}}"));
+    assert_eq!(status, 200);
+    assert!(plain.opt("trace").is_none(), "untraced responses must not echo spans");
+    let body_a = format!("{{\"image\":{img_a},\"trace\":true}}");
+    let (status, traced) = post(&mut conn, "/v1/infer", &body_a);
+    assert_eq!(status, 200);
+    assert_eq!(
+        traced.get("logits").unwrap().as_f32s().unwrap(),
+        plain.get("logits").unwrap().as_f32s().unwrap(),
+        "tracing changed the logits"
+    );
+
+    // the inline echo: identity, placement, stage spans, energy, layers
+    let t = traced.get("trace").unwrap();
+    let id_a = t.get("trace_id").unwrap().as_str().unwrap().to_string();
+    assert!(
+        id_a.starts_with("0x") && id_a.len() == 18,
+        "trace_id must be a full-width hex string: {id_a}"
+    );
+    assert_eq!(t.get("tier").unwrap().as_str().unwrap(), "normal");
+    assert_eq!(t.get("batch_images").unwrap().as_usize().unwrap(), 1);
+    assert!(t.get("energy_uj").unwrap().as_f64().unwrap() > 0.0);
+    let layers = t.get("layers").unwrap().as_arr().unwrap();
+    assert_eq!(layers.len(), 1, "single-layer model -> one layer span");
+    assert!(layers[0].get("uj").unwrap().as_f64().unwrap() > 0.0);
+    // the echo omits write/total (bytes are formed before the write)
+    assert!(t.opt("write_us").is_none());
+    assert!(t.opt("total_us").is_none());
+
+    // identical pixels -> identical content-derived trace id
+    let (status, again) = post(&mut conn, "/v1/infer", &body_a);
+    assert_eq!(status, 200);
+    assert_eq!(
+        again.get("trace").unwrap().get("trace_id").unwrap().as_str().unwrap(),
+        id_a,
+        "trace id must be deterministic in the pixels"
+    );
+
+    // a unique image whose 4 spans we can isolate in the dump
+    let (status, traced_b) = post(
+        &mut conn,
+        "/v1/infer",
+        &format!("{{\"image\":{img_b},\"trace\":true}}"),
+    );
+    assert_eq!(status, 200);
+    let tb = traced_b.get("trace").unwrap();
+    let id_b = tb.get("trace_id").unwrap().as_str().unwrap().to_string();
+    assert_ne!(id_a, id_b, "different pixels -> different trace ids");
+    let echo_compute = tb.get("compute_us").unwrap().as_u64().unwrap();
+    let echo_queue = tb.get("queue_wait_us").unwrap().as_u64().unwrap();
+    let echo_batch = tb.get("batch_wait_us").unwrap().as_u64().unwrap();
+
+    // a traced multi-image body reports the formed device batch
+    let (status, traced_batch) = post(
+        &mut conn,
+        "/v1/infer",
+        &format!("{{\"images\":[{img_a},{img_b}],\"trace\":true}}"),
+    );
+    assert_eq!(status, 200);
+    assert_eq!(traced_batch.get("count").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(
+        traced_batch
+            .get("trace")
+            .unwrap()
+            .get("batch_images")
+            .unwrap()
+            .as_usize()
+            .unwrap(),
+        2
+    );
+
+    // the flight recorder replays the same requests as Chrome trace JSON
+    let (status, body) = get(&mut conn, "/admin/trace");
+    assert_eq!(status, 200);
+    let dump = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let events = dump.get("traceEvents").unwrap().as_arr().unwrap();
+    let ph_of = |e: &Json| e.get("ph").ok().and_then(|p| p.as_str().ok()).map(str::to_string);
+    let spans: Vec<&Json> = events
+        .iter()
+        .filter(|e| ph_of(e).as_deref() == Some("X"))
+        .collect();
+    assert!(!spans.is_empty(), "flight recorder must hold spans");
+    assert!(
+        events.iter().any(|e| ph_of(e).as_deref() == Some("M")),
+        "process_name metadata must be present"
+    );
+    // the unique request appears exactly once: four spans, one per stage
+    let mine: Vec<&Json> = spans
+        .iter()
+        .copied()
+        .filter(|e| {
+            e.get("args")
+                .ok()
+                .and_then(|a| a.get("trace_id").ok())
+                .and_then(|i| i.as_str().ok())
+                == Some(id_b.as_str())
+        })
+        .collect();
+    assert_eq!(mine.len(), 4, "one complete span per stage");
+    fn stage_span<'a>(spans: &[&'a Json], name: &str) -> &'a Json {
+        spans
+            .iter()
+            .copied()
+            .find(|e| e.get("name").unwrap().as_str().unwrap() == name)
+            .unwrap_or_else(|| panic!("missing {name} span"))
+    }
+    let dur_of = |name: &str| stage_span(&mine, name).get("dur").unwrap().as_u64().unwrap();
+    // stages are laid end-to-end in request order
+    let ts_of = |name: &str| stage_span(&mine, name).get("ts").unwrap().as_u64().unwrap();
+    assert!(ts_of("queue_wait") <= ts_of("batch_wait"));
+    assert!(ts_of("batch_wait") <= ts_of("compute"));
+    assert!(ts_of("compute") <= ts_of("write"));
+    // the dump and the inline echo describe the same measurement
+    assert_eq!(dur_of("queue_wait"), echo_queue);
+    assert_eq!(dur_of("batch_wait"), echo_batch);
+    assert_eq!(dur_of("compute"), echo_compute);
+    // stage-sum <= end-to-end total (the remainder is parse/reply hop)
+    let compute_args = stage_span(&mine, "compute").get("args").unwrap();
+    let total_us = compute_args.get("total_us").unwrap().as_u64().unwrap();
+    let stage_sum =
+        dur_of("queue_wait") + dur_of("batch_wait") + dur_of("compute") + dur_of("write");
+    assert!(stage_sum <= total_us, "stage sum {stage_sum} exceeds e2e total {total_us}");
+    assert!(compute_args.get("energy_uj").unwrap().as_f64().unwrap() > 0.0);
+
+    // /metrics: the stage histograms observed every engine request
+    // (5 requests: plain A, traced A x2, traced B, traced batch)
+    let (status, body) = get(&mut conn, "/metrics");
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).unwrap();
+    for stage in ["queue_wait", "batch_wait", "compute", "write"] {
+        let line = format!("emtopt_stage_latency_us_count{{tier=\"normal\",stage=\"{stage}\"}} 5");
+        assert!(text.lines().any(|l| l == line), "missing {line}");
+    }
+    assert!(
+        text.lines().any(|l| l.starts_with("emtopt_build_info{")),
+        "build-info gauge must render"
+    );
+
+    handle.shutdown().unwrap();
+}
+
+#[test]
 fn graceful_shutdown_via_admin_endpoint() {
     let handle = boot(NativeServerConfig {
         batch: 2,
