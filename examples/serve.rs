@@ -1,5 +1,5 @@
 //! Serving example: the full network path — HTTP clients over real TCP
-//! sockets -> connection pool -> per-tier bounded queues -> unified
+//! sockets -> epoll event loop -> per-tier bounded queues -> unified
 //! scheduler (one shared work-stealing worker pool over one immutable
 //! `Arc<NoisyModel>`).
 //!
@@ -75,6 +75,7 @@ fn main() -> emtopt::Result<()> {
         tier,
         classify: true,
         batch,
+        ..Default::default()
     })?;
     println!("{}", report.render());
 

@@ -53,7 +53,7 @@ use crate::energy::{EnergyPlan, ReadMode};
 use crate::inference::NoisyModel;
 use crate::metrics::{BatchSizeHistogram, LatencyHistogram};
 use crate::rng::hash2;
-use crate::scheduler::{Engine, LaneSpec, Reply};
+use crate::scheduler::{CompletionQueue, Engine, LaneSpec, Reply};
 use crate::trace::{StageHistograms, TraceContext};
 use crate::Result;
 
@@ -469,6 +469,55 @@ impl InferenceClient {
     ) -> Result<Reply> {
         let count = self.check_batch(&images)?;
         self.submit_traced(images, count, block, tctx)
+    }
+
+    /// Event-loop flavour of [`InferenceClient::infer_traced`]: the
+    /// reply lands on `cq` under `key` instead of blocking this thread.
+    /// Admission errors ([`Overloaded`], `EnergyShed`) still surface
+    /// synchronously so the caller can answer with live retry stats.
+    pub fn infer_completion(
+        &self,
+        image: Vec<f32>,
+        block: bool,
+        tctx: &TraceContext,
+        cq: &Arc<CompletionQueue>,
+        key: u64,
+    ) -> Result<()> {
+        self.check_single(&image)?;
+        self.submit_completion(image, 1, block, tctx, cq, key)
+    }
+
+    /// Event-loop flavour of [`InferenceClient::infer_batch_traced`].
+    pub fn infer_batch_completion(
+        &self,
+        images: Vec<f32>,
+        block: bool,
+        tctx: &TraceContext,
+        cq: &Arc<CompletionQueue>,
+        key: u64,
+    ) -> Result<()> {
+        let count = self.check_batch(&images)?;
+        self.submit_completion(images, count, block, tctx, cq, key)
+    }
+
+    fn submit_completion(
+        &self,
+        images: Vec<f32>,
+        count: usize,
+        block: bool,
+        tctx: &TraceContext,
+        cq: &Arc<CompletionQueue>,
+        key: u64,
+    ) -> Result<()> {
+        match &self.backend {
+            ClientBackend::Scheduler { engine, lane } => {
+                engine.submit_async(*lane, images, count, block, tctx, cq, key)
+            }
+            #[cfg(feature = "aot")]
+            ClientBackend::Channel(_) => {
+                anyhow::bail!("completion-queue submission needs the native scheduler backend")
+            }
+        }
     }
 
     /// Classify and argmax.

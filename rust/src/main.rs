@@ -73,7 +73,10 @@ FLAGS (defaults in parentheses):
   --queue-depth N     serve-http: bounded request queue per lane (256)
   --max-client-batch N serve-http: images accepted per request, 413 above (64)
   --max-body-mb N     serve-http: request body cap in MiB, 413 above (8)
-  --conn-threads N    serve-http: connection handler threads (16)
+  --max-conns N       serve-http: global open-connection cap, typed 503 +
+                      Retry-After above it (10000)
+  --conn-threads N    serve-http: DEPRECATED no-op — connections live on
+                      one epoll event loop now, not a handler pool
   --max-conns-per-peer N serve-http: simultaneous connections per peer IP,
                       429 above (64)
   --model-store FILE  serve-http: stored model (.emtm) whose trained
@@ -85,6 +88,9 @@ FLAGS (defaults in parentheses):
                       disables the loop (50)
   --addr A            loadgen: target server (127.0.0.1:8080)
   --connections N     loadgen: concurrent keep-alive connections (8)
+  --event-loop        loadgen: drive all connections from one epoll
+                      event loop (C10K client: thousands of connections
+                      without thousands of threads)
   --qps F             loadgen: aggregate target rate, 0 = closed loop (0)
   --tier T            loadgen: low|normal|high|mixed (normal)
   --endpoint E        loadgen: classify|infer (classify)
@@ -448,9 +454,17 @@ fn serve_http_cmd(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
         ),
         None => None,
     };
+    // The reserved-handler pool is gone: connections are epoll-driven.
+    // The flag stays accepted (deployment scripts pass it) as a no-op.
+    if args.has("conn-threads") {
+        eprintln!(
+            "warning: --conn-threads is deprecated and ignored — connections \
+             run on one epoll event loop; size concurrency with --max-conns"
+        );
+    }
     let http_cfg = HttpServerConfig {
         addr: format!("{host}:{port}"),
-        conn_threads: args.parse_or("conn-threads", 16usize)?,
+        max_conns: args.parse_or("max-conns", 10_000usize)?,
         max_conns_per_peer: args.parse_or("max-conns-per-peer", 64usize)?,
         trained_rho,
         // batch bodies are big (a 64-image CIFAR batch is ~2 MiB of JSON),
@@ -524,6 +538,7 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         batch: args.parse_or("batch", 1usize)?,
         blocking: args.has("blocking"),
         trace_sample: args.parse_or("trace-sample", 0usize)?,
+        event_loop: args.has("event-loop"),
     };
     let out = args.str_or("out", "BENCH_serve.json");
     let batch_sweep: Vec<usize> = match args.get("batch-sweep") {

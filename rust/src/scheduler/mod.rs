@@ -71,6 +71,65 @@ pub struct Reply {
     pub span: SpanRecord,
 }
 
+/// Where a finished [`Reply`] goes.
+///
+/// * [`ReplySink::Rendezvous`] — the classic blocking path
+///   (`serve_native`, CLI, tests): the submitter parks on an mpsc
+///   receiver until its reply lands.
+/// * [`ReplySink::Completion`] — the event-loop path: workers push the
+///   keyed result onto a shared [`CompletionQueue`] and fire its wakeup
+///   hook (an `eventfd` write).  Nothing ever blocks a compute worker
+///   on a slow HTTP reader.
+pub(crate) enum ReplySink {
+    Rendezvous(mpsc::Sender<Result<Reply>>),
+    Completion { cq: Arc<CompletionQueue>, key: u64 },
+}
+
+impl ReplySink {
+    fn deliver(&self, result: Result<Reply>) {
+        match self {
+            ReplySink::Rendezvous(tx) => {
+                let _ = tx.send(result);
+            }
+            ReplySink::Completion { cq, key } => cq.push(*key, result),
+        }
+    }
+}
+
+/// Non-blocking reply mailbox between the worker pool and the event
+/// loop.  Workers [`push`](CompletionQueue::push) keyed results and call
+/// the notify hook; the loop [`drain`](CompletionQueue::drain)s after
+/// each wakeup.  Keys are loop-chosen (connection slot + generation) so
+/// a completion for a since-closed connection is detectable and cheap
+/// to drop.
+pub struct CompletionQueue {
+    items: Mutex<Vec<(u64, Result<Reply>)>>,
+    notify: Box<dyn Fn() + Send + Sync>,
+}
+
+impl CompletionQueue {
+    pub fn new(notify: Box<dyn Fn() + Send + Sync>) -> Arc<CompletionQueue> {
+        Arc::new(CompletionQueue {
+            items: Mutex::new(Vec::new()),
+            notify,
+        })
+    }
+
+    pub fn push(&self, key: u64, result: Result<Reply>) {
+        {
+            let mut items = self.items.lock().expect("completion queue poisoned");
+            items.push((key, result));
+        }
+        (self.notify)();
+    }
+
+    /// Take everything delivered since the last drain.
+    pub fn drain(&self) -> Vec<(u64, Result<Reply>)> {
+        let mut items = self.items.lock().expect("completion queue poisoned");
+        std::mem::take(&mut *items)
+    }
+}
+
 /// One scheduling lane: the per-layer energy plan its reads use and the
 /// RNG lane seed its images derive their noise streams from.  Lane
 /// index doubles as drain/shed priority — index 0 is the lowest
@@ -87,7 +146,7 @@ struct WorkItem {
     /// `count * d_in` row-major pixels.
     images: Vec<f32>,
     count: usize,
-    reply: mpsc::Sender<Result<Reply>>,
+    reply: ReplySink,
     enqueued: Instant,
     /// Trace identity minted at HTTP parse time (id + recorder-epoch
     /// start timestamp); internal for non-HTTP callers.
@@ -120,6 +179,13 @@ struct Lane {
 /// the real work — crossbar reads — happens outside the lock).
 struct Sched {
     queues: Vec<VecDeque<WorkItem>>,
+    /// Blocking-mode submissions from the event loop that found their
+    /// lane queue full.  The loop must never block, so instead of
+    /// waiting on `space_cv` the item parks here and a worker promotes
+    /// it into the bounded queue as space frees (FIFO per lane).
+    /// Bounded implicitly by the front end's `--max-conns` — each
+    /// connection has at most one request in flight.
+    parked: Vec<VecDeque<WorkItem>>,
     /// Worker index -> home lane.
     homes: Vec<usize>,
     /// Per-lane steal weights (rebalancer-set pressure scores).
@@ -157,8 +223,18 @@ struct StopToken {
 
 impl Drop for StopToken {
     fn drop(&mut self) {
-        if let Ok(mut s) = self.shared.sched.lock() {
-            s.stopped = true;
+        let parked: Vec<WorkItem> = match self.shared.sched.lock() {
+            Ok(mut s) => {
+                s.stopped = true;
+                // queued work still drains (workers finish the queues
+                // before exiting), but parked items will never be
+                // promoted once stopped — fail them now
+                s.parked.iter_mut().flat_map(|q| q.drain(..)).collect()
+            }
+            Err(_) => Vec::new(),
+        };
+        for item in &parked {
+            item.reply.deliver(Err(anyhow::anyhow!("server stopped")));
         }
         self.shared.work_cv.notify_all();
         self.shared.space_cv.notify_all();
@@ -247,6 +323,7 @@ impl Engine {
                 .collect(),
             sched: Mutex::new(Sched {
                 queues: (0..n).map(|_| VecDeque::new()).collect(),
+                parked: (0..n).map(|_| VecDeque::new()).collect(),
                 homes: (0..cfg.workers).map(|w| w % n).collect(),
                 weights: vec![1.0; n],
                 deficits: vec![0.0; n],
@@ -378,7 +455,7 @@ impl Engine {
         let item = WorkItem {
             images,
             count,
-            reply,
+            reply: ReplySink::Rendezvous(reply),
             enqueued: Instant::now(),
             trace_id: tctx.trace_id,
             start_us: tctx.start_us,
@@ -406,6 +483,65 @@ impl Engine {
         drop(s);
         shared.work_cv.notify_all();
         Ok(rx)
+    }
+
+    /// Event-loop submission: the reply lands on `cq` under `key`
+    /// instead of a rendezvous channel, and this call NEVER blocks.
+    /// Admission mirrors [`Engine::submit`] — governor first, then the
+    /// bounded queue — except that `block == true` with a full queue
+    /// *parks* the item (FIFO per lane) rather than waiting; a worker
+    /// promotes parked items as space frees.  `block == false` with a
+    /// full queue is still a typed [`Overloaded`] error, answered
+    /// synchronously so the 503 carries live `Retry-After` stats.
+    pub(crate) fn submit_async(
+        &self,
+        lane: usize,
+        images: Vec<f32>,
+        count: usize,
+        block: bool,
+        tctx: &TraceContext,
+        cq: &Arc<CompletionQueue>,
+        key: u64,
+    ) -> Result<()> {
+        let shared = &self.shared;
+        if let Some(gov) = &shared.governor {
+            gov.admit(lane)?;
+        }
+        let item = WorkItem {
+            images,
+            count,
+            reply: ReplySink::Completion {
+                cq: cq.clone(),
+                key,
+            },
+            enqueued: Instant::now(),
+            trace_id: tctx.trace_id,
+            start_us: tctx.start_us,
+            picked: None,
+        };
+        let mut s = shared.sched.lock().expect("scheduler poisoned");
+        anyhow::ensure!(!s.stopped, "server stopped");
+        if s.queues[lane].len() < shared.queue_depth {
+            s.queues[lane].push_back(item);
+            shared.lanes[lane]
+                .queue_len
+                .store(s.queues[lane].len() as u64, Ordering::Relaxed);
+            shared.lanes[lane]
+                .stats
+                .submitted
+                .fetch_add(1, Ordering::Relaxed);
+            drop(s);
+            shared.work_cv.notify_all();
+        } else if block {
+            s.parked[lane].push_back(item);
+            shared.lanes[lane]
+                .stats
+                .submitted
+                .fetch_add(1, Ordering::Relaxed);
+        } else {
+            return Err(anyhow::Error::new(Overloaded));
+        }
+        Ok(())
     }
 }
 
@@ -512,13 +648,43 @@ fn worker_loop(shared: &Shared, worker: usize) {
                 s = guard;
             }
         }
+        // the pulls above freed queue space: promote parked event-loop
+        // submissions (blocking mode) into their bounded queues, FIFO
+        let promoted = promote_parked(shared, &mut s);
         shared.lanes[lane]
             .queue_len
             .store(s.queues[lane].len() as u64, Ordering::Relaxed);
         drop(s);
         shared.space_cv.notify_all();
+        if promoted {
+            shared.work_cv.notify_all();
+        }
         run_batch(shared, lane, worker, stolen, items);
     }
+}
+
+/// Move parked (blocking, event-loop) submissions into their lane's
+/// bounded queue while space allows.  Caller holds the scheduler lock.
+fn promote_parked(shared: &Shared, s: &mut Sched) -> bool {
+    let mut promoted = false;
+    for l in 0..shared.lanes.len() {
+        if s.parked[l].is_empty() {
+            continue;
+        }
+        while s.queues[l].len() < shared.queue_depth {
+            match s.parked[l].pop_front() {
+                Some(item) => {
+                    s.queues[l].push_back(item);
+                    promoted = true;
+                }
+                None => break,
+            }
+        }
+        shared.lanes[l]
+            .queue_len
+            .store(s.queues[l].len() as u64, Ordering::Relaxed);
+    }
+    promoted
 }
 
 /// Execute one collected batch on the shared model and fan the per-image
@@ -601,7 +767,7 @@ fn run_batch(shared: &Shared, lane_idx: usize, worker: usize, stolen: bool, item
         stats.stages.record(Stage::BatchWait, batch_wait_us);
         stats.stages.record(Stage::Compute, infer_us);
 
-        let _ = r.reply.send(Ok(Reply {
+        r.reply.deliver(Ok(Reply {
             logits: logits[off * nc..(off + r.count) * nc].to_vec(),
             span,
         }));
@@ -678,7 +844,7 @@ mod tests {
         WorkItem {
             images: vec![0.0; count],
             count,
-            reply,
+            reply: ReplySink::Rendezvous(reply),
             enqueued: Instant::now(),
             trace_id: 0,
             start_us: 0,
@@ -692,11 +858,32 @@ mod tests {
                 .iter()
                 .map(|&n| (0..n).map(|_| dummy_item(1)).collect())
                 .collect(),
+            parked: queued.iter().map(|_| VecDeque::new()).collect(),
             homes: vec![0],
             weights: vec![1.0; queued.len()],
             deficits: vec![0.0; queued.len()],
             stopped: false,
         }
+    }
+
+    #[test]
+    fn completion_queue_push_notifies_and_drains() {
+        let hits = Arc::new(AtomicU64::new(0));
+        let h = hits.clone();
+        let cq = CompletionQueue::new(Box::new(move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        }));
+        let sink = ReplySink::Completion {
+            cq: cq.clone(),
+            key: 42,
+        };
+        sink.deliver(Err(anyhow::anyhow!("boom")));
+        assert_eq!(hits.load(Ordering::Relaxed), 1, "push fires the wakeup hook");
+        let items = cq.drain();
+        assert_eq!(items.len(), 1);
+        assert_eq!(items[0].0, 42);
+        assert!(items[0].1.is_err());
+        assert!(cq.drain().is_empty(), "drain takes everything");
     }
 
     #[test]

@@ -1,0 +1,293 @@
+//! Minimal raw-`epoll` bindings for the event-loop front end.
+//!
+//! The build is offline and dependency-free (no `libc`, no tokio), so
+//! the three syscall wrappers the readiness loop needs — `epoll_create1`
+//! / `epoll_ctl` / `epoll_wait` plus an `eventfd` wakeup — are declared
+//! here as `extern "C"` against the platform libc the binary already
+//! links. Linux-only, like the rest of the serving stack's CI.
+//!
+//! Two safe handles are exported:
+//!
+//! * [`Poller`] — owns the epoll fd; level-triggered interest
+//!   registration keyed by a caller-chosen `u64` token.
+//! * [`WakeFd`] — an `eventfd` the scheduler's completion queue writes
+//!   to from worker threads so the loop returns from `epoll_wait`
+//!   immediately when a `Reply` lands.
+
+use std::io;
+use std::os::fd::RawFd;
+
+// ---------------------------------------------------------------------
+// FFI surface
+// ---------------------------------------------------------------------
+
+extern "C" {
+    fn epoll_create1(flags: i32) -> i32;
+    fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+    fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout_ms: i32) -> i32;
+    fn eventfd(initval: u32, flags: i32) -> i32;
+    fn close(fd: i32) -> i32;
+    fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+    fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+}
+
+/// Readiness: data to read (or pending accepts on a listener).
+pub const EPOLLIN: u32 = 0x1;
+/// Readiness: socket writable again after a short write.
+pub const EPOLLOUT: u32 = 0x4;
+/// Error condition (always reported; no need to register).
+pub const EPOLLERR: u32 = 0x8;
+/// Hangup (always reported; no need to register).
+pub const EPOLLHUP: u32 = 0x10;
+/// Peer shut down its write half (half-closed keep-alive sockets).
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+const EPOLL_CTL_ADD: i32 = 1;
+const EPOLL_CTL_DEL: i32 = 2;
+const EPOLL_CTL_MOD: i32 = 3;
+const EPOLL_CLOEXEC: i32 = 0x80000;
+const EFD_NONBLOCK: i32 = 0x800;
+const EFD_CLOEXEC: i32 = 0x80000;
+
+/// `struct epoll_event`. On x86-64 the kernel ABI packs the struct
+/// (12 bytes); other architectures use natural alignment.
+#[cfg(target_arch = "x86_64")]
+#[repr(C, packed)]
+#[derive(Clone, Copy)]
+pub struct EpollEvent {
+    pub events: u32,
+    pub token: u64,
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct EpollEvent {
+    pub events: u32,
+    pub token: u64,
+}
+
+impl EpollEvent {
+    fn zeroed() -> Self {
+        EpollEvent { events: 0, token: 0 }
+    }
+
+    /// Copy out the (possibly unaligned) readiness mask.
+    pub fn readiness(&self) -> u32 {
+        let e = self.events;
+        e
+    }
+
+    /// Copy out the (possibly unaligned) caller token.
+    pub fn key(&self) -> u64 {
+        let t = self.token;
+        t
+    }
+}
+
+// ---------------------------------------------------------------------
+// Poller
+// ---------------------------------------------------------------------
+
+/// Owned epoll instance with level-triggered registration.
+pub struct Poller {
+    epfd: RawFd,
+}
+
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Poller { epfd })
+    }
+
+    fn ctl(&self, op: i32, fd: RawFd, interest: u32, token: u64) -> io::Result<()> {
+        let mut ev = EpollEvent { events: interest, token };
+        let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Register `fd` with the given interest mask and token.
+    pub fn add(&self, fd: RawFd, interest: u32, token: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, interest, token)
+    }
+
+    /// Change the interest mask of an already-registered fd.
+    pub fn modify(&self, fd: RawFd, interest: u32, token: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, interest, token)
+    }
+
+    /// Deregister `fd`. Safe to call right before closing it.
+    pub fn remove(&self, fd: RawFd) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Block up to `timeout_ms` (`-1` = forever) and fill `events`.
+    /// Returns the number of ready entries; `EINTR` is retried.
+    pub fn wait(&self, events: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
+        loop {
+            let n = unsafe {
+                epoll_wait(
+                    self.epfd,
+                    events.as_mut_ptr(),
+                    events.len() as i32,
+                    timeout_ms,
+                )
+            };
+            if n >= 0 {
+                return Ok(n as usize);
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() != io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        }
+    }
+
+    /// A zeroed event buffer of the given capacity.
+    pub fn event_buf(cap: usize) -> Vec<EpollEvent> {
+        vec![EpollEvent::zeroed(); cap]
+    }
+}
+
+impl Drop for Poller {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.epfd);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// WakeFd
+// ---------------------------------------------------------------------
+
+/// Nonblocking `eventfd` used to interrupt `epoll_wait` from another
+/// thread (completion-queue pushes, shutdown requests).
+pub struct WakeFd {
+    fd: RawFd,
+}
+
+impl WakeFd {
+    pub fn new() -> io::Result<WakeFd> {
+        let fd = unsafe { eventfd(0, EFD_NONBLOCK | EFD_CLOEXEC) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(WakeFd { fd })
+    }
+
+    pub fn raw(&self) -> RawFd {
+        self.fd
+    }
+
+    /// Nudge the loop. Saturation (`EAGAIN` at u64::MAX - 1 pending
+    /// wakes) still leaves the fd readable, so a lost increment cannot
+    /// lose the wakeup itself.
+    pub fn wake(&self) {
+        let one: u64 = 1;
+        unsafe {
+            write(self.fd, &one as *const u64 as *const u8, 8);
+        }
+    }
+
+    /// Reset the counter after the loop woke up (reads until clear).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 8];
+        loop {
+            let n = unsafe { read(self.fd, buf.as_mut_ptr(), 8) };
+            if n <= 0 {
+                return;
+            }
+        }
+    }
+}
+
+impl Drop for WakeFd {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.fd);
+        }
+    }
+}
+
+// WakeFd is written from scheduler worker threads and drained on the
+// event loop; eventfd reads/writes are atomic at the kernel boundary.
+unsafe impl Send for WakeFd {}
+unsafe impl Sync for WakeFd {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+
+    #[test]
+    fn eventfd_wake_drain_roundtrip() {
+        let poller = Poller::new().unwrap();
+        let wake = WakeFd::new().unwrap();
+        poller.add(wake.raw(), EPOLLIN, 7).unwrap();
+
+        let mut events = Poller::event_buf(4);
+        // nothing pending: zero-timeout wait returns no events
+        assert_eq!(poller.wait(&mut events, 0).unwrap(), 0);
+
+        wake.wake();
+        wake.wake();
+        let n = poller.wait(&mut events, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(events[0].key(), 7);
+        assert_ne!(events[0].readiness() & EPOLLIN, 0);
+
+        // drain clears the counter; the level-triggered fd goes quiet
+        wake.drain();
+        assert_eq!(poller.wait(&mut events, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn listener_and_stream_readiness() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        let poller = Poller::new().unwrap();
+        poller
+            .add(listener.as_raw_fd(), EPOLLIN, 1)
+            .unwrap();
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        let mut events = Poller::event_buf(8);
+        let n = poller.wait(&mut events, 2000).unwrap();
+        assert!(n >= 1);
+        assert_eq!(events[0].key(), 1);
+
+        let (server_side, _) = listener.accept().unwrap();
+        server_side.set_nonblocking(true).unwrap();
+        poller
+            .add(server_side.as_raw_fd(), EPOLLIN | EPOLLRDHUP, 2)
+            .unwrap();
+
+        client.write_all(b"ping").unwrap();
+        let n = poller.wait(&mut events, 2000).unwrap();
+        assert!(n >= 1);
+        assert!(events[..n].iter().any(|e| e.key() == 2));
+
+        // interest can be switched to write-side readiness
+        poller
+            .modify(server_side.as_raw_fd(), EPOLLOUT, 2)
+            .unwrap();
+        let n = poller.wait(&mut events, 2000).unwrap();
+        assert!(events[..n].iter().any(|e| {
+            e.key() == 2 && e.readiness() & EPOLLOUT != 0
+        }));
+
+        poller.remove(server_side.as_raw_fd()).unwrap();
+        assert_eq!(poller.wait(&mut events, 0).unwrap(), 0);
+    }
+}

@@ -11,6 +11,12 @@
 //! or coalesced bytes from a keep-alive peer are never lost between
 //! requests.  It is generic over `Read + Write` so the unit tests can
 //! drive it with in-memory streams.
+//!
+//! [`RequestParser`] / [`ResponseParser`] are the sans-io counterparts:
+//! the epoll event loop (and its load-generator client) feed them
+//! whatever bytes the socket had and ask for complete messages, so a
+//! peer that trickles one byte per second never blocks anything — it
+//! just stays "partial" until the idle sweep reaps it.
 
 use std::io::{ErrorKind, Read, Write};
 
@@ -260,67 +266,18 @@ impl<S: Read + Write> HttpConn<S> {
             HeadOutcome::Closed => return Ok(RequestOutcome::Closed),
             HeadOutcome::TimedOut => return Ok(RequestOutcome::TimedOut),
         };
-        let text = std::str::from_utf8(&head)
-            .map_err(|_| anyhow::anyhow!("request head is not UTF-8"))?;
-        let mut lines = text.split("\r\n");
-        let request_line = lines.next().unwrap_or("");
-        let mut parts = request_line.split_whitespace();
-        let method = parts
-            .next()
-            .ok_or_else(|| anyhow::anyhow!("empty request line"))?
-            .to_string();
-        let path = parts
-            .next()
-            .ok_or_else(|| anyhow::anyhow!("request line has no path"))?
-            .to_string();
-        let version = parts
-            .next()
-            .ok_or_else(|| anyhow::anyhow!("request line has no version"))?;
-        anyhow::ensure!(
-            version == "HTTP/1.1" || version == "HTTP/1.0",
-            "unsupported protocol {version:?}"
-        );
-        let headers = parse_headers(lines)?;
-        let content_length = content_length(&headers)?;
-        if content_length > max_body {
+        let parsed = parse_request_head(&head)?;
+        if parsed.content_length > max_body {
             return Err(anyhow::Error::new(PayloadTooLarge { limit: max_body }));
         }
-        let body = self.read_body(content_length)?;
-        let keep_alive = match headers
-            .iter()
-            .find(|(k, _)| k == "connection")
-            .map(|(_, v)| v.as_str())
-        {
-            Some(v) if v.eq_ignore_ascii_case("close") => false,
-            Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
-            _ => version == "HTTP/1.1",
-        };
-        Ok(RequestOutcome::Request(HttpRequest {
-            method,
-            path,
-            headers,
-            body,
-            keep_alive,
-        }))
+        let body = self.read_body(parsed.content_length)?;
+        Ok(RequestOutcome::Request(parsed.into_request(body)))
     }
 
     /// Write a response (server side).
     pub fn write_response(&mut self, resp: &Response, keep_alive: bool) -> std::io::Result<()> {
-        use std::fmt::Write as _;
-        let mut head = format!(
-            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n",
-            resp.status,
-            status_text(resp.status),
-            resp.content_type,
-            resp.body.len(),
-            if keep_alive { "keep-alive" } else { "close" },
-        );
-        for (name, value) in &resp.headers {
-            let _ = write!(head, "{name}: {value}\r\n");
-        }
-        head.push_str("\r\n");
-        self.stream.write_all(head.as_bytes())?;
-        self.stream.write_all(&resp.body)?;
+        let bytes = render_response(resp, keep_alive);
+        self.stream.write_all(&bytes)?;
         self.stream.flush()
     }
 
@@ -354,25 +311,288 @@ impl<S: Read + Write> HttpConn<S> {
             HeadOutcome::Closed => anyhow::bail!("server closed the connection"),
             HeadOutcome::TimedOut => anyhow::bail!("timed out waiting for response"),
         };
-        let text = std::str::from_utf8(&head)
-            .map_err(|_| anyhow::anyhow!("response head is not UTF-8"))?;
-        let mut lines = text.split("\r\n");
-        let status_line = lines.next().unwrap_or("");
-        let mut parts = status_line.split_whitespace();
-        let version = parts
-            .next()
-            .ok_or_else(|| anyhow::anyhow!("empty status line"))?;
-        anyhow::ensure!(version.starts_with("HTTP/1."), "bad status line {status_line:?}");
-        let status: u16 = parts
-            .next()
-            .ok_or_else(|| anyhow::anyhow!("status line has no code"))?
-            .parse()
-            .map_err(|_| anyhow::anyhow!("bad status code in {status_line:?}"))?;
-        let headers = parse_headers(lines)?;
-        let content_length = content_length(&headers)?;
+        let (status, headers, content_length) = parse_response_head(&head)?;
         anyhow::ensure!(content_length <= max_body, "response body too large");
         let body = self.read_body(content_length)?;
         Ok((status, headers, body))
+    }
+}
+
+/// Serialize a response (status line + headers + body) into one byte
+/// buffer.  The event loop appends this to a connection's write buffer
+/// and flushes it as `EPOLLOUT` allows; `HttpConn::write_response` uses
+/// it too, so both paths emit byte-identical responses.
+pub fn render_response(resp: &Response, keep_alive: bool) -> Vec<u8> {
+    use std::fmt::Write as _;
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n",
+        resp.status,
+        status_text(resp.status),
+        resp.content_type,
+        resp.body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    for (name, value) in &resp.headers {
+        let _ = write!(head, "{name}: {value}\r\n");
+    }
+    head.push_str("\r\n");
+    let mut out = head.into_bytes();
+    out.extend_from_slice(&resp.body);
+    out
+}
+
+/// A fully parsed request head (everything above the blank line).
+struct RequestHead {
+    method: String,
+    path: String,
+    headers: Vec<(String, String)>,
+    keep_alive: bool,
+    content_length: usize,
+}
+
+impl RequestHead {
+    fn into_request(self, body: Vec<u8>) -> HttpRequest {
+        HttpRequest {
+            method: self.method,
+            path: self.path,
+            headers: self.headers,
+            body,
+            keep_alive: self.keep_alive,
+        }
+    }
+}
+
+fn parse_request_head(head: &[u8]) -> Result<RequestHead> {
+    let text =
+        std::str::from_utf8(head).map_err(|_| anyhow::anyhow!("request head is not UTF-8"))?;
+    let mut lines = text.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty request line"))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("request line has no path"))?
+        .to_string();
+    let version = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("request line has no version"))?;
+    anyhow::ensure!(
+        version == "HTTP/1.1" || version == "HTTP/1.0",
+        "unsupported protocol {version:?}"
+    );
+    let headers = parse_headers(lines)?;
+    let content_length = content_length(&headers)?;
+    let keep_alive = match headers
+        .iter()
+        .find(|(k, _)| k == "connection")
+        .map(|(_, v)| v.as_str())
+    {
+        Some(v) if v.eq_ignore_ascii_case("close") => false,
+        Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
+        _ => version == "HTTP/1.1",
+    };
+    Ok(RequestHead {
+        method,
+        path,
+        headers,
+        keep_alive,
+        content_length,
+    })
+}
+
+fn parse_response_head(head: &[u8]) -> Result<(u16, Vec<(String, String)>, usize)> {
+    let text =
+        std::str::from_utf8(head).map_err(|_| anyhow::anyhow!("response head is not UTF-8"))?;
+    let mut lines = text.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let mut parts = status_line.split_whitespace();
+    let version = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty status line"))?;
+    anyhow::ensure!(
+        version.starts_with("HTTP/1."),
+        "bad status line {status_line:?}"
+    );
+    let status: u16 = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("status line has no code"))?
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad status code in {status_line:?}"))?;
+    let headers = parse_headers(lines)?;
+    let content_length = content_length(&headers)?;
+    Ok((status, headers, content_length))
+}
+
+/// Shared sans-io framing buffer: accumulate fed bytes, split one head
+/// off at `\r\n\r\n`, then drain the declared body length.
+struct FrameBuf {
+    buf: Vec<u8>,
+    /// `\r\n\r\n` search resume point, so a byte-at-a-time slowloris
+    /// feed stays O(bytes) instead of rescanning the whole head.
+    scanned: usize,
+}
+
+impl FrameBuf {
+    fn new() -> Self {
+        FrameBuf {
+            buf: Vec::new(),
+            scanned: 0,
+        }
+    }
+
+    fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Drain one complete head (through the blank line) if buffered.
+    /// `Err` once the partial head exceeds [`MAX_HEAD_BYTES`].
+    fn take_head(&mut self) -> Result<Option<Vec<u8>>> {
+        let start = self.scanned.saturating_sub(3);
+        match self.buf[start..].windows(4).position(|w| w == b"\r\n\r\n") {
+            Some(rel) => {
+                let pos = start + rel;
+                let head = self.buf[..pos].to_vec();
+                self.buf.drain(..pos + 4);
+                self.scanned = 0;
+                Ok(Some(head))
+            }
+            None => {
+                self.scanned = self.buf.len();
+                anyhow::ensure!(self.buf.len() <= MAX_HEAD_BYTES, "head too large");
+                Ok(None)
+            }
+        }
+    }
+
+    /// Drain exactly `len` body bytes if buffered.
+    fn take_body(&mut self, len: usize) -> Option<Vec<u8>> {
+        if self.buf.len() < len {
+            return None;
+        }
+        let body: Vec<u8> = self.buf.drain(..len).collect();
+        self.scanned = 0;
+        Some(body)
+    }
+}
+
+/// Incremental (sans-io) HTTP/1.1 request parser for the event loop.
+///
+/// Feed it whatever bytes the nonblocking socket had; `try_next`
+/// returns complete requests as they frame up.  Malformed heads and
+/// over-cap bodies surface as errors the loop maps to `400`/`413`.
+pub struct RequestParser {
+    frame: FrameBuf,
+    /// Head parsed, waiting for `content_length` body bytes.
+    pending: Option<RequestHead>,
+}
+
+impl Default for RequestParser {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RequestParser {
+    pub fn new() -> Self {
+        RequestParser {
+            frame: FrameBuf::new(),
+            pending: None,
+        }
+    }
+
+    /// Buffer freshly read socket bytes.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.frame.feed(bytes);
+    }
+
+    /// True when a request is partially buffered (bytes or a parsed
+    /// head waiting for its body) — the slowloris sweep signal.
+    pub fn has_partial(&self) -> bool {
+        self.pending.is_some() || !self.frame.is_empty()
+    }
+
+    /// Next complete request, if the buffer holds one.
+    ///
+    /// `Ok(None)` means "need more bytes"; errors are fatal for the
+    /// connection (garbage head, head too large, or a declared
+    /// `Content-Length` above `max_body` → [`PayloadTooLarge`]).
+    pub fn try_next(&mut self, max_body: usize) -> Result<Option<HttpRequest>> {
+        if self.pending.is_none() {
+            let head = match self.frame.take_head()? {
+                Some(h) => h,
+                None => return Ok(None),
+            };
+            let parsed = parse_request_head(&head)?;
+            if parsed.content_length > max_body {
+                return Err(anyhow::Error::new(PayloadTooLarge { limit: max_body }));
+            }
+            self.pending = Some(parsed);
+        }
+        let need = self.pending.as_ref().map(|h| h.content_length).unwrap_or(0);
+        match self.frame.take_body(need) {
+            Some(body) => {
+                let head = self.pending.take().expect("pending head");
+                Ok(Some(head.into_request(body)))
+            }
+            None => Ok(None),
+        }
+    }
+}
+
+/// Incremental (sans-io) HTTP/1.1 response parser for the epoll load
+/// generator client.  Mirrors [`RequestParser`].
+pub struct ResponseParser {
+    frame: FrameBuf,
+    pending: Option<(u16, Vec<(String, String)>, usize)>,
+}
+
+impl Default for ResponseParser {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ResponseParser {
+    pub fn new() -> Self {
+        ResponseParser {
+            frame: FrameBuf::new(),
+            pending: None,
+        }
+    }
+
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.frame.feed(bytes);
+    }
+
+    /// Next complete response as `(status, headers, body)`.
+    pub fn try_next(
+        &mut self,
+        max_body: usize,
+    ) -> Result<Option<(u16, Vec<(String, String)>, Vec<u8>)>> {
+        if self.pending.is_none() {
+            let head = match self.frame.take_head()? {
+                Some(h) => h,
+                None => return Ok(None),
+            };
+            let parsed = parse_response_head(&head)?;
+            anyhow::ensure!(parsed.2 <= max_body, "response body too large");
+            self.pending = Some(parsed);
+        }
+        let need = self.pending.as_ref().map(|p| p.2).unwrap_or(0);
+        match self.frame.take_body(need) {
+            Some(body) => {
+                let (status, headers, _) = self.pending.take().expect("pending head");
+                Ok(Some((status, headers, body)))
+            }
+            None => Ok(None),
+        }
     }
 }
 
@@ -552,5 +772,89 @@ mod tests {
         assert_eq!(r.status, 503);
         let v = crate::util::json::Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
         assert_eq!(v.get("error").unwrap().as_str().unwrap(), "overloaded");
+    }
+
+    #[test]
+    fn request_parser_assembles_byte_by_byte() {
+        let raw = b"POST /v1/infer HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello";
+        let mut p = RequestParser::new();
+        assert!(!p.has_partial());
+        for (i, b) in raw.iter().enumerate() {
+            p.feed(std::slice::from_ref(b));
+            let got = p.try_next(1024).unwrap();
+            if i + 1 < raw.len() {
+                assert!(got.is_none(), "complete too early at byte {i}");
+                assert!(p.has_partial());
+            } else {
+                let r = got.expect("complete at last byte");
+                assert_eq!(r.method, "POST");
+                assert_eq!(r.path, "/v1/infer");
+                assert_eq!(r.body, b"hello");
+                assert!(r.keep_alive);
+            }
+        }
+        assert!(!p.has_partial());
+    }
+
+    #[test]
+    fn request_parser_handles_pipelined_and_errors() {
+        let mut p = RequestParser::new();
+        p.feed(b"GET /a HTTP/1.1\r\nContent-Length: 2\r\n\r\nxyGET /b HTTP/1.1\r\n\r\n");
+        let a = p.try_next(1024).unwrap().unwrap();
+        assert_eq!(a.path, "/a");
+        assert_eq!(a.body, b"xy");
+        let b = p.try_next(1024).unwrap().unwrap();
+        assert_eq!(b.path, "/b");
+        assert!(p.try_next(1024).unwrap().is_none());
+
+        // over-cap body is a typed PayloadTooLarge before any body bytes
+        let mut p = RequestParser::new();
+        p.feed(b"POST / HTTP/1.1\r\nContent-Length: 99\r\n\r\n");
+        let err = p.try_next(10).unwrap_err();
+        assert!(err.is::<PayloadTooLarge>());
+
+        // garbage head is a plain error (mapped to 400 by the loop)
+        let mut p = RequestParser::new();
+        p.feed(b"NOT-HTTP\r\n\r\n");
+        assert!(p.try_next(1024).is_err());
+
+        // an endless head trips the cap without a blank line
+        let mut p = RequestParser::new();
+        p.feed(b"GET / HTTP/1.1\r\n");
+        let junk = vec![b'a'; MAX_HEAD_BYTES + 16];
+        p.feed(&junk);
+        assert!(p.try_next(1024).is_err());
+    }
+
+    #[test]
+    fn response_parser_roundtrips_rendered_bytes() {
+        let resp = Response::error_json(503, "overloaded").with_retry_after(7);
+        let bytes = render_response(&resp, true);
+        let mut p = ResponseParser::new();
+        // split the feed mid-head and mid-body
+        p.feed(&bytes[..10]);
+        assert!(p.try_next(1024).unwrap().is_none());
+        p.feed(&bytes[10..bytes.len() - 3]);
+        assert!(p.try_next(1024).unwrap().is_none());
+        p.feed(&bytes[bytes.len() - 3..]);
+        let (status, headers, body) = p.try_next(1024).unwrap().unwrap();
+        assert_eq!(status, 503);
+        assert_eq!(body, resp.body);
+        let ra = headers
+            .iter()
+            .find(|(k, _)| k == "retry-after")
+            .map(|(_, v)| v.as_str());
+        assert_eq!(ra, Some("7"));
+    }
+
+    #[test]
+    fn render_response_matches_write_response() {
+        let resp = Response::json(
+            200,
+            &crate::util::json::Json::obj(vec![("ok", crate::util::json::Json::Bool(true))]),
+        );
+        let mut server = HttpConn::new(Cursor::new(Vec::new()));
+        server.write_response(&resp, true).unwrap();
+        assert_eq!(server.stream.into_inner(), render_response(&resp, true));
     }
 }

@@ -26,9 +26,21 @@
 //! covering exactly its own requests.  `--trace-sample N` marks every
 //! Nth request with `"trace": true` and summarizes the echoed inline
 //! span breakdowns; default bodies stay byte-identical.
+//!
+//! Two connection drivers share one schedule and one accounting path:
+//! the default spawns a thread per connection (simple, fine up to a few
+//! hundred sockets), while `--event-loop` drives **all** connections
+//! from a single epoll readiness loop — the C10K client that can hold
+//! ten thousand keep-alive sockets open against the server's own event
+//! loop without ten thousand OS threads.  Reports carry the driver used
+//! plus the server's `emtopt_http_open_conns_peak` high-water mark, so
+//! a concurrency claim in `BENCH_serve.json` is backed by the server's
+//! own gauge rather than the client's bookkeeping.
 
 use std::collections::BTreeMap;
+use std::io::{ErrorKind, Read as _, Write as _};
 use std::net::TcpStream;
+use std::os::fd::AsRawFd;
 use std::time::{Duration, Instant};
 
 use crate::data::{Dataset, Split, Suite, DATA_SEED, IMG_LEN};
@@ -39,7 +51,8 @@ use crate::rng::Rng;
 use crate::util::json::Json;
 use crate::Result;
 
-use super::http::HttpConn;
+use super::epoll::{Poller, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP};
+use super::http::{HttpConn, ResponseParser};
 use super::EnergyTier;
 
 /// Load-generator configuration.
@@ -70,6 +83,11 @@ pub struct LoadgenConfig {
     /// sampling and keeps request bodies byte-identical to older
     /// generators.
     pub trace_sample: usize,
+    /// Drive all connections from one epoll event loop instead of a
+    /// thread per connection.  Same schedule, same at-most-once
+    /// semantics; this is the only driver that scales to 10k+
+    /// concurrent sockets.
+    pub event_loop: bool,
 }
 
 impl Default for LoadgenConfig {
@@ -84,6 +102,7 @@ impl Default for LoadgenConfig {
             batch: 1,
             blocking: false,
             trace_sample: 0,
+            event_loop: false,
         }
     }
 }
@@ -136,6 +155,14 @@ pub struct LoadgenReport {
     /// Mean stage times across the sampled inline echoes, microseconds:
     /// `[queue_wait, batch_wait, compute]` (the echo omits write/total).
     pub trace_inline_mean_us: [f64; 3],
+    /// Whether the run used the single-threaded epoll driver
+    /// (`--event-loop`) instead of a thread per connection.
+    pub event_loop: bool,
+    /// `emtopt_http_open_conns_peak` scraped from the server after the
+    /// run: the server-side high-water mark of concurrently open
+    /// sockets (0 when the server predates the gauge or the scrape
+    /// failed).  This is the number a C10K claim rests on.
+    pub server_open_conns_peak: u64,
 }
 
 /// Summary of one (tier, stage) cell of the server's stage-latency
@@ -170,9 +197,10 @@ impl LoadgenReport {
     pub fn render(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
-            "loadgen: {} sent over {} connections in {:.2}s -> {:.0} req/s{}\n",
+            "loadgen: {} sent over {} connections{} in {:.2}s -> {:.0} req/s{}\n",
             self.sent,
             self.connections,
+            if self.event_loop { " (event loop)" } else { "" },
             self.elapsed_s,
             self.throughput_rps,
             if self.batch > 1 {
@@ -181,6 +209,12 @@ impl LoadgenReport {
                 String::new()
             }
         ));
+        if self.server_open_conns_peak > 0 {
+            s.push_str(&format!(
+                "  server open-connection peak: {}\n",
+                self.server_open_conns_peak
+            ));
+        }
         if self.blocking {
             s.push_str("  mode: blocking (backpressure infer path)\n");
         }
@@ -238,6 +272,11 @@ impl LoadgenReport {
             ("bench", Json::Str("serve".into())),
             ("unix_time", Json::Num(unix_time() as f64)),
             ("connections", Json::Num(self.connections as f64)),
+            ("event_loop", Json::Bool(self.event_loop)),
+            (
+                "server_open_conns_peak",
+                Json::Num(self.server_open_conns_peak as f64),
+            ),
             ("batch", Json::Num(self.batch as f64)),
             ("blocking", Json::Bool(self.blocking)),
             ("plan_source", Json::Str(self.plan_source.clone())),
@@ -445,8 +484,8 @@ fn parse_stage_scrape(text: &str) -> StageScrape {
     map
 }
 
-/// Scrape `/metrics` and extract the stage-latency histograms.
-fn scrape_stages(addr: &str) -> Result<StageScrape> {
+/// Fetch the raw `/metrics` exposition text.
+fn scrape_metrics_text(addr: &str) -> Result<String> {
     let stream = TcpStream::connect(addr)
         .map_err(|e| anyhow::anyhow!("connecting to {addr}: {e}"))?;
     let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
@@ -454,7 +493,23 @@ fn scrape_stages(addr: &str) -> Result<StageScrape> {
     conn.write_request("GET", "/metrics", b"")?;
     let (status, body) = conn.read_response(4 << 20)?;
     anyhow::ensure!(status == 200, "metrics returned {status}");
-    Ok(parse_stage_scrape(std::str::from_utf8(&body)?))
+    Ok(String::from_utf8(body)?)
+}
+
+/// Scrape `/metrics` and extract the stage-latency histograms.
+fn scrape_stages(addr: &str) -> Result<StageScrape> {
+    Ok(parse_stage_scrape(&scrape_metrics_text(addr)?))
+}
+
+/// Extract one unlabelled gauge/counter value from an exposition.  The
+/// name must be followed by a space, so `emtopt_http_open_conns` never
+/// matches the `..._peak` line (or `# HELP` comments).
+fn parse_gauge(text: &str, name: &str) -> Option<u64> {
+    text.lines().find_map(|line| {
+        line.strip_prefix(name)
+            .and_then(|rest| rest.strip_prefix(' '))
+            .and_then(|v| v.trim().parse().ok())
+    })
 }
 
 /// Per-(tier, stage) breakdown of the samples recorded **between** two
@@ -564,6 +619,111 @@ fn body_for_batch(
     s
 }
 
+/// Build the JSON body (and per-image labels) for request `global`.
+/// Shared by both connection drivers so the thread-per-connection and
+/// event-loop modes send byte-identical schedules.
+#[allow(clippy::too_many_arguments)]
+fn build_request(
+    global: u64,
+    batch: usize,
+    input_len: usize,
+    dataset: Option<&Dataset>,
+    fixed_tier: Option<EnergyTier>,
+    blocking: bool,
+    trace_sample: u64,
+    img: &mut [f32],
+    labels: &mut Vec<usize>,
+) -> (String, bool) {
+    let tier = fixed_tier.unwrap_or(EnergyTier::ALL[(global % 3) as usize]);
+    labels.clear();
+    for j in 0..batch {
+        // image index space is dense across the whole run: request
+        // `global` carries images [global*batch, (global+1)*batch)
+        let sample = global * batch as u64 + j as u64;
+        let row = &mut img[j * input_len..(j + 1) * input_len];
+        match dataset {
+            Some(ds) => labels.push(ds.sample_into(Split::Test, sample, row) as usize),
+            None => {
+                let mut r = Rng::stream(0x10ad, sample);
+                for v in row.iter_mut() {
+                    *v = r.next_f32();
+                }
+            }
+        }
+    }
+    let traced = trace_sample > 0 && global % trace_sample == 0;
+    let body = if batch == 1 {
+        body_for(img, tier, blocking, traced)
+    } else {
+        body_for_batch(img, input_len, tier, blocking, traced)
+    };
+    (body, traced)
+}
+
+/// Account one completed HTTP exchange into the run's counters.  Shared
+/// by both connection drivers, so a status means the same thing in a
+/// thread-per-connection report and an event-loop report.
+#[allow(clippy::too_many_arguments)]
+fn score_response(
+    status: u16,
+    resp_body: &[u8],
+    us: u64,
+    classify: bool,
+    labels: &[usize],
+    traced: bool,
+    batch: usize,
+    counts: &mut Counts,
+    latencies: &mut Vec<u64>,
+    spans: &mut Vec<[u64; 3]>,
+) {
+    match status {
+        200 => {
+            counts.ok += 1;
+            latencies.push(us);
+            let parsed = if (classify && !labels.is_empty()) || traced {
+                std::str::from_utf8(resp_body)
+                    .ok()
+                    .and_then(|t| Json::parse(t).ok())
+            } else {
+                None
+            };
+            if let Some(v) = &parsed {
+                if classify && !labels.is_empty() {
+                    if batch == 1 {
+                        counts.labeled += 1;
+                        let pred = v.get("class").ok().and_then(|c| c.as_usize().ok());
+                        if pred == Some(labels[0]) {
+                            counts.correct += 1;
+                        }
+                    } else if let Ok(classes) = v.get("classes").and_then(|c| c.as_arr()) {
+                        counts.labeled += labels.len() as u64;
+                        for (j, cls) in classes.iter().enumerate().take(labels.len()) {
+                            if cls.as_usize().ok() == Some(labels[j]) {
+                                counts.correct += 1;
+                            }
+                        }
+                    }
+                }
+                if traced {
+                    if let Some(t) = v.opt("trace") {
+                        let g = |k: &str| {
+                            t.get(k).ok().and_then(|x| x.as_u64().ok()).unwrap_or(0)
+                        };
+                        counts.trace_sampled += 1;
+                        spans.push([
+                            g("queue_wait_us"),
+                            g("batch_wait_us"),
+                            g("compute_us"),
+                        ]);
+                    }
+                }
+            }
+        }
+        503 => counts.overloaded += 1,
+        _ => counts.http_errors += 1,
+    }
+}
+
 /// Run the load generator; blocks until every connection finished.
 pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     anyhow::ensure!(cfg.connections > 0, "need at least one connection");
@@ -595,9 +755,6 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         Duration::ZERO
     };
     let path = if cfg.classify { "/v1/classify" } else { "/v1/infer" };
-    let conns = cfg.connections as u64;
-    let base = cfg.requests / conns;
-    let extra = cfg.requests % conns;
 
     // Stage-histogram scrape bracketing the run: the delta attributes
     // exactly this run's requests.  Tolerated to fail (older server,
@@ -605,175 +762,16 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let scrape_before = scrape_stages(&cfg.addr).unwrap_or_default();
 
     let t0 = Instant::now();
-    let threads: Vec<_> = (0..conns)
-        .map(|c| {
-            let my_count = base + u64::from(c < extra);
-            let addr = cfg.addr.clone();
-            let dataset = dataset.clone();
-            let fixed_tier = cfg.tier;
-            let classify = cfg.classify;
-            let blocking = cfg.blocking;
-            let trace_sample = cfg.trace_sample as u64;
-            std::thread::spawn(move || -> (Counts, Vec<u64>, Vec<[u64; 3]>) {
-                let mut counts = Counts::default();
-                let mut latencies = Vec::with_capacity(my_count as usize);
-                let mut spans: Vec<[u64; 3]> = Vec::new();
-                let mut conn = connect_http(&addr);
-                let mut img = vec![0.0f32; input_len * batch];
-                let mut labels: Vec<usize> = Vec::with_capacity(batch);
-                for k in 0..my_count {
-                    // striped global index -> evenly interleaved schedule
-                    let global = c + k * conns;
-                    let tier =
-                        fixed_tier.unwrap_or(EnergyTier::ALL[(global % 3) as usize]);
-                    labels.clear();
-                    for j in 0..batch {
-                        // image index space is dense across the whole run:
-                        // request `global` carries images [global*batch,
-                        // (global+1)*batch)
-                        let sample = global * batch as u64 + j as u64;
-                        let row = &mut img[j * input_len..(j + 1) * input_len];
-                        match &dataset {
-                            Some(ds) => {
-                                labels.push(ds.sample_into(Split::Test, sample, row) as usize)
-                            }
-                            None => {
-                                let mut r = Rng::stream(0x10ad, sample);
-                                for v in row.iter_mut() {
-                                    *v = r.next_f32();
-                                }
-                            }
-                        }
-                    }
-                    // render the body before the latency clock starts, so
-                    // p50/p95/p99 measure network + server, not client-side
-                    // JSON formatting
-                    let traced = trace_sample > 0 && global % trace_sample == 0;
-                    let body = if batch == 1 {
-                        body_for(&img, tier, blocking, traced)
-                    } else {
-                        body_for_batch(&img, input_len, tier, blocking, traced)
-                    };
-                    let start = if interval.is_zero() {
-                        Instant::now()
-                    } else {
-                        let due = t0 + interval.mul_f64(global as f64);
-                        let now = Instant::now();
-                        if due > now {
-                            std::thread::sleep(due - now);
-                        }
-                        due
-                    };
-                    counts.sent += 1;
-                    // At-most-once submission with one reconnect: a failed
-                    // WRITE (nothing reached the server) is retried on a
-                    // fresh socket, so a connection the server closed costs
-                    // one reconnect, not the remaining schedule.  A lost
-                    // RESPONSE is never retried — the server may already
-                    // have executed the request, and a resend would break
-                    // the loadgen-report == /metrics reconciliation.
-                    let mut exchange = None;
-                    for _attempt in 0..2 {
-                        if conn.is_none() {
-                            conn = connect_http(&addr);
-                        }
-                        let Some(cn) = conn.as_mut() else { break };
-                        if cn.write_request("POST", path, body.as_bytes()).is_err() {
-                            conn = None; // dead socket, nothing submitted
-                            continue;
-                        }
-                        match cn.read_response(1 << 20) {
-                            Ok(r) => exchange = Some(r),
-                            Err(_) => conn = None,
-                        }
-                        break;
-                    }
-                    let (status, resp_body) = match exchange {
-                        Some(r) => r,
-                        None => {
-                            counts.transport_errors += 1;
-                            continue;
-                        }
-                    };
-                    let us = Instant::now()
-                        .saturating_duration_since(start)
-                        .as_micros() as u64;
-                    match status {
-                        200 => {
-                            counts.ok += 1;
-                            latencies.push(us);
-                            let parsed = if (classify && !labels.is_empty()) || traced {
-                                std::str::from_utf8(&resp_body)
-                                    .ok()
-                                    .and_then(|t| Json::parse(t).ok())
-                            } else {
-                                None
-                            };
-                            if let Some(v) = &parsed {
-                                if classify && !labels.is_empty() {
-                                    if batch == 1 {
-                                        counts.labeled += 1;
-                                        let pred =
-                                            v.get("class").ok().and_then(|c| c.as_usize().ok());
-                                        if pred == Some(labels[0]) {
-                                            counts.correct += 1;
-                                        }
-                                    } else if let Ok(classes) =
-                                        v.get("classes").and_then(|c| c.as_arr())
-                                    {
-                                        counts.labeled += labels.len() as u64;
-                                        for (j, cls) in
-                                            classes.iter().enumerate().take(labels.len())
-                                        {
-                                            if cls.as_usize().ok() == Some(labels[j]) {
-                                                counts.correct += 1;
-                                            }
-                                        }
-                                    }
-                                }
-                                if traced {
-                                    if let Some(t) = v.opt("trace") {
-                                        let g = |k: &str| {
-                                            t.get(k).ok().and_then(|x| x.as_u64().ok()).unwrap_or(0)
-                                        };
-                                        counts.trace_sampled += 1;
-                                        spans.push([
-                                            g("queue_wait_us"),
-                                            g("batch_wait_us"),
-                                            g("compute_us"),
-                                        ]);
-                                    }
-                                }
-                            }
-                        }
-                        503 => counts.overloaded += 1,
-                        _ => counts.http_errors += 1,
-                    }
-                }
-                (counts, latencies, spans)
-            })
-        })
-        .collect();
-
-    let mut total = Counts::default();
-    let mut latencies: Vec<u64> = Vec::with_capacity(cfg.requests as usize);
-    let mut spans: Vec<[u64; 3]> = Vec::new();
-    for t in threads {
-        let (c, mut l, mut s) =
-            t.join().map_err(|_| anyhow::anyhow!("loadgen thread panicked"))?;
-        total.sent += c.sent;
-        total.ok += c.ok;
-        total.overloaded += c.overloaded;
-        total.http_errors += c.http_errors;
-        total.transport_errors += c.transport_errors;
-        total.correct += c.correct;
-        total.labeled += c.labeled;
-        total.trace_sampled += c.trace_sampled;
-        latencies.append(&mut l);
-        spans.append(&mut s);
-    }
+    let (total, mut latencies, spans) = if cfg.event_loop {
+        run_event_loop(cfg, input_len, dataset.as_ref(), interval, path, t0)?
+    } else {
+        run_threaded(cfg, input_len, dataset, interval, path, t0)?
+    };
     let elapsed_s = t0.elapsed().as_secs_f64();
-    let scrape_after = scrape_stages(&cfg.addr).unwrap_or_default();
+    let after_text = scrape_metrics_text(&cfg.addr).unwrap_or_default();
+    let scrape_after = parse_stage_scrape(&after_text);
+    let server_open_conns_peak =
+        parse_gauge(&after_text, "emtopt_http_open_conns_peak").unwrap_or(0);
     let breakdown = stage_breakdown(&scrape_before, &scrape_after);
     let trace_inline_mean_us = if spans.is_empty() {
         [0.0; 3]
@@ -822,7 +820,667 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         trace_sample: cfg.trace_sample,
         trace_sampled: total.trace_sampled,
         trace_inline_mean_us,
+        event_loop: cfg.event_loop,
+        server_open_conns_peak,
     })
+}
+
+/// Thread-per-connection driver: each connection gets an OS thread that
+/// walks its striped slice of the schedule with blocking I/O.  Simple
+/// and accurate up to a few hundred connections; beyond that, use the
+/// epoll driver.
+fn run_threaded(
+    cfg: &LoadgenConfig,
+    input_len: usize,
+    dataset: Option<Dataset>,
+    interval: Duration,
+    path: &'static str,
+    t0: Instant,
+) -> Result<(Counts, Vec<u64>, Vec<[u64; 3]>)> {
+    let batch = cfg.batch;
+    let conns = cfg.connections as u64;
+    let base = cfg.requests / conns;
+    let extra = cfg.requests % conns;
+    let threads: Vec<_> = (0..conns)
+        .map(|c| {
+            let my_count = base + u64::from(c < extra);
+            let addr = cfg.addr.clone();
+            let dataset = dataset.clone();
+            let fixed_tier = cfg.tier;
+            let classify = cfg.classify;
+            let blocking = cfg.blocking;
+            let trace_sample = cfg.trace_sample as u64;
+            std::thread::spawn(move || -> (Counts, Vec<u64>, Vec<[u64; 3]>) {
+                let mut counts = Counts::default();
+                let mut latencies = Vec::with_capacity(my_count as usize);
+                let mut spans: Vec<[u64; 3]> = Vec::new();
+                let mut conn = connect_http(&addr);
+                let mut img = vec![0.0f32; input_len * batch];
+                let mut labels: Vec<usize> = Vec::with_capacity(batch);
+                for k in 0..my_count {
+                    // striped global index -> evenly interleaved schedule;
+                    // the body renders before the latency clock starts, so
+                    // p50/p95/p99 measure network + server, not client-side
+                    // JSON formatting
+                    let global = c + k * conns;
+                    let (body, traced) = build_request(
+                        global,
+                        batch,
+                        input_len,
+                        dataset.as_ref(),
+                        fixed_tier,
+                        blocking,
+                        trace_sample,
+                        &mut img,
+                        &mut labels,
+                    );
+                    let start = if interval.is_zero() {
+                        Instant::now()
+                    } else {
+                        let due = t0 + interval.mul_f64(global as f64);
+                        let now = Instant::now();
+                        if due > now {
+                            std::thread::sleep(due - now);
+                        }
+                        due
+                    };
+                    counts.sent += 1;
+                    // At-most-once submission with one reconnect: a failed
+                    // WRITE (nothing reached the server) is retried on a
+                    // fresh socket, so a connection the server closed costs
+                    // one reconnect, not the remaining schedule.  A lost
+                    // RESPONSE is never retried — the server may already
+                    // have executed the request, and a resend would break
+                    // the loadgen-report == /metrics reconciliation.
+                    let mut exchange = None;
+                    for _attempt in 0..2 {
+                        if conn.is_none() {
+                            conn = connect_http(&addr);
+                        }
+                        let Some(cn) = conn.as_mut() else { break };
+                        if cn.write_request("POST", path, body.as_bytes()).is_err() {
+                            conn = None; // dead socket, nothing submitted
+                            continue;
+                        }
+                        match cn.read_response(1 << 20) {
+                            Ok(r) => exchange = Some(r),
+                            Err(_) => conn = None,
+                        }
+                        break;
+                    }
+                    let (status, resp_body) = match exchange {
+                        Some(r) => r,
+                        None => {
+                            counts.transport_errors += 1;
+                            continue;
+                        }
+                    };
+                    let us = Instant::now()
+                        .saturating_duration_since(start)
+                        .as_micros() as u64;
+                    score_response(
+                        status,
+                        &resp_body,
+                        us,
+                        classify,
+                        &labels,
+                        traced,
+                        batch,
+                        &mut counts,
+                        &mut latencies,
+                        &mut spans,
+                    );
+                }
+                (counts, latencies, spans)
+            })
+        })
+        .collect();
+
+    let mut total = Counts::default();
+    let mut latencies: Vec<u64> = Vec::with_capacity(cfg.requests as usize);
+    let mut spans: Vec<[u64; 3]> = Vec::new();
+    for t in threads {
+        let (c, mut l, mut s) =
+            t.join().map_err(|_| anyhow::anyhow!("loadgen thread panicked"))?;
+        total.sent += c.sent;
+        total.ok += c.ok;
+        total.overloaded += c.overloaded;
+        total.http_errors += c.http_errors;
+        total.transport_errors += c.transport_errors;
+        total.correct += c.correct;
+        total.labeled += c.labeled;
+        total.trace_sampled += c.trace_sampled;
+        latencies.append(&mut l);
+        spans.append(&mut s);
+    }
+    Ok((total, latencies, spans))
+}
+
+// ---------------------------------------------------------------------------
+// epoll driver: the C10K client
+// ---------------------------------------------------------------------------
+
+/// Response-body cap for the epoll driver (matches the blocking
+/// driver's `read_response` limit).
+const CLIENT_MAX_BODY: usize = 1 << 20;
+
+/// Blocking connect (the schedule has not started, so connect time is
+/// on no latency path), then nonblocking for the readiness loop.
+fn connect_nonblocking(addr: &str) -> Option<TcpStream> {
+    let stream = TcpStream::connect(addr).ok()?;
+    let _ = stream.set_nodelay(true);
+    stream.set_nonblocking(true).ok()?;
+    Some(stream)
+}
+
+/// Metadata of a submitted, not-yet-answered request.
+struct Pending {
+    start: Instant,
+    traced: bool,
+    labels: Vec<usize>,
+}
+
+/// One nonblocking connection on the epoll driver.
+struct ClientConn {
+    /// `None` between a socket error and the reconnect, or for good
+    /// once the connection is retired without a socket.
+    stream: Option<TcpStream>,
+    parser: ResponseParser,
+    /// Unsent tail of the current request (head + body).
+    out: Vec<u8>,
+    out_pos: usize,
+    /// Requests completed or abandoned on this connection so far.
+    k: u64,
+    /// This connection's slice of the striped schedule.
+    my_count: u64,
+    inflight: Option<Pending>,
+    /// Reconnects since the last completed exchange — bounds the retry
+    /// spin against a server that keeps closing us (per-peer 429s).
+    attempts: u32,
+    interest: u32,
+    done: bool,
+}
+
+enum FlushOutcome {
+    Done,
+    Blocked,
+    Error,
+}
+
+/// The epoll client: every connection, one thread, one readiness loop.
+/// Mirrors the server's own event loop — level-triggered interest, a
+/// state-driven `pump` that is safe to run on spurious wakeups, and
+/// at-most-once request semantics identical to the threaded driver.
+struct ClientLoop<'a> {
+    addr: String,
+    path: &'static str,
+    dataset: Option<&'a Dataset>,
+    input_len: usize,
+    batch: usize,
+    conns: u64,
+    fixed_tier: Option<EnergyTier>,
+    classify: bool,
+    blocking: bool,
+    trace_sample: u64,
+    interval: Duration,
+    t0: Instant,
+    poller: Poller,
+    table: Vec<ClientConn>,
+    /// Connections still working their schedule.
+    active: usize,
+    counts: Counts,
+    latencies: Vec<u64>,
+    spans: Vec<[u64; 3]>,
+    /// Scratch image/label buffers (single thread, reused per build).
+    img: Vec<f32>,
+    labels: Vec<usize>,
+}
+
+impl ClientLoop<'_> {
+    fn run(&mut self) -> Result<()> {
+        let mut events = Poller::event_buf(1024);
+        while self.active > 0 {
+            // kick idle connections whose scheduled send time arrived,
+            // and find the earliest future send for the wait timeout
+            let mut next_due: Option<Instant> = None;
+            for idx in 0..self.table.len() {
+                if self.table[idx].done {
+                    continue;
+                }
+                if let Some(due) = self.pump(idx) {
+                    next_due = Some(match next_due {
+                        Some(d) if d < due => d,
+                        _ => due,
+                    });
+                }
+            }
+            if self.active == 0 {
+                break;
+            }
+            let timeout_ms = match next_due {
+                Some(due) => {
+                    let now = Instant::now();
+                    if due <= now {
+                        0
+                    } else {
+                        (due - now).as_millis().clamp(1, 100) as i32
+                    }
+                }
+                None => 100,
+            };
+            let n = self
+                .poller
+                .wait(&mut events, timeout_ms)
+                .map_err(|e| anyhow::anyhow!("epoll_wait: {e}"))?;
+            for ev in events.iter().take(n) {
+                let idx = ev.key() as usize;
+                let readiness = ev.readiness();
+                if idx >= self.table.len() || self.table[idx].done {
+                    continue;
+                }
+                if readiness & (EPOLLERR | EPOLLHUP) != 0 {
+                    self.conn_error(idx);
+                } else if readiness & (EPOLLIN | EPOLLRDHUP) != 0 {
+                    self.read_ready(idx);
+                }
+                if !self.table[idx].done {
+                    // EPOLLOUT and post-read progress both land here
+                    let _ = self.pump(idx);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Drive one connection's state machine until it blocks on the
+    /// socket, exhausts its schedule, or (paced mode) is not due yet —
+    /// then the due time is returned for the wait timeout.
+    fn pump(&mut self, idx: usize) -> Option<Instant> {
+        loop {
+            if self.table[idx].done {
+                return None;
+            }
+            if !self.table[idx].out.is_empty() {
+                match self.flush(idx) {
+                    FlushOutcome::Done => {}
+                    FlushOutcome::Blocked => {
+                        self.update_interest(idx);
+                        return None;
+                    }
+                    FlushOutcome::Error => {
+                        self.conn_error(idx);
+                        continue;
+                    }
+                }
+            }
+            if self.table[idx].inflight.is_some() {
+                // request fully written: progress now rides on EPOLLIN
+                self.update_interest(idx);
+                return None;
+            }
+            let (k, my_count) = {
+                let c = &self.table[idx];
+                (c.k, c.my_count)
+            };
+            if k >= my_count {
+                self.finish(idx);
+                return None;
+            }
+            if self.table[idx].stream.is_none() {
+                return None;
+            }
+            let global = idx as u64 + k * self.conns;
+            if !self.interval.is_zero() {
+                let due = self.t0 + self.interval.mul_f64(global as f64);
+                if due > Instant::now() {
+                    self.update_interest(idx);
+                    return Some(due);
+                }
+            }
+            self.submit(idx, global);
+            // loop: flush the fresh request right away
+        }
+    }
+
+    /// Build and enqueue request `global` on connection `idx`.
+    fn submit(&mut self, idx: usize, global: u64) {
+        let (body, traced) = build_request(
+            global,
+            self.batch,
+            self.input_len,
+            self.dataset,
+            self.fixed_tier,
+            self.blocking,
+            self.trace_sample,
+            &mut self.img,
+            &mut self.labels,
+        );
+        // latency clock: scheduled send time when pacing (coordinated-
+        // omission-corrected), actual send when closed-loop
+        let start = if self.interval.is_zero() {
+            Instant::now()
+        } else {
+            self.t0 + self.interval.mul_f64(global as f64)
+        };
+        self.counts.sent += 1;
+        let labels = self.labels.clone();
+        // byte-identical to HttpConn::write_request
+        let head = format!(
+            "POST {} HTTP/1.1\r\nhost: emtopt\r\ncontent-type: application/json\r\n\
+             content-length: {}\r\nconnection: keep-alive\r\n\r\n",
+            self.path,
+            body.len(),
+        );
+        let mut out = head.into_bytes();
+        out.extend_from_slice(body.as_bytes());
+        let c = &mut self.table[idx];
+        c.out = out;
+        c.out_pos = 0;
+        c.inflight = Some(Pending { start, traced, labels });
+    }
+
+    /// Write as much of the pending request as the socket accepts.
+    fn flush(&mut self, idx: usize) -> FlushOutcome {
+        let ClientConn {
+            stream,
+            out,
+            out_pos,
+            ..
+        } = &mut self.table[idx];
+        let Some(stream) = stream.as_mut() else {
+            return FlushOutcome::Error;
+        };
+        while *out_pos < out.len() {
+            match stream.write(&out[*out_pos..]) {
+                Ok(0) => return FlushOutcome::Error,
+                Ok(n) => *out_pos += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return FlushOutcome::Blocked,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => return FlushOutcome::Error,
+            }
+        }
+        out.clear();
+        *out_pos = 0;
+        FlushOutcome::Done
+    }
+
+    /// Drain readable bytes and score any completed responses.
+    fn read_ready(&mut self, idx: usize) {
+        let mut buf = [0u8; 64 * 1024];
+        let mut dead = false;
+        loop {
+            let n = {
+                let c = &mut self.table[idx];
+                let Some(stream) = c.stream.as_mut() else { return };
+                stream.read(&mut buf)
+            };
+            match n {
+                Ok(0) => {
+                    dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.table[idx].parser.feed(&buf[..n]);
+                    if n < buf.len() {
+                        break; // short read: socket drained
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    dead = true;
+                    break;
+                }
+            }
+        }
+        loop {
+            match self.table[idx].parser.try_next(CLIENT_MAX_BODY) {
+                Ok(Some((status, _headers, body))) => {
+                    let Some(p) = self.table[idx].inflight.take() else {
+                        // unsolicited response — e.g. the pre-rendered 429
+                        // a per-peer-capped accept sends before any
+                        // request.  Nothing of ours to score; the close
+                        // that follows lands in conn_error.
+                        continue;
+                    };
+                    let us = Instant::now()
+                        .saturating_duration_since(p.start)
+                        .as_micros() as u64;
+                    score_response(
+                        status,
+                        &body,
+                        us,
+                        self.classify,
+                        &p.labels,
+                        p.traced,
+                        self.batch,
+                        &mut self.counts,
+                        &mut self.latencies,
+                        &mut self.spans,
+                    );
+                    let c = &mut self.table[idx];
+                    c.k += 1;
+                    c.attempts = 0;
+                }
+                Ok(None) => break,
+                Err(_) => {
+                    dead = true;
+                    break;
+                }
+            }
+        }
+        if dead {
+            self.conn_error(idx);
+        }
+    }
+
+    /// Handle a broken socket: settle the in-flight request under
+    /// at-most-once semantics, then reconnect or retire.
+    fn conn_error(&mut self, idx: usize) {
+        let (had_inflight, retry_same) = {
+            let c = &self.table[idx];
+            let unsent = c.out_pos == 0 && !c.out.is_empty();
+            (
+                c.inflight.is_some(),
+                c.inflight.is_some() && unsent && c.attempts == 0,
+            )
+        };
+        if had_inflight && !retry_same {
+            // bytes (or the whole request) reached the wire: charge it
+            // and move on — a resend could double-execute
+            self.counts.transport_errors += 1;
+            let c = &mut self.table[idx];
+            c.inflight = None;
+            c.out.clear();
+            c.out_pos = 0;
+            c.k += 1;
+        }
+        {
+            let c = &mut self.table[idx];
+            if let Some(s) = c.stream.take() {
+                let _ = self.poller.remove(s.as_raw_fd());
+            }
+            c.parser = ResponseParser::new();
+            c.attempts += 1;
+        }
+        // a server that keeps closing us without progress must not
+        // spin: past the first idle reconnect, each further one
+        // forfeits a request
+        if !had_inflight {
+            let charge = {
+                let c = &mut self.table[idx];
+                if c.attempts > 1 && c.k < c.my_count {
+                    c.k += 1;
+                    true
+                } else {
+                    false
+                }
+            };
+            if charge {
+                self.counts.sent += 1;
+                self.counts.transport_errors += 1;
+            }
+        }
+        if self.table[idx].inflight.is_none()
+            && self.table[idx].k >= self.table[idx].my_count
+        {
+            self.finish(idx);
+            return;
+        }
+        match connect_nonblocking(&self.addr) {
+            Some(stream) => {
+                let fd = stream.as_raw_fd();
+                if self
+                    .poller
+                    .add(fd, EPOLLIN | EPOLLRDHUP, idx as u64)
+                    .is_ok()
+                {
+                    let c = &mut self.table[idx];
+                    c.stream = Some(stream);
+                    c.interest = EPOLLIN | EPOLLRDHUP;
+                    // a kept retry (out intact, out_pos == 0) flushes on
+                    // the caller's next pump pass
+                } else {
+                    self.retire_failed(idx);
+                }
+            }
+            None => self.retire_failed(idx),
+        }
+    }
+
+    /// Reconnect failed: charge everything left on this connection's
+    /// schedule and retire it.
+    fn retire_failed(&mut self, idx: usize) {
+        if self.table[idx].inflight.take().is_some() {
+            // the kept retry has nowhere to go now
+            self.counts.transport_errors += 1;
+            let c = &mut self.table[idx];
+            c.out.clear();
+            c.out_pos = 0;
+            c.k += 1;
+        }
+        let left = {
+            let c = &mut self.table[idx];
+            let left = c.my_count.saturating_sub(c.k);
+            c.k = c.my_count;
+            left
+        };
+        self.counts.sent += left;
+        self.counts.transport_errors += left;
+        self.finish(idx);
+    }
+
+    /// Retire a connection whose schedule is exhausted.  The socket (if
+    /// still open) is deregistered but held open until the run returns,
+    /// so "N concurrent connections" holds for the whole run — the
+    /// server's open-conns gauge sees the full fleet.
+    fn finish(&mut self, idx: usize) {
+        let c = &mut self.table[idx];
+        if c.done {
+            return;
+        }
+        c.done = true;
+        c.out.clear();
+        c.out_pos = 0;
+        c.inflight = None;
+        if let Some(s) = &c.stream {
+            let _ = self.poller.remove(s.as_raw_fd());
+        }
+        self.active -= 1;
+    }
+
+    /// Level-triggered interest: always read (responses, server close),
+    /// write only while a request tail is pending.
+    fn update_interest(&mut self, idx: usize) {
+        let c = &mut self.table[idx];
+        let Some(stream) = &c.stream else { return };
+        let want = EPOLLIN | EPOLLRDHUP | if c.out.is_empty() { 0 } else { EPOLLOUT };
+        if want != c.interest
+            && self
+                .poller
+                .modify(stream.as_raw_fd(), want, idx as u64)
+                .is_ok()
+        {
+            c.interest = want;
+        }
+    }
+}
+
+/// Epoll driver entry point: connect the whole fleet up front (the
+/// server's open-connection gauge peaks at the full count before the
+/// first request is sent), then run the readiness loop to completion.
+fn run_event_loop(
+    cfg: &LoadgenConfig,
+    input_len: usize,
+    dataset: Option<&Dataset>,
+    interval: Duration,
+    path: &'static str,
+    t0: Instant,
+) -> Result<(Counts, Vec<u64>, Vec<[u64; 3]>)> {
+    let conns = cfg.connections as u64;
+    let base = cfg.requests / conns;
+    let extra = cfg.requests % conns;
+    let mut lp = ClientLoop {
+        addr: cfg.addr.clone(),
+        path,
+        dataset,
+        input_len,
+        batch: cfg.batch,
+        conns,
+        fixed_tier: cfg.tier,
+        classify: cfg.classify,
+        blocking: cfg.blocking,
+        trace_sample: cfg.trace_sample as u64,
+        interval,
+        t0,
+        poller: Poller::new().map_err(|e| anyhow::anyhow!("epoll_create1: {e}"))?,
+        table: Vec::with_capacity(cfg.connections),
+        active: 0,
+        counts: Counts::default(),
+        latencies: Vec::with_capacity(cfg.requests as usize),
+        spans: Vec::new(),
+        img: vec![0.0f32; input_len * cfg.batch],
+        labels: Vec::with_capacity(cfg.batch),
+    };
+    for c in 0..conns {
+        let my_count = base + u64::from(c < extra);
+        let mut conn = ClientConn {
+            stream: None,
+            parser: ResponseParser::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            k: my_count, // overwritten to 0 on a live connect
+            my_count,
+            inflight: None,
+            attempts: 0,
+            interest: EPOLLIN | EPOLLRDHUP,
+            done: true,
+        };
+        match connect_nonblocking(&cfg.addr) {
+            Some(stream) if my_count > 0 => {
+                lp.poller
+                    .add(stream.as_raw_fd(), EPOLLIN | EPOLLRDHUP, c)
+                    .map_err(|e| anyhow::anyhow!("epoll_ctl add: {e}"))?;
+                conn.stream = Some(stream);
+                conn.k = 0;
+                conn.done = false;
+                lp.active += 1;
+            }
+            Some(stream) => {
+                // zero-request connection (connections > requests): it
+                // still holds a socket open for the concurrency claim
+                conn.stream = Some(stream);
+            }
+            None => {
+                // never connected: its whole slice is transport errors
+                lp.counts.sent += my_count;
+                lp.counts.transport_errors += my_count;
+            }
+        }
+        lp.table.push(conn);
+    }
+    lp.run()?;
+    Ok((lp.counts, lp.latencies, lp.spans))
 }
 
 // ---------------------------------------------------------------------------
@@ -1149,6 +1807,44 @@ mod tests {
             body_for(&[1.0], EnergyTier::Normal, false, false),
             "{\"image\":[1],\"tier\":\"normal\"}"
         );
+    }
+
+    #[test]
+    fn parse_gauge_matches_exact_name_only() {
+        let text = "# HELP emtopt_http_open_conns Connections currently open.\n\
+                    emtopt_http_open_conns 3\n\
+                    emtopt_http_open_conns_peak 1207\n";
+        // the un-suffixed name must not swallow the `_peak` line
+        assert_eq!(parse_gauge(text, "emtopt_http_open_conns"), Some(3));
+        assert_eq!(parse_gauge(text, "emtopt_http_open_conns_peak"), Some(1207));
+        assert_eq!(parse_gauge(text, "emtopt_http_requests_total"), None);
+    }
+
+    #[test]
+    fn report_carries_concurrency_fields() {
+        let r = LoadgenReport {
+            connections: 10_000,
+            event_loop: true,
+            server_open_conns_peak: 10_002,
+            ..Default::default()
+        };
+        let back = Json::parse(&r.to_json().render()).unwrap();
+        assert_eq!(*back.get("event_loop").unwrap(), Json::Bool(true));
+        assert_eq!(
+            back.get("server_open_conns_peak").unwrap().as_u64().unwrap(),
+            10_002
+        );
+        assert!(r.render().contains("(event loop)"));
+        assert!(r.render().contains("server open-connection peak: 10002"));
+        // the threaded default keeps both fields but flags the driver
+        let plain = LoadgenReport::default();
+        let back = Json::parse(&plain.to_json().render()).unwrap();
+        assert_eq!(*back.get("event_loop").unwrap(), Json::Bool(false));
+        assert_eq!(
+            back.get("server_open_conns_peak").unwrap().as_u64().unwrap(),
+            0
+        );
+        assert!(!plain.render().contains("(event loop)"));
     }
 
     #[test]

@@ -1,19 +1,29 @@
 //! HTTP serving front end over the native crossbar engine.
 //!
 //! The network surface of the coordinator: a dependency-free HTTP/1.1
-//! server (`std::net::TcpListener`, thread-per-connection pool with
-//! keep-alive) in front of ONE unified [`scheduler::Engine`] with a
-//! lane per **energy tier** — a single shared worker pool over
-//! per-tier bounded queues, all reading one immutable
-//! `Arc<NoisyModel>`.
+//! server built around ONE raw-`epoll` readiness loop (no tokio — this
+//! build is offline; see [`epoll`]) in front of ONE unified
+//! [`scheduler::Engine`] with a lane per **energy tier** — a single
+//! shared worker pool over per-tier bounded queues, all reading one
+//! immutable `Arc<NoisyModel>`.
 //!
 //! ```text
-//!   TCP clients ──> acceptor ──> conn pool ──> route ──> tier queue
-//!                                                            │
-//!                                              shared worker pool
-//!                                        (work stealing + rebalancer
-//!                                             + energy governor)
+//!   TCP clients ──> epoll event loop ──> route ──> tier queue
+//!                      ▲        │                      │
+//!                      │        │ submit_async  shared worker pool
+//!                 wakeup fd     │              (work stealing + rebal.
+//!                      │        ▼                 + energy governor)
+//!                      └── completion queue ◄─── Reply push
 //! ```
+//!
+//! The loop owns every socket as a nonblocking fd: it incrementally
+//! assembles requests into per-connection parsers ([`http::RequestParser`]),
+//! hands complete requests to the scheduler through the non-blocking
+//! completion-queue path, and streams finished responses back out as
+//! `EPOLLOUT` allows — a slow reader parks its bytes on the loop, never
+//! a compute worker.  Concurrency is bounded by `--max-conns` (file
+//! descriptors), not by a thread pool: the C10K regime the ROADMAP's
+//! "millions of users" north star implies.
 //!
 //! Endpoints:
 //!
@@ -60,22 +70,29 @@
 //! the engine's governor additionally sheds the lowest tiers with a
 //! typed `EnergyShed` (`503` + window-decay `Retry-After`) whenever the
 //! rolling observed uJ/s runs over the fleet budget — the paper's
-//! accuracy-per-joule contract as admission control.  The acceptor
-//! additionally sheds whole connections
-//! with `503` when all handler threads are busy and the hand-off queue
-//! is full, and answers `429 Too Many Requests` to a peer IP holding
-//! more than `max_conns_per_peer` simultaneous connections.  Overload
-//! never grows memory without bound.
+//! accuracy-per-joule contract as admission control.  The event loop
+//! additionally sheds whole connections with `503` + `Retry-After` when
+//! the global `max_conns` cap is reached (the live count and its
+//! high-water mark are the `emtopt_http_open_conns{,_peak}` gauges on
+//! `/metrics`), and answers `429 Too Many Requests` to a peer IP
+//! holding more than `max_conns_per_peer` simultaneous connections.
+//! Slow or stalled peers cost one fd and a parked buffer, never a
+//! worker: a trickled request head is swept with `400` after
+//! `request_timeout`, an idle keep-alive connection or a peer that
+//! stopped reading its response after `idle_timeout`.  Overload never
+//! grows memory without bound.
 
+pub mod epoll;
 pub mod http;
 pub mod loadgen;
 pub mod prom;
 
 use std::collections::HashMap;
+use std::io::{ErrorKind, Read as _, Write as _};
 use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{self, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::router::{
@@ -86,12 +103,13 @@ use crate::device::DeviceConfig;
 use crate::energy::{EnergyModel, EnergyPlan, LayerPlan, PlanSource, ReadMode};
 use crate::inference::NoisyModel;
 use crate::models::{LayerMeta, ModelDesc};
-use crate::scheduler::{self, EnergyShed, EngineSnapshot, LaneSpec, Reply};
+use crate::scheduler::{self, CompletionQueue, EnergyShed, EngineSnapshot, LaneSpec, Reply};
 use crate::trace::{self, FlightRecorder, SpanRecord, Stage, TraceContext};
 use crate::util::json::Json;
 use crate::Result;
 
-use self::http::{HttpConn, HttpRequest, PayloadTooLarge, RequestOutcome, Response};
+use self::epoll::{Poller, WakeFd, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP};
+use self::http::{render_response, HttpRequest, PayloadTooLarge, RequestParser, Response};
 
 // ---------------------------------------------------------------------------
 // energy tiers
@@ -485,6 +503,36 @@ impl TieredEngine {
     ) -> Result<Reply> {
         self.clients[tier.index()].infer_batch_traced(images, block, tctx)
     }
+
+    /// Non-blocking submit whose `Reply` lands on `cq` tagged with `key`
+    /// (the event loop's path: the caller never waits).  Admission
+    /// errors (`Overloaded` / `EnergyShed`, or the parked-backpressure
+    /// admit when `block`) are still returned synchronously — they need
+    /// the live lane stats for their `Retry-After` hint.
+    pub fn infer_completion(
+        &self,
+        tier: EnergyTier,
+        image: Vec<f32>,
+        block: bool,
+        tctx: &TraceContext,
+        cq: &Arc<CompletionQueue>,
+        key: u64,
+    ) -> Result<()> {
+        self.clients[tier.index()].infer_completion(image, block, tctx, cq, key)
+    }
+
+    /// Multi-image flavour of [`TieredEngine::infer_completion`].
+    pub fn infer_batch_completion(
+        &self,
+        tier: EnergyTier,
+        images: Vec<f32>,
+        block: bool,
+        tctx: &TraceContext,
+        cq: &Arc<CompletionQueue>,
+        key: u64,
+    ) -> Result<()> {
+        self.clients[tier.index()].infer_batch_completion(images, block, tctx, cq, key)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -497,21 +545,25 @@ pub struct HttpServerConfig {
     /// Bind address, e.g. `127.0.0.1:8080` (port 0 picks an ephemeral
     /// port; read it back from [`ServerHandle::addr`]).
     pub addr: String,
-    /// Connection-handler threads; each owns one connection at a time.
-    pub conn_threads: usize,
-    /// Accepted connections waiting for a free handler before the
-    /// acceptor sheds them with `503`.
-    pub conn_backlog: usize,
+    /// Global cap on simultaneously open connections.  Above it the
+    /// event loop answers new connections with a typed `503` +
+    /// `Retry-After` and closes them.  The live count and its
+    /// high-water mark are the `emtopt_http_open_conns{,_peak}` gauges.
+    pub max_conns: usize,
     /// Request body cap (`413` above it).
     pub max_body_bytes: usize,
-    /// Socket read timeout; bounds how quickly idle keep-alive
-    /// connections notice a shutdown.
-    pub read_timeout: Duration,
+    /// Sweep timeout for idle keep-alive connections and for peers that
+    /// stopped reading their response (stalled writes).
+    pub idle_timeout: Duration,
+    /// Max age of a partially received request before the loop answers
+    /// `400` and closes — the slowloris guard: a peer trickling header
+    /// bytes costs one fd and a small buffer, never a worker.
+    pub request_timeout: Duration,
     /// Max simultaneous connections accepted from one peer IP; above it
-    /// the acceptor answers `429 Too Many Requests` and closes (typed
+    /// the loop answers `429 Too Many Requests` and closes (typed
     /// rejection, counted on `/metrics`).  Keep-alive clients hold their
-    /// connection between requests, so this bounds per-peer handler
-    /// capture, not request rate.
+    /// connection between requests, so this bounds per-peer fd capture,
+    /// not request rate.
     pub max_conns_per_peer: usize,
     /// Per-layer trained rho vector for the tier plans
     /// ([`load_trained_rho`]; `serve-http --model-store`).  `None` uses
@@ -526,14 +578,16 @@ impl Default for HttpServerConfig {
     fn default() -> Self {
         HttpServerConfig {
             addr: "127.0.0.1:8080".into(),
-            conn_threads: 16,
-            conn_backlog: 64,
+            // C10K by default: a connection is one fd + parser/write
+            // buffers on the loop, not a thread
+            max_conns: 10_000,
             // Must fit the batches the engine default advertises on
             // /healthz: max_client_batch (64) CIFAR images are ~2 MiB of
             // JSON (~30 KiB per image), so 8 MiB leaves headroom —
             // a server must never 413 a batch it claims to accept.
             max_body_bytes: 8 << 20,
-            read_timeout: Duration::from_millis(250),
+            idle_timeout: Duration::from_secs(60),
+            request_timeout: Duration::from_secs(5),
             // generous: CI drives 8+ loadgen connections from localhost;
             // the cap is a hostile-peer guard, not a fairness scheduler
             max_conns_per_peer: 64,
@@ -557,9 +611,26 @@ pub struct HttpStats {
     pub too_many_requests_429: AtomicU64,
     pub internal_500: AtomicU64,
     pub overloaded_503: AtomicU64,
+    /// Connections currently open on the event loop (gauge).
+    pub open_conns: AtomicU64,
+    /// High-water mark of [`HttpStats::open_conns`] — a monotone peak,
+    /// so a scrape after the burst still sees the achieved concurrency.
+    pub open_conns_peak: AtomicU64,
 }
 
 impl HttpStats {
+    /// One connection entered the loop: bump the gauge and fold it into
+    /// the peak.
+    pub fn conn_opened(&self) {
+        let now = self.open_conns.fetch_add(1, Ordering::Relaxed) + 1;
+        self.open_conns_peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// One connection left the loop.
+    pub fn conn_closed(&self) {
+        self.open_conns.fetch_sub(1, Ordering::Relaxed);
+    }
+
     pub fn record(&self, status: u16) {
         let cell = match status {
             200 => &self.ok_200,
@@ -595,17 +666,6 @@ impl HttpStats {
     }
 }
 
-/// A request's completed engine span awaiting its final two fields —
-/// `write_us` and `total_us` can only be measured after the response
-/// bytes hit the socket, so [`route`] hands the record back to
-/// [`serve_connection`], which completes it and feeds the flight
-/// recorder + the tier's write-stage histogram.
-struct PendingTrace {
-    span: SpanRecord,
-    /// Monotonic anchor at HTTP parse start (the `total_us` origin).
-    t_start: Instant,
-}
-
 struct ServerCtx {
     engine: TieredEngine,
     http: HttpStats,
@@ -614,29 +674,16 @@ struct ServerCtx {
     addr: SocketAddr,
     /// Ring of the last N complete request traces (`GET /admin/trace`).
     recorder: FlightRecorder,
-    /// Live connection count per peer IP (incremented at accept, after
-    /// the cap check; decremented when the owning handler finishes the
-    /// connection).  Entries are removed at zero so the map stays
-    /// bounded by the number of distinct live peers.
-    peers: Mutex<HashMap<IpAddr, u32>>,
-    /// See [`HttpServerConfig::max_conns_per_peer`].
-    max_conns_per_peer: usize,
-    /// Free handler capacity not yet claimed by an accepted connection.
-    /// The acceptor *reserves* a unit (CAS decrement) before queueing a
-    /// connection and sheds with `503` when none is left; a handler
-    /// releases its unit when it finishes a connection.  Every queued
-    /// connection therefore has a handler that will reach it — with
-    /// keep-alive, a handler can own its connection indefinitely, so
-    /// queueing without a reservation would hang the client, not delay
-    /// it.
-    idle_handlers: AtomicU64,
+    /// Event-loop wakeup: completion-queue pushes (from scheduler
+    /// workers) and shutdown requests (from any thread) write here so
+    /// the loop returns from `epoll_wait` immediately.
+    wake: Arc<WakeFd>,
 }
 
 /// Handle to a running server: bound address, stats, graceful shutdown.
 pub struct ServerHandle {
     ctx: Arc<ServerCtx>,
-    acceptor: Option<std::thread::JoinHandle<()>>,
-    conn_handles: Vec<std::thread::JoinHandle<()>>,
+    event_loop: Option<std::thread::JoinHandle<()>>,
     engine_handles: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -685,27 +732,25 @@ impl ServerHandle {
         self.ctx.shutdown.load(Ordering::SeqCst)
     }
 
-    /// Request a shutdown without consuming the handle (the acceptor is
-    /// woken; call [`ServerHandle::shutdown`] to join everything).  The
-    /// engine enters drain mode immediately: rebalance moves freeze and
-    /// queued work flushes highest-tier-first.
+    /// Request a shutdown without consuming the handle (the event loop
+    /// is woken; call [`ServerHandle::shutdown`] to join everything).
+    /// The engine enters drain mode immediately: rebalance moves freeze
+    /// and queued work flushes highest-tier-first.
     pub fn request_shutdown(&self) {
         self.ctx.shutdown.store(true, Ordering::SeqCst);
         self.ctx.engine.begin_drain();
-        wake_acceptor(self.ctx.addr);
+        self.ctx.wake.wake();
     }
 
-    /// Graceful shutdown: stop accepting, drain handler threads, stop the
-    /// engine lanes, and join every thread.
+    /// Graceful shutdown: stop accepting, flush in-flight responses (the
+    /// loop's bounded drain), stop the engine lanes, and join every
+    /// thread.
     pub fn shutdown(mut self) -> Result<()> {
         self.request_shutdown();
-        if let Some(h) = self.acceptor.take() {
-            h.join().map_err(|_| anyhow::anyhow!("acceptor panicked"))?;
+        if let Some(h) = self.event_loop.take() {
+            h.join().map_err(|_| anyhow::anyhow!("event loop panicked"))?;
         }
-        for h in self.conn_handles.drain(..) {
-            h.join().map_err(|_| anyhow::anyhow!("connection handler panicked"))?;
-        }
-        // Handler threads are gone, so this is the last reference to the
+        // The loop is gone, so this is the last reference to the
         // context; dropping it drops the lane clients, which stops the
         // engine batchers and workers.
         drop(self.ctx);
@@ -716,118 +761,19 @@ impl ServerHandle {
     }
 }
 
-/// Atomically claim one unit of free handler capacity (false when none
-/// is left — the caller sheds the connection instead of queueing it).
-fn reserve_idle_handler(gauge: &AtomicU64) -> bool {
-    let mut cur = gauge.load(Ordering::SeqCst);
-    loop {
-        if cur == 0 {
-            return false;
-        }
-        match gauge.compare_exchange(cur, cur - 1, Ordering::SeqCst, Ordering::SeqCst) {
-            Ok(_) => return true,
-            Err(actual) => cur = actual,
-        }
-    }
-}
-
-/// Poke the acceptor out of its blocking `accept` so it can observe the
-/// shutdown flag.  An unspecified bind IP (0.0.0.0 / ::) is not
-/// connectable on every platform, so the poke targets loopback instead.
-fn wake_acceptor(addr: SocketAddr) {
-    let mut target = addr;
-    if target.ip().is_unspecified() {
-        target.set_ip(match target {
-            SocketAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
-            SocketAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
-        });
-    }
-    let _ = TcpStream::connect_timeout(&target, Duration::from_millis(200));
-}
-
-/// Best-effort graceful close after a response the peer must still be
-/// able to read: closing a socket with unread request bytes in its
-/// receive queue makes the kernel send RST, which can destroy the
-/// in-flight response — so signal end-of-response with a write shutdown
-/// and swallow (bounded) whatever the peer already sent.
-fn drain_and_close(stream: TcpStream) {
-    use std::io::Read as _;
-    let mut stream = stream;
-    let _ = stream.shutdown(std::net::Shutdown::Write);
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(10)));
-    let mut sink = [0u8; 4096];
-    for _ in 0..16 {
-        match stream.read(&mut sink) {
-            Ok(0) | Err(_) => break,
-            Ok(_) => {}
-        }
-    }
-}
-
-/// Connection-level load shedding: best-effort `503` (with a minimal
-/// back-off hint — no lane context exists at the acceptor), then
-/// [`drain_and_close`].  Runs on a short-lived throwaway thread:
-/// shedding happens exactly when the server is saturated, and the
-/// acceptor must keep accepting (to shed the next connection too)
-/// rather than block on a slow peer.
-fn shed_connection(ctx: &ServerCtx, stream: TcpStream) {
-    ctx.http.record(503);
-    std::thread::spawn(move || {
-        let mut conn = HttpConn::new(stream);
-        let _ = conn.write_response(
-            &Response::error_json(503, "server overloaded: all handlers busy")
-                .with_retry_after(1),
-            false,
-        );
-        drain_and_close(conn.into_inner());
-    });
-}
-
-/// Per-peer cap rejection: typed `429` with a back-off hint, then
-/// [`drain_and_close`] — same throwaway-thread discipline as
-/// [`shed_connection`].  Unlike `503` this is the peer's fault: it must
-/// close (or reuse) existing connections, not retry with more.
-fn reject_peer_connection(ctx: &ServerCtx, stream: TcpStream, cap: usize) {
-    ctx.http.record(429);
-    std::thread::spawn(move || {
-        let mut conn = HttpConn::new(stream);
-        let _ = conn.write_response(
-            &Response::error_json(
-                429,
-                &format!("too many connections from this peer (cap {cap})"),
-            )
-            .with_retry_after(1),
-            false,
-        );
-        drain_and_close(conn.into_inner());
-    });
-}
-
-/// Drop one unit of a peer's live-connection count (removing the entry
-/// at zero so the map stays bounded).
-fn release_peer(peers: &Mutex<HashMap<IpAddr, u32>>, ip: Option<IpAddr>) {
-    let Some(ip) = ip else { return };
-    let mut map = peers.lock().expect("peer map poisoned");
-    if let Some(n) = map.get_mut(&ip) {
-        *n -= 1;
-        if *n == 0 {
-            map.remove(&ip);
-        }
-    }
-}
-
-/// Bind, spawn the engine lanes + connection pool + acceptor, and return
+/// Bind, spawn the engine lanes + the epoll event loop, and return
 /// immediately with a [`ServerHandle`].
 pub fn serve_http(model: Arc<NoisyModel>, cfg: HttpServerConfig) -> Result<ServerHandle> {
-    anyhow::ensure!(cfg.conn_threads > 0, "need at least one connection thread");
-    anyhow::ensure!(cfg.conn_backlog > 0, "conn_backlog must be positive");
+    anyhow::ensure!(cfg.max_conns > 0, "max_conns must be positive");
     anyhow::ensure!(cfg.max_conns_per_peer > 0, "max_conns_per_peer must be positive");
     let (engine, engine_handles) =
         TieredEngine::start(model, &cfg.engine, cfg.trained_rho.as_deref())?;
 
     let listener = TcpListener::bind(&cfg.addr)
         .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
+    listener.set_nonblocking(true)?;
     let addr = listener.local_addr()?;
+    let wake = Arc::new(WakeFd::new().map_err(|e| anyhow::anyhow!("eventfd: {e}"))?);
     let ctx = Arc::new(ServerCtx {
         engine,
         http: HttpStats::default(),
@@ -835,154 +781,746 @@ pub fn serve_http(model: Arc<NoisyModel>, cfg: HttpServerConfig) -> Result<Serve
         started: Instant::now(),
         addr,
         recorder: FlightRecorder::new(trace::DEFAULT_FLIGHT_CAPACITY),
-        peers: Mutex::new(HashMap::new()),
-        max_conns_per_peer: cfg.max_conns_per_peer,
-        // Starts at pool size so connections accepted before the handler
-        // threads' first park are queued, never spuriously shed.
-        idle_handlers: AtomicU64::new(cfg.conn_threads as u64),
+        wake,
     });
 
-    // Hand accepted sockets to a fixed pool of handler threads over a
-    // bounded queue.  The acceptor sheds with 503 when no handler is
-    // idle (see `ServerCtx::idle_handlers`); the queue bound is the
-    // backstop for the gauge's race window.
-    let (conn_tx, conn_rx) = mpsc::sync_channel::<(TcpStream, Option<IpAddr>)>(cfg.conn_backlog);
-    let conn_rx = Arc::new(Mutex::new(conn_rx));
-    let mut conn_handles = Vec::with_capacity(cfg.conn_threads);
-    for _ in 0..cfg.conn_threads {
-        let ctx = ctx.clone();
-        let conn_rx = conn_rx.clone();
-        let read_timeout = cfg.read_timeout;
-        let max_body = cfg.max_body_bytes;
-        conn_handles.push(std::thread::spawn(move || loop {
-            let stream = {
-                let guard = conn_rx.lock().expect("connection queue poisoned");
-                guard.recv()
-            };
-            let (stream, peer_ip) = match stream {
-                Ok(s) => s,
-                Err(_) => return, // acceptor gone
-            };
-            // the acceptor already reserved this handler's capacity unit
-            // and charged the peer's connection count
-            serve_connection(&ctx, stream, read_timeout, max_body);
-            release_peer(&ctx.peers, peer_ip);
-            ctx.idle_handlers.fetch_add(1, Ordering::SeqCst);
-        }));
-    }
-
-    let acceptor_ctx = ctx.clone();
-    let acceptor = std::thread::spawn(move || {
-        for stream in listener.incoming() {
-            if acceptor_ctx.shutdown.load(Ordering::SeqCst) {
-                return; // drops conn_tx -> handlers drain and exit
-            }
-            let stream = match stream {
-                Ok(s) => s,
-                Err(_) => continue,
-            };
-            acceptor_ctx.http.connections.fetch_add(1, Ordering::Relaxed);
-            // Per-peer cap first: a peer over its connection budget gets
-            // a typed 429 before it can claim handler capacity.  The
-            // count is charged here and released by the handler that
-            // finishes the connection.
-            let peer_ip = stream.peer_addr().ok().map(|a| a.ip());
-            if let Some(ip) = peer_ip {
-                let mut peers = acceptor_ctx.peers.lock().expect("peer map poisoned");
-                let n = peers.entry(ip).or_insert(0);
-                if *n as usize >= acceptor_ctx.max_conns_per_peer {
-                    drop(peers);
-                    reject_peer_connection(&acceptor_ctx, stream, acceptor_ctx.max_conns_per_peer);
-                    continue;
-                }
-                *n += 1;
-            }
-            // Reserve a free handler before queueing (see
-            // `ServerCtx::idle_handlers`); shed when none is left.
-            if !reserve_idle_handler(&acceptor_ctx.idle_handlers) {
-                release_peer(&acceptor_ctx.peers, peer_ip);
-                shed_connection(&acceptor_ctx, stream);
-                continue;
-            }
-            match conn_tx.try_send((stream, peer_ip)) {
-                Ok(()) => {}
-                Err(TrySendError::Full((stream, peer_ip))) => {
-                    // return the unused reservation and peer charge
-                    acceptor_ctx.idle_handlers.fetch_add(1, Ordering::SeqCst);
-                    release_peer(&acceptor_ctx.peers, peer_ip);
-                    shed_connection(&acceptor_ctx, stream);
-                }
-                Err(TrySendError::Disconnected(_)) => return,
-            }
-        }
-    });
+    // Construct (and register fds) here so an epoll failure surfaces as
+    // a startup error, not a dead server.
+    let el = EventLoop::new(
+        ctx.clone(),
+        listener,
+        LoopConfig {
+            max_conns: cfg.max_conns,
+            max_conns_per_peer: cfg.max_conns_per_peer,
+            max_body: cfg.max_body_bytes,
+            idle_timeout: cfg.idle_timeout,
+            request_timeout: cfg.request_timeout,
+        },
+    )?;
+    let event_loop = std::thread::Builder::new()
+        .name("emtopt-epoll".into())
+        .spawn(move || el.run())?;
 
     Ok(ServerHandle {
         ctx,
-        acceptor: Some(acceptor),
-        conn_handles,
+        event_loop: Some(event_loop),
         engine_handles,
     })
 }
 
-/// Serve one connection until close, protocol error, or shutdown.
-fn serve_connection(
-    ctx: &ServerCtx,
-    stream: TcpStream,
-    read_timeout: Duration,
+// ---------------------------------------------------------------------------
+// epoll event loop
+// ---------------------------------------------------------------------------
+
+/// `epoll_wait` token of the listening socket.
+const TOKEN_LISTENER: u64 = 0;
+/// `epoll_wait` token of the wakeup eventfd.
+const TOKEN_WAKE: u64 = 1;
+/// Connection tokens start here: token = slot index + `TOKEN_BASE`.
+const TOKEN_BASE: u64 = 2;
+/// `epoll_wait` timeout: bounds sweep latency and shutdown-flag checks
+/// when no fd fires (wakes normally come through the eventfd).
+const TICK_MS: i32 = 100;
+/// How often the timeout sweep scans connections.
+const SWEEP_EVERY: Duration = Duration::from_millis(250);
+/// How long a graceful shutdown waits for in-flight compute + flushes.
+const DRAIN_DEADLINE: Duration = Duration::from_secs(5);
+
+/// Event-loop knobs (the connection-level subset of
+/// [`HttpServerConfig`]).
+struct LoopConfig {
+    max_conns: usize,
+    max_conns_per_peer: usize,
     max_body: usize,
-) {
-    let _ = stream.set_read_timeout(Some(read_timeout));
-    // A peer that stops reading (full kernel send buffer) must error the
-    // handler out of write_all eventually, or shutdown could never join
-    // this thread.
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
-    let _ = stream.set_nodelay(true);
-    let mut conn = HttpConn::new(stream);
-    loop {
-        if ctx.shutdown.load(Ordering::SeqCst) {
+    idle_timeout: Duration,
+    request_timeout: Duration,
+}
+
+/// One admitted request in flight on the scheduler: everything needed
+/// to render its response when the `Reply` lands on the completion
+/// queue (the connection keeps no thread waiting).
+struct Inflight {
+    keep_alive: bool,
+    classify: bool,
+    trace_echo: bool,
+    batch: bool,
+    tier: EnergyTier,
+    /// Monotonic anchor at request parse start (the `total_us` origin).
+    t_start: Instant,
+}
+
+/// A traced response being flushed: `write_us` spans completion-enqueue
+/// to last-byte-flushed — on a parked (EPOLLOUT) write-back that
+/// includes the whole park, which is the point: the write stage
+/// measures delivery, not a single syscall.
+struct PendingWrite {
+    span: SpanRecord,
+    t_start: Instant,
+    t_enqueue: Instant,
+}
+
+/// Per-connection state machine on the loop.  A connection is EITHER
+/// reading a request, awaiting its completion, or flushing its response
+/// — never more than one request in flight per connection (pipelined
+/// bytes wait in the parser).
+struct Conn {
+    stream: TcpStream,
+    peer_ip: Option<IpAddr>,
+    /// Whether this connection was charged against its peer's cap
+    /// (rejected connections are not).
+    charged: bool,
+    parser: RequestParser,
+    out: Vec<u8>,
+    out_pos: usize,
+    awaiting: Option<Inflight>,
+    pending_write: Option<PendingWrite>,
+    close_after_flush: bool,
+    /// Peer shut down its write half (EOF / RDHUP): serve what is
+    /// already buffered, then close.
+    read_closed: bool,
+    /// Currently registered epoll interest mask.
+    interest: u32,
+    last_progress: Instant,
+    /// When the currently-incomplete request's first byte arrived
+    /// (slowloris sweep anchor); `None` between requests.
+    partial_since: Option<Instant>,
+}
+
+struct Slot {
+    conn: Option<Conn>,
+    /// Bumped on close so a completion for a dead connection (stale
+    /// key) can never reach the slot's next tenant.
+    generation: u32,
+}
+
+enum SweepAction {
+    Drop,
+    Timeout400,
+}
+
+/// The readiness loop: owns every socket, the slab of connection
+/// state, and the completion queue the scheduler posts `Reply`s to.
+struct EventLoop {
+    ctx: Arc<ServerCtx>,
+    cfg: LoopConfig,
+    poller: Poller,
+    listener: TcpListener,
+    cq: Arc<CompletionQueue>,
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+    /// Live connection count per peer IP (entries removed at zero so
+    /// the map stays bounded by distinct live peers).
+    peers: HashMap<IpAddr, u32>,
+    open: usize,
+}
+
+impl EventLoop {
+    fn new(ctx: Arc<ServerCtx>, listener: TcpListener, cfg: LoopConfig) -> Result<EventLoop> {
+        let poller = Poller::new().map_err(|e| anyhow::anyhow!("epoll_create1: {e}"))?;
+        poller
+            .add(listener.as_raw_fd(), EPOLLIN, TOKEN_LISTENER)
+            .map_err(|e| anyhow::anyhow!("registering listener: {e}"))?;
+        poller
+            .add(ctx.wake.raw(), EPOLLIN, TOKEN_WAKE)
+            .map_err(|e| anyhow::anyhow!("registering wakeup fd: {e}"))?;
+        let wake = ctx.wake.clone();
+        let cq = CompletionQueue::new(Box::new(move || wake.wake()));
+        Ok(EventLoop {
+            ctx,
+            cfg,
+            poller,
+            listener,
+            cq,
+            slots: Vec::new(),
+            free: Vec::new(),
+            peers: HashMap::new(),
+            open: 0,
+        })
+    }
+
+    fn run(mut self) {
+        let mut events = Poller::event_buf(1024);
+        let mut last_sweep = Instant::now();
+        let mut draining: Option<Instant> = None; // drain deadline
+        loop {
+            let n = match self.poller.wait(&mut events, TICK_MS) {
+                Ok(n) => n,
+                Err(_) => continue,
+            };
+            for ev in &events[..n] {
+                match ev.key() {
+                    TOKEN_LISTENER => {
+                        if draining.is_none() {
+                            self.accept_ready();
+                        }
+                    }
+                    TOKEN_WAKE => self.ctx.wake.drain(),
+                    token => self.conn_ready((token - TOKEN_BASE) as usize, ev.readiness()),
+                }
+            }
+            self.drain_completions();
+
+            let now = Instant::now();
+            if now.duration_since(last_sweep) >= SWEEP_EVERY {
+                self.sweep(now);
+                last_sweep = now;
+            }
+
+            if draining.is_none() && self.ctx.shutdown.load(Ordering::SeqCst) {
+                draining = Some(now + DRAIN_DEADLINE);
+                // stop accepting; queued-but-unaccepted connections are
+                // reset by the kernel when the listener drops
+                let _ = self.poller.remove(self.listener.as_raw_fd());
+            }
+            if let Some(deadline) = draining {
+                // close everything with nothing left to deliver; what
+                // remains is in-flight compute or an unflushed response
+                for idx in 0..self.slots.len() {
+                    let done = matches!(
+                        &self.slots[idx].conn,
+                        Some(c) if c.awaiting.is_none() && c.out_pos >= c.out.len()
+                    );
+                    if done {
+                        self.close(idx);
+                    }
+                }
+                if self.open == 0 || Instant::now() >= deadline {
+                    return;
+                }
+            }
+        }
+    }
+
+    // -- accept path --------------------------------------------------
+
+    fn accept_ready(&mut self) {
+        loop {
+            let (stream, peer) = match self.listener.accept() {
+                Ok(x) => x,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            };
+            self.ctx.http.connections.fetch_add(1, Ordering::Relaxed);
+            let _ = stream.set_nonblocking(true);
+            let _ = stream.set_nodelay(true);
+            let ip = Some(peer.ip());
+
+            // Per-peer cap first: a peer over its connection budget gets
+            // a typed 429 before it can claim global capacity.  Unlike
+            // 503 this is the peer's fault: it must close (or reuse)
+            // existing connections, not retry with more.
+            let mut reject: Option<Response> = None;
+            let mut charged = false;
+            let over_peer_cap = ip.map_or(false, |ip| {
+                self.peers.get(&ip).map_or(0, |&n| n as usize) >= self.cfg.max_conns_per_peer
+            });
+            if over_peer_cap {
+                self.ctx.http.record(429);
+                reject = Some(
+                    Response::error_json(
+                        429,
+                        &format!(
+                            "too many connections from this peer (cap {})",
+                            self.cfg.max_conns_per_peer
+                        ),
+                    )
+                    .with_retry_after(1),
+                );
+            } else if self.open >= self.cfg.max_conns {
+                // Global connection cap: typed 503 so well-behaved
+                // clients back off instead of hammering the accept queue.
+                self.ctx.http.record(503);
+                reject = Some(
+                    Response::error_json(
+                        503,
+                        &format!("server at connection capacity ({})", self.cfg.max_conns),
+                    )
+                    .with_retry_after(1),
+                );
+            } else if let Some(ip) = ip {
+                *self.peers.entry(ip).or_insert(0) += 1;
+                charged = true;
+            }
+
+            let mut conn = Conn {
+                stream,
+                peer_ip: ip,
+                charged,
+                parser: RequestParser::new(),
+                out: Vec::new(),
+                out_pos: 0,
+                awaiting: None,
+                pending_write: None,
+                close_after_flush: reject.is_some(),
+                read_closed: false,
+                interest: 0,
+                last_progress: Instant::now(),
+                partial_since: None,
+            };
+            if let Some(resp) = reject {
+                // rejected connections flush their error and close; the
+                // loop never reads them
+                conn.out = render_response(&resp, false);
+            }
+            let idx = self.insert(conn);
+            self.advance(idx);
+        }
+    }
+
+    /// Park a connection in a slab slot, register its fd, and bump the
+    /// open-connection gauges.
+    fn insert(&mut self, conn: Conn) -> usize {
+        let idx = match self.free.pop() {
+            Some(i) => {
+                self.slots[i].conn = Some(conn);
+                i
+            }
+            None => {
+                self.slots.push(Slot {
+                    conn: Some(conn),
+                    generation: 0,
+                });
+                self.slots.len() - 1
+            }
+        };
+        self.open += 1;
+        self.ctx.http.conn_opened();
+        let c = self.slots[idx].conn.as_mut().expect("just inserted");
+        c.interest = desired_interest(c);
+        let _ = self
+            .poller
+            .add(c.stream.as_raw_fd(), c.interest, TOKEN_BASE + idx as u64);
+        idx
+    }
+
+    /// Completion-queue key of a slot: index + generation, so a reply
+    /// outliving its connection is recognizably stale.
+    fn completion_key(&self, idx: usize) -> u64 {
+        ((self.slots[idx].generation as u64) << 32) | idx as u64
+    }
+
+    // -- readiness dispatch -------------------------------------------
+
+    fn conn_ready(&mut self, idx: usize, readiness: u32) {
+        if self
+            .slots
+            .get(idx)
+            .map_or(true, |s| s.conn.is_none())
+        {
+            return; // closed earlier in this batch; spurious event
+        }
+        if readiness & (EPOLLERR | EPOLLHUP) != 0 {
+            self.close(idx);
             return;
         }
-        match conn.read_request(max_body) {
-            Ok(RequestOutcome::TimedOut) => continue, // idle; re-check shutdown
-            Ok(RequestOutcome::Closed) => return,
-            Ok(RequestOutcome::Request(req)) => {
-                let keep_alive = req.keep_alive;
-                let (resp, pending) = route(ctx, &req);
-                ctx.http.record(resp.status);
-                let t_write = Instant::now();
-                let write_ok = conn.write_response(&resp, keep_alive).is_ok();
-                if let Some(p) = pending {
-                    let mut span = p.span;
-                    span.write_us = t_write.elapsed().as_micros() as u64;
-                    span.total_us = p.t_start.elapsed().as_micros() as u64;
+        if readiness & (EPOLLIN | EPOLLRDHUP) != 0 && !self.read_some(idx) {
+            return; // connection closed mid-read
+        }
+        self.advance(idx);
+    }
+
+    /// Pull whatever the kernel has buffered into the request parser.
+    /// Returns false when the connection was closed.
+    fn read_some(&mut self, idx: usize) -> bool {
+        let mut buf = [0u8; 8192];
+        loop {
+            let c = match self.slots[idx].conn.as_mut() {
+                Some(c) => c,
+                None => return false,
+            };
+            let r = c.stream.read(&mut buf);
+            match r {
+                Ok(0) => {
+                    c.read_closed = true;
+                    return true;
+                }
+                Ok(n) => {
+                    c.parser.feed(&buf[..n]);
+                    c.last_progress = Instant::now();
+                    if n < buf.len() {
+                        return true; // kernel buffer drained (level-triggered: a refill re-fires)
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.close(idx);
+                    return false;
+                }
+            }
+        }
+    }
+
+    // -- the per-connection state machine -----------------------------
+
+    /// Drive a connection as far as it can go right now: flush pending
+    /// bytes, then (if idle) frame and dispatch the next request from
+    /// the parser; repeat until it blocks, parks, or closes.  Ends by
+    /// reconciling the fd's epoll interest with the new state.
+    fn advance(&mut self, idx: usize) {
+        enum Step {
+            Parked,
+            Close,
+            Respond(Response),
+            Request(HttpRequest),
+        }
+        loop {
+            if !self.flush(idx) {
+                return; // closed
+            }
+            let max_body = self.cfg.max_body;
+            let step = {
+                let c = match self.slots[idx].conn.as_mut() {
+                    Some(c) => c,
+                    None => return,
+                };
+                if c.out_pos < c.out.len() {
+                    Step::Parked // waiting for EPOLLOUT
+                } else if c.close_after_flush {
+                    Step::Close
+                } else if c.awaiting.is_some() {
+                    Step::Parked // response will land on the completion queue
+                } else {
+                    match c.parser.try_next(max_body) {
+                        Err(e) => {
+                            let status = if e.is::<PayloadTooLarge>() { 413 } else { 400 };
+                            c.partial_since = None;
+                            Step::Respond(Response::error_json(status, &format!("{e}")))
+                        }
+                        Ok(Some(req)) => {
+                            c.partial_since = None;
+                            c.last_progress = Instant::now();
+                            Step::Request(req)
+                        }
+                        Ok(None) => {
+                            c.partial_since = if c.parser.has_partial() {
+                                c.partial_since.or(Some(Instant::now()))
+                            } else {
+                                None
+                            };
+                            if c.read_closed {
+                                // EOF with no (complete) request pending
+                                Step::Close
+                            } else {
+                                Step::Parked
+                            }
+                        }
+                    }
+                }
+            };
+            match step {
+                Step::Parked => break,
+                Step::Close => {
+                    self.close(idx);
+                    return;
+                }
+                Step::Respond(resp) => {
+                    // protocol-level error: answer and close
+                    self.respond(idx, resp, false, None);
+                }
+                Step::Request(req) => self.dispatch(idx, req),
+            }
+        }
+        self.update_interest(idx);
+    }
+
+    fn dispatch(&mut self, idx: usize, req: HttpRequest) {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("POST", "/v1/infer") => self.dispatch_infer(idx, &req, false),
+            ("POST", "/v1/classify") => self.dispatch_infer(idx, &req, true),
+            _ => {
+                let resp = route_simple(&self.ctx, &req);
+                self.respond(idx, resp, req.keep_alive, None);
+            }
+        }
+    }
+
+    /// Parse and submit an inference request.  On admission the
+    /// connection parks with an [`Inflight`]; the scheduler's `Reply`
+    /// arrives via the completion queue.  Parse and admission errors
+    /// answer immediately — they need no compute.
+    fn dispatch_infer(&mut self, idx: usize, req: &HttpRequest, classify: bool) {
+        let t_start = Instant::now();
+        let (payload, tier, blocking, trace_echo) =
+            match parse_infer_body(&req.body, self.ctx.engine.input_len()) {
+                Ok(p) => p,
+                Err(e) => {
+                    self.respond(
+                        idx,
+                        Response::error_json(400, &format!("{e}")),
+                        req.keep_alive,
+                        None,
+                    );
+                    return;
+                }
+            };
+        let key = self.completion_key(idx);
+        let (submitted, batch) = match payload {
+            InferPayload::Single(image) => {
+                let tctx = TraceContext {
+                    trace_id: image_seed(TRACE_ID_SALT, &image),
+                    start_us: self.ctx.recorder.now_us(),
+                    t_start,
+                };
+                // blocking = backpressure (park in the lane's wait set
+                // until space frees), default = load-shedding (typed
+                // Overloaded -> 503)
+                (
+                    self.ctx
+                        .engine
+                        .infer_completion(tier, image, blocking, &tctx, &self.cq, key),
+                    false,
+                )
+            }
+            InferPayload::Batch { images, .. } => {
+                let tctx = TraceContext {
+                    trace_id: image_seed(TRACE_ID_SALT, &images),
+                    start_us: self.ctx.recorder.now_us(),
+                    t_start,
+                };
+                (
+                    self.ctx
+                        .engine
+                        .infer_batch_completion(tier, images, blocking, &tctx, &self.cq, key),
+                    true,
+                )
+            }
+        };
+        match submitted {
+            Ok(()) => {
+                let c = self.slots[idx].conn.as_mut().expect("live conn");
+                c.awaiting = Some(Inflight {
+                    keep_alive: req.keep_alive,
+                    classify,
+                    trace_echo,
+                    batch,
+                    tier,
+                    t_start,
+                });
+            }
+            Err(e) => {
+                let resp = engine_error_response(&e, self.ctx.engine.stats(tier));
+                self.respond(idx, resp, req.keep_alive, None);
+            }
+        }
+    }
+
+    /// Render finished compute back onto connections: the streaming
+    /// write-back half of the loop.
+    fn drain_completions(&mut self) {
+        for (key, result) in self.cq.drain() {
+            let idx = (key & 0xffff_ffff) as usize;
+            let generation = (key >> 32) as u32;
+            let live = self.slots.get(idx).map_or(false, |s| {
+                s.generation == generation
+                    && s.conn.as_ref().map_or(false, |c| c.awaiting.is_some())
+            });
+            if !live {
+                // The connection died while its request computed.  The
+                // reply has nowhere to go, but the work happened: keep
+                // the span for the flight recorder (write_us stays 0 —
+                // nothing was delivered, and the write-stage histogram
+                // only ever samples delivered responses).
+                if let Ok(reply) = result {
+                    self.ctx.recorder.push(reply.span);
+                }
+                continue;
+            }
+            let inflight = self.slots[idx]
+                .conn
+                .as_mut()
+                .and_then(|c| c.awaiting.take())
+                .expect("checked live above");
+            let (resp, span) = render_completion(&self.ctx, &inflight, result);
+            let pending = span.map(|span| PendingWrite {
+                span,
+                t_start: inflight.t_start,
+                t_enqueue: Instant::now(),
+            });
+            self.respond(idx, resp, inflight.keep_alive, pending);
+            self.advance(idx);
+        }
+    }
+
+    /// Record + render a response into the connection's write buffer.
+    /// Actual socket writes happen in [`EventLoop::flush`] (via
+    /// [`EventLoop::advance`]) as the socket allows.
+    fn respond(
+        &mut self,
+        idx: usize,
+        resp: Response,
+        keep_alive: bool,
+        pending: Option<PendingWrite>,
+    ) {
+        self.ctx.http.record(resp.status);
+        let c = self.slots[idx].conn.as_mut().expect("live conn");
+        let keep = keep_alive && !c.read_closed && !c.close_after_flush;
+        c.out.extend_from_slice(&render_response(&resp, keep));
+        if !keep {
+            c.close_after_flush = true;
+        }
+        debug_assert!(c.pending_write.is_none(), "one traced response at a time");
+        c.pending_write = pending;
+    }
+
+    /// Write as much of the out-buffer as the socket accepts; on the
+    /// last byte, complete the deferred write-back span.  Returns false
+    /// when the connection was closed.
+    fn flush(&mut self, idx: usize) -> bool {
+        loop {
+            let c = match self.slots[idx].conn.as_mut() {
+                Some(c) => c,
+                None => return false,
+            };
+            if c.out_pos >= c.out.len() {
+                if !c.out.is_empty() {
+                    c.out.clear();
+                    c.out_pos = 0;
+                }
+                if let Some(pw) = c.pending_write.take() {
+                    let mut span = pw.span;
+                    // enqueue-to-last-byte-flushed: a parked EPOLLOUT
+                    // write-back bills its park time to the write stage
+                    span.write_us = pw.t_enqueue.elapsed().as_micros() as u64;
+                    span.total_us = pw.t_start.elapsed().as_micros() as u64;
                     if let Some(&tier) = EnergyTier::ALL.get(span.tier) {
-                        ctx.engine
+                        self.ctx
+                            .engine
                             .stats(tier)
                             .stages
                             .record(Stage::Write, span.write_us);
                     }
-                    ctx.recorder.push(span);
+                    self.ctx.recorder.push(span);
                 }
-                if !write_ok || !keep_alive {
-                    return;
+                return true;
+            }
+            let r = {
+                let (stream, out, pos) = (&mut c.stream, &c.out, c.out_pos);
+                let mut s = stream;
+                s.write(&out[pos..])
+            };
+            match r {
+                Ok(0) => {
+                    self.close(idx);
+                    return false;
+                }
+                Ok(n) => {
+                    let c = self.slots[idx].conn.as_mut().expect("live conn");
+                    c.out_pos += n;
+                    c.last_progress = Instant::now();
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return true, // park on EPOLLOUT
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.close(idx);
+                    return false;
                 }
             }
-            Err(e) => {
-                let status = if e.is::<PayloadTooLarge>() { 413 } else { 400 };
-                ctx.http.record(status);
-                let _ = conn.write_response(&Response::error_json(status, &format!("{e}")), false);
-                // unread request bytes (e.g. an oversized body) would RST
-                // away the error response on a plain close
-                drain_and_close(conn.into_inner());
-                return;
+        }
+    }
+
+    // -- sweep + close -------------------------------------------------
+
+    /// Reap connections that stopped making progress: idle keep-alive
+    /// past `idle_timeout` (quiet close), a trickled partial request
+    /// past `request_timeout` (`400` — the slowloris answer), a peer
+    /// that stopped reading its response past `idle_timeout` (drop).
+    fn sweep(&mut self, now: Instant) {
+        for idx in 0..self.slots.len() {
+            let action = {
+                let c = match &self.slots[idx].conn {
+                    Some(c) => c,
+                    None => continue,
+                };
+                if c.awaiting.is_some() {
+                    None // compute in flight; completion restarts the clock
+                } else if c.out_pos < c.out.len() {
+                    (now.duration_since(c.last_progress) > self.cfg.idle_timeout)
+                        .then_some(SweepAction::Drop)
+                } else if let Some(since) = c.partial_since {
+                    (now.duration_since(since) > self.cfg.request_timeout)
+                        .then_some(SweepAction::Timeout400)
+                } else {
+                    (now.duration_since(c.last_progress) > self.cfg.idle_timeout)
+                        .then_some(SweepAction::Drop)
+                }
+            };
+            match action {
+                None => {}
+                Some(SweepAction::Drop) => self.close(idx),
+                Some(SweepAction::Timeout400) => {
+                    self.respond(
+                        idx,
+                        Response::error_json(400, "request timed out (incomplete)"),
+                        false,
+                        None,
+                    );
+                    self.advance(idx);
+                }
             }
+        }
+    }
+
+    fn close(&mut self, idx: usize) {
+        let Some(c) = self.slots[idx].conn.take() else {
+            return;
+        };
+        let _ = self.poller.remove(c.stream.as_raw_fd());
+        if c.charged {
+            if let Some(ip) = c.peer_ip {
+                if let Some(n) = self.peers.get_mut(&ip) {
+                    *n -= 1;
+                    if *n == 0 {
+                        self.peers.remove(&ip);
+                    }
+                }
+            }
+        }
+        // a completion racing this close sees a stale generation
+        self.slots[idx].generation = self.slots[idx].generation.wrapping_add(1);
+        self.free.push(idx);
+        self.open -= 1;
+        self.ctx.http.conn_closed();
+        // c.stream drops here -> fd closed (after epoll deregistration)
+    }
+
+    /// Reconcile the fd's registered epoll interest with the
+    /// connection's state (EPOLLIN only while willing to read, EPOLLOUT
+    /// only while bytes are parked).
+    fn update_interest(&mut self, idx: usize) {
+        let Some(c) = self.slots[idx].conn.as_mut() else {
+            return;
+        };
+        let want = desired_interest(c);
+        if want != c.interest {
+            c.interest = want;
+            let _ = self
+                .poller
+                .modify(c.stream.as_raw_fd(), want, TOKEN_BASE + idx as u64);
         }
     }
 }
 
-fn route(ctx: &ServerCtx, req: &HttpRequest) -> (Response, Option<PendingTrace>) {
-    let resp = match (req.method.as_str(), req.path.as_str()) {
+/// Epoll interest a connection's state implies.  Reading stops while a
+/// request is in flight or a response is unflushed — backpressure rides
+/// the TCP window, and pipelined bytes wait in the kernel buffer.
+fn desired_interest(c: &Conn) -> u32 {
+    let mut mask = EPOLLRDHUP;
+    let flushed = c.out_pos >= c.out.len();
+    if !c.read_closed && c.awaiting.is_none() && flushed && !c.close_after_flush {
+        mask |= EPOLLIN;
+    }
+    if !flushed {
+        mask |= EPOLLOUT;
+    }
+    mask
+}
+
+/// Route everything that answers without compute (the infer endpoints
+/// are dispatched asynchronously by [`EventLoop::dispatch_infer`]).
+fn route_simple(ctx: &ServerCtx, req: &HttpRequest) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             let tiers: Vec<Json> = ctx
                 .engine
@@ -1052,13 +1590,13 @@ fn route(ctx: &ServerCtx, req: &HttpRequest) -> (Response, Option<PendingTrace>)
             let names: Vec<&str> = EnergyTier::ALL.iter().map(|t| t.name()).collect();
             Response::json(200, &trace::to_chrome_json(&records, &names))
         }
-        ("POST", "/v1/infer") => return infer_route(ctx, req, false),
-        ("POST", "/v1/classify") => return infer_route(ctx, req, true),
         ("POST", "/admin/shutdown") => {
             ctx.shutdown.store(true, Ordering::SeqCst);
-            // drain order: freeze rebalancing, flush high tiers first
+            // drain order: freeze rebalancing, flush high tiers first;
+            // the loop observes the flag at the end of this iteration
+            // (the response still flushes during the bounded drain)
             ctx.engine.begin_drain();
-            wake_acceptor(ctx.addr);
+            ctx.wake.wake();
             Response::json(200, &Json::obj(vec![("status", Json::Str("shutting down".into()))]))
         }
         (
@@ -1067,8 +1605,7 @@ fn route(ctx: &ServerCtx, req: &HttpRequest) -> (Response, Option<PendingTrace>)
             | "/admin/trace",
         ) => Response::error_json(405, &format!("method {} not allowed here", req.method)),
         (_, path) => Response::error_json(404, &format!("no route for {path}")),
-    };
-    (resp, None)
+    }
 }
 
 /// Parsed inference request body: one image, or a client-batched set.
@@ -1102,98 +1639,58 @@ fn engine_error_response(e: &anyhow::Error, lane_stats: &ServerStats) -> Respons
 /// it — the RNG streams never see it.
 const TRACE_ID_SALT: u64 = 0x7472_6163_655f_6964; // "trace_id"
 
-fn infer_route(
+/// Render a completed (or failed) scheduler reply into the response
+/// the submit side promised, plus the span record whose `write_us` /
+/// `total_us` the flush path still owes (see [`PendingWrite`]).
+/// Response bytes are identical to the old synchronous path: same
+/// field order, same error taxonomy.
+fn render_completion(
     ctx: &ServerCtx,
-    req: &HttpRequest,
-    classify: bool,
-) -> (Response, Option<PendingTrace>) {
-    let t_start = Instant::now();
-    let (payload, tier, blocking, trace_echo) =
-        match parse_infer_body(&req.body, ctx.engine.input_len()) {
-            Ok(p) => p,
-            Err(e) => return (Response::error_json(400, &format!("{e}")), None),
-        };
-    let plan = ctx.engine.plan(tier);
+    inflight: &Inflight,
+    result: Result<Reply>,
+) -> (Response, Option<SpanRecord>) {
+    let reply = match result {
+        Ok(r) => r,
+        Err(e) => return (engine_error_response(&e, ctx.engine.stats(inflight.tier)), None),
+    };
+    let plan = ctx.engine.plan(inflight.tier);
     let mut fields = vec![
-        ("tier", Json::Str(tier.name().into())),
+        ("tier", Json::Str(inflight.tier.name().into())),
         ("rho", Json::Num(plan.rho as f64)),
         ("rho_per_layer", Json::f32_arr(&plan.plan.rhos())),
         ("plan_source", Json::Str(plan.source().name().into())),
         ("mode", Json::Str(plan.mode.name().into())),
     ];
-    match payload {
-        InferPayload::Single(image) => {
-            let tctx = TraceContext {
-                trace_id: image_seed(TRACE_ID_SALT, &image),
-                start_us: ctx.recorder.now_us(),
-                t_start,
-            };
-            // blocking = backpressure (wait for queue space), default =
-            // load-shedding (typed Overloaded -> 503)
-            match ctx.engine.infer_traced(tier, image, blocking, &tctx) {
-                Ok(reply) => {
-                    fields.push(("logits", Json::f32_arr(&reply.logits)));
-                    if classify {
-                        let class = crate::inference::argmax(&reply.logits);
-                        fields.push(("class", Json::Num(class as f64)));
-                    }
-                    if trace_echo {
-                        fields.push(("trace", reply.span.to_inline_json(tier.name())));
-                    }
-                    (
-                        Response::json(200, &Json::obj(fields)),
-                        Some(PendingTrace {
-                            span: reply.span,
-                            t_start,
-                        }),
-                    )
-                }
-                Err(e) => (engine_error_response(&e, ctx.engine.stats(tier)), None),
-            }
+    let logits = &reply.logits;
+    let nc = ctx.engine.num_classes();
+    if inflight.batch {
+        fields.push(("count", Json::Num(reply.span.images as f64)));
+        fields.push((
+            "logits",
+            Json::Arr(logits.chunks(nc).map(Json::f32_arr).collect()),
+        ));
+        if inflight.classify {
+            fields.push((
+                "classes",
+                Json::Arr(
+                    logits
+                        .chunks(nc)
+                        .map(|row| Json::Num(crate::inference::argmax(row) as f64))
+                        .collect(),
+                ),
+            ));
         }
-        InferPayload::Batch { images, count } => {
-            let tctx = TraceContext {
-                trace_id: image_seed(TRACE_ID_SALT, &images),
-                start_us: ctx.recorder.now_us(),
-                t_start,
-            };
-            match ctx.engine.infer_batch_traced(tier, images, blocking, &tctx) {
-                Ok(reply) => {
-                    let logits = &reply.logits;
-                    let nc = ctx.engine.num_classes();
-                    fields.push(("count", Json::Num(count as f64)));
-                    fields.push((
-                        "logits",
-                        Json::Arr(logits.chunks(nc).map(Json::f32_arr).collect()),
-                    ));
-                    if classify {
-                        fields.push((
-                            "classes",
-                            Json::Arr(
-                                logits
-                                    .chunks(nc)
-                                    .map(|row| {
-                                        Json::Num(crate::inference::argmax(row) as f64)
-                                    })
-                                    .collect(),
-                            ),
-                        ));
-                    }
-                    if trace_echo {
-                        fields.push(("trace", reply.span.to_inline_json(tier.name())));
-                    }
-                    (
-                        Response::json(200, &Json::obj(fields)),
-                        Some(PendingTrace {
-                            span: reply.span,
-                            t_start,
-                        }),
-                    )
-                }
-                Err(e) => (engine_error_response(&e, ctx.engine.stats(tier)), None),
-            }
+    } else {
+        fields.push(("logits", Json::f32_arr(logits)));
+        if inflight.classify {
+            let class = crate::inference::argmax(logits);
+            fields.push(("class", Json::Num(class as f64)));
         }
     }
+    if inflight.trace_echo {
+        fields.push(("trace", reply.span.to_inline_json(inflight.tier.name())));
+    }
+    (Response::json(200, &Json::obj(fields)), Some(reply.span))
 }
 
 /// Validate one image row: expected width, all-finite pixels.

@@ -73,6 +73,31 @@ pub fn render(
 
     header(
         &mut out,
+        "emtopt_http_open_conns",
+        "gauge",
+        "Connections currently open on the event loop.",
+    );
+    let _ = writeln!(
+        out,
+        "emtopt_http_open_conns {}",
+        http.open_conns.load(Relaxed)
+    );
+
+    header(
+        &mut out,
+        "emtopt_http_open_conns_peak",
+        "gauge",
+        "High-water mark of simultaneously open connections (monotone, \
+         so a scrape after a burst still sees the achieved concurrency).",
+    );
+    let _ = writeln!(
+        out,
+        "emtopt_http_open_conns_peak {}",
+        http.open_conns_peak.load(Relaxed)
+    );
+
+    header(
+        &mut out,
         "emtopt_requests_total",
         "counter",
         "Requests served by the inference engine, by energy tier.",
@@ -624,6 +649,16 @@ mod tests {
 
         assert!(text.contains("emtopt_http_requests_total{code=\"200\"} 2"));
         assert!(text.contains("emtopt_http_requests_total{code=\"503\"} 1"));
+        // open-connection gauges render even before any connection
+        http.conn_opened();
+        http.conn_opened();
+        http.conn_closed();
+        let text2 = render(&http, &[(&plan, &stats)], &sched, 12.5);
+        assert!(text.contains("emtopt_http_open_conns 0"));
+        assert!(text.contains("emtopt_http_open_conns_peak 0"));
+        assert!(text2.contains("emtopt_http_open_conns 1"));
+        // the peak is monotone: it remembers the burst of two
+        assert!(text2.contains("emtopt_http_open_conns_peak 2"));
         assert!(text.contains("emtopt_requests_total{tier=\"normal\"} 2"));
         assert!(text.contains("emtopt_images_total{tier=\"normal\"} 5"));
         assert!(text.contains("emtopt_client_batch_requests_total{tier=\"normal\"} 1"));

@@ -425,7 +425,6 @@ fn overload_sheds_with_503() {
         m,
         HttpServerConfig {
             addr: "127.0.0.1:0".into(),
-            conn_threads: 24,
             engine: NativeServerConfig {
                 batch: 1,
                 workers: 1,
@@ -1030,4 +1029,240 @@ fn trained_store_layer_mismatch_is_rejected_at_boot() {
     .expect("layer-count mismatch must refuse to boot");
     assert!(err.to_string().contains("layers"), "{err}");
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn global_conn_cap_rejects_with_503_and_tracks_gauges() {
+    // a tight global cap; the per-peer cap stays loose so the 503 path
+    // (not the 429 one) is what fires
+    let dev = DeviceConfig::default();
+    let m = model(&[(8, 3)], 3, &dev);
+    let handle = serve_http(
+        m,
+        HttpServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_conns: 2,
+            max_conns_per_peer: 64,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // fill the cap and make sure both connections are past the acceptor
+    let mut c1 = connect(&handle);
+    let mut c2 = connect(&handle);
+    let (status, _) = get(&mut c1, "/healthz");
+    assert_eq!(status, 200);
+    let (status, _) = get(&mut c2, "/healthz");
+    assert_eq!(status, 200);
+
+    // one over the cap: typed 503 + Retry-After, no request ever sent
+    let mut c3 = connect(&handle);
+    let (status, headers, body) = c3.read_response_parts(1 << 20).unwrap();
+    assert_eq!(status, 503);
+    assert!(header_value(&headers, "retry-after").is_some());
+    let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert!(v
+        .get("error")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .contains("capacity (2)"));
+
+    // gauges: the two held connections, and a peak that saw the
+    // momentary third before its rejection flushed
+    let (status, metrics) = get(&mut c1, "/metrics");
+    assert_eq!(status, 200);
+    let text = String::from_utf8(metrics).unwrap();
+    let gauge = |name: &str| -> f64 {
+        text.lines()
+            .find(|l| l.strip_prefix(name).map_or(false, |r| r.starts_with(' ')))
+            .and_then(|l| l.rsplit_once(' '))
+            .map(|(_, v)| v.parse().unwrap())
+            .unwrap()
+    };
+    assert!(gauge("emtopt_http_open_conns") >= 2.0);
+    assert!(gauge("emtopt_http_open_conns_peak") >= 3.0);
+    assert!(text
+        .lines()
+        .any(|l| l.starts_with("emtopt_http_requests_total{code=\"503\"}")));
+
+    // closing a held connection frees global capacity
+    drop(c2);
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let served = loop {
+        let mut c = connect(&handle);
+        let wrote = c.write_request("GET", "/healthz", b"").is_ok();
+        match c.read_response(1 << 20) {
+            Ok((200, _)) if wrote => break true,
+            _ if std::time::Instant::now() > deadline => break false,
+            _ => std::thread::sleep(Duration::from_millis(50)),
+        }
+    };
+    assert!(served, "capacity must free up after a connection closes");
+
+    drop(c1);
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn slowloris_partial_heads_swept_with_400_blocking_no_workers() {
+    use std::io::{Read as _, Write as _};
+
+    // short slowloris deadline, single compute worker
+    let dev = DeviceConfig::default();
+    let m = model(&[(8, 3)], 3, &dev);
+    let handle = serve_http(
+        m,
+        HttpServerConfig {
+            addr: "127.0.0.1:0".into(),
+            request_timeout: Duration::from_millis(300),
+            engine: NativeServerConfig {
+                batch: 1,
+                workers: 1,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // eight sockets trickle a partial request head, then stall forever
+    let mut slow: Vec<TcpStream> = (0..8)
+        .map(|_| {
+            let mut s = TcpStream::connect(handle.addr()).unwrap();
+            s.write_all(b"POST /v1/infer HTTP/1.1\r\nhost: slow\r\n")
+                .unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            s
+        })
+        .collect();
+
+    // the single worker is untouched: a well-formed request on a fresh
+    // connection serves immediately while all eight heads are stalled
+    let img = "[0.1,0.2,0.3,0.4,0.5,0.6,0.7,0.8]";
+    let mut conn = connect(&handle);
+    let (status, _) = post(&mut conn, "/v1/infer", &format!("{{\"image\":{img}}}"));
+    assert_eq!(status, 200, "stalled request heads must not occupy a worker");
+
+    // past request_timeout the sweep answers each straggler with 400
+    // and closes the connection
+    for s in &mut slow {
+        let mut buf = Vec::new();
+        s.read_to_end(&mut buf).unwrap();
+        let text = String::from_utf8_lossy(&buf);
+        assert!(
+            text.starts_with("HTTP/1.1 400"),
+            "expected the slowloris sweep's 400, got: {text}"
+        );
+    }
+
+    drop(conn);
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn stopped_reader_is_swept_without_blocking_workers() {
+    use std::io::{Read as _, Write as _};
+
+    // short stalled-connection deadline, single compute worker
+    let dev = DeviceConfig::default();
+    let m = model(&[(8, 3)], 3, &dev);
+    let handle = serve_http(
+        m,
+        HttpServerConfig {
+            addr: "127.0.0.1:0".into(),
+            idle_timeout: Duration::from_millis(400),
+            engine: NativeServerConfig {
+                batch: 1,
+                workers: 1,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // the rude client: sends one request, then never reads the response
+    let img = "[0.1,0.2,0.3,0.4,0.5,0.6,0.7,0.8]";
+    let body = format!("{{\"image\":{img}}}");
+    let mut rude = TcpStream::connect(handle.addr()).unwrap();
+    rude.write_all(
+        format!(
+            "POST /v1/classify HTTP/1.1\r\nhost: rude\r\n\
+             content-type: application/json\r\ncontent-length: {}\r\n\
+             connection: keep-alive\r\n\r\n{}",
+            body.len(),
+            body
+        )
+        .as_bytes(),
+    )
+    .unwrap();
+
+    // the single worker keeps serving everyone else meanwhile
+    let mut conn = connect(&handle);
+    for _ in 0..3 {
+        let (status, _) = post(&mut conn, "/v1/classify", &body);
+        assert_eq!(status, 200);
+    }
+
+    // after idle_timeout the sweep drops the stalled connection: the
+    // rude client finds its (kernel-buffered) response followed by EOF
+    rude.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut buf = Vec::new();
+    rude.read_to_end(&mut buf).unwrap();
+    let text = String::from_utf8_lossy(&buf);
+    assert!(text.starts_with("HTTP/1.1 200"), "{text}");
+
+    drop(conn);
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn open_conns_gauge_tracks_closes() {
+    let handle = boot(NativeServerConfig::default());
+    let mut c1 = connect(&handle);
+    let mut c2 = connect(&handle);
+    let mut c3 = connect(&handle);
+    for c in [&mut c1, &mut c2, &mut c3] {
+        let (status, _) = get(c, "/healthz");
+        assert_eq!(status, 200);
+    }
+
+    let gauge = |text: &str, name: &str| -> Option<f64> {
+        text.lines()
+            .find(|l| l.strip_prefix(name).map_or(false, |r| r.starts_with(' ')))
+            .and_then(|l| l.rsplit_once(' '))
+            .and_then(|(_, v)| v.parse().ok())
+    };
+    let (status, metrics) = get(&mut c1, "/metrics");
+    assert_eq!(status, 200);
+    let text = String::from_utf8(metrics).unwrap();
+    assert!(gauge(&text, "emtopt_http_open_conns").unwrap() >= 3.0);
+    assert!(gauge(&text, "emtopt_http_open_conns_peak").unwrap() >= 3.0);
+
+    // closing two connections shows on the live gauge; the peak holds
+    drop(c2);
+    drop(c3);
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let (status, metrics) = get(&mut c1, "/metrics");
+        assert_eq!(status, 200);
+        let text = String::from_utf8(metrics).unwrap();
+        let open = gauge(&text, "emtopt_http_open_conns").unwrap();
+        if open <= 1.0 {
+            assert!(gauge(&text, "emtopt_http_open_conns_peak").unwrap() >= 3.0);
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "open-conns gauge must drop after closes: {open}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    drop(c1);
+    handle.shutdown().unwrap();
 }
