@@ -131,6 +131,54 @@ fn main() -> emtopt::Result<()> {
         kernel_legacy / 1e6
     );
 
+    println!("\n=== hotpath: programmed-weight plane cache ===");
+    // Decomposed bit-plane reads off the plane cache (multiply-free,
+    // pre-scaled planes) vs the same reads through the scaled multiply
+    // kernel.  Binary row levels — one activation bit-plane, the shape
+    // every decomposed-mode read has.  Both kernels run in the same
+    // process on the same tile, so the ratio is machine-independent.
+    let plane_bits = 4u32;
+    let cached = Tile::with_plane_cache(w.clone(), k, n, m, plane_bits);
+    let bits: Vec<u32> = (0..k as u32).map(|r| r & 1).collect();
+    let mut plane = 0u32;
+    let r = report("tile 256x256 plane-cache read", 3, 60, || {
+        out.fill(0.0);
+        let e = cached.current_sum_plane(&bits, &mut out, plane % plane_bits, sigma, &mut rng);
+        plane += 1;
+        std::hint::black_box(e);
+    });
+    let plane_cached = r.throughput(macs);
+    println!("  -> {:.1} M MAC-sim/s", plane_cached / 1e6);
+
+    let mut plane = 0u32;
+    let r = report("tile 256x256 scaled multiply read", 3, 60, || {
+        out.fill(0.0);
+        let scale = (1u64 << (plane % plane_bits)) as f32;
+        let e = cached.current_sum_scaled(&bits, &mut out, scale, sigma, &mut rng);
+        plane += 1;
+        std::hint::black_box(e);
+    });
+    let plane_scaled = r.throughput(macs);
+    let weight_plane_speedup = plane_cached / plane_scaled;
+    println!(
+        "  -> {:.1} M MAC-sim/s multiply — plane cache is {weight_plane_speedup:.2}x",
+        plane_scaled / 1e6
+    );
+
+    // parity spot-check: a cached-plane read must be bit-identical to
+    // the multiply kernel on the same RNG stream, energy included
+    for p in 0..plane_bits {
+        let mut ra = Rng::new(99);
+        let mut rb = Rng::new(99);
+        let mut oa = vec![0.0f32; n];
+        let mut ob = vec![0.0f32; n];
+        let ea = cached.current_sum_plane(&bits, &mut oa, p, sigma, &mut ra);
+        let eb = cached.current_sum_scaled(&bits, &mut ob, (1u64 << p) as f32, sigma, &mut rb);
+        assert_eq!(oa, ob, "plane-cache parity violated at plane {p}");
+        assert_eq!(ea, eb, "plane-cache energy parity violated at plane {p}");
+    }
+    println!("  parity: cached planes bit-identical to the multiply kernel");
+
     println!("\n=== hotpath: batched execution engine ===");
     // MLP sized like the tiny-zoo mlp head: 256 -> 256 -> 128 -> 10
     let dims = [(256usize, 256usize), (256, 128), (128, 10)];
@@ -245,6 +293,9 @@ fn main() -> emtopt::Result<()> {
          \"kernel_vs_scalar_ratio\": {kernel_ratio:.4},\n  \
          \"kernel_mac_per_s_percell_legacy\": {kernel_legacy:.1},\n  \
          \"speedup_vs_percell\": {kernel_speedup:.3},\n  \
+         \"plane_cache_mac_per_s\": {plane_cached:.1},\n  \
+         \"plane_multiply_mac_per_s\": {plane_scaled:.1},\n  \
+         \"weight_plane_speedup\": {weight_plane_speedup:.3},\n  \
          \"batch32_seq_samples_per_s\": {seq_sps:.1},\n  \
          \"batch32_par_samples_per_s\": {par_sps:.1},\n  \
          \"batch_speedup\": {speedup:.3},\n  \

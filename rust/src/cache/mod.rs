@@ -1,0 +1,483 @@
+//! Content-keyed exact result cache for the deterministic serving path.
+//!
+//! The whole native pipeline is deterministic by construction: an
+//! image's device noise is seeded from its own pixels
+//! (`coordinator::router::image_seed`, PR 3) and each tier's
+//! `EnergyPlan` is fixed at boot (PR 4), so two requests with the same
+//! pixels, tier, and plan produce **bit-identical logits**.  This
+//! module memoizes that function: a sharded, lock-striped LRU from a
+//! 128-bit content key to the computed logits plus the device energy
+//! the original computation paid — a hit is served straight off the
+//! event loop with zero crossbar reads and zero uJ (DESIGN.md §13).
+//!
+//! **Key derivation** ([`CacheKey::derive`]): two independent 64-bit
+//! `hash2` folds of the pixel bit patterns (plus the image count) under
+//! salts derived from `(model fingerprint, plan hash, tier)`.  The
+//! fingerprint/plan salts are computed once at boot
+//! ([`CacheKey::tier_salt`]); anything that would change the served
+//! bytes — pixels, batch shape, tier, plan, model — changes the key.
+//! 128 bits make accidental collisions negligible (~2^-64 at a billion
+//! distinct entries); there is no adversarial collision concern beyond
+//! a wrong-but-well-formed logits vector for the colliding client.
+//!
+//! **Sharding**: [`SHARDS`] independent `Mutex<Shard>`es selected by
+//! the key's low bits; each shard is a `HashMap` over an intrusive
+//! doubly-linked LRU list in a slab (`Vec`) arena — O(1) lookup,
+//! insert, touch, and eviction, and no cross-shard contention.  Bounds
+//! (entries and bytes) are split evenly across shards.
+//!
+//! All counters are atomics readable from any thread without touching
+//! the shard locks ([`CacheStats`] → `emtopt_cache_*` on `/metrics`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::rng::hash2;
+
+/// Number of lock stripes.  A power of two so shard selection is a
+/// mask; 16 is comfortably more than the event loop + completion
+/// threads that ever touch the cache concurrently.
+pub const SHARDS: usize = 16;
+
+/// Fixed per-entry overhead charged to the byte budget on top of the
+/// logits payload: key + links + lengths + allocator slack, rounded up.
+const ENTRY_OVERHEAD_BYTES: usize = 96;
+
+/// 128-bit content key of one inference request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey(pub u128);
+
+impl CacheKey {
+    /// Per-(model, plan, tier) salt, computed once at boot: folds the
+    /// model fingerprint and plan hash with the tier index so the same
+    /// pixels never alias across tiers, plans, or deployed models.
+    pub fn tier_salt(model_fingerprint: u64, plan_hash: u64, tier_index: usize) -> u64 {
+        hash2(hash2(model_fingerprint, plan_hash), tier_index as u64)
+    }
+
+    /// Derive the key of a request: `count` images of `pixels`
+    /// (`count * input_len` floats, row-major), under a boot-time
+    /// `tier_salt`.  Two independent folds (distinct derived salts)
+    /// give 128 bits; `f32::to_bits` makes the fold exact — any pixel
+    /// bit-pattern change changes the key, matching the determinism
+    /// contract bit for bit.
+    pub fn derive(tier_salt: u64, pixels: &[f32], count: usize) -> CacheKey {
+        let mut hi = hash2(tier_salt, 0xcafe_0001 ^ count as u64);
+        let mut lo = hash2(tier_salt ^ 0x9e37_79b9_7f4a_7c15, 0xcafe_0002 ^ pixels.len() as u64);
+        for &v in pixels {
+            let b = u64::from(v.to_bits());
+            hi = hash2(hi, b);
+            lo = hash2(lo, b);
+        }
+        CacheKey(((hi as u128) << 64) | lo as u128)
+    }
+
+    fn shard(&self) -> usize {
+        (self.0 as usize) & (SHARDS - 1)
+    }
+}
+
+/// A memoized reply: the logits the engine computed for this key, the
+/// image count of the request, and the device energy the original
+/// computation spent (credited to `saved_uj_total` on every hit).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CachedReply {
+    pub logits: Vec<f32>,
+    pub count: usize,
+    pub energy_uj: f64,
+}
+
+impl CachedReply {
+    fn cost_bytes(&self) -> usize {
+        self.logits.len() * std::mem::size_of::<f32>() + ENTRY_OVERHEAD_BYTES
+    }
+}
+
+/// Lock-free f64 accumulator stored as bits.
+fn atomic_add_f64(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(actual) => cur = actual,
+        }
+    }
+}
+
+/// Atomic cache counters, readable without the shard locks.
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub evictions: AtomicU64,
+    /// Live entries across all shards (gauge).
+    pub entries: AtomicU64,
+    /// Live payload bytes across all shards (gauge).
+    pub bytes: AtomicU64,
+    /// f64 bit-pattern: cumulative device uJ hits did NOT spend.
+    saved_uj_bits: AtomicU64,
+}
+
+impl CacheStats {
+    pub fn saved_uj(&self) -> f64 {
+        f64::from_bits(self.saved_uj_bits.load(Ordering::Relaxed))
+    }
+}
+
+const NIL: usize = usize::MAX;
+
+struct Slot {
+    key: CacheKey,
+    value: CachedReply,
+    prev: usize,
+    next: usize,
+}
+
+/// One lock stripe: hash index + intrusive LRU list over a slab arena.
+struct Shard {
+    map: HashMap<CacheKey, usize>,
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+    /// Most-recently-used slot (NIL when empty).
+    head: usize,
+    /// Least-recently-used slot (NIL when empty).
+    tail: usize,
+    bytes: usize,
+}
+
+impl Shard {
+    fn new() -> Self {
+        Shard {
+            map: HashMap::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            bytes: 0,
+        }
+    }
+
+    /// Unlink `i` from the LRU list (must be linked).
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = (self.slots[i].prev, self.slots[i].next);
+        if prev != NIL {
+            self.slots[prev].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slots[next].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    /// Link `i` at the MRU head.
+    fn link_front(&mut self, i: usize) {
+        self.slots[i].prev = NIL;
+        self.slots[i].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    /// Remove the LRU entry; returns its byte cost (0 when empty).
+    fn evict_tail(&mut self, stats: &CacheStats) -> usize {
+        let i = self.tail;
+        if i == NIL {
+            return 0;
+        }
+        self.unlink(i);
+        let key = self.slots[i].key;
+        self.map.remove(&key);
+        let cost = self.slots[i].value.cost_bytes();
+        self.bytes -= cost;
+        // drop the payload now; the slot is recycled
+        self.slots[i].value = CachedReply {
+            logits: Vec::new(),
+            count: 0,
+            energy_uj: 0.0,
+        };
+        self.free.push(i);
+        stats.evictions.fetch_add(1, Ordering::Relaxed);
+        stats.entries.fetch_sub(1, Ordering::Relaxed);
+        stats.bytes.fetch_sub(cost as u64, Ordering::Relaxed);
+        cost
+    }
+}
+
+/// The sharded, lock-striped, doubly-bounded LRU result cache.
+///
+/// Constructed once at server boot; shared behind an `Arc`.  Both
+/// bounds must be positive — a zero bound means "cache off" and the
+/// server simply does not construct one (`--cache-entries 0`).
+pub struct ResultCache {
+    shards: Vec<Mutex<Shard>>,
+    /// Max entries per shard (global bound split evenly, min 1).
+    shard_entries: usize,
+    /// Max payload bytes per shard (global bound split evenly).
+    shard_bytes: usize,
+    stats: CacheStats,
+}
+
+impl ResultCache {
+    /// `max_entries` entries / `max_bytes` payload bytes, globally
+    /// (split evenly across [`SHARDS`] stripes, each holding at least
+    /// one entry so a tiny bound still caches something).
+    pub fn new(max_entries: usize, max_bytes: usize) -> Self {
+        ResultCache {
+            shards: (0..SHARDS).map(|_| Mutex::new(Shard::new())).collect(),
+            shard_entries: (max_entries / SHARDS).max(1),
+            shard_bytes: (max_bytes / SHARDS).max(ENTRY_OVERHEAD_BYTES + 64),
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    /// Look `key` up; a hit clones the memoized reply, bumps it to MRU,
+    /// and credits its recorded energy to `saved_uj_total`.
+    pub fn lookup(&self, key: CacheKey) -> Option<CachedReply> {
+        let mut shard = self.shards[key.shard()].lock().unwrap();
+        match shard.map.get(&key).copied() {
+            Some(i) => {
+                shard.unlink(i);
+                shard.link_front(i);
+                let value = shard.slots[i].value.clone();
+                drop(shard);
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                atomic_add_f64(&self.stats.saved_uj_bits, value.energy_uj);
+                Some(value)
+            }
+            None => {
+                drop(shard);
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) `key`.  Evicts from the shard's LRU tail
+    /// until both the entry and byte bounds hold.  A reply too large to
+    /// ever fit the shard byte bound is not cached.
+    pub fn insert(&self, key: CacheKey, value: CachedReply) {
+        let cost = value.cost_bytes();
+        if cost > self.shard_bytes {
+            return;
+        }
+        let mut shard = self.shards[key.shard()].lock().unwrap();
+        if let Some(i) = shard.map.get(&key).copied() {
+            // the pipeline is deterministic, so a racing duplicate
+            // compute produced the same bytes — just refresh recency
+            shard.unlink(i);
+            shard.link_front(i);
+            return;
+        }
+        while shard.map.len() >= self.shard_entries
+            || shard.bytes + cost > self.shard_bytes
+        {
+            if shard.evict_tail(&self.stats) == 0 {
+                break;
+            }
+        }
+        let i = match shard.free.pop() {
+            Some(i) => {
+                shard.slots[i].key = key;
+                shard.slots[i].value = value;
+                i
+            }
+            None => {
+                shard.slots.push(Slot {
+                    key,
+                    value,
+                    prev: NIL,
+                    next: NIL,
+                });
+                shard.slots.len() - 1
+            }
+        };
+        shard.link_front(i);
+        shard.map.insert(key, i);
+        shard.bytes += cost;
+        self.stats.entries.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes.fetch_add(cost as u64, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn reply(tag: f32, n: usize) -> CachedReply {
+        CachedReply {
+            logits: (0..n).map(|i| tag + i as f32).collect(),
+            count: 1,
+            energy_uj: tag as f64,
+        }
+    }
+
+    #[test]
+    fn key_is_content_addressed_and_128_bit() {
+        let a = [0.1f32, 0.2, 0.3];
+        let b = [0.1f32, 0.2, 0.3];
+        let c = [0.1f32, 0.2, 0.4];
+        assert_eq!(CacheKey::derive(7, &a, 1), CacheKey::derive(7, &b, 1));
+        assert_ne!(CacheKey::derive(7, &a, 1), CacheKey::derive(8, &a, 1), "salt");
+        assert_ne!(CacheKey::derive(7, &a, 1), CacheKey::derive(7, &c, 1), "pixels");
+        assert_ne!(CacheKey::derive(7, &a, 1), CacheKey::derive(7, &a, 3), "count");
+        assert_ne!(
+            CacheKey::derive(7, &a, 1),
+            CacheKey::derive(7, &a[..2], 1),
+            "length"
+        );
+        // the two 64-bit halves are independent folds
+        let k = CacheKey::derive(7, &a, 1);
+        assert_ne!((k.0 >> 64) as u64, k.0 as u64);
+        // tier salts separate tiers under one (model, plan)
+        assert_ne!(CacheKey::tier_salt(1, 2, 0), CacheKey::tier_salt(1, 2, 1));
+        assert_ne!(CacheKey::tier_salt(1, 2, 0), CacheKey::tier_salt(1, 3, 0));
+        assert_ne!(CacheKey::tier_salt(1, 2, 0), CacheKey::tier_salt(9, 2, 0));
+    }
+
+    #[test]
+    fn hit_miss_and_saved_energy_accounting() {
+        let cache = ResultCache::new(64, 1 << 20);
+        let k = CacheKey::derive(1, &[0.5, 0.25], 1);
+        assert!(cache.lookup(k).is_none());
+        assert_eq!(cache.stats().misses.load(Ordering::Relaxed), 1);
+        cache.insert(k, reply(3.0, 4));
+        let hit = cache.lookup(k).expect("inserted key must hit");
+        assert_eq!(hit, reply(3.0, 4));
+        assert_eq!(cache.stats().hits.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.stats().entries.load(Ordering::Relaxed), 1);
+        assert!(cache.stats().bytes.load(Ordering::Relaxed) > 0);
+        // each hit credits the entry's recorded compute energy
+        assert!((cache.stats().saved_uj() - 3.0).abs() < 1e-12);
+        cache.lookup(k).unwrap();
+        assert!((cache.stats().saved_uj() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_within_shard() {
+        // a 1-entry-per-shard cache: inserting two keys of the same
+        // shard evicts the older, and touching refreshes recency
+        let cache = ResultCache::new(SHARDS, 1 << 20);
+        // craft three keys landing on one shard
+        let mut keys = Vec::new();
+        let mut i = 0u64;
+        while keys.len() < 3 {
+            let k = CacheKey::derive(i, &[i as f32], 1);
+            if k.shard() == 0 {
+                keys.push(k);
+            }
+            i += 1;
+        }
+        cache.insert(keys[0], reply(0.0, 2));
+        cache.insert(keys[1], reply(1.0, 2)); // evicts keys[0]
+        assert_eq!(cache.stats().evictions.load(Ordering::Relaxed), 1);
+        assert!(cache.lookup(keys[0]).is_none());
+        assert_eq!(cache.lookup(keys[1]).unwrap(), reply(1.0, 2));
+        assert_eq!(cache.stats().entries.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn byte_bound_evicts_and_oversize_is_skipped() {
+        // tiny byte budget: a shard holds ~1 small entry; a huge entry
+        // never enters and never evicts what's there
+        let per_shard = ENTRY_OVERHEAD_BYTES + 64;
+        let cache = ResultCache::new(1 << 20, per_shard * SHARDS);
+        let mut keys = Vec::new();
+        let mut i = 0u64;
+        while keys.len() < 2 {
+            let k = CacheKey::derive(1000 + i, &[i as f32, 2.0], 1);
+            if k.shard() == 3 {
+                keys.push(k);
+            }
+            i += 1;
+        }
+        cache.insert(keys[0], reply(0.0, 8)); // 32B payload: fits
+        let before = cache.stats().bytes.load(Ordering::Relaxed);
+        assert!(before > 0);
+        cache.insert(keys[1], reply(1.0, 4096)); // 16KiB: oversize, skipped
+        assert!(cache.lookup(keys[0]).is_some(), "oversize insert must not evict");
+        assert!(cache.lookup(keys[1]).is_none());
+        assert_eq!(cache.stats().bytes.load(Ordering::Relaxed), before);
+        // a second small entry displaces the first under the byte bound
+        cache.insert(keys[1], reply(2.0, 12)); // 48B: over 64B budget with [0] live
+        assert!(cache.lookup(keys[1]).is_some());
+        assert!(cache.lookup(keys[0]).is_none(), "byte bound must evict LRU");
+    }
+
+    #[test]
+    fn duplicate_insert_refreshes_without_growing() {
+        let cache = ResultCache::new(64, 1 << 20);
+        let k = CacheKey::derive(5, &[1.0], 1);
+        cache.insert(k, reply(1.0, 4));
+        cache.insert(k, reply(1.0, 4));
+        assert_eq!(cache.stats().entries.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.stats().evictions.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn concurrent_insert_lookup_is_safe_and_consistent() {
+        // generation safety under concurrency: values always match their
+        // key (never another thread's payload), counters reconcile, and
+        // entries/bytes gauges return to a consistent steady state
+        let cache = Arc::new(ResultCache::new(128, 1 << 20));
+        let threads: Vec<_> = (0..4u64)
+            .map(|t| {
+                let cache = cache.clone();
+                std::thread::spawn(move || {
+                    for round in 0..400u64 {
+                        let id = (t * 31 + round) % 200; // overlapping key space
+                        let k = CacheKey::derive(99, &[id as f32], 1);
+                        if let Some(v) = cache.lookup(k) {
+                            // the payload must be the one keyed by `id`
+                            assert_eq!(v.logits[0], id as f32, "foreign payload under key");
+                            assert_eq!(v.logits.len(), 4);
+                        } else {
+                            cache.insert(k, reply(id as f32, 4));
+                        }
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let s = cache.stats();
+        let entries = s.entries.load(Ordering::Relaxed);
+        assert!(entries > 0 && entries <= 128 + SHARDS as u64);
+        // hits + misses == lookups issued; every miss either inserted,
+        // refreshed a racing duplicate, or lost a race — all consistent
+        assert!(s.hits.load(Ordering::Relaxed) + s.misses.load(Ordering::Relaxed) > 0);
+        // byte gauge reconciles with a full sweep of live entries
+        let live_bytes: usize = cache
+            .shards
+            .iter()
+            .map(|sh| sh.lock().unwrap().bytes)
+            .sum();
+        assert_eq!(s.bytes.load(Ordering::Relaxed), live_bytes as u64);
+    }
+
+    #[test]
+    fn entry_bound_holds_under_pressure() {
+        let cache = ResultCache::new(32, 1 << 20);
+        for i in 0..1000u64 {
+            cache.insert(CacheKey::derive(3, &[i as f32], 1), reply(i as f32, 4));
+        }
+        let entries = cache.stats().entries.load(Ordering::Relaxed);
+        // per-shard bound is max(1, 32/16) = 2 entries -> ≤ 32 global
+        assert!(entries <= 32, "entry bound violated: {entries}");
+        assert!(cache.stats().evictions.load(Ordering::Relaxed) > 0);
+    }
+}

@@ -122,7 +122,17 @@ impl CrossbarArray {
                             levels[(r0 + r) * cols + (c0 + c)] as f32 / max_level;
                     }
                 }
-                tiles.push(Tile::new(norm, tr, tc, cfg.num_states));
+                // programmed-weight plane cache (PR 9): pre-scale each
+                // activation bit-plane's weight copy at program time so
+                // decomposed reads never re-derive 2^p * w per call —
+                // bit-identical to the multiply kernel (tile.rs docs)
+                tiles.push(Tile::with_plane_cache(
+                    norm,
+                    tr,
+                    tc,
+                    cfg.num_states,
+                    cfg.act_bits,
+                ));
             }
         }
         CrossbarArray {
@@ -138,6 +148,13 @@ impl CrossbarArray {
 
     pub fn w_scale(&self) -> f32 {
         self.w_scale
+    }
+
+    /// The programmed tiles (row-major tile grid).  Read-only: used to
+    /// fold the exact programmed weight content into the result cache's
+    /// model fingerprint (`server::model_fingerprint`).
+    pub fn tiles(&self) -> &[Tile] {
+        &self.tiles
     }
 
     /// Weight bits the array was programmed with.
@@ -238,17 +255,19 @@ impl CrossbarArray {
                 // derive all bit-planes once, plane-major (see MacScratch)
                 quant::bit_planes_into(&scratch.levels, act_bits, &mut scratch.planes);
                 let rows_total = self.rows;
-                for p in 0..act_bits as usize {
-                    let scale = (1u32 << p) as f32;
-                    let plane = &scratch.planes[p * rows_total..(p + 1) * rows_total];
+                for p in 0..act_bits {
+                    let plane = &scratch.planes
+                        [p as usize * rows_total..(p as usize + 1) * rows_total];
                     for (ti, t) in self.tiles.iter().enumerate() {
                         let (ty, tx) = (ti / tiles_x, ti % tiles_x);
                         let r0 = ty * TILE_ROWS;
                         let c0 = tx * TILE_COLS;
-                        let e = t.current_sum_scaled(
+                        // cached-plane kernel: reads 2^p * w_norm prepared
+                        // at program time (falls back past plane_bits)
+                        let e = t.current_sum_plane(
                             &plane[r0..r0 + t.rows()],
                             &mut out[c0..c0 + t.cols()],
-                            scale,
+                            p,
                             sigma_norm,
                             rng,
                         );
@@ -469,6 +488,41 @@ mod tests {
             assert_eq!(c1, c2);
             assert!(o1.iter().all(|v| v.is_finite()));
         }
+    }
+
+    #[test]
+    fn decomposed_fallback_past_cached_planes_is_bit_identical() {
+        // two arrays over the same weights, one whose plane cache covers
+        // only 3 of the 5 read planes (program-time act_bits 3) and one
+        // fully cached: the fallback for planes 3..5 must leave outputs
+        // and counters bit-identical, on the same RNG stream
+        let (k, n) = (96, 24);
+        let w = randw(41, k * n);
+        let cfg_small = DeviceConfig {
+            act_bits: 3,
+            ..cfg()
+        };
+        let cfg_big = DeviceConfig {
+            act_bits: 7,
+            ..cfg()
+        };
+        let a_small = CrossbarArray::program(&w, k, n, &cfg_small);
+        let a_big = CrossbarArray::program(&w, k, n, &cfg_big);
+        let x: Vec<f32> = {
+            let mut rx = Rng::new(42);
+            (0..k).map(|_| rx.next_f32()).collect()
+        };
+        let (mut o1, mut o2) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let mut c1 = ReadCounters::default();
+        let mut c2 = ReadCounters::default();
+        let mut r1 = Rng::new(43);
+        let mut r2 = Rng::new(43);
+        let plan = a_small.read_plan(ReadMode::Decomposed);
+        a_small.mac(&x, &mut o1, plan, 5, 1.0, &mut r1, &mut c1);
+        a_big.mac(&x, &mut o2, plan, 5, 1.0, &mut r2, &mut c2);
+        assert_eq!(o1, o2, "fallback planes diverged from cached planes");
+        assert_eq!(c1, c2);
+        assert_eq!(r1.next_u64(), r2.next_u64());
     }
 
     #[test]

@@ -34,6 +34,21 @@
 //! the bit-exactness oracle for the fused kernel in the test suite and
 //! the denominator of the `kernel_vs_scalar_ratio` CI perf gate
 //! (`benches/hotpath.rs`).
+//!
+//! # Programmed-weight plane cache (PR 9, DESIGN.md §13)
+//!
+//! Decomposed (bit-serial) reads drive every plane `p` with binary row
+//! levels and scale the column current by `2^p`.  The weight side of
+//! that product never changes after programming, so
+//! [`Tile::with_plane_cache`] precomputes `w_scaled[p] = 2^p * w_norm`
+//! once at program time and [`Tile::current_sum_plane`] reads the
+//! cached plane with a per-state noise table `2^p * sigma_norm * c_l` —
+//! two multiplies per cell become two adds.  Because `2^p` is a power
+//! of two, IEEE-754 scaling by it is exact and commutes with rounding:
+//! `fl(2^p*w + 2^p*nz) = 2^p * fl(w + nz)`, so cached-plane outputs and
+//! energy are **bit-identical** to [`Tile::current_sum_scaled`] with
+//! `scale = 2^p` (pinned by `plane_cache_matches_scaled_kernel`), and
+//! the RNG stream is untouched (same per-active-row bulk draws).
 
 use crate::device::state_offsets;
 use crate::rng::Rng;
@@ -57,10 +72,32 @@ pub struct Tile {
     /// (the |w| sum factors out of eq. 20), so energy accounting no
     /// longer walks every cell.
     row_abs: Vec<f32>,
+    /// Cached weight-side bit-plane decomposition: `plane_bits`
+    /// contiguous copies of `w_norm`, plane `p` pre-scaled by `2^p`
+    /// (exact in IEEE-754).  Empty when the cache is not built
+    /// ([`Tile::new`]); [`Tile::current_sum_plane`] falls back to the
+    /// multiply-per-cell kernel for planes beyond `plane_bits`.
+    w_planes: Vec<f32>,
+    plane_bits: u32,
 }
 
 impl Tile {
     pub fn new(w_norm: Vec<f32>, rows: usize, cols: usize, num_states: usize) -> Self {
+        Self::with_plane_cache(w_norm, rows, cols, num_states, 0)
+    }
+
+    /// Like [`Tile::new`], additionally precomputing the programmed-weight
+    /// plane cache for decomposed reads of up to `plane_bits` activation
+    /// bit-planes (`plane_bits = 0` skips the cache entirely).  Costs
+    /// `plane_bits` extra copies of the tile's weights in memory; buys
+    /// [`Tile::current_sum_plane`] a multiply-free inner loop.
+    pub fn with_plane_cache(
+        w_norm: Vec<f32>,
+        rows: usize,
+        cols: usize,
+        num_states: usize,
+        plane_bits: u32,
+    ) -> Self {
         assert_eq!(w_norm.len(), rows * cols);
         assert!(cols <= MAX_TILE_COLS, "tile wider than the kernel lane buffer");
         let row_abs = if cols == 0 {
@@ -71,13 +108,25 @@ impl Tile {
                 .map(|row| row.iter().map(|w| w.abs()).sum())
                 .collect()
         };
+        let mut w_planes = Vec::with_capacity(plane_bits as usize * w_norm.len());
+        for p in 0..plane_bits {
+            let scale = (1u64 << p) as f32;
+            w_planes.extend(w_norm.iter().map(|&w| scale * w));
+        }
         Tile {
             w_norm,
             rows,
             cols,
             offsets: state_offsets(num_states),
             row_abs,
+            w_planes,
+            plane_bits,
         }
+    }
+
+    /// Activation bit-planes the programmed-weight cache covers.
+    pub fn plane_bits(&self) -> u32 {
+        self.plane_bits
     }
 
     pub fn rows(&self) -> usize {
@@ -174,6 +223,86 @@ impl Tile {
                 }
             }
             energy += (self.row_abs[r] * lv) as f64;
+        }
+        energy
+    }
+
+    /// Bit-plane read off the programmed-weight plane cache: binary row
+    /// `levels` (one activation bit-plane), accumulating
+    /// `out[c] += 2^p * (w_norm[r,c] + sigma_norm * c_state)` for every
+    /// active row — bit-identical to [`Tile::current_sum_scaled`] with
+    /// `scale = 2^p` on the same RNG stream (see the module docs for the
+    /// exactness argument), but reading the pre-scaled plane
+    /// `2^p * w_norm` and a pre-scaled per-state noise table instead of
+    /// multiplying per cell.  Planes beyond the cache
+    /// ([`Tile::plane_bits`]) fall back to the multiply kernel.
+    ///
+    /// Returns the same cell-energy term as the scaled kernel
+    /// (`sum_r row_abs[r] * level[r]` — the output scale never enters
+    /// the energy accounting).
+    pub fn current_sum_plane(
+        &self,
+        levels: &[u32],
+        out: &mut [f32],
+        p: u32,
+        sigma_norm: f32,
+        rng: &mut Rng,
+    ) -> f64 {
+        if p >= self.plane_bits {
+            let scale = (1u64 << p) as f32;
+            return self.current_sum_scaled(levels, out, scale, sigma_norm, rng);
+        }
+        assert_eq!(levels.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        let cols = self.cols;
+        let m = self.offsets.len() as u32;
+        let sample_noise = sigma_norm != 0.0 && m > 1;
+        let plane = &self.w_planes[p as usize * self.rows * cols..][..self.rows * cols];
+        // per-state noise, pre-scaled by the plane weight: 2^p is exact,
+        // so noisetab[i] == 2^p * (sigma_norm * offsets[i]) bitwise
+        let plane_sigma = (1u64 << p) as f32 * sigma_norm;
+        let mut noisetab = [0.0f32; 256];
+        for (nt, &c) in noisetab.iter_mut().zip(&self.offsets) {
+            *nt = plane_sigma * c;
+        }
+        let mut idx = [0u8; MAX_TILE_COLS];
+        let mut noise = [0.0f32; MAX_TILE_COLS];
+        let mut energy = 0.0f64;
+        for r in 0..self.rows {
+            let level = levels[r];
+            if level == 0 {
+                continue;
+            }
+            debug_assert_eq!(level, 1, "bit-plane levels are binary");
+            let row = &plane[r * cols..(r + 1) * cols];
+            if sample_noise {
+                rng.fill_state_indices(m, &mut idx[..cols]);
+                for (nz, &i) in noise[..cols].iter_mut().zip(&idx[..cols]) {
+                    *nz = noisetab[i as usize];
+                }
+                // fused multiply-free accumulate over 8-wide lanes
+                let mut o8 = out.chunks_exact_mut(8);
+                let mut w8 = row.chunks_exact(8);
+                let mut n8 = noise[..cols].chunks_exact(8);
+                for ((o, w), nz) in (&mut o8).zip(&mut w8).zip(&mut n8) {
+                    for l in 0..8 {
+                        o[l] += w[l] + nz[l];
+                    }
+                }
+                for ((o, &w), &nz) in o8
+                    .into_remainder()
+                    .iter_mut()
+                    .zip(w8.remainder())
+                    .zip(n8.remainder())
+                {
+                    *o += w + nz;
+                }
+            } else {
+                for (o, &w) in out.iter_mut().zip(row) {
+                    *o += w;
+                }
+            }
+            energy += (self.row_abs[r] * level as f32) as f64;
         }
         energy
     }
@@ -327,6 +456,54 @@ mod tests {
                 assert_eq!(e1, e2, "m={m} energy");
                 // both consumed the same stream
                 assert_eq!(r1.next_u64(), r2.next_u64());
+            }
+        }
+    }
+
+    #[test]
+    fn plane_cache_matches_scaled_kernel() {
+        // the cached-plane kernel must be bit-identical — outputs, energy
+        // AND RNG stream — to current_sum_scaled at scale 2^p, for every
+        // cached plane, state count, and sigma (incl. the noiseless path);
+        // planes beyond the cache take the fallback and must match too
+        let (rows, cols) = (7, 37); // odd width exercises remainder lanes
+        let plane_bits = 5u32;
+        let mut wr = Rng::new(200);
+        for &m in &[2usize, 3, 4, 256] {
+            let w: Vec<f32> = (0..rows * cols).map(|_| wr.normal() * 0.5).collect();
+            let cached = Tile::with_plane_cache(w.clone(), rows, cols, m, plane_bits);
+            let plain = Tile::new(w, rows, cols, m);
+            assert_eq!(cached.plane_bits(), plane_bits);
+            assert_eq!(plain.plane_bits(), 0);
+            // binary plane levels with zero rows mixed in
+            let levels: Vec<u32> = (0..rows as u32).map(|r| r % 2).collect();
+            for p in 0..plane_bits + 2 {
+                for &sigma in &[0.2f32, 0.013, 0.0] {
+                    let mut r1 = Rng::new(m as u64 * 31 + p as u64);
+                    let mut r2 = r1.clone();
+                    let mut o1 = vec![0.25f32; cols]; // non-zero accumulators
+                    let mut o2 = o1.clone();
+                    let e1 = cached.current_sum_plane(&levels, &mut o1, p, sigma, &mut r1);
+                    let scale = (1u64 << p) as f32;
+                    let e2 =
+                        plain.current_sum_scaled(&levels, &mut o2, scale, sigma, &mut r2);
+                    assert_eq!(o1, o2, "m={m} p={p} sigma={sigma}");
+                    assert_eq!(e1, e2, "m={m} p={p} energy");
+                    assert_eq!(r1.next_u64(), r2.next_u64(), "stream must match");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plane_cache_prescales_weights_exactly() {
+        let w = vec![0.5f32, -0.25, 0.125, 1.0, -1.0, 0.75];
+        let t = Tile::with_plane_cache(w.clone(), 3, 2, 4, 3);
+        // plane p is exactly 2^p * w_norm, contiguous and plane-major
+        assert_eq!(t.w_planes.len(), 3 * w.len());
+        for p in 0..3usize {
+            for (i, &wv) in w.iter().enumerate() {
+                assert_eq!(t.w_planes[p * w.len() + i], (1u64 << p) as f32 * wv);
             }
         }
     }

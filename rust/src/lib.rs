@@ -25,6 +25,7 @@
 //! experiments.
 
 pub mod baselines;
+pub mod cache;
 pub mod config;
 pub mod coordinator;
 pub mod crossbar;

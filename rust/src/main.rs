@@ -79,6 +79,11 @@ FLAGS (defaults in parentheses):
                       one epoll event loop now, not a handler pool
   --max-conns-per-peer N serve-http: simultaneous connections per peer IP,
                       429 above (64)
+  --cache-entries N   serve-http: exact result cache capacity in entries;
+                      0 disables the cache entirely (0)
+  --cache-mb N        serve-http: exact result cache payload cap in MiB;
+                      0 disables the cache (64 — so --cache-entries N
+                      alone arms it)
   --model-store FILE  serve-http: stored model (.emtm) whose trained
                       per-layer rho shapes the tier energy plans
                       (plan source \"trained\"; analytic otherwise)
@@ -92,6 +97,11 @@ FLAGS (defaults in parentheses):
                       event loop (C10K client: thousands of connections
                       without thousands of threads)
   --qps F             loadgen: aggregate target rate, 0 = closed loop (0)
+  --key-reuse SPEC    loadgen: zipf:S,N — draw request images from N
+                      distinct contents under a Zipf(S) popularity law
+                      (deterministic), so a server-side result cache
+                      sees repeats; the report gains a \"cache\" block
+                      (hit_ratio, saved_uj, hit/miss p50) (off)
   --tier T            loadgen: low|normal|high|mixed (normal)
   --endpoint E        loadgen: classify|infer (classify)
   --blocking          loadgen: send \"blocking\": true on every request,
@@ -466,6 +476,10 @@ fn serve_http_cmd(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
         addr: format!("{host}:{port}"),
         max_conns: args.parse_or("max-conns", 10_000usize)?,
         max_conns_per_peer: args.parse_or("max-conns-per-peer", 64usize)?,
+        // exact result cache: off unless --cache-entries is set (the MiB
+        // cap defaults on so one flag arms it; either knob at 0 disables)
+        cache_entries: args.parse_or("cache-entries", 0usize)?,
+        cache_bytes: args.parse_or("cache-mb", 64usize)? << 20,
         trained_rho,
         // batch bodies are big (a 64-image CIFAR batch is ~2 MiB of JSON),
         // so the body cap is a first-class knob
@@ -539,6 +553,10 @@ fn loadgen_cmd(args: &Args) -> Result<()> {
         blocking: args.has("blocking"),
         trace_sample: args.parse_or("trace-sample", 0usize)?,
         event_loop: args.has("event-loop"),
+        key_reuse: match args.get("key-reuse") {
+            Some(spec) => Some(spec.parse().map_err(|e: String| anyhow::anyhow!(e))?),
+            None => None,
+        },
     };
     let out = args.str_or("out", "BENCH_serve.json");
     let batch_sweep: Vec<usize> = match args.get("batch-sweep") {

@@ -66,6 +66,12 @@ use crate::Result;
 /// plus its span record so far.  The scheduler fills queue/batch/compute
 /// spans, worker/steal attribution and per-request energy; the HTTP
 /// layer completes `write_us`/`total_us` and feeds the flight recorder.
+///
+/// The result cache (`server::cache`) memoizes successful replies off
+/// the completion path: `logits` becomes the cached value verbatim, and
+/// `span.images`/`span.energy_uj` become the entry's image count and
+/// saved-energy credit.  Errors never produce a `Reply`, so they can
+/// never be cached.
 pub struct Reply {
     pub logits: Vec<f32>,
     pub span: SpanRecord,

@@ -306,15 +306,20 @@ impl<S: Read + Write> HttpConn<S> {
         &mut self,
         max_body: usize,
     ) -> Result<(u16, Vec<(String, String)>, Vec<u8>)> {
-        let head = match self.read_head()? {
-            HeadOutcome::Head(h) => h,
-            HeadOutcome::Closed => anyhow::bail!("server closed the connection"),
-            HeadOutcome::TimedOut => anyhow::bail!("timed out waiting for response"),
-        };
-        let (status, headers, content_length) = parse_response_head(&head)?;
-        anyhow::ensure!(content_length <= max_body, "response body too large");
-        let body = self.read_body(content_length)?;
-        Ok((status, headers, body))
+        loop {
+            let head = match self.read_head()? {
+                HeadOutcome::Head(h) => h,
+                HeadOutcome::Closed => anyhow::bail!("server closed the connection"),
+                HeadOutcome::TimedOut => anyhow::bail!("timed out waiting for response"),
+            };
+            let (status, headers, content_length) = parse_response_head(&head)?;
+            if (100..200).contains(&status) {
+                continue; // 1xx interim (e.g. 100 Continue): bodiless, not final
+            }
+            anyhow::ensure!(content_length <= max_body, "response body too large");
+            let body = self.read_body(content_length)?;
+            return Ok((status, headers, body));
+        }
     }
 }
 
@@ -348,6 +353,9 @@ struct RequestHead {
     headers: Vec<(String, String)>,
     keep_alive: bool,
     content_length: usize,
+    /// The client declared `Expect: 100-continue` and is waiting for an
+    /// interim response before shipping its body (RFC 9110 §10.1.1).
+    expect_continue: bool,
 }
 
 impl RequestHead {
@@ -394,12 +402,17 @@ fn parse_request_head(head: &[u8]) -> Result<RequestHead> {
         Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
         _ => version == "HTTP/1.1",
     };
+    let expect_continue = headers
+        .iter()
+        .find(|(k, _)| k == "expect")
+        .map_or(false, |(_, v)| v.eq_ignore_ascii_case("100-continue"));
     Ok(RequestHead {
         method,
         path,
         headers,
         keep_alive,
         content_length,
+        expect_continue,
     })
 }
 
@@ -491,6 +504,10 @@ pub struct RequestParser {
     frame: FrameBuf,
     /// Head parsed, waiting for `content_length` body bytes.
     pending: Option<RequestHead>,
+    /// The pending head's `Expect: 100-continue` was already claimed by
+    /// [`RequestParser::take_expect_continue`] (one interim response per
+    /// request).
+    continue_claimed: bool,
 }
 
 impl Default for RequestParser {
@@ -504,6 +521,7 @@ impl RequestParser {
         RequestParser {
             frame: FrameBuf::new(),
             pending: None,
+            continue_claimed: false,
         }
     }
 
@@ -531,9 +549,13 @@ impl RequestParser {
             };
             let parsed = parse_request_head(&head)?;
             if parsed.content_length > max_body {
+                // Declared length over the cap: typed 413 at head time —
+                // an `Expect: 100-continue` client learns its body is
+                // rejected before shipping a single body byte.
                 return Err(anyhow::Error::new(PayloadTooLarge { limit: max_body }));
             }
             self.pending = Some(parsed);
+            self.continue_claimed = false;
         }
         let need = self.pending.as_ref().map(|h| h.content_length).unwrap_or(0);
         match self.frame.take_body(need) {
@@ -542,6 +564,23 @@ impl RequestParser {
                 Ok(Some(head.into_request(body)))
             }
             None => Ok(None),
+        }
+    }
+
+    /// True at most once per request: the pending (head-parsed, body
+    /// acceptable but not yet buffered) request declared
+    /// `Expect: 100-continue` and still owes the client its interim
+    /// `100 Continue` line.  The event loop writes it on `true`; a head
+    /// over the body cap never reaches this point — it surfaced as a
+    /// typed [`PayloadTooLarge`] from [`RequestParser::try_next`]
+    /// instead, so the rejection beats the body onto the wire.
+    pub fn take_expect_continue(&mut self) -> bool {
+        match &self.pending {
+            Some(h) if h.expect_continue && !self.continue_claimed => {
+                self.continue_claimed = true;
+                true
+            }
+            _ => false,
         }
     }
 }
@@ -824,6 +863,55 @@ mod tests {
         let junk = vec![b'a'; MAX_HEAD_BYTES + 16];
         p.feed(&junk);
         assert!(p.try_next(1024).is_err());
+    }
+
+    #[test]
+    fn expect_continue_is_surfaced_once_per_request() {
+        let mut p = RequestParser::new();
+        p.feed(b"POST /v1/infer HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 5\r\n\r\n");
+        assert!(p.try_next(1024).unwrap().is_none()); // head parsed, body pending
+        assert!(p.take_expect_continue(), "pending Expect head fires once");
+        assert!(!p.take_expect_continue(), "second claim must not fire");
+        p.feed(b"hello");
+        let r = p.try_next(1024).unwrap().expect("complete after body");
+        assert_eq!(r.body, b"hello");
+        // a follow-up request without the header never fires
+        p.feed(b"POST / HTTP/1.1\r\nContent-Length: 2\r\n\r\n");
+        assert!(p.try_next(1024).unwrap().is_none());
+        assert!(!p.take_expect_continue());
+        p.feed(b"ab");
+        assert!(p.try_next(1024).unwrap().is_some());
+        // a fresh Expect head on the same parser fires again
+        // (case-insensitive value per RFC 9110)
+        p.feed(b"POST / HTTP/1.1\r\nexpect: 100-CONTINUE\r\nContent-Length: 1\r\n\r\n");
+        assert!(p.try_next(1024).unwrap().is_none());
+        assert!(p.take_expect_continue());
+    }
+
+    #[test]
+    fn expect_continue_over_cap_is_typed_413_with_no_interim() {
+        // the declared length is over the cap: the parser surfaces the
+        // typed 413 at head time and never offers the interim response,
+        // so the rejection reaches the client before any body byte
+        let mut p = RequestParser::new();
+        p.feed(b"POST / HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 999\r\n\r\n");
+        let err = p.try_next(10).unwrap_err();
+        assert!(err.is::<PayloadTooLarge>());
+        assert!(!p.take_expect_continue());
+    }
+
+    #[test]
+    fn client_skips_interim_100_before_final_response() {
+        let resp = Response::json(
+            200,
+            &crate::util::json::Json::obj(vec![("ok", crate::util::json::Json::Bool(true))]),
+        );
+        let mut bytes = b"HTTP/1.1 100 Continue\r\n\r\n".to_vec();
+        bytes.extend_from_slice(&render_response(&resp, true));
+        let mut c = HttpConn::new(Cursor::new(bytes));
+        let (status, body) = c.read_response(1024).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, resp.body);
     }
 
     #[test]

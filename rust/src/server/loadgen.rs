@@ -37,10 +37,11 @@
 //! a concurrency claim in `BENCH_serve.json` is backed by the server's
 //! own gauge rather than the client's bookkeeping.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashSet};
 use std::io::{ErrorKind, Read as _, Write as _};
 use std::net::TcpStream;
 use std::os::fd::AsRawFd;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::data::{Dataset, Split, Suite, DATA_SEED, IMG_LEN};
@@ -88,6 +89,14 @@ pub struct LoadgenConfig {
     /// semantics; this is the only driver that scales to 10k+
     /// concurrent sockets.
     pub event_loop: bool,
+    /// `--key-reuse zipf:S,N`: draw each request's image content from
+    /// `N` distinct contents under a Zipf(`S`) popularity law instead
+    /// of the dense never-repeating default.  Deterministic (request
+    /// `global` always draws the same content, on either driver), so a
+    /// server-side exact result cache sees repeats and the report can
+    /// predict which requests were repeat-content.  `None` keeps the
+    /// legacy dense schedule byte-identical.
+    pub key_reuse: Option<KeyReuse>,
 }
 
 impl Default for LoadgenConfig {
@@ -103,8 +112,90 @@ impl Default for LoadgenConfig {
             blocking: false,
             trace_sample: 0,
             event_loop: false,
+            key_reuse: None,
         }
     }
+}
+
+/// Parsed `--key-reuse zipf:S,N` spec: `n` distinct request contents
+/// drawn under a Zipf(`s`) popularity law.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KeyReuse {
+    /// Zipf exponent (popularity skew); rank k gets weight `1/k^s`.
+    pub s: f64,
+    /// Distinct request contents in the pool.
+    pub n: usize,
+}
+
+impl std::str::FromStr for KeyReuse {
+    type Err = String;
+    fn from_str(spec: &str) -> std::result::Result<Self, Self::Err> {
+        let err = || format!("bad --key-reuse {spec:?} (want zipf:S,N, e.g. zipf:1.1,32)");
+        let body = spec.strip_prefix("zipf:").ok_or_else(err)?;
+        let (s, n) = body.split_once(',').ok_or_else(err)?;
+        let s: f64 = s.trim().parse().map_err(|_| err())?;
+        let n: usize = n.trim().parse().map_err(|_| err())?;
+        if !s.is_finite() || s <= 0.0 {
+            return Err(format!("--key-reuse exponent must be finite and positive, got {s}"));
+        }
+        if n == 0 {
+            return Err("--key-reuse needs at least one distinct content".into());
+        }
+        Ok(KeyReuse { s, n })
+    }
+}
+
+/// Salt of the per-request popularity draw ("zipf"): a dedicated
+/// counter-RNG stream, so reuse sampling can never perturb the image
+/// content streams.
+const ZIPF_SALT: u64 = 0x7a69_7066;
+
+/// Deterministic Zipf sampler over content ranks `[0, n)`: request
+/// `global` always draws the same rank, on any driver, in any process.
+#[derive(Clone, Debug)]
+pub struct ZipfSampler {
+    /// Normalized cumulative weights of ranks `1..=n`.
+    cdf: Vec<f64>,
+}
+
+impl ZipfSampler {
+    pub fn new(s: f64, n: usize) -> ZipfSampler {
+        assert!(n > 0, "zipf sampler needs at least one rank");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for k in 1..=n {
+            acc += (k as f64).powf(s).recip();
+            cdf.push(acc);
+        }
+        for v in &mut cdf {
+            *v /= acc;
+        }
+        ZipfSampler { cdf }
+    }
+
+    /// Content rank of request `global` (0 = most popular).
+    pub fn rank(&self, global: u64) -> usize {
+        let u = f64::from(Rng::stream(ZIPF_SALT, global).next_f32());
+        self.cdf
+            .partition_point(|&c| c < u)
+            .min(self.cdf.len() - 1)
+    }
+}
+
+/// Predict, per scheduled request, whether its `(tier, content)` pair
+/// repeats an earlier one — the requests an armed server-side result
+/// cache serves without compute.  Concurrency can turn a predicted hit
+/// into a real miss (the first occurrence may still be in flight), so
+/// the exact ratio comes from the server's own counters; this split
+/// buckets client latencies.
+fn predict_repeats(requests: u64, fixed_tier: Option<EnergyTier>, z: &ZipfSampler) -> Vec<bool> {
+    let mut seen = HashSet::new();
+    (0..requests)
+        .map(|g| {
+            let tier = fixed_tier.map_or((g % 3) as usize, EnergyTier::index);
+            !seen.insert((tier, z.rank(g)))
+        })
+        .collect()
 }
 
 /// Aggregated result of one load-generation run.
@@ -163,6 +254,46 @@ pub struct LoadgenReport {
     /// sockets (0 when the server predates the gauge or the scrape
     /// failed).  This is the number a C10K claim rests on.
     pub server_open_conns_peak: u64,
+    /// The `--key-reuse` spec driven (reports without one omit the
+    /// cache block entirely — legacy schema).
+    pub key_reuse: Option<KeyReuse>,
+    /// Result-cache observation over exactly this run (`--key-reuse`
+    /// set): server-side counter deltas plus the client's predicted
+    /// hit/miss latency split.
+    pub cache: Option<CacheObs>,
+}
+
+/// What one `--key-reuse` run observed of the server's exact result
+/// cache: `hit_ratio`/`saved_uj` are the server's own
+/// `emtopt_cache_*` counter deltas bracketing the run (exact, 0 when
+/// the cache is off or the scrape failed); the p50s split client
+/// latencies by the schedule's repeat-content prediction.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheObs {
+    /// Server-side `hits / (hits + misses)` over the run's delta.
+    pub hit_ratio: f64,
+    /// Compute energy the server's hits skipped over the run (uJ).
+    pub saved_uj: f64,
+    /// Client p50 over predicted repeat-content requests (us).
+    pub hit_p50_us: u64,
+    /// Client p50 over predicted first-occurrence requests (us).
+    pub miss_p50_us: u64,
+    /// Scheduled requests predicted as repeats / first occurrences.
+    pub predicted_hits: u64,
+    pub predicted_misses: u64,
+}
+
+impl CacheObs {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("hit_ratio", Json::Num(self.hit_ratio)),
+            ("saved_uj", Json::Num(self.saved_uj)),
+            ("hit_p50_us", Json::Num(self.hit_p50_us as f64)),
+            ("miss_p50_us", Json::Num(self.miss_p50_us as f64)),
+            ("predicted_hits", Json::Num(self.predicted_hits as f64)),
+            ("predicted_misses", Json::Num(self.predicted_misses as f64)),
+        ])
+    }
 }
 
 /// Summary of one (tier, stage) cell of the server's stage-latency
@@ -245,6 +376,18 @@ impl LoadgenReport {
                 st.tier, st.stage, st.count, st.mean_us, st.p50_us, st.p95_us, st.p99_us
             ));
         }
+        if let (Some(kr), Some(c)) = (self.key_reuse, &self.cache) {
+            s.push_str(&format!(
+                "\n  key reuse zipf:{},{}: server hit ratio {:.1}% | saved {:.1} uJ | \
+                 hit p50 {:.2} ms | miss p50 {:.2} ms",
+                kr.s,
+                kr.n,
+                100.0 * c.hit_ratio,
+                c.saved_uj,
+                c.hit_p50_us as f64 / 1000.0,
+                c.miss_p50_us as f64 / 1000.0
+            ));
+        }
         if self.trace_sample > 0 {
             s.push_str(&format!(
                 "\n  traced 1/{}: {} echoes | inline mean queue_wait {:.1} us | \
@@ -303,6 +446,19 @@ impl LoadgenReport {
                 Json::Arr(self.stage_breakdown.iter().map(|s| s.to_json()).collect()),
             ),
         ];
+        if let Some(kr) = self.key_reuse {
+            fields.push((
+                "key_reuse",
+                Json::obj(vec![
+                    ("dist", Json::Str("zipf".into())),
+                    ("s", Json::Num(kr.s)),
+                    ("n", Json::Num(kr.n as f64)),
+                ]),
+            ));
+        }
+        if let Some(c) = &self.cache {
+            fields.push(("cache", c.to_json()));
+        }
         if self.trace_sample > 0 {
             fields.push(("trace_sample", Json::Num(self.trace_sample as f64)));
             fields.push(("trace_sampled", Json::Num(self.trace_sampled as f64)));
@@ -352,6 +508,21 @@ struct Counts {
     labeled: u64,
     /// OK responses that echoed an inline `"trace"` breakdown.
     trace_sampled: u64,
+}
+
+/// OK-response latencies bucketed by the schedule's repeat-content
+/// prediction (`--key-reuse` runs only; empty otherwise).
+#[derive(Clone, Debug, Default)]
+struct HitMissSplit {
+    hit_us: Vec<u64>,
+    miss_us: Vec<u64>,
+}
+
+impl HitMissSplit {
+    fn merge(&mut self, mut other: HitMissSplit) {
+        self.hit_us.append(&mut other.hit_us);
+        self.miss_us.append(&mut other.miss_us);
+    }
 }
 
 /// Open a keep-alive connection to the server, or `None` on failure.
@@ -496,15 +667,20 @@ fn scrape_metrics_text(addr: &str) -> Result<String> {
     Ok(String::from_utf8(body)?)
 }
 
-/// Scrape `/metrics` and extract the stage-latency histograms.
-fn scrape_stages(addr: &str) -> Result<StageScrape> {
-    Ok(parse_stage_scrape(&scrape_metrics_text(addr)?))
-}
-
 /// Extract one unlabelled gauge/counter value from an exposition.  The
 /// name must be followed by a space, so `emtopt_http_open_conns` never
 /// matches the `..._peak` line (or `# HELP` comments).
 fn parse_gauge(text: &str, name: &str) -> Option<u64> {
+    text.lines().find_map(|line| {
+        line.strip_prefix(name)
+            .and_then(|rest| rest.strip_prefix(' '))
+            .and_then(|v| v.trim().parse().ok())
+    })
+}
+
+/// Float flavour of [`parse_gauge`] for families rendered with a
+/// fractional part (`emtopt_cache_saved_uj_total 2.5`).
+fn parse_gauge_f64(text: &str, name: &str) -> Option<f64> {
     text.lines().find_map(|line| {
         line.strip_prefix(name)
             .and_then(|rest| rest.strip_prefix(' '))
@@ -631,15 +807,23 @@ fn build_request(
     fixed_tier: Option<EnergyTier>,
     blocking: bool,
     trace_sample: u64,
+    sampler: Option<&ZipfSampler>,
     img: &mut [f32],
     labels: &mut Vec<usize>,
 ) -> (String, bool) {
     let tier = fixed_tier.unwrap_or(EnergyTier::ALL[(global % 3) as usize]);
+    // content index: dense (never repeats) by default; a --key-reuse
+    // run draws it from the Zipf popularity pool, so two requests with
+    // the same rank carry byte-identical pixels
+    let content = match sampler {
+        Some(z) => z.rank(global) as u64,
+        None => global,
+    };
     labels.clear();
     for j in 0..batch {
-        // image index space is dense across the whole run: request
-        // `global` carries images [global*batch, (global+1)*batch)
-        let sample = global * batch as u64 + j as u64;
+        // image index space is dense across contents: content `c`
+        // carries images [c*batch, (c+1)*batch)
+        let sample = content * batch as u64 + j as u64;
         let row = &mut img[j * input_len..(j + 1) * input_len];
         match dataset {
             Some(ds) => labels.push(ds.sample_into(Split::Test, sample, row) as usize),
@@ -671,15 +855,22 @@ fn score_response(
     classify: bool,
     labels: &[usize],
     traced: bool,
+    predicted_repeat: Option<bool>,
     batch: usize,
     counts: &mut Counts,
     latencies: &mut Vec<u64>,
+    split: &mut HitMissSplit,
     spans: &mut Vec<[u64; 3]>,
 ) {
     match status {
         200 => {
             counts.ok += 1;
             latencies.push(us);
+            match predicted_repeat {
+                Some(true) => split.hit_us.push(us),
+                Some(false) => split.miss_us.push(us),
+                None => {}
+            }
             let parsed = if (classify && !labels.is_empty()) || traced {
                 std::str::from_utf8(resp_body)
                     .ok()
@@ -756,16 +947,45 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     };
     let path = if cfg.classify { "/v1/classify" } else { "/v1/infer" };
 
-    // Stage-histogram scrape bracketing the run: the delta attributes
-    // exactly this run's requests.  Tolerated to fail (older server,
-    // scrape race) — the breakdown is then empty, never wrong.
-    let scrape_before = scrape_stages(&cfg.addr).unwrap_or_default();
+    // Key-reuse machinery: the Zipf content sampler plus the schedule's
+    // repeat-content prediction (first occurrence of a (tier, rank)
+    // pair = the request that computes; repeats = the ones an armed
+    // server cache serves without compute).
+    let sampler = cfg.key_reuse.map(|kr| ZipfSampler::new(kr.s, kr.n));
+    let predicted: Option<Arc<Vec<bool>>> = sampler
+        .as_ref()
+        .map(|z| Arc::new(predict_repeats(cfg.requests, cfg.tier, z)));
+
+    // Scrapes bracketing the run: the deltas attribute exactly this
+    // run's requests — stage histograms and (key-reuse runs) the
+    // result-cache counters.  Tolerated to fail (older server, scrape
+    // race) — the derived stats are then empty/zero, never wrong.
+    let before_text = scrape_metrics_text(&cfg.addr).unwrap_or_default();
+    let scrape_before = parse_stage_scrape(&before_text);
 
     let t0 = Instant::now();
-    let (total, mut latencies, spans) = if cfg.event_loop {
-        run_event_loop(cfg, input_len, dataset.as_ref(), interval, path, t0)?
+    let (total, mut latencies, split, spans) = if cfg.event_loop {
+        run_event_loop(
+            cfg,
+            input_len,
+            dataset.as_ref(),
+            interval,
+            path,
+            sampler.as_ref(),
+            predicted.clone(),
+            t0,
+        )?
     } else {
-        run_threaded(cfg, input_len, dataset, interval, path, t0)?
+        run_threaded(
+            cfg,
+            input_len,
+            dataset,
+            interval,
+            path,
+            sampler.clone(),
+            predicted.clone(),
+            t0,
+        )?
     };
     let elapsed_s = t0.elapsed().as_secs_f64();
     let after_text = scrape_metrics_text(&cfg.addr).unwrap_or_default();
@@ -773,6 +993,35 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
     let server_open_conns_peak =
         parse_gauge(&after_text, "emtopt_http_open_conns_peak").unwrap_or(0);
     let breakdown = stage_breakdown(&scrape_before, &scrape_after);
+    let cache = cfg.key_reuse.map(|_| {
+        let delta = |name: &str| {
+            (parse_gauge_f64(&after_text, name).unwrap_or(0.0)
+                - parse_gauge_f64(&before_text, name).unwrap_or(0.0))
+            .max(0.0)
+        };
+        let hits = delta("emtopt_cache_hits_total");
+        let misses = delta("emtopt_cache_misses_total");
+        let mut hit_us = split.hit_us;
+        let mut miss_us = split.miss_us;
+        hit_us.sort_unstable();
+        miss_us.sort_unstable();
+        CacheObs {
+            hit_ratio: if hits + misses > 0.0 {
+                hits / (hits + misses)
+            } else {
+                0.0
+            },
+            saved_uj: delta("emtopt_cache_saved_uj_total"),
+            hit_p50_us: percentile(&hit_us, 0.50),
+            miss_p50_us: percentile(&miss_us, 0.50),
+            predicted_hits: predicted
+                .as_ref()
+                .map_or(0, |p| p.iter().filter(|&&h| h).count() as u64),
+            predicted_misses: predicted
+                .as_ref()
+                .map_or(0, |p| p.iter().filter(|&&h| !h).count() as u64),
+        }
+    });
     let trace_inline_mean_us = if spans.is_empty() {
         [0.0; 3]
     } else {
@@ -822,6 +1071,8 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         trace_inline_mean_us,
         event_loop: cfg.event_loop,
         server_open_conns_peak,
+        key_reuse: cfg.key_reuse,
+        cache,
     })
 }
 
@@ -829,14 +1080,17 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
 /// walks its striped slice of the schedule with blocking I/O.  Simple
 /// and accurate up to a few hundred connections; beyond that, use the
 /// epoll driver.
+#[allow(clippy::too_many_arguments)]
 fn run_threaded(
     cfg: &LoadgenConfig,
     input_len: usize,
     dataset: Option<Dataset>,
     interval: Duration,
     path: &'static str,
+    sampler: Option<ZipfSampler>,
+    predicted: Option<Arc<Vec<bool>>>,
     t0: Instant,
-) -> Result<(Counts, Vec<u64>, Vec<[u64; 3]>)> {
+) -> Result<(Counts, Vec<u64>, HitMissSplit, Vec<[u64; 3]>)> {
     let batch = cfg.batch;
     let conns = cfg.connections as u64;
     let base = cfg.requests / conns;
@@ -850,9 +1104,12 @@ fn run_threaded(
             let classify = cfg.classify;
             let blocking = cfg.blocking;
             let trace_sample = cfg.trace_sample as u64;
-            std::thread::spawn(move || -> (Counts, Vec<u64>, Vec<[u64; 3]>) {
+            let sampler = sampler.clone();
+            let predicted = predicted.clone();
+            std::thread::spawn(move || -> (Counts, Vec<u64>, HitMissSplit, Vec<[u64; 3]>) {
                 let mut counts = Counts::default();
                 let mut latencies = Vec::with_capacity(my_count as usize);
+                let mut split = HitMissSplit::default();
                 let mut spans: Vec<[u64; 3]> = Vec::new();
                 let mut conn = connect_http(&addr);
                 let mut img = vec![0.0f32; input_len * batch];
@@ -871,9 +1128,12 @@ fn run_threaded(
                         fixed_tier,
                         blocking,
                         trace_sample,
+                        sampler.as_ref(),
                         &mut img,
                         &mut labels,
                     );
+                    let predicted_repeat =
+                        predicted.as_ref().map(|p| p[global as usize]);
                     let start = if interval.is_zero() {
                         Instant::now()
                     } else {
@@ -925,22 +1185,25 @@ fn run_threaded(
                         classify,
                         &labels,
                         traced,
+                        predicted_repeat,
                         batch,
                         &mut counts,
                         &mut latencies,
+                        &mut split,
                         &mut spans,
                     );
                 }
-                (counts, latencies, spans)
+                (counts, latencies, split, spans)
             })
         })
         .collect();
 
     let mut total = Counts::default();
     let mut latencies: Vec<u64> = Vec::with_capacity(cfg.requests as usize);
+    let mut split = HitMissSplit::default();
     let mut spans: Vec<[u64; 3]> = Vec::new();
     for t in threads {
-        let (c, mut l, mut s) =
+        let (c, mut l, hm, mut s) =
             t.join().map_err(|_| anyhow::anyhow!("loadgen thread panicked"))?;
         total.sent += c.sent;
         total.ok += c.ok;
@@ -951,9 +1214,10 @@ fn run_threaded(
         total.labeled += c.labeled;
         total.trace_sampled += c.trace_sampled;
         latencies.append(&mut l);
+        split.merge(hm);
         spans.append(&mut s);
     }
-    Ok((total, latencies, spans))
+    Ok((total, latencies, split, spans))
 }
 
 // ---------------------------------------------------------------------------
@@ -977,6 +1241,10 @@ fn connect_nonblocking(addr: &str) -> Option<TcpStream> {
 struct Pending {
     start: Instant,
     traced: bool,
+    /// `--key-reuse` schedule prediction: `Some(true)` if this request's
+    /// (tier, rank) pair appeared earlier in the schedule (expected
+    /// cache hit).  `None` when key reuse is off.
+    predicted: Option<bool>,
     labels: Vec<usize>,
 }
 
@@ -1022,6 +1290,12 @@ struct ClientLoop<'a> {
     classify: bool,
     blocking: bool,
     trace_sample: u64,
+    /// `--key-reuse` popularity sampler (None = dense, never-repeating
+    /// content indices).
+    sampler: Option<&'a ZipfSampler>,
+    /// Per-request repeat predictions for the whole schedule, indexed by
+    /// `global`.  Present iff `sampler` is.
+    predicted: Option<Arc<Vec<bool>>>,
     interval: Duration,
     t0: Instant,
     poller: Poller,
@@ -1030,6 +1304,7 @@ struct ClientLoop<'a> {
     active: usize,
     counts: Counts,
     latencies: Vec<u64>,
+    split: HitMissSplit,
     spans: Vec<[u64; 3]>,
     /// Scratch image/label buffers (single thread, reused per build).
     img: Vec<f32>,
@@ -1152,9 +1427,11 @@ impl ClientLoop<'_> {
             self.fixed_tier,
             self.blocking,
             self.trace_sample,
+            self.sampler,
             &mut self.img,
             &mut self.labels,
         );
+        let predicted = self.predicted.as_ref().map(|p| p[global as usize]);
         // latency clock: scheduled send time when pacing (coordinated-
         // omission-corrected), actual send when closed-loop
         let start = if self.interval.is_zero() {
@@ -1176,7 +1453,7 @@ impl ClientLoop<'_> {
         let c = &mut self.table[idx];
         c.out = out;
         c.out_pos = 0;
-        c.inflight = Some(Pending { start, traced, labels });
+        c.inflight = Some(Pending { start, traced, predicted, labels });
     }
 
     /// Write as much of the pending request as the socket accepts.
@@ -1253,9 +1530,11 @@ impl ClientLoop<'_> {
                         self.classify,
                         &p.labels,
                         p.traced,
+                        p.predicted,
                         self.batch,
                         &mut self.counts,
                         &mut self.latencies,
+                        &mut self.split,
                         &mut self.spans,
                     );
                     let c = &mut self.table[idx];
@@ -1409,14 +1688,17 @@ impl ClientLoop<'_> {
 /// Epoll driver entry point: connect the whole fleet up front (the
 /// server's open-connection gauge peaks at the full count before the
 /// first request is sent), then run the readiness loop to completion.
+#[allow(clippy::too_many_arguments)]
 fn run_event_loop(
     cfg: &LoadgenConfig,
     input_len: usize,
     dataset: Option<&Dataset>,
     interval: Duration,
     path: &'static str,
+    sampler: Option<&ZipfSampler>,
+    predicted: Option<Arc<Vec<bool>>>,
     t0: Instant,
-) -> Result<(Counts, Vec<u64>, Vec<[u64; 3]>)> {
+) -> Result<(Counts, Vec<u64>, HitMissSplit, Vec<[u64; 3]>)> {
     let conns = cfg.connections as u64;
     let base = cfg.requests / conns;
     let extra = cfg.requests % conns;
@@ -1431,6 +1713,8 @@ fn run_event_loop(
         classify: cfg.classify,
         blocking: cfg.blocking,
         trace_sample: cfg.trace_sample as u64,
+        sampler,
+        predicted,
         interval,
         t0,
         poller: Poller::new().map_err(|e| anyhow::anyhow!("epoll_create1: {e}"))?,
@@ -1438,6 +1722,7 @@ fn run_event_loop(
         active: 0,
         counts: Counts::default(),
         latencies: Vec::with_capacity(cfg.requests as usize),
+        split: HitMissSplit::default(),
         spans: Vec::new(),
         img: vec![0.0f32; input_len * cfg.batch],
         labels: Vec::with_capacity(cfg.batch),
@@ -1480,7 +1765,7 @@ fn run_event_loop(
         lp.table.push(conn);
     }
     lp.run()?;
-    Ok((lp.counts, lp.latencies, lp.spans))
+    Ok((lp.counts, lp.latencies, lp.split, lp.spans))
 }
 
 // ---------------------------------------------------------------------------
@@ -2067,5 +2352,109 @@ mod tests {
         assert!(back.get("stage_breakdown").unwrap().as_arr().unwrap().is_empty());
         assert!(back.opt("trace_sample").is_none());
         assert!(back.opt("trace_inline_mean_us").is_none());
+    }
+
+    #[test]
+    fn key_reuse_spec_parses() {
+        let kr: KeyReuse = "zipf:1.1,32".parse().unwrap();
+        assert_eq!(kr, KeyReuse { s: 1.1, n: 32 });
+        let kr: KeyReuse = "zipf: 0.8 , 4".parse().unwrap();
+        assert_eq!(kr, KeyReuse { s: 0.8, n: 4 });
+        for bad in [
+            "uniform:1,32", // unknown distribution
+            "zipf:1.1",     // missing pool size
+            "zipf:x,32",    // non-numeric exponent
+            "zipf:1.1,0",   // empty pool
+            "zipf:0,32",    // non-positive exponent
+            "zipf:inf,32",  // non-finite exponent
+            "",
+        ] {
+            assert!(bad.parse::<KeyReuse>().is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn zipf_sampler_is_deterministic_and_skewed() {
+        let z = ZipfSampler::new(1.1, 32);
+        // same global -> same rank, always (the property the server's
+        // exact result cache keys on)
+        for g in 0..200u64 {
+            assert_eq!(z.rank(g), z.rank(g));
+        }
+        // every rank is in range, and rank 0 is drawn strictly more
+        // often than the tail half combined (Zipf head dominance)
+        let mut counts = vec![0u64; 32];
+        for g in 0..2000u64 {
+            let r = z.rank(g);
+            assert!(r < 32);
+            counts[r] += 1;
+        }
+        let tail: u64 = counts[16..].iter().sum();
+        assert!(
+            counts[0] > tail,
+            "rank 0 drawn {} times, tail half {}",
+            counts[0],
+            tail
+        );
+    }
+
+    #[test]
+    fn predict_repeats_marks_first_occurrences() {
+        let z = ZipfSampler::new(1.1, 4);
+        let fixed = predict_repeats(100, Some(EnergyTier::Normal), &z);
+        assert_eq!(fixed.len(), 100);
+        // first request can never be a repeat; with 4 contents and 100
+        // requests, most of the schedule is
+        assert!(!fixed[0]);
+        assert!(fixed.iter().filter(|&&h| h).count() >= 90);
+        // the prediction recomputes the same ranks the request builder
+        // draws: a rank's first occurrence is the one false entry
+        let mut seen = std::collections::HashSet::new();
+        for (g, &hit) in fixed.iter().enumerate() {
+            assert_eq!(hit, !seen.insert(z.rank(g as u64)), "request {g}");
+        }
+        // mixed-tier schedules namespace contents per tier: the same
+        // rank on a different tier is a distinct cache key, so the
+        // mixed schedule predicts no more hits than the fixed one
+        let mixed = predict_repeats(100, None, &z);
+        assert!(
+            mixed.iter().filter(|&&h| h).count()
+                <= fixed.iter().filter(|&&h| h).count()
+        );
+    }
+
+    #[test]
+    fn report_json_carries_cache_block() {
+        let r = LoadgenReport {
+            key_reuse: Some(KeyReuse { s: 1.1, n: 32 }),
+            cache: Some(CacheObs {
+                hit_ratio: 0.75,
+                saved_uj: 12.5,
+                hit_p50_us: 300,
+                miss_p50_us: 900,
+                predicted_hits: 75,
+                predicted_misses: 25,
+            }),
+            ..Default::default()
+        };
+        let back = Json::parse(&r.to_json().render()).unwrap();
+        let kr = back.get("key_reuse").unwrap();
+        assert_eq!(kr.get("dist").unwrap().as_str().unwrap(), "zipf");
+        assert_eq!(kr.get("n").unwrap().as_usize().unwrap(), 32);
+        let c = back.get("cache").unwrap();
+        assert_eq!(c.get("hit_ratio").unwrap().as_f64().unwrap(), 0.75);
+        assert_eq!(c.get("saved_uj").unwrap().as_f64().unwrap(), 12.5);
+        assert_eq!(c.get("hit_p50_us").unwrap().as_u64().unwrap(), 300);
+        assert_eq!(c.get("miss_p50_us").unwrap().as_u64().unwrap(), 900);
+        assert_eq!(c.get("predicted_hits").unwrap().as_u64().unwrap(), 75);
+        assert!(r.render().contains("key reuse zipf:1.1,32"));
+        assert!(r.render().contains("hit ratio 75.0%"));
+        // a run without --key-reuse keeps the legacy schema: neither
+        // block appears
+        let plain = LoadgenReport::default();
+        let back = Json::parse(&plain.to_json().render()).unwrap();
+        assert!(back.opt("key_reuse").is_none());
+        assert!(back.opt("cache").is_none());
+        assert!(!plain.render().contains("key reuse"));
     }
 }

@@ -95,6 +95,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::cache::{CacheKey, CachedReply, ResultCache};
 use crate::coordinator::router::{
     clients_for_engine, image_seed, BatchTooLarge, InferenceClient, NativeServerConfig,
     Overloaded, ServerStats,
@@ -103,6 +104,7 @@ use crate::device::DeviceConfig;
 use crate::energy::{EnergyModel, EnergyPlan, LayerPlan, PlanSource, ReadMode};
 use crate::inference::NoisyModel;
 use crate::models::{LayerMeta, ModelDesc};
+use crate::rng::hash2;
 use crate::scheduler::{self, CompletionQueue, EnergyShed, EngineSnapshot, LaneSpec, Reply};
 use crate::trace::{self, FlightRecorder, SpanRecord, Stage, TraceContext};
 use crate::util::json::Json;
@@ -565,6 +567,17 @@ pub struct HttpServerConfig {
     /// connection between requests, so this bounds per-peer fd capture,
     /// not request rate.
     pub max_conns_per_peer: usize,
+    /// Exact result-cache entry bound (`serve-http --cache-entries`).
+    /// The cache is armed iff **both** this and [`cache_bytes`] are
+    /// positive; the default (0) keeps every response byte-path
+    /// identical to a cache-less build.  See [`crate::cache`] and
+    /// DESIGN.md §13.
+    ///
+    /// [`cache_bytes`]: HttpServerConfig::cache_bytes
+    pub cache_entries: usize,
+    /// Exact result-cache payload byte bound (`serve-http --cache-mb`;
+    /// 0 disables the cache).
+    pub cache_bytes: usize,
     /// Per-layer trained rho vector for the tier plans
     /// ([`load_trained_rho`]; `serve-http --model-store`).  `None` uses
     /// the analytic plans.
@@ -591,6 +604,8 @@ impl Default for HttpServerConfig {
             // generous: CI drives 8+ loadgen connections from localhost;
             // the cap is a hostile-peer guard, not a fairness scheduler
             max_conns_per_peer: 64,
+            cache_entries: 0,
+            cache_bytes: 0,
             trained_rho: None,
             engine: NativeServerConfig::default(),
         }
@@ -672,6 +687,14 @@ struct ServerCtx {
     shutdown: AtomicBool,
     started: Instant,
     addr: SocketAddr,
+    /// Exact result cache (`--cache-entries`/`--cache-mb`; `None` = off).
+    /// Consulted by the event loop *before* admission — a hit skips the
+    /// scheduler entirely — and filled from the completion path.
+    cache: Option<ResultCache>,
+    /// Per-tier content-key salts, [`EnergyTier::index`]-ordered: the
+    /// boot-time fold of (model fingerprint, tier plan hash, tier index)
+    /// every request key derives under ([`CacheKey::tier_salt`]).
+    cache_salts: [u64; 3],
     /// Ring of the last N complete request traces (`GET /admin/trace`).
     recorder: FlightRecorder,
     /// Event-loop wakeup: completion-queue pushes (from scheduler
@@ -766,8 +789,18 @@ impl ServerHandle {
 pub fn serve_http(model: Arc<NoisyModel>, cfg: HttpServerConfig) -> Result<ServerHandle> {
     anyhow::ensure!(cfg.max_conns > 0, "max_conns must be positive");
     anyhow::ensure!(cfg.max_conns_per_peer > 0, "max_conns_per_peer must be positive");
+    // One pass over the programmed weights before the model Arc moves
+    // into the engine: the fingerprint half of the cache key salts.
+    let fingerprint = model_fingerprint(&model);
     let (engine, engine_handles) =
         TieredEngine::start(model, &cfg.engine, cfg.trained_rho.as_deref())?;
+    let cache = (cfg.cache_entries > 0 && cfg.cache_bytes > 0)
+        .then(|| ResultCache::new(cfg.cache_entries, cfg.cache_bytes));
+    let mut cache_salts = [0u64; 3];
+    for tier in EnergyTier::ALL {
+        cache_salts[tier.index()] =
+            CacheKey::tier_salt(fingerprint, tier_plan_hash(engine.plan(tier)), tier.index());
+    }
 
     let listener = TcpListener::bind(&cfg.addr)
         .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
@@ -780,6 +813,8 @@ pub fn serve_http(model: Arc<NoisyModel>, cfg: HttpServerConfig) -> Result<Serve
         shutdown: AtomicBool::new(false),
         started: Instant::now(),
         addr,
+        cache,
+        cache_salts,
         recorder: FlightRecorder::new(trace::DEFAULT_FLIGHT_CAPACITY),
         wake,
     });
@@ -847,6 +882,11 @@ struct Inflight {
     tier: EnergyTier,
     /// Monotonic anchor at request parse start (the `total_us` origin).
     t_start: Instant,
+    /// Result-cache key of this request (cache armed, lookup missed):
+    /// the completion path inserts the reply under it.  `None` when the
+    /// cache is off — or on the synthetic hit-path `Inflight`, which
+    /// must never re-insert what it just read.
+    cache_key: Option<CacheKey>,
 }
 
 /// A traced response being flushed: `write_us` spans completion-enqueue
@@ -1164,6 +1204,9 @@ impl EventLoop {
             Close,
             Respond(Response),
             Request(HttpRequest),
+            /// An interim `100 Continue` was queued: loop again so it
+            /// flushes now, before the client's body arrives.
+            Interim,
         }
         loop {
             if !self.flush(idx) {
@@ -1199,7 +1242,17 @@ impl EventLoop {
                             } else {
                                 None
                             };
-                            if c.read_closed {
+                            if c.parser.take_expect_continue() {
+                                // Head parsed clean under the body cap and
+                                // the client asked `Expect: 100-continue`:
+                                // tell it to ship the body.  (An over-cap
+                                // head already answered a typed 413 above,
+                                // before any body byte moved.)  Interim
+                                // responses are not counted in http stats
+                                // and carry no pending write-back span.
+                                c.out.extend_from_slice(b"HTTP/1.1 100 Continue\r\n\r\n");
+                                Step::Interim
+                            } else if c.read_closed {
                                 // EOF with no (complete) request pending
                                 Step::Close
                             } else {
@@ -1220,6 +1273,7 @@ impl EventLoop {
                     self.respond(idx, resp, false, None);
                 }
                 Step::Request(req) => self.dispatch(idx, req),
+                Step::Interim => {} // next flush writes it; the claim is one-shot
             }
         }
         self.update_interest(idx);
@@ -1255,11 +1309,68 @@ impl EventLoop {
                     return;
                 }
             };
+        // The pixel fold feeds both the trace id and (cache armed) the
+        // content key — one pass over the body either way.
+        let (pixels, count): (&[f32], usize) = match &payload {
+            InferPayload::Single(image) => (image, 1),
+            InferPayload::Batch { images, count } => (images, *count),
+        };
+        let trace_id = image_seed(TRACE_ID_SALT, pixels);
+        let cache_key = self
+            .ctx
+            .cache
+            .as_ref()
+            .map(|_| CacheKey::derive(self.ctx.cache_salts[tier.index()], pixels, count));
+
+        // Exact result cache, consulted BEFORE admission (DESIGN.md
+        // §13): a hit needs no queue slot, no device reads, no energy —
+        // the memoized reply enqueues for write-back immediately.  The
+        // flush path then records a write-stage sample and pushes the
+        // span (cache_hit, zero compute stages) exactly as it would for
+        // a computed reply, so the response bytes cannot drift.
+        if let Some(key) = cache_key {
+            let hit = self.ctx.cache.as_ref().expect("key implies cache").lookup(key);
+            if let Some(hit) = hit {
+                let span = SpanRecord {
+                    trace_id,
+                    start_us: self.ctx.recorder.now_us(),
+                    tier: tier.index(),
+                    images: count,
+                    cache_hit: true,
+                    ..SpanRecord::default()
+                };
+                let inflight = Inflight {
+                    keep_alive: req.keep_alive,
+                    classify,
+                    trace_echo,
+                    batch: matches!(payload, InferPayload::Batch { .. }),
+                    tier,
+                    t_start,
+                    cache_key: None,
+                };
+                let (resp, span) = render_completion(
+                    &self.ctx,
+                    &inflight,
+                    Ok(Reply {
+                        logits: hit.logits,
+                        span,
+                    }),
+                );
+                let pending = span.map(|span| PendingWrite {
+                    span,
+                    t_start,
+                    t_enqueue: Instant::now(),
+                });
+                self.respond(idx, resp, inflight.keep_alive, pending);
+                return;
+            }
+        }
+
         let key = self.completion_key(idx);
         let (submitted, batch) = match payload {
             InferPayload::Single(image) => {
                 let tctx = TraceContext {
-                    trace_id: image_seed(TRACE_ID_SALT, &image),
+                    trace_id,
                     start_us: self.ctx.recorder.now_us(),
                     t_start,
                 };
@@ -1275,7 +1386,7 @@ impl EventLoop {
             }
             InferPayload::Batch { images, .. } => {
                 let tctx = TraceContext {
-                    trace_id: image_seed(TRACE_ID_SALT, &images),
+                    trace_id,
                     start_us: self.ctx.recorder.now_us(),
                     t_start,
                 };
@@ -1297,6 +1408,7 @@ impl EventLoop {
                     batch,
                     tier,
                     t_start,
+                    cache_key,
                 });
             }
             Err(e) => {
@@ -1332,6 +1444,22 @@ impl EventLoop {
                 .as_mut()
                 .and_then(|c| c.awaiting.take())
                 .expect("checked live above");
+            // Memoize the computed reply under the key the miss derived:
+            // span.energy_uj is the compute energy a future hit saves.
+            // Error replies are never cached — they are load state, not
+            // content.
+            if let (Some(cache), Some(ck)) = (self.ctx.cache.as_ref(), inflight.cache_key) {
+                if let Ok(reply) = &result {
+                    cache.insert(
+                        ck,
+                        CachedReply {
+                            logits: reply.logits.clone(),
+                            count: reply.span.images,
+                            energy_uj: reply.span.energy_uj,
+                        },
+                    );
+                }
+            }
             let (resp, span) = render_completion(&self.ctx, &inflight, result);
             let pending = span.map(|span| PendingWrite {
                 span,
@@ -1574,6 +1702,7 @@ fn route_simple(ctx: &ServerCtx, req: &HttpRequest) -> Response {
                 &ctx.http,
                 &ctx.engine.per_tier(),
                 &ctx.engine.snapshot(),
+                ctx.cache.as_ref().map(|c| c.stats()),
                 ctx.started.elapsed().as_secs_f64(),
             );
             Response {
@@ -1631,6 +1760,50 @@ fn engine_error_response(e: &anyhow::Error, lane_stats: &ServerStats) -> Respons
     }
     let status = if e.is::<BatchTooLarge>() { 413 } else { 500 };
     Response::error_json(status, &format!("{e}"))
+}
+
+/// Content fingerprint of the deployed model for the result-cache key
+/// salts: a [`hash2`] fold over every layer's shape, quantization
+/// scale, exact programmed tile weights (normalized cell values, bit
+/// patterns — two models fingerprint equal iff their crossbars read
+/// identically), and bias bits.  Computed once at boot; two servers
+/// deploying the same store therefore derive interchangeable keys.
+fn model_fingerprint(model: &NoisyModel) -> u64 {
+    let mut h = hash2(0x6d6f_6465_6c5f_6670, model.layers().len() as u64); // "model_fp"
+    for l in model.layers() {
+        h = hash2(h, l.d_in as u64);
+        h = hash2(h, l.d_out as u64);
+        h = hash2(h, u64::from(l.array.w_scale().to_bits()));
+        h = hash2(h, l.array.weight_bits() as u64);
+        for t in l.array.tiles() {
+            for &w in t.w_norm() {
+                h = hash2(h, u64::from(w.to_bits()));
+            }
+        }
+        for &b in &l.bias {
+            h = hash2(h, u64::from(b.to_bits()));
+        }
+    }
+    h
+}
+
+/// Hash of everything in a resolved [`TierPlan`] that shapes the logits
+/// a lane computes: per-layer rho bit patterns and read modes.  A
+/// rescaled budget, a different plan source shape, or a flipped read
+/// mode all change the noise sigma (and decomposition) a request sees,
+/// so they must key distinct cache namespaces.
+fn tier_plan_hash(plan: &TierPlan) -> u64 {
+    let mode_bit = |m: ReadMode| match m {
+        ReadMode::Original => 0u64,
+        ReadMode::Decomposed => 1,
+    };
+    let mut h = hash2(0x7469_6572_5f70_6c6e, mode_bit(plan.mode)); // "tier_pln"
+    h = hash2(h, plan.budget_uj.to_bits());
+    for l in plan.plan.layers() {
+        h = hash2(h, u64::from(l.rho.to_bits()));
+        h = hash2(h, mode_bit(l.mode));
+    }
+    h
 }
 
 /// Salt folding request pixels into a trace id ([`image_seed`] under a

@@ -12,6 +12,7 @@
 
 use std::fmt::Write as _;
 
+use crate::cache::CacheStats;
 use crate::coordinator::router::ServerStats;
 use crate::metrics::{BATCH_SIZE_BUCKET_BOUNDS, LATENCY_BUCKET_BOUNDS_US};
 use crate::scheduler::EngineSnapshot;
@@ -25,11 +26,15 @@ fn header(out: &mut String, name: &str, kind: &str, help: &str) {
 }
 
 /// Render the full `/metrics` payload.  `sched.lanes` must align with
-/// `tiers` (both are in [`super::EnergyTier::ALL`] order).
+/// `tiers` (both are in [`super::EnergyTier::ALL`] order).  `cache` is
+/// the result-cache counters when `--cache-entries` armed one; the
+/// `emtopt_cache_*` families render as zeros otherwise, so the series
+/// exist from the first scrape either way.
 pub fn render(
     http: &HttpStats,
     tiers: &[(&TierPlan, &ServerStats)],
     sched: &EngineSnapshot,
+    cache: Option<&CacheStats>,
     uptime_s: f64,
 ) -> String {
     use std::sync::atomic::Ordering::Relaxed;
@@ -585,6 +590,64 @@ pub fn render(
         }
     }
 
+    // Exact result cache (DESIGN.md §13): counters readable without the
+    // shard locks; all zero while the cache is off so dashboards keep
+    // stable series across deployments that toggle it.
+    let (hits, misses, evictions, entries, bytes, saved_uj) = match cache {
+        Some(c) => (
+            c.hits.load(Relaxed),
+            c.misses.load(Relaxed),
+            c.evictions.load(Relaxed),
+            c.entries.load(Relaxed),
+            c.bytes.load(Relaxed),
+            c.saved_uj(),
+        ),
+        None => (0, 0, 0, 0, 0, 0.0),
+    };
+    header(
+        &mut out,
+        "emtopt_cache_hits_total",
+        "counter",
+        "Requests served verbatim from the exact result cache (zero device reads).",
+    );
+    let _ = writeln!(out, "emtopt_cache_hits_total {hits}");
+    header(
+        &mut out,
+        "emtopt_cache_misses_total",
+        "counter",
+        "Result-cache lookups that fell through to the scheduler.",
+    );
+    let _ = writeln!(out, "emtopt_cache_misses_total {misses}");
+    header(
+        &mut out,
+        "emtopt_cache_evictions_total",
+        "counter",
+        "Result-cache entries evicted by the per-shard LRU bounds.",
+    );
+    let _ = writeln!(out, "emtopt_cache_evictions_total {evictions}");
+    header(
+        &mut out,
+        "emtopt_cache_entries",
+        "gauge",
+        "Live result-cache entries across all shards.",
+    );
+    let _ = writeln!(out, "emtopt_cache_entries {entries}");
+    header(
+        &mut out,
+        "emtopt_cache_bytes",
+        "gauge",
+        "Live result-cache payload bytes across all shards.",
+    );
+    let _ = writeln!(out, "emtopt_cache_bytes {bytes}");
+    header(
+        &mut out,
+        "emtopt_cache_saved_uj_total",
+        "counter",
+        "Device energy in microjoules that cache hits did not spend \
+         (each hit credits its entry's recorded compute energy).",
+    );
+    let _ = writeln!(out, "emtopt_cache_saved_uj_total {saved_uj}");
+
     header(
         &mut out,
         "emtopt_uptime_seconds",
@@ -645,7 +708,7 @@ mod tests {
             plan: EnergyPlan::uniform(2, 4.0, ReadMode::Original),
         };
         let sched = snapshot_with(1, Some((12.0, 10.0)));
-        let text = render(&http, &[(&plan, &stats)], &sched, 12.5);
+        let text = render(&http, &[(&plan, &stats)], &sched, None, 12.5);
 
         assert!(text.contains("emtopt_http_requests_total{code=\"200\"} 2"));
         assert!(text.contains("emtopt_http_requests_total{code=\"503\"} 1"));
@@ -653,7 +716,7 @@ mod tests {
         http.conn_opened();
         http.conn_opened();
         http.conn_closed();
-        let text2 = render(&http, &[(&plan, &stats)], &sched, 12.5);
+        let text2 = render(&http, &[(&plan, &stats)], &sched, None, 12.5);
         assert!(text.contains("emtopt_http_open_conns 0"));
         assert!(text.contains("emtopt_http_open_conns_peak 0"));
         assert!(text2.contains("emtopt_http_open_conns 1"));
@@ -708,6 +771,13 @@ mod tests {
         assert!(
             text.contains("emtopt_stage_latency_us_count{tier=\"normal\",stage=\"write\"} 0")
         );
+        // cache families render stable zeros while the cache is off
+        assert!(text.contains("emtopt_cache_hits_total 0"));
+        assert!(text.contains("emtopt_cache_misses_total 0"));
+        assert!(text.contains("emtopt_cache_evictions_total 0"));
+        assert!(text.contains("emtopt_cache_entries 0"));
+        assert!(text.contains("emtopt_cache_bytes 0"));
+        assert!(text.contains("emtopt_cache_saved_uj_total 0"));
         // build provenance gauge is always present with all three labels
         assert!(text.contains("emtopt_build_info{version=\""));
         assert!(text.contains(",rustc=\""));
@@ -737,12 +807,57 @@ mod tests {
             plan: EnergyPlan::uniform(1, 4.0, ReadMode::Original),
         };
         let sched = snapshot_with(1, None);
-        let text = render(&http, &[(&plan, &stats)], &sched, 0.0);
+        let text = render(&http, &[(&plan, &stats)], &sched, None, 0.0);
         // shed counters always render (zeros keep the series stable)...
         assert!(text.contains("emtopt_governor_shed_total{tier=\"normal\"} 4"));
         // ...but the budget gauges only exist when a budget is armed
         assert!(!text.contains("emtopt_energy_budget_uj_s"));
         assert!(!text.contains("emtopt_energy_rate_uj_s"));
+    }
+
+    #[test]
+    fn cache_families_render_live_counters() {
+        use crate::cache::{CacheKey, CachedReply, ResultCache};
+        let http = HttpStats::default();
+        let stats = ServerStats::default();
+        let plan = TierPlan {
+            tier: EnergyTier::Normal,
+            rho: 4.0,
+            mode: ReadMode::Original,
+            budget_uj: 1.5,
+            plan: EnergyPlan::uniform(1, 4.0, ReadMode::Original),
+        };
+        let cache = ResultCache::new(16, 1 << 20);
+        let k = CacheKey::derive(1, &[0.5], 1);
+        assert!(cache.lookup(k).is_none()); // one miss
+        cache.insert(
+            k,
+            CachedReply {
+                logits: vec![1.0, 2.0],
+                count: 1,
+                energy_uj: 2.5,
+            },
+        );
+        cache.lookup(k).unwrap(); // one hit, credits 2.5 uJ
+        let text = render(
+            &http,
+            &[(&plan, &stats)],
+            &snapshot_with(1, None),
+            Some(cache.stats()),
+            0.0,
+        );
+        assert!(text.contains("emtopt_cache_hits_total 1"));
+        assert!(text.contains("emtopt_cache_misses_total 1"));
+        assert!(text.contains("emtopt_cache_evictions_total 0"));
+        assert!(text.contains("emtopt_cache_entries 1"));
+        assert!(text.contains("emtopt_cache_saved_uj_total 2.5"));
+        // the byte gauge carries the entry's payload + overhead cost
+        let bytes_line = text
+            .lines()
+            .find(|l| l.starts_with("emtopt_cache_bytes "))
+            .expect("bytes gauge rendered");
+        let v: u64 = bytes_line.rsplit_once(' ').unwrap().1.parse().unwrap();
+        assert!(v > 8, "cache bytes gauge should exceed the payload, got {v}");
     }
 
     #[test]
@@ -758,7 +873,7 @@ mod tests {
             budget_uj: 0.5,
             plan: EnergyPlan::uniform(1, 1.0, ReadMode::Decomposed),
         };
-        let text = render(&http, &[(&plan, &stats)], &snapshot_with(1, None), 0.0);
+        let text = render(&http, &[(&plan, &stats)], &snapshot_with(1, None), None, 0.0);
         assert!(text.contains("emtopt_request_latency_us_bucket{tier=\"low\",le=\"5\"} 1"));
         assert!(text.contains("emtopt_request_latency_us_bucket{tier=\"low\",le=\"50\"} 2"));
         assert!(text.contains("emtopt_request_latency_us_bucket{tier=\"low\",le=\"+Inf\"} 2"));

@@ -155,6 +155,11 @@ pub struct SpanRecord {
     pub total_us: u64,
     /// Observed energy attributed to this request's samples (uJ).
     pub energy_uj: f64,
+    /// Served from the exact result cache: the request skipped the
+    /// scheduler entirely (queue/batch/compute spans stay zero, energy
+    /// stays zero — the saved energy is credited to
+    /// `emtopt_cache_saved_uj_total` instead).
+    pub cache_hit: bool,
     pub layers: LayerSpans,
 }
 
@@ -188,6 +193,7 @@ impl SpanRecord {
             ("batch_wait_us", Json::Num(self.batch_wait_us as f64)),
             ("compute_us", Json::Num(self.compute_us as f64)),
             ("energy_uj", Json::Num(self.energy_uj)),
+            ("cache_hit", Json::Bool(self.cache_hit)),
             ("layers", Json::Arr(layers)),
         ])
     }
@@ -333,6 +339,7 @@ pub fn to_chrome_json(records: &[SpanRecord], tier_names: &[&str]) -> Json {
                 args.push(("stolen", Json::Bool(r.stolen)));
                 args.push(("batch_images", Json::Num(r.batch_images as f64)));
                 args.push(("total_us", Json::Num(r.total_us as f64)));
+                args.push(("cache_hit", Json::Bool(r.cache_hit)));
             }
             events.push(Json::obj(vec![
                 ("name", Json::Str(stage.name().into())),
@@ -415,6 +422,7 @@ mod tests {
             write_us: 5,
             total_us: 400,
             energy_uj: 1.25,
+            cache_hit: false,
             layers: LayerSpans {
                 us: {
                     let mut a = [0u32; MAX_TRACE_LAYERS];
@@ -547,6 +555,8 @@ mod tests {
         // write/total are NOT echoed inline (bytes formed pre-write)
         assert!(j.opt("write_us").is_none());
         assert!(j.opt("total_us").is_none());
+        // the bypass marker is always echoed (false on the compute path)
+        assert_eq!(j.get("cache_hit").unwrap(), &Json::Bool(false));
     }
 
     #[test]

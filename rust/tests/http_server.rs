@@ -1266,3 +1266,269 @@ fn open_conns_gauge_tracks_closes() {
     drop(c1);
     handle.shutdown().unwrap();
 }
+
+/// Exact value of the metric line starting with `name ` (pass labels in
+/// `name` for labelled families: `foo{tier="normal"}`).
+fn metric(text: &str, name: &str) -> f64 {
+    text.lines()
+        .find_map(|l| l.strip_prefix(name).and_then(|r| r.strip_prefix(' ')))
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or_else(|| panic!("metric {name} missing from /metrics"))
+}
+
+fn post_raw(conn: &mut HttpConn<TcpStream>, path: &str, body: &str) -> (u16, Vec<u8>) {
+    conn.write_request("POST", path, body.as_bytes()).unwrap();
+    conn.read_response(1 << 20).unwrap()
+}
+
+fn boot_cached(entries: usize, bytes: usize) -> ServerHandle {
+    let dev = DeviceConfig::default();
+    let m = model(&[(8, 3)], 3, &dev);
+    serve_http(
+        m,
+        HttpServerConfig {
+            addr: "127.0.0.1:0".into(),
+            cache_entries: entries,
+            cache_bytes: bytes,
+            engine: NativeServerConfig {
+                batch: 4,
+                workers: 1,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn result_cache_hit_is_byte_identical_and_skips_compute() {
+    // PR 9 acceptance: an armed exact result cache serves repeat content
+    // byte-identically, without scheduler admission, device reads or
+    // energy — and the stage histograms record a write sample but NO
+    // queue_wait/batch_wait/compute samples for the hit (the zero-stage
+    // invariant, the counterpart of the stage-sum <= total invariant
+    // pinned in trace_echo_reconciles_with_flight_recorder_and_metrics).
+    let handle = boot_cached(64, 1 << 20);
+    let mut conn = connect(&handle);
+
+    let img = "[0.1,0.2,0.3,0.4,0.5,0.6,0.7,0.8]";
+    let body = format!("{{\"image\":{img}}}");
+    let (status, cold) = post_raw(&mut conn, "/v1/infer", &body);
+    assert_eq!(status, 200);
+
+    let (_, m1) = get(&mut conn, "/metrics");
+    let m1 = String::from_utf8(m1).unwrap();
+    assert_eq!(metric(&m1, "emtopt_cache_misses_total"), 1.0);
+    assert_eq!(metric(&m1, "emtopt_cache_hits_total"), 0.0);
+    assert_eq!(metric(&m1, "emtopt_cache_entries"), 1.0);
+    assert!(metric(&m1, "emtopt_cache_bytes") > 0.0);
+
+    // the repeat: byte-identical to the cold miss
+    let (status, hit) = post_raw(&mut conn, "/v1/infer", &body);
+    assert_eq!(status, 200);
+    assert_eq!(hit, cold, "cache hit must be byte-identical to the miss");
+
+    let (_, m2) = get(&mut conn, "/metrics");
+    let m2 = String::from_utf8(m2).unwrap();
+    assert_eq!(metric(&m2, "emtopt_cache_hits_total"), 1.0);
+    assert_eq!(metric(&m2, "emtopt_cache_misses_total"), 1.0);
+    assert!(
+        metric(&m2, "emtopt_cache_saved_uj_total") > 0.0,
+        "a hit must credit the energy its entry recorded"
+    );
+    // zero device-side delta across the hit: no reads, no energy, no
+    // engine admission
+    for family in [
+        "emtopt_read_cycles_total{tier=\"normal\"}",
+        "emtopt_energy_cell_pj_total{tier=\"normal\"}",
+        "emtopt_energy_peripheral_pj_total{tier=\"normal\"}",
+        "emtopt_requests_total{tier=\"normal\"}",
+    ] {
+        assert_eq!(
+            metric(&m2, family),
+            metric(&m1, family),
+            "cache hit changed {family}"
+        );
+    }
+    // zero-stage invariant: the hit added one write sample and nothing
+    // to the compute-side stages
+    for stage in ["queue_wait", "batch_wait", "compute"] {
+        let name =
+            format!("emtopt_stage_latency_us_count{{tier=\"normal\",stage=\"{stage}\"}}");
+        assert_eq!(metric(&m2, &name), 1.0, "hit recorded a {stage} sample");
+    }
+    assert_eq!(
+        metric(
+            &m2,
+            "emtopt_stage_latency_us_count{tier=\"normal\",stage=\"write\"}"
+        ),
+        2.0,
+        "hit must still record its write stage"
+    );
+
+    // different pixels on the same tier: a genuine miss, computed
+    let (status, _) = post_raw(
+        &mut conn,
+        "/v1/infer",
+        "{\"image\":[0.9,0.8,0.7,0.6,0.5,0.4,0.3,0.2]}",
+    );
+    assert_eq!(status, 200);
+    // same pixels on a different tier: a different plan, so a different
+    // key — also a miss
+    let (status, _) = post_raw(
+        &mut conn,
+        "/v1/infer",
+        &format!("{{\"image\":{img},\"tier\":\"low\"}}"),
+    );
+    assert_eq!(status, 200);
+    let (_, m3) = get(&mut conn, "/metrics");
+    let m3 = String::from_utf8(m3).unwrap();
+    assert_eq!(metric(&m3, "emtopt_cache_misses_total"), 3.0);
+    assert_eq!(metric(&m3, "emtopt_cache_entries"), 3.0);
+
+    // a traced hit carries the bypass marker with zero compute stages
+    let traced_body = format!("{{\"image\":{img},\"trace\":true}}");
+    let (status, first) = post(&mut conn, "/v1/infer", &traced_body);
+    assert_eq!(status, 200);
+    assert_eq!(
+        *first.get("trace").unwrap().get("cache_hit").unwrap(),
+        Json::Bool(true),
+        "the traced repeat of cached pixels must be served from cache"
+    );
+    let t = first.get("trace").unwrap();
+    for stage in ["queue_wait_us", "batch_wait_us", "compute_us"] {
+        assert_eq!(t.get(stage).unwrap().as_u64().unwrap(), 0, "{stage} on a hit");
+    }
+    assert_eq!(t.get("energy_uj").unwrap().as_f64().unwrap(), 0.0);
+
+    drop(conn);
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn cache_off_default_is_byte_compatible_and_renders_zero_families() {
+    // Default config keeps the cache off: repeats recompute, the
+    // emtopt_cache_* families render as zeros, and the response bytes
+    // match an armed server's bit-for-bit (the cache is pure memoization
+    // of a deterministic function — arming it must not change a byte).
+    let plain = boot(NativeServerConfig {
+        batch: 4,
+        workers: 1,
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    });
+    let cached = boot_cached(64, 1 << 20);
+    let mut pc = connect(&plain);
+    let mut cc = connect(&cached);
+
+    let body = "{\"image\":[0.1,0.2,0.3,0.4,0.5,0.6,0.7,0.8],\"tier\":\"high\"}";
+    let (ps, pb) = post_raw(&mut pc, "/v1/classify", body);
+    let (cs, cb) = post_raw(&mut cc, "/v1/classify", body);
+    assert_eq!((ps, cs), (200, 200));
+    assert_eq!(pb, cb, "arming the cache changed a cold response");
+    // the armed server's hit serves the same bytes again
+    let (_, cb2) = post_raw(&mut cc, "/v1/classify", body);
+    assert_eq!(cb, cb2);
+
+    // the plain server recomputed both times and its cache stayed inert
+    let (_, pb2) = post_raw(&mut pc, "/v1/classify", body);
+    assert_eq!(pb, pb2, "deterministic recompute must match itself");
+    let (_, mtext) = get(&mut pc, "/metrics");
+    let mtext = String::from_utf8(mtext).unwrap();
+    for family in [
+        "emtopt_cache_hits_total",
+        "emtopt_cache_misses_total",
+        "emtopt_cache_evictions_total",
+        "emtopt_cache_entries",
+        "emtopt_cache_bytes",
+        "emtopt_cache_saved_uj_total",
+    ] {
+        assert_eq!(metric(&mtext, family), 0.0, "{family} on a cache-off server");
+    }
+    assert_eq!(metric(&mtext, "emtopt_requests_total{tier=\"high\"}"), 2.0);
+
+    drop(pc);
+    drop(cc);
+    plain.shutdown().unwrap();
+    cached.shutdown().unwrap();
+}
+
+#[test]
+fn expect_continue_gets_interim_before_body() {
+    use std::io::{Read as _, Write as _};
+
+    let handle = boot(NativeServerConfig {
+        batch: 2,
+        workers: 1,
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    });
+
+    // the polite client: head with `Expect: 100-continue`, then WAIT for
+    // the interim response before shipping a single body byte
+    let body = "{\"image\":[0.1,0.2,0.3,0.4,0.5,0.6,0.7,0.8]}";
+    let mut s = TcpStream::connect(handle.addr()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.write_all(
+        format!(
+            "POST /v1/infer HTTP/1.1\r\nhost: t\r\ncontent-type: application/json\r\n\
+             content-length: {}\r\nexpect: 100-continue\r\nconnection: close\r\n\r\n",
+            body.len()
+        )
+        .as_bytes(),
+    )
+    .unwrap();
+    let interim = b"HTTP/1.1 100 Continue\r\n\r\n";
+    let mut got = vec![0u8; interim.len()];
+    s.read_exact(&mut got).unwrap();
+    assert_eq!(got, interim, "server must invite the body before it arrives");
+    // now ship the body; connection: close frames the final response
+    s.write_all(body.as_bytes()).unwrap();
+    let mut rest = Vec::new();
+    s.read_to_end(&mut rest).unwrap();
+    let text = String::from_utf8_lossy(&rest);
+    assert!(text.starts_with("HTTP/1.1 200"), "{text}");
+    assert!(text.contains("logits"), "{text}");
+
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn expect_continue_over_cap_is_413_before_the_body() {
+    use std::io::{Read as _, Write as _};
+
+    // a tiny body cap: the declared length is rejected at head time
+    let dev = DeviceConfig::default();
+    let m = model(&[(8, 3)], 3, &dev);
+    let handle = serve_http(
+        m,
+        HttpServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_body_bytes: 256,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let mut s = TcpStream::connect(handle.addr()).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    s.write_all(
+        b"POST /v1/infer HTTP/1.1\r\nhost: t\r\ncontent-type: application/json\r\n\
+          content-length: 1000000\r\nexpect: 100-continue\r\n\r\n",
+    )
+    .unwrap();
+    // the server answers the typed 413 and closes — no interim, and the
+    // megabyte body never has to move
+    let mut resp = Vec::new();
+    s.read_to_end(&mut resp).unwrap();
+    let text = String::from_utf8_lossy(&resp);
+    assert!(text.starts_with("HTTP/1.1 413"), "{text}");
+    assert!(
+        !text.contains("100 Continue"),
+        "an over-cap head must never be invited to continue: {text}"
+    );
+
+    handle.shutdown().unwrap();
+}
