@@ -6,6 +6,8 @@
 //! CI perf-regression gate input — see `hotpath_gate.json`),
 //! tile current-sum throughput, the batched execution engine
 //! (`NoisyModel::forward_batch` vs the sequential single-sample loop),
+//! the layer-major vs sample-major batch engines on an L2-overflowing
+//! MLP (the `layer_major_speedup` field is the second CI gate input),
 //! dataset generation, and — with `--features aot` — the PJRT dispatch
 //! overhead of one predict batch.
 //!
@@ -237,6 +239,89 @@ fn main() -> emtopt::Result<()> {
     assert_eq!(ca, cb, "batched engine counter parity violated");
     println!("  parity: logits + counters bit-identical across engines");
 
+    println!("\n=== hotpath: layer-major batch engine ===");
+    // Wide MLP whose weight planes overflow a typical L2 (1024-1024-512-10
+    // is ~6.3 MB of f32 weights): the regime where visiting each layer's
+    // tiles once per batch (layer-major, the serving default) beats
+    // re-streaming the whole model per image (sample-major).  Both
+    // engines run in the same process on the same model with the same
+    // per-image seeds, so `layer_major_speedup` is machine-independent —
+    // that ratio at b=16 is what the CI perf gate pins
+    // (hotpath_gate.json `layer_major_baseline`).
+    let lm_dims = [(1024usize, 1024usize), (1024, 512), (512, 10)];
+    let lm_data: Vec<(Vec<f32>, Vec<f32>)> = lm_dims
+        .iter()
+        .map(|&(i, o)| {
+            let mut lw = vec![0.0f32; i * o];
+            rng.fill_normal(&mut lw);
+            for v in &mut lw {
+                *v *= 0.05;
+            }
+            (lw, vec![0.0f32; o])
+        })
+        .collect();
+    let lm_specs: Vec<(&[f32], &[f32], usize, usize)> = lm_data
+        .iter()
+        .zip(lm_dims.iter())
+        .map(|((lw, lb), &(i, o))| (lw.as_slice(), lb.as_slice(), i, o))
+        .collect();
+    let lm_model = NoisyModel::new(&lm_specs, &cfg)?;
+    let lm_plan = lm_model.uniform_plan(ReadMode::Original);
+    let lm_macs: f64 = lm_dims.iter().map(|&(i, o)| (i * o) as f64).sum();
+    let mut layer_major_speedups = [0.0f64; 3];
+    let mut batch_major_mac_per_s = 0.0f64;
+    for (bi, &b) in [1usize, 4, 16].iter().enumerate() {
+        let bxs: Vec<f32> = (0..b * lm_model.d_in()).map(|_| rng.next_f32()).collect();
+        let seeds: Vec<u64> = (0..b as u64)
+            .map(|i| 0x5eed_0000u64 ^ i.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+            .collect();
+        let iters = if b >= 16 { 3 } else { 6 };
+        let mut c_sm = ReadCounters::default();
+        let r = report(
+            &format!("sample-major mlp(1024-1024-512-10) b={b}"),
+            1,
+            iters,
+            || {
+                let _ = lm_model
+                    .forward_batch_seeds_sample_major(&bxs, &lm_plan, &cfg, &seeds, &mut c_sm);
+            },
+        );
+        let sm = r.throughput(b as f64 * lm_macs);
+        let mut c_lm = ReadCounters::default();
+        let r = report(
+            &format!("layer-major  mlp(1024-1024-512-10) b={b}"),
+            1,
+            iters,
+            || {
+                let _ = lm_model.forward_batch_seeds(&bxs, &lm_plan, &cfg, &seeds, &mut c_lm);
+            },
+        );
+        let lm = r.throughput(b as f64 * lm_macs);
+        layer_major_speedups[bi] = lm / sm;
+        if b == 16 {
+            batch_major_mac_per_s = lm;
+        }
+        println!(
+            "  b={b}: {:.1} M MAC-sim/s layer-major vs {:.1} M sample-major ({:.2}x)",
+            lm / 1e6,
+            sm / 1e6,
+            layer_major_speedups[bi]
+        );
+        // parity spot-check at every batch size: layer-major must be
+        // bit-identical to the sample-major oracle, counters included
+        let mut pa = ReadCounters::default();
+        let mut pb = ReadCounters::default();
+        let la = lm_model.forward_batch_seeds(&bxs, &lm_plan, &cfg, &seeds, &mut pa);
+        let lb = lm_model.forward_batch_seeds_sample_major(&bxs, &lm_plan, &cfg, &seeds, &mut pb);
+        assert_eq!(la, lb, "layer-major parity violated at b={b}");
+        assert_eq!(pa, pb, "layer-major counter parity violated at b={b}");
+    }
+    let layer_major_speedup = layer_major_speedups[2];
+    println!(
+        "  parity: layer-major bit-identical to sample-major at b=1/4/16; \
+         b=16 speedup {layer_major_speedup:.2}x (CI gate input)"
+    );
+
     println!("\n=== hotpath: dataset generation ===");
     let ds = Dataset::new(Suite::Cifar, 1);
     let mut idx = 0u64;
@@ -299,7 +384,12 @@ fn main() -> emtopt::Result<()> {
          \"batch32_seq_samples_per_s\": {seq_sps:.1},\n  \
          \"batch32_par_samples_per_s\": {par_sps:.1},\n  \
          \"batch_speedup\": {speedup:.3},\n  \
-         \"dataset_px_per_s\": {dataset_px_s:.1}\n}}\n"
+         \"batch_major_mac_per_s\": {batch_major_mac_per_s:.1},\n  \
+         \"layer_major_speedup_b1\": {:.3},\n  \
+         \"layer_major_speedup_b4\": {:.3},\n  \
+         \"layer_major_speedup\": {layer_major_speedup:.3},\n  \
+         \"dataset_px_per_s\": {dataset_px_s:.1}\n}}\n",
+        layer_major_speedups[0], layer_major_speedups[1]
     );
     std::fs::write("BENCH_hotpath.json", json)?;
     println!("\nwrote BENCH_hotpath.json");

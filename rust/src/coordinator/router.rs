@@ -570,6 +570,13 @@ pub struct NativeServerConfig {
     /// lowest-priority lanes with a typed `EnergyShed` error (HTTP
     /// `503` + `Retry-After`).  `None` disables the governor.
     pub energy_budget_uj_s: Option<f64>,
+    /// Recycle serve-path buffers (request bodies, pixel arenas, reply
+    /// logits, batch slabs) through the engine's size-classed
+    /// [`BufferPool`](crate::pool::BufferPool) instead of heap-allocating
+    /// per request.  Responses are byte-identical either way (pooling
+    /// only reuses capacity); `false` is the allocation-per-request
+    /// reference path (`--no-alloc-pool`).
+    pub alloc_pool: bool,
 }
 
 impl Default for NativeServerConfig {
@@ -585,6 +592,7 @@ impl Default for NativeServerConfig {
             seed: 1,
             rebalance_interval: Duration::from_millis(50),
             energy_budget_uj_s: None,
+            alloc_pool: true,
         }
     }
 }

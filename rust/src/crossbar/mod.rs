@@ -84,6 +84,33 @@ pub struct MacScratch {
     planes: Vec<u32>,
 }
 
+/// Reusable scratch for a *block* of samples read layer-major: one
+/// [`MacScratch`] per image plus per-image activation scales and local
+/// energy accumulators.  Owned by an execution stream (a rayon block
+/// task / a pooled batch slab) and reused across layers and dispatches,
+/// so the batched read path stays allocation-free at steady state.
+#[derive(Clone, Debug, Default)]
+pub struct MacScratchBlock {
+    per_image: Vec<MacScratch>,
+    act_scales: Vec<f32>,
+    cell_pj: Vec<f64>,
+    peri_pj: Vec<f64>,
+}
+
+impl MacScratchBlock {
+    /// Grow to hold `n` images (never shrinks — capacity is the point).
+    fn ensure(&mut self, n: usize) {
+        if self.per_image.len() < n {
+            self.per_image.resize_with(n, MacScratch::default);
+        }
+        if self.act_scales.len() < n {
+            self.act_scales.resize(n, 0.0);
+            self.cell_pj.resize(n, 0.0);
+            self.peri_pj.resize(n, 0.0);
+        }
+    }
+}
+
 /// A (K, N) weight matrix programmed over crossbar tiles.
 #[derive(Clone, Debug)]
 pub struct CrossbarArray {
@@ -286,6 +313,124 @@ impl CrossbarArray {
         counters.cell_pj += cell_pj;
         counters.peripheral_pj += peri_pj;
         counters.cycles += cycles;
+    }
+
+    /// Layer-major batched MAC: reads a whole block of samples through
+    /// this array with a **tile-outer, image-inner** sweep, so each
+    /// tile's `w_norm` / plane cache is streamed from memory once per
+    /// block instead of once per image.  `xs` is `n * rows` row-major
+    /// samples, `outs` is `n * cols`; image `i` draws RTN noise from
+    /// `rngs[i]` and accounts energy/cycles into `counters[i]`.
+    ///
+    /// **Bit-identity contract:** for every image `i`, the RNG draw
+    /// order (tile order; Decomposed: plane-outer, tile-inner), the f32
+    /// output accumulation order, and the f64 energy accumulation order
+    /// are exactly those of a solo [`CrossbarArray::mac_scratch`] call
+    /// on `(xs_i, rngs[i], counters[i])` — outputs and counters are
+    /// bitwise identical to the sample-major path (pinned by tests).
+    /// Interleaving images *between* tiles is safe because images touch
+    /// disjoint output rows and private RNG/counter state.
+    #[allow(clippy::too_many_arguments)]
+    pub fn mac_scratch_block(
+        &self,
+        xs: &[f32],
+        outs: &mut [f32],
+        plan: LayerPlan,
+        act_bits: u32,
+        intensity: f32,
+        rngs: &mut [Rng],
+        counters: &mut [ReadCounters],
+        block: &mut MacScratchBlock,
+    ) {
+        let n = rngs.len();
+        assert_eq!(xs.len(), n * self.rows);
+        assert_eq!(outs.len(), n * self.cols);
+        assert_eq!(counters.len(), n);
+        block.ensure(n);
+        let sigma_norm = plan.sigma_rel(intensity);
+        let rho = plan.rho;
+        let mode = plan.mode;
+        let w_scale = self.w_scale;
+        let tiles_x = self.tiles_x;
+        let rows = self.rows;
+        let cols = self.cols;
+
+        // per-image prologue: zero outputs, DAC-quantise activations.
+        // No RNG is consumed here, same as the solo path.
+        for i in 0..n {
+            outs[i * cols..(i + 1) * cols].fill(0.0);
+            block.act_scales[i] = quant::quant_act_into(
+                &xs[i * rows..(i + 1) * rows],
+                act_bits,
+                &mut block.per_image[i].levels,
+            );
+            block.cell_pj[i] = 0.0;
+            block.peri_pj[i] = 0.0;
+        }
+
+        match mode {
+            ReadMode::Original => {
+                for (ti, t) in self.tiles.iter().enumerate() {
+                    let (ty, tx) = (ti / tiles_x, ti % tiles_x);
+                    let r0 = ty * TILE_ROWS;
+                    let c0 = tx * TILE_COLS;
+                    let peri = t.rows() as f64 * E_DAC_PJ + t.cols() as f64 * E_ADC_PJ;
+                    for i in 0..n {
+                        let lv = &block.per_image[i].levels[r0..r0 + t.rows()];
+                        let out = &mut outs[i * cols + c0..i * cols + c0 + t.cols()];
+                        let e = t.current_sum(lv, out, sigma_norm, &mut rngs[i]);
+                        block.cell_pj[i] += E0_PJ * rho as f64 * e;
+                        block.peri_pj[i] += peri;
+                    }
+                }
+            }
+            ReadMode::Decomposed => {
+                for i in 0..n {
+                    let s = &mut block.per_image[i];
+                    quant::bit_planes_into(&s.levels, act_bits, &mut s.planes);
+                }
+                for p in 0..act_bits {
+                    for (ti, t) in self.tiles.iter().enumerate() {
+                        let (ty, tx) = (ti / tiles_x, ti % tiles_x);
+                        let r0 = ty * TILE_ROWS;
+                        let c0 = tx * TILE_COLS;
+                        let peri =
+                            t.rows() as f64 * E_DAC_PJ + t.cols() as f64 * E_ADC_PJ;
+                        for i in 0..n {
+                            let plane = &block.per_image[i].planes
+                                [p as usize * rows..(p as usize + 1) * rows];
+                            let out =
+                                &mut outs[i * cols + c0..i * cols + c0 + t.cols()];
+                            let e = t.current_sum_plane(
+                                &plane[r0..r0 + t.rows()],
+                                out,
+                                p,
+                                sigma_norm,
+                                &mut rngs[i],
+                            );
+                            block.cell_pj[i] += E0_PJ * rho as f64 * e;
+                            block.peri_pj[i] += peri;
+                        }
+                    }
+                }
+            }
+        }
+
+        // per-image epilogue: de-normalise and flush the local
+        // accumulators, exactly once per image like the solo path.
+        let cycles = match mode {
+            ReadMode::Original => 1u64,
+            ReadMode::Decomposed => act_bits as u64,
+        };
+        for i in 0..n {
+            let s = block.act_scales[i] * w_scale;
+            for v in outs[i * cols..(i + 1) * cols].iter_mut() {
+                *v *= s;
+            }
+            counters[i].cell_pj += block.cell_pj[i];
+            counters[i].peripheral_pj += block.peri_pj[i];
+            counters[i].cycles += cycles;
+        }
     }
 
     /// Noiseless reference MAC (for error measurements).
@@ -523,6 +668,63 @@ mod tests {
         assert_eq!(o1, o2, "fallback planes diverged from cached planes");
         assert_eq!(c1, c2);
         assert_eq!(r1.next_u64(), r2.next_u64());
+    }
+
+    #[test]
+    fn block_read_matches_solo_reads_bitwise() {
+        // the layer-major block entry point must reproduce, per image,
+        // exactly the outputs, counters and RNG stream of a solo
+        // mac_scratch call — across tile boundaries and in both modes
+        let (k, n) = (TILE_ROWS + 13, TILE_COLS + 9);
+        let w = randw(51, k * n);
+        let arr = CrossbarArray::program(&w, k, n, &cfg());
+        let imgs = 5usize;
+        let xs: Vec<f32> = {
+            let mut rx = Rng::new(52);
+            (0..imgs * k).map(|_| rx.next_f32()).collect()
+        };
+        let mut block = MacScratchBlock::default();
+        for mode in [ReadMode::Original, ReadMode::Decomposed] {
+            let plan = arr.read_plan(mode);
+            // solo reference, one image at a time
+            let mut solo_out = vec![0.0f32; imgs * n];
+            let mut solo_c = vec![ReadCounters::default(); imgs];
+            let mut solo_rngs: Vec<Rng> =
+                (0..imgs).map(|i| Rng::stream(53, i as u64)).collect();
+            let mut scratch = MacScratch::default();
+            for i in 0..imgs {
+                arr.mac_scratch(
+                    &xs[i * k..(i + 1) * k],
+                    &mut solo_out[i * n..(i + 1) * n],
+                    plan,
+                    5,
+                    1.0,
+                    &mut solo_rngs[i],
+                    &mut solo_c[i],
+                    &mut scratch,
+                );
+            }
+            // blocked layer-major read
+            let mut blk_out = vec![0.0f32; imgs * n];
+            let mut blk_c = vec![ReadCounters::default(); imgs];
+            let mut blk_rngs: Vec<Rng> =
+                (0..imgs).map(|i| Rng::stream(53, i as u64)).collect();
+            arr.mac_scratch_block(
+                &xs,
+                &mut blk_out,
+                plan,
+                5,
+                1.0,
+                &mut blk_rngs,
+                &mut blk_c,
+                &mut block,
+            );
+            assert_eq!(solo_out, blk_out, "{mode:?} outputs diverged");
+            assert_eq!(solo_c, blk_c, "{mode:?} counters diverged");
+            for (a, b) in solo_rngs.iter_mut().zip(blk_rngs.iter_mut()) {
+                assert_eq!(a.next_u64(), b.next_u64(), "{mode:?} RNG stream");
+            }
+        }
     }
 
     #[test]

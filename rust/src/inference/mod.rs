@@ -16,7 +16,7 @@
 //! counter-based per-sample RNG streams (`Rng::stream(seed, i)`), so
 //! logits AND energy counters are bit-identical at any thread count.
 
-use crate::crossbar::{CrossbarArray, MacScratch, ReadCounters};
+use crate::crossbar::{CrossbarArray, MacScratch, MacScratchBlock, ReadCounters};
 use crate::data::{Dataset, IMG_LEN};
 use crate::device::DeviceConfig;
 use crate::energy::{EnergyPlan, LayerPlan, ReadMode};
@@ -25,6 +25,7 @@ use crate::trace::{LayerSpans, MAX_TRACE_LAYERS};
 use crate::Result;
 
 use rayon::prelude::*;
+use std::sync::Mutex;
 
 /// Per-sample trace output of [`NoisyModel::forward_batch_seeds_traced`]:
 /// the sample's own energy/cycle counters (for per-request attribution)
@@ -108,6 +109,75 @@ impl Scratch {
             b: vec![0.0f32; w],
             mac: MacScratch::default(),
         }
+    }
+}
+
+/// Per-block arena for the layer-major batched forward: ping-pong
+/// activation slabs sized `block * max_width`, per-image RNG streams and
+/// counters, counter snapshots for per-layer span attribution, and the
+/// batched MAC scratch.  Reused across layers, dispatches, and (via
+/// [`SlabPool`]) scheduler workers — steady-state batched inference
+/// allocates nothing per dispatch beyond the logits it returns.
+#[derive(Clone, Debug, Default)]
+pub struct BatchSlab {
+    a: Vec<f32>,
+    b: Vec<f32>,
+    rngs: Vec<Rng>,
+    counters: Vec<ReadCounters>,
+    snaps: Vec<ReadCounters>,
+    mac: MacScratchBlock,
+}
+
+impl BatchSlab {
+    /// Grow to hold `n` images of a model `width` wide (never shrinks).
+    fn ensure(&mut self, n: usize, width: usize) {
+        if self.a.len() < n * width {
+            self.a.resize(n * width, 0.0);
+            self.b.resize(n * width, 0.0);
+        }
+        if self.rngs.len() < n {
+            self.rngs.resize_with(n, || Rng::new(0));
+        }
+        if self.counters.len() < n {
+            self.counters.resize(n, ReadCounters::default());
+            self.snaps.resize(n, ReadCounters::default());
+        }
+    }
+}
+
+/// A shared free-list of [`BatchSlab`]s: rayon block tasks check a slab
+/// out per block and return it afterwards, so repeated dispatches reuse
+/// the same arenas instead of reallocating them.  Scheduler workers own
+/// one pool per engine (`scheduler::Engine`); callers without a pool
+/// just pay a fresh slab per block.
+#[derive(Debug, Default)]
+pub struct SlabPool {
+    slabs: Mutex<Vec<BatchSlab>>,
+}
+
+/// Retained slabs are capped so a one-off huge dispatch cannot pin
+/// arenas forever; steady-state serving uses far fewer than this.
+const SLAB_POOL_CAP: usize = 64;
+
+impl SlabPool {
+    pub fn new() -> SlabPool {
+        SlabPool::default()
+    }
+
+    pub fn get(&self) -> BatchSlab {
+        self.slabs.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    pub fn put(&self, slab: BatchSlab) {
+        let mut g = self.slabs.lock().unwrap();
+        if g.len() < SLAB_POOL_CAP {
+            g.push(slab);
+        }
+    }
+
+    /// Slabs currently parked in the pool (observability/tests).
+    pub fn idle(&self) -> usize {
+        self.slabs.lock().unwrap().len()
     }
 }
 
@@ -291,7 +361,9 @@ impl NoisyModel {
         // Rng::stream(seed, i) == Rng::new(hash2(seed, i)), so routing
         // through the per-sample-seed impl is bit-identical to the
         // historical behaviour (pinned by tests/batch_parity.rs).
-        self.forward_batch_impl(xs, plan, cfg, counters, |i| crate::rng::hash2(seed, i as u64))
+        let n = xs.len() / self.d_in().max(1);
+        let seeds: Vec<u64> = (0..n).map(|i| crate::rng::hash2(seed, i as u64)).collect();
+        self.forward_batch_seeds(xs, plan, cfg, &seeds, counters)
     }
 
     /// Like [`NoisyModel::forward_batch`], but sample `i` seeds its RNG
@@ -303,6 +375,17 @@ impl NoisyModel {
     /// multi-image client batch is therefore bit-identical to the same
     /// images sent as sequential single requests, at any worker or rayon
     /// thread count.
+    ///
+    /// Since PR 10 this executes **layer-major**: every image in the
+    /// batch advances through layer L (tile-outer, image-inner, via
+    /// [`CrossbarArray::mac_scratch_block`]) before any image enters
+    /// layer L+1, so each tile's weights/plane cache stream from memory
+    /// once per image-block instead of once per image.  Per-image RNG
+    /// streams and counters live in a [`BatchSlab`]; the per-image
+    /// draw/accumulation order is unchanged, so logits and counters are
+    /// bit-identical to the sample-major reference
+    /// ([`NoisyModel::forward_batch_seeds_sample_major`]) and to
+    /// [`NoisyModel::forward_batch_seq`] at any thread count.
     pub fn forward_batch_seeds(
         &self,
         xs: &[f32],
@@ -311,18 +394,24 @@ impl NoisyModel {
         seeds: &[u64],
         counters: &mut ReadCounters,
     ) -> Vec<f32> {
-        assert!(
-            xs.len() % self.d_in() == 0,
-            "batch input length {} not a multiple of d_in {}",
-            xs.len(),
-            self.d_in()
-        );
-        assert_eq!(
-            seeds.len(),
-            xs.len() / self.d_in(),
-            "one seed per sample required"
-        );
-        self.forward_batch_impl(xs, plan, cfg, counters, |i| seeds[i])
+        self.forward_batch_layer_major(xs, plan, cfg, seeds, counters, false, None)
+            .0
+    }
+
+    /// [`NoisyModel::forward_batch_seeds`] drawing its [`BatchSlab`]s
+    /// from a caller-owned [`SlabPool`] — the scheduler's steady-state
+    /// zero-allocation path.
+    pub fn forward_batch_seeds_pooled(
+        &self,
+        xs: &[f32],
+        plan: &EnergyPlan,
+        cfg: &DeviceConfig,
+        seeds: &[u64],
+        counters: &mut ReadCounters,
+        pool: &SlabPool,
+    ) -> Vec<f32> {
+        self.forward_batch_layer_major(xs, plan, cfg, seeds, counters, false, Some(pool))
+            .0
     }
 
     /// [`NoisyModel::forward_batch_seeds`] with per-sample tracing: the
@@ -332,6 +421,12 @@ impl NoisyModel {
     /// index-order counter merge into `counters` as the untraced path —
     /// logits and merged counters are bit-identical to
     /// [`NoisyModel::forward_batch_seeds`] at any thread count.
+    ///
+    /// Span semantics under layer-major execution: per-layer uJ stays
+    /// exact (counter snapshots around each layer of the image's own
+    /// counters); per-layer wall time is the block's layer wall time
+    /// split evenly across the block's images, since images co-execute a
+    /// layer and no longer have private layer timings.
     pub fn forward_batch_seeds_traced(
         &self,
         xs: &[f32],
@@ -340,6 +435,41 @@ impl NoisyModel {
         seeds: &[u64],
         counters: &mut ReadCounters,
     ) -> (Vec<f32>, Vec<SampleTrace>) {
+        let (logits, traces) =
+            self.forward_batch_layer_major(xs, plan, cfg, seeds, counters, true, None);
+        (logits, traces.unwrap_or_default())
+    }
+
+    /// [`NoisyModel::forward_batch_seeds_traced`] drawing its
+    /// [`BatchSlab`]s from a caller-owned [`SlabPool`].
+    pub fn forward_batch_seeds_traced_pooled(
+        &self,
+        xs: &[f32],
+        plan: &EnergyPlan,
+        cfg: &DeviceConfig,
+        seeds: &[u64],
+        counters: &mut ReadCounters,
+        pool: &SlabPool,
+    ) -> (Vec<f32>, Vec<SampleTrace>) {
+        let (logits, traces) =
+            self.forward_batch_layer_major(xs, plan, cfg, seeds, counters, true, Some(pool));
+        (logits, traces.unwrap_or_default())
+    }
+
+    /// The checked-in **sample-major reference**: fan samples across
+    /// rayon, each image running all its layers on a private
+    /// [`Scratch`], per-sample counters merged in index order.  This is
+    /// the pre-PR-10 execution order, kept as the parity oracle for the
+    /// layer-major engine (tests/batch_parity.rs) and the denominator of
+    /// the `layer_major_speedup` bench gate.
+    pub fn forward_batch_seeds_sample_major(
+        &self,
+        xs: &[f32],
+        plan: &EnergyPlan,
+        cfg: &DeviceConfig,
+        seeds: &[u64],
+        counters: &mut ReadCounters,
+    ) -> Vec<f32> {
         let d_in = self.d_in();
         let d_out = self.d_out();
         assert!(
@@ -351,65 +481,13 @@ impl NoisyModel {
         let batch = xs.len() / d_in;
         assert_eq!(seeds.len(), batch, "one seed per sample required");
         let mut logits = vec![0.0f32; batch * d_out];
-        let traces: Vec<SampleTrace> = logits
-            .par_chunks_mut(d_out)
-            .enumerate()
-            .map_init(
-                || Scratch::for_model(self),
-                |scratch, (i, out)| {
-                    let mut rng = Rng::new(seeds[i]);
-                    let mut trace = SampleTrace::default();
-                    let y = self.forward_into_impl(
-                        &xs[i * d_in..(i + 1) * d_in],
-                        scratch,
-                        plan,
-                        cfg,
-                        &mut rng,
-                        &mut trace.counters,
-                        Some(&mut trace.layers),
-                    );
-                    out.copy_from_slice(y);
-                    trace
-                },
-            )
-            .collect();
-        for t in &traces {
-            counters.merge(&t.counters);
-        }
-        (logits, traces)
-    }
-
-    /// Shared batched-forward body: fan samples across rayon, sample `i`
-    /// drawing from `Rng::new(seed_of(i))`, per-sample counters merged in
-    /// index order (bit-identical at any thread count).
-    fn forward_batch_impl<F>(
-        &self,
-        xs: &[f32],
-        plan: &EnergyPlan,
-        cfg: &DeviceConfig,
-        counters: &mut ReadCounters,
-        seed_of: F,
-    ) -> Vec<f32>
-    where
-        F: Fn(usize) -> u64 + Sync,
-    {
-        let d_in = self.d_in();
-        let d_out = self.d_out();
-        assert!(
-            xs.len() % d_in == 0,
-            "batch input length {} not a multiple of d_in {}",
-            xs.len(),
-            d_in
-        );
-        let batch = xs.len() / d_in;
-        let mut logits = vec![0.0f32; batch * d_out];
         let per_sample: Vec<ReadCounters> = logits
             .par_chunks_mut(d_out)
             .enumerate()
             .map_init(
                 || Scratch::for_model(self),
                 |scratch, (i, out)| {
-                    let mut rng = Rng::new(seed_of(i));
+                    let mut rng = Rng::new(seeds[i]);
                     let mut c = ReadCounters::default();
                     let y = self.forward_into(
                         &xs[i * d_in..(i + 1) * d_in],
@@ -428,6 +506,165 @@ impl NoisyModel {
             counters.merge(c);
         }
         logits
+    }
+
+    /// Layer-major batched forward body.  The batch is split into
+    /// contiguous image blocks (one per rayon thread); each block walks
+    /// the layer stack with [`CrossbarArray::mac_scratch_block`], so
+    /// parallelism is per-(tile, image-block) while each image's RNG
+    /// stream and accumulation order stay exactly sample-major.  Block
+    /// boundaries cannot affect results (per-image state is private), so
+    /// logits and counters are bit-identical at any thread count.
+    #[allow(clippy::type_complexity)]
+    fn forward_batch_layer_major(
+        &self,
+        xs: &[f32],
+        plan: &EnergyPlan,
+        cfg: &DeviceConfig,
+        seeds: &[u64],
+        counters: &mut ReadCounters,
+        want_traces: bool,
+        pool: Option<&SlabPool>,
+    ) -> (Vec<f32>, Option<Vec<SampleTrace>>) {
+        let d_in = self.d_in();
+        let d_out = self.d_out();
+        assert!(
+            xs.len() % d_in == 0,
+            "batch input length {} not a multiple of d_in {}",
+            xs.len(),
+            d_in
+        );
+        let batch = xs.len() / d_in;
+        assert_eq!(seeds.len(), batch, "one seed per sample required");
+        let mut logits = vec![0.0f32; batch * d_out];
+        let mut per_image = vec![ReadCounters::default(); batch];
+        let mut traces = if want_traces {
+            vec![SampleTrace::default(); batch]
+        } else {
+            Vec::new()
+        };
+        if batch > 0 {
+            let threads = rayon::current_num_threads().max(1);
+            let bsize = batch.div_ceil(threads);
+            let nblocks = batch.div_ceil(bsize);
+            let trace_chunks: Vec<Option<&mut [SampleTrace]>> = if want_traces {
+                traces.chunks_mut(bsize).map(Some).collect()
+            } else {
+                (0..nblocks).map(|_| None).collect()
+            };
+            let jobs: Vec<_> = xs
+                .chunks(bsize * d_in)
+                .zip(seeds.chunks(bsize))
+                .zip(logits.chunks_mut(bsize * d_out))
+                .zip(per_image.chunks_mut(bsize))
+                .zip(trace_chunks)
+                .collect();
+            jobs.into_par_iter().for_each(|((((xb, sb), lb), cb), tb)| {
+                let mut slab = pool.map(|p| p.get()).unwrap_or_default();
+                self.forward_block(xb, sb, plan, cfg, lb, cb, tb, &mut slab);
+                if let Some(p) = pool {
+                    p.put(slab);
+                }
+            });
+        }
+        for c in &per_image {
+            counters.merge(c);
+        }
+        (logits, want_traces.then_some(traces))
+    }
+
+    /// Run one contiguous image block through every layer, layer-major.
+    /// `xs` is `n * d_in`, `logits_out` is `n * d_out`; per-image
+    /// counters land in `per_image` (overwritten, not accumulated).
+    #[allow(clippy::too_many_arguments)]
+    fn forward_block(
+        &self,
+        xs: &[f32],
+        seeds: &[u64],
+        plan: &EnergyPlan,
+        cfg: &DeviceConfig,
+        logits_out: &mut [f32],
+        per_image: &mut [ReadCounters],
+        mut traces: Option<&mut [SampleTrace]>,
+        slab: &mut BatchSlab,
+    ) {
+        let n = seeds.len();
+        assert_eq!(plan.len(), self.layers.len(), "plan entry per layer");
+        slab.ensure(n, self.max_width());
+        let BatchSlab {
+            a,
+            b,
+            rngs,
+            counters,
+            snaps,
+            mac,
+        } = slab;
+        for i in 0..n {
+            rngs[i] = Rng::new(seeds[i]);
+            counters[i] = ReadCounters::default();
+        }
+        for (li, layer) in self.layers.iter().enumerate() {
+            let t0 = traces.as_ref().map(|_| std::time::Instant::now());
+            if traces.is_some() {
+                snaps[..n].copy_from_slice(&counters[..n]);
+            }
+            // same ping-pong parity as the single-sample path: even
+            // layers write slab a, odd layers write slab b
+            let (prev, cur): (&mut [f32], &mut [f32]) = if li % 2 == 0 {
+                (b.as_mut_slice(), a.as_mut_slice())
+            } else {
+                (a.as_mut_slice(), b.as_mut_slice())
+            };
+            let outs = &mut cur[..n * layer.d_out];
+            let input: &[f32] = if li == 0 {
+                xs
+            } else {
+                let d_prev = self.layers[li - 1].d_out;
+                let inp = &mut prev[..n * d_prev];
+                for v in inp.iter_mut() {
+                    *v = v.max(0.0); // ReLU in place, elementwise as before
+                }
+                inp
+            };
+            layer.array.mac_scratch_block(
+                input,
+                outs,
+                plan.layer(li),
+                cfg.act_bits,
+                cfg.intensity.factor(),
+                &mut rngs[..n],
+                &mut counters[..n],
+                mac,
+            );
+            for i in 0..n {
+                let o = &mut outs[i * layer.d_out..(i + 1) * layer.d_out];
+                for (ov, &bv) in o.iter_mut().zip(layer.bias.iter()) {
+                    *ov += bv;
+                }
+            }
+            if let (Some(tr), Some(t0)) = (traces.as_deref_mut(), t0) {
+                // uJ per image is exact (its own counters); wall time is
+                // the block's layer time split evenly across its images
+                let us = (t0.elapsed().as_micros() / n.max(1) as u128)
+                    .min(u32::MAX as u128) as u32;
+                for i in 0..n {
+                    tr[i].layers.n = self.layers.len();
+                    if li < MAX_TRACE_LAYERS {
+                        tr[i].layers.us[li] = us;
+                        tr[i].layers.uj[li] = counters[i].uj_since(&snaps[i]) as f32;
+                    }
+                }
+            }
+        }
+        let last = self.layers.len() - 1;
+        let src = if last % 2 == 0 { &*a } else { &*b };
+        logits_out.copy_from_slice(&src[..n * self.layers[last].d_out]);
+        per_image.copy_from_slice(&counters[..n]);
+        if let Some(tr) = traces {
+            for i in 0..n {
+                tr[i].counters = counters[i];
+            }
+        }
     }
 
     /// Sequential reference for [`NoisyModel::forward_batch`]: identical

@@ -35,6 +35,7 @@ pub mod energy;
 pub mod inference;
 pub mod metrics;
 pub mod models;
+pub mod pool;
 pub mod quant;
 pub mod rng;
 pub mod runtime;

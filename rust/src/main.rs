@@ -75,8 +75,9 @@ FLAGS (defaults in parentheses):
   --max-body-mb N     serve-http: request body cap in MiB, 413 above (8)
   --max-conns N       serve-http: global open-connection cap, typed 503 +
                       Retry-After above it (10000)
-  --conn-threads N    serve-http: DEPRECATED no-op — connections live on
-                      one epoll event loop now, not a handler pool
+  --no-alloc-pool     serve-http: disable the serve-path buffer pool
+                      (fresh allocation per request — the byte-identity
+                      reference path; pooled is the default)
   --max-conns-per-peer N serve-http: simultaneous connections per peer IP,
                       429 above (64)
   --cache-entries N   serve-http: exact result cache capacity in entries;
@@ -464,14 +465,6 @@ fn serve_http_cmd(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
         ),
         None => None,
     };
-    // The reserved-handler pool is gone: connections are epoll-driven.
-    // The flag stays accepted (deployment scripts pass it) as a no-op.
-    if args.has("conn-threads") {
-        eprintln!(
-            "warning: --conn-threads is deprecated and ignored — connections \
-             run on one epoll event loop; size concurrency with --max-conns"
-        );
-    }
     let http_cfg = HttpServerConfig {
         addr: format!("{host}:{port}"),
         max_conns: args.parse_or("max-conns", 10_000usize)?,
@@ -493,6 +486,7 @@ fn serve_http_cmd(cfg: &ExperimentConfig, args: &Args) -> Result<()> {
                 args.parse_or("rebalance-ms", 50u64)?,
             ),
             energy_budget_uj_s,
+            alloc_pool: !args.has("no-alloc-pool"),
             device: dev,
             ..Default::default()
         },

@@ -1,0 +1,277 @@
+//! Size-classed buffer pools for the zero-alloc serve path.
+//!
+//! Steady-state serving used to heap-allocate on every request: the
+//! epoll front end built a fresh `Vec<u8>` per request body, the
+//! scheduler packed pixels into a fresh `Vec<f32>` arena per batch and
+//! cloned logits into fresh reply vectors, and the response writer
+//! rendered into a fresh byte buffer.  [`BufferPool`] recycles all of
+//! those through power-of-two size classes so a warmed server performs
+//! no per-request heap allocation on the hot path.
+//!
+//! Correctness is by construction: a pooled buffer is only ever reused
+//! for its *capacity* — every `get_*` returns an **empty** (len 0)
+//! vector, so callers fill it exactly as they would a fresh
+//! allocation and the produced bytes are identical with the pool on or
+//! off.  `enabled == false` turns every `get_*` into a plain fresh
+//! allocation and every `put_*` into a drop, without touching the
+//! stats, so a `--no-alloc-pool` server is the literal pre-pool code
+//! path (the byte-identity reference in CI).
+//!
+//! Class mapping keeps the invariant "any pooled buffer in the class I
+//! pop from is big enough": `put` files a buffer under
+//! `floor(log2(capacity))` (the class whose guarantee its capacity
+//! meets), `get(min)` pops from `ceil(log2(min))` (the smallest class
+//! whose members all have capacity >= min).  Each class retains at
+//! most [`CLASS_CAP`] buffers per element type; overflow is dropped so
+//! a burst cannot pin memory forever.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Mutex;
+
+/// Number of power-of-two size classes: class `k` holds buffers with
+/// `capacity in [2^k, 2^(k+1))`.  Class 31 covers anything up to 4 GiB
+/// per buffer — far beyond any request this server admits.
+const NUM_CLASSES: usize = 32;
+
+/// Buffers retained per (class, element type); overflow is dropped.
+const CLASS_CAP: usize = 32;
+
+/// Shared counters behind `/metrics` (`emtopt_alloc_pool_*`).  Hits
+/// and misses count `get_*` calls that were / were not served from a
+/// free list; `bytes` gauges the capacity currently parked in the
+/// free lists (grows on `put`, shrinks on a `get` hit).
+#[derive(Debug, Default)]
+pub struct PoolStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub bytes: AtomicU64,
+}
+
+impl PoolStats {
+    /// Hit ratio over all `get_*` calls so far (0.0 before any call).
+    pub fn hit_ratio(&self) -> f64 {
+        let h = self.hits.load(Relaxed) as f64;
+        let m = self.misses.load(Relaxed) as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+}
+
+/// Size-classed recycling pool for the serve path's byte and f32
+/// buffers.  One instance is shared by the epoll front end, the
+/// dispatcher, and every scheduler worker; the per-class mutexes are
+/// uncontended in practice (a lock is held only for a Vec push/pop).
+pub struct BufferPool {
+    enabled: bool,
+    stats: PoolStats,
+    bytes_classes: [Mutex<Vec<Vec<u8>>>; NUM_CLASSES],
+    f32_classes: [Mutex<Vec<Vec<f32>>>; NUM_CLASSES],
+}
+
+/// Class a `get(min_capacity)` pops from: the smallest class whose
+/// buffers are all guaranteed to have capacity >= min.
+fn class_for_get(min_capacity: usize) -> usize {
+    (usize::BITS - min_capacity.next_power_of_two().leading_zeros()) as usize - 1
+}
+
+/// Class a returned buffer files under: floor(log2(capacity)).
+fn class_for_put(capacity: usize) -> usize {
+    (usize::BITS - capacity.leading_zeros()) as usize - 1
+}
+
+impl BufferPool {
+    pub fn new(enabled: bool) -> Self {
+        Self {
+            enabled,
+            stats: PoolStats::default(),
+            bytes_classes: std::array::from_fn(|_| Mutex::new(Vec::new())),
+            f32_classes: std::array::from_fn(|_| Mutex::new(Vec::new())),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn stats(&self) -> &PoolStats {
+        &self.stats
+    }
+
+    /// Fetch an empty `Vec<u8>` with capacity >= `min_capacity`.
+    pub fn get_bytes(&self, min_capacity: usize) -> Vec<u8> {
+        if !self.enabled {
+            return Vec::with_capacity(min_capacity);
+        }
+        let class = class_for_get(min_capacity.max(1)).min(NUM_CLASSES - 1);
+        if let Some(mut buf) = self.bytes_classes[class].lock().unwrap().pop() {
+            self.stats.hits.fetch_add(1, Relaxed);
+            self.stats.bytes.fetch_sub(buf.capacity() as u64, Relaxed);
+            buf.clear();
+            return buf;
+        }
+        self.stats.misses.fetch_add(1, Relaxed);
+        Vec::with_capacity(min_capacity)
+    }
+
+    /// Return a byte buffer to its size class (dropped when the pool
+    /// is disabled, the buffer has no capacity, or the class is full).
+    pub fn put_bytes(&self, buf: Vec<u8>) {
+        if !self.enabled || buf.capacity() == 0 {
+            return;
+        }
+        let class = class_for_put(buf.capacity()).min(NUM_CLASSES - 1);
+        let mut list = self.bytes_classes[class].lock().unwrap();
+        if list.len() < CLASS_CAP {
+            self.stats.bytes.fetch_add(buf.capacity() as u64, Relaxed);
+            list.push(buf);
+        }
+    }
+
+    /// Fetch an empty `Vec<f32>` with capacity >= `min_capacity`.
+    pub fn get_f32(&self, min_capacity: usize) -> Vec<f32> {
+        if !self.enabled {
+            return Vec::with_capacity(min_capacity);
+        }
+        let class = class_for_get(min_capacity.max(1)).min(NUM_CLASSES - 1);
+        if let Some(mut buf) = self.f32_classes[class].lock().unwrap().pop() {
+            self.stats.hits.fetch_add(1, Relaxed);
+            self.stats
+                .bytes
+                .fetch_sub((buf.capacity() * 4) as u64, Relaxed);
+            buf.clear();
+            return buf;
+        }
+        self.stats.misses.fetch_add(1, Relaxed);
+        Vec::with_capacity(min_capacity)
+    }
+
+    /// Return an f32 buffer to its size class.
+    pub fn put_f32(&self, buf: Vec<f32>) {
+        if !self.enabled || buf.capacity() == 0 {
+            return;
+        }
+        let class = class_for_put(buf.capacity()).min(NUM_CLASSES - 1);
+        let mut list = self.f32_classes[class].lock().unwrap();
+        if list.len() < CLASS_CAP {
+            self.stats
+                .bytes
+                .fetch_add((buf.capacity() * 4) as u64, Relaxed);
+            list.push(buf);
+        }
+    }
+}
+
+impl std::fmt::Debug for BufferPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BufferPool")
+            .field("enabled", &self.enabled)
+            .field("hits", &self.stats.hits.load(Relaxed))
+            .field("misses", &self.stats.misses.load(Relaxed))
+            .field("bytes", &self.stats.bytes.load(Relaxed))
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_mapping_guarantees_capacity() {
+        // put(class floor) / get(class ceil): any buffer filed in the
+        // class a get pops from must satisfy the get's minimum.
+        for min in [1usize, 2, 3, 7, 8, 9, 100, 784, 1 << 16] {
+            let g = class_for_get(min);
+            // every capacity that files into class g is >= 2^g >= min
+            assert!(1usize << g >= min, "get class {g} too small for {min}");
+        }
+        for cap in [1usize, 2, 3, 8, 12, 784, 1000, 1 << 20] {
+            let p = class_for_put(cap);
+            assert!(cap >= 1 << p, "cap {cap} below its class floor");
+            assert!(cap < 1 << (p + 1), "cap {cap} above its class ceiling");
+        }
+    }
+
+    #[test]
+    fn get_after_put_is_a_hit_with_enough_capacity() {
+        let pool = BufferPool::new(true);
+        let mut b = pool.get_bytes(100); // miss
+        b.extend_from_slice(&[1, 2, 3]);
+        let cap = b.capacity();
+        pool.put_bytes(b);
+        assert_eq!(pool.stats().bytes.load(Relaxed), cap as u64);
+
+        let b2 = pool.get_bytes(50); // hit: class_for_get(50)=ceil -> same class region
+        assert!(b2.is_empty(), "recycled buffer must come back empty");
+        assert!(b2.capacity() >= 50);
+        assert_eq!(pool.stats().hits.load(Relaxed), 1);
+        assert_eq!(pool.stats().misses.load(Relaxed), 1);
+        assert_eq!(pool.stats().bytes.load(Relaxed), 0);
+        assert!((pool.stats().hit_ratio() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f32_pool_round_trips_and_tracks_bytes() {
+        let pool = BufferPool::new(true);
+        let mut v = pool.get_f32(784); // miss
+        v.resize(784, 0.25);
+        let cap = v.capacity();
+        pool.put_f32(v);
+        assert_eq!(pool.stats().bytes.load(Relaxed), (cap * 4) as u64);
+        let v2 = pool.get_f32(784); // hit
+        assert!(v2.is_empty());
+        assert!(v2.capacity() >= 784);
+        assert_eq!(pool.stats().bytes.load(Relaxed), 0);
+    }
+
+    #[test]
+    fn smaller_put_never_serves_larger_get() {
+        let pool = BufferPool::new(true);
+        // a 12-cap buffer files under class 3 [8,16); a get(16) pops
+        // from class 4, so it must MISS rather than return 12 < 16
+        let mut b = Vec::with_capacity(12);
+        b.push(0u8);
+        let cap = b.capacity();
+        pool.put_bytes(b);
+        let g = pool.get_bytes(16.max(cap + 1));
+        assert!(g.capacity() > cap || g.capacity() >= 16);
+        assert_eq!(pool.stats().hits.load(Relaxed), 0);
+    }
+
+    #[test]
+    fn disabled_pool_is_pure_passthrough() {
+        let pool = BufferPool::new(false);
+        let b = pool.get_bytes(64);
+        assert!(b.capacity() >= 64);
+        pool.put_bytes(b);
+        let v = pool.get_f32(64);
+        pool.put_f32(v);
+        assert_eq!(pool.stats().hits.load(Relaxed), 0);
+        assert_eq!(pool.stats().misses.load(Relaxed), 0);
+        assert_eq!(pool.stats().bytes.load(Relaxed), 0);
+        // nothing was parked: a fresh get still misses nothing (no stats)
+        assert!(pool.get_bytes(64).is_empty());
+    }
+
+    #[test]
+    fn class_retention_is_capped() {
+        let pool = BufferPool::new(true);
+        for _ in 0..(CLASS_CAP + 8) {
+            pool.put_bytes(Vec::with_capacity(64));
+        }
+        // only CLASS_CAP buffers were parked; the rest were dropped
+        let mut hits = 0;
+        for _ in 0..(CLASS_CAP + 8) {
+            let b = pool.get_bytes(64);
+            if pool.stats().hits.load(Relaxed) > hits {
+                hits = pool.stats().hits.load(Relaxed);
+            }
+            drop(b);
+        }
+        assert_eq!(hits as usize, CLASS_CAP);
+        assert_eq!(pool.stats().bytes.load(Relaxed), 0);
+    }
+}

@@ -57,8 +57,9 @@ use crate::coordinator::router::{image_seed, NativeServerConfig, Overloaded, Ser
 use crate::crossbar::ReadCounters;
 use crate::device::DeviceConfig;
 use crate::energy::EnergyPlan;
-use crate::inference::NoisyModel;
+use crate::inference::{NoisyModel, SlabPool};
 use crate::metrics::LatencyWindow;
+use crate::pool::BufferPool;
 use crate::trace::{SpanRecord, Stage, TraceContext};
 use crate::Result;
 
@@ -219,6 +220,15 @@ struct Shared {
     draining: AtomicBool,
     rebalance_moves: AtomicU64,
     governor: Option<EnergyGovernor>,
+    /// Size-classed buffer pool of the zero-alloc serve path (pixel
+    /// arenas, reply logits; the HTTP front end shares it for bodies
+    /// and rendered responses).  Disabled (`--no-alloc-pool`) it is a
+    /// pure passthrough to fresh allocations.
+    pool: Arc<BufferPool>,
+    /// Recycled [`BatchSlab`](crate::inference::BatchSlab) arenas for
+    /// the layer-major forward (activation ping-pong, RNG/counter
+    /// slabs, MAC scratch).  Only consulted while `pool` is enabled.
+    slabs: SlabPool,
 }
 
 /// Stops the engine when the last clone drops: workers finish the
@@ -341,6 +351,8 @@ impl Engine {
             draining: AtomicBool::new(false),
             rebalance_moves: AtomicU64::new(0),
             governor,
+            pool: Arc::new(BufferPool::new(cfg.alloc_pool)),
+            slabs: SlabPool::new(),
         });
         let mut handles = Vec::with_capacity(cfg.workers + 1);
         for w in 0..cfg.workers {
@@ -385,6 +397,13 @@ impl Engine {
 
     pub fn energy_budget_uj_s(&self) -> Option<f64> {
         self.shared.governor.as_ref().map(|g| g.budget_uj_s())
+    }
+
+    /// The engine's shared serve-path buffer pool (the HTTP front end
+    /// recycles request bodies and rendered responses through it; its
+    /// counters feed `emtopt_alloc_pool_*` on `/metrics`).
+    pub fn alloc_pool(&self) -> &Arc<BufferPool> {
+        &self.shared.pool
     }
 
     /// Freeze rebalancing and switch the pool to strict
@@ -701,13 +720,22 @@ fn promote_parked(shared: &Shared, s: &mut Sched) -> bool {
 /// (pick→dispatch), compute (whole-batch forward wall time — what the
 /// rider actually waited on), plus the request's own samples' observed
 /// energy and per-layer breakdown from the traced forward.
-fn run_batch(shared: &Shared, lane_idx: usize, worker: usize, stolen: bool, items: Vec<WorkItem>) {
+fn run_batch(
+    shared: &Shared,
+    lane_idx: usize,
+    worker: usize,
+    stolen: bool,
+    mut items: Vec<WorkItem>,
+) {
     let lane = &shared.lanes[lane_idx];
     let model = &shared.model;
     let d_in = model.d_in();
     let nc = model.d_out();
     let n_images: usize = items.iter().map(|r| r.count).sum();
-    let mut x = vec![0.0f32; n_images * d_in];
+    // pixel arena: pooled capacity, zero-filled to the packed length
+    // (a recycled buffer comes back empty, so resize refills every slot)
+    let mut x = shared.pool.get_f32(n_images * d_in);
+    x.resize(n_images * d_in, 0.0);
     let mut seeds = Vec::with_capacity(n_images);
     let mut off = 0usize;
     for r in &items {
@@ -717,10 +745,25 @@ fn run_batch(shared: &Shared, lane_idx: usize, worker: usize, stolen: bool, item
         }
         off += r.count;
     }
+    // the parsed pixel vecs are dead once packed: recycle them so the
+    // HTTP parser's next get_f32 is a pool hit
+    for r in &mut items {
+        shared.pool.put_f32(std::mem::take(&mut r.images));
+    }
     let t0 = Instant::now();
     let mut counters = ReadCounters::default();
-    let (logits, traces) =
-        model.forward_batch_seeds_traced(&x, &lane.plan, &shared.device, &seeds, &mut counters);
+    let (logits, traces) = if shared.pool.enabled() {
+        model.forward_batch_seeds_traced_pooled(
+            &x,
+            &lane.plan,
+            &shared.device,
+            &seeds,
+            &mut counters,
+            &shared.slabs,
+        )
+    } else {
+        model.forward_batch_seeds_traced(&x, &lane.plan, &shared.device, &seeds, &mut counters)
+    };
     let infer_us = t0.elapsed().as_micros() as u64;
 
     let stats = &lane.stats;
@@ -773,12 +816,14 @@ fn run_batch(shared: &Shared, lane_idx: usize, worker: usize, stolen: bool, item
         stats.stages.record(Stage::BatchWait, batch_wait_us);
         stats.stages.record(Stage::Compute, infer_us);
 
-        r.reply.deliver(Ok(Reply {
-            logits: logits[off * nc..(off + r.count) * nc].to_vec(),
-            span,
-        }));
+        // per-reply logits: pooled capacity instead of a fresh clone
+        let mut out = shared.pool.get_f32(r.count * nc);
+        out.extend_from_slice(&logits[off * nc..(off + r.count) * nc]);
+        r.reply.deliver(Ok(Reply { logits: out, span }));
         off += r.count;
     }
+    shared.pool.put_f32(x);
+    shared.pool.put_f32(logits);
 }
 
 /// One rebalance step over the live queue depths and per-lane *windowed*

@@ -19,7 +19,9 @@
 //! just stays "partial" until the idle sweep reaps it.
 
 use std::io::{ErrorKind, Read, Write};
+use std::sync::Arc;
 
+use crate::pool::BufferPool;
 use crate::Result;
 
 /// Maximum accepted request/response head (request line + headers).
@@ -328,8 +330,18 @@ impl<S: Read + Write> HttpConn<S> {
 /// and flushes it as `EPOLLOUT` allows; `HttpConn::write_response` uses
 /// it too, so both paths emit byte-identical responses.
 pub fn render_response(resp: &Response, keep_alive: bool) -> Vec<u8> {
-    use std::fmt::Write as _;
-    let mut head = format!(
+    let mut out = Vec::with_capacity(128 + resp.body.len());
+    render_response_into(resp, keep_alive, &mut out);
+    out
+}
+
+/// Serialize a response by appending to an existing buffer — the
+/// zero-alloc flavour of [`render_response`] the event loop uses to
+/// render straight into a connection's (pooled, reused) write buffer.
+/// Appends byte-for-byte what [`render_response`] returns.
+pub fn render_response_into(resp: &Response, keep_alive: bool, out: &mut Vec<u8>) {
+    let _ = write!(
+        out,
         "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n",
         resp.status,
         status_text(resp.status),
@@ -338,12 +350,10 @@ pub fn render_response(resp: &Response, keep_alive: bool) -> Vec<u8> {
         if keep_alive { "keep-alive" } else { "close" },
     );
     for (name, value) in &resp.headers {
-        let _ = write!(head, "{name}: {value}\r\n");
+        let _ = write!(out, "{name}: {value}\r\n");
     }
-    head.push_str("\r\n");
-    let mut out = head.into_bytes();
+    out.extend_from_slice(b"\r\n");
     out.extend_from_slice(&resp.body);
-    out
 }
 
 /// A fully parsed request head (everything above the blank line).
@@ -486,10 +496,24 @@ impl FrameBuf {
 
     /// Drain exactly `len` body bytes if buffered.
     fn take_body(&mut self, len: usize) -> Option<Vec<u8>> {
+        self.take_body_pooled(len, None)
+    }
+
+    /// [`FrameBuf::take_body`], but the body vector's capacity comes
+    /// from `pool` when one is armed (byte content is identical either
+    /// way — a recycled buffer starts empty).
+    fn take_body_pooled(&mut self, len: usize, pool: Option<&BufferPool>) -> Option<Vec<u8>> {
         if self.buf.len() < len {
             return None;
         }
-        let body: Vec<u8> = self.buf.drain(..len).collect();
+        let body = match pool {
+            Some(p) => {
+                let mut b = p.get_bytes(len);
+                b.extend(self.buf.drain(..len));
+                b
+            }
+            None => self.buf.drain(..len).collect(),
+        };
         self.scanned = 0;
         Some(body)
     }
@@ -508,6 +532,10 @@ pub struct RequestParser {
     /// [`RequestParser::take_expect_continue`] (one interim response per
     /// request).
     continue_claimed: bool,
+    /// Request bodies draw their capacity from this pool when armed
+    /// (the event loop shares the engine's pool); `None` keeps plain
+    /// per-request allocations.
+    pool: Option<Arc<BufferPool>>,
 }
 
 impl Default for RequestParser {
@@ -518,10 +546,17 @@ impl Default for RequestParser {
 
 impl RequestParser {
     pub fn new() -> Self {
+        Self::with_pool(None)
+    }
+
+    /// A parser whose request bodies draw pooled capacity (see
+    /// [`BufferPool`]); the server recycles each body after dispatch.
+    pub fn with_pool(pool: Option<Arc<BufferPool>>) -> Self {
         RequestParser {
             frame: FrameBuf::new(),
             pending: None,
             continue_claimed: false,
+            pool,
         }
     }
 
@@ -558,7 +593,7 @@ impl RequestParser {
             self.continue_claimed = false;
         }
         let need = self.pending.as_ref().map(|h| h.content_length).unwrap_or(0);
-        match self.frame.take_body(need) {
+        match self.frame.take_body_pooled(need, self.pool.as_deref()) {
             Some(body) => {
                 let head = self.pending.take().expect("pending head");
                 Ok(Some(head.into_request(body)))
@@ -933,6 +968,34 @@ mod tests {
             .find(|(k, _)| k == "retry-after")
             .map(|(_, v)| v.as_str());
         assert_eq!(ra, Some("7"));
+    }
+
+    #[test]
+    fn pooled_parser_bodies_are_identical_and_recycle() {
+        let pool = Arc::new(BufferPool::new(true));
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello";
+        let mut p = RequestParser::with_pool(Some(pool.clone()));
+        p.feed(raw);
+        let r = p.try_next(1024).unwrap().unwrap();
+        assert_eq!(r.body, b"hello");
+        pool.put_bytes(r.body); // the server recycles after dispatch
+        p.feed(raw);
+        let r2 = p.try_next(1024).unwrap().unwrap();
+        assert_eq!(r2.body, b"hello", "pooled body must carry identical bytes");
+        assert_eq!(
+            pool.stats().hits.load(std::sync::atomic::Ordering::Relaxed),
+            1,
+            "second body must be served from the pool"
+        );
+    }
+
+    #[test]
+    fn render_response_into_appends_identical_bytes() {
+        let resp = Response::error_json(503, "overloaded").with_retry_after(7);
+        let mut out = b"prefix".to_vec();
+        render_response_into(&resp, true, &mut out);
+        assert_eq!(&out[..6], b"prefix");
+        assert_eq!(&out[6..], render_response(&resp, true).as_slice());
     }
 
     #[test]

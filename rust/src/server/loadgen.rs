@@ -261,6 +261,38 @@ pub struct LoadgenReport {
     /// set): server-side counter deltas plus the client's predicted
     /// hit/miss latency split.
     pub cache: Option<CacheObs>,
+    /// Serve-path buffer-pool observation: `emtopt_alloc_pool_*`
+    /// counter deltas bracketing the run.  `None` when the server
+    /// predates the family (legacy schema) or the scrape failed.
+    pub alloc_pool: Option<PoolObs>,
+}
+
+/// What one run observed of the server's serve-path buffer pool
+/// ([`crate::pool::BufferPool`]): hit/miss counter deltas bracketing
+/// the run, plus the free-list byte gauge after it.  A warmed pooled
+/// server should report `hit_ratio` near 1.0; a `--no-alloc-pool`
+/// server reports all zeros.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PoolObs {
+    /// Server-side `hits / (hits + misses)` over the run's delta.
+    pub hit_ratio: f64,
+    /// Pooled-buffer fetches served from a free list during the run.
+    pub hits: u64,
+    /// Fetches that fell through to a fresh allocation during the run.
+    pub misses: u64,
+    /// `emtopt_alloc_pool_bytes` after the run (parked capacity).
+    pub bytes: u64,
+}
+
+impl PoolObs {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("hit_ratio", Json::Num(self.hit_ratio)),
+            ("hits", Json::Num(self.hits as f64)),
+            ("misses", Json::Num(self.misses as f64)),
+            ("bytes", Json::Num(self.bytes as f64)),
+        ])
+    }
 }
 
 /// What one `--key-reuse` run observed of the server's exact result
@@ -388,6 +420,15 @@ impl LoadgenReport {
                 c.miss_p50_us as f64 / 1000.0
             ));
         }
+        if let Some(p) = &self.alloc_pool {
+            s.push_str(&format!(
+                "\n  alloc pool: hit ratio {:.1}% ({} hits / {} misses) | {} bytes parked",
+                100.0 * p.hit_ratio,
+                p.hits,
+                p.misses,
+                p.bytes
+            ));
+        }
         if self.trace_sample > 0 {
             s.push_str(&format!(
                 "\n  traced 1/{}: {} echoes | inline mean queue_wait {:.1} us | \
@@ -458,6 +499,9 @@ impl LoadgenReport {
         }
         if let Some(c) = &self.cache {
             fields.push(("cache", c.to_json()));
+        }
+        if let Some(p) = &self.alloc_pool {
+            fields.push(("alloc_pool", p.to_json()));
         }
         if self.trace_sample > 0 {
             fields.push(("trace_sample", Json::Num(self.trace_sample as f64)));
@@ -1022,6 +1066,28 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                 .map_or(0, |p| p.iter().filter(|&&h| !h).count() as u64),
         }
     });
+    // Pool observation: present iff the server renders the family at
+    // all (absent against an older server — legacy schema preserved).
+    let alloc_pool = parse_gauge_f64(&after_text, "emtopt_alloc_pool_hits_total").map(|_| {
+        let delta = |name: &str| {
+            (parse_gauge_f64(&after_text, name).unwrap_or(0.0)
+                - parse_gauge_f64(&before_text, name).unwrap_or(0.0))
+            .max(0.0)
+        };
+        let hits = delta("emtopt_alloc_pool_hits_total");
+        let misses = delta("emtopt_alloc_pool_misses_total");
+        PoolObs {
+            hit_ratio: if hits + misses > 0.0 {
+                hits / (hits + misses)
+            } else {
+                0.0
+            },
+            hits: hits as u64,
+            misses: misses as u64,
+            bytes: parse_gauge_f64(&after_text, "emtopt_alloc_pool_bytes").unwrap_or(0.0)
+                as u64,
+        }
+    });
     let trace_inline_mean_us = if spans.is_empty() {
         [0.0; 3]
     } else {
@@ -1073,6 +1139,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         server_open_conns_peak,
         key_reuse: cfg.key_reuse,
         cache,
+        alloc_pool,
     })
 }
 
@@ -2456,5 +2523,31 @@ mod tests {
         assert!(back.opt("key_reuse").is_none());
         assert!(back.opt("cache").is_none());
         assert!(!plain.render().contains("key reuse"));
+    }
+
+    #[test]
+    fn report_json_carries_alloc_pool_block() {
+        let r = LoadgenReport {
+            alloc_pool: Some(PoolObs {
+                hit_ratio: 0.96,
+                hits: 960,
+                misses: 40,
+                bytes: 131072,
+            }),
+            ..Default::default()
+        };
+        let back = Json::parse(&r.to_json().render()).unwrap();
+        let p = back.get("alloc_pool").unwrap();
+        assert_eq!(p.get("hit_ratio").unwrap().as_f64().unwrap(), 0.96);
+        assert_eq!(p.get("hits").unwrap().as_u64().unwrap(), 960);
+        assert_eq!(p.get("misses").unwrap().as_u64().unwrap(), 40);
+        assert_eq!(p.get("bytes").unwrap().as_u64().unwrap(), 131072);
+        assert!(r.render().contains("alloc pool: hit ratio 96.0%"));
+        // against a server that predates the family (or with the scrape
+        // missing) the block is absent entirely — legacy schema
+        let plain = LoadgenReport::default();
+        let back = Json::parse(&plain.to_json().render()).unwrap();
+        assert!(back.opt("alloc_pool").is_none());
+        assert!(!plain.render().contains("alloc pool"));
     }
 }

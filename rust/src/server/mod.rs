@@ -104,6 +104,7 @@ use crate::device::DeviceConfig;
 use crate::energy::{EnergyModel, EnergyPlan, LayerPlan, PlanSource, ReadMode};
 use crate::inference::NoisyModel;
 use crate::models::{LayerMeta, ModelDesc};
+use crate::pool::BufferPool;
 use crate::rng::hash2;
 use crate::scheduler::{self, CompletionQueue, EnergyShed, EngineSnapshot, LaneSpec, Reply};
 use crate::trace::{self, FlightRecorder, SpanRecord, Stage, TraceContext};
@@ -111,7 +112,9 @@ use crate::util::json::Json;
 use crate::Result;
 
 use self::epoll::{Poller, WakeFd, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP};
-use self::http::{render_response, HttpRequest, PayloadTooLarge, RequestParser, Response};
+use self::http::{
+    render_response, render_response_into, HttpRequest, PayloadTooLarge, RequestParser, Response,
+};
 
 // ---------------------------------------------------------------------------
 // energy tiers
@@ -441,6 +444,14 @@ impl TieredEngine {
     /// The configured fleet energy budget, if the governor is armed.
     pub fn energy_budget_uj_s(&self) -> Option<f64> {
         self.engine.energy_budget_uj_s()
+    }
+
+    /// The engine's shared serve-path buffer pool: the HTTP front end
+    /// recycles request bodies and reply logits through it, and its
+    /// counters feed `emtopt_alloc_pool_*` on `/metrics` (see
+    /// [`crate::pool`]).
+    pub fn alloc_pool(&self) -> &Arc<BufferPool> {
+        self.engine.alloc_pool()
     }
 
     pub fn input_len(&self) -> usize {
@@ -1087,7 +1098,11 @@ impl EventLoop {
                 stream,
                 peer_ip: ip,
                 charged,
-                parser: RequestParser::new(),
+                // Pooled parser: request-body buffers come from (and
+                // return to) the engine's shared pool, so a warmed
+                // keep-alive connection frames bodies without
+                // allocating.
+                parser: RequestParser::with_pool(Some(self.ctx.engine.alloc_pool().clone())),
                 out: Vec::new(),
                 out_pos: 0,
                 awaiting: None,
@@ -1279,7 +1294,7 @@ impl EventLoop {
         self.update_interest(idx);
     }
 
-    fn dispatch(&mut self, idx: usize, req: HttpRequest) {
+    fn dispatch(&mut self, idx: usize, mut req: HttpRequest) {
         match (req.method.as_str(), req.path.as_str()) {
             ("POST", "/v1/infer") => self.dispatch_infer(idx, &req, false),
             ("POST", "/v1/classify") => self.dispatch_infer(idx, &req, true),
@@ -1288,6 +1303,13 @@ impl EventLoop {
                 self.respond(idx, resp, req.keep_alive, None);
             }
         }
+        // The body's bytes were consumed above (parsed into pixels or
+        // answered); the buffer itself re-enters the pool so the next
+        // request on any connection frames into recycled capacity.
+        self.ctx
+            .engine
+            .alloc_pool()
+            .put_bytes(std::mem::take(&mut req.body));
     }
 
     /// Parse and submit an inference request.  On admission the
@@ -1435,6 +1457,7 @@ impl EventLoop {
                 // nothing was delivered, and the write-stage histogram
                 // only ever samples delivered responses).
                 if let Ok(reply) = result {
+                    self.ctx.engine.alloc_pool().put_f32(reply.logits);
                     self.ctx.recorder.push(reply.span);
                 }
                 continue;
@@ -1484,12 +1507,16 @@ impl EventLoop {
         self.ctx.http.record(resp.status);
         let c = self.slots[idx].conn.as_mut().expect("live conn");
         let keep = keep_alive && !c.read_closed && !c.close_after_flush;
-        c.out.extend_from_slice(&render_response(&resp, keep));
+        // Render straight into the connection's persistent out-buffer
+        // (bytes identical to `render_response`); the response's own
+        // body buffer then re-enters the pool.
+        render_response_into(&resp, keep, &mut c.out);
         if !keep {
             c.close_after_flush = true;
         }
         debug_assert!(c.pending_write.is_none(), "one traced response at a time");
         c.pending_write = pending;
+        self.ctx.engine.alloc_pool().put_bytes(resp.body);
     }
 
     /// Write as much of the out-buffer as the socket accepts; on the
@@ -1703,6 +1730,7 @@ fn route_simple(ctx: &ServerCtx, req: &HttpRequest) -> Response {
                 &ctx.engine.per_tier(),
                 &ctx.engine.snapshot(),
                 ctx.cache.as_ref().map(|c| c.stats()),
+                Some(ctx.engine.alloc_pool().stats()),
                 ctx.started.elapsed().as_secs_f64(),
             );
             Response {
@@ -1822,7 +1850,7 @@ fn render_completion(
     inflight: &Inflight,
     result: Result<Reply>,
 ) -> (Response, Option<SpanRecord>) {
-    let reply = match result {
+    let Reply { logits, span } = match result {
         Ok(r) => r,
         Err(e) => return (engine_error_response(&e, ctx.engine.stats(inflight.tier)), None),
     };
@@ -1834,10 +1862,9 @@ fn render_completion(
         ("plan_source", Json::Str(plan.source().name().into())),
         ("mode", Json::Str(plan.mode.name().into())),
     ];
-    let logits = &reply.logits;
     let nc = ctx.engine.num_classes();
     if inflight.batch {
-        fields.push(("count", Json::Num(reply.span.images as f64)));
+        fields.push(("count", Json::Num(span.images as f64)));
         fields.push((
             "logits",
             Json::Arr(logits.chunks(nc).map(Json::f32_arr).collect()),
@@ -1854,16 +1881,21 @@ fn render_completion(
             ));
         }
     } else {
-        fields.push(("logits", Json::f32_arr(logits)));
+        fields.push(("logits", Json::f32_arr(&logits)));
         if inflight.classify {
-            let class = crate::inference::argmax(logits);
+            let class = crate::inference::argmax(&logits);
             fields.push(("class", Json::Num(class as f64)));
         }
     }
     if inflight.trace_echo {
-        fields.push(("trace", reply.span.to_inline_json(inflight.tier.name())));
+        fields.push(("trace", span.to_inline_json(inflight.tier.name())));
     }
-    (Response::json(200, &Json::obj(fields)), Some(reply.span))
+    // The logits were copied into the JSON fields above; the reply's
+    // buffer re-enters the pool (a scheduler worker's next reply
+    // fan-out reclaims it).
+    let resp = Response::json(200, &Json::obj(fields));
+    ctx.engine.alloc_pool().put_f32(logits);
+    (resp, Some(span))
 }
 
 /// Validate one image row: expected width, all-finite pixels.

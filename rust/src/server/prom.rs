@@ -15,6 +15,7 @@ use std::fmt::Write as _;
 use crate::cache::CacheStats;
 use crate::coordinator::router::ServerStats;
 use crate::metrics::{BATCH_SIZE_BUCKET_BOUNDS, LATENCY_BUCKET_BOUNDS_US};
+use crate::pool::PoolStats;
 use crate::scheduler::EngineSnapshot;
 use crate::trace::{self, Stage};
 
@@ -29,12 +30,17 @@ fn header(out: &mut String, name: &str, kind: &str, help: &str) {
 /// `tiers` (both are in [`super::EnergyTier::ALL`] order).  `cache` is
 /// the result-cache counters when `--cache-entries` armed one; the
 /// `emtopt_cache_*` families render as zeros otherwise, so the series
-/// exist from the first scrape either way.
+/// exist from the first scrape either way.  `pool` is the serve-path
+/// buffer-pool counters ([`crate::pool::BufferPool::stats`]); the
+/// `emtopt_alloc_pool_*` families follow the same zeros-when-absent
+/// convention (and stay zero on a `--no-alloc-pool` server, whose pool
+/// is a pure passthrough).
 pub fn render(
     http: &HttpStats,
     tiers: &[(&TierPlan, &ServerStats)],
     sched: &EngineSnapshot,
     cache: Option<&CacheStats>,
+    pool: Option<&PoolStats>,
     uptime_s: f64,
 ) -> String {
     use std::sync::atomic::Ordering::Relaxed;
@@ -648,6 +654,40 @@ pub fn render(
     );
     let _ = writeln!(out, "emtopt_cache_saved_uj_total {saved_uj}");
 
+    // Serve-path buffer pool (zero-alloc serving): hit/miss counters
+    // over every pooled get, plus the capacity currently parked in the
+    // free lists.  Zeros when no pool was provided (or the pool is the
+    // `--no-alloc-pool` passthrough, which never touches its stats).
+    let (pool_hits, pool_misses, pool_bytes) = match pool {
+        Some(p) => (
+            p.hits.load(Relaxed),
+            p.misses.load(Relaxed),
+            p.bytes.load(Relaxed),
+        ),
+        None => (0, 0, 0),
+    };
+    header(
+        &mut out,
+        "emtopt_alloc_pool_hits_total",
+        "counter",
+        "Serve-path buffer fetches recycled from the pool's free lists.",
+    );
+    let _ = writeln!(out, "emtopt_alloc_pool_hits_total {pool_hits}");
+    header(
+        &mut out,
+        "emtopt_alloc_pool_misses_total",
+        "counter",
+        "Serve-path buffer fetches that fell through to a fresh heap allocation.",
+    );
+    let _ = writeln!(out, "emtopt_alloc_pool_misses_total {pool_misses}");
+    header(
+        &mut out,
+        "emtopt_alloc_pool_bytes",
+        "gauge",
+        "Buffer capacity currently parked in the pool's size-classed free lists.",
+    );
+    let _ = writeln!(out, "emtopt_alloc_pool_bytes {pool_bytes}");
+
     header(
         &mut out,
         "emtopt_uptime_seconds",
@@ -708,7 +748,7 @@ mod tests {
             plan: EnergyPlan::uniform(2, 4.0, ReadMode::Original),
         };
         let sched = snapshot_with(1, Some((12.0, 10.0)));
-        let text = render(&http, &[(&plan, &stats)], &sched, None, 12.5);
+        let text = render(&http, &[(&plan, &stats)], &sched, None, None, 12.5);
 
         assert!(text.contains("emtopt_http_requests_total{code=\"200\"} 2"));
         assert!(text.contains("emtopt_http_requests_total{code=\"503\"} 1"));
@@ -716,7 +756,7 @@ mod tests {
         http.conn_opened();
         http.conn_opened();
         http.conn_closed();
-        let text2 = render(&http, &[(&plan, &stats)], &sched, None, 12.5);
+        let text2 = render(&http, &[(&plan, &stats)], &sched, None, None, 12.5);
         assert!(text.contains("emtopt_http_open_conns 0"));
         assert!(text.contains("emtopt_http_open_conns_peak 0"));
         assert!(text2.contains("emtopt_http_open_conns 1"));
@@ -771,6 +811,10 @@ mod tests {
         assert!(
             text.contains("emtopt_stage_latency_us_count{tier=\"normal\",stage=\"write\"} 0")
         );
+        // pool families render stable zeros when no pool was provided
+        assert!(text.contains("emtopt_alloc_pool_hits_total 0"));
+        assert!(text.contains("emtopt_alloc_pool_misses_total 0"));
+        assert!(text.contains("emtopt_alloc_pool_bytes 0"));
         // cache families render stable zeros while the cache is off
         assert!(text.contains("emtopt_cache_hits_total 0"));
         assert!(text.contains("emtopt_cache_misses_total 0"));
@@ -807,7 +851,7 @@ mod tests {
             plan: EnergyPlan::uniform(1, 4.0, ReadMode::Original),
         };
         let sched = snapshot_with(1, None);
-        let text = render(&http, &[(&plan, &stats)], &sched, None, 0.0);
+        let text = render(&http, &[(&plan, &stats)], &sched, None, None, 0.0);
         // shed counters always render (zeros keep the series stable)...
         assert!(text.contains("emtopt_governor_shed_total{tier=\"normal\"} 4"));
         // ...but the budget gauges only exist when a budget is armed
@@ -844,6 +888,7 @@ mod tests {
             &[(&plan, &stats)],
             &snapshot_with(1, None),
             Some(cache.stats()),
+            None,
             0.0,
         );
         assert!(text.contains("emtopt_cache_hits_total 1"));
@@ -861,6 +906,38 @@ mod tests {
     }
 
     #[test]
+    fn pool_families_render_live_counters() {
+        use crate::pool::BufferPool;
+        let http = HttpStats::default();
+        let stats = ServerStats::default();
+        let plan = TierPlan {
+            tier: EnergyTier::Normal,
+            rho: 4.0,
+            mode: ReadMode::Original,
+            budget_uj: 1.5,
+            plan: EnergyPlan::uniform(1, 4.0, ReadMode::Original),
+        };
+        let pool = BufferPool::new(true);
+        let b = pool.get_bytes(100); // miss
+        pool.put_bytes(b); // parks capacity
+        let b2 = pool.get_bytes(100); // hit (drains the gauge)
+        pool.put_bytes(b2);
+        let parked = pool.stats().bytes.load(Ordering::Relaxed);
+        assert!(parked >= 100);
+        let text = render(
+            &http,
+            &[(&plan, &stats)],
+            &snapshot_with(1, None),
+            None,
+            Some(pool.stats()),
+            0.0,
+        );
+        assert!(text.contains("emtopt_alloc_pool_hits_total 1"));
+        assert!(text.contains("emtopt_alloc_pool_misses_total 1"));
+        assert!(text.contains(&format!("emtopt_alloc_pool_bytes {parked}")));
+    }
+
+    #[test]
     fn histogram_buckets_are_cumulative() {
         let http = HttpStats::default();
         let stats = ServerStats::default();
@@ -873,7 +950,8 @@ mod tests {
             budget_uj: 0.5,
             plan: EnergyPlan::uniform(1, 1.0, ReadMode::Decomposed),
         };
-        let text = render(&http, &[(&plan, &stats)], &snapshot_with(1, None), None, 0.0);
+        let text =
+            render(&http, &[(&plan, &stats)], &snapshot_with(1, None), None, None, 0.0);
         assert!(text.contains("emtopt_request_latency_us_bucket{tier=\"low\",le=\"5\"} 1"));
         assert!(text.contains("emtopt_request_latency_us_bucket{tier=\"low\",le=\"50\"} 2"));
         assert!(text.contains("emtopt_request_latency_us_bucket{tier=\"low\",le=\"+Inf\"} 2"));

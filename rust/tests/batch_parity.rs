@@ -7,8 +7,8 @@
 use emtopt::crossbar::ReadCounters;
 use emtopt::device::DeviceConfig;
 use emtopt::energy::{EnergyPlan, LayerPlan, PlanSource, ReadMode};
-use emtopt::inference::{NoisyModel, Scratch};
-use emtopt::rng::Rng;
+use emtopt::inference::{NoisyModel, Scratch, SlabPool};
+use emtopt::rng::{hash2, Rng};
 
 const DIMS: [(usize, usize); 3] = [(24, 20), (20, 12), (12, 6)];
 
@@ -234,4 +234,153 @@ fn non_uniform_plan_changes_energy_and_noise() {
     assert_ne!(c_uniform.cell_pj, c_plan.cell_pj, "plan rho must reach the energy accounting");
     // decomposed middle layer pays extra cycles vs the all-original plan
     assert!(c_plan.cycles > c_uniform.cycles);
+}
+
+// ---------------------------------------------------------------------------
+// Layer-major engine parity (ISSUE 10): `forward_batch_seeds` now runs
+// layer-major tile-blocked, but its bit-identity contract is unchanged —
+// the sample-major oracle, the sequential loop, tracing, and the pooled
+// slab path must all agree exactly.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn layer_major_matches_seq_and_sample_major_across_batches_and_threads() {
+    // `forward_batch_seq(seed)` gives sample i the stream
+    // `Rng::stream(seed, i) == Rng::new(hash2(seed, i))`, so feeding the
+    // seeded engines `hash2(seed, i)` pins all three execution orders to
+    // one set of per-sample streams.
+    let cfg = DeviceConfig::default();
+    let model = mk_model(&cfg, 31);
+    let seed = 33u64;
+    let n = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(4)
+        .max(3);
+
+    for plan in [model.uniform_plan(ReadMode::Original), non_uniform_plan()] {
+        for batch in [1usize, 2, 7, 16] {
+            let xs = batch_input(model.d_in(), batch, 32 + batch as u64);
+            let seeds: Vec<u64> = (0..batch as u64).map(|i| hash2(seed, i)).collect();
+
+            let mut c_seq = ReadCounters::default();
+            let seq = model.forward_batch_seq(&xs, &plan, &cfg, seed, &mut c_seq);
+            let mut c_sm = ReadCounters::default();
+            let sm =
+                model.forward_batch_seeds_sample_major(&xs, &plan, &cfg, &seeds, &mut c_sm);
+            assert_eq!(seq, sm, "sample-major oracle diverged from seq at b={batch}");
+            assert_eq!(c_seq, c_sm);
+
+            for threads in [1usize, 2, n] {
+                let pool = rayon::ThreadPoolBuilder::new()
+                    .num_threads(threads)
+                    .build()
+                    .unwrap();
+                let (lm, c_lm) = pool.install(|| {
+                    let mut c = ReadCounters::default();
+                    let y = model.forward_batch_seeds(&xs, &plan, &cfg, &seeds, &mut c);
+                    (y, c)
+                });
+                assert_eq!(
+                    seq, lm,
+                    "layer-major logits diverged at b={batch}, {threads} threads"
+                );
+                assert_eq!(
+                    c_seq, c_lm,
+                    "layer-major counters diverged at b={batch}, {threads} threads"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn layer_major_tracing_is_exact_and_reconciles_energy() {
+    // Tracing must not perturb the computation (bit-identical logits and
+    // merged counters), and each sample's per-layer uJ spans must sum to
+    // that sample's own counter total — the per-request attribution the
+    // serving stack reports.
+    let cfg = DeviceConfig::default();
+    let model = mk_model(&cfg, 41);
+    let plan = non_uniform_plan();
+    let batch = 7usize;
+    let xs = batch_input(model.d_in(), batch, 42);
+    let seeds: Vec<u64> = (0..batch as u64).map(|i| 0xACE + i * 17).collect();
+
+    let mut c_plain = ReadCounters::default();
+    let plain = model.forward_batch_seeds(&xs, &plan, &cfg, &seeds, &mut c_plain);
+
+    for threads in [1usize, 2] {
+        let pool = rayon::ThreadPoolBuilder::new()
+            .num_threads(threads)
+            .build()
+            .unwrap();
+        let (traced, traces, c_traced) = pool.install(|| {
+            let mut c = ReadCounters::default();
+            let (y, t) = model.forward_batch_seeds_traced(&xs, &plan, &cfg, &seeds, &mut c);
+            (y, t, c)
+        });
+        assert_eq!(plain, traced, "tracing must not perturb logits");
+        assert_eq!(c_plain, c_traced, "tracing must not perturb counters");
+        assert_eq!(traces.len(), batch);
+
+        let mut merged = ReadCounters::default();
+        for t in &traces {
+            assert_eq!(t.layers.n, DIMS.len());
+            // per-layer uJ spans reconcile with the sample's counters
+            let layer_uj: f64 = t.layers.uj[..t.layers.n].iter().map(|&u| u as f64).sum();
+            let sample_uj = t.counters.total_pj() * 1e-6;
+            assert!(
+                (layer_uj - sample_uj).abs() < 1e-6 * sample_uj.max(1e-12) + 1e-9,
+                "per-layer uJ {layer_uj} != sample uJ {sample_uj}"
+            );
+            assert!(t.counters.cycles > 0);
+            merged.merge(&t.counters);
+        }
+        // ...and the per-sample counters sum back to the batch total
+        assert_eq!(merged, c_traced);
+    }
+}
+
+#[test]
+fn pooled_slab_paths_are_bit_identical_and_recycle() {
+    // The SlabPool variants are the scheduler's steady-state path: same
+    // bits as the fresh-allocation engines, with arenas parked between
+    // dispatches instead of dropped.
+    let cfg = DeviceConfig::default();
+    let model = mk_model(&cfg, 51);
+    let plan = model.uniform_plan(ReadMode::Decomposed);
+    let batch = 9usize;
+    let xs = batch_input(model.d_in(), batch, 52);
+    let seeds: Vec<u64> = (0..batch as u64).map(|i| hash2(99, i)).collect();
+
+    let mut c_ref = ReadCounters::default();
+    let reference = model.forward_batch_seeds(&xs, &plan, &cfg, &seeds, &mut c_ref);
+    let (traced_ref, traces_ref) = {
+        let mut c = ReadCounters::default();
+        model.forward_batch_seeds_traced(&xs, &plan, &cfg, &seeds, &mut c)
+    };
+
+    let pool = SlabPool::new();
+    assert_eq!(pool.idle(), 0);
+    for round in 0..3 {
+        let mut c = ReadCounters::default();
+        let y = model.forward_batch_seeds_pooled(&xs, &plan, &cfg, &seeds, &mut c, &pool);
+        assert_eq!(reference, y, "pooled logits diverged on round {round}");
+        assert_eq!(c_ref, c, "pooled counters diverged on round {round}");
+        // the dispatch's slab is parked, and steady state reuses it
+        // rather than growing the pool
+        assert!(pool.idle() >= 1, "round {round} returned no slab");
+    }
+    let idle_after_plain = pool.idle();
+
+    let mut c = ReadCounters::default();
+    let (y, traces) =
+        model.forward_batch_seeds_traced_pooled(&xs, &plan, &cfg, &seeds, &mut c, &pool);
+    assert_eq!(traced_ref, y);
+    assert_eq!(c_ref, c);
+    assert_eq!(traces.len(), traces_ref.len());
+    for (a, b) in traces.iter().zip(traces_ref.iter()) {
+        assert_eq!(a.counters, b.counters, "pooled tracing must be exact");
+    }
+    assert!(pool.idle() >= idle_after_plain, "traced dispatch lost a slab");
 }
